@@ -1,0 +1,333 @@
+"""AOT pipeline: lower the L2 models to HLO *text* artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and executes via PJRT. HLO
+text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.models import cnn, lstm, mlp
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry definitions
+# ---------------------------------------------------------------------------
+
+
+class Entry:
+    def __init__(self, name, fn, in_specs, flops, desc, outputs_desc=""):
+        self.name = name
+        self.fn = fn
+        self.in_specs = in_specs
+        self.flops = float(flops)
+        self.desc = desc
+        self.outputs_desc = outputs_desc
+
+
+def _mlp_sizes():
+    return [256, 512, 512, 10]
+
+
+def _mlp_fwd_entry():
+    sizes = _mlp_sizes()
+    n = 64
+
+    def fn(*flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(sizes) - 1)]
+        x = flat[-1]
+        return (mlp.forward(params, x, block_c=128),)
+
+    in_specs = []
+    for c, k in zip(sizes[:-1], sizes[1:]):
+        in_specs += [spec((c, k)), spec((k,))]
+    in_specs.append(spec((n, sizes[0])))
+    flops = 2.0 * n * sum(c * k for c, k in zip(sizes[:-1], sizes[1:]))
+    return Entry(
+        "mlp_fwd",
+        fn,
+        in_specs,
+        flops,
+        f"MLP forward {sizes}, batch {n}, BRGEMM FC layers (Alg. 5)",
+        "(logits[N,10],)",
+    )
+
+
+def _mlp_train_step_entry():
+    sizes = _mlp_sizes()
+    n = 64
+    lr = 0.05
+
+    def fn(*flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(sizes) - 1)]
+        x, labels = flat[-2], flat[-1]
+        new_params, loss = mlp.train_step(params, x, labels, lr, block_c=128)
+        out = []
+        for w, b in new_params:
+            out += [w, b]
+        out.append(loss)
+        return tuple(out)
+
+    in_specs = []
+    for c, k in zip(sizes[:-1], sizes[1:]):
+        in_specs += [spec((c, k)), spec((k,))]
+    in_specs += [spec((n, sizes[0])), spec((n,), I32)]
+    # fwd + bwd + upd ≈ 3x fwd flops
+    flops = 6.0 * n * sum(c * k for c, k in zip(sizes[:-1], sizes[1:]))
+    return Entry(
+        "mlp_train_step",
+        fn,
+        in_specs,
+        flops,
+        f"One SGD step (softmax-CE) of MLP {sizes}, batch {n}, lr {lr}; "
+        "backward through the BRGEMM custom VJP",
+        "(w1,b1,w2,b2,w3,b3,loss)",
+    )
+
+
+def _lstm_entries():
+    t, n, c, k = 8, 16, 64, 64
+    flops = 2.0 * 4 * t * n * k * (c + k)
+
+    def fwd(x, wr, bias):
+        return (lstm.lstm_forward(x, wr, bias, block_f=64),)
+
+    def fwd_large(x, wr, bias):
+        return (lstm.lstm_forward_large_gemm(x, wr, bias),)
+
+    specs = [spec((t, n, c)), spec((c + k, 4 * k)), spec((4 * k,))]
+    return [
+        Entry(
+            "lstm_fwd",
+            fwd,
+            specs,
+            flops,
+            f"LSTM forward T={t} N={n} C=K={k}, fused BRGEMM cell (Alg. 2)",
+            "(h[T,N,K],)",
+        ),
+        Entry(
+            "lstm_fwd_large_gemm",
+            fwd_large,
+            specs,
+            flops,
+            "Baseline LSTM cell: large stacked GEMM per step (§3.1.1)",
+            "(h[T,N,K],)",
+        ),
+    ]
+
+
+def _gnmt_encoder_entry():
+    t, n, k, layers = 8, 8, 128, 2
+    flops = 2.0 * 4 * t * n * k * (k + k) * layers
+
+    def fn(x, wr1, b1, wr2, b2):
+        return (lstm.gnmt_encoder(x, [(wr1, b1), (wr2, b2)], block_f=64),)
+
+    specs = [
+        spec((t, n, k)),
+        spec((2 * k, 4 * k)),
+        spec((4 * k,)),
+        spec((2 * k, 4 * k)),
+        spec((4 * k,)),
+    ]
+    return Entry(
+        "gnmt_encoder_2l",
+        fn,
+        specs,
+        flops,
+        f"2-layer GNMT-style LSTM encoder, T={t} N={n} K={k} (BRGEMM cells)",
+        "(h[T,N,K],)",
+    )
+
+
+# Scaled Fig-11 inference layers (N=1): (name, H, C, K, R, stride, pad)
+FIG11_LAYERS = [
+    ("l28_64_64_r3", 28, 64, 64, 3, 1, 1),
+    ("l28_64_128_r1", 28, 64, 128, 1, 1, 0),
+    ("l14_128_128_r3", 14, 128, 128, 3, 1, 1),
+]
+
+
+def _conv_entries():
+    out = []
+    for name, h, c, k, r, stride, pad in FIG11_LAYERS:
+        p = (h + 2 * pad - r) // stride + 1
+        flops = 2.0 * 1 * k * c * r * r * p * p
+        x_spec = spec((1, h, h, c))
+        w_spec = spec((r, r, c, k))
+
+        def mk(fn_impl, stride=stride, pad=pad):
+            def fn(x, w):
+                return (fn_impl(x, w, stride=stride, pad=pad),)
+
+            return fn
+
+        out.append(
+            Entry(
+                f"conv_brgemm_{name}",
+                mk(functools.partial(cnn.conv2d_brgemm, block_c=64)),
+                [x_spec, w_spec],
+                flops,
+                f"Direct conv via Pallas BRGEMM (Alg. 4), {name}, N=1 inference",
+                "(y,)",
+            )
+        )
+        out.append(
+            Entry(
+                f"conv_xla_{name}",
+                mk(cnn.conv2d_xla),
+                [x_spec, w_spec],
+                flops,
+                f"XLA native conv (vendor-library analogue), {name}",
+                "(y,)",
+            )
+        )
+        out.append(
+            Entry(
+                f"conv_im2col_{name}",
+                mk(cnn.conv2d_im2col),
+                [x_spec, w_spec],
+                flops,
+                f"im2col + large GEMM baseline (Fig. 1 yellow), {name}",
+                "(y,)",
+            )
+        )
+    return out
+
+
+def _resnet_block_entry():
+    h, cin, cmid = 14, 64, 32
+
+    def fn(x, w1, w2, w3):
+        return (cnn.resnet_block_brgemm(x, w1, w2, w3),)
+
+    flops = 2.0 * h * h * (cin * cmid + 9 * cmid * cmid + cmid * cin)
+    return Entry(
+        "resnet_block",
+        fn,
+        [
+            spec((1, h, h, cin)),
+            spec((1, 1, cin, cmid)),
+            spec((3, 3, cmid, cmid)),
+            spec((1, 1, cmid, cin)),
+        ],
+        flops,
+        "ResNet bottleneck block (1x1-3x3-1x1 + skip) via BRGEMM convs",
+        "(y,)",
+    )
+
+
+def _brgemm_demo_entry():
+    batch, m, k, n = 4, 8, 32, 64
+
+    def fn(a, b):
+        from compile.kernels.brgemm import brgemm
+
+        return (brgemm(a, b, block_m=8, block_n=64),)
+
+    return Entry(
+        "brgemm_demo",
+        fn,
+        [spec((batch, m, k)), spec((batch, k, n))],
+        2.0 * batch * m * k * n,
+        "Standalone batch-reduce GEMM kernel (quickstart/integration test)",
+        "(c[M,N],)",
+    )
+
+
+def entries() -> list[Entry]:
+    return [
+        _brgemm_demo_entry(),
+        _mlp_fwd_entry(),
+        _mlp_train_step_entry(),
+        *_lstm_entries(),
+        _gnmt_encoder_entry(),
+        *_conv_entries(),
+        _resnet_block_entry(),
+    ]
+
+
+def build(out_dir: str, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "entries": []}
+    for e in entries():
+        if only and e.name != only:
+            continue
+        print(f"lowering {e.name} ...", flush=True)
+        lowered = jax.jit(e.fn).lower(*e.in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{e.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        manifest["entries"].append(
+            {
+                "name": e.name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in e.in_specs
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)}
+                    for o in jax.tree_util.tree_leaves(out_avals)
+                ],
+                "flops": e.flops,
+                "desc": e.desc,
+                "outputs_desc": e.outputs_desc,
+            }
+        )
+        print(f"  -> {fname} ({len(text)} chars)")
+    if not only:
+        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single entry")
+    ap.add_argument("--list", action="store_true", help="list entries and exit")
+    args = ap.parse_args()
+    if args.list:
+        for e in entries():
+            print(f"{e.name:28s} {e.flops / 1e6:10.1f} MFLOP  {e.desc}")
+        return
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""L1: the batch-reduce GEMM kernel as a Pallas kernel.
+
+This is the paper's single building block expressed for a tensor-compiler
+backend (the role TVM plays in the paper's §4.3; here the compiler is
+XLA and the kernel language is Pallas):
+
+    C = beta * C + alpha * sum_i A_i @ B_i       (+ bias, activation)
+
+TPU translation of the paper's register-blocking story (DESIGN.md
+§Hardware-Adaptation):
+
+* the paper pins an ``m_b x n_b`` accumulator tile in vector registers for
+  the whole batch-reduce chain; here the accumulator is a VMEM scratch
+  block that lives across the batch grid dimension,
+* the paper's pointer arrays (A_ptrs/B_ptrs) become BlockSpec index maps
+  over a leading batch axis,
+* the paper's FMA outer products become MXU ``jnp.dot`` calls on
+  ``(block_m, K) x (K, block_n)`` tiles,
+* the fused epilogue (bias + activation applied while the block is hot)
+  becomes the final-step store transform.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls, so the kernel is lowered to plain HLO (the numerics are
+identical; TPU performance is estimated analytically in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+ACTIVATIONS: dict[str, Callable] = {
+    "identity": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    b = min(pref, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def brgemm(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array | None = None,
+    *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    bias: jax.Array | None = None,
+    activation: str = "identity",
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batch-reduce GEMM: ``beta*C + alpha * sum_i a[i] @ b[i]``.
+
+    Args:
+      a: ``[BATCH, M, K]`` stack of A blocks.
+      b: ``[BATCH, K, N]`` stack of B blocks.
+      c: optional ``[M, N]`` accumulator input (required if ``beta != 0``).
+      bias: optional ``[N]`` vector added before ``activation`` (the fused
+        epilogue of the DL primitives).
+      activation: one of ``identity|relu|sigmoid|tanh``.
+      block_m/block_n: output register-tile block shape; defaults target
+        MXU-friendly ``(128, 128)`` clamped to divisors of M/N.
+
+    Returns: ``[M, N]`` output block (single accumulator — the defining
+    difference from batched GEMM).
+    """
+    assert a.ndim == 3 and b.ndim == 3, (a.shape, b.shape)
+    batch, m, k = a.shape
+    batch_b, k_b, n = b.shape
+    assert batch == batch_b and k == k_b, (a.shape, b.shape)
+    if beta != 0.0:
+        assert c is not None, "beta != 0 requires a C input"
+    if c is None:
+        c = jnp.zeros((m, n), a.dtype)
+    if bias is None:
+        bias_arr = jnp.zeros((n,), a.dtype)
+    else:
+        bias_arr = bias.astype(a.dtype)
+        assert bias_arr.shape == (n,)
+    act = ACTIVATIONS[activation]
+
+    bm = block_m or _pick_block(m, 128)
+    bn = block_n or _pick_block(n, 128)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    def kernel(a_ref, b_ref, c_ref, bias_ref, o_ref, acc_ref):
+        # Load the accumulator tile once per output block (Algorithm 1 l.3).
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # Batch-reduce accumulation chain (Algorithm 1 l.4-7) on the MXU.
+        acc_ref[...] += jnp.dot(
+            a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+        )
+
+        # Single store after the full chain, with the fused epilogue
+        # applied while the tile is VMEM-hot (Algorithm 1 l.8).
+        @pl.when(pl.program_id(2) == batch - 1)
+        def _store():
+            out = beta * c_ref[...].astype(jnp.float32) + alpha * acc_ref[...]
+            out = out + bias_ref[...].astype(jnp.float32)
+            o_ref[...] = act(out).astype(o_ref.dtype)
+
+    grid = (m // bm, n // bn, batch)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k), lambda i, j, t: (t, i, 0)),
+            pl.BlockSpec((1, k, bn), lambda i, j, t: (t, 0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j, t: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b, c, bias_arr)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable linear BRGEMM (custom VJP): the backward pass is itself
+# expressed with the same building block, mirroring the paper's claim that
+# bwd/upd kernels reuse BRGEMM.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def brgemm_linear(a, b, c, block_m=None, block_n=None):
+    """Differentiable ``C + sum_i a[i] @ b[i]`` through the Pallas kernel."""
+    return brgemm(a, b, c, beta=1.0, block_m=block_m, block_n=block_n)
+
+
+def _brgemm_fwd(a, b, c, block_m, block_n):
+    return brgemm_linear(a, b, c, block_m, block_n), (a, b)
+
+
+def _brgemm_bwd(block_m, block_n, res, dy):
+    a, b = res
+    # dA_i = dY @ B_iᵀ and dB_i = A_iᵀ @ dY: per-pair products (no cross-i
+    # reduction), i.e. BRGEMM calls of batch length 1 — run through the
+    # same kernel, one grid instance per pair.
+    da = jax.vmap(lambda bi: brgemm(dy[None], jnp.swapaxes(bi, 0, 1)[None]))(b)
+    db = jax.vmap(lambda ai: brgemm(jnp.swapaxes(ai, 0, 1)[None], dy[None]))(a)
+    return da, db, dy
+
+
+brgemm_linear.defvjp(_brgemm_fwd, _brgemm_bwd)
+
+
+def blocked_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_c: int = 128,
+    bias: jax.Array | None = None,
+    activation: str = "identity",
+    block_m: int | None = None,
+    block_n: int | None = None,
+) -> jax.Array:
+    """``act(x @ w + bias)`` with the K dimension fed as a BRGEMM batch.
+
+    Splits the contraction dim C into ``C/block_c`` blocks (the paper's
+    ``Cb`` loop brought into the kernel's batch) — the FC/LSTM formulation
+    of Algorithms 2/5 at the JAX level.
+    """
+    m, c = x.shape
+    c2, n = w.shape
+    assert c == c2
+    bc = _pick_block(c, block_c)
+    cb = c // bc
+    a = jnp.swapaxes(x.reshape(m, cb, bc), 0, 1)  # [Cb, M, bc]
+    b = w.reshape(cb, bc, n)  # [Cb, bc, N]
+    return brgemm(
+        a, b, bias=bias, activation=activation, block_m=block_m, block_n=block_n
+    )
+
+
+def blocked_matmul_linear(x: jax.Array, w: jax.Array, *, block_c: int = 128) -> jax.Array:
+    """Differentiable ``x @ w`` through :func:`brgemm_linear`."""
+    m, c = x.shape
+    _, n = w.shape
+    bc = _pick_block(c, block_c)
+    cb = c // bc
+    a = jnp.swapaxes(x.reshape(m, cb, bc), 0, 1)
+    b = w.reshape(cb, bc, n)
+    return brgemm_linear(a, b, jnp.zeros((m, n), x.dtype))

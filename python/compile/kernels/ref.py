@@ -1,0 +1,80 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernel and L2 models.
+
+No Pallas, no blocking — straight dense algebra. Every kernel/model test
+asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "identity": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
+
+
+def brgemm_ref(a, b, c=None, *, alpha=1.0, beta=0.0, bias=None, activation="identity"):
+    """Oracle for kernels.brgemm: beta*C + alpha*sum_i a[i]@b[i] (+epilogue)."""
+    acc = jnp.einsum("imk,ikn->mn", a, b)
+    out = alpha * acc
+    if c is not None and beta != 0.0:
+        out = out + beta * c
+    if bias is not None:
+        out = out + bias
+    return ACTIVATIONS[activation](out)
+
+
+def fc_ref(x, w, bias=None, activation="identity"):
+    """Oracle for blocked_matmul: act(x @ w + bias)."""
+    y = x @ w
+    if bias is not None:
+        y = y + bias
+    return ACTIVATIONS[activation](y)
+
+
+def lstm_step_ref(x_t, h_prev, s_prev, wr, bias):
+    """One LSTM step. ``wr``: [C+K, 4K] stacked input+recurrent weights
+    (gate order i, g, f, o); ``bias``: [4K]."""
+    k = h_prev.shape[-1]
+    z = jnp.concatenate([x_t, h_prev], axis=-1) @ wr + bias
+    i = jax.nn.sigmoid(z[:, :k])
+    g = jnp.tanh(z[:, k : 2 * k])
+    f = jax.nn.sigmoid(z[:, 2 * k : 3 * k])
+    o = jax.nn.sigmoid(z[:, 3 * k :])
+    s_t = f * s_prev + i * g
+    h_t = o * jnp.tanh(s_t)
+    return h_t, s_t
+
+
+def lstm_ref(x, wr, bias, h0=None, s0=None):
+    """Full sequence LSTM: x [T, N, C] -> h [T, N, K]."""
+    t, n, _ = x.shape
+    k = wr.shape[1] // 4
+    h = jnp.zeros((n, k), x.dtype) if h0 is None else h0
+    s = jnp.zeros((n, k), x.dtype) if s0 is None else s0
+
+    def step(carry, x_t):
+        h, s = carry
+        h, s = lstm_step_ref(x_t, h, s, wr, bias)
+        return (h, s), h
+
+    (_, _), hs = jax.lax.scan(step, (h, s), x)
+    return hs
+
+
+def conv2d_ref(x, w, stride=1, pad=0):
+    """NHWC conv oracle via lax.conv_general_dilated.
+
+    x: [N, H, W, C]; w: [R, S, C, K].
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,5 @@
+"""L2: JAX models formulated as loops around the L1 Pallas BRGEMM kernel.
+
+Build-time only — these lower to HLO text via ``compile.aot`` and are
+executed from the Rust runtime; Python never runs on the request path.
+"""

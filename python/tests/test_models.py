@@ -1,0 +1,174 @@
+"""L2 model tests: BRGEMM-formulated models vs pure-jnp / lax references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.models import cnn, lstm, mlp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestMlp:
+    def test_forward_matches_reference(self):
+        params = mlp.init_params(jax.random.PRNGKey(0), [64, 32, 16])
+        x = rand(jax.random.PRNGKey(1), (8, 64))
+        got = mlp.forward(params, x, block_c=32)
+        want = mlp.forward_large_gemm(params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_forward_diff_matches(self):
+        params = mlp.init_params(jax.random.PRNGKey(2), [32, 32, 8])
+        x = rand(jax.random.PRNGKey(3), (4, 32))
+        got = mlp.forward_diff(params, x, block_c=16)
+        want = mlp.forward_large_gemm(params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_train_step_decreases_loss(self):
+        params = mlp.init_params(jax.random.PRNGKey(4), [16, 32, 4])
+        kx, kl = keys(5, 2)
+        x = rand(kx, (16, 16))
+        labels = jax.random.randint(kl, (16,), 0, 4)
+        step = jax.jit(lambda p, x, l: mlp.train_step(p, x, l, 0.5, block_c=16))
+        loss0 = mlp.loss_fn(params, x, labels, block_c=16)
+        p = params
+        for _ in range(5):
+            p, loss = step(p, x, labels)
+        assert loss < loss0, (loss, loss0)
+
+    def test_train_step_grads_match_large_gemm(self):
+        params = mlp.init_params(jax.random.PRNGKey(6), [16, 16, 4])
+        kx, kl = keys(7, 2)
+        x = rand(kx, (8, 16))
+        labels = jax.random.randint(kl, (8,), 0, 4)
+
+        def loss_ref(params):
+            logits = mlp.forward_large_gemm(params, x)
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+        g_kern = jax.grad(lambda p: mlp.loss_fn(p, x, labels, block_c=16))(params)
+        g_ref = jax.grad(loss_ref)(params)
+        for (gw1, gb1), (gw2, gb2) in zip(g_kern, g_ref):
+            np.testing.assert_allclose(gw1, gw2, rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(gb1, gb2, rtol=1e-4, atol=1e-4)
+
+
+class TestLstm:
+    def test_forward_matches_reference(self):
+        c, k, t, n = 32, 32, 4, 6
+        wr, bias = lstm.init_params(jax.random.PRNGKey(0), c, k)
+        x = rand(jax.random.PRNGKey(1), (t, n, c))
+        got = lstm.lstm_forward(x, wr, bias, block_f=16)
+        want = ref.lstm_ref(x, wr, bias)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_forward_with_initial_state(self):
+        c, k, t, n = 16, 16, 3, 4
+        wr, bias = lstm.init_params(jax.random.PRNGKey(2), c, k)
+        kx, kh, ks = keys(3, 3)
+        x = rand(kx, (t, n, c))
+        h0 = rand(kh, (n, k), -0.5, 0.5)
+        s0 = rand(ks, (n, k), -0.5, 0.5)
+        got = lstm.lstm_forward(x, wr, bias, h0, s0, block_f=16)
+        want = ref.lstm_ref(x, wr, bias, h0, s0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_large_gemm_baseline_matches(self):
+        c, k, t, n = 16, 32, 5, 3
+        wr, bias = lstm.init_params(jax.random.PRNGKey(4), c, k)
+        x = rand(jax.random.PRNGKey(5), (t, n, c))
+        got = lstm.lstm_forward_large_gemm(x, wr, bias)
+        want = ref.lstm_ref(x, wr, bias)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_stacked_encoder_shapes_and_values(self):
+        c = k = 16
+        t, n = 3, 2
+        layers = [lstm.init_params(jax.random.PRNGKey(i), c, k) for i in range(2)]
+        x = rand(jax.random.PRNGKey(9), (t, n, c))
+        got = lstm.gnmt_encoder(x, layers, block_f=16)
+        want = x
+        for wr, bias in layers:
+            want = ref.lstm_ref(want, wr, bias)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestCnn:
+    @pytest.mark.parametrize(
+        "n,h,w,c,k,r,stride,pad",
+        [
+            (1, 6, 6, 8, 16, 3, 1, 1),
+            (2, 8, 8, 4, 8, 1, 1, 0),
+            (1, 8, 8, 8, 8, 1, 2, 0),
+            (1, 9, 9, 4, 4, 3, 2, 1),
+        ],
+    )
+    def test_conv_brgemm_matches_lax(self, n, h, w, c, k, r, stride, pad):
+        kx, kw = keys(n * h + c, 2)
+        x = rand(kx, (n, h, w, c))
+        wt = rand(kw, (r, r, c, k), -0.5, 0.5)
+        got = cnn.conv2d_brgemm(x, wt, stride=stride, pad=pad, block_c=4)
+        want = ref.conv2d_ref(x, wt, stride=stride, pad=pad)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_conv_fused_bias_relu(self):
+        kx, kw, kb = keys(11, 3)
+        x = rand(kx, (1, 5, 5, 4))
+        wt = rand(kw, (3, 3, 4, 8), -0.5, 0.5)
+        bias = rand(kb, (8,))
+        got = cnn.conv2d_brgemm(x, wt, pad=1, bias=bias, activation="relu")
+        want = jax.nn.relu(ref.conv2d_ref(x, wt, pad=1) + bias)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_im2col_baseline_matches_lax(self):
+        kx, kw = keys(12, 2)
+        x = rand(kx, (2, 6, 6, 4))
+        wt = rand(kw, (3, 3, 4, 8), -0.5, 0.5)
+        got = cnn.conv2d_im2col(x, wt, stride=1, pad=1)
+        want = ref.conv2d_ref(x, wt, stride=1, pad=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_resnet_block(self):
+        kx, k1, k2, k3 = keys(13, 4)
+        cin, cmid = 8, 4
+        x = rand(kx, (1, 6, 6, cin))
+        w1 = rand(k1, (1, 1, cin, cmid), -0.5, 0.5)
+        w2 = rand(k2, (3, 3, cmid, cmid), -0.5, 0.5)
+        w3 = rand(k3, (1, 1, cmid, cin), -0.5, 0.5)
+        y = cnn.resnet_block_brgemm(x, w1, w2, w3)
+        # reference chain
+        t = jax.nn.relu(ref.conv2d_ref(x, w1))
+        t = jax.nn.relu(ref.conv2d_ref(t, w2, pad=1))
+        t = ref.conv2d_ref(t, w3)
+        want = jax.nn.relu(t + x)
+        np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.sampled_from([4, 8]),
+    k=st.sampled_from([4, 8, 16]),
+    r=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_hypothesis(c, k, r, stride, seed):
+    pad = 1 if r == 3 else 0
+    k1, k2 = keys(seed, 2)
+    x = rand(k1, (1, 8, 8, c))
+    wt = rand(k2, (r, r, c, k), -0.5, 0.5)
+    got = cnn.conv2d_brgemm(x, wt, stride=stride, pad=pad, block_c=4)
+    want = ref.conv2d_ref(x, wt, stride=stride, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

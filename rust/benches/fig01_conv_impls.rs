@@ -1,0 +1,77 @@
+//! Figure 1: ResNet-50 forward convolutions under four implementation
+//! strategies.
+//!
+//! Paper result (weighted efficiency on 28-core SKX): small-GEMM loops
+//! 61%, im2col + batched GEMM 49%, MKL-DNN specialized 81%, **BRGEMM 83%**
+//! — the single building block beats the ad-hoc vendor kernels.
+//!
+//! Here: the same four-way comparison with in-repo implementations
+//! (the vendor-specialized comparator is the XLA-native conv on the
+//! compiled path, see fig11; this bench covers the three native-path
+//! strategies) at bench scale (N=2, spatial ÷4, channels exact).
+
+mod common;
+
+use brgemm_dl::coordinator::resnet::weighted_gflops;
+use brgemm_dl::perfmodel;
+use brgemm_dl::primitives::conv::{conv_forward_im2col, conv_forward_small_gemm, ConvPrimitive};
+use brgemm_dl::util::bench::{black_box, Opts, Table};
+use brgemm_dl::util::rng::Rng;
+
+fn main() {
+    let opts = Opts::from_env();
+    let peak = perfmodel::host_peak_gflops();
+    let mut rng = Rng::new(1);
+    let cases = common::conv_cases(&mut rng);
+    let mut table = Table::with_peak("Fig. 1 — ResNet-50 FWD convolutions, 4 strategies", peak);
+    let mut rows: Vec<(brgemm_dl::coordinator::resnet::ResnetLayer, &str, f64, f64)> = Vec::new();
+
+    for case in &cases {
+        let cfg = case.cfg;
+        let label = case.layer.label();
+        let flops = cfg.flops();
+
+        // Strategy (ii)-analog: BRGEMM direct conv (Algorithm 4).
+        let prim = ConvPrimitive::new(cfg);
+        let mut out = vec![0.0f32; cfg.output_len()];
+        table.case(&label, "brgemm", flops, opts, || {
+            prim.forward(&case.x_packed, &case.w_packed, None, &mut out);
+            black_box(&out);
+        });
+        rows.push((case.layer, "brgemm", flops, table.rows.last().unwrap().time.min));
+
+        // Strategy (i)a: small-GEMM loop nest, no batch reduction.
+        table.case(&label, "small-gemm", flops, opts, || {
+            conv_forward_small_gemm(&cfg, &case.x_packed, &case.w_packed, &mut out);
+            black_box(&out);
+        });
+        rows.push((case.layer, "small-gemm", flops, table.rows.last().unwrap().time.min));
+
+        // Strategy (i)b: im2col + one large GEMM.
+        let mut y_plain = vec![0.0f32; cfg.output_len()];
+        table.case(&label, "im2col", flops, opts, || {
+            conv_forward_im2col(&cfg, &case.x_plain, &case.w_plain, &mut y_plain);
+            black_box(&y_plain);
+        });
+        rows.push((case.layer, "im2col", flops, table.rows.last().unwrap().time.min));
+    }
+
+    println!("{}", table.render());
+    println!("== weighted efficiency over the ResNet-50 topology ==");
+    for impl_name in ["brgemm", "small-gemm", "im2col"] {
+        let m: Vec<_> = rows
+            .iter()
+            .filter(|(_, i, _, _)| *i == impl_name)
+            .map(|(l, _, f, t)| (*l, *f, *t))
+            .collect();
+        let wg = weighted_gflops(&m);
+        println!("  {:<12} {:>8.2} GF/s  = {:>5.1}% of peak", impl_name, wg, 100.0 * wg / peak);
+    }
+    common::paper_note(
+        "Fig1 weighted efficiency",
+        "brgemm 83% > mkl-dnn 81% > small-gemm 61% > im2col 49%",
+        "expect brgemm > small-gemm > im2col (vendor comparator: see fig11)",
+    );
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig01.json", table.to_json().to_string_pretty()).ok();
+}

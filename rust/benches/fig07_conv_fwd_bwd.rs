@@ -1,0 +1,76 @@
+//! Figure 7: ResNet-50 convolutions — forward and backward-by-data,
+//! per layer, BRGEMM vs the small-GEMM baseline.
+//!
+//! Paper (N=28): FWD weighted efficiency 83% (vs MKL-DNN 81%), BWD 80%
+//! (vs 78.9%); 3×3 layers ≈ 90% of peak, 1×1 ≈ 80% (more reuse in large
+//! spatial filters); layer 2 is write-bandwidth-bound at 65%.
+
+mod common;
+
+use brgemm_dl::coordinator::resnet::weighted_gflops;
+use brgemm_dl::perfmodel;
+use brgemm_dl::primitives::conv::{conv_forward_small_gemm, ConvPrimitive};
+use brgemm_dl::util::bench::{black_box, Opts, Table};
+use brgemm_dl::util::rng::Rng;
+
+fn main() {
+    let opts = Opts::from_env();
+    let peak = perfmodel::host_peak_gflops();
+    let mut rng = Rng::new(7);
+    let cases = common::conv_cases(&mut rng);
+    let mut table = Table::with_peak("Fig. 7 — ResNet-50 conv FWD + BWD per layer", peak);
+    let mut rows = Vec::new();
+
+    for case in &cases {
+        let cfg = case.cfg;
+        let label = case.layer.label();
+        let flops = cfg.flops();
+        let prim = ConvPrimitive::new(cfg);
+        let mut out = vec![0.0f32; cfg.output_len()];
+
+        table.case(&label, "brgemm fwd", flops, opts, || {
+            prim.forward(&case.x_packed, &case.w_packed, None, &mut out);
+            black_box(&out);
+        });
+        rows.push((case.layer, "brgemm fwd", flops, table.rows.last().unwrap().time.min));
+
+        table.case(&label, "small-gemm fwd", flops, opts, || {
+            conv_forward_small_gemm(&cfg, &case.x_packed, &case.w_packed, &mut out);
+            black_box(&out);
+        });
+        rows.push((case.layer, "small-gemm fwd", flops, table.rows.last().unwrap().time.min));
+
+        // BWD by data (dual conv). Skip the stem (input gradient unused in
+        // training, and 7x7/s2 takes the documented naive fallback).
+        if case.layer.id != 1 {
+            prim.forward(&case.x_packed, &case.w_packed, None, &mut out);
+            // Dual weights are computed once per weight version in real
+            // training; amortised out of the per-call timing (paper §3.1.2
+            // amortisation argument, applied to the conv transpose).
+            let dual = prim.dual_weights(&case.w_packed);
+            table.case(&label, "brgemm bwd", flops, opts, || {
+                black_box(prim.backward_data_pre(&out, &dual));
+            });
+            rows.push((case.layer, "brgemm bwd", flops, table.rows.last().unwrap().time.min));
+        }
+    }
+
+    println!("{}", table.render());
+    println!("== weighted efficiency (ResNet-50 topology) ==");
+    for impl_name in ["brgemm fwd", "small-gemm fwd", "brgemm bwd"] {
+        let m: Vec<_> = rows
+            .iter()
+            .filter(|(_, i, _, _)| *i == impl_name)
+            .map(|(l, _, f, t)| (*l, *f, *t))
+            .collect();
+        let wg = weighted_gflops(&m);
+        println!("  {:<16} {:>8.2} GF/s = {:>5.1}% of peak", impl_name, wg, 100.0 * wg / peak);
+    }
+    common::paper_note(
+        "Fig7",
+        "FWD 83% wgt-eff (3x3 ~90%, 1x1 ~80%); BWD 80%",
+        "expect 3x3 > 1x1 efficiency; bwd slightly below fwd",
+    );
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig07.json", table.to_json().to_string_pretty()).ok();
+}

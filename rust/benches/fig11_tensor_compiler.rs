@@ -1,0 +1,116 @@
+//! Figure 11 (right): the single building block inside a tensor compiler.
+//!
+//! Paper: forward ResNet-50 convolutions at N=1 (inference), BRGEMM
+//! embedded in TVM reaches 2361 GF/s — within 5.3% of the hand-written C
+//! kernels (2492), 2% faster than auto-tuned AutoTVM, 1.24× MKL-DNN.
+//!
+//! Here the tensor compiler is XLA and the kernel language is Pallas: for
+//! each scaled layer the bench runs (a) the Pallas-BRGEMM conv artifact,
+//! (b) XLA's native conv (the vendor-library analogue), (c) the im2col
+//! formulation under the same compiler, and (d) the native Rust BRGEMM
+//! conv — all through the same Rust request path.
+//!
+//! Figure 11 (left) — Gen9 iGPU vs clDNN — cannot be exercised (no GPU
+//! in this environment); its portability claim is represented by the
+//! second backend exercised here. See DESIGN.md §5.5.
+
+mod common;
+
+use brgemm_dl::perfmodel;
+use brgemm_dl::primitives::conv::{ConvConfig, ConvPrimitive};
+use brgemm_dl::runtime::{HostTensor, Runtime};
+use brgemm_dl::tensor::layout;
+use brgemm_dl::util::bench::{black_box, Opts, Table};
+use brgemm_dl::util::rng::Rng;
+use std::path::Path;
+
+// Must match FIG11_LAYERS in python/compile/aot.py.
+const LAYERS: [(&str, usize, usize, usize, usize, usize, usize); 3] = [
+    ("l28_64_64_r3", 28, 64, 64, 3, 1, 1),
+    ("l28_64_128_r1", 28, 64, 128, 1, 1, 0),
+    ("l14_128_128_r3", 14, 128, 128, 3, 1, 1),
+];
+
+fn main() {
+    let opts = Opts::from_env();
+    let peak = perfmodel::host_peak_gflops();
+    let rt = match Runtime::cpu(Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("fig11 requires artifacts (`make artifacts`): {:#}", e);
+            std::process::exit(0);
+        }
+    };
+    let mut table =
+        Table::with_peak("Fig. 11R — conv N=1 inference under the tensor compiler", peak);
+    let mut rng = Rng::new(12);
+
+    for (name, h, c, k, r, stride, pad) in LAYERS {
+        let x = rng.vec_f32(h * h * c, -1.0, 1.0);
+        let w = rng.vec_f32(r * r * c * k, -0.3, 0.3);
+        let x_t = HostTensor::f32(x.clone(), &[1, h, h, c]);
+        let w_t = HostTensor::f32(w.clone(), &[r, r, c, k]);
+        let meta = rt.manifest.get(&format!("conv_brgemm_{}", name)).unwrap().clone();
+        let flops = meta.flops;
+
+        for variant in ["brgemm", "xla", "im2col"] {
+            let entry = format!("conv_{}_{}", variant, name);
+            rt.warmup(&[&entry]).unwrap();
+            let label = name.to_string();
+            let impl_name = format!("pallas-{}", variant);
+            let inputs = [x_t.clone(), w_t.clone()];
+            table.case(&label, &impl_name, flops, opts, || {
+                black_box(rt.execute(&entry, &inputs).unwrap());
+            });
+        }
+
+        // Native Rust BRGEMM conv at the same shape (NCHW side).
+        // Convert NHWC input to NCHW for the native primitive.
+        let mut x_nchw = vec![0.0f32; c * h * h];
+        for hh in 0..h {
+            for ww in 0..h {
+                for cc in 0..c {
+                    x_nchw[(cc * h + hh) * h + ww] = x[(hh * h + ww) * c + cc];
+                }
+            }
+        }
+        let mut w_kcrs = vec![0.0f32; k * c * r * r];
+        for rr in 0..r {
+            for ss in 0..r {
+                for cc in 0..c {
+                    for kk in 0..k {
+                        w_kcrs[((kk * c + cc) * r + rr) * r + ss] =
+                            w[((rr * r + ss) * c + cc) * k + kk];
+                    }
+                }
+            }
+        }
+        let cfg = ConvConfig::new(1, c, k, h, h, r, r, stride, pad);
+        let prim = ConvPrimitive::new(cfg);
+        let xp = layout::pack_conv_act(&x_nchw, 1, c, h, h, cfg.bc, pad, pad);
+        let wp = layout::pack_conv_weights(&w_kcrs, k, c, r, r, cfg.bk, cfg.bc);
+        let mut out = vec![0.0f32; cfg.output_len()];
+        table.case(name, "native-rust", flops, opts, || {
+            prim.forward(&xp, &wp, None, &mut out);
+            black_box(&out);
+        });
+    }
+
+    println!("{}", table.render());
+    println!("== weighted GF/s per implementation ==");
+    for impl_name in ["pallas-brgemm", "pallas-xla", "pallas-im2col", "native-rust"] {
+        println!("  {:<16} {:>8.2} GF/s", impl_name, table.weighted_gflops(impl_name));
+    }
+    common::paper_note(
+        "Fig11R",
+        "TVM+brgemm 2361 GF = within 5.3% of C impl; 1.24x MKL-DNN",
+        "compiled-brgemm vs XLA-native vs im2col vs native-rust above",
+    );
+    common::paper_note(
+        "Fig11L (iGPU)",
+        "brgemm OpenCL within 3% of clDNN on Gen9",
+        "not reproducible (no GPU); portability shown via the XLA backend",
+    );
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig11.json", table.to_json().to_string_pretty()).ok();
+}

@@ -1,0 +1,84 @@
+//! Microkernel shape explorer (perf-pass tool, not a paper figure).
+use brgemm_dl::brgemm::*;
+use brgemm_dl::perfmodel;
+use std::time::Instant;
+
+fn bench_shape(m: usize, n: usize, k: usize, batch: usize, spread: bool) -> f64 {
+    let d = BrgemmDesc::dense(m, n, k);
+    let kern = BrgemmKernel::new(d);
+    // `spread`: blocks laid out apart (conv/FC reality) vs packed tight.
+    let a_stride = if spread { m * k + 64 } else { m * k };
+    let b_stride = if spread { k * n + 64 } else { k * n };
+    let a = vec![1.0f32; batch * a_stride + 64];
+    let b = vec![1.0f32; batch * b_stride + 64];
+    let mut c = vec![0.0f32; m * n];
+    let a_offs: Vec<usize> = (0..batch).map(|i| i * a_stride).collect();
+    let b_offs: Vec<usize> = (0..batch).map(|i| i * b_stride).collect();
+    for _ in 0..5 { kern.execute_offs(&a, &a_offs, &b, &b_offs, &mut c, None); }
+    let iters = ((2e9 / d.flops(batch)) as usize).max(3);
+    let t0 = Instant::now();
+    for _ in 0..iters { kern.execute_offs(&a, &a_offs, &b, &b_offs, &mut c, None); }
+    std::hint::black_box(&c);
+    d.flops(batch) * iters as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+fn lstm_step_shape(n: usize, c: usize, k: usize) -> f64 {
+    // One LSTM timestep's GEMM work, laid out exactly as the primitive does:
+    // A = x[t] rows strided by C from a big activation tensor; B = packed
+    // gate weights; C blocks = gate tensor rows strided by K.
+    use brgemm_dl::util::rng::Rng;
+    let (bn, bc, bk) = (n.min(24), 64usize, 64usize);
+    let (cb, kb) = (c / bc, k / bk);
+    let mut rng = Rng::new(1);
+    let x = rng.vec_f32(n * c, -1.0, 1.0);
+    let h = rng.vec_f32(n * k, -1.0, 1.0);
+    let w = rng.vec_f32(4 * k * c, -0.2, 0.2);
+    let r = rng.vec_f32(4 * k * k, -0.2, 0.2);
+    let mut gates = vec![0.0f32; 4 * n * k];
+    let wx = BrgemmKernel::new(BrgemmDesc { m: bn, n: bk, k: bc, lda: c, ldb: bk, ldc: k, a_kstride: 1, alpha: 1.0, beta: 0.0 });
+    let rh = BrgemmKernel::new(BrgemmDesc { m: bn, n: bk, k: bk, lda: k, ldb: bk, ldc: k, a_kstride: 1, alpha: 1.0, beta: 1.0 });
+    let flops = 2.0 * 4.0 * n as f64 * k as f64 * (c + k) as f64;
+    let mut run = || {
+        for z in 0..4 {
+            for ikb in 0..kb {
+                for inb in 0..n / bn {
+                    let a_offs: Vec<usize> = (0..cb).map(|icb| inb * bn * c + icb * bc).collect();
+                    let b_offs: Vec<usize> = (0..cb).map(|icb| z * k * c + (ikb * cb + icb) * bc * bk).collect();
+                    let g0 = z * n * k + inb * bn * k + ikb * bk;
+                    wx.execute_offs(&x, &a_offs, &w, &b_offs, &mut gates[g0..], None);
+                    let a2: Vec<usize> = (0..kb).map(|i| inb * bn * k + i * bk).collect();
+                    let b2: Vec<usize> = (0..kb).map(|i| z * k * k + (ikb * kb + i) * bk * bk).collect();
+                    rh.execute_offs(&h, &a2, &r, &b2, &mut gates[g0..], None);
+                }
+            }
+        }
+    };
+    for _ in 0..3 { run(); }
+    let iters = ((3e8 / flops) as usize).max(3);
+    let t0 = Instant::now();
+    for _ in 0..iters { run(); }
+    std::hint::black_box(&gates);
+    flops * iters as f64 / t0.elapsed().as_secs_f64() / 1e9
+}
+
+fn main() {
+    let peak = perfmodel::host_peak_gflops();
+    println!("measured peak: {:.1} GF/s", peak);
+    for &(n, c, k) in &[(24usize, 256usize, 256usize), (24, 512, 512), (24, 1024, 1024)] {
+        let g = lstm_step_shape(n, c, k);
+        println!("lstm step n{} c{} k{}: {:>7.1} GF/s ({:>4.1}%)", n, c, k, g, 100.0*g/peak);
+    }
+    for &(m, n, k, batch) in &[
+        (64usize, 64usize, 64usize, 16usize),
+        (49, 64, 64, 32),   // fig11 l28 1x1 flat strip
+        (28, 64, 64, 9),    // 3x3 conv strip
+        (24, 64, 64, 4),    // FC block
+        (6, 64, 64, 16),
+        (12, 64, 64, 16),
+        (24, 64, 512, 1),
+        (49, 64, 2048, 1),  // same flops as (49,64,64,32) but one long k
+    ] {
+        let g = bench_shape(m, n, k, batch, false);
+        println!("m{:>3} n{:>3} k{:>4} b{:>3}: {:>7.1} GF/s ({:>4.1}%)", m, n, k, batch, g, 100.0*g/peak);
+    }
+}

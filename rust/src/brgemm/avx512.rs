@@ -1,0 +1,201 @@
+//! AVX-512 BRGEMM microkernel.
+//!
+//! Row-major mirror of the paper's Figure 2(b) outer-product microkernel:
+//! the accumulator tile is `MR` rows × `NRV` zmm vectors (16 f32 lanes
+//! each) and is pinned in registers for the whole batch-reduce chain. Per
+//! `k` step the kernel loads the `NRV` vectors of one `B_i` row, then
+//! performs `MR` broadcast+FMA rank-1 updates — with the default
+//! `MR = 6, NRV = 4` tile this uses 24 accumulator + 4 B + 1 broadcast
+//! registers = 29 of the 32 zmm registers, the same occupancy strategy as
+//! the paper's 64×6 column-major tile.
+//!
+//! Ragged edges are handled with AVX-512 write-masks on the last vector
+//! column and const-generic dispatch on the remaining rows, so arbitrary
+//! (m, n, k) shapes run through the same code path (no scalar cleanup
+//! loop) — this is what lets the DL primitives use small, odd blocking
+//! factors (paper §3.1.2 "our batch-reduce GEMM allows small blocking
+//! values").
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use super::BrgemmDesc;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+pub(super) const VLEN: usize = 16;
+/// Max register-tile rows.
+pub(super) const MR_MAX: usize = 6;
+/// Max register-tile width in vectors.
+pub(super) const NRV_MAX: usize = 4;
+
+/// # Safety
+/// Same contract as [`super::scalar::brgemm_offs`]; additionally requires
+/// the CPU to support AVX-512F (guaranteed by the [`super::Isa`] dispatch).
+#[cfg(target_arch = "x86_64")]
+pub(super) unsafe fn brgemm_offs(
+    d: &BrgemmDesc,
+    a: &[f32],
+    a_offs: &[usize],
+    b: &[f32],
+    b_offs: &[usize],
+    c: &mut [f32],
+) {
+    brgemm_offs_avx512(d, a.as_ptr(), a_offs, b.as_ptr(), b_offs, c.as_mut_ptr());
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(super) unsafe fn brgemm_offs(
+    d: &BrgemmDesc,
+    a: &[f32],
+    a_offs: &[usize],
+    b: &[f32],
+    b_offs: &[usize],
+    c: &mut [f32],
+) {
+    super::scalar::brgemm_offs(d, a, a_offs, b, b_offs, c)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn brgemm_offs_avx512(
+    d: &BrgemmDesc,
+    a: *const f32,
+    a_offs: &[usize],
+    b: *const f32,
+    b_offs: &[usize],
+    c: *mut f32,
+) {
+    let (m, n) = (d.m, d.n);
+    let mut inn = 0;
+    while inn < n {
+        // Column block: up to NRV_MAX full vectors; the final (possibly
+        // partial) vector gets a lane mask.
+        let nb = (NRV_MAX * VLEN).min(n - inn);
+        let nrv = nb.div_ceil(VLEN);
+        let tail = nb - (nrv - 1) * VLEN; // lanes in the last vector, 1..=16
+        let mask: __mmask16 = if tail == VLEN { 0xFFFF } else { (1u16 << tail) - 1 };
+        let mut im = 0;
+        while im < m {
+            let mb = MR_MAX.min(m - im);
+            dispatch_tile(d, a, a_offs, b, b_offs, c, im, inn, mb, nrv, mask);
+            im += mb;
+        }
+        inn += nb;
+    }
+}
+
+/// Const-generic dispatch over (rows, vector-columns) of the tile.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn dispatch_tile(
+    d: &BrgemmDesc,
+    a: *const f32,
+    a_offs: &[usize],
+    b: *const f32,
+    b_offs: &[usize],
+    c: *mut f32,
+    im: usize,
+    inn: usize,
+    mb: usize,
+    nrv: usize,
+    mask: __mmask16,
+) {
+    macro_rules! go {
+        ($mr:literal, $nrv:literal) => {
+            tile::<$mr, $nrv>(d, a, a_offs, b, b_offs, c, im, inn, mask)
+        };
+    }
+    macro_rules! by_nrv {
+        ($mr:literal) => {
+            match nrv {
+                1 => go!($mr, 1),
+                2 => go!($mr, 2),
+                3 => go!($mr, 3),
+                _ => go!($mr, 4),
+            }
+        };
+    }
+    match mb {
+        1 => by_nrv!(1),
+        2 => by_nrv!(2),
+        3 => by_nrv!(3),
+        4 => by_nrv!(4),
+        5 => by_nrv!(5),
+        _ => by_nrv!(6),
+    }
+}
+
+/// One register tile: `MR` rows × `NRV` vectors, last vector masked.
+///
+/// The accumulators live in `[[__m512; NRV]; MR]`; with const bounds the
+/// loops fully unroll and LLVM keeps the array in zmm registers.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn tile<const MR: usize, const NRV: usize>(
+    d: &BrgemmDesc,
+    a: *const f32,
+    a_offs: &[usize],
+    b: *const f32,
+    b_offs: &[usize],
+    c: *mut f32,
+    im: usize,
+    inn: usize,
+    mask: __mmask16,
+) {
+    let mut acc = [[_mm512_setzero_ps(); NRV]; MR];
+    let full_mask = mask == 0xFFFF;
+
+    // Batch-reduce loop: the accumulation chain spans every (A_i, B_i) pair.
+    for (ao, bo) in a_offs.iter().zip(b_offs) {
+        let a_base = a.add(ao + im * d.lda);
+        let b_base = b.add(bo + inn);
+        for kk in 0..d.k {
+            // Load one row of B_i (NRV vectors; last one masked).
+            let b_row = b_base.add(kk * d.ldb);
+            let mut bv = [_mm512_setzero_ps(); NRV];
+            for v in 0..NRV {
+                bv[v] = if v + 1 < NRV || full_mask {
+                    _mm512_loadu_ps(b_row.add(v * VLEN))
+                } else {
+                    _mm512_maskz_loadu_ps(mask, b_row.add(v * VLEN))
+                };
+            }
+            // MR broadcast+FMA rank-1 updates.
+            for r in 0..MR {
+                let av = _mm512_set1_ps(*a_base.add(r * d.lda + kk * d.a_kstride));
+                for v in 0..NRV {
+                    acc[r][v] = _mm512_fmadd_ps(av, bv[v], acc[r][v]);
+                }
+            }
+        }
+    }
+
+    // Store once after the full chain, applying β·C + α·acc.
+    let alpha = _mm512_set1_ps(d.alpha);
+    let beta = _mm512_set1_ps(d.beta);
+    let simple = d.alpha == 1.0 && d.beta == 0.0;
+    for r in 0..MR {
+        let crow = c.add((im + r) * d.ldc + inn);
+        for v in 0..NRV {
+            let dst = crow.add(v * VLEN);
+            let last = v + 1 == NRV && !full_mask;
+            let val = if simple {
+                acc[r][v]
+            } else {
+                let old = if last {
+                    _mm512_maskz_loadu_ps(mask, dst)
+                } else {
+                    _mm512_loadu_ps(dst)
+                };
+                _mm512_fmadd_ps(beta, old, _mm512_mul_ps(alpha, acc[r][v]))
+            };
+            if last {
+                _mm512_mask_storeu_ps(dst, mask, val);
+            } else {
+                _mm512_storeu_ps(dst, val);
+            }
+        }
+    }
+}

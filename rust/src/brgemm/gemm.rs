@@ -1,0 +1,285 @@
+//! Plain and batched GEMM on top of the single building block.
+//!
+//! These exist for two reasons:
+//!
+//! 1. They are the **baselines** the paper compares against (strategy (i):
+//!    coarse-grained library GEMM calls — the large-GEMM LSTM/FC cells and
+//!    the im2col / batched-GEMM convolutions of Figure 1).
+//! 2. They demonstrate the paper's thesis in miniature: a full GEMM *is*
+//!    a BRGEMM with batch length 1 plus cache-blocking loops, so nothing
+//!    beyond the single kernel needs low-level optimisation.
+
+use super::{BrgemmDesc, BrgemmKernel};
+
+/// Cache-blocking tile sizes for the large-GEMM driver. `MC`/`NC` bound the
+/// C tile handed to one kernel call; `KC` bounds the accumulation depth per
+/// kernel call so the A/B panels stay cache-resident.
+const MC: usize = 96;
+const NC: usize = 192;
+const KC: usize = 256;
+
+/// A reusable dense GEMM: `C = beta*C + alpha * A(m×k) · B(k×n)`,
+/// row-major, arbitrary leading dimensions.
+#[derive(Debug, Clone)]
+pub struct Gemm {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub lda: usize,
+    pub ldb: usize,
+    pub ldc: usize,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl Gemm {
+    pub fn dense(m: usize, n: usize, k: usize) -> Gemm {
+        Gemm { m, n, k, lda: k, ldb: n, ldc: n, alpha: 1.0, beta: 0.0 }
+    }
+
+    pub fn with_ld(mut self, lda: usize, ldb: usize, ldc: usize) -> Gemm {
+        self.lda = lda;
+        self.ldb = ldb;
+        self.ldc = ldc;
+        self
+    }
+
+    pub fn with_alpha_beta(mut self, alpha: f32, beta: f32) -> Gemm {
+        self.alpha = alpha;
+        self.beta = beta;
+        self
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Execute. The k dimension is split into `KC` panels; the first panel
+    /// applies the caller's β, subsequent panels accumulate (β = 1) — the
+    /// long-accumulation-chain structure the paper attributes to BRGEMM,
+    /// recovered here through the strided variant over k-panels.
+    pub fn execute(&self, a: &[f32], b: &[f32], c: &mut [f32]) {
+        let mut ic = 0;
+        while ic < self.m {
+            let mb = MC.min(self.m - ic);
+            let mut jc = 0;
+            while jc < self.n {
+                let nb = NC.min(self.n - jc);
+                // K-panels become the batch of a single BRGEMM call: block i
+                // of A is the i-th k-panel of this row stripe, likewise B.
+                let k_panels = self.k.div_ceil(KC);
+                let full = self.k - (k_panels - 1) * KC;
+                // Full-size panels first (batch), remainder panel separately
+                // if its k differs.
+                if k_panels == 1 || full == KC {
+                    let desc = BrgemmDesc {
+                        m: mb,
+                        n: nb,
+                        k: KC.min(self.k),
+                        lda: self.lda,
+                        ldb: self.ldb,
+                        ldc: self.ldc,
+                        a_kstride: 1,
+                        alpha: self.alpha,
+                        beta: self.beta,
+                    };
+                    let kern = BrgemmKernel::new(desc);
+                    let a_offs: Vec<usize> =
+                        (0..k_panels).map(|p| ic * self.lda + p * KC).collect();
+                    let b_offs: Vec<usize> =
+                        (0..k_panels).map(|p| p * KC * self.ldb + jc).collect();
+                    let c_off = ic * self.ldc + jc;
+                    kern.execute_offs(a, &a_offs, b, &b_offs, &mut c[c_off..], None);
+                } else {
+                    // Mixed panel sizes: lead batch with full panels, then a
+                    // β=1 tail call for the remainder.
+                    let desc = BrgemmDesc {
+                        m: mb,
+                        n: nb,
+                        k: KC,
+                        lda: self.lda,
+                        ldb: self.ldb,
+                        ldc: self.ldc,
+                        a_kstride: 1,
+                        alpha: self.alpha,
+                        beta: self.beta,
+                    };
+                    let kern = BrgemmKernel::new(desc);
+                    let a_offs: Vec<usize> =
+                        (0..k_panels - 1).map(|p| ic * self.lda + p * KC).collect();
+                    let b_offs: Vec<usize> =
+                        (0..k_panels - 1).map(|p| p * KC * self.ldb + jc).collect();
+                    let c_off = ic * self.ldc + jc;
+                    kern.execute_offs(a, &a_offs, b, &b_offs, &mut c[c_off..], None);
+                    let tail = BrgemmKernel::new(BrgemmDesc {
+                        k: full,
+                        beta: 1.0,
+                        ..desc
+                    });
+                    let p = k_panels - 1;
+                    tail.execute_offs(
+                        a,
+                        &[ic * self.lda + p * KC],
+                        b,
+                        &[p * KC * self.ldb + jc],
+                        &mut c[c_off..],
+                        None,
+                    );
+                }
+                jc += nb;
+            }
+            ic += mb;
+        }
+    }
+}
+
+/// One-shot dense GEMM, `C = A·B` (α=1, β=0).
+pub fn gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    Gemm::dense(m, n, k).execute(a, b, c);
+}
+
+/// `C = Aᵀ(m×k) · B(k×n)` where A is stored k×m: transposes A into scratch
+/// then multiplies. The bwd/upd primitives use this; its copy cost is the
+/// "tensor reformatting" the paper accounts for in Table 1.
+pub fn gemm_at(m: usize, n: usize, k: usize, a_kxm: &[f32], b: &[f32], c: &mut [f32]) {
+    let mut at = vec![0.0f32; m * k];
+    for i in 0..k {
+        for j in 0..m {
+            at[j * k + i] = a_kxm[i * m + j];
+        }
+    }
+    gemm(m, n, k, &at, b, c);
+}
+
+/// Batched GEMM baseline: `C_i = beta*C_i + alpha*A_i·B_i` for each i —
+/// the [19]/strided-batch-gemm semantics the paper contrasts with BRGEMM:
+/// every pair gets its own output block, so there is **no** cross-pair
+/// accumulation-chain register reuse.
+#[allow(clippy::too_many_arguments)]
+pub fn batched_gemm(
+    desc: &BrgemmDesc,
+    batch: usize,
+    a: &[f32],
+    stride_a: usize,
+    b: &[f32],
+    stride_b: usize,
+    c: &mut [f32],
+    stride_c: usize,
+) {
+    let kern = BrgemmKernel::new(*desc);
+    for i in 0..batch {
+        let c_off = i * stride_c;
+        kern.execute_offs(a, &[i * stride_a], b, &[i * stride_b], &mut c[c_off..], None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn naive(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                c[i * n + j] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive_small() {
+        let mut rng = Rng::new(1);
+        for &(m, n, k) in &[(1, 1, 1), (4, 4, 4), (17, 23, 9), (64, 64, 64)] {
+            let a = rng.vec_f32(m * k, -1.0, 1.0);
+            let b = rng.vec_f32(k * n, -1.0, 1.0);
+            let mut c = vec![0.0; m * n];
+            gemm(m, n, k, &a, &b, &mut c);
+            let want = naive(m, n, k, &a, &b);
+            for i in 0..c.len() {
+                assert!((c[i] - want[i]).abs() < 1e-3, "({},{},{}) at {}", m, n, k, i);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_k_panel_split() {
+        // k > KC exercises the multi-panel batch path, including the
+        // non-divisible remainder.
+        let mut rng = Rng::new(2);
+        for k in [256, 300, 512, 700] {
+            let (m, n) = (5, 19);
+            let a = rng.vec_f32(m * k, -1.0, 1.0);
+            let b = rng.vec_f32(k * n, -1.0, 1.0);
+            let mut c = vec![0.0; m * n];
+            gemm(m, n, k, &a, &b, &mut c);
+            let want = naive(m, n, k, &a, &b);
+            for i in 0..c.len() {
+                assert!((c[i] - want[i]).abs() < 2e-3, "k={} at {}", k, i);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_at_transposes() {
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (7, 11, 5);
+        let a_kxm = rng.vec_f32(k * m, -1.0, 1.0);
+        let b = rng.vec_f32(k * n, -1.0, 1.0);
+        let mut c = vec![0.0; m * n];
+        gemm_at(m, n, k, &a_kxm, &b, &mut c);
+        // oracle: c[i][j] = sum_k a_kxm[k][i] * b[k][j]
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a_kxm[kk * m + i] * b[kk * n + j];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_gemm_is_independent_products() {
+        let mut rng = Rng::new(4);
+        let d = BrgemmDesc::dense(3, 8, 4);
+        let batch = 5;
+        let a = rng.vec_f32(batch * 12, -1.0, 1.0);
+        let b = rng.vec_f32(batch * 32, -1.0, 1.0);
+        let mut c = vec![0.0; batch * 24];
+        batched_gemm(&d, batch, &a, 12, &b, 32, &mut c, 24);
+        for i in 0..batch {
+            let want = naive(3, 8, 4, &a[i * 12..i * 12 + 12], &b[i * 32..i * 32 + 32]);
+            for j in 0..24 {
+                assert!((c[i * 24 + j] - want[j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn property_gemm_random_shapes() {
+        Prop::new("blocked gemm = naive").cases(40).run(|g| {
+            let m = g.usize(1..=50);
+            let n = g.usize(1..=80);
+            let k = g.usize(1..=300);
+            let a = g.vec_f32(m * k, -1.0, 1.0);
+            let b = g.vec_f32(k * n, -1.0, 1.0);
+            let mut c = vec![0.0; m * n];
+            gemm(m, n, k, &a, &b, &mut c);
+            let want = naive(m, n, k, &a, &b);
+            for i in 0..c.len() {
+                if (c[i] - want[i]).abs() > 1e-3 {
+                    return Err(format!("({},{},{}): c[{}]={} want {}", m, n, k, i, c[i], want[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,69 @@
+//! Scalar (ISA-independent) BRGEMM microkernel.
+//!
+//! Serves three roles: the portable fallback, the correctness oracle for
+//! the vectorised paths, and a faithful transcription of the paper's
+//! Algorithm 1 — including the register-blocking structure, so that the
+//! scalar and AVX-512 paths differ only in the width of the "register".
+//!
+//! The accumulator tile is kept in a stack array across the *entire*
+//! batch-reduce loop (the paper's key property: the C sub-block is loaded
+//! once before the batch loop and stored once after it, instead of per
+//! GEMM as a batched-GEMM formulation would).
+
+use super::BrgemmDesc;
+
+/// Register-tile height used by the scalar path; chosen to match the
+/// AVX-512 path's default so blocking behaviour is comparable.
+const MR: usize = 6;
+/// Register-tile width (elements).
+const NR: usize = 16;
+
+/// # Safety
+/// Caller must have validated that every `a_offs[i]` block of extent
+/// `(m-1)*lda + k`, every `b_offs[i]` block of extent `(k-1)*ldb + n`, and
+/// the C block of extent `(m-1)*ldc + n` are in bounds.
+pub(super) unsafe fn brgemm_offs(
+    d: &BrgemmDesc,
+    a: &[f32],
+    a_offs: &[usize],
+    b: &[f32],
+    b_offs: &[usize],
+    c: &mut [f32],
+) {
+    let (m, n, k) = (d.m, d.n, d.k);
+    let mut im = 0;
+    while im < m {
+        let mb = MR.min(m - im);
+        let mut inn = 0;
+        while inn < n {
+            let nb = NR.min(n - inn);
+            // Load/initialise the accumulator tile once (Algorithm 1 line 3).
+            let mut acc = [[0.0f32; NR]; MR];
+            // Batch-reduce loop (line 4): accumulate every A_i·B_i into the
+            // same register tile.
+            for (ao, bo) in a_offs.iter().zip(b_offs) {
+                for kk in 0..k {
+                    // Outer-product update (lines 5-7): one column-broadcast
+                    // of A against one row of B.
+                    let b_row = bo + kk * d.ldb + inn;
+                    for r in 0..mb {
+                        let av = *a.get_unchecked(ao + (im + r) * d.lda + kk * d.a_kstride);
+                        for cc in 0..nb {
+                            acc[r][cc] = av.mul_add(*b.get_unchecked(b_row + cc), acc[r][cc]);
+                        }
+                    }
+                }
+            }
+            // Store once after the full accumulation chain (line 8).
+            for r in 0..mb {
+                let crow = (im + r) * d.ldc + inn;
+                for cc in 0..nb {
+                    let dst = c.get_unchecked_mut(crow + cc);
+                    *dst = d.beta * *dst + d.alpha * acc[r][cc];
+                }
+            }
+            inn += nb;
+        }
+        im += mb;
+    }
+}

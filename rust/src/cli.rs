@@ -1,0 +1,233 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Specification of one option, for validation + usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Whether the option takes a value (`--key v`); false = boolean flag.
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Declarative command spec.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name). If `commands` is
+    /// non-empty, the first non-flag token must be one of them.
+    pub fn parse(argv: &[String], commands: &[Command]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+
+        if !commands.is_empty() {
+            match it.peek() {
+                Some(tok) if !tok.starts_with('-') => {
+                    let name = it.next().unwrap();
+                    if !commands.iter().any(|c| c.name == *name) {
+                        return Err(CliError(format!(
+                            "unknown command '{}'; expected one of: {}",
+                            name,
+                            commands.iter().map(|c| c.name).collect::<Vec<_>>().join(", ")
+                        )));
+                    }
+                    out.subcommand = Some(name.clone());
+                }
+                _ => {}
+            }
+        }
+
+        let spec: Option<&Command> = out
+            .subcommand
+            .as_ref()
+            .and_then(|s| commands.iter().find(|c| c.name == *s));
+
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let takes_value = spec
+                    .map(|s| {
+                        s.opts
+                            .iter()
+                            .find(|o| o.name == key)
+                            .map(|o| o.takes_value)
+                            // Unknown options default to value-taking if a
+                            // value is inline, else flag.
+                            .unwrap_or(inline_val.is_some())
+                    })
+                    .unwrap_or(inline_val.is_some() || matches!(it.peek(), Some(v) if !v.starts_with("--")));
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if takes_value {
+                    it.next()
+                        .ok_or_else(|| CliError(format!("--{} expects a value", key)))?
+                        .clone()
+                } else {
+                    "true".to_string()
+                };
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+
+        // Apply declared defaults.
+        if let Some(s) = spec {
+            for o in &s.opts {
+                if let Some(d) = o.default {
+                    out.flags.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.str(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        self.parse_opt(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        self.parse_opt(key)
+    }
+
+    fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError> {
+        match self.str(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{}: cannot parse '{}'", key, v))),
+        }
+    }
+
+    /// `--key v` with a required default fallback.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.usize(key)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.f64(key)?.unwrap_or(default))
+    }
+}
+
+/// Render usage text for a command set.
+pub fn usage(prog: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", prog, about, prog);
+    for c in commands {
+        s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+    }
+    s.push_str("\nOPTIONS (per command):\n");
+    for c in commands {
+        if c.opts.is_empty() {
+            continue;
+        }
+        s.push_str(&format!("  {}:\n", c.name));
+        for o in &c.opts {
+            let v = if o.takes_value { " <v>" } else { "" };
+            let d = o.default.map(|d| format!(" [default: {}]", d)).unwrap_or_default();
+            s.push_str(&format!("    --{}{:<12} {}{}\n", o.name, v, o.help, d));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmds() -> Vec<Command> {
+        vec![Command {
+            name: "bench",
+            about: "run benches",
+            opts: vec![
+                OptSpec { name: "iters", help: "iterations", takes_value: true, default: Some("10") },
+                OptSpec { name: "quick", help: "quick mode", takes_value: false, default: None },
+            ],
+        }]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = Args::parse(&sv(&["bench", "--iters", "32", "--quick", "extra"]), &cmds()).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.usize("iters").unwrap(), Some(32));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = Args::parse(&sv(&["bench", "--iters=7"]), &cmds()).unwrap();
+        assert_eq!(a.usize("iters").unwrap(), Some(7));
+        let b = Args::parse(&sv(&["bench"]), &cmds()).unwrap();
+        assert_eq!(b.usize("iters").unwrap(), Some(10), "default applies");
+        assert!(!b.flag("quick"));
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(Args::parse(&sv(&["nope"]), &cmds()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["bench", "--iters"]), &cmds()).is_err());
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = Args::parse(&sv(&["bench", "--iters", "xyz"]), &cmds()).unwrap();
+        assert!(a.usize("iters").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_commands_and_opts() {
+        let u = usage("brgemm-dl", "demo", &cmds());
+        assert!(u.contains("bench") && u.contains("--iters"));
+    }
+}

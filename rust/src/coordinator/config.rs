@@ -1,0 +1,175 @@
+//! Run configuration: JSON config files for the launcher.
+//!
+//! A config names a workload (mlp / lstm / resnet), its shape, and the
+//! execution backend (native BRGEMM primitives or compiled XLA artifacts)
+//! — the coordinator's equivalent of a framework's model + run spec.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Which execution engine runs the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust BRGEMM primitives (the paper's C-kernel analogue).
+    Native,
+    /// AOT-compiled XLA artifacts via PJRT (the tensor-compiler analogue).
+    Xla,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            other => bail!("unknown backend '{}' (native|xla)", other),
+        }
+    }
+}
+
+/// Workload family + shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    Mlp { sizes: Vec<usize> },
+    Lstm { c: usize, k: usize, t: usize, layers: usize },
+    Resnet { scale: usize },
+}
+
+/// A full run specification.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub workload: Workload,
+    pub backend: Backend,
+    pub batch: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub workers: usize,
+    pub nthreads: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            workload: Workload::Mlp { sizes: vec![64, 128, 10] },
+            backend: Backend::Native,
+            batch: 32,
+            steps: 100,
+            lr: 0.05,
+            workers: 1,
+            nthreads: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON document, e.g.
+    /// `{"workload": {"kind": "mlp", "sizes": [64,128,10]}, "batch": 32,
+    ///   "steps": 200, "lr": 0.05, "workers": 4, "backend": "native"}`.
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config: {}", e))?;
+        let mut cfg = RunConfig::default();
+        if let Some(w) = j.get("workload") {
+            let kind = w
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("workload.kind required"))?;
+            cfg.workload = match kind {
+                "mlp" => {
+                    let sizes = w
+                        .get("sizes")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("mlp needs sizes"))?
+                        .iter()
+                        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad size")))
+                        .collect::<Result<Vec<_>>>()?;
+                    if sizes.len() < 2 {
+                        bail!("mlp sizes needs >= 2 entries");
+                    }
+                    Workload::Mlp { sizes }
+                }
+                "lstm" => Workload::Lstm {
+                    c: get_usize(w, "c", 64)?,
+                    k: get_usize(w, "k", 64)?,
+                    t: get_usize(w, "t", 16)?,
+                    layers: get_usize(w, "layers", 1)?,
+                },
+                "resnet" => Workload::Resnet { scale: get_usize(w, "scale", 4)? },
+                other => bail!("unknown workload kind '{}'", other),
+            };
+        }
+        if let Some(b) = j.get("backend").and_then(Json::as_str) {
+            cfg.backend = Backend::parse(b)?;
+        }
+        cfg.batch = get_usize(&j, "batch", cfg.batch)?;
+        cfg.steps = get_usize(&j, "steps", cfg.steps)?;
+        cfg.workers = get_usize(&j, "workers", cfg.workers)?;
+        cfg.nthreads = get_usize(&j, "nthreads", cfg.nthreads)?;
+        cfg.seed = get_usize(&j, "seed", cfg.seed as usize)? as u64;
+        if let Some(lr) = j.get("lr").and_then(Json::as_f64) {
+            cfg.lr = lr;
+        }
+        if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
+            bail!("batch/workers/nthreads must be positive");
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {}: {}", path, e))?;
+        RunConfig::from_json(&text)
+    }
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| anyhow!("{} must be a non-negative integer", key)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_json(
+            r#"{"workload": {"kind": "mlp", "sizes": [32, 64, 10]},
+                "backend": "xla", "batch": 16, "steps": 7, "lr": 0.1,
+                "workers": 4, "nthreads": 2, "seed": 9}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload, Workload::Mlp { sizes: vec![32, 64, 10] });
+        assert_eq!(cfg.backend, Backend::Xla);
+        assert_eq!((cfg.batch, cfg.steps, cfg.workers, cfg.nthreads), (16, 7, 4, 2));
+        assert!((cfg.lr - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.seed, 9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = RunConfig::from_json(r#"{}"#).unwrap();
+        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(cfg.batch, 32);
+    }
+
+    #[test]
+    fn lstm_and_resnet_workloads() {
+        let cfg = RunConfig::from_json(r#"{"workload": {"kind": "lstm", "c": 128, "k": 128, "t": 8}}"#)
+            .unwrap();
+        assert_eq!(cfg.workload, Workload::Lstm { c: 128, k: 128, t: 8, layers: 1 });
+        let cfg =
+            RunConfig::from_json(r#"{"workload": {"kind": "resnet", "scale": 2}}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Resnet { scale: 2 });
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(RunConfig::from_json(r#"{"backend": "cuda"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"workload": {"kind": "mlp", "sizes": [5]}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"batch": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"not json"#).is_err());
+    }
+}

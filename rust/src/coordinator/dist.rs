@@ -1,0 +1,237 @@
+//! Distributed data-parallel training simulator (paper §4.2).
+//!
+//! The paper's multi-node runs (32× dual-socket SKX, Omnipath, MLSL) are
+//! reproduced on this single-core host by separating the two ingredients
+//! that shape the strong-scaling curves:
+//!
+//! 1. **Collective correctness** — a real chunked ring-allreduce runs over
+//!    in-process workers (threads) and is property-tested against the sum
+//!    oracle; the coordinator uses it to combine worker gradients in the
+//!    e2e drivers.
+//! 2. **Time model** — an α-β (latency-bandwidth) cost model of the ring
+//!    allreduce plus measured single-socket compute time produces the
+//!    simulated scaling curves of Fig. 10. The model is calibrated to
+//!    Omnipath-class links (α = 1.5 µs, 100 Gb/s) like the paper's testbed.
+
+use crate::util::pool::parallel_region;
+use std::sync::{Barrier, Mutex};
+
+/// α-β network model of one link.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Per-message latency (seconds).
+    pub alpha: f64,
+    /// Per-byte transfer time (seconds/byte).
+    pub beta: f64,
+}
+
+impl NetworkModel {
+    /// Omnipath-class fabric: 1.5 µs latency, 100 Gb/s ≈ 12.5 GB/s.
+    pub fn omnipath() -> NetworkModel {
+        NetworkModel { alpha: 1.5e-6, beta: 1.0 / 12.5e9 }
+    }
+
+    /// Ring allreduce of `bytes` over `p` ranks: 2(p−1) steps, each sending
+    /// `bytes/p`; total time `2(p−1)(α + (bytes/p)·β)`.
+    pub fn ring_allreduce_secs(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        2.0 * (p - 1) as f64 * (self.alpha + (bytes as f64 / p as f64) * self.beta)
+    }
+}
+
+/// A real chunked ring-allreduce over in-process workers.
+///
+/// Buffers are split into `p` chunks; in the reduce-scatter phase each rank
+/// accumulates chunk `(rank - step)` from its ring predecessor, in the
+/// allgather phase the reduced chunks circulate. The message schedule is
+/// exactly the distributed algorithm's; "transport" is shared memory.
+pub fn ring_allreduce(buffers: &mut [Vec<f32>]) {
+    let p = buffers.len();
+    if p <= 1 {
+        return;
+    }
+    let len = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == len), "rank buffer length mismatch");
+    // chunk c covers [bounds[c], bounds[c+1])
+    let bounds: Vec<usize> = (0..=p).map(|c| c * len / p).collect();
+
+    let shared: Vec<Mutex<&mut Vec<f32>>> = buffers.iter_mut().map(Mutex::new).collect();
+    let barrier = Barrier::new(p);
+
+    parallel_region(p, |rank| {
+        let prev = (rank + p - 1) % p;
+        // Reduce-scatter: after p-1 steps, rank owns the fully reduced
+        // chunk (rank+1) mod p.
+        for step in 0..p - 1 {
+            let chunk = (rank + p - step) % p;
+            let (lo, hi) = (bounds[chunk], bounds[chunk + 1]);
+            let src: Vec<f32> = {
+                let b = shared[prev].lock().unwrap();
+                b[lo..hi].to_vec()
+            };
+            {
+                let mut b = shared[rank].lock().unwrap();
+                for (d, s) in b[lo..hi].iter_mut().zip(&src) {
+                    *d += s;
+                }
+            }
+            barrier.wait();
+        }
+        // Allgather: circulate the reduced chunks.
+        for step in 0..p - 1 {
+            let chunk = (rank + p - step + 1) % p;
+            let (lo, hi) = (bounds[chunk], bounds[chunk + 1]);
+            let src: Vec<f32> = {
+                let b = shared[prev].lock().unwrap();
+                b[lo..hi].to_vec()
+            };
+            {
+                let mut b = shared[rank].lock().unwrap();
+                b[lo..hi].copy_from_slice(&src);
+            }
+            barrier.wait();
+        }
+    });
+}
+
+/// Simulated strong scaling of synchronous data-parallel training.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub nodes: usize,
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    /// Samples (or words) per second at this node count.
+    pub throughput: f64,
+    /// Parallel efficiency vs the smallest measured node count.
+    pub efficiency: f64,
+}
+
+/// Build a strong-scaling curve: global batch `global_batch` is split over
+/// `nodes`; per-step compute is `per_sample_secs · (global_batch / nodes)`
+/// (+ an Amdahl floor `fixed_secs`), followed by an allreduce of
+/// `grad_bytes`. `units_per_sample` converts samples to the reported unit
+/// (words for GNMT, images for ResNet).
+pub fn strong_scaling(
+    net: &NetworkModel,
+    node_counts: &[usize],
+    global_batch: usize,
+    per_sample_secs: f64,
+    fixed_secs: f64,
+    grad_bytes: usize,
+    units_per_sample: f64,
+) -> Vec<ScalingPoint> {
+    let mut out = Vec::new();
+    let mut base: Option<f64> = None; // throughput/node at smallest count
+    for &p in node_counts {
+        let local_batch = (global_batch + p - 1) / p;
+        let compute = per_sample_secs * local_batch as f64 + fixed_secs;
+        let comm = net.ring_allreduce_secs(grad_bytes, p);
+        let step = compute + comm;
+        let throughput = global_batch as f64 * units_per_sample / step;
+        let per_node = throughput / p as f64;
+        let eff = match base {
+            None => {
+                base = Some(per_node);
+                1.0
+            }
+            Some(b) => per_node / b,
+        };
+        out.push(ScalingPoint { nodes: p, compute_secs: compute, comm_secs: comm, throughput, efficiency: eff });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allreduce_equals_sum() {
+        let mut rng = Rng::new(1);
+        for p in [2usize, 3, 4, 7] {
+            for len in [1usize, 5, 64, 1000] {
+                let mut bufs: Vec<Vec<f32>> =
+                    (0..p).map(|_| rng.vec_f32(len, -1.0, 1.0)).collect();
+                let want: Vec<f32> = (0..len)
+                    .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>())
+                    .collect();
+                ring_allreduce(&mut bufs);
+                for b in &bufs {
+                    for i in 0..len {
+                        assert!(
+                            (b[i] - want[i]).abs() < 1e-4,
+                            "p={} len={} i={}: {} vs {}",
+                            p, len, i, b[i], want[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_single_rank_is_identity() {
+        let mut bufs = vec![vec![1.0, 2.0, 3.0]];
+        ring_allreduce(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn property_allreduce_random() {
+        Prop::new("ring allreduce = elementwise sum").cases(25).run(|g| {
+            let p = g.usize(2..=6);
+            let len = g.usize(1..=200);
+            let mut bufs: Vec<Vec<f32>> = (0..p).map(|_| g.vec_f32(len, -1.0, 1.0)).collect();
+            let want: Vec<f32> =
+                (0..len).map(|i| bufs.iter().map(|b| b[i]).sum::<f32>()).collect();
+            ring_allreduce(&mut bufs);
+            for (r, b) in bufs.iter().enumerate() {
+                for i in 0..len {
+                    if (b[i] - want[i]).abs() > 1e-3 {
+                        return Err(format!("rank {} idx {}: {} vs {}", r, i, b[i], want[i]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn network_model_monotonic() {
+        let net = NetworkModel::omnipath();
+        assert_eq!(net.ring_allreduce_secs(1 << 20, 1), 0.0);
+        let t2 = net.ring_allreduce_secs(1 << 20, 2);
+        let t8 = net.ring_allreduce_secs(1 << 20, 8);
+        assert!(t8 > t2, "more ranks, more steps");
+        // bandwidth term dominates for large messages
+        let big = net.ring_allreduce_secs(100 << 20, 4);
+        let small = net.ring_allreduce_secs(1 << 10, 4);
+        assert!(big > 100.0 * small);
+    }
+
+    #[test]
+    fn strong_scaling_efficiency_improves_with_batch() {
+        // The paper's observation: larger global batch ⇒ better strong
+        // scaling (compute per node shrinks slower relative to comm).
+        let net = NetworkModel::omnipath();
+        let nodes = [1, 2, 4, 8, 16];
+        let small = strong_scaling(&net, &nodes, 1344, 1e-4, 1e-3, 50 << 20, 20.0);
+        let large = strong_scaling(&net, &nodes, 5376, 1e-4, 1e-3, 50 << 20, 20.0);
+        let eff_small = small.last().unwrap().efficiency;
+        let eff_large = large.last().unwrap().efficiency;
+        assert!(
+            eff_large > eff_small,
+            "batch 5376 should scale better: {} vs {}",
+            eff_large,
+            eff_small
+        );
+        // Throughput must increase with nodes for the large batch.
+        for w in large.windows(2) {
+            assert!(w[1].throughput > w[0].throughput);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! The coordinator: the framework layer around the primitives and runtime.
+//!
+//! This is the GxM / Tensorflow-integration analogue of the paper's §4.2 —
+//! everything above the kernels that a training system needs:
+//!
+//! * [`config`]  — run specifications (workload, backend, batch, workers).
+//! * [`data`]    — synthetic data pipelines (WMT-like sequence corpus with
+//!   the paper's length-bucketing load balancer; learnable classification
+//!   data for the e2e drivers).
+//! * [`trainer`] — training drivers over the native BRGEMM primitives,
+//!   including synchronous data-parallel training with a real
+//!   ring-allreduce.
+//! * [`dist`]    — the distributed simulator: collective algorithms +
+//!   α-β network cost model reproducing the paper's multi-node scaling
+//!   experiments (Fig. 10) on a single host.
+//! * [`resnet`]  — the ResNet-50 layer table (paper Table 2) and
+//!   weighted-efficiency accounting.
+//! * [`metrics`] — counters/timers with exact parallel merge and JSON
+//!   export.
+
+pub mod config;
+pub mod data;
+pub mod dist;
+pub mod metrics;
+pub mod resnet;
+pub mod trainer;

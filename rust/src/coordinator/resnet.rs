@@ -1,0 +1,128 @@
+//! ResNet-50 layer table (paper Table 2) and topology accounting.
+//!
+//! Each unique convolution shape appears `reps` times in the 53-layer
+//! topology; the paper's *weighted efficiency* metric weights each layer's
+//! flops/time by its repeat count — reproduced by [`weighted_gflops`].
+
+use crate::primitives::conv::ConvConfig;
+
+/// One row of Table 2 (+ repeat count in the full topology and the padding
+/// ResNet-50 actually uses, which the paper omits from the table).
+#[derive(Debug, Clone, Copy)]
+pub struct ResnetLayer {
+    pub id: usize,
+    pub c: usize,
+    pub k: usize,
+    pub h: usize,
+    pub w: usize,
+    pub r: usize,
+    pub s: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Occurrences in the 53-conv-layer ResNet-50 topology.
+    pub reps: usize,
+}
+
+/// The 20 unique convolution shapes of ResNet-50 (paper Table 2), with
+/// repeat counts summing to 53.
+pub const RESNET50_LAYERS: [ResnetLayer; 20] = [
+    ResnetLayer { id: 1, c: 3, k: 64, h: 224, w: 224, r: 7, s: 7, stride: 2, pad: 3, reps: 1 },
+    ResnetLayer { id: 2, c: 64, k: 256, h: 56, w: 56, r: 1, s: 1, stride: 1, pad: 0, reps: 4 },
+    ResnetLayer { id: 3, c: 64, k: 64, h: 56, w: 56, r: 1, s: 1, stride: 1, pad: 0, reps: 1 },
+    ResnetLayer { id: 4, c: 64, k: 64, h: 56, w: 56, r: 3, s: 3, stride: 1, pad: 1, reps: 3 },
+    ResnetLayer { id: 5, c: 256, k: 64, h: 56, w: 56, r: 1, s: 1, stride: 1, pad: 0, reps: 2 },
+    ResnetLayer { id: 6, c: 256, k: 512, h: 56, w: 56, r: 1, s: 1, stride: 2, pad: 0, reps: 1 },
+    ResnetLayer { id: 7, c: 256, k: 128, h: 56, w: 56, r: 1, s: 1, stride: 2, pad: 0, reps: 1 },
+    ResnetLayer { id: 8, c: 128, k: 128, h: 28, w: 28, r: 3, s: 3, stride: 1, pad: 1, reps: 4 },
+    ResnetLayer { id: 9, c: 128, k: 512, h: 28, w: 28, r: 1, s: 1, stride: 1, pad: 0, reps: 4 },
+    ResnetLayer { id: 10, c: 512, k: 128, h: 28, w: 28, r: 1, s: 1, stride: 1, pad: 0, reps: 3 },
+    ResnetLayer { id: 11, c: 512, k: 1024, h: 28, w: 28, r: 1, s: 1, stride: 2, pad: 0, reps: 1 },
+    ResnetLayer { id: 12, c: 512, k: 256, h: 28, w: 28, r: 1, s: 1, stride: 2, pad: 0, reps: 1 },
+    ResnetLayer { id: 13, c: 256, k: 256, h: 14, w: 14, r: 3, s: 3, stride: 1, pad: 1, reps: 6 },
+    ResnetLayer { id: 14, c: 256, k: 1024, h: 14, w: 14, r: 1, s: 1, stride: 1, pad: 0, reps: 6 },
+    ResnetLayer { id: 15, c: 1024, k: 256, h: 14, w: 14, r: 1, s: 1, stride: 1, pad: 0, reps: 5 },
+    ResnetLayer { id: 16, c: 1024, k: 2048, h: 14, w: 14, r: 1, s: 1, stride: 2, pad: 0, reps: 1 },
+    ResnetLayer { id: 17, c: 1024, k: 512, h: 14, w: 14, r: 1, s: 1, stride: 2, pad: 0, reps: 1 },
+    ResnetLayer { id: 18, c: 512, k: 512, h: 7, w: 7, r: 3, s: 3, stride: 1, pad: 1, reps: 3 },
+    ResnetLayer { id: 19, c: 512, k: 2048, h: 7, w: 7, r: 1, s: 1, stride: 1, pad: 0, reps: 3 },
+    ResnetLayer { id: 20, c: 2048, k: 512, h: 7, w: 7, r: 1, s: 1, stride: 1, pad: 0, reps: 2 },
+];
+
+impl ResnetLayer {
+    /// Convolution config at mini-batch `n`, optionally spatially scaled
+    /// down by `scale` (the benches run the paper's shapes divided by 2 or
+    /// 4 so a 1-core run finishes; channel dims — which drive the GEMM
+    /// efficiency story — are kept exact).
+    pub fn conv_config(&self, n: usize, scale: usize) -> ConvConfig {
+        let h = (self.h / scale).max(self.r);
+        let w = (self.w / scale).max(self.s);
+        ConvConfig::new(n, self.c, self.k, h, w, self.r, self.s, self.stride, self.pad)
+    }
+
+    pub fn flops(&self, n: usize, scale: usize) -> f64 {
+        self.conv_config(n, scale).flops()
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "id{:02} {}x{} {}→{} {}x{}/{}",
+            self.id, self.h, self.w, self.c, self.k, self.r, self.s, self.stride
+        )
+    }
+}
+
+/// Weighted GFLOPS over (layer, seconds) measurements, weights = reps
+/// (the paper's topology-weighted efficiency).
+pub fn weighted_gflops(measured: &[(ResnetLayer, f64, f64)]) -> f64 {
+    // measured: (layer, flops, secs)
+    let num: f64 = measured.iter().map(|(l, f, _)| l.reps as f64 * f).sum();
+    let den: f64 = measured.iter().map(|(l, _, t)| l.reps as f64 * t).sum();
+    num / den / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_matches_paper_row_count_and_total() {
+        assert_eq!(RESNET50_LAYERS.len(), 20);
+        let total: usize = RESNET50_LAYERS.iter().map(|l| l.reps).sum();
+        assert_eq!(total, 53, "ResNet-50 has 53 conv layers");
+    }
+
+    #[test]
+    fn shapes_are_consistent() {
+        for l in &RESNET50_LAYERS {
+            let cfg = l.conv_config(1, 1);
+            // output dims must be integral and positive
+            assert!(cfg.p() > 0 && cfg.q() > 0, "layer {}", l.id);
+            // 3x3 layers use pad 1, 7x7 pad 3, 1x1 pad 0
+            match l.r {
+                1 => assert_eq!(l.pad, 0),
+                3 => assert_eq!(l.pad, 1),
+                7 => assert_eq!(l.pad, 3),
+                _ => panic!("unexpected filter size"),
+            }
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_channels() {
+        let l = &RESNET50_LAYERS[3]; // 56x56 3x3
+        let cfg = l.conv_config(4, 2);
+        assert_eq!(cfg.c, l.c);
+        assert_eq!(cfg.k, l.k);
+        assert_eq!(cfg.h, 28);
+    }
+
+    #[test]
+    fn weighted_gflops_weights_by_reps() {
+        let a = RESNET50_LAYERS[1]; // reps 4
+        let b = RESNET50_LAYERS[0]; // reps 1
+        // layer a: 4 GFLOP in 1s ; layer b: 1 GFLOP in 1s
+        let wg = weighted_gflops(&[(a, 1e9, 1.0), (b, 1e9, 1.0)]);
+        // = (4*1e9 + 1*1e9) / (4*1 + 1*1) / 1e9 = 1.0
+        assert!((wg - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,40 @@
+//! # brgemm-dl — Deep Learning via a Single Building Block
+//!
+//! A reproduction of *"High-Performance Deep Learning via a Single Building
+//! Block"* (Georganas et al., 2019): the **batch-reduce GEMM (BRGEMM)**
+//! kernel, and LSTM / CNN / MLP training + inference primitives expressed as
+//! nothing more than loop tuning around that single kernel.
+//!
+//! The crate is organised as the L3 (request-path) layer of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`brgemm`] — the single building block: the batch-reduce GEMM kernel
+//!   (address-list / offset / stride variants, α/β scaling, fused eltwise
+//!   epilogues) with architecture-dispatched microkernels, plus the plain
+//!   and batched GEMM baselines the paper compares against.
+//! * [`tensor`] — blocked tensor layouts (the paper's `[Kb][Cb][bc][bk]`
+//!   weight and `[N][Cb][H][W][bc]` activation formats) and reformat ops.
+//! * [`primitives`] — the DL primitives built on BRGEMM: fully-connected,
+//!   LSTM cell, and direct convolution, each with forward, backward-by-data
+//!   and weight-update passes, plus the coarse-grained baselines
+//!   (large-GEMM cell, im2col + batched GEMM, small-GEMM loop nests).
+//! * [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO
+//!   artifacts produced by the python (JAX + Pallas) build path.
+//! * [`coordinator`] — the framework layer: model/config system, training
+//!   driver, synthetic data pipelines, and the distributed data-parallel
+//!   simulator (ring-allreduce with a network cost model) used for the
+//!   paper's multi-node experiments.
+//! * [`perfmodel`] — roofline probes and efficiency accounting so results
+//!   can be reported as %-of-peak like the paper does.
+//! * [`util`] — self-contained substrates (JSON, RNG, stats, thread pool,
+//!   bench harness, property testing) — the crates.io registry is not
+//!   available in this environment, so these are built in-tree.
+
+pub mod brgemm;
+pub mod cli;
+pub mod coordinator;
+pub mod perfmodel;
+pub mod primitives;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

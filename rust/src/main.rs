@@ -1,0 +1,323 @@
+//! brgemm-dl launcher: the L3 command-line entry point.
+//!
+//! Subcommands:
+//!   info        — platform, measured peak, artifact inventory
+//!   run         — execute a training run from a JSON config
+//!   primitive   — run one DL primitive and report GFLOPS/efficiency
+//!   xla         — execute one AOT artifact with synthetic inputs
+
+use anyhow::{anyhow, bail, Result};
+use brgemm_dl::cli::{usage, Args, Command, OptSpec};
+use brgemm_dl::coordinator::config::{Backend, RunConfig, Workload};
+use brgemm_dl::coordinator::data::ClassifyData;
+use brgemm_dl::coordinator::trainer::{DataParallelTrainer, MlpModel};
+use brgemm_dl::perfmodel;
+use brgemm_dl::primitives::conv::{ConvConfig, ConvPrimitive};
+use brgemm_dl::primitives::eltwise::Act;
+use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
+use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
+use brgemm_dl::runtime::{DType, HostTensor, Runtime};
+use brgemm_dl::tensor::layout;
+use brgemm_dl::util::logger;
+use brgemm_dl::util::rng::Rng;
+use brgemm_dl::{log_info, log_warn};
+use std::path::Path;
+use std::time::Instant;
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command {
+            name: "info",
+            about: "platform, measured peak FLOPS, artifact inventory",
+            opts: vec![],
+        },
+        Command {
+            name: "run",
+            about: "run a training config (JSON)",
+            opts: vec![
+                OptSpec { name: "config", help: "config file path", takes_value: true, default: None },
+                OptSpec { name: "steps", help: "override step count", takes_value: true, default: None },
+            ],
+        },
+        Command {
+            name: "primitive",
+            about: "run one primitive (fc|lstm|conv) and report GFLOPS",
+            opts: vec![
+                OptSpec { name: "op", help: "fc|lstm|conv", takes_value: true, default: Some("fc") },
+                OptSpec { name: "n", help: "mini-batch", takes_value: true, default: Some("32") },
+                OptSpec { name: "c", help: "input features/channels", takes_value: true, default: Some("256") },
+                OptSpec { name: "k", help: "output features/channels", takes_value: true, default: Some("256") },
+                OptSpec { name: "t", help: "LSTM sequence length", takes_value: true, default: Some("16") },
+                OptSpec { name: "hw", help: "conv spatial size", takes_value: true, default: Some("28") },
+                OptSpec { name: "r", help: "conv filter size", takes_value: true, default: Some("3") },
+                OptSpec { name: "iters", help: "timing iterations", takes_value: true, default: Some("10") },
+            ],
+        },
+        Command {
+            name: "xla",
+            about: "execute one AOT artifact with synthetic inputs",
+            opts: vec![
+                OptSpec { name: "entry", help: "artifact name", takes_value: true, default: Some("brgemm_demo") },
+                OptSpec { name: "iters", help: "timing iterations", takes_value: true, default: Some("5") },
+                OptSpec { name: "artifacts", help: "artifact dir", takes_value: true, default: Some("artifacts") },
+            ],
+        },
+    ]
+}
+
+fn main() {
+    logger::init(None);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmds = commands();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!(
+            "{}",
+            usage("brgemm-dl", "DL primitives via a single building block (BRGEMM)", &cmds)
+        );
+        return;
+    }
+    let args = match Args::parse(&argv, &cmds) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {}", e);
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(),
+        Some("run") => cmd_run(&args),
+        Some("primitive") => cmd_primitive(&args),
+        Some("xla") => cmd_xla(&args),
+        _ => {
+            print!("{}", usage("brgemm-dl", "DL primitives via a single building block", &cmds));
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("brgemm-dl — High-Performance Deep Learning via a Single Building Block");
+    println!(
+        "host peak (measured 1-core FMA roofline): {:.1} GFLOPS",
+        perfmodel::host_peak_gflops()
+    );
+    println!(
+        "paper platform: {} = {:.0} GFLOPS / {} cores",
+        perfmodel::SKX_PAPER.name,
+        perfmodel::SKX_PAPER.peak_gflops_f32,
+        perfmodel::SKX_PAPER.cores
+    );
+    match Runtime::cpu(Path::new("artifacts")) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts ({}):", rt.manifest.entries.len());
+            for e in &rt.manifest.entries {
+                println!("  {:<28} {:>10.1} MFLOP  {}", e.name, e.flops / 1e6, e.desc);
+            }
+        }
+        Err(e) => log_warn!("no artifacts: {:#} (run `make artifacts`)", e),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = match args.str("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(steps) = args.usize("steps").map_err(|e| anyhow!("{}", e))? {
+        cfg.steps = steps;
+    }
+    log_info!("run config: {:?}", cfg);
+    match (cfg.workload.clone(), cfg.backend) {
+        (Workload::Mlp { sizes }, Backend::Native) => run_mlp_native(&cfg, &sizes),
+        (Workload::Mlp { .. }, Backend::Xla) => run_mlp_xla(&cfg),
+        (w, b) => bail!("workload {:?} on backend {:?} not wired in the CLI (see examples/)", w, b),
+    }
+}
+
+fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
+    let mut rng = Rng::new(cfg.seed);
+    let data = ClassifyData::synth(4096, sizes[0], *sizes.last().unwrap(), 0.2, &mut rng);
+    if cfg.workers > 1 {
+        let mut dp = DataParallelTrainer::new(
+            sizes,
+            cfg.batch,
+            cfg.workers,
+            cfg.nthreads,
+            cfg.lr as f32,
+            cfg.seed,
+        );
+        for step in 0..cfg.steps {
+            let shards: Vec<_> = (0..cfg.workers)
+                .map(|w| data.batch(step * cfg.workers + w, cfg.batch))
+                .collect();
+            let s = dp.step(&shards);
+            if step % 10 == 0 || step + 1 == cfg.steps {
+                log_info!(
+                    "step {:4} loss {:.4} compute {:.1}ms comm(model) {:.2}ms",
+                    step,
+                    s.loss,
+                    s.compute_secs * 1e3,
+                    s.comm_secs * 1e3
+                );
+            }
+        }
+        if !dp.replicas_consistent() {
+            bail!("replicas diverged");
+        }
+        log_info!("replicas consistent after {} steps", cfg.steps);
+    } else {
+        let mut model = MlpModel::new(sizes, cfg.batch, cfg.nthreads, &mut rng);
+        log_info!("model params: {}", model.param_count());
+        for step in 0..cfg.steps {
+            let (x, labels) = data.batch(step, cfg.batch);
+            let loss = model.train_step(&x, &labels, cfg.lr as f32);
+            if step % 20 == 0 || step + 1 == cfg.steps {
+                log_info!("step {:4} loss {:.4}", step, loss);
+            }
+        }
+        let acc = model.accuracy(&data, 16);
+        log_info!("final accuracy {:.1}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn run_mlp_xla(cfg: &RunConfig) -> Result<()> {
+    let rt = Runtime::cpu(Path::new("artifacts"))?;
+    let meta = rt.manifest.get("mlp_train_step")?.clone();
+    let mut rng = Rng::new(cfg.seed);
+    let mut tensors = synth_inputs(&meta.inputs, &mut rng);
+    for step in 0..cfg.steps {
+        let (outs, stats) = rt.execute("mlp_train_step", &tensors)?;
+        let loss = outs.last().unwrap().as_f32()?[0];
+        for (i, out) in outs[..outs.len() - 1].iter().enumerate() {
+            tensors[i] = out.clone();
+        }
+        if step % 10 == 0 || step + 1 == cfg.steps {
+            log_info!("step {:4} loss {:.4} ({:.1} ms)", step, loss, stats.secs * 1e3);
+        }
+    }
+    Ok(())
+}
+
+fn synth_inputs(metas: &[brgemm_dl::runtime::TensorMeta], rng: &mut Rng) -> Vec<HostTensor> {
+    metas
+        .iter()
+        .map(|t| match t.dtype {
+            DType::F32 => HostTensor::f32(rng.vec_f32(t.element_count(), -0.1, 0.1), &t.shape),
+            DType::I32 => HostTensor::i32(
+                (0..t.element_count()).map(|_| rng.below(10) as i32).collect(),
+                &t.shape,
+            ),
+        })
+        .collect()
+}
+
+fn cmd_primitive(args: &Args) -> Result<()> {
+    let op = args.str("op").unwrap_or("fc");
+    let n = args.usize_or("n", 32).map_err(|e| anyhow!("{}", e))?;
+    let c = args.usize_or("c", 256).map_err(|e| anyhow!("{}", e))?;
+    let k = args.usize_or("k", 256).map_err(|e| anyhow!("{}", e))?;
+    let iters = args.usize_or("iters", 10).map_err(|e| anyhow!("{}", e))?;
+    let peak = perfmodel::host_peak_gflops();
+    let mut rng = Rng::new(1);
+    match op {
+        "fc" => {
+            let cfg = FcConfig::new(n, c, k, Act::Relu);
+            let prim = FcPrimitive::new(cfg);
+            let x = rng.vec_f32(n * c, -1.0, 1.0);
+            let w = rng.vec_f32(k * c, -0.5, 0.5);
+            let bias = rng.vec_f32(k, -0.1, 0.1);
+            let xp = layout::pack_act_2d(&x, n, c, cfg.bn, cfg.bc);
+            let wp = layout::pack_weights_2d(&w, k, c, cfg.bk, cfg.bc);
+            let mut y = vec![0.0; n * k];
+            prim.forward(&xp, &wp, &bias, &mut y); // warmup
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                prim.forward(&xp, &wp, &bias, &mut y);
+            }
+            report("fc fwd", cfg.flops() * iters as f64, t0.elapsed().as_secs_f64(), peak);
+        }
+        "lstm" => {
+            let t = args.usize_or("t", 16).map_err(|e| anyhow!("{}", e))?;
+            let cfg = LstmConfig::new(n, c, k, t);
+            let prim = LstmPrimitive::new(cfg);
+            let w: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32(k * c, -0.3, 0.3)).collect();
+            let r: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32(k * k, -0.3, 0.3)).collect();
+            let b: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32(k, -0.1, 0.1)).collect();
+            let wr: Vec<&[f32]> = w.iter().map(|v| v.as_slice()).collect();
+            let rr: Vec<&[f32]> = r.iter().map(|v| v.as_slice()).collect();
+            let br: Vec<&[f32]> = b.iter().map(|v| v.as_slice()).collect();
+            let weights = LstmWeights::pack(cfg, &wr, &rr, &br);
+            let x = rng.vec_f32(t * n * c, -1.0, 1.0);
+            let mut ws = LstmWorkspace::new(&cfg);
+            prim.forward(&x, None, None, &weights, &mut ws);
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                prim.forward(&x, None, None, &weights, &mut ws);
+            }
+            report("lstm fwd", cfg.fwd_flops() * iters as f64, t0.elapsed().as_secs_f64(), peak);
+        }
+        "conv" => {
+            let hw = args.usize_or("hw", 28).map_err(|e| anyhow!("{}", e))?;
+            let r = args.usize_or("r", 3).map_err(|e| anyhow!("{}", e))?;
+            let pad = if r > 1 { r / 2 } else { 0 };
+            let cfg = ConvConfig::new(n, c, k, hw, hw, r, r, 1, pad);
+            let prim = ConvPrimitive::new(cfg);
+            let x = rng.vec_f32(n * c * hw * hw, -1.0, 1.0);
+            let w = rng.vec_f32(k * c * r * r, -0.3, 0.3);
+            let xp = layout::pack_conv_act(&x, n, c, hw, hw, cfg.bc, pad, pad);
+            let wp = layout::pack_conv_weights(&w, k, c, r, r, cfg.bk, cfg.bc);
+            let mut y = vec![0.0; cfg.output_len()];
+            prim.forward(&xp, &wp, None, &mut y);
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                prim.forward(&xp, &wp, None, &mut y);
+            }
+            report("conv fwd", cfg.flops() * iters as f64, t0.elapsed().as_secs_f64(), peak);
+        }
+        other => bail!("unknown primitive '{}'", other),
+    }
+    Ok(())
+}
+
+fn report(what: &str, flops: f64, secs: f64, peak: f64) {
+    let gf = flops / secs / 1e9;
+    println!(
+        "{}: {:.1} GFLOPS ({:.1}% of measured 1-core peak {:.1})",
+        what,
+        gf,
+        100.0 * gf / peak,
+        peak
+    );
+}
+
+fn cmd_xla(args: &Args) -> Result<()> {
+    let entry = args.str("entry").unwrap_or("brgemm_demo");
+    let iters = args.usize_or("iters", 5).map_err(|e| anyhow!("{}", e))?;
+    let dir = args.str("artifacts").unwrap_or("artifacts");
+    let rt = Runtime::cpu(Path::new(dir))?;
+    let meta = rt.manifest.get(entry)?.clone();
+    println!("{}: {}", entry, meta.desc);
+    let mut rng = Rng::new(3);
+    let inputs = synth_inputs(&meta.inputs, &mut rng);
+    rt.warmup(&[entry])?;
+    let (_, first) = rt.execute(entry, &inputs)?;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        rt.execute(entry, &inputs)?;
+    }
+    let secs = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "first {:.2} ms, steady {:.2} ms/iter, {:.2} GFLOPS",
+        first.secs * 1e3,
+        secs * 1e3,
+        meta.flops / secs / 1e9
+    );
+    Ok(())
+}

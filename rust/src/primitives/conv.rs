@@ -1,0 +1,803 @@
+//! Direct convolutions via the batch-reduce GEMM kernel (paper §3.2,
+//! Algorithms 3/4) plus the Figure-1 baselines (im2col + large GEMM, and
+//! small-GEMM loop nests without batch reduction).
+//!
+//! Layouts (§3.2.1), with physical spatial padding so every BRGEMM operand
+//! block is a plain offset:
+//! ```text
+//!   input   I[N][Cb][H+2p][W+2p][bc]
+//!   weights W[Kb][Cb][R][S][bc][bk]
+//!   output  O[N][Kb][P][Q][bk]
+//! ```
+//! One forward work item = a `bq×bk` strip of output pixels: a single
+//! BRGEMM call with batch `R·S·Cb` reduces every (tap, input-feature-block)
+//! contribution into the strip — saving the `(R·S·Cb)−1` accumulator
+//! load/stores a specialized kernel would otherwise need (§3.2.2).
+//!
+//! Backward-by-data is the "dual convolution" of [27]: the same forward
+//! loop nest over (C↔K)-transposed, 180°-rotated weights and a re-padded
+//! dO. Weight update reduces over (mini-batch × output rows) in one BRGEMM
+//! chain, reading activations transposed in place via the kernel's
+//! `a_kstride` (stride-aware, so strided convolutions need no reformat
+//! beyond the per-row channel transpose).
+
+use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
+use crate::primitives::eltwise::Act;
+use crate::primitives::partition::Partition2d;
+use crate::tensor::layout;
+use crate::util::pool::{parallel_region, SharedMut};
+use std::time::Instant;
+
+/// Convolution layer shape + blocking.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvConfig {
+    pub n: usize,
+    pub c: usize,
+    pub k: usize,
+    pub h: usize,
+    pub w: usize,
+    pub r: usize,
+    pub s: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Feature-block factors (divide C and K) and output-pixel strip.
+    pub bc: usize,
+    pub bk: usize,
+    pub bq: usize,
+    pub act: Option<Act>,
+    pub nthreads: usize,
+}
+
+impl ConvConfig {
+    pub fn new(
+        n: usize,
+        c: usize,
+        k: usize,
+        h: usize,
+        w: usize,
+        r: usize,
+        s: usize,
+        stride: usize,
+        pad: usize,
+    ) -> ConvConfig {
+        let pick = |d: usize, pref: usize| {
+            let mut b = pref.min(d);
+            while d % b != 0 {
+                b -= 1;
+            }
+            b
+        };
+        let q = (w + 2 * pad - s) / stride + 1;
+        ConvConfig {
+            n,
+            c,
+            k,
+            h,
+            w,
+            r,
+            s,
+            stride,
+            pad,
+            bc: pick(c, 64),
+            bk: pick(k, 64),
+            bq: pick(q, 28),
+            act: None,
+            nthreads: 1,
+        }
+    }
+
+    pub fn with_blocking(mut self, bc: usize, bk: usize, bq: usize) -> ConvConfig {
+        self.bc = bc;
+        self.bk = bk;
+        self.bq = bq;
+        self.validate();
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> ConvConfig {
+        self.nthreads = t;
+        self
+    }
+
+    pub fn with_act(mut self, act: Act) -> ConvConfig {
+        self.act = Some(act);
+        self
+    }
+
+    fn validate(&self) {
+        assert_eq!(self.c % self.bc, 0, "bc must divide C");
+        assert_eq!(self.k % self.bk, 0, "bk must divide K");
+        assert_eq!(self.q() % self.bq, 0, "bq must divide Q");
+        assert!(self.stride >= 1);
+        assert!(self.h + 2 * self.pad >= self.r && self.w + 2 * self.pad >= self.s);
+    }
+
+    /// Output spatial dims.
+    pub fn p(&self) -> usize {
+        (self.h + 2 * self.pad - self.r) / self.stride + 1
+    }
+    pub fn q(&self) -> usize {
+        (self.w + 2 * self.pad - self.s) / self.stride + 1
+    }
+    /// Padded input spatial dims.
+    pub fn hp(&self) -> usize {
+        self.h + 2 * self.pad
+    }
+    pub fn wp(&self) -> usize {
+        self.w + 2 * self.pad
+    }
+    pub fn cb_ct(&self) -> usize {
+        self.c / self.bc
+    }
+    pub fn kb_ct(&self) -> usize {
+        self.k / self.bk
+    }
+
+    /// GEMM flops of one forward pass (= bwd-data = upd flop count).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.n as f64
+            * self.k as f64
+            * self.c as f64
+            * self.r as f64
+            * self.s as f64
+            * self.p() as f64
+            * self.q() as f64
+    }
+
+    /// Sizes of the packed buffers.
+    pub fn input_len(&self) -> usize {
+        self.n * self.cb_ct() * self.hp() * self.wp() * self.bc
+    }
+    pub fn output_len(&self) -> usize {
+        self.n * self.kb_ct() * self.p() * self.q() * self.bk
+    }
+    pub fn weights_len(&self) -> usize {
+        self.k * self.c * self.r * self.s
+    }
+}
+
+/// Timing breakdown (GEMM vs reformat) for the paper's accounting.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ConvBreakdown {
+    pub gemm_secs: f64,
+    pub reformat_secs: f64,
+}
+
+/// The BRGEMM-based convolution primitive.
+pub struct ConvPrimitive {
+    pub cfg: ConvConfig,
+    fwd_kernel: BrgemmKernel,
+    /// Flattened-spatial forward kernel for 1×1/stride-1 layers (treats
+    /// P×Q as one dimension — the paper's "spatial dimensions collapse"
+    /// optimisation). `None` when not applicable.
+    fwd_flat: Option<(BrgemmKernel, usize)>,
+    upd_kernel: BrgemmKernel,
+}
+
+impl ConvPrimitive {
+    pub fn new(cfg: ConvConfig) -> ConvPrimitive {
+        cfg.validate();
+        let fwd = BrgemmKernel::new(BrgemmDesc {
+            m: cfg.bq,
+            n: cfg.bk,
+            k: cfg.bc,
+            lda: cfg.stride * cfg.bc,
+            ldb: cfg.bk,
+            ldc: cfg.bk,
+            a_kstride: 1,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        // Spatial collapse: legal when the input walk is contiguous across
+        // row ends, i.e. 1×1 taps, unit stride, no padding gap.
+        let fwd_flat = if cfg.r == 1 && cfg.s == 1 && cfg.stride == 1 && cfg.pad == 0 {
+            let pq = cfg.p() * cfg.q();
+            let mut bq = 64.min(pq);
+            while pq % bq != 0 {
+                bq -= 1;
+            }
+            let kern = BrgemmKernel::new(BrgemmDesc {
+                m: bq,
+                n: cfg.bk,
+                k: cfg.bc,
+                lda: cfg.bc,
+                ldb: cfg.bk,
+                ldc: cfg.bk,
+                a_kstride: 1,
+                alpha: 1.0,
+                beta: 0.0,
+            });
+            Some((kern, bq))
+        } else {
+            None
+        };
+        // UPD: dW_blk[bc×bk] = Σ_{n,oj} ITᵀ rows × dO rows; k dim = Q pixels,
+        // read with a_kstride = stride.
+        let upd = BrgemmKernel::new(BrgemmDesc {
+            m: cfg.bc,
+            n: cfg.bk,
+            k: cfg.q(),
+            lda: cfg.wp(),
+            ldb: cfg.bk,
+            ldc: cfg.bk,
+            a_kstride: cfg.stride,
+            alpha: 1.0,
+            beta: 1.0,
+        });
+        ConvPrimitive { cfg, fwd_kernel: fwd, fwd_flat, upd_kernel: upd }
+    }
+
+    /// Forward (Algorithm 4): `out = conv(input, weights) [+bias, act]`.
+    /// `input` is packed+padded, `weights` packed, `out` packed (unpadded).
+    pub fn forward(&self, input: &[f32], weights: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
+        let cfg = &self.cfg;
+        assert_eq!(input.len(), cfg.input_len());
+        assert_eq!(weights.len(), cfg.weights_len());
+        assert_eq!(out.len(), cfg.output_len());
+        if let Some(b) = bias {
+            assert_eq!(b.len(), cfg.k);
+        }
+        let (cb, kb) = (cfg.cb_ct(), cfg.kb_ct());
+        let (p, q) = (cfg.p(), cfg.q());
+        let (hp, wp) = (cfg.hp(), cfg.wp());
+        let batch = cfg.r * cfg.s * cb;
+        let wtap = cfg.bc * cfg.bk; // one packed weight block
+        let shared = &SharedMut::new(out);
+        let part = Partition2d::auto(cfg.n, kb, cfg.nthreads, cfg.weights_len() > 1 << 20);
+        let epi = match (bias, cfg.act) {
+            (Some(_), Some(a)) => Epilogue::BiasAct(a),
+            (Some(_), None) => Epilogue::BiasAct(Act::Identity),
+            (None, Some(a)) => Epilogue::Act(a),
+            (None, None) => Epilogue::None,
+        };
+
+        if let Some((flat_kern, fbq)) = &self.fwd_flat {
+            // 1×1/s1/p0: collapse P×Q; input pixel index = output pixel index.
+            let pq = p * q;
+            let flat_kern = flat_kern.clone().with_epilogue(epi);
+            parallel_region(cfg.nthreads, |tid| {
+                let mut a_offs = vec![0usize; cb];
+                let mut b_offs = vec![0usize; cb];
+                for (n, ikb) in part.tasks(tid) {
+                    let bias_blk = bias.map(|b| &b[ikb * cfg.bk..(ikb + 1) * cfg.bk]);
+                    for op in (0..pq).step_by(*fbq) {
+                        for icb in 0..cb {
+                            a_offs[icb] = ((n * cb + icb) * hp * wp + op) * cfg.bc;
+                            b_offs[icb] = (ikb * cb + icb) * wtap;
+                        }
+                        let o_off = ((n * kb + ikb) * pq + op) * cfg.bk;
+                        let ob = unsafe { shared.slice(o_off, fbq * cfg.bk) };
+                        flat_kern.execute_offs(input, &a_offs, weights, &b_offs, ob, bias_blk);
+                    }
+                }
+            });
+            return;
+        }
+
+        let kern = self.fwd_kernel.clone().with_epilogue(epi);
+        parallel_region(cfg.nthreads, |tid| {
+            let mut a_offs = vec![0usize; batch];
+            let mut b_offs = vec![0usize; batch];
+            for (n, ikb) in part.tasks(tid) {
+                let bias_blk = bias.map(|b| &b[ikb * cfg.bk..(ikb + 1) * cfg.bk]);
+                for oj in 0..p {
+                    let ij = cfg.stride * oj;
+                    for oib in 0..q / cfg.bq {
+                        let oi = oib * cfg.bq;
+                        let ii = cfg.stride * oi;
+                        // Gather the batch: every (icb, r, s) tap.
+                        let mut bi = 0;
+                        for icb in 0..cb {
+                            for rr in 0..cfg.r {
+                                for ss in 0..cfg.s {
+                                    a_offs[bi] = (((n * cb + icb) * hp + (ij + rr)) * wp
+                                        + (ii + ss))
+                                        * cfg.bc;
+                                    b_offs[bi] =
+                                        ((((ikb * cb) + icb) * cfg.r + rr) * cfg.s + ss) * wtap;
+                                    bi += 1;
+                                }
+                            }
+                        }
+                        let o_off = (((n * kb + ikb) * p + oj) * q + oi) * cfg.bk;
+                        let ob = unsafe { shared.slice(o_off, cfg.bq * cfg.bk) };
+                        kern.execute_offs(input, &a_offs, weights, &b_offs, ob, bias_blk);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Dual-weight reformat for [`Self::backward_data_pre`]: (C↔K)-
+    /// transposed, 180°-rotated packed weights. Computed once per weight
+    /// version and amortised across backward calls (the same amortisation
+    /// the paper applies to the LSTM weight transpose).
+    pub fn dual_weights(&self, weights: &[f32]) -> Vec<f32> {
+        let cfg = &self.cfg;
+        layout::dual_conv_weights(weights, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc)
+    }
+
+    /// Backward by data ("dual convolution") with the dual reformat done
+    /// (and charged) per call — convenience wrapper over
+    /// [`Self::backward_data_pre`].
+    pub fn backward_data(&self, d_out: &[f32], weights: &[f32]) -> (Vec<f32>, ConvBreakdown) {
+        let t0 = Instant::now();
+        let dual = self.dual_weights(weights);
+        let reformat = t0.elapsed().as_secs_f64();
+        let (di, mut bd) = self.backward_data_pre(d_out, &dual);
+        bd.reformat_secs += reformat;
+        (di, bd)
+    }
+
+    /// Backward by data given precomputed [`Self::dual_weights`]. Returns
+    /// the packed **padded** input-gradient buffer (same geometry as the
+    /// forward input), so `layout::unpack_conv_act(.., cfg.pad, ..)`
+    /// recovers plain dI.
+    pub fn backward_data_pre(&self, d_out: &[f32], dual: &[f32]) -> (Vec<f32>, ConvBreakdown) {
+        let cfg = &self.cfg;
+        assert_eq!(d_out.len(), cfg.output_len());
+        assert_eq!(dual.len(), cfg.weights_len());
+        let mut bd = ConvBreakdown::default();
+
+        if cfg.stride == 1 {
+            // dIpad = conv_{s1}(pad_{R-1}(dO), dual) — run the forward
+            // primitive with roles swapped.
+            let t0 = Instant::now();
+            let (p, q) = (cfg.p(), cfg.q());
+            // Re-pad dO by (R-1, S-1) directly in blocked form (perf-pass
+            // iteration 2: the unpack→repack round trip dominated BWD;
+            // iteration 3: 1×1 taps need no padding at all — zero copies).
+            let dop_owned;
+            let dop: &[f32] = if cfg.r == 1 && cfg.s == 1 {
+                d_out
+            } else {
+                dop_owned = layout::repad_blocked(
+                    d_out, cfg.n, cfg.kb_ct(), p, q, cfg.bk, cfg.r - 1, cfg.s - 1,
+                );
+                &dop_owned
+            };
+            bd.reformat_secs += t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let dual_cfg = ConvConfig::new(
+                cfg.n,
+                cfg.k,
+                cfg.c,
+                p + 2 * (cfg.r - 1) - 2 * (cfg.r - 1), // logical H of dO = P
+                q,
+                cfg.r,
+                cfg.s,
+                1,
+                cfg.r - 1,
+            )
+            .with_blocking(cfg.bk, cfg.bc, pick_div(cfg.wp(), 64))
+            .with_threads(cfg.nthreads);
+            // Sanity: dual output spatial dims = padded input dims.
+            debug_assert_eq!(dual_cfg.p(), cfg.hp());
+            debug_assert_eq!(dual_cfg.q(), cfg.wp());
+            let prim = ConvPrimitive::new(dual_cfg);
+            let mut di = vec![0.0f32; dual_cfg.output_len()];
+            prim.forward(dop, dual, None, &mut di);
+            bd.gemm_secs += t0.elapsed().as_secs_f64();
+            // di is [N][Cb][Hp][Wp][bc] — exactly the padded input geometry.
+            return (di, bd);
+        }
+
+        if cfg.r == 1 && cfg.s == 1 && cfg.pad == 0 {
+            // Strided 1×1: dI is non-zero only at stride-aligned pixels.
+            let t0 = Instant::now();
+            let (cb, kb) = (cfg.cb_ct(), cfg.kb_ct());
+            let (p, q) = (cfg.p(), cfg.q());
+            let (hp, wp) = (cfg.hp(), cfg.wp());
+            let mut di = vec![0.0f32; cfg.input_len()];
+            let kern = BrgemmKernel::new(BrgemmDesc {
+                m: cfg.bq,
+                n: cfg.bc,
+                k: cfg.bk,
+                lda: cfg.bk,
+                ldb: cfg.bc,
+                ldc: cfg.stride * cfg.bc,
+                a_kstride: 1,
+                alpha: 1.0,
+                beta: 0.0,
+            });
+            let wtap = cfg.bc * cfg.bk;
+            let shared = &SharedMut::new(&mut di);
+            let part = Partition2d::auto(cfg.n, cb, cfg.nthreads, false);
+            parallel_region(cfg.nthreads, |tid| {
+                let mut a_offs = vec![0usize; kb];
+                let mut b_offs = vec![0usize; kb];
+                for (n, icb) in part.tasks(tid) {
+                    for oj in 0..p {
+                        for oib in 0..q / cfg.bq {
+                            let oi = oib * cfg.bq;
+                            for ikb in 0..kb {
+                                a_offs[ikb] =
+                                    (((n * kb + ikb) * p + oj) * q + oi) * cfg.bk;
+                                // dual layout [Cb][Kb][bk][bc]
+                                b_offs[ikb] = (icb * kb + ikb) * wtap;
+                            }
+                            let off = (((n * cb + icb) * hp + cfg.stride * oj) * wp
+                                + cfg.stride * oi)
+                                * cfg.bc;
+                            let len = (cfg.bq - 1) * cfg.stride * cfg.bc + cfg.bc;
+                            let out = unsafe { shared.slice(off, len) };
+                            kern.execute_offs(d_out, &a_offs, &dual, &b_offs, out, None);
+                        }
+                    }
+                }
+            });
+            bd.gemm_secs += t0.elapsed().as_secs_f64();
+            return (di, bd);
+        }
+
+        // General strided case (ResNet uses it only for the stem 7×7/s2):
+        // naive scatter, documented fallback.
+        let t0 = Instant::now();
+        let plain_dy =
+            layout::unpack_conv_act(d_out, cfg.n, cfg.k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        // Recover the forward weights from the dual (dual ∘ dual = id).
+        let fwd_packed =
+            layout::dual_conv_weights(dual, cfg.c, cfg.k, cfg.r, cfg.s, cfg.bc, cfg.bk);
+        let plain_w =
+            layout::unpack_conv_weights(&fwd_packed, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc);
+        let dx = crate::primitives::naive::conv_bwd_data(
+            cfg.n, cfg.c, cfg.k, cfg.h, cfg.w, cfg.r, cfg.s, cfg.stride, cfg.pad, &plain_dy,
+            &plain_w,
+        );
+        let di = layout::pack_conv_act(&dx, cfg.n, cfg.c, cfg.h, cfg.w, cfg.bc, cfg.pad, cfg.pad);
+        bd.gemm_secs += t0.elapsed().as_secs_f64();
+        (di, bd)
+    }
+
+    /// Weight update: `dW = Σ_{n,oj,oi} I ⊗ dO` reduced in one BRGEMM chain
+    /// per weight block; activations are consumed via the per-row channel
+    /// transpose (the pass's reformat cost).
+    pub fn update(&self, input: &[f32], d_out: &[f32]) -> (Vec<f32>, ConvBreakdown) {
+        let cfg = &self.cfg;
+        assert_eq!(input.len(), cfg.input_len());
+        assert_eq!(d_out.len(), cfg.output_len());
+        let mut bd = ConvBreakdown::default();
+        let (cb, kb) = (cfg.cb_ct(), cfg.kb_ct());
+        let (p, q) = (cfg.p(), cfg.q());
+        let (hp, wp) = (cfg.hp(), cfg.wp());
+        let t0 = Instant::now();
+        let it = layout::transpose_act_rows(input, cfg.n, cb, hp, wp, cfg.bc);
+        bd.reformat_secs += t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let mut dw = vec![0.0f32; cfg.weights_len()];
+        let wtap = cfg.bc * cfg.bk;
+        let shared = &SharedMut::new(&mut dw);
+        // Task space: (Kb×Cb) blocks × (R·S) taps, flattened.
+        let part = Partition2d::new(kb * cb, cfg.r * cfg.s, cfg.nthreads, crate::primitives::partition::Strategy::Flat);
+        parallel_region(cfg.nthreads, |tid| {
+            let batch = cfg.n * p;
+            let mut a_offs = vec![0usize; batch];
+            let mut b_offs = vec![0usize; batch];
+            for (kc, rs) in part.tasks(tid) {
+                let (ikb, icb) = (kc / cb, kc % cb);
+                let (rr, ss) = (rs / cfg.s, rs % cfg.s);
+                let mut bi = 0;
+                for n in 0..cfg.n {
+                    for oj in 0..p {
+                        let ij = cfg.stride * oj + rr;
+                        // IT row [n][icb][ij][0][ss]
+                        a_offs[bi] = (((n * cb + icb) * hp + ij) * wp) * cfg.bc + ss;
+                        b_offs[bi] = (((n * kb + ikb) * p + oj) * q) * cfg.bk;
+                        bi += 1;
+                    }
+                }
+                let off = ((((ikb * cb) + icb) * cfg.r + rr) * cfg.s + ss) * wtap;
+                let out = unsafe { shared.slice(off, wtap) };
+                out.fill(0.0); // β=1 kernel accumulates over the chain
+                self.upd_kernel.execute_offs(&it, &a_offs, d_out, &b_offs, out, None);
+            }
+        });
+        bd.gemm_secs += t0.elapsed().as_secs_f64();
+        (dw, bd)
+    }
+}
+
+fn pick_div(d: usize, pref: usize) -> usize {
+    let mut b = pref.min(d);
+    while d % b != 0 {
+        b -= 1;
+    }
+    b
+}
+
+// ---------------------------------------------------------------------------
+// Figure-1 baselines
+// ---------------------------------------------------------------------------
+
+/// Baseline (Fig. 1 "gemm-conv"): Algorithm-3 loop nest with one *small
+/// GEMM per (r, s, cb) tap* — identical blocking/layout to the BRGEMM path
+/// but no batch reduction, so the output strip is loaded/stored from memory
+/// `R·S·Cb` times (β = 1 accumulation).
+pub fn conv_forward_small_gemm(cfg: &ConvConfig, input: &[f32], weights: &[f32], out: &mut [f32]) {
+    let (cb, kb) = (cfg.cb_ct(), cfg.kb_ct());
+    let (p, q) = (cfg.p(), cfg.q());
+    let (hp, wp) = (cfg.hp(), cfg.wp());
+    let wtap = cfg.bc * cfg.bk;
+    out.fill(0.0);
+    let kern = BrgemmKernel::new(BrgemmDesc {
+        m: cfg.bq,
+        n: cfg.bk,
+        k: cfg.bc,
+        lda: cfg.stride * cfg.bc,
+        ldb: cfg.bk,
+        ldc: cfg.bk,
+        a_kstride: 1,
+        alpha: 1.0,
+        beta: 1.0,
+    });
+    let shared = &SharedMut::new(out);
+    let part = Partition2d::auto(cfg.n, kb, cfg.nthreads, false);
+    parallel_region(cfg.nthreads, |tid| {
+        for (n, ikb) in part.tasks(tid) {
+            for icb in 0..cb {
+                for oj in 0..p {
+                    let ij = cfg.stride * oj;
+                    for oib in 0..q / cfg.bq {
+                        let oi = oib * cfg.bq;
+                        let ii = cfg.stride * oi;
+                        let o_off = (((n * kb + ikb) * p + oj) * q + oi) * cfg.bk;
+                        let ob = unsafe { shared.slice(o_off, cfg.bq * cfg.bk) };
+                        for rr in 0..cfg.r {
+                            for ss in 0..cfg.s {
+                                let a = (((n * cb + icb) * hp + (ij + rr)) * wp + (ii + ss))
+                                    * cfg.bc;
+                                let b = ((((ikb * cb) + icb) * cfg.r + rr) * cfg.s + ss) * wtap;
+                                kern.execute_offs(input, &[a], weights, &[b], ob, None);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Baseline (Fig. 1 "im2col + GEMM"): per image, materialise the
+/// `[C·R·S][P·Q]` column tensor, then one large GEMM
+/// `O[K][P·Q] = W[K][C·R·S] · col`. Plain NCHW/KCRS layouts.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_forward_im2col(
+    cfg: &ConvConfig,
+    x: &[f32],  // [N][C][H][W]
+    w: &[f32],  // [K][C][R][S]
+    y: &mut [f32], // [N][K][P][Q]
+) {
+    let (n, c, k) = (cfg.n, cfg.c, cfg.k);
+    let (h, wd, r, s) = (cfg.h, cfg.w, cfg.r, cfg.s);
+    let (p, q) = (cfg.p(), cfg.q());
+    let crs = c * r * s;
+    let pq = p * q;
+    let mut col = vec![0.0f32; crs * pq];
+    let gemm = Gemm::dense(k, pq, crs);
+    for ni in 0..n {
+        // im2col (the copy overhead the paper charges this approach with)
+        for cc in 0..c {
+            for rr in 0..r {
+                for ss in 0..s {
+                    let row = ((cc * r + rr) * s + ss) * pq;
+                    for oj in 0..p {
+                        for oi in 0..q {
+                            let ij = (oj * cfg.stride + rr) as isize - cfg.pad as isize;
+                            let ii = (oi * cfg.stride + ss) as isize - cfg.pad as isize;
+                            col[row + oj * q + oi] =
+                                if ij < 0 || ii < 0 || ij >= h as isize || ii >= wd as isize {
+                                    0.0
+                                } else {
+                                    x[((ni * c + cc) * h + ij as usize) * wd + ii as usize]
+                                };
+                        }
+                    }
+                }
+            }
+        }
+        gemm.execute(w, &col, &mut y[ni * k * pq..(ni + 1) * k * pq]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::naive;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn run_fwd(cfg: &ConvConfig, x: &[f32], w: &[f32]) -> Vec<f32> {
+        let prim = ConvPrimitive::new(*cfg);
+        let xp = layout::pack_conv_act(x, cfg.n, cfg.c, cfg.h, cfg.w, cfg.bc, cfg.pad, cfg.pad);
+        let wp = layout::pack_conv_weights(w, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc);
+        let mut op = vec![0.0; cfg.output_len()];
+        prim.forward(&xp, &wp, None, &mut op);
+        layout::unpack_conv_act(&op, cfg.n, cfg.k, cfg.p(), cfg.q(), cfg.bk, 0, 0)
+    }
+
+    fn check_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - want[i]).abs() < tol,
+                "{}: [{}] {} vs {}",
+                what,
+                i,
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_matches_naive_various_shapes() {
+        let cases = [
+            // (n,c,k,h,w,r,s,str,pad)
+            (1, 4, 8, 6, 6, 3, 3, 1, 1),
+            (2, 8, 8, 5, 7, 1, 1, 1, 0),
+            (1, 4, 4, 8, 8, 1, 1, 2, 0),
+            (2, 2, 6, 9, 9, 3, 3, 2, 1),
+            (1, 6, 4, 7, 7, 7, 7, 2, 3),
+            (1, 3, 5, 6, 6, 2, 2, 1, 0),
+        ];
+        for &(n, c, k, h, w, r, s, st, pad) in &cases {
+            let mut rng = Rng::new((n * c * k + h) as u64);
+            let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+            let wt = rng.vec_f32(k * c * r * s, -0.5, 0.5);
+            let cfg = ConvConfig::new(n, c, k, h, w, r, s, st, pad);
+            let got = run_fwd(&cfg, &x, &wt);
+            let want = naive::conv_fwd(n, c, k, h, w, r, s, st, pad, &x, &wt);
+            check_close(&got, &want, 1e-3, &format!("fwd {:?}", (n, c, k, h, w, r, s, st, pad)));
+        }
+    }
+
+    #[test]
+    fn forward_multithreaded_and_fused_relu() {
+        let (n, c, k, h, w) = (2, 8, 16, 6, 6);
+        let mut rng = Rng::new(3);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let wt = rng.vec_f32(k * c * 9, -0.5, 0.5);
+        let bias = rng.vec_f32(k, -0.1, 0.1);
+        let cfg = ConvConfig::new(n, c, k, h, w, 3, 3, 1, 1).with_threads(3).with_act(Act::Relu);
+        let prim = ConvPrimitive::new(cfg);
+        let xp = layout::pack_conv_act(&x, n, c, h, w, cfg.bc, 1, 1);
+        let wp = layout::pack_conv_weights(&wt, k, c, 3, 3, cfg.bk, cfg.bc);
+        let mut op = vec![0.0; cfg.output_len()];
+        prim.forward(&xp, &wp, Some(&bias), &mut op);
+        let got = layout::unpack_conv_act(&op, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        let plain = naive::conv_fwd(n, c, k, h, w, 3, 3, 1, 1, &x, &wt);
+        let want: Vec<f32> = plain
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let kk = (i / (cfg.p() * cfg.q())) % k;
+                (v + bias[kk]).max(0.0)
+            })
+            .collect();
+        check_close(&got, &want, 1e-3, "fused bias+relu");
+    }
+
+    #[test]
+    fn backward_data_stride1() {
+        let (n, c, k, h, w, r, s) = (1, 4, 6, 5, 5, 3, 3);
+        let mut rng = Rng::new(8);
+        let wt = rng.vec_f32(k * c * r * s, -0.5, 0.5);
+        let cfg = ConvConfig::new(n, c, k, h, w, r, s, 1, 1);
+        let dy = rng.vec_f32(n * k * cfg.p() * cfg.q(), -1.0, 1.0);
+        let prim = ConvPrimitive::new(cfg);
+        let wp = layout::pack_conv_weights(&wt, k, c, r, s, cfg.bk, cfg.bc);
+        let dyp = layout::pack_conv_act(&dy, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        let (dip, _) = prim.backward_data(&dyp, &wp);
+        let di = layout::unpack_conv_act(&dip, n, c, h, w, cfg.bc, cfg.pad, cfg.pad);
+        let want = naive::conv_bwd_data(n, c, k, h, w, r, s, 1, 1, &dy, &wt);
+        check_close(&di, &want, 1e-3, "bwd s1");
+    }
+
+    #[test]
+    fn backward_data_strided_1x1() {
+        let (n, c, k, h, w) = (2, 4, 8, 8, 8);
+        let mut rng = Rng::new(9);
+        let wt = rng.vec_f32(k * c, -0.5, 0.5);
+        let cfg = ConvConfig::new(n, c, k, h, w, 1, 1, 2, 0);
+        let dy = rng.vec_f32(n * k * cfg.p() * cfg.q(), -1.0, 1.0);
+        let prim = ConvPrimitive::new(cfg);
+        let wp = layout::pack_conv_weights(&wt, k, c, 1, 1, cfg.bk, cfg.bc);
+        let dyp = layout::pack_conv_act(&dy, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        let (dip, _) = prim.backward_data(&dyp, &wp);
+        let di = layout::unpack_conv_act(&dip, n, c, h, w, cfg.bc, 0, 0);
+        let want = naive::conv_bwd_data(n, c, k, h, w, 1, 1, 2, 0, &dy, &wt);
+        check_close(&di, &want, 1e-3, "bwd 1x1 s2");
+    }
+
+    #[test]
+    fn backward_data_fallback_7x7s2() {
+        let (n, c, k, h, w) = (1, 2, 4, 9, 9);
+        let mut rng = Rng::new(10);
+        let wt = rng.vec_f32(k * c * 49, -0.3, 0.3);
+        let cfg = ConvConfig::new(n, c, k, h, w, 7, 7, 2, 3);
+        let dy = rng.vec_f32(n * k * cfg.p() * cfg.q(), -1.0, 1.0);
+        let prim = ConvPrimitive::new(cfg);
+        let wp = layout::pack_conv_weights(&wt, k, c, 7, 7, cfg.bk, cfg.bc);
+        let dyp = layout::pack_conv_act(&dy, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        let (dip, _) = prim.backward_data(&dyp, &wp);
+        let di = layout::unpack_conv_act(&dip, n, c, h, w, cfg.bc, cfg.pad, cfg.pad);
+        let want = naive::conv_bwd_data(n, c, k, h, w, 7, 7, 2, 3, &dy, &wt);
+        check_close(&di, &want, 1e-3, "bwd 7x7 s2 fallback");
+    }
+
+    #[test]
+    fn update_matches_naive() {
+        for &(n, c, k, h, w, r, s, st, pad) in &[
+            (2, 4, 6, 6, 6, 3, 3, 1, 1),
+            (1, 4, 4, 8, 8, 1, 1, 2, 0),
+            (2, 2, 4, 7, 7, 3, 3, 2, 1),
+        ] {
+            let mut rng = Rng::new((h * w + k) as u64);
+            let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+            let cfg = ConvConfig::new(n, c, k, h, w, r, s, st, pad);
+            let dy = rng.vec_f32(n * k * cfg.p() * cfg.q(), -1.0, 1.0);
+            let prim = ConvPrimitive::new(cfg);
+            let xp = layout::pack_conv_act(&x, n, c, h, w, cfg.bc, pad, pad);
+            let dyp = layout::pack_conv_act(&dy, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+            let (dwp, _) = prim.update(&xp, &dyp);
+            let dw = layout::unpack_conv_weights(&dwp, k, c, r, s, cfg.bk, cfg.bc);
+            let want = naive::conv_upd(n, c, k, h, w, r, s, st, pad, &x, &dy);
+            check_close(&dw, &want, 1e-3, &format!("upd {:?}", (r, s, st, pad)));
+        }
+    }
+
+    #[test]
+    fn baselines_match_naive() {
+        let (n, c, k, h, w, r, s, st, pad) = (1, 4, 8, 6, 6, 3, 3, 1, 1);
+        let mut rng = Rng::new(12);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let wt = rng.vec_f32(k * c * r * s, -0.5, 0.5);
+        let cfg = ConvConfig::new(n, c, k, h, w, r, s, st, pad);
+        let want = naive::conv_fwd(n, c, k, h, w, r, s, st, pad, &x, &wt);
+        // small-GEMM loop baseline (blocked layouts)
+        let xp = layout::pack_conv_act(&x, n, c, h, w, cfg.bc, pad, pad);
+        let wp = layout::pack_conv_weights(&wt, k, c, r, s, cfg.bk, cfg.bc);
+        let mut op = vec![0.0; cfg.output_len()];
+        conv_forward_small_gemm(&cfg, &xp, &wp, &mut op);
+        let got = layout::unpack_conv_act(&op, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        check_close(&got, &want, 1e-3, "small-gemm baseline");
+        // im2col baseline (plain layouts)
+        let mut y = vec![0.0; n * k * cfg.p() * cfg.q()];
+        conv_forward_im2col(&cfg, &x, &wt, &mut y);
+        check_close(&y, &want, 1e-3, "im2col baseline");
+    }
+
+    #[test]
+    fn property_fwd_random_configs() {
+        Prop::new("conv fwd matches naive").cases(15).run(|g| {
+            let bc = g.usize(1..=4);
+            let bk = g.usize(1..=6);
+            let c = bc * g.usize(1..=3);
+            let k = bk * g.usize(1..=3);
+            let r = *g.choose(&[1usize, 3]);
+            let st = g.usize(1..=2);
+            let pad = if r == 1 { 0 } else { g.usize(0..=1) };
+            let h = g.usize(r.max(3)..=9);
+            let w = g.usize(r.max(3)..=9);
+            let n = g.usize(1..=2);
+            let x = g.vec_f32(n * c * h * w, -1.0, 1.0);
+            let wt = g.vec_f32(k * c * r * r, -0.5, 0.5);
+            let cfg = ConvConfig::new(n, c, k, h, w, r, r, st, pad);
+            let got = run_fwd(&cfg, &x, &wt);
+            let want = naive::conv_fwd(n, c, k, h, w, r, r, st, pad, &x, &wt);
+            for i in 0..got.len() {
+                if (got[i] - want[i]).abs() > 1e-3 {
+                    return Err(format!(
+                        "cfg {:?}: [{}] {} vs {}",
+                        (n, c, k, h, w, r, st, pad),
+                        i,
+                        got[i],
+                        want[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! Element-wise operators and their gradients.
+//!
+//! These are the non-GEMM stages of the DL primitives (σ, tanh, ReLU, the
+//! Hadamard updates of the LSTM state). In the paper's design they are
+//! *fused* onto output blocks immediately after a batch-reduce GEMM call,
+//! while the block is cache-hot — they are deliberately simple slice
+//! kernels here, because their performance comes from *where* they are
+//! called, not from how they are coded (Table 1: 5.3% of LSTM runtime).
+
+/// Activation functions usable as BRGEMM epilogues and standalone layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Identity,
+    Relu,
+    Sigmoid,
+    Tanh,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Act::Identity => x,
+            Act::Relu => x.max(0.0),
+            Act::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Act::Tanh => x.tanh(),
+        }
+    }
+
+    /// Derivative expressed in terms of the *output* y = act(x) — the form
+    /// backprop wants, since the forward pass stores activations:
+    /// σ' = y(1−y), tanh' = 1−y², relu' = [y > 0].
+    #[inline]
+    pub fn dydx_from_y(self, y: f32) -> f32 {
+        match self {
+            Act::Identity => 1.0,
+            Act::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Sigmoid => y * (1.0 - y),
+            Act::Tanh => 1.0 - y * y,
+        }
+    }
+
+    pub fn apply_slice(self, xs: &mut [f32]) {
+        match self {
+            Act::Identity => {}
+            // ReLU vectorises trivially; give LLVM the pattern it folds to
+            // a masked max.
+            Act::Relu => {
+                for x in xs {
+                    *x = x.max(0.0);
+                }
+            }
+            _ => {
+                for x in xs {
+                    *x = self.apply(*x);
+                }
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::Identity => "identity",
+            Act::Relu => "relu",
+            Act::Sigmoid => "sigmoid",
+            Act::Tanh => "tanh",
+        }
+    }
+}
+
+/// `out[i] = a[i] * b[i]` (LSTM Hadamard products, Eq. 5-6).
+pub fn hadamard(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..out.len() {
+        out[i] = a[i] * b[i];
+    }
+}
+
+/// `out[i] += a[i] * b[i]`.
+pub fn hadamard_acc(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == b.len() && b.len() == out.len());
+    for i in 0..out.len() {
+        out[i] += a[i] * b[i];
+    }
+}
+
+/// dX for an activation given upstream dY and stored outputs Y.
+pub fn act_backward(act: Act, dy: &[f32], y: &[f32], dx: &mut [f32]) {
+    debug_assert!(dy.len() == y.len() && y.len() == dx.len());
+    for i in 0..dx.len() {
+        dx[i] = dy[i] * act.dydx_from_y(y[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activations_pointwise() {
+        assert_eq!(Act::Relu.apply(-2.0), 0.0);
+        assert_eq!(Act::Relu.apply(3.0), 3.0);
+        assert!((Act::Sigmoid.apply(0.0) - 0.5).abs() < 1e-7);
+        assert!((Act::Tanh.apply(0.0)).abs() < 1e-7);
+        assert_eq!(Act::Identity.apply(1.5), 1.5);
+    }
+
+    #[test]
+    fn derivative_matches_finite_difference() {
+        let eps = 1e-3f64;
+        for act in [Act::Sigmoid, Act::Tanh, Act::Identity] {
+            for &x in &[-2.0f32, -0.3, 0.0, 0.7, 2.5] {
+                let y = act.apply(x);
+                let num = (act.apply(x + eps as f32) as f64 - act.apply(x - eps as f32) as f64)
+                    / (2.0 * eps);
+                let ana = act.dydx_from_y(y) as f64;
+                assert!((num - ana).abs() < 1e-3, "{:?} at {}: {} vs {}", act, x, num, ana);
+            }
+        }
+    }
+
+    #[test]
+    fn relu_derivative_from_y() {
+        assert_eq!(Act::Relu.dydx_from_y(0.0), 0.0);
+        assert_eq!(Act::Relu.dydx_from_y(2.0), 1.0);
+    }
+
+    #[test]
+    fn hadamard_ops() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        let mut o = [0.0; 3];
+        hadamard(&a, &b, &mut o);
+        assert_eq!(o, [4.0, 10.0, 18.0]);
+        hadamard_acc(&a, &b, &mut o);
+        assert_eq!(o, [8.0, 20.0, 36.0]);
+    }
+
+    #[test]
+    fn act_backward_sigmoid() {
+        let y = [0.5f32, 0.9];
+        let dy = [1.0f32, 2.0];
+        let mut dx = [0.0f32; 2];
+        act_backward(Act::Sigmoid, &dy, &y, &mut dx);
+        assert!((dx[0] - 0.25).abs() < 1e-6);
+        assert!((dx[1] - 2.0 * 0.09).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,429 @@
+//! Fully-connected layers via the batch-reduce GEMM kernel (Algorithm 5)
+//! plus the coarse-grained large-GEMM baseline of §3.3.1.
+//!
+//! Blocked layouts (see [`crate::tensor::layout`]):
+//! ```text
+//!   X[Nb][Cb][bn][bc]   W[Kb][Cb][bc][bk]   Y[Nb][Kb][bn][bk]
+//! ```
+//! Forward work item = one `bn×bk` block of Y: a single BRGEMM call with
+//! batch = Cb reduces all input-feature blocks into the output block and
+//! applies bias + activation while the block is hot (fixing issues (i)-(iii)
+//! of the large-GEMM formulation, §3.3.2).
+
+use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
+use crate::primitives::eltwise::{act_backward, Act};
+use crate::primitives::partition::{Partition2d, Strategy};
+use crate::util::pool::{parallel_region, SharedMut};
+
+/// Shape + blocking for one FC layer.
+#[derive(Debug, Clone, Copy)]
+pub struct FcConfig {
+    /// Mini-batch, input features, output features.
+    pub n: usize,
+    pub c: usize,
+    pub k: usize,
+    /// Blocking factors; must divide their dimensions.
+    pub bn: usize,
+    pub bc: usize,
+    pub bk: usize,
+    pub act: Act,
+    pub nthreads: usize,
+}
+
+impl FcConfig {
+    /// Default blocking: the paper-style 64-wide feature blocks (the
+    /// microkernel's sweet spot) clamped to the problem size.
+    pub fn new(n: usize, c: usize, k: usize, act: Act) -> FcConfig {
+        let pick = |d: usize, pref: usize| {
+            let mut b = pref.min(d);
+            while d % b != 0 {
+                b -= 1;
+            }
+            b
+        };
+        FcConfig {
+            n,
+            c,
+            k,
+            bn: pick(n, 24),
+            bc: pick(c, 64),
+            bk: pick(k, 64),
+            act,
+            nthreads: 1,
+        }
+    }
+
+    pub fn with_blocking(mut self, bn: usize, bc: usize, bk: usize) -> FcConfig {
+        self.bn = bn;
+        self.bc = bc;
+        self.bk = bk;
+        self.validate();
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> FcConfig {
+        self.nthreads = t;
+        self
+    }
+
+    fn validate(&self) {
+        assert_eq!(self.n % self.bn, 0, "bn must divide N");
+        assert_eq!(self.c % self.bc, 0, "bc must divide C");
+        assert_eq!(self.k % self.bk, 0, "bk must divide K");
+    }
+
+    pub fn nb(&self) -> usize {
+        self.n / self.bn
+    }
+    pub fn cb(&self) -> usize {
+        self.c / self.bc
+    }
+    pub fn kb(&self) -> usize {
+        self.k / self.bk
+    }
+
+    /// Flops of one forward pass (GEMM part).
+    pub fn flops(&self) -> f64 {
+        2.0 * self.n as f64 * self.c as f64 * self.k as f64
+    }
+}
+
+/// The BRGEMM-based FC primitive (forward + both training passes).
+pub struct FcPrimitive {
+    pub cfg: FcConfig,
+    fwd_kernel: BrgemmKernel,
+    bwd_kernel: BrgemmKernel,
+    upd_kernel: BrgemmKernel,
+}
+
+impl FcPrimitive {
+    pub fn new(cfg: FcConfig) -> FcPrimitive {
+        cfg.validate();
+        // FWD: C_blk[bn×bk] = Σ_cb X_blk[bn×bc]·W_blk[bc×bk], bias+act fused.
+        let fwd = BrgemmKernel::new(BrgemmDesc {
+            m: cfg.bn,
+            n: cfg.bk,
+            k: cfg.bc,
+            lda: cfg.bc,
+            ldb: cfg.bk,
+            ldc: cfg.bk,
+            a_kstride: 1,
+            alpha: 1.0,
+            beta: 0.0,
+        })
+        .with_epilogue(Epilogue::BiasAct(cfg.act));
+        // BWD: dX_blk[bn×bc] = Σ_kb dZ_blk[bn×bk]·Wᵀ_blk[bk×bc].
+        let bwd = BrgemmKernel::new(BrgemmDesc {
+            m: cfg.bn,
+            n: cfg.bc,
+            k: cfg.bk,
+            lda: cfg.bk,
+            ldb: cfg.bc,
+            ldc: cfg.bc,
+            a_kstride: 1,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        // UPD: dW_blk[bc×bk] = Σ_nb Xᵀ_blk[bc×bn]·dZ_blk[bn×bk].
+        // X blocks are [bn][bc]; reading them transposed is free via
+        // a_kstride (lda = 1 walks channels, k-stride bc walks the batch).
+        let upd = BrgemmKernel::new(BrgemmDesc {
+            m: cfg.bc,
+            n: cfg.bk,
+            k: cfg.bn,
+            lda: 1,
+            ldb: cfg.bk,
+            ldc: cfg.bk,
+            a_kstride: cfg.bc,
+            alpha: 1.0,
+            beta: 0.0,
+        });
+        FcPrimitive { cfg, fwd_kernel: fwd, bwd_kernel: bwd, upd_kernel: upd }
+    }
+
+    /// Forward: `y = act(x·Wᵀ + b)` on blocked layouts.
+    pub fn forward(&self, x: &[f32], w: &[f32], bias: &[f32], y: &mut [f32]) {
+        let c = &self.cfg;
+        assert_eq!(x.len(), c.n * c.c);
+        assert_eq!(w.len(), c.k * c.c);
+        assert_eq!(bias.len(), c.k);
+        assert_eq!(y.len(), c.n * c.k);
+        let (nb, cb, kb) = (c.nb(), c.cb(), c.kb());
+        let xblk = c.bn * c.bc;
+        let wblk = c.bc * c.bk;
+        let yblk = c.bn * c.bk;
+        let part = Partition2d::auto(nb, kb, c.nthreads, false);
+        let shared = &SharedMut::new(y);
+        parallel_region(c.nthreads, |tid| {
+            let mut a_offs = vec![0usize; cb];
+            let mut b_offs = vec![0usize; cb];
+            for (inb, ikb) in part.tasks(tid) {
+                for icb in 0..cb {
+                    a_offs[icb] = (inb * cb + icb) * xblk;
+                    b_offs[icb] = (ikb * cb + icb) * wblk;
+                }
+                let y_off = (inb * kb + ikb) * yblk;
+                // SAFETY: blocks are disjoint per task; tasks are disjoint
+                // per thread (partition invariant).
+                let yb = unsafe { shared.slice(y_off, yblk) };
+                self.fwd_kernel.execute_offs(
+                    x,
+                    &a_offs,
+                    w,
+                    &b_offs,
+                    yb,
+                    Some(&bias[ikb * c.bk..(ikb + 1) * c.bk]),
+                );
+            }
+        });
+    }
+
+    /// Pre-activation gradient: `dz = dy ∘ act'(y)` (blocked, elementwise).
+    pub fn dz_from_dy(&self, dy: &[f32], y: &[f32], dz: &mut [f32]) {
+        act_backward(self.cfg.act, dy, y, dz);
+    }
+
+    /// Backward by data: `dx = dz·W` on blocked layouts. `wt` is the packed
+    /// transpose from [`crate::tensor::layout::transpose_packed_2d`].
+    pub fn backward_data(&self, dz: &[f32], wt: &[f32], dx: &mut [f32]) {
+        let c = &self.cfg;
+        assert_eq!(dz.len(), c.n * c.k);
+        assert_eq!(wt.len(), c.k * c.c);
+        assert_eq!(dx.len(), c.n * c.c);
+        let (nb, cb, kb) = (c.nb(), c.cb(), c.kb());
+        let zblk = c.bn * c.bk;
+        let wblk = c.bc * c.bk;
+        let xblk = c.bn * c.bc;
+        let part = Partition2d::auto(nb, cb, c.nthreads, false);
+        let shared = &SharedMut::new(dx);
+        parallel_region(c.nthreads, |tid| {
+            let mut a_offs = vec![0usize; kb];
+            let mut b_offs = vec![0usize; kb];
+            for (inb, icb) in part.tasks(tid) {
+                for ikb in 0..kb {
+                    a_offs[ikb] = (inb * kb + ikb) * zblk;
+                    b_offs[ikb] = (icb * kb + ikb) * wblk;
+                }
+                let off = (inb * cb + icb) * xblk;
+                let out = unsafe { shared.slice(off, xblk) };
+                self.bwd_kernel.execute_offs(dz, &a_offs, wt, &b_offs, out, None);
+            }
+        });
+    }
+
+    /// Weight update: `dW = Xᵀ·dZ` (blocked), `db = Σ_n dz`.
+    /// Parallelism is over (Kb × Cb) — the paper's observation that UPD has
+    /// the least parallel slack for small C/K shows up here directly.
+    pub fn update(&self, x: &[f32], dz: &[f32], dw: &mut [f32], db: &mut [f32]) {
+        let c = &self.cfg;
+        assert_eq!(x.len(), c.n * c.c);
+        assert_eq!(dz.len(), c.n * c.k);
+        assert_eq!(dw.len(), c.k * c.c);
+        assert_eq!(db.len(), c.k);
+        let (nb, cb, kb) = (c.nb(), c.cb(), c.kb());
+        let xblk = c.bn * c.bc;
+        let zblk = c.bn * c.bk;
+        let wblk = c.bc * c.bk;
+        let part = Partition2d::new(kb, cb, c.nthreads, Strategy::Flat);
+        let shared = &SharedMut::new(dw);
+        parallel_region(c.nthreads, |tid| {
+            let mut a_offs = vec![0usize; nb];
+            let mut b_offs = vec![0usize; nb];
+            for (ikb, icb) in part.tasks(tid) {
+                for inb in 0..nb {
+                    a_offs[inb] = (inb * cb + icb) * xblk;
+                    b_offs[inb] = (inb * kb + ikb) * zblk;
+                }
+                let off = (ikb * cb + icb) * wblk;
+                let out = unsafe { shared.slice(off, wblk) };
+                self.upd_kernel.execute_offs(x, &a_offs, dz, &b_offs, out, None);
+            }
+        });
+        // Bias gradient: reduce dz over the batch (cheap, single-threaded).
+        db.fill(0.0);
+        for inb in 0..nb {
+            for ikb in 0..kb {
+                let blk = (inb * kb + ikb) * zblk;
+                for r in 0..c.bn {
+                    for j in 0..c.bk {
+                        db[ikb * c.bk + j] += dz[blk + r * c.bk + j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Coarse-grained baseline (§3.3.1): one large GEMM `Y = X·Wᵀ`, then a
+/// separate full-tensor bias + activation sweep. Plain row-major layouts
+/// (X: N×C, W: K×C, Y: N×K). The Wᵀ packing is done per call, as a BLAS
+/// user would incur it (or the library would internally).
+pub fn fc_forward_large_gemm(
+    n: usize,
+    c: usize,
+    k: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    act: Act,
+    y: &mut [f32],
+) {
+    // Transpose W (K×C → C×K) — the "packing" cost of the GEMM approach.
+    let mut wt = vec![0.0f32; c * k];
+    for kk in 0..k {
+        for cc in 0..c {
+            wt[cc * k + kk] = w[kk * c + cc];
+        }
+    }
+    Gemm::dense(n, k, c).execute(x, &wt, y);
+    // Exposed bandwidth-bound epilogue: the whole Y tensor is re-read from
+    // memory (issue (iii) of §3.3.1).
+    for i in 0..n {
+        for j in 0..k {
+            y[i * k + j] = act.apply(y[i * k + j] + bias[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::naive;
+    use crate::tensor::layout::{pack_act_2d, pack_weights_2d, transpose_packed_2d, unpack_act_2d, unpack_weights_2d};
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, c: usize, k: usize, _act: Act, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            rng.vec_f32(n * c, -1.0, 1.0),
+            rng.vec_f32(k * c, -0.5, 0.5),
+            rng.vec_f32(k, -0.2, 0.2),
+        )
+    }
+
+    #[test]
+    fn forward_matches_naive() {
+        for &(n, c, k, act) in &[
+            (8, 16, 16, Act::Relu),
+            (24, 64, 32, Act::Sigmoid),
+            (6, 8, 40, Act::Identity),
+        ] {
+            let (x, w, b) = setup(n, c, k, act, 42);
+            let cfg = FcConfig::new(n, c, k, act);
+            let prim = FcPrimitive::new(cfg);
+            let xp = pack_act_2d(&x, n, c, cfg.bn, cfg.bc);
+            let wp = pack_weights_2d(&w, k, c, cfg.bk, cfg.bc);
+            let mut yp = vec![0.0; n * k];
+            prim.forward(&xp, &wp, &b, &mut yp);
+            let y = unpack_act_2d(&yp, n, k, cfg.bn, cfg.bk);
+            let want = naive::fc_fwd(n, c, k, &x, &w, &b, act);
+            for i in 0..y.len() {
+                assert!((y[i] - want[i]).abs() < 1e-4, "({},{},{}) y[{}]", n, c, k, i);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_multithreaded_matches() {
+        let (n, c, k) = (24, 32, 48);
+        let (x, w, b) = setup(n, c, k, Act::Relu, 7);
+        let cfg = FcConfig::new(n, c, k, Act::Relu).with_threads(4);
+        let prim = FcPrimitive::new(cfg);
+        let xp = pack_act_2d(&x, n, c, cfg.bn, cfg.bc);
+        let wp = pack_weights_2d(&w, k, c, cfg.bk, cfg.bc);
+        let mut yp = vec![0.0; n * k];
+        prim.forward(&xp, &wp, &b, &mut yp);
+        let y = unpack_act_2d(&yp, n, k, cfg.bn, cfg.bk);
+        let want = naive::fc_fwd(n, c, k, &x, &w, &b, Act::Relu);
+        for i in 0..y.len() {
+            assert!((y[i] - want[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn backward_matches_naive() {
+        let (n, c, k) = (12, 24, 16);
+        let (x, w, b) = setup(n, c, k, Act::Sigmoid, 3);
+        let cfg = FcConfig::new(n, c, k, Act::Sigmoid);
+        let prim = FcPrimitive::new(cfg);
+        let xp = pack_act_2d(&x, n, c, cfg.bn, cfg.bc);
+        let wp = pack_weights_2d(&w, k, c, cfg.bk, cfg.bc);
+        let mut yp = vec![0.0; n * k];
+        prim.forward(&xp, &wp, &b, &mut yp);
+        // upstream gradient = ones (packed layout of ones = ones)
+        let dyp = vec![1.0; n * k];
+        let mut dzp = vec![0.0; n * k];
+        prim.dz_from_dy(&dyp, &yp, &mut dzp);
+        // bwd data
+        let wt = transpose_packed_2d(&wp, k, c, cfg.bk, cfg.bc);
+        let mut dxp = vec![0.0; n * c];
+        prim.backward_data(&dzp, &wt, &mut dxp);
+        let dx = unpack_act_2d(&dxp, n, c, cfg.bn, cfg.bc);
+        // naive: dz = dy * act'(y)
+        let y = naive::fc_fwd(n, c, k, &x, &w, &b, Act::Sigmoid);
+        let dz: Vec<f32> = y.iter().map(|&v| Act::Sigmoid.dydx_from_y(v)).collect();
+        let dx_want = naive::fc_bwd_data(n, c, k, &dz, &w);
+        for i in 0..dx.len() {
+            assert!((dx[i] - dx_want[i]).abs() < 1e-4, "dx[{}]: {} vs {}", i, dx[i], dx_want[i]);
+        }
+        // upd
+        let mut dwp = vec![0.0; k * c];
+        let mut db = vec![0.0; k];
+        prim.update(&xp, &dzp, &mut dwp, &mut db);
+        let dw = unpack_weights_2d(&dwp, k, c, cfg.bk, cfg.bc);
+        let (dw_want, db_want) = naive::fc_upd(n, c, k, &x, &dz);
+        for i in 0..dw.len() {
+            assert!((dw[i] - dw_want[i]).abs() < 1e-3, "dw[{}]: {} vs {}", i, dw[i], dw_want[i]);
+        }
+        for i in 0..k {
+            assert!((db[i] - db_want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn large_gemm_baseline_matches_naive() {
+        let (n, c, k) = (16, 32, 24);
+        let (x, w, b) = setup(n, c, k, Act::Relu, 5);
+        let mut y = vec![0.0; n * k];
+        fc_forward_large_gemm(n, c, k, &x, &w, &b, Act::Relu, &mut y);
+        let want = naive::fc_fwd(n, c, k, &x, &w, &b, Act::Relu);
+        for i in 0..y.len() {
+            assert!((y[i] - want[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn property_fwd_random_shapes_and_blockings() {
+        Prop::new("fc fwd matches naive under random blocking").cases(25).run(|g| {
+            let bn = g.usize(1..=6);
+            let bc = g.usize(1..=8);
+            let bk = g.usize(1..=20);
+            let n = bn * g.usize(1..=4);
+            let c = bc * g.usize(1..=4);
+            let k = bk * g.usize(1..=4);
+            let act = *g.choose(&[Act::Identity, Act::Relu, Act::Sigmoid, Act::Tanh]);
+            let x = g.vec_f32(n * c, -1.0, 1.0);
+            let w = g.vec_f32(k * c, -0.5, 0.5);
+            let b = g.vec_f32(k, -0.2, 0.2);
+            let nthreads = g.usize(1..=3);
+            let cfg = FcConfig::new(n, c, k, act).with_blocking(bn, bc, bk).with_threads(nthreads);
+            let prim = FcPrimitive::new(cfg);
+            let xp = pack_act_2d(&x, n, c, bn, bc);
+            let wp = pack_weights_2d(&w, k, c, bk, bc);
+            let mut yp = vec![0.0; n * k];
+            prim.forward(&xp, &wp, &b, &mut yp);
+            let y = unpack_act_2d(&yp, n, k, bn, bk);
+            let want = naive::fc_fwd(n, c, k, &x, &w, &b, act);
+            for i in 0..y.len() {
+                if (y[i] - want[i]).abs() > 1e-3 {
+                    return Err(format!(
+                        "n{} c{} k{} bn{} bc{} bk{} t{}: y[{}]={} want {}",
+                        n, c, k, bn, bc, bk, nthreads, i, y[i], want[i]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! DL primitives built on the single building block.
+//!
+//! Each of the paper's three workload families gets forward,
+//! backward-by-data and weight-update passes, all expressed as loop nests
+//! around [`crate::brgemm::BrgemmKernel`] plus fused element-wise stages —
+//! the paper's central claim made concrete:
+//!
+//! * [`fc`]     — fully-connected layers (Algorithm 5; MLP / Transformer
+//!   building block) + the large-GEMM baseline.
+//! * [`lstm`]   — the LSTM cell (Algorithm 2) + the large-GEMM cell.
+//! * [`conv`]   — direct convolutions (Algorithms 3/4) + the im2col and
+//!   small-GEMM-loop baselines of Figure 1.
+//! * [`eltwise`] — the fused non-GEMM stages (activations, Hadamard ops).
+//! * [`partition`] — the thread work-partitioning strategies (§3.2.2).
+//! * [`naive`]  — straightforward reference implementations (oracles).
+
+pub mod conv;
+pub mod eltwise;
+pub mod fc;
+pub mod lstm;
+pub mod naive;
+pub mod partition;

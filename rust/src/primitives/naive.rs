@@ -1,0 +1,392 @@
+//! Naive reference implementations (correctness oracles).
+//!
+//! Straightforward loop nests over plain (non-blocked) layouts with f64
+//! accumulation. Shared by the unit/property tests of every optimized
+//! primitive and by the bench harnesses as the "textbook" lower bound.
+//! Deliberately no code shared with the optimized paths.
+
+use super::eltwise::Act;
+
+/// FC forward: `Y[n][k] = act(Σ_c W[k][c]·X[n][c] + b[k])`.
+pub fn fc_fwd(
+    n: usize,
+    c: usize,
+    k: usize,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    act: Act,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; n * k];
+    for i in 0..n {
+        for j in 0..k {
+            let mut acc = bias[j] as f64;
+            for cc in 0..c {
+                acc += w[j * c + cc] as f64 * x[i * c + cc] as f64;
+            }
+            y[i * k + j] = act.apply(acc as f32);
+        }
+    }
+    y
+}
+
+/// FC backward-by-data: `dX[n][c] = Σ_k dZ[n][k]·W[k][c]` where dZ is the
+/// pre-activation gradient.
+pub fn fc_bwd_data(n: usize, c: usize, k: usize, dz: &[f32], w: &[f32]) -> Vec<f32> {
+    let mut dx = vec![0.0f32; n * c];
+    for i in 0..n {
+        for cc in 0..c {
+            let mut acc = 0.0f64;
+            for j in 0..k {
+                acc += dz[i * k + j] as f64 * w[j * c + cc] as f64;
+            }
+            dx[i * c + cc] = acc as f32;
+        }
+    }
+    dx
+}
+
+/// FC weight update: `dW[k][c] = Σ_n dZ[n][k]·X[n][c]`, `db[k] = Σ_n dZ[n][k]`.
+pub fn fc_upd(
+    n: usize,
+    c: usize,
+    k: usize,
+    x: &[f32],
+    dz: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dw = vec![0.0f32; k * c];
+    let mut db = vec![0.0f32; k];
+    for j in 0..k {
+        for cc in 0..c {
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += dz[i * k + j] as f64 * x[i * c + cc] as f64;
+            }
+            dw[j * c + cc] = acc as f32;
+        }
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += dz[i * k + j] as f64;
+        }
+        db[j] = acc as f32;
+    }
+    (dw, db)
+}
+
+/// Direct convolution forward over plain NCHW / KCRS layouts.
+/// `pad` is symmetric spatial zero-padding; `str` the stride.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_fwd(
+    n: usize,
+    c: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    s: usize,
+    str_: usize,
+    pad: usize,
+    x: &[f32],
+    wt: &[f32],
+) -> Vec<f32> {
+    let p = (h + 2 * pad - r) / str_ + 1;
+    let q = (w + 2 * pad - s) / str_ + 1;
+    let mut y = vec![0.0f32; n * k * p * q];
+    for ni in 0..n {
+        for kk in 0..k {
+            for oj in 0..p {
+                for oi in 0..q {
+                    let mut acc = 0.0f64;
+                    for cc in 0..c {
+                        for rr in 0..r {
+                            for ss in 0..s {
+                                let ij = (oj * str_ + rr) as isize - pad as isize;
+                                let ii = (oi * str_ + ss) as isize - pad as isize;
+                                if ij < 0 || ii < 0 || ij >= h as isize || ii >= w as isize {
+                                    continue;
+                                }
+                                let xv = x[((ni * c + cc) * h + ij as usize) * w + ii as usize];
+                                let wv = wt[((kk * c + cc) * r + rr) * s + ss];
+                                acc += xv as f64 * wv as f64;
+                            }
+                        }
+                    }
+                    y[((ni * k + kk) * p + oj) * q + oi] = acc as f32;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Convolution backward-by-data: gradient w.r.t. the input.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd_data(
+    n: usize,
+    c: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    s: usize,
+    str_: usize,
+    pad: usize,
+    dy: &[f32],
+    wt: &[f32],
+) -> Vec<f32> {
+    let p = (h + 2 * pad - r) / str_ + 1;
+    let q = (w + 2 * pad - s) / str_ + 1;
+    let mut dx = vec![0.0f32; n * c * h * w];
+    for ni in 0..n {
+        for kk in 0..k {
+            for oj in 0..p {
+                for oi in 0..q {
+                    let g = dy[((ni * k + kk) * p + oj) * q + oi] as f64;
+                    for cc in 0..c {
+                        for rr in 0..r {
+                            for ss in 0..s {
+                                let ij = (oj * str_ + rr) as isize - pad as isize;
+                                let ii = (oi * str_ + ss) as isize - pad as isize;
+                                if ij < 0 || ii < 0 || ij >= h as isize || ii >= w as isize {
+                                    continue;
+                                }
+                                let wv = wt[((kk * c + cc) * r + rr) * s + ss] as f64;
+                                dx[((ni * c + cc) * h + ij as usize) * w + ii as usize] +=
+                                    (g * wv) as f32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Convolution weight update: gradient w.r.t. the weights.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_upd(
+    n: usize,
+    c: usize,
+    k: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    s: usize,
+    str_: usize,
+    pad: usize,
+    x: &[f32],
+    dy: &[f32],
+) -> Vec<f32> {
+    let p = (h + 2 * pad - r) / str_ + 1;
+    let q = (w + 2 * pad - s) / str_ + 1;
+    let mut dw = vec![0.0f32; k * c * r * s];
+    for kk in 0..k {
+        for cc in 0..c {
+            for rr in 0..r {
+                for ss in 0..s {
+                    let mut acc = 0.0f64;
+                    for ni in 0..n {
+                        for oj in 0..p {
+                            for oi in 0..q {
+                                let ij = (oj * str_ + rr) as isize - pad as isize;
+                                let ii = (oi * str_ + ss) as isize - pad as isize;
+                                if ij < 0 || ii < 0 || ij >= h as isize || ii >= w as isize {
+                                    continue;
+                                }
+                                let xv =
+                                    x[((ni * c + cc) * h + ij as usize) * w + ii as usize] as f64;
+                                let g = dy[((ni * k + kk) * p + oj) * q + oi] as f64;
+                                acc += xv * g;
+                            }
+                        }
+                    }
+                    dw[((kk * c + cc) * r + rr) * s + ss] = acc as f32;
+                }
+            }
+        }
+    }
+    dw
+}
+
+/// One LSTM forward step over plain layouts (Equations 1-6 verbatim).
+/// Weights `w_*` are `K×C`, recurrent `r_*` are `K×K`, biases length K.
+/// Returns `(i, g, f, o, s_t, h_t)` each `N×K` (g = candidate `c_t`).
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+pub fn lstm_step(
+    n: usize,
+    c: usize,
+    k: usize,
+    x_t: &[f32],
+    h_prev: &[f32],
+    s_prev: &[f32],
+    w: &[&[f32]; 4],
+    r: &[&[f32]; 4],
+    b: &[&[f32]; 4],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let gate = |wi: &[f32], ri: &[f32], bi: &[f32], act: Act| -> Vec<f32> {
+        let mut z = vec![0.0f32; n * k];
+        for ni in 0..n {
+            for kk in 0..k {
+                let mut acc = bi[kk] as f64;
+                for cc in 0..c {
+                    acc += wi[kk * c + cc] as f64 * x_t[ni * c + cc] as f64;
+                }
+                for kk2 in 0..k {
+                    acc += ri[kk * k + kk2] as f64 * h_prev[ni * k + kk2] as f64;
+                }
+                z[ni * k + kk] = act.apply(acc as f32);
+            }
+        }
+        z
+    };
+    let i = gate(w[0], r[0], b[0], Act::Sigmoid);
+    let g = gate(w[1], r[1], b[1], Act::Tanh);
+    let f = gate(w[2], r[2], b[2], Act::Sigmoid);
+    let o = gate(w[3], r[3], b[3], Act::Sigmoid);
+    let mut s_t = vec![0.0f32; n * k];
+    let mut h_t = vec![0.0f32; n * k];
+    for idx in 0..n * k {
+        s_t[idx] = f[idx] * s_prev[idx] + i[idx] * g[idx];
+        h_t[idx] = o[idx] * s_t[idx].tanh();
+    }
+    (i, g, f, o, s_t, h_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights = copy.
+        let (n, c, k, h, w) = (1, 2, 2, 3, 3);
+        let x: Vec<f32> = (0..n * c * h * w).map(|i| i as f32).collect();
+        let mut wt = vec![0.0; k * c];
+        wt[0] = 1.0; // k0<-c0
+        wt[3] = 1.0; // k1<-c1
+        let y = conv_fwd(n, c, k, h, w, 1, 1, 1, 0, &x, &wt);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv_shapes_with_stride_and_pad() {
+        let y = conv_fwd(1, 1, 1, 5, 5, 3, 3, 2, 1, &vec![1.0; 25], &vec![1.0; 9]);
+        // P = Q = (5 + 2 - 3)/2 + 1 = 3
+        assert_eq!(y.len(), 9);
+        // center output sees all 9 inputs
+        assert_eq!(y[4], 9.0);
+        // corner output: kernel window [-1..1]² clipped → 4 inputs
+        assert_eq!(y[0], 4.0);
+    }
+
+    #[test]
+    fn conv_grad_check_finite_difference() {
+        // dW and dX against central differences of a scalar loss Σ y².
+        let (n, c, k, h, w, r, s, str_, pad) = (1, 2, 2, 4, 4, 3, 3, 1, 1);
+        let mut rng = crate::util::rng::Rng::new(10);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let wt = rng.vec_f32(k * c * r * s, -0.5, 0.5);
+        let y = conv_fwd(n, c, k, h, w, r, s, str_, pad, &x, &wt);
+        let dy: Vec<f32> = y.iter().map(|v| 2.0 * v).collect(); // d(Σy²)/dy
+        let dx = conv_bwd_data(n, c, k, h, w, r, s, str_, pad, &dy, &wt);
+        let dw = conv_upd(n, c, k, h, w, r, s, str_, pad, &x, &dy);
+        let loss = |x: &[f32], wt: &[f32]| -> f64 {
+            conv_fwd(n, c, k, h, w, r, s, str_, pad, x, wt)
+                .iter()
+                .map(|v| (*v as f64).powi(2))
+                .sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 7, 15, 31] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let num = (loss(&xp, &wt) - loss(&xm, &wt)) / (2.0 * eps as f64);
+            assert!((num - dx[idx] as f64).abs() < 1e-2, "dx[{}]: {} vs {}", idx, num, dx[idx]);
+        }
+        for idx in [0usize, 5, 17, 35] {
+            let mut wp = wt.to_vec();
+            wp[idx] += eps;
+            let mut wm = wt.to_vec();
+            wm[idx] -= eps;
+            let num = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert!((num - dw[idx] as f64).abs() < 1e-2, "dw[{}]: {} vs {}", idx, num, dw[idx]);
+        }
+    }
+
+    #[test]
+    fn fc_fwd_bias_and_act() {
+        let y = fc_fwd(1, 2, 1, &[1.0, 2.0], &[3.0, 4.0], &[-10.0], Act::Relu);
+        // 1*3 + 2*4 - 10 = 1
+        assert_eq!(y, vec![1.0]);
+        let y = fc_fwd(1, 2, 1, &[1.0, 2.0], &[3.0, 4.0], &[-12.0], Act::Relu);
+        assert_eq!(y, vec![0.0]);
+    }
+
+    #[test]
+    fn fc_grad_check() {
+        let (n, c, k) = (3, 4, 5);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let x = rng.vec_f32(n * c, -1.0, 1.0);
+        let w = rng.vec_f32(k * c, -0.5, 0.5);
+        let b = vec![0.0; k];
+        let loss = |x: &[f32], w: &[f32]| -> f64 {
+            fc_fwd(n, c, k, x, w, &b, Act::Identity).iter().map(|v| (*v as f64).powi(2)).sum()
+        };
+        let y = fc_fwd(n, c, k, &x, &w, &b, Act::Identity);
+        let dz: Vec<f32> = y.iter().map(|v| 2.0 * v).collect();
+        let dx = fc_bwd_data(n, c, k, &dz, &w);
+        let (dw, _db) = fc_upd(n, c, k, &x, &dz);
+        let eps = 1e-3;
+        for idx in [0, 5, 11] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let num = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps as f64);
+            assert!((num - dx[idx] as f64).abs() < 1e-2);
+        }
+        for idx in [0, 7, 19] {
+            let mut wp = w.clone();
+            wp[idx] += eps;
+            let mut wm = w.clone();
+            wm[idx] -= eps;
+            let num = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert!((num - dw[idx] as f64).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn lstm_step_zero_weights_gives_neutral_gates() {
+        let (n, c, k) = (2, 3, 4);
+        let x = vec![0.5; n * c];
+        let h0 = vec![0.0; n * k];
+        let s0 = vec![0.0; n * k];
+        let zw = vec![0.0; k * c];
+        let zr = vec![0.0; k * k];
+        let zb = vec![0.0; k];
+        let (i, g, f, o, s, h) = lstm_step(
+            n, c, k, &x, &h0, &s0,
+            &[&zw, &zw, &zw, &zw],
+            &[&zr, &zr, &zr, &zr],
+            &[&zb, &zb, &zb, &zb],
+        );
+        for v in &i {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        for v in &g {
+            assert!(v.abs() < 1e-6);
+        }
+        for v in &f {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        for v in &o {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+        // s = 0.5*0 + 0.5*0 = 0; h = 0.5*tanh(0) = 0
+        assert!(s.iter().all(|v| v.abs() < 1e-6));
+        assert!(h.iter().all(|v| v.abs() < 1e-6));
+    }
+}

@@ -1,0 +1,172 @@
+//! Work-partitioning strategies for the primitives (paper §3.2.2).
+//!
+//! The paper parallelises each primitive by assigning independent output
+//! work items to threads, choosing among strategies based on the layer
+//! shape: split on the mini-batch first (weight reuse from shared cache),
+//! fall back to the full flattened task space when the mini-batch alone
+//! has insufficient parallelism, or split on output feature blocks first
+//! when the weights are large (so each thread touches a slice of the
+//! weight tensor it can cache-block).
+
+use crate::util::pool::chunk_range;
+
+/// How to map output work items to threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Split the mini-batch dimension; every thread covers all feature
+    /// blocks (maximises weight sharing).
+    MinibatchFirst,
+    /// Split output-feature blocks; every thread covers the whole
+    /// mini-batch (minimises per-thread weight footprint).
+    FeatureFirst,
+    /// Flatten all dims and block-partition (maximum parallel slack).
+    Flat,
+}
+
+/// A 2-D output task space (rows = mini-batch blocks, cols = feature
+/// blocks) partitioned for `nthreads`.
+#[derive(Debug, Clone)]
+pub struct Partition2d {
+    pub rows: usize,
+    pub cols: usize,
+    pub strategy: Strategy,
+    pub nthreads: usize,
+}
+
+impl Partition2d {
+    pub fn new(rows: usize, cols: usize, nthreads: usize, strategy: Strategy) -> Partition2d {
+        Partition2d { rows, cols, strategy, nthreads }
+    }
+
+    /// Choose a strategy the way the paper describes: mini-batch first if it
+    /// alone offers ≥ 1 row per thread, else flat; feature-first when the
+    /// per-task weight slice is large (`big_weights`).
+    pub fn auto(rows: usize, cols: usize, nthreads: usize, big_weights: bool) -> Partition2d {
+        let strategy = if big_weights && cols >= nthreads {
+            Strategy::FeatureFirst
+        } else if rows >= nthreads {
+            Strategy::MinibatchFirst
+        } else {
+            Strategy::Flat
+        };
+        Partition2d::new(rows, cols, nthreads, strategy)
+    }
+
+    /// The (row, col) work items of thread `tid`, in execution order.
+    /// Iterating the mini-batch innermost is what gives the weight-block
+    /// reuse the paper points out after Algorithm 2.
+    pub fn tasks(&self, tid: usize) -> Vec<(usize, usize)> {
+        match self.strategy {
+            Strategy::MinibatchFirst => {
+                let (lo, hi) = chunk_range(self.rows, self.nthreads, tid);
+                // cols outer, rows inner: each weight block is loaded once
+                // per thread and reused across its mini-batch rows.
+                let mut out = Vec::with_capacity((hi - lo) * self.cols);
+                for c in 0..self.cols {
+                    for r in lo..hi {
+                        out.push((r, c));
+                    }
+                }
+                out
+            }
+            Strategy::FeatureFirst => {
+                let (lo, hi) = chunk_range(self.cols, self.nthreads, tid);
+                let mut out = Vec::with_capacity((hi - lo) * self.rows);
+                for c in lo..hi {
+                    for r in 0..self.rows {
+                        out.push((r, c));
+                    }
+                }
+                out
+            }
+            Strategy::Flat => {
+                let total = self.rows * self.cols;
+                let (lo, hi) = chunk_range(total, self.nthreads, tid);
+                (lo..hi).map(|t| (t / self.cols, t % self.cols)).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use std::collections::HashSet;
+
+    fn check_cover(p: &Partition2d) -> Result<(), String> {
+        let mut seen = HashSet::new();
+        let mut max_load = 0usize;
+        let mut min_load = usize::MAX;
+        for tid in 0..p.nthreads {
+            let tasks = p.tasks(tid);
+            max_load = max_load.max(tasks.len());
+            min_load = min_load.min(tasks.len());
+            for t in tasks {
+                if t.0 >= p.rows || t.1 >= p.cols {
+                    return Err(format!("task {:?} out of bounds", t));
+                }
+                if !seen.insert(t) {
+                    return Err(format!("task {:?} assigned twice", t));
+                }
+            }
+        }
+        if seen.len() != p.rows * p.cols {
+            return Err(format!("covered {} of {} tasks", seen.len(), p.rows * p.cols));
+        }
+        // Load balance bound: Flat ⇒ ±1 task; dimension splits ⇒ ±1 slice.
+        let bound = match p.strategy {
+            Strategy::Flat => 1,
+            Strategy::MinibatchFirst => p.cols,
+            Strategy::FeatureFirst => p.rows,
+        };
+        if max_load - min_load > bound {
+            return Err(format!(
+                "imbalance {} > {} for {:?}",
+                max_load - min_load,
+                bound,
+                p.strategy
+            ));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn all_strategies_cover_disjointly() {
+        for &strategy in &[Strategy::MinibatchFirst, Strategy::FeatureFirst, Strategy::Flat] {
+            for &(r, c, t) in &[(8, 4, 4), (3, 7, 5), (1, 1, 4), (16, 16, 7)] {
+                let p = Partition2d::new(r, c, t, strategy);
+                check_cover(&p).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn minibatch_first_iterates_batch_inner() {
+        let p = Partition2d::new(4, 3, 2, Strategy::MinibatchFirst);
+        let t0 = p.tasks(0);
+        // rows {0,1}, all cols; batch (row) must vary fastest within a col.
+        assert_eq!(t0[0], (0, 0));
+        assert_eq!(t0[1], (1, 0));
+        assert_eq!(t0[2], (0, 1));
+    }
+
+    #[test]
+    fn auto_picks_documented_strategies() {
+        assert_eq!(Partition2d::auto(16, 4, 8, false).strategy, Strategy::MinibatchFirst);
+        assert_eq!(Partition2d::auto(2, 16, 8, false).strategy, Strategy::Flat);
+        assert_eq!(Partition2d::auto(2, 16, 8, true).strategy, Strategy::FeatureFirst);
+    }
+
+    #[test]
+    fn property_partition_invariants() {
+        Prop::new("partition covers exactly once").cases(80).run(|g| {
+            let rows = g.usize(1..=24);
+            let cols = g.usize(1..=24);
+            let nthreads = g.usize(1..=9);
+            let strategy =
+                *g.choose(&[Strategy::MinibatchFirst, Strategy::FeatureFirst, Strategy::Flat]);
+            check_cover(&Partition2d::new(rows, cols, nthreads, strategy))
+        });
+    }
+}

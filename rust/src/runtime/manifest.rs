@@ -1,0 +1,169 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json` + one HLO text file per entry) and the
+//! Rust runtime that loads them.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor in the manifest (the subset we exchange).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{}'", other),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorMeta> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor meta missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape element")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(
+            j.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub flops: f64,
+    pub desc: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {:?} (run `make artifacts` first)", path))?;
+        Manifest::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string();
+                let file = dir.join(
+                    e.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("missing file"))?,
+                );
+                let parse_tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+                    e.get(key)
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("entry {} missing {}", name, key))?
+                        .iter()
+                        .map(TensorMeta::from_json)
+                        .collect()
+                };
+                Ok(ArtifactMeta {
+                    inputs: parse_tensors("inputs")?,
+                    outputs: parse_tensors("outputs")?,
+                    flops: e.get("flops").and_then(Json::as_f64).unwrap_or(0.0),
+                    desc: e.get("desc").and_then(Json::as_str).unwrap_or("").to_string(),
+                    name,
+                    file,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("artifact '{}' not in manifest ({} entries)", name, self.entries.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "entries": [
+        {"name": "demo", "file": "demo.hlo.txt",
+         "inputs": [{"shape": [4, 8, 32], "dtype": "float32"},
+                    {"shape": [64], "dtype": "int32"}],
+         "outputs": [{"shape": [8, 64], "dtype": "float32"}],
+         "flops": 131072, "desc": "demo entry"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("demo").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![4, 8, 32]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.inputs[1].dtype, DType::I32);
+        assert_eq!(e.inputs[0].element_count(), 1024);
+        assert_eq!(e.outputs[0].shape, vec![8, 64]);
+        assert_eq!(e.flops, 131072.0);
+        assert_eq!(e.file, Path::new("/tmp/a").join("demo.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("float32", "float64");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+}

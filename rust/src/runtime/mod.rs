@@ -1,0 +1,196 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust request path.
+//!
+//! The flow (see /opt/xla-example/load_hlo/): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Compilation happens once per entry and is
+//! cached; the hot path is `execute` on the cached executable. Python never
+//! runs here — artifacts are produced offline by `make artifacts`.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, DType, Manifest, TensorMeta};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// A host-side tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(d, _) => xla::Literal::vec1(d),
+            HostTensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported output element type {:?}", other),
+        }
+    }
+}
+
+/// Stats of one executed call (fed into the coordinator's metrics).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecStats {
+    pub secs: f64,
+    pub flops: f64,
+}
+
+impl ExecStats {
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.secs / 1e9
+    }
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn cpu(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached executable for) one artifact.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name)?;
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", meta.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling artifact {}: {e:?}", name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest, execute, unwrap the output
+    /// tuple. Returns outputs + timing.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<(Vec<HostTensor>, ExecStats)> {
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!("{}: expected {} inputs, got {}", name, meta.inputs.len(), inputs.len());
+        }
+        for (i, (inp, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if inp.shape() != want.shape.as_slice() || inp.dtype() != want.dtype {
+                bail!(
+                    "{}: input {} mismatch: got {:?}/{:?}, manifest says {:?}/{:?}",
+                    name, i, inp.shape(), inp.dtype(), want.shape, want.dtype
+                );
+            }
+        }
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", name))?;
+        let secs = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple().map_err(|e| anyhow!("untupling {}: {e:?}", name))?;
+        let outputs: Vec<HostTensor> =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+        if outputs.len() != meta.outputs.len() {
+            bail!("{}: manifest promises {} outputs, got {}", name, meta.outputs.len(), outputs.len());
+        }
+        Ok((outputs, ExecStats { secs, flops: meta.flops }))
+    }
+
+    /// Warm the cache for a set of entries (used by the coordinator at
+    /// startup so compile time never lands on the request path).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n).with_context(|| format!("warming {}", n))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!(t.as_f32().is_ok());
+        let i = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_len_mismatch_panics() {
+        HostTensor::f32(vec![0.0; 5], &[2, 3]);
+    }
+}

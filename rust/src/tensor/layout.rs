@@ -1,0 +1,486 @@
+//! Blocked-layout reformats (paper §3: "freedom of data layout choice is a
+//! fundamental cornerstone to enable high performance").
+//!
+//! Conventions: blocking factors `bk | K`, `bc | C`, `bn | N` must divide
+//! their dimension (the primitives' planners choose factors accordingly —
+//! the paper does the same; ResNet/GNMT sizes are highly composite).
+//! All functions are plain index-shuffling copies; their runtime is what
+//! Table 1 reports as "tensor reformatting".
+
+/// W[K][C] (row-major, `w[k*c_dim + c]`) → W[Kb][Cb][bc][bk].
+///
+/// The inner `[bc][bk]` block is exactly the row-major `bc×bk` "B" operand
+/// of a BRGEMM call with `ldb = bk` (note the transpose: output channel is
+/// the *fast* axis so the microkernel vectorises along it).
+pub fn pack_weights_2d(w: &[f32], k_dim: usize, c_dim: usize, bk: usize, bc: usize) -> Vec<f32> {
+    assert_eq!(k_dim % bk, 0, "bk must divide K");
+    assert_eq!(c_dim % bc, 0, "bc must divide C");
+    assert_eq!(w.len(), k_dim * c_dim);
+    let (kb, cb) = (k_dim / bk, c_dim / bc);
+    let mut out = vec![0.0; w.len()];
+    for ikb in 0..kb {
+        for icb in 0..cb {
+            let blk = ((ikb * cb) + icb) * bc * bk;
+            for ic in 0..bc {
+                for ik in 0..bk {
+                    out[blk + ic * bk + ik] = w[(ikb * bk + ik) * c_dim + (icb * bc + ic)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_weights_2d`].
+pub fn unpack_weights_2d(wb: &[f32], k_dim: usize, c_dim: usize, bk: usize, bc: usize) -> Vec<f32> {
+    let (kb, cb) = (k_dim / bk, c_dim / bc);
+    assert_eq!(wb.len(), k_dim * c_dim);
+    let mut out = vec![0.0; wb.len()];
+    for ikb in 0..kb {
+        for icb in 0..cb {
+            let blk = ((ikb * cb) + icb) * bc * bk;
+            for ic in 0..bc {
+                for ik in 0..bk {
+                    out[(ikb * bk + ik) * c_dim + (icb * bc + ic)] = wb[blk + ic * bk + ik];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Packed W[Kb][Cb][bc][bk] → packed transpose Wᵀ[Cb][Kb][bk][bc]
+/// (the backward-by-data operand: `dX = dY · Wᵀ`). Works directly on the
+/// blocked form — this is the transpose the paper amortises across LSTM
+/// time-steps.
+pub fn transpose_packed_2d(
+    wb: &[f32],
+    k_dim: usize,
+    c_dim: usize,
+    bk: usize,
+    bc: usize,
+) -> Vec<f32> {
+    let (kb, cb) = (k_dim / bk, c_dim / bc);
+    let mut out = vec![0.0; wb.len()];
+    for ikb in 0..kb {
+        for icb in 0..cb {
+            let src = ((ikb * cb) + icb) * bc * bk;
+            let dst = ((icb * kb) + ikb) * bc * bk;
+            for ic in 0..bc {
+                for ik in 0..bk {
+                    out[dst + ik * bc + ic] = wb[src + ic * bk + ik];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// X[N][C] → X[Nb][Cb][bn][bc] (FC activation blocking, Algorithm 5).
+pub fn pack_act_2d(x: &[f32], n_dim: usize, c_dim: usize, bn: usize, bc: usize) -> Vec<f32> {
+    assert_eq!(n_dim % bn, 0, "bn must divide N");
+    assert_eq!(c_dim % bc, 0, "bc must divide C");
+    assert_eq!(x.len(), n_dim * c_dim);
+    let (nb, cb) = (n_dim / bn, c_dim / bc);
+    let mut out = vec![0.0; x.len()];
+    for inb in 0..nb {
+        for icb in 0..cb {
+            let blk = ((inb * cb) + icb) * bn * bc;
+            for r in 0..bn {
+                for ic in 0..bc {
+                    out[blk + r * bc + ic] = x[(inb * bn + r) * c_dim + (icb * bc + ic)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_act_2d`].
+pub fn unpack_act_2d(xb: &[f32], n_dim: usize, c_dim: usize, bn: usize, bc: usize) -> Vec<f32> {
+    let (nb, cb) = (n_dim / bn, c_dim / bc);
+    assert_eq!(xb.len(), n_dim * c_dim);
+    let mut out = vec![0.0; xb.len()];
+    for inb in 0..nb {
+        for icb in 0..cb {
+            let blk = ((inb * cb) + icb) * bn * bc;
+            for r in 0..bn {
+                for ic in 0..bc {
+                    out[(inb * bn + r) * c_dim + (icb * bc + ic)] = xb[blk + r * bc + ic];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Conv weights W[K][C][R][S] → W[Kb][Cb][R][S][bc][bk] (paper §3.2.1).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_conv_weights(
+    w: &[f32],
+    k_dim: usize,
+    c_dim: usize,
+    r_dim: usize,
+    s_dim: usize,
+    bk: usize,
+    bc: usize,
+) -> Vec<f32> {
+    assert_eq!(k_dim % bk, 0);
+    assert_eq!(c_dim % bc, 0);
+    assert_eq!(w.len(), k_dim * c_dim * r_dim * s_dim);
+    let (kb, cb) = (k_dim / bk, c_dim / bc);
+    let mut out = vec![0.0; w.len()];
+    for ikb in 0..kb {
+        for icb in 0..cb {
+            for r in 0..r_dim {
+                for s in 0..s_dim {
+                    let blk = ((((ikb * cb) + icb) * r_dim + r) * s_dim + s) * bc * bk;
+                    for ic in 0..bc {
+                        for ik in 0..bk {
+                            let src = (((ikb * bk + ik) * c_dim + (icb * bc + ic)) * r_dim + r)
+                                * s_dim
+                                + s;
+                            out[blk + ic * bk + ik] = w[src];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_conv_weights`].
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_conv_weights(
+    wb: &[f32],
+    k_dim: usize,
+    c_dim: usize,
+    r_dim: usize,
+    s_dim: usize,
+    bk: usize,
+    bc: usize,
+) -> Vec<f32> {
+    let (kb, cb) = (k_dim / bk, c_dim / bc);
+    assert_eq!(wb.len(), k_dim * c_dim * r_dim * s_dim);
+    let mut out = vec![0.0; wb.len()];
+    for ikb in 0..kb {
+        for icb in 0..cb {
+            for r in 0..r_dim {
+                for s in 0..s_dim {
+                    let blk = ((((ikb * cb) + icb) * r_dim + r) * s_dim + s) * bc * bk;
+                    for ic in 0..bc {
+                        for ik in 0..bk {
+                            let dst = (((ikb * bk + ik) * c_dim + (icb * bc + ic)) * r_dim + r)
+                                * s_dim
+                                + s;
+                            out[dst] = wb[blk + ic * bk + ik];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Packed conv weights → packed dual-conv weights for backward-by-data:
+/// Wᵀ[Cb][Kb][R][S][bk][bc] with the spatial taps rotated 180°
+/// (`(r, s) → (R-1-r, S-1-s)`), i.e. the weights of the "dual convolution"
+/// of [27] that turns the bwd pass into a forward-shaped loop nest.
+#[allow(clippy::too_many_arguments)]
+pub fn dual_conv_weights(
+    wb: &[f32],
+    k_dim: usize,
+    c_dim: usize,
+    r_dim: usize,
+    s_dim: usize,
+    bk: usize,
+    bc: usize,
+) -> Vec<f32> {
+    let (kb, cb) = (k_dim / bk, c_dim / bc);
+    let mut out = vec![0.0; wb.len()];
+    for ikb in 0..kb {
+        for icb in 0..cb {
+            for r in 0..r_dim {
+                for s in 0..s_dim {
+                    let src = ((((ikb * cb) + icb) * r_dim + r) * s_dim + s) * bc * bk;
+                    let (rr, ss) = (r_dim - 1 - r, s_dim - 1 - s);
+                    let dst = ((((icb * kb) + ikb) * r_dim + rr) * s_dim + ss) * bk * bc;
+                    for ic in 0..bc {
+                        for ik in 0..bk {
+                            out[dst + ik * bc + ic] = wb[src + ic * bk + ik];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Activations I[N][C][H][W] → blocked, spatially padded
+/// I[N][Cb][H+2ph][W+2pw][bc] with zero borders. The physical padding is
+/// what lets every BRGEMM input block of the direct convolution be a plain
+/// offset into the tensor, border pixels included.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_conv_act(
+    x: &[f32],
+    n_dim: usize,
+    c_dim: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+    ph: usize,
+    pw: usize,
+) -> Vec<f32> {
+    assert_eq!(c_dim % bc, 0);
+    assert_eq!(x.len(), n_dim * c_dim * h_dim * w_dim);
+    let cb = c_dim / bc;
+    let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
+    let mut out = vec![0.0; n_dim * cb * hp * wp * bc];
+    for n in 0..n_dim {
+        for icb in 0..cb {
+            for h in 0..h_dim {
+                for w in 0..w_dim {
+                    let dst = (((n * cb + icb) * hp + (h + ph)) * wp + (w + pw)) * bc;
+                    for ic in 0..bc {
+                        out[dst + ic] = x[((n * c_dim + (icb * bc + ic)) * h_dim + h) * w_dim + w];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked (optionally padded) activations → plain NCHW.
+#[allow(clippy::too_many_arguments)]
+pub fn unpack_conv_act(
+    xb: &[f32],
+    n_dim: usize,
+    c_dim: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+    ph: usize,
+    pw: usize,
+) -> Vec<f32> {
+    let cb = c_dim / bc;
+    let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
+    assert_eq!(xb.len(), n_dim * cb * hp * wp * bc);
+    let mut out = vec![0.0; n_dim * c_dim * h_dim * w_dim];
+    for n in 0..n_dim {
+        for icb in 0..cb {
+            for h in 0..h_dim {
+                for w in 0..w_dim {
+                    let src = (((n * cb + icb) * hp + (h + ph)) * wp + (w + pw)) * bc;
+                    for ic in 0..bc {
+                        out[((n * c_dim + (icb * bc + ic)) * h_dim + h) * w_dim + w] = xb[src + ic];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Re-pad an already-blocked activation tensor:
+/// `[N][Cb][H][W][bc]` → `[N][Cb][H+2ph][W+2pw][bc]` with zero borders,
+/// by direct row copies (no unpack/repack round trip). Used by the
+/// backward-by-data "dual convolution" to pad dO by (R-1, S-1).
+#[allow(clippy::too_many_arguments)]
+pub fn repad_blocked(
+    src: &[f32],
+    n_dim: usize,
+    cb: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+    ph: usize,
+    pw: usize,
+) -> Vec<f32> {
+    assert_eq!(src.len(), n_dim * cb * h_dim * w_dim * bc);
+    let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
+    let mut out = vec![0.0f32; n_dim * cb * hp * wp * bc];
+    let row = w_dim * bc;
+    for n in 0..n_dim {
+        for icb in 0..cb {
+            for h in 0..h_dim {
+                let s = ((n * cb + icb) * h_dim + h) * row;
+                let d = (((n * cb + icb) * hp + (h + ph)) * wp + pw) * bc;
+                out[d..d + row].copy_from_slice(&src[s..s + row]);
+            }
+        }
+    }
+    out
+}
+
+/// Per-row channel transpose of blocked activations:
+/// I[N][Cb][H][W][bc] → IT[N][Cb][H][bc][W]. The weight-update pass reads
+/// activations channel-major ("Aᵀ" operand); this is its reformat
+/// (counted in the UPD pass's reformat time, cf. Table 1 bwd&upd row).
+pub fn transpose_act_rows(
+    xb: &[f32],
+    n_dim: usize,
+    cb: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+) -> Vec<f32> {
+    assert_eq!(xb.len(), n_dim * cb * h_dim * w_dim * bc);
+    let mut out = vec![0.0; xb.len()];
+    for n in 0..n_dim {
+        for icb in 0..cb {
+            for h in 0..h_dim {
+                let base = ((n * cb + icb) * h_dim + h) * w_dim * bc;
+                for w in 0..w_dim {
+                    for ic in 0..bc {
+                        out[base + ic * w_dim + w] = xb[base + w * bc + ic];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weights_2d_round_trip() {
+        let mut rng = Rng::new(1);
+        let (k, c, bk, bc) = (8, 12, 4, 3);
+        let w = rng.vec_f32(k * c, -1.0, 1.0);
+        let packed = pack_weights_2d(&w, k, c, bk, bc);
+        assert_eq!(unpack_weights_2d(&packed, k, c, bk, bc), w);
+    }
+
+    #[test]
+    fn weights_2d_block_is_gemm_operand() {
+        // Element W[k][c] must land at packed[kb][cb][c%bc][k%bk].
+        let (k, c, bk, bc) = (4, 4, 2, 2);
+        let w: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let p = pack_weights_2d(&w, k, c, bk, bc);
+        // block (kb=1, cb=0), ic=1, ik=0 → W[k=2][c=1] = 2*4+1 = 9
+        let cb_ct = c / bc;
+        let blk = (1 * cb_ct + 0) * bc * bk;
+        assert_eq!(p[blk + 1 * bk + 0], 9.0);
+    }
+
+    #[test]
+    fn act_2d_round_trip() {
+        let mut rng = Rng::new(2);
+        let (n, c, bn, bc) = (6, 10, 3, 5);
+        let x = rng.vec_f32(n * c, -1.0, 1.0);
+        let packed = pack_act_2d(&x, n, c, bn, bc);
+        assert_eq!(unpack_act_2d(&packed, n, c, bn, bc), x);
+    }
+
+    #[test]
+    fn transpose_packed_is_transpose() {
+        let mut rng = Rng::new(3);
+        let (k, c, bk, bc) = (6, 8, 3, 4);
+        let w = rng.vec_f32(k * c, -1.0, 1.0);
+        let p = pack_weights_2d(&w, k, c, bk, bc);
+        let pt = transpose_packed_2d(&p, k, c, bk, bc);
+        // pt viewed as pack of Wᵀ[C][K] with roles swapped: unpack and check.
+        let wt = unpack_weights_2d(&pt, c, k, bc, bk);
+        for ik in 0..k {
+            for ic in 0..c {
+                assert_eq!(wt[ic * k + ik], w[ik * c + ic], "({},{})", ik, ic);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_weights_round_trip() {
+        let mut rng = Rng::new(4);
+        let (k, c, r, s, bk, bc) = (8, 6, 3, 3, 4, 3);
+        let w = rng.vec_f32(k * c * r * s, -1.0, 1.0);
+        let p = pack_conv_weights(&w, k, c, r, s, bk, bc);
+        assert_eq!(unpack_conv_weights(&p, k, c, r, s, bk, bc), w);
+    }
+
+    #[test]
+    fn dual_conv_weights_rotate_and_transpose() {
+        let (k, c, r, s, bk, bc) = (2, 2, 3, 1, 1, 1);
+        let mut w = vec![0.0; k * c * r * s];
+        // W[k=1][c=0][r=2][s=0] = 5
+        w[((1 * c + 0) * r + 2) * s + 0] = 5.0;
+        let p = pack_conv_weights(&w, k, c, r, s, bk, bc);
+        let d = dual_conv_weights(&p, k, c, r, s, bk, bc);
+        // dual: [cb=0][kb=1][rr=0][ss=0] (bk=bc=1 so flat index)
+        let kb_ct = k / bk;
+        let idx = (((0 * kb_ct + 1) * r + 0) * s + 0) * bk * bc;
+        assert_eq!(d[idx], 5.0);
+    }
+
+    #[test]
+    fn conv_act_pad_round_trip() {
+        let mut rng = Rng::new(5);
+        let (n, c, h, w, bc, ph, pw) = (2, 4, 5, 7, 2, 1, 2);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let p = pack_conv_act(&x, n, c, h, w, bc, ph, pw);
+        assert_eq!(unpack_conv_act(&p, n, c, h, w, bc, ph, pw), x);
+        // Borders must be zero.
+        let cb = c / bc;
+        let (hp, wp) = (h + 2 * ph, w + 2 * pw);
+        for icb in 0..cb {
+            for ww in 0..wp {
+                for ic in 0..bc {
+                    assert_eq!(p[(((0 * cb + icb) * hp + 0) * wp + ww) * bc + ic], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_act_rows_is_per_row_transpose() {
+        let mut rng = Rng::new(6);
+        let (n, cb, h, w, bc) = (1, 2, 3, 4, 3);
+        let x = rng.vec_f32(n * cb * h * w * bc, -1.0, 1.0);
+        let t = transpose_act_rows(&x, n, cb, h, w, bc);
+        for icb in 0..cb {
+            for hh in 0..h {
+                let base = ((icb) * h + hh) * w * bc;
+                for ww in 0..w {
+                    for ic in 0..bc {
+                        assert_eq!(t[base + ic * w + ww], x[base + ww * bc + ic]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_layout_round_trips() {
+        Prop::new("layout round trips").cases(40).run(|g| {
+            let bk = g.usize(1..=4);
+            let bc = g.usize(1..=4);
+            let k = bk * g.usize(1..=4);
+            let c = bc * g.usize(1..=4);
+            let w = g.vec_f32(k * c, -1.0, 1.0);
+            if unpack_weights_2d(&pack_weights_2d(&w, k, c, bk, bc), k, c, bk, bc) != w {
+                return Err(format!("2d weights k{} c{} bk{} bc{}", k, c, bk, bc));
+            }
+            let (r, s) = (g.usize(1..=3), g.usize(1..=3));
+            let wc = g.vec_f32(k * c * r * s, -1.0, 1.0);
+            let p = pack_conv_weights(&wc, k, c, r, s, bk, bc);
+            if unpack_conv_weights(&p, k, c, r, s, bk, bc) != wc {
+                return Err("conv weights".into());
+            }
+            // dual of dual = original packed transposed layout round trip
+            let d = dual_conv_weights(&p, k, c, r, s, bk, bc);
+            let dd = dual_conv_weights(&d, c, k, r, s, bc, bk);
+            if dd != p {
+                return Err("dual∘dual ≠ id".into());
+            }
+            Ok(())
+        });
+    }
+}

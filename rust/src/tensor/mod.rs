@@ -1,0 +1,145 @@
+//! Dense tensors and the paper's blocked layouts.
+//!
+//! The paper's primitives all run on *blocked* tensor formats chosen so
+//! that every BRGEMM operand block is (nearly) contiguous and free of
+//! large-power-of-two strided accesses (§3.1.2, §3.2.1, §3.3.2):
+//!
+//! ```text
+//!   FC/LSTM weights  W[K][C]          → W[Kb][Cb][bc][bk]
+//!   conv weights     W[K][C][R][S]    → W[Kb][Cb][R][S][bc][bk]
+//!   conv activations I[N][C][H][W]    → I[N][Cb][H][W][bc]
+//!   FC activations   X[N][C]          → X[Nb][Cb][bn][bc]
+//! ```
+//!
+//! [`layout`] implements these reformats (and their inverses + the
+//! transposed variants needed by the backward passes). The reformat cost
+//! is part of the paper's accounting (Table 1 "tensor reformatting").
+
+pub mod layout;
+
+use crate::util::rng::Rng;
+
+/// A dense row-major f32 tensor: shape + contiguous storage.
+///
+/// Deliberately minimal — the primitives operate on raw slices with
+/// explicit layout structs; `Tensor` exists for ergonomic allocation,
+/// initialisation and comparison in models, examples and tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// Uniform random in `[lo, hi)` from the given RNG (deterministic).
+    pub fn rand(shape: &[usize], rng: &mut Rng, lo: f32, hi: f32) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_f32(&mut t.data, lo, hi);
+        t
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flat offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let o = self.offset(idx);
+        &mut self.data[o]
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖ / ‖b‖ (for comparisons against an oracle).
+    pub fn rel_l2(&self, oracle: &Tensor) -> f64 {
+        assert_eq!(self.shape, oracle.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&oracle.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_offsets() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.offset(&[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn indexing_round_trip() {
+        let mut t = Tensor::zeros(&[3, 5]);
+        *t.at_mut(&[2, 4]) = 7.0;
+        assert_eq!(t.at(&[2, 4]), 7.0);
+        assert_eq!(t.data[14], 7.0);
+    }
+
+    #[test]
+    fn rand_deterministic() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = Tensor::rand(&[4, 4], &mut r1, -1.0, 1.0);
+        let b = Tensor::rand(&[4, 4], &mut r2, -1.0, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert!(a.rel_l2(&a) < 1e-12);
+    }
+}

@@ -1,0 +1,245 @@
+//! Measurement harness (criterion is unavailable offline).
+//!
+//! Provides warmed-up, repeated timing with GFLOPS accounting and the
+//! paper-style table output used by every `benches/` target. Benches are
+//! plain binaries (`harness = false` in Cargo.toml) built on this module.
+
+use super::stats::{fmt_time, Summary};
+use std::time::Instant;
+
+/// One measured configuration: a row in a paper table/figure.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub impl_name: String,
+    pub flops: f64,
+    pub time: Summary,
+}
+
+impl Row {
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.time.min / 1e9
+    }
+}
+
+/// Measurement options. `quick()` is used by `make bench-quick` and CI-ish
+/// runs; `full()` matches the paper's 400-repetition protocol scaled down.
+#[derive(Debug, Clone, Copy)]
+pub struct Opts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once this much wall time has been spent measuring a case.
+    pub max_seconds: f64,
+}
+
+impl Opts {
+    pub fn full() -> Opts {
+        Opts { warmup_iters: 3, min_iters: 10, max_iters: 400, max_seconds: 2.0 }
+    }
+
+    pub fn quick() -> Opts {
+        Opts { warmup_iters: 1, min_iters: 3, max_iters: 20, max_seconds: 0.25 }
+    }
+
+    /// Select via `BENCH_QUICK=1` env or `--quick` argv flag.
+    pub fn from_env() -> Opts {
+        let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+            || std::env::args().any(|a| a == "--quick");
+        if quick {
+            Opts::quick()
+        } else {
+            Opts::full()
+        }
+    }
+}
+
+/// Time `f` under `opts`; returns per-iteration samples in seconds.
+pub fn measure<F: FnMut()>(opts: Opts, mut f: F) -> Summary {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.min_iters);
+    let budget = Instant::now();
+    for i in 0..opts.max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if i + 1 >= opts.min_iters && budget.elapsed().as_secs_f64() > opts.max_seconds {
+            break;
+        }
+    }
+    Summary::from(&samples)
+}
+
+/// A named collection of rows, printed as a paper-style table.
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<Row>,
+    /// Peak GFLOPS used for the efficiency column (from `perfmodel`).
+    pub peak_gflops: Option<f64>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), rows: Vec::new(), peak_gflops: None }
+    }
+
+    pub fn with_peak(title: &str, peak_gflops: f64) -> Table {
+        Table { title: title.to_string(), rows: Vec::new(), peak_gflops: Some(peak_gflops) }
+    }
+
+    /// Measure one case and append a row.
+    pub fn case<F: FnMut()>(&mut self, label: &str, impl_name: &str, flops: f64, opts: Opts, f: F) {
+        let time = measure(opts, f);
+        let row = Row { label: label.into(), impl_name: impl_name.into(), flops, time };
+        eprintln!(
+            "  {:<22} {:<18} {:>10.2} GF/s  min {}",
+            row.label,
+            row.impl_name,
+            row.gflops(),
+            fmt_time(row.time.min),
+        );
+        self.rows.push(row);
+    }
+
+    /// Weighted efficiency over rows matching `impl_name`, weights = flops
+    /// (the paper's "weighted efficiency" for full topologies).
+    pub fn weighted_gflops(&self, impl_name: &str) -> f64 {
+        let (fl, t): (f64, f64) = self
+            .rows
+            .iter()
+            .filter(|r| r.impl_name == impl_name)
+            .fold((0.0, 0.0), |(fl, t), r| (fl + r.flops, t + r.time.min));
+        if t == 0.0 {
+            0.0
+        } else {
+            fl / t / 1e9
+        }
+    }
+
+    /// Render the table. If `peak_gflops` is set, adds an efficiency column.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        out.push_str(&format!(
+            "{:<22} {:<18} {:>12} {:>12} {:>10}",
+            "case", "impl", "min time", "GFLOPS", "eff%"
+        ));
+        out.push('\n');
+        for r in &self.rows {
+            let eff = self
+                .peak_gflops
+                .map(|p| format!("{:>9.1}%", 100.0 * r.gflops() / p))
+                .unwrap_or_else(|| "      n/a".to_string());
+            out.push_str(&format!(
+                "{:<22} {:<18} {:>12} {:>12.2} {:>10}\n",
+                r.label,
+                r.impl_name,
+                fmt_time(r.time.min),
+                r.gflops(),
+                eff
+            ));
+        }
+        out
+    }
+
+    /// Emit rows as a JSON array (consumed by EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                obj([
+                    ("label", r.label.as_str().into()),
+                    ("impl", r.impl_name.as_str().into()),
+                    ("flops", r.flops.into()),
+                    ("min_s", r.time.min.into()),
+                    ("mean_s", r.time.mean.into()),
+                    ("gflops", r.gflops().into()),
+                ])
+            })
+            .collect();
+        obj([
+            ("title", self.title.as_str().into()),
+            ("peak_gflops", self.peak_gflops.map(Json::Num).unwrap_or(Json::Null)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (ptr read_volatile
+/// based; stable-Rust equivalent of `std::hint::black_box` semantics strong
+/// enough for our f32 buffers).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0usize;
+        let opts = Opts { warmup_iters: 2, min_iters: 5, max_iters: 5, max_seconds: 10.0 };
+        let s = measure(opts, || n += 1);
+        assert_eq!(n, 7); // 2 warmup + 5 measured
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn measure_respects_budget() {
+        let opts = Opts { warmup_iters: 0, min_iters: 2, max_iters: 1000, max_seconds: 0.02 };
+        let s = measure(opts, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.n >= 2 && s.n < 1000, "n={}", s.n);
+    }
+
+    #[test]
+    fn gflops_accounting() {
+        let r = Row {
+            label: "x".into(),
+            impl_name: "y".into(),
+            flops: 2e9,
+            time: Summary::from(&[1.0, 2.0]),
+        };
+        assert!((r.gflops() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_gflops_pools_flops_and_time() {
+        let mut t = Table::new("t");
+        t.rows.push(Row {
+            label: "a".into(),
+            impl_name: "brgemm".into(),
+            flops: 1e9,
+            time: Summary::from(&[1.0]),
+        });
+        t.rows.push(Row {
+            label: "b".into(),
+            impl_name: "brgemm".into(),
+            flops: 3e9,
+            time: Summary::from(&[1.0]),
+        });
+        // 4 GFLOP in 2 s = 2 GF/s
+        assert!((t.weighted_gflops("brgemm") - 2.0).abs() < 1e-12);
+        assert_eq!(t.weighted_gflops("missing"), 0.0);
+    }
+
+    #[test]
+    fn table_renders_and_jsons() {
+        let mut t = Table::with_peak("demo", 100.0);
+        t.rows.push(Row {
+            label: "a".into(),
+            impl_name: "x".into(),
+            flops: 5e10,
+            time: Summary::from(&[1.0]),
+        });
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("50.0%"), "{}", s);
+        let j = t.to_json().to_string_compact();
+        assert!(j.contains("\"gflops\""));
+    }
+}

@@ -1,0 +1,27 @@
+//! Self-contained substrate utilities.
+//!
+//! The execution environment has no network access to crates.io, so the
+//! usual ecosystem crates (serde, clap, criterion, rayon, proptest, …) are
+//! unavailable. Everything a production library would pull from those is
+//! implemented here, scoped to what this repo needs:
+//!
+//! * [`json`] — minimal JSON parser + serializer (artifact manifests,
+//!   model configs).
+//! * [`rng`] — deterministic xoshiro256** PRNG (data generation, property
+//!   tests); no global state, seedable, split-able.
+//! * [`stats`] — timing statistics used by the bench harness.
+//! * [`pool`] — a scoped thread pool with static partitioning, mirroring
+//!   the OpenMP-style parallel regions of the paper's C implementation.
+//! * [`bench`] — the measurement harness (criterion replacement): warmup,
+//!   repetition, GFLOPS accounting, paper-style table output.
+//! * [`prop`] — a small property-based testing framework (proptest
+//!   replacement): random case generation + iterative shrinking.
+//! * [`logger`] — leveled stderr logger for the coordinator.
+
+pub mod bench;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

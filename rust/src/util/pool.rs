@@ -1,0 +1,226 @@
+//! OpenMP-style parallel regions over std threads.
+//!
+//! The paper's C implementation parallelises every primitive with a
+//! `#pragma omp parallel` region and *static* work partitioning computed
+//! from `thread_id` (see Algorithm 2 line 2 and Algorithm 5 line 1). This
+//! module reproduces that model: [`parallel_region`] runs a closure on
+//! `nthreads` logical threads, each receiving its `tid`, and
+//! [`chunk_range`] computes the contiguous static partition of a
+//! 1-D iteration space.
+//!
+//! On this 1-core host `nthreads == 1` short-circuits to an inline call
+//! (no spawn), so the threading layer adds zero overhead to the measured
+//! hot paths while remaining fully exercised by the multi-threaded tests.
+
+/// Run `f(tid)` for `tid in 0..nthreads`, on real threads when
+/// `nthreads > 1`. Panics in workers propagate to the caller.
+pub fn parallel_region<F>(nthreads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(nthreads > 0);
+    if nthreads == 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(nthreads);
+        for tid in 0..nthreads {
+            handles.push(s.spawn(move || f(tid)));
+        }
+        for h in handles {
+            h.join().expect("worker thread panicked");
+        }
+    });
+}
+
+/// Static partition of `0..n` into `nthreads` contiguous chunks; returns
+/// `(start, end)` for `tid`. Remainder items go to the leading threads, so
+/// chunk sizes differ by at most one (the paper's load-balance property).
+pub fn chunk_range(n: usize, nthreads: usize, tid: usize) -> (usize, usize) {
+    debug_assert!(tid < nthreads);
+    let base = n / nthreads;
+    let rem = n % nthreads;
+    let start = tid * base + tid.min(rem);
+    let len = base + usize::from(tid < rem);
+    (start, start + len)
+}
+
+/// Parallel-for over `0..n` with static chunking: `f(tid, i)` per item.
+pub fn parallel_for<F>(nthreads: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    parallel_region(nthreads, |tid| {
+        let (lo, hi) = chunk_range(n, nthreads, tid);
+        for i in lo..hi {
+            f(tid, i);
+        }
+    });
+}
+
+/// Write-disjoint parallel map: splits `out` into per-thread sub-slices
+/// aligned with [`chunk_range`] and hands each thread mutable access to its
+/// own chunk — the safe-Rust equivalent of the paper's threads writing
+/// disjoint output blocks.
+pub fn parallel_chunks_mut<T, F>(nthreads: usize, out: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if nthreads == 1 {
+        f(0, 0, out);
+        return;
+    }
+    // Pre-split into exactly the chunk_range partition.
+    let mut chunks: Vec<(usize, &mut [T])> = Vec::with_capacity(nthreads);
+    let mut rest = out;
+    let mut consumed = 0;
+    for tid in 0..nthreads {
+        let (lo, hi) = chunk_range(n, nthreads, tid);
+        debug_assert_eq!(lo, consumed);
+        let (head, tail) = rest.split_at_mut(hi - lo);
+        chunks.push((lo, head));
+        rest = tail;
+        consumed = hi;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(nthreads);
+        for (tid, (offset, chunk)) in chunks.into_iter().enumerate() {
+            handles.push(s.spawn(move || f(tid, offset, chunk)));
+        }
+        for h in handles {
+            h.join().expect("worker thread panicked");
+        }
+    });
+}
+
+/// Shared mutable f32 buffer for threads writing *disjoint* regions.
+///
+/// The primitives' parallelisation writes each output block from exactly
+/// one task, and each task runs on exactly one thread (invariants tested in
+/// `primitives::partition`). `SharedMut` is the narrow unsafe window that
+/// expresses this to the borrow checker.
+pub struct SharedMut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+unsafe impl Sync for SharedMut<'_> {}
+unsafe impl Send for SharedMut<'_> {}
+
+impl<'a> SharedMut<'a> {
+    pub fn new(buf: &'a mut [f32]) -> SharedMut<'a> {
+        SharedMut { ptr: buf.as_mut_ptr(), len: buf.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// # Safety
+    /// `[off, off+len)` must not overlap any region concurrently handed out
+    /// to another thread.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, off: usize, len: usize) -> &mut [f32] {
+        debug_assert!(off + len <= self.len, "SharedMut slice out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(off), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn shared_mut_disjoint_writes() {
+        let mut buf = vec![0.0f32; 64];
+        let shared = SharedMut::new(&mut buf);
+        parallel_region(4, |tid| {
+            let s = unsafe { shared.slice(tid * 16, 16) };
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = (tid * 16 + i) as f32;
+            }
+        });
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_and_are_disjoint() {
+        for n in [0usize, 1, 7, 64, 1000] {
+            for t in [1usize, 2, 3, 8, 13] {
+                let mut covered = vec![0u8; n];
+                let mut prev_end = 0;
+                for tid in 0..t {
+                    let (lo, hi) = chunk_range(n, t, tid);
+                    assert_eq!(lo, prev_end, "contiguous");
+                    prev_end = hi;
+                    for c in &mut covered[lo..hi] {
+                        *c += 1;
+                    }
+                }
+                assert_eq!(prev_end, n);
+                assert!(covered.iter().all(|&c| c == 1));
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_sizes_balanced() {
+        for n in [10usize, 97, 1000] {
+            for t in [3usize, 7, 16] {
+                let sizes: Vec<usize> =
+                    (0..t).map(|tid| { let (l, h) = chunk_range(n, t, tid); h - l }).collect();
+                let mx = *sizes.iter().max().unwrap();
+                let mn = *sizes.iter().min().unwrap();
+                assert!(mx - mn <= 1, "n={} t={} sizes={:?}", n, t, sizes);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_for_visits_every_item_once() {
+        let n = 1000;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(4, n, |_tid, i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_chunks_mut_partitions_writes() {
+        let mut out = vec![0usize; 100];
+        parallel_chunks_mut(7, &mut out, |tid, offset, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = tid * 1000 + offset + j;
+            }
+        });
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x % 1000, i, "item {} written with its global index", i);
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let mut hit = false;
+        parallel_chunks_mut(1, std::slice::from_mut(&mut hit), |tid, off, c| {
+            assert_eq!((tid, off), (0, 0));
+            c[0] = true;
+        });
+        assert!(hit);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker thread panicked")]
+    fn worker_panic_propagates() {
+        parallel_region(2, |tid| {
+            if tid == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

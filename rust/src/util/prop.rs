@@ -1,0 +1,187 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Usage:
+//! ```
+//! use brgemm_dl::util::prop::{Prop, Gen};
+//! # std::env::remove_var("PROP_SEED");
+//! Prop::new("reverse twice is identity")
+//!     .cases(200)
+//!     .run(|g| {
+//!         let xs: Vec<u32> = g.vec(0..=64, |g| g.u32(0..=1000));
+//!         let mut ys = xs.clone();
+//!         ys.reverse();
+//!         ys.reverse();
+//!         if ys != xs { return Err(format!("{:?} != {:?}", ys, xs)); }
+//!         Ok(())
+//!     });
+//! ```
+//!
+//! On failure the framework re-runs the property with geometrically smaller
+//! size bounds to report a small counterexample seed, then panics with the
+//! seed so the case can be replayed deterministically
+//! (`PROP_SEED=<n> cargo test`).
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+
+/// Random value source handed to properties; wraps [`Rng`] with a size
+/// parameter that the shrinking loop reduces.
+pub struct Gen {
+    rng: Rng,
+    /// Scale factor in (0,1]; shrink passes reduce it to bias generated
+    /// collection sizes and magnitudes downward.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn u32(&mut self, r: RangeInclusive<u32>) -> u32 {
+        let (lo, hi) = (*r.start(), *r.end());
+        let hi_scaled = lo + (((hi - lo) as f64 * self.size) as u32);
+        lo + (self.rng.next_u64() % (u64::from(hi_scaled - lo) + 1)) as u32
+    }
+
+    pub fn usize(&mut self, r: RangeInclusive<usize>) -> usize {
+        self.u32(*r.start() as u32..=*r.end() as u32) as usize
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = (self.rng.next_u64() % xs.len() as u64) as usize;
+        &xs[i]
+    }
+
+    /// A vector whose length is drawn from `len` (size-scaled) and whose
+    /// elements come from `f`.
+    pub fn vec<T>(&mut self, len: RangeInclusive<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// A vector of exactly n f32s in [lo, hi).
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+}
+
+/// A property runner.
+pub struct Prop {
+    name: String,
+    cases: usize,
+    seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Prop {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB5_2E_55);
+        Prop { name: name.to_string(), cases: 100, seed }
+    }
+
+    /// Number of random cases to run (default 100).
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.seed = s;
+        self
+    }
+
+    /// Run the property; panics with the failing seed + message on failure.
+    pub fn run<F>(self, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        let mut root = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = root.next_u64();
+            let mut g = Gen { rng: Rng::new(case_seed), size: 1.0 };
+            if let Err(msg) = prop(&mut g) {
+                // Shrink: retry the same stream at smaller sizes to find a
+                // smaller counterexample before reporting.
+                let mut best: Option<(f64, String)> = None;
+                for &size in &[0.05, 0.1, 0.25, 0.5] {
+                    let mut g = Gen { rng: Rng::new(case_seed), size };
+                    if let Err(m) = prop(&mut g) {
+                        best = Some((size, m));
+                        break;
+                    }
+                }
+                let (size, shown) = best.unwrap_or((1.0, msg));
+                panic!(
+                    "property '{}' failed (case {}, seed {:#x}, size {}):\n  {}\n\
+                     replay with PROP_SEED={}",
+                    self.name, case, case_seed, size, shown, self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("add commutes").cases(50).run(|g| {
+            let a = g.u32(0..=1000);
+            let b = g.u32(0..=1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always fails").cases(5).run(|_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        Prop::new("ranges").cases(200).run(|g| {
+            let x = g.usize(3..=17);
+            if !(3..=17).contains(&x) {
+                return Err(format!("usize out of range: {}", x));
+            }
+            let f = g.f32(-2.0, 2.0);
+            if !(-2.0..2.0).contains(&f) {
+                return Err(format!("f32 out of range: {}", f));
+            }
+            let v = g.vec(0..=8, |g| g.bool());
+            if v.len() > 8 {
+                return Err("vec too long".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut out = Vec::new();
+            Prop::new("det").seed(seed).cases(10).run(|g| {
+                out.push(g.u32(0..=u32::MAX / 2));
+                Ok(())
+            });
+            out
+        };
+        assert_eq!(collect(99), collect(99));
+        assert_ne!(collect(99), collect(100));
+    }
+}

@@ -1,0 +1,159 @@
+//! Timing statistics for the bench harness and the coordinator's metrics.
+
+/// Summary statistics over a set of timing samples (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples. Panics on an empty slice.
+    pub fn from(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "no samples");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice, q in [0,1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Online mean/min/max accumulator (used by the coordinator's metric sinks,
+/// which cannot afford to store every sample).
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Reconstruct from moments (used by the exact parallel-Welford merge
+    /// in `coordinator::metrics`).
+    pub fn from_moments(n: usize, mean: f64, m2: f64, min: f64, max: f64) -> Online {
+        Online { n, mean, m2, min, max }
+    }
+
+    /// Welford update.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n > 1 {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Pretty-print seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.3} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::from(&[0.5]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p95, 0.5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let s = Summary::from(&xs);
+        assert!((o.mean() - s.mean).abs() < 1e-12);
+        assert!((o.std() - s.std).abs() < 1e-12);
+        assert_eq!(o.min, s.min);
+        assert_eq!(o.max, s.max);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(0.002), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration tests: Rust runtime ↔ AOT artifacts (the L3↔L2 boundary).
+//!
+//! These require `make artifacts` to have run; they skip (with a notice)
+//! when the artifact directory is absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use brgemm_dl::brgemm::{BrgemmDesc, BrgemmKernel};
+use brgemm_dl::runtime::{HostTensor, Runtime};
+use brgemm_dl::util::rng::Rng;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::cpu(&dir).expect("runtime"))
+}
+
+#[test]
+fn manifest_lists_expected_entries() {
+    let Some(rt) = runtime() else { return };
+    for name in ["brgemm_demo", "mlp_fwd", "mlp_train_step", "lstm_fwd", "gnmt_encoder_2l"] {
+        assert!(rt.manifest.get(name).is_ok(), "missing artifact {}", name);
+    }
+}
+
+#[test]
+fn brgemm_demo_matches_native_kernel() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest.get("brgemm_demo").unwrap().clone();
+    let (batch, m, k) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1], meta.inputs[0].shape[2]);
+    let n = meta.inputs[1].shape[2];
+    let mut rng = Rng::new(42);
+    let a = rng.vec_f32(batch * m * k, -1.0, 1.0);
+    let b = rng.vec_f32(batch * k * n, -1.0, 1.0);
+    let (outs, stats) = rt
+        .execute(
+            "brgemm_demo",
+            &[
+                HostTensor::f32(a.clone(), &[batch, m, k]),
+                HostTensor::f32(b.clone(), &[batch, k, n]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape(), &[m, n]);
+    assert!(stats.secs > 0.0);
+
+    // Cross-check the compiled Pallas kernel against the native Rust BRGEMM
+    // — the two implementations of the same building block must agree.
+    let kern = BrgemmKernel::new(BrgemmDesc::dense(m, n, k));
+    let a_offs: Vec<usize> = (0..batch).map(|i| i * m * k).collect();
+    let b_offs: Vec<usize> = (0..batch).map(|i| i * k * n).collect();
+    let mut want = vec![0.0f32; m * n];
+    kern.execute_offs(&a, &a_offs, &b, &b_offs, &mut want, None);
+    let got = outs[0].as_f32().unwrap();
+    for i in 0..want.len() {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-3,
+            "pallas vs native at {}: {} vs {}",
+            i, got[i], want[i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(rt) = runtime() else { return };
+    let t0 = std::time::Instant::now();
+    rt.load("brgemm_demo").unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    rt.load("brgemm_demo").unwrap();
+    let second = t1.elapsed();
+    assert!(second < first / 2, "cache hit {:?} vs compile {:?}", second, first);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("brgemm_demo", &[HostTensor::f32(vec![0.0; 4], &[2, 2])]);
+    assert!(err.is_err(), "wrong arity must fail");
+    let meta = rt.manifest.get("brgemm_demo").unwrap().clone();
+    let bad: Vec<HostTensor> = meta
+        .inputs
+        .iter()
+        .map(|t| HostTensor::f32(vec![0.0; t.element_count()], &t.shape))
+        .rev() // swapped shapes
+        .collect();
+    if meta.inputs[0].shape != meta.inputs[1].shape {
+        assert!(rt.execute("brgemm_demo", &bad).is_err(), "shape mismatch must fail");
+    }
+}
+
+#[test]
+fn mlp_train_step_reduces_loss_over_iterations() {
+    let Some(rt) = runtime() else { return };
+    let meta = rt.manifest.get("mlp_train_step").unwrap().clone();
+    let mut rng = Rng::new(7);
+    // params: (w,b) pairs then x, labels per the manifest order.
+    let mut tensors: Vec<HostTensor> = Vec::new();
+    for t in &meta.inputs {
+        match t.dtype {
+            brgemm_dl::runtime::DType::F32 => {
+                let fan_in = t.shape[0] as f32;
+                let scale = if t.shape.len() == 2 { (2.0 / fan_in).sqrt() } else { 0.0 };
+                tensors.push(HostTensor::f32(
+                    rng.vec_f32(t.element_count(), -scale.max(0.5) * 0.1, scale.max(0.5) * 0.1),
+                    &t.shape,
+                ));
+            }
+            brgemm_dl::runtime::DType::I32 => {
+                let labels: Vec<i32> =
+                    (0..t.element_count()).map(|_| rng.below(10) as i32).collect();
+                tensors.push(HostTensor::i32(labels, &t.shape));
+            }
+        }
+    }
+    // Iterate the step: params come back as outputs[0..n-1], loss last.
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let (outs, _) = rt.execute("mlp_train_step", &tensors).unwrap();
+        let loss = outs.last().unwrap().as_f32().unwrap()[0];
+        losses.push(loss);
+        for (i, out) in outs[..outs.len() - 1].iter().enumerate() {
+            tensors[i] = out.clone();
+        }
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss should decrease: {:?}",
+        losses
+    );
+}
