@@ -1,0 +1,67 @@
+//! Ablation: autotuned blockings vs. the seed-default heuristic picks, on
+//! paper-relevant ResNet-50 layer shapes (Table 2).
+//!
+//! For each layer the tuner generates the candidate space, prunes it with
+//! the analytic cost model, measures the shortlist and persists the winner
+//! in `bench_results/tuning_cache.json`; the bench then times the
+//! seed-default config against a primitive rebuilt from the cached winner
+//! — i.e. exactly what `ConvPrimitive::tuned` would construct.
+//!
+//! Because the default candidate is always part of the measured shortlist,
+//! tuned ≥ default up to measurement noise; the interesting output is *how
+//! much* headroom the heuristic leaves on each shape.
+
+use brgemm_dl::autotune::space::apply_conv;
+use brgemm_dl::autotune::{tuner, TuneOpts, TuningCache};
+use brgemm_dl::coordinator::resnet::RESNET50_LAYERS;
+use brgemm_dl::perfmodel;
+use brgemm_dl::primitives::conv::ConvPrimitive;
+use brgemm_dl::tensor::layout;
+use brgemm_dl::util::bench::{black_box, Opts, Table};
+use brgemm_dl::util::rng::Rng;
+
+fn main() {
+    let opts = Opts::from_env();
+    let peak = perfmodel::host_peak_gflops();
+    let mut table = Table::with_peak("Ablation — autotuned vs seed-default blockings", peak);
+    std::fs::create_dir_all("bench_results").ok();
+    let mut cache = TuningCache::at("bench_results/tuning_cache.json");
+    let topts = TuneOpts { top_k: 10, bench: Opts::quick(), train: false };
+    let mut rng = Rng::new(1);
+
+    // A spread of Table-2 shapes: 1×1 with small and large K, and 3×3.
+    let ids = [3usize, 4, 9, 13];
+    let mut speedups = Vec::new();
+    for layer in RESNET50_LAYERS.iter().filter(|l| ids.contains(&l.id)) {
+        let cfg = layer.conv_config(1, 1);
+        let rep = tuner::tune_conv_cached(&cfg, &topts, &mut cache);
+        let tuned_cfg = apply_conv(cfg, &rep.best().cand);
+
+        let x = rng.vec_f32(cfg.n * cfg.c * cfg.h * cfg.w, -1.0, 1.0);
+        let w = rng.vec_f32(cfg.weights_len(), -0.3, 0.3);
+        for (impl_name, c) in [("default", cfg), ("tuned", tuned_cfg)] {
+            let prim = ConvPrimitive::new(c);
+            let xp = layout::pack_conv_act(&x, c.n, c.c, c.h, c.w, c.bc, c.pad, c.pad);
+            let wp = layout::pack_conv_weights(&w, c.k, c.c, c.r, c.s, c.bk, c.bc);
+            let mut y = vec![0.0f32; c.output_len()];
+            table.case(&layer.label(), impl_name, cfg.flops(), opts, || {
+                prim.forward(&xp, &wp, None, &mut y);
+                black_box(&y);
+            });
+        }
+        let rows = &table.rows[table.rows.len() - 2..];
+        let sp = rows[0].time.min / rows[1].time.min;
+        speedups.push((layer.label(), rep.best().cand.label(rep.kind), sp));
+    }
+
+    println!("{}", table.render());
+    println!("tuned blocking per layer (winner of the ranked candidate table):");
+    for (label, cand, sp) in &speedups {
+        println!("  {:<28} {:<34} {:>6.2}x vs default", label, cand, sp);
+    }
+    match cache.save() {
+        Ok(p) => println!("tuning cache persisted to {}", p.display()),
+        Err(e) => println!("cache save failed: {}", e),
+    }
+    std::fs::write("bench_results/abl02.json", table.to_json().to_string_pretty()).ok();
+}

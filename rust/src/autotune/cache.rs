@@ -1,0 +1,351 @@
+//! Persistent tuning cache: maps (primitive, problem shape, ISA, thread
+//! count) → the winning [`Candidate`] of a past tuning run, stored as JSON
+//! (via [`crate::util::json`]) so results survive across processes.
+//!
+//! Lookup is exact-key: a cache entry only ever applies to the identical
+//! shape it was tuned for, on the same ISA, at the same thread count — so
+//! applying an entry can never violate a divisibility constraint (the
+//! `with_blocking` rounding is a belt-and-braces no-op on hits).
+//!
+//! The process-wide [`TuningCache::global`] instance is what the
+//! `tuned()` primitive constructors consult; it is loaded once from
+//! [`TuningCache::default_path`] (`$BRGEMM_TUNE_CACHE` or
+//! `tuning_cache.json`).
+
+use crate::autotune::space::{order_name, order_parse, Candidate};
+use crate::brgemm::Isa;
+use crate::primitives::conv::ConvConfig;
+use crate::primitives::fc::FcConfig;
+use crate::primitives::lstm::LstmConfig;
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+/// Cache-key components; [`TuneKey::id`] is the canonical string form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TuneKey {
+    pub primitive: String,
+    pub shape: String,
+    pub isa: String,
+    pub nthreads: usize,
+}
+
+impl TuneKey {
+    pub fn id(&self) -> String {
+        format!("{}|{}|isa={}|t={}", self.primitive, self.shape, self.isa, self.nthreads)
+    }
+}
+
+/// Key for a convolution shape (detected ISA).
+pub fn conv_key(cfg: &ConvConfig) -> TuneKey {
+    TuneKey {
+        primitive: "conv".to_string(),
+        shape: format!(
+            "n{} c{} k{} h{} w{} r{} s{} st{} p{}",
+            cfg.n, cfg.c, cfg.k, cfg.h, cfg.w, cfg.r, cfg.s, cfg.stride, cfg.pad
+        ),
+        isa: Isa::detect().name().to_string(),
+        nthreads: cfg.nthreads,
+    }
+}
+
+/// Key for an FC shape. The activation is irrelevant to blocking choice
+/// and is deliberately excluded.
+pub fn fc_key(cfg: &FcConfig) -> TuneKey {
+    TuneKey {
+        primitive: "fc".to_string(),
+        shape: format!("n{} c{} k{}", cfg.n, cfg.c, cfg.k),
+        isa: Isa::detect().name().to_string(),
+        nthreads: cfg.nthreads,
+    }
+}
+
+/// Key for an LSTM cell shape. Blockings do not depend on the sequence
+/// length, so `t` is excluded and entries generalise across it.
+pub fn lstm_key(cfg: &LstmConfig) -> TuneKey {
+    TuneKey {
+        primitive: "lstm".to_string(),
+        shape: format!("n{} c{} k{}", cfg.n, cfg.c, cfg.k),
+        isa: Isa::detect().name().to_string(),
+        nthreads: cfg.nthreads,
+    }
+}
+
+/// A cached tuning winner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneEntry {
+    pub cand: Candidate,
+    /// Measured GFLOPS of the winner when it was tuned.
+    pub gflops: f64,
+    /// The analytic model's GFLOPS estimate at tuning time (kept so cache
+    /// files document how far off the model was).
+    pub model_gflops: f64,
+}
+
+impl TuneEntry {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("bn", self.cand.bn.into()),
+            ("bc", self.cand.bc.into()),
+            ("bk", self.cand.bk.into()),
+            ("bq", self.cand.bq.into()),
+            ("flat_bq", self.cand.flat_bq.into()),
+            ("order", order_name(self.cand.order).into()),
+            ("fwd_strided", self.cand.fwd_strided.into()),
+            ("upd_transpose", self.cand.upd_transpose.into()),
+            ("gflops", self.gflops.into()),
+            ("model_gflops", self.model_gflops.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TuneEntry> {
+        let get = |k: &str| j.get(k).and_then(Json::as_usize);
+        Some(TuneEntry {
+            cand: Candidate {
+                bn: get("bn")?.max(1),
+                bc: get("bc")?.max(1),
+                bk: get("bk")?.max(1),
+                bq: get("bq")?.max(1),
+                flat_bq: get("flat_bq").unwrap_or(0),
+                order: j.get("order").and_then(Json::as_str).and_then(order_parse),
+                fwd_strided: j.get("fwd_strided").and_then(Json::as_bool).unwrap_or(false),
+                upd_transpose: j.get("upd_transpose").and_then(Json::as_bool).unwrap_or(false),
+            },
+            gflops: j.get("gflops").and_then(Json::as_f64).unwrap_or(0.0),
+            model_gflops: j.get("model_gflops").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+const FORMAT_VERSION: usize = 1;
+
+/// The cache: a keyed map of winners plus the file it persists to.
+#[derive(Debug)]
+pub struct TuningCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, TuneEntry>,
+}
+
+impl TuningCache {
+    /// In-memory cache with no backing file (`save` is a no-op error).
+    pub fn empty() -> TuningCache {
+        TuningCache { path: None, entries: BTreeMap::new() }
+    }
+
+    /// Cache backed by `path`; loads existing contents if the file exists.
+    /// Unreadable or malformed files are treated as empty (a tuning cache
+    /// is always regenerable), with a warning on stderr.
+    pub fn at(path: impl Into<PathBuf>) -> TuningCache {
+        let path = path.into();
+        let entries = match std::fs::read_to_string(&path) {
+            Err(e) => {
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    // A cache that exists but cannot be read must not be
+                    // silently treated as empty: a later save() would
+                    // replace it and drop every previously tuned winner.
+                    crate::log_warn!(
+                        "tuning cache {} unreadable ({}); starting empty — a save will overwrite it",
+                        path.display(),
+                        e
+                    );
+                }
+                BTreeMap::new()
+            }
+            Ok(text) => match Self::entries_from_json_text(&text) {
+                Ok(e) => e,
+                Err(why) => {
+                    crate::log_warn!(
+                        "ignoring malformed tuning cache {}: {}",
+                        path.display(),
+                        why
+                    );
+                    BTreeMap::new()
+                }
+            },
+        };
+        TuningCache { path: Some(path), entries }
+    }
+
+    /// `$BRGEMM_TUNE_CACHE` or `tuning_cache.json` in the working dir.
+    pub fn default_path() -> PathBuf {
+        std::env::var("BRGEMM_TUNE_CACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("tuning_cache.json"))
+    }
+
+    pub fn load_default() -> TuningCache {
+        TuningCache::at(TuningCache::default_path())
+    }
+
+    /// The process-wide cache consulted by the `tuned()` constructors.
+    pub fn global() -> &'static Mutex<TuningCache> {
+        static GLOBAL: OnceLock<Mutex<TuningCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Mutex::new(TuningCache::load_default()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn get(&self, key: &TuneKey) -> Option<&TuneEntry> {
+        self.entries.get(&key.id())
+    }
+
+    pub fn put(&mut self, key: &TuneKey, entry: TuneEntry) {
+        self.entries.insert(key.id(), entry);
+    }
+
+    /// Drop an entry (used to invalidate a shape, and by tests to
+    /// guarantee a miss regardless of any cache file in the working dir).
+    pub fn remove(&mut self, key: &TuneKey) -> Option<TuneEntry> {
+        self.entries.remove(&key.id())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: BTreeMap<String, Json> =
+            self.entries.iter().map(|(k, e)| (k.clone(), e.to_json())).collect();
+        obj([("version", FORMAT_VERSION.into()), ("entries", Json::Obj(entries))])
+    }
+
+    fn entries_from_json_text(text: &str) -> Result<BTreeMap<String, TuneEntry>, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| "missing 'entries' object".to_string())?;
+        let mut out = BTreeMap::new();
+        for (k, v) in entries {
+            match TuneEntry::from_json(v) {
+                Some(e) => {
+                    out.insert(k.clone(), e);
+                }
+                None => return Err(format!("malformed entry '{}'", k)),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Write to the backing file (via a temp file + rename, so a crashed
+    /// writer never leaves a torn cache). Returns the path written.
+    pub fn save(&self) -> std::io::Result<PathBuf> {
+        let path = self.path.clone().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput, "cache has no backing file")
+        })?;
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::eltwise::Act;
+    use crate::primitives::partition::Strategy;
+
+    fn sample_entry() -> TuneEntry {
+        TuneEntry {
+            cand: Candidate {
+                bn: 24,
+                bc: 64,
+                bk: 32,
+                bq: 28,
+                flat_bq: 64,
+                order: Some(Strategy::FeatureFirst),
+                fwd_strided: true,
+                upd_transpose: false,
+            },
+            gflops: 123.4,
+            model_gflops: 150.0,
+        }
+    }
+
+    #[test]
+    fn entry_round_trips_through_json() {
+        let e = sample_entry();
+        let j = e.to_json().to_string_compact();
+        let back = TuneEntry::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn cache_round_trips_through_file() {
+        let dir = std::env::temp_dir().join("brgemm_dl_tune_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache_roundtrip.json");
+        std::fs::remove_file(&path).ok();
+
+        let key = TuneKey {
+            primitive: "conv".into(),
+            shape: "n1 c64 k64 h56 w56 r1 s1 st1 p0".into(),
+            isa: "avx512".into(),
+            nthreads: 1,
+        };
+        let mut cache = TuningCache::at(&path);
+        assert!(cache.is_empty(), "fresh cache starts empty");
+        cache.put(&key, sample_entry());
+        let written = cache.save().unwrap();
+        assert_eq!(written, path);
+
+        let reloaded = TuningCache::at(&path);
+        assert_eq!(reloaded.len(), 1);
+        assert_eq!(reloaded.get(&key).unwrap(), &sample_entry());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cache_hit_requires_exact_key() {
+        let mut cache = TuningCache::empty();
+        let cfg = ConvConfig::new(1, 64, 64, 56, 56, 1, 1, 1, 0);
+        let key = conv_key(&cfg);
+        cache.put(&key, sample_entry());
+        assert!(cache.get(&key).is_some(), "same shape hits");
+        // Different thread count → miss.
+        assert!(cache.get(&conv_key(&cfg.with_threads(2))).is_none());
+        // Different shape → miss.
+        assert!(cache.get(&conv_key(&ConvConfig::new(1, 64, 64, 28, 28, 1, 1, 1, 0))).is_none());
+        // Different primitive with a same-ish shape string → miss.
+        let fkey = fc_key(&FcConfig::new(1, 64, 64, Act::Relu));
+        assert!(cache.get(&fkey).is_none());
+    }
+
+    #[test]
+    fn lstm_key_ignores_sequence_length() {
+        let a = lstm_key(&LstmConfig::new(16, 64, 64, 4));
+        let b = lstm_key(&LstmConfig::new(16, 64, 64, 32));
+        assert_eq!(a.id(), b.id());
+    }
+
+    #[test]
+    fn malformed_cache_files_are_tolerated() {
+        let dir = std::env::temp_dir().join("brgemm_dl_tune_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache_malformed.json");
+        std::fs::write(&path, "this is not json").unwrap();
+        let cache = TuningCache::at(&path);
+        assert!(cache.is_empty(), "garbage file must load as empty, not panic");
+        std::fs::write(&path, r#"{"version":1}"#).unwrap();
+        assert!(TuningCache::at(&path).is_empty(), "missing entries key tolerated");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_cache_save_errors_cleanly() {
+        let mut cache = TuningCache::empty();
+        cache.put(
+            &TuneKey { primitive: "fc".into(), shape: "x".into(), isa: "scalar".into(), nthreads: 1 },
+            sample_entry(),
+        );
+        assert!(cache.save().is_err(), "no backing file → explicit error");
+    }
+}

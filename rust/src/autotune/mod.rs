@@ -1,0 +1,145 @@
+//! Autotuner: cost-model-guided loop/blocking search with a persistent
+//! tuning cache.
+//!
+//! The paper's closing argument is that once BRGEMM is the sole optimized
+//! kernel, "DL library-development degenerates to mere (potentially
+//! automatic) tuning of loops" around it. This subsystem is that automatic
+//! tuning, in the PolyDL / PolyScientist shape (arXiv 2006.02230,
+//! 2002.02145): an analytic model prunes the transformation space, and
+//! empirical measurement picks the winner among the survivors.
+//!
+//! Pipeline, one module per stage:
+//!
+//! * [`space`] — generate the candidate set for a problem shape: block
+//!   factors (`bc`/`bk`/`bn`/`bq`), loop orders, and BRGEMM variants
+//!   (address-list vs. strided forward, in-place `a_kstride` vs. physical
+//!   transpose update, spatial collapse strips), under divisibility and
+//!   cache-footprint constraints.
+//! * [`costmodel`] — score candidates analytically on [`crate::perfmodel`]
+//!   primitives (microkernel register-tile fill × roofline traffic with an
+//!   L2 weight-reuse refinement) so only a shortlist is ever measured.
+//! * [`tuner`] — measure the shortlist through [`crate::util::bench`],
+//!   rank empirically, report a candidate table.
+//! * [`cache`] — persist winners as JSON keyed by problem shape + ISA +
+//!   thread count; loaded process-wide once, consulted by the `tuned()`
+//!   constructors ([`ConvPrimitive::tuned`](crate::primitives::conv::ConvPrimitive::tuned),
+//!   [`FcPrimitive::tuned`](crate::primitives::fc::FcPrimitive::tuned),
+//!   [`LstmPrimitive::tuned`](crate::primitives::lstm::LstmPrimitive::tuned)).
+//!
+//! End-to-end entry points: the `tune` CLI subcommand populates the cache;
+//! `RunConfig { tune: true }` tunes a training run's layer shapes before
+//! the first step; the `abl02_autotune` bench quantifies tuned vs. default
+//! blockings on ResNet-50 layer shapes.
+
+pub mod cache;
+pub mod costmodel;
+pub mod space;
+pub mod tuner;
+
+pub use cache::{TuneEntry, TuneKey, TuningCache};
+pub use costmodel::{Cost, CostModel};
+pub use space::{Candidate, PrimKind, TuningSpace};
+pub use tuner::{TuneOpts, TuneReport};
+
+use crate::primitives::conv::ConvConfig;
+use crate::primitives::fc::FcConfig;
+use crate::primitives::lstm::LstmConfig;
+
+/// Apply the globally cached winner for this conv shape, if any.
+/// Exact-key lookup means a hit always satisfies the shape's divisibility
+/// constraints; a miss returns the config unchanged.
+pub fn tuned_conv_config(cfg: ConvConfig) -> ConvConfig {
+    let key = cache::conv_key(&cfg);
+    let hit = TuningCache::global().lock().unwrap().get(&key).map(|e| e.cand);
+    match hit {
+        Some(cand) => space::apply_conv(cfg, &cand),
+        None => cfg,
+    }
+}
+
+/// Apply the globally cached winner for this FC shape, if any.
+pub fn tuned_fc_config(cfg: FcConfig) -> FcConfig {
+    let key = cache::fc_key(&cfg);
+    let hit = TuningCache::global().lock().unwrap().get(&key).map(|e| e.cand);
+    match hit {
+        Some(cand) => space::apply_fc(cfg, &cand),
+        None => cfg,
+    }
+}
+
+/// Apply the globally cached winner for this LSTM cell shape, if any.
+pub fn tuned_lstm_config(cfg: LstmConfig) -> LstmConfig {
+    let key = cache::lstm_key(&cfg);
+    let hit = TuningCache::global().lock().unwrap().get(&key).map(|e| e.cand);
+    match hit {
+        Some(cand) => space::apply_lstm(cfg, &cand),
+        None => cfg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::conv::ConvPrimitive;
+    use crate::primitives::eltwise::Act;
+    use crate::primitives::fc::FcPrimitive;
+
+    // These tests share the process-global cache with each other (tests
+    // run concurrently), so each uses a shape no other test touches.
+
+    #[test]
+    fn tuned_constructors_are_identity_on_cache_miss() {
+        let cfg = ConvConfig::new(1, 10, 10, 9, 9, 3, 3, 1, 1);
+        // Force a miss: the global cache may have loaded a tuning_cache.json
+        // from the working directory.
+        TuningCache::global().lock().unwrap().remove(&cache::conv_key(&cfg));
+        let tuned = tuned_conv_config(cfg);
+        assert_eq!((tuned.bc, tuned.bk, tuned.bq), (cfg.bc, cfg.bk, cfg.bq));
+        let prim = ConvPrimitive::tuned(cfg); // must construct fine
+        assert_eq!(prim.cfg.bc, cfg.bc);
+    }
+
+    #[test]
+    fn tuned_constructor_applies_cached_entry() {
+        let cfg = ConvConfig::new(1, 20, 20, 11, 11, 3, 3, 1, 1); // unique shape
+        let key = cache::conv_key(&cfg);
+        let cand = Candidate { bc: 10, bk: 5, bq: 11, ..cache_neutral() };
+        TuningCache::global()
+            .lock()
+            .unwrap()
+            .put(&key, TuneEntry { cand, gflops: 1.0, model_gflops: 1.0 });
+        let prim = ConvPrimitive::tuned(cfg);
+        assert_eq!((prim.cfg.bc, prim.cfg.bk, prim.cfg.bq), (10, 5, 11));
+    }
+
+    #[test]
+    fn tuned_fc_applies_variants() {
+        let cfg = FcConfig::new(14, 21, 35, Act::Relu); // unique shape
+        let key = cache::fc_key(&cfg);
+        let cand =
+            Candidate { bn: 7, bc: 21, bk: 35, fwd_strided: true, ..cache_neutral() };
+        TuningCache::global()
+            .lock()
+            .unwrap()
+            .put(&key, TuneEntry { cand, gflops: 1.0, model_gflops: 1.0 });
+        let tuned = tuned_fc_config(cfg);
+        assert_eq!((tuned.bn, tuned.bc, tuned.bk), (7, 21, 35));
+        assert!(tuned.fwd_strided);
+        // And the primitive constructs + runs with it.
+        let prim = FcPrimitive::tuned(cfg);
+        assert!(prim.cfg.fwd_strided);
+    }
+
+    fn cache_neutral() -> Candidate {
+        Candidate {
+            bn: 1,
+            bc: 1,
+            bk: 1,
+            bq: 1,
+            flat_bq: 0,
+            order: None,
+            fwd_strided: false,
+            upd_transpose: false,
+        }
+    }
+}

@@ -1,0 +1,452 @@
+//! Tuning spaces: the candidate blockings / loop orders / kernel variants
+//! the tuner considers for one problem shape.
+//!
+//! Candidates are generated from the shape under two hard constraints:
+//!
+//! * **divisibility** — every block factor divides its dimension (the
+//!   packed layouts require it; enforced here *and* re-checked by the
+//!   config `validate()` when a candidate is applied), and
+//! * **footprint** — the per-call BRGEMM tile set (A strip + B panel + C
+//!   accumulator block) must fit in L2; candidates that can never be
+//!   cache-resident are not worth measuring.
+//!
+//! The spaces stay deliberately small (tens of candidates, not thousands):
+//! block factors are drawn from divisors nearest the microkernel-friendly
+//! targets rather than from all divisors, mirroring how PolyDL-style
+//! systems sample the transformation space before the cost model ranks it.
+
+use crate::perfmodel::CacheModel;
+use crate::primitives::conv::{ConvConfig, FlatSpatial};
+use crate::primitives::fc::FcConfig;
+use crate::primitives::lstm::LstmConfig;
+use crate::primitives::partition::Strategy;
+
+pub use crate::util::num::largest_divisor_le;
+
+/// Divisors of `dim` nearest (from below) to each target, deduplicated and
+/// ascending — the per-dimension candidate set.
+pub fn divisors_near(dim: usize, targets: &[usize]) -> Vec<usize> {
+    let mut out: Vec<usize> = targets.iter().map(|&t| largest_divisor_le(dim, t)).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Which primitive a space / cache entry belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimKind {
+    Conv,
+    Fc,
+    Lstm,
+}
+
+impl PrimKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PrimKind::Conv => "conv",
+            PrimKind::Fc => "fc",
+            PrimKind::Lstm => "lstm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PrimKind> {
+        match s {
+            "conv" => Some(PrimKind::Conv),
+            "fc" => Some(PrimKind::Fc),
+            "lstm" => Some(PrimKind::Lstm),
+            _ => None,
+        }
+    }
+}
+
+/// One point of a tuning space. A single struct covers all primitives;
+/// fields that do not apply are held at their neutral value (`bn`/`bq` = 1
+/// resp. unused, `flat_bq` = 0, flags = false).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    /// Mini-batch block (FC / LSTM).
+    pub bn: usize,
+    /// Input-feature block.
+    pub bc: usize,
+    /// Output-feature block.
+    pub bk: usize,
+    /// Output-pixel strip (conv).
+    pub bq: usize,
+    /// Spatially-collapsed pixel strip for eligible 1×1 convs; 0 = the
+    /// collapse is disabled for this candidate.
+    pub flat_bq: usize,
+    /// Forward loop order / thread partition; `None` = shape heuristic.
+    pub order: Option<Strategy>,
+    /// FC forward through the strided BRGEMM variant.
+    pub fwd_strided: bool,
+    /// FC weight update through a physical transpose instead of the
+    /// in-place `a_kstride` read.
+    pub upd_transpose: bool,
+}
+
+impl Candidate {
+    fn neutral() -> Candidate {
+        Candidate {
+            bn: 1,
+            bc: 1,
+            bk: 1,
+            bq: 1,
+            flat_bq: 0,
+            order: None,
+            fwd_strided: false,
+            upd_transpose: false,
+        }
+    }
+
+    /// Compact human-readable form for tables and logs.
+    pub fn label(&self, kind: PrimKind) -> String {
+        let mut s = match kind {
+            PrimKind::Conv => format!("bc{} bk{} bq{}", self.bc, self.bk, self.bq),
+            PrimKind::Fc | PrimKind::Lstm => {
+                format!("bn{} bc{} bk{}", self.bn, self.bc, self.bk)
+            }
+        };
+        if self.flat_bq > 0 {
+            s.push_str(&format!(" flat{}", self.flat_bq));
+        }
+        if let Some(o) = self.order {
+            s.push_str(match o {
+                Strategy::MinibatchFirst => " ord=mb",
+                Strategy::FeatureFirst => " ord=feat",
+                Strategy::Flat => " ord=flat",
+            });
+        }
+        if self.fwd_strided {
+            s.push_str(" strided");
+        }
+        if self.upd_transpose {
+            s.push_str(" updT");
+        }
+        s
+    }
+}
+
+/// Serialise a loop-order choice for the JSON cache.
+pub fn order_name(o: Option<Strategy>) -> &'static str {
+    match o {
+        None => "auto",
+        Some(Strategy::MinibatchFirst) => "minibatch",
+        Some(Strategy::FeatureFirst) => "feature",
+        Some(Strategy::Flat) => "flat",
+    }
+}
+
+/// Inverse of [`order_name`]; unknown strings fall back to `auto`.
+pub fn order_parse(s: &str) -> Option<Strategy> {
+    match s {
+        "minibatch" => Some(Strategy::MinibatchFirst),
+        "feature" => Some(Strategy::FeatureFirst),
+        "flat" => Some(Strategy::Flat),
+        _ => None,
+    }
+}
+
+/// A generated candidate set for one problem shape.
+#[derive(Debug, Clone)]
+pub struct TuningSpace {
+    pub kind: PrimKind,
+    /// The candidate reproducing the config-default blocking (always a
+    /// member of `candidates`, so "tuned" can never regress below it
+    /// without the regression being visible in the ranked table).
+    pub default: Candidate,
+    pub candidates: Vec<Candidate>,
+}
+
+/// Per-call BRGEMM tile footprint in bytes: one A strip, one B panel and
+/// the C accumulator block of a single k-step through the chain.
+pub fn tile_footprint_bytes(m: usize, n: usize, k: usize) -> usize {
+    (m * k + k * n + m * n) * 4
+}
+
+/// The candidate reproducing `cfg`'s *current* behaviour — including its
+/// flat mode and loop-order override, so the tuner's "vs-default" baseline
+/// is what this exact config would run, not a hardcoded assumption.
+fn default_conv_candidate(cfg: &ConvConfig) -> Candidate {
+    let pq = cfg.p() * cfg.q();
+    let flat_bq = if conv_flat_legal(cfg) {
+        match cfg.flat {
+            FlatSpatial::Off => 0,
+            FlatSpatial::Strip(s) => largest_divisor_le(pq, s.max(1)),
+            FlatSpatial::Auto => largest_divisor_le(pq, 64),
+        }
+    } else {
+        0
+    };
+    Candidate {
+        bc: cfg.bc,
+        bk: cfg.bk,
+        bq: cfg.bq,
+        flat_bq,
+        order: cfg.par_strategy,
+        ..Candidate::neutral()
+    }
+}
+
+fn conv_flat_legal(cfg: &ConvConfig) -> bool {
+    cfg.r == 1 && cfg.s == 1 && cfg.stride == 1 && cfg.pad == 0
+}
+
+/// Candidate blockings for a convolution shape.
+pub fn conv_space(cfg: &ConvConfig) -> TuningSpace {
+    let caches = CacheModel::host_default();
+    let q = cfg.q();
+    let pq = cfg.p() * q;
+    let bcs = divisors_near(cfg.c, &[16, 32, 64, 128]);
+    let bks = divisors_near(cfg.k, &[16, 32, 64, 128]);
+    let bqs = divisors_near(q, &[8, 14, 28, 64, q]);
+    let flats: Vec<usize> =
+        if conv_flat_legal(cfg) { divisors_near(pq, &[32, 64, 128]) } else { Vec::new() };
+    let orders: &[Option<Strategy>] = &[None, Some(Strategy::FeatureFirst)];
+
+    let mut candidates = Vec::new();
+    for &bc in &bcs {
+        for &bk in &bks {
+            for &order in orders {
+                // Tap-loop candidates: explore the bq strip axis.
+                // Footprint: the kernel works on (bq×bc)·(bc×bk) tiles.
+                for &bq in &bqs {
+                    if tile_footprint_bytes(bq, bk, bc) > caches.l2_bytes {
+                        continue;
+                    }
+                    candidates.push(Candidate { bc, bk, bq, order, ..Candidate::neutral() });
+                }
+                // Spatially-collapsed candidates: the flat path never reads
+                // `bq`, so it is pinned to the config default — otherwise
+                // every flat strip would appear |bqs| times with identical
+                // behaviour and crowd the measurement shortlist with ties.
+                for &flat_bq in &flats {
+                    if tile_footprint_bytes(flat_bq, bk, bc) > caches.l2_bytes {
+                        continue;
+                    }
+                    candidates.push(Candidate {
+                        bc,
+                        bk,
+                        bq: cfg.bq,
+                        flat_bq,
+                        order,
+                        ..Candidate::neutral()
+                    });
+                }
+            }
+        }
+    }
+    let default = default_conv_candidate(cfg);
+    if !candidates.contains(&default) {
+        candidates.push(default);
+    }
+    TuningSpace { kind: PrimKind::Conv, default, candidates }
+}
+
+/// Apply a conv candidate to a config (blocking, flat mode, loop order).
+pub fn apply_conv(cfg: ConvConfig, cand: &Candidate) -> ConvConfig {
+    let mut cfg = cfg.with_blocking(cand.bc, cand.bk, cand.bq);
+    cfg.flat = if cand.flat_bq > 0 { FlatSpatial::Strip(cand.flat_bq) } else { FlatSpatial::Off };
+    cfg.par_strategy = cand.order;
+    cfg
+}
+
+fn default_fc_candidate(cfg: &FcConfig) -> Candidate {
+    Candidate {
+        bn: cfg.bn,
+        bc: cfg.bc,
+        bk: cfg.bk,
+        order: cfg.par_strategy,
+        fwd_strided: cfg.fwd_strided,
+        upd_transpose: cfg.upd_transpose,
+        ..Candidate::neutral()
+    }
+}
+
+/// Candidate blockings for an FC shape. With `train` the weight-update
+/// variant axis (`upd_transpose`) is included; for inference-only tuning
+/// it would only duplicate forward measurements.
+pub fn fc_space(cfg: &FcConfig, train: bool) -> TuningSpace {
+    let caches = CacheModel::host_default();
+    let bns = divisors_near(cfg.n, &[8, 16, 24, 32, 64]);
+    let bcs = divisors_near(cfg.c, &[16, 32, 64, 128]);
+    let bks = divisors_near(cfg.k, &[16, 32, 64, 128]);
+    let upds: &[bool] = if train { &[false, true] } else { &[false] };
+    let mut candidates = Vec::new();
+    for &bn in &bns {
+        for &bc in &bcs {
+            for &bk in &bks {
+                if tile_footprint_bytes(bn, bk, bc) > caches.l2_bytes {
+                    continue;
+                }
+                for &fwd_strided in &[false, true] {
+                    for &upd_transpose in upds {
+                        candidates.push(Candidate {
+                            bn,
+                            bc,
+                            bk,
+                            fwd_strided,
+                            upd_transpose,
+                            ..Candidate::neutral()
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let default = default_fc_candidate(cfg);
+    if !candidates.contains(&default) {
+        candidates.push(default);
+    }
+    TuningSpace { kind: PrimKind::Fc, default, candidates }
+}
+
+/// Apply an FC candidate to a config.
+pub fn apply_fc(cfg: FcConfig, cand: &Candidate) -> FcConfig {
+    let mut cfg = cfg
+        .with_blocking(cand.bn, cand.bc, cand.bk)
+        .with_fwd_strided(cand.fwd_strided)
+        .with_upd_transpose(cand.upd_transpose);
+    cfg.par_strategy = cand.order;
+    cfg
+}
+
+fn default_lstm_candidate(cfg: &LstmConfig) -> Candidate {
+    Candidate { bn: cfg.bn, bc: cfg.bc, bk: cfg.bk, ..Candidate::neutral() }
+}
+
+/// Candidate blockings for an LSTM cell shape (the W·x and R·h chains
+/// share `bn`/`bk`; `bc` only shapes the W·x chain).
+pub fn lstm_space(cfg: &LstmConfig) -> TuningSpace {
+    let caches = CacheModel::host_default();
+    let bns = divisors_near(cfg.n, &[8, 16, 24, 32]);
+    let bcs = divisors_near(cfg.c, &[16, 32, 64]);
+    let bks = divisors_near(cfg.k, &[16, 32, 64]);
+    let mut candidates = Vec::new();
+    for &bn in &bns {
+        for &bc in &bcs {
+            for &bk in &bks {
+                // Both chains must fit: W·x tiles (bn×bc→bk) and R·h
+                // tiles (bn×bk→bk).
+                if tile_footprint_bytes(bn, bk, bc.max(bk)) > caches.l2_bytes {
+                    continue;
+                }
+                candidates.push(Candidate { bn, bc, bk, ..Candidate::neutral() });
+            }
+        }
+    }
+    let default = default_lstm_candidate(cfg);
+    if !candidates.contains(&default) {
+        candidates.push(default);
+    }
+    TuningSpace { kind: PrimKind::Lstm, default, candidates }
+}
+
+/// Apply an LSTM candidate to a config.
+pub fn apply_lstm(cfg: LstmConfig, cand: &Candidate) -> LstmConfig {
+    cfg.with_blocking(cand.bn, cand.bc, cand.bk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::eltwise::Act;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn divisor_helpers() {
+        assert_eq!(largest_divisor_le(64, 48), 32);
+        assert_eq!(largest_divisor_le(64, 64), 64);
+        assert_eq!(largest_divisor_le(64, 1000), 64);
+        assert_eq!(largest_divisor_le(7, 4), 1);
+        assert_eq!(divisors_near(56, &[8, 14, 28, 64, 56]), vec![8, 14, 28, 56]);
+    }
+
+    #[test]
+    fn conv_space_contains_default_and_is_bounded() {
+        let cfg = ConvConfig::new(1, 64, 256, 56, 56, 1, 1, 1, 0);
+        let space = conv_space(&cfg);
+        assert!(space.candidates.contains(&space.default));
+        assert!(!space.candidates.is_empty());
+        assert!(space.candidates.len() < 2000, "space exploded: {}", space.candidates.len());
+        // 1×1/s1/p0 must offer both flat and non-flat candidates.
+        assert!(space.candidates.iter().any(|c| c.flat_bq > 0));
+        assert!(space.candidates.iter().any(|c| c.flat_bq == 0));
+    }
+
+    #[test]
+    fn non_1x1_space_has_no_flat_candidates() {
+        let cfg = ConvConfig::new(1, 64, 64, 28, 28, 3, 3, 1, 1);
+        let space = conv_space(&cfg);
+        assert!(space.candidates.iter().all(|c| c.flat_bq == 0));
+    }
+
+    #[test]
+    fn applying_candidates_round_trips_exactly() {
+        // Candidates are exact divisors, so with_blocking's rounding must
+        // be the identity when applying them.
+        let cfg = ConvConfig::new(2, 48, 96, 14, 14, 3, 3, 1, 1);
+        for cand in &conv_space(&cfg).candidates {
+            let applied = apply_conv(cfg, cand);
+            assert_eq!((applied.bc, applied.bk, applied.bq), (cand.bc, cand.bk, cand.bq));
+        }
+        let fcfg = FcConfig::new(24, 48, 96, Act::Relu);
+        for cand in &fc_space(&fcfg, true).candidates {
+            let applied = apply_fc(fcfg, cand);
+            assert_eq!((applied.bn, applied.bc, applied.bk), (cand.bn, cand.bc, cand.bk));
+            assert_eq!(applied.fwd_strided, cand.fwd_strided);
+            assert_eq!(applied.upd_transpose, cand.upd_transpose);
+        }
+    }
+
+    #[test]
+    fn order_names_round_trip() {
+        for o in [
+            None,
+            Some(Strategy::MinibatchFirst),
+            Some(Strategy::FeatureFirst),
+            Some(Strategy::Flat),
+        ] {
+            assert_eq!(order_parse(order_name(o)), o);
+        }
+        assert_eq!(order_parse("garbage"), None);
+    }
+
+    #[test]
+    fn property_every_candidate_satisfies_divisibility() {
+        Prop::new("tuning-space candidates divide their dimensions").cases(40).run(|g| {
+            // Random conv shape.
+            let c = g.usize(1..=16) * g.usize(1..=8);
+            let k = g.usize(1..=16) * g.usize(1..=8);
+            let r = *g.choose(&[1usize, 3]);
+            let pad = if r == 1 { 0 } else { 1 };
+            let h = g.usize(r.max(4)..=30);
+            let w = g.usize(r.max(4)..=30);
+            let cfg = ConvConfig::new(g.usize(1..=4), c, k, h, w, r, r, 1, pad);
+            let space = conv_space(&cfg);
+            for cand in &space.candidates {
+                if cfg.c % cand.bc != 0 || cfg.k % cand.bk != 0 || cfg.q() % cand.bq != 0 {
+                    return Err(format!("conv cand {:?} violates divisibility for {:?}", cand, cfg));
+                }
+                if cand.flat_bq > 0 && (cfg.p() * cfg.q()) % cand.flat_bq != 0 {
+                    return Err(format!("conv cand {:?}: flat strip ∤ P·Q", cand));
+                }
+            }
+            // Random FC shape.
+            let n = g.usize(1..=8) * g.usize(1..=8);
+            let fcfg = FcConfig::new(n, c, k, Act::Relu);
+            for cand in &fc_space(&fcfg, g.bool()).candidates {
+                if fcfg.n % cand.bn != 0 || fcfg.c % cand.bc != 0 || fcfg.k % cand.bk != 0 {
+                    return Err(format!("fc cand {:?} violates divisibility", cand));
+                }
+            }
+            // Random LSTM shape.
+            let lcfg = LstmConfig::new(n, c, k, 2);
+            for cand in &lstm_space(&lcfg).candidates {
+                if lcfg.n % cand.bn != 0 || lcfg.c % cand.bc != 0 || lcfg.k % cand.bk != 0 {
+                    return Err(format!("lstm cand {:?} violates divisibility", cand));
+                }
+            }
+            Ok(())
+        });
+    }
+}

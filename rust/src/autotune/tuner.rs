@@ -1,0 +1,360 @@
+//! The tuner: prune a [`TuningSpace`](crate::autotune::space::TuningSpace)
+//! with the analytic cost model, measure the shortlist through
+//! [`crate::util::bench::measure`], rank empirically, and (optionally)
+//! persist the winner in a [`TuningCache`].
+//!
+//! The config-default candidate is always force-included in the measured
+//! shortlist, so the ranked table directly answers "did tuning beat the
+//! seed blocking?" and the cached winner is by construction never slower
+//! than the default (up to measurement noise).
+
+use crate::autotune::cache::{conv_key, fc_key, lstm_key, TuneEntry, TuneKey, TuningCache};
+use crate::autotune::costmodel::CostModel;
+use crate::autotune::space::{self, Candidate, PrimKind, TuningSpace};
+use crate::primitives::conv::{ConvConfig, ConvPrimitive};
+use crate::primitives::fc::{FcConfig, FcPrimitive};
+use crate::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
+use crate::tensor::layout;
+use crate::util::bench::{black_box, measure, Opts};
+use crate::util::rng::Rng;
+
+/// Tuning-run options.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOpts {
+    /// How many model-ranked candidates get empirically measured.
+    pub top_k: usize,
+    /// Measurement protocol per candidate.
+    pub bench: Opts,
+    /// For FC: also measure the weight-update pass and rank by the summed
+    /// time (enables the `upd_transpose` axis).
+    pub train: bool,
+}
+
+impl TuneOpts {
+    /// Fast default: enough repetitions to rank clearly separated
+    /// candidates, bounded wall-clock per candidate.
+    pub fn quick() -> TuneOpts {
+        TuneOpts { top_k: 12, bench: Opts::quick(), train: false }
+    }
+
+    /// Thorough protocol for real tuning runs.
+    pub fn full() -> TuneOpts {
+        TuneOpts { top_k: 24, bench: Opts::full(), train: false }
+    }
+
+    pub fn with_train(mut self, train: bool) -> TuneOpts {
+        self.train = train;
+        self
+    }
+
+    pub fn with_top_k(mut self, k: usize) -> TuneOpts {
+        self.top_k = k.max(1);
+        self
+    }
+}
+
+/// One measured candidate in the final ranking.
+#[derive(Debug, Clone, Copy)]
+pub struct Ranked {
+    pub cand: Candidate,
+    /// Analytic estimate (seconds) that earned it a shortlist slot.
+    pub model_secs: f64,
+    /// Measured best-of-N seconds.
+    pub measured_secs: f64,
+    pub gflops: f64,
+}
+
+/// Result of one tuning run.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub key: TuneKey,
+    pub kind: PrimKind,
+    /// Flops of the measured pass (forward; + update when `train`).
+    pub flops: f64,
+    /// Size of the generated space before the model cut.
+    pub space_size: usize,
+    /// Measured candidates, best (highest GFLOPS) first.
+    pub ranked: Vec<Ranked>,
+    /// Measured GFLOPS of the config-default candidate.
+    pub default_gflops: f64,
+}
+
+impl TuneReport {
+    /// The winner (the ranking is never empty: the default candidate is
+    /// always measured).
+    pub fn best(&self) -> &Ranked {
+        &self.ranked[0]
+    }
+
+    /// Winner speedup over the config-default blocking.
+    pub fn speedup_vs_default(&self) -> f64 {
+        if self.default_gflops > 0.0 {
+            self.best().gflops / self.default_gflops
+        } else {
+            1.0
+        }
+    }
+
+    /// Cache entry for the winner.
+    pub fn best_entry(&self) -> TuneEntry {
+        let b = self.best();
+        TuneEntry {
+            cand: b.cand,
+            gflops: b.gflops,
+            model_gflops: if b.model_secs > 0.0 { self.flops / b.model_secs / 1e9 } else { 0.0 },
+        }
+    }
+
+    /// Paper-style ranked candidate table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "\n== tuned {} | {} | {} of {} candidates measured ==\n",
+            self.key.primitive,
+            self.key.shape,
+            self.ranked.len(),
+            self.space_size
+        ));
+        out.push_str(&format!(
+            "{:<4} {:<34} {:>12} {:>12} {:>10}\n",
+            "rank", "candidate", "model GF/s", "meas GF/s", "vs-default"
+        ));
+        for (i, r) in self.ranked.iter().enumerate() {
+            let model_gf = if r.model_secs > 0.0 { self.flops / r.model_secs / 1e9 } else { 0.0 };
+            let rel = if self.default_gflops > 0.0 { r.gflops / self.default_gflops } else { 1.0 };
+            out.push_str(&format!(
+                "{:<4} {:<34} {:>12.2} {:>12.2} {:>9.2}x\n",
+                i + 1,
+                r.cand.label(self.kind),
+                model_gf,
+                r.gflops,
+                rel
+            ));
+        }
+        out.push_str(&format!(
+            "winner: {}  ({:.2} GF/s, {:.2}x default)\n",
+            self.best().cand.label(self.kind),
+            self.best().gflops,
+            self.speedup_vs_default()
+        ));
+        out
+    }
+}
+
+/// Model-rank the space and return the measurement shortlist (always
+/// containing the default candidate).
+fn shortlist(
+    space: &TuningSpace,
+    topts: &TuneOpts,
+    mut model_secs: impl FnMut(&Candidate) -> f64,
+) -> Vec<(Candidate, f64)> {
+    let mut scored: Vec<(Candidate, f64)> =
+        space.candidates.iter().map(|c| (*c, model_secs(c))).collect();
+    scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let mut short: Vec<(Candidate, f64)> = scored.iter().take(topts.top_k).copied().collect();
+    if !short.iter().any(|(c, _)| *c == space.default) {
+        let d = scored.iter().find(|(c, _)| *c == space.default).copied();
+        short.push(d.unwrap_or((space.default, 0.0)));
+    }
+    short
+}
+
+fn rank(
+    kind: PrimKind,
+    key: TuneKey,
+    flops: f64,
+    space_size: usize,
+    default: Candidate,
+    mut measured: Vec<Ranked>,
+) -> TuneReport {
+    measured.sort_by(|a, b| b.gflops.total_cmp(&a.gflops));
+    let default_gflops =
+        measured.iter().find(|r| r.cand == default).map(|r| r.gflops).unwrap_or(0.0);
+    TuneReport { key, kind, flops, space_size, ranked: measured, default_gflops }
+}
+
+/// Tune a convolution shape (forward pass).
+pub fn tune_conv(cfg: &ConvConfig, topts: &TuneOpts) -> TuneReport {
+    let space = space::conv_space(cfg);
+    let model = CostModel::host();
+    let short = shortlist(&space, topts, |c| model.conv_fwd(&space::apply_conv(*cfg, c)).secs());
+
+    let mut rng = Rng::new(0xC0_FFEE);
+    let x = rng.vec_f32(cfg.n * cfg.c * cfg.h * cfg.w, -1.0, 1.0);
+    let w = rng.vec_f32(cfg.weights_len(), -0.3, 0.3);
+    let flops = cfg.flops();
+
+    let measured = short
+        .into_iter()
+        .map(|(cand, model_secs)| {
+            let ccfg = space::apply_conv(*cfg, &cand);
+            let prim = ConvPrimitive::new(ccfg);
+            let xp = layout::pack_conv_act(&x, ccfg.n, ccfg.c, ccfg.h, ccfg.w, ccfg.bc, ccfg.pad, ccfg.pad);
+            let wp = layout::pack_conv_weights(&w, ccfg.k, ccfg.c, ccfg.r, ccfg.s, ccfg.bk, ccfg.bc);
+            let mut y = vec![0.0f32; ccfg.output_len()];
+            let s = measure(topts.bench, || {
+                prim.forward(&xp, &wp, None, &mut y);
+                black_box(&y);
+            });
+            Ranked { cand, model_secs, measured_secs: s.min, gflops: flops / s.min / 1e9 }
+        })
+        .collect();
+    rank(PrimKind::Conv, conv_key(cfg), flops, space.candidates.len(), space.default, measured)
+}
+
+/// Tune an FC shape (forward; + weight update when `opts.train`).
+pub fn tune_fc(cfg: &FcConfig, topts: &TuneOpts) -> TuneReport {
+    let space = space::fc_space(cfg, topts.train);
+    let model = CostModel::host();
+    let short = shortlist(&space, topts, |c| {
+        let ccfg = space::apply_fc(*cfg, c);
+        let mut secs = model.fc_fwd(&ccfg).secs();
+        if topts.train {
+            secs += model.fc_upd(&ccfg).secs();
+        }
+        secs
+    });
+
+    let mut rng = Rng::new(0xF0_0D);
+    let x = rng.vec_f32(cfg.n * cfg.c, -1.0, 1.0);
+    let w = rng.vec_f32(cfg.k * cfg.c, -0.5, 0.5);
+    let bias = rng.vec_f32(cfg.k, -0.1, 0.1);
+    let fwd_flops = cfg.flops();
+    let flops = if topts.train { 2.0 * fwd_flops } else { fwd_flops };
+
+    let measured = short
+        .into_iter()
+        .map(|(cand, model_secs)| {
+            let ccfg = space::apply_fc(*cfg, &cand);
+            let prim = FcPrimitive::new(ccfg);
+            let xp = layout::pack_act_2d(&x, ccfg.n, ccfg.c, ccfg.bn, ccfg.bc);
+            let wp = layout::pack_weights_2d(&w, ccfg.k, ccfg.c, ccfg.bk, ccfg.bc);
+            let mut y = vec![0.0f32; ccfg.n * ccfg.k];
+            let s = if topts.train {
+                let dz = rng.vec_f32(ccfg.n * ccfg.k, -1.0, 1.0);
+                let mut dw = vec![0.0f32; ccfg.k * ccfg.c];
+                let mut db = vec![0.0f32; ccfg.k];
+                measure(topts.bench, || {
+                    prim.forward(&xp, &wp, &bias, &mut y);
+                    prim.update(&xp, &dz, &mut dw, &mut db);
+                    black_box(&y);
+                    black_box(&dw);
+                })
+            } else {
+                measure(topts.bench, || {
+                    prim.forward(&xp, &wp, &bias, &mut y);
+                    black_box(&y);
+                })
+            };
+            Ranked { cand, model_secs, measured_secs: s.min, gflops: flops / s.min / 1e9 }
+        })
+        .collect();
+    rank(PrimKind::Fc, fc_key(cfg), flops, space.candidates.len(), space.default, measured)
+}
+
+/// Tune an LSTM cell shape (forward pass over the configured sequence).
+pub fn tune_lstm(cfg: &LstmConfig, topts: &TuneOpts) -> TuneReport {
+    let space = space::lstm_space(cfg);
+    let model = CostModel::host();
+    let short = shortlist(&space, topts, |c| model.lstm_fwd(&space::apply_lstm(*cfg, c)).secs());
+
+    let mut rng = Rng::new(0x15_73);
+    let w: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32(cfg.k * cfg.c, -0.3, 0.3)).collect();
+    let r: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32(cfg.k * cfg.k, -0.3, 0.3)).collect();
+    let b: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_f32(cfg.k, -0.1, 0.1)).collect();
+    let x = rng.vec_f32(cfg.t * cfg.n * cfg.c, -1.0, 1.0);
+    let flops = cfg.fwd_flops();
+
+    let measured = short
+        .into_iter()
+        .map(|(cand, model_secs)| {
+            let ccfg = space::apply_lstm(*cfg, &cand);
+            let prim = LstmPrimitive::new(ccfg);
+            let wr: Vec<&[f32]> = w.iter().map(|v| v.as_slice()).collect();
+            let rr: Vec<&[f32]> = r.iter().map(|v| v.as_slice()).collect();
+            let br: Vec<&[f32]> = b.iter().map(|v| v.as_slice()).collect();
+            let weights = LstmWeights::pack(ccfg, &wr, &rr, &br);
+            let mut ws = LstmWorkspace::new(&ccfg);
+            let s = measure(topts.bench, || {
+                prim.forward(&x, None, None, &weights, &mut ws);
+                black_box(&ws.h);
+            });
+            Ranked { cand, model_secs, measured_secs: s.min, gflops: flops / s.min / 1e9 }
+        })
+        .collect();
+    rank(PrimKind::Lstm, lstm_key(cfg), flops, space.candidates.len(), space.default, measured)
+}
+
+/// Tune and persist the winner into `cache` (caller saves to disk).
+pub fn tune_conv_cached(cfg: &ConvConfig, topts: &TuneOpts, cache: &mut TuningCache) -> TuneReport {
+    let rep = tune_conv(cfg, topts);
+    cache.put(&rep.key, rep.best_entry());
+    rep
+}
+
+/// Tune and persist the winner into `cache` (caller saves to disk).
+pub fn tune_fc_cached(cfg: &FcConfig, topts: &TuneOpts, cache: &mut TuningCache) -> TuneReport {
+    let rep = tune_fc(cfg, topts);
+    cache.put(&rep.key, rep.best_entry());
+    rep
+}
+
+/// Tune and persist the winner into `cache` (caller saves to disk).
+pub fn tune_lstm_cached(cfg: &LstmConfig, topts: &TuneOpts, cache: &mut TuningCache) -> TuneReport {
+    let rep = tune_lstm(cfg, topts);
+    cache.put(&rep.key, rep.best_entry());
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::primitives::eltwise::Act;
+
+    fn tiny_opts() -> TuneOpts {
+        TuneOpts {
+            top_k: 4,
+            bench: Opts { warmup_iters: 1, min_iters: 2, max_iters: 4, max_seconds: 0.05 },
+            train: false,
+        }
+    }
+
+    #[test]
+    fn conv_tuning_ranks_and_includes_default() {
+        let cfg = ConvConfig::new(1, 8, 8, 8, 8, 1, 1, 1, 0);
+        let rep = tune_conv(&cfg, &tiny_opts());
+        assert!(!rep.ranked.is_empty());
+        assert!(rep.ranked.iter().any(|r| r.cand == space::conv_space(&cfg).default));
+        assert!(rep.default_gflops > 0.0, "default candidate must be measured");
+        // Ranking is sorted best-first.
+        for w in rep.ranked.windows(2) {
+            assert!(w[0].gflops >= w[1].gflops);
+        }
+        // Every measured candidate satisfies divisibility.
+        for r in &rep.ranked {
+            assert_eq!(cfg.c % r.cand.bc, 0);
+            assert_eq!(cfg.k % r.cand.bk, 0);
+            assert_eq!(cfg.q() % r.cand.bq, 0);
+        }
+        let table = rep.render();
+        assert!(table.contains("winner:") && table.contains("vs-default"), "{}", table);
+    }
+
+    #[test]
+    fn fc_tuning_with_cache_persists_winner() {
+        let cfg = FcConfig::new(8, 16, 16, Act::Relu);
+        let mut cache = TuningCache::empty();
+        let rep = tune_fc_cached(&cfg, &tiny_opts().with_train(true), &mut cache);
+        let hit = cache.get(&rep.key).expect("winner must be cached");
+        assert_eq!(hit.cand, rep.best().cand);
+        assert!(hit.gflops > 0.0);
+    }
+
+    #[test]
+    fn lstm_tuning_runs() {
+        let cfg = LstmConfig::new(4, 8, 8, 2);
+        let rep = tune_lstm(&cfg, &tiny_opts());
+        assert!(!rep.ranked.is_empty());
+        assert!(rep.best().gflops > 0.0);
+    }
+}

@@ -150,16 +150,41 @@ impl Isa {
     /// Runtime detection with env-var override (`BRGEMM_ISA=scalar|avx512`).
     pub fn detect() -> Isa {
         if let Ok(v) = std::env::var("BRGEMM_ISA") {
-            match v.as_str() {
-                "scalar" => return Isa::Scalar,
-                "avx512" => return Isa::Avx512,
-                _ => {}
+            if let Some(isa) = Isa::parse(&v) {
+                return isa;
             }
         }
         if is_x86_feature_detected!("avx512f") {
             Isa::Avx512
         } else {
             Isa::Scalar
+        }
+    }
+
+    /// Stable name used in tuning-cache keys and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    /// Inverse of [`Isa::name`].
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx512" => Some(Isa::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Register-tile geometry of the microkernel as `(rows, f32 lanes per
+    /// vector)` — the granularity the autotuner's cost model uses to score
+    /// how well a blocking fills the accumulator tile.
+    pub fn microkernel_tile(self) -> (usize, usize) {
+        match self {
+            Isa::Scalar => (1, 1),
+            Isa::Avx512 => (avx512::MR_MAX, avx512::VLEN),
         }
     }
 }
@@ -253,11 +278,24 @@ impl BrgemmKernel {
         c: &mut [f32],
         bias: Option<&[f32]>,
     ) {
-        // Strided is lowered onto the address-list path; the offset arrays
-        // for the strides we use are tiny and the validation is shared.
-        let a_offs: Vec<usize> = (0..batch).map(|i| i * stride_a).collect();
-        let b_offs: Vec<usize> = (0..batch).map(|i| i * stride_b).collect();
-        self.execute_offs(a, &a_offs, b, &b_offs, c, bias);
+        // Strided is lowered onto the address-list path (the validation is
+        // shared); the offset arrays live on the stack for the chain
+        // lengths the primitives use, so this variant never heap-allocates
+        // on the hot path.
+        const STACK_BATCH: usize = 64;
+        if batch <= STACK_BATCH {
+            let mut a_offs = [0usize; STACK_BATCH];
+            let mut b_offs = [0usize; STACK_BATCH];
+            for i in 0..batch {
+                a_offs[i] = i * stride_a;
+                b_offs[i] = i * stride_b;
+            }
+            self.execute_offs(a, &a_offs[..batch], b, &b_offs[..batch], c, bias);
+        } else {
+            let a_offs: Vec<usize> = (0..batch).map(|i| i * stride_a).collect();
+            let b_offs: Vec<usize> = (0..batch).map(|i| i * stride_b).collect();
+            self.execute_offs(a, &a_offs, b, &b_offs, c, bias);
+        }
     }
 
     /// Batch-of-one: a plain small GEMM through the same microkernel.

@@ -119,6 +119,11 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key v` with a default fallback (string options).
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.str(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -223,6 +228,13 @@ mod tests {
     fn bad_numeric_value() {
         let a = Args::parse(&sv(&["bench", "--iters", "xyz"]), &cmds()).unwrap();
         assert!(a.usize("iters").is_err());
+    }
+
+    #[test]
+    fn str_or_falls_back() {
+        let a = Args::parse(&sv(&["bench"]), &cmds()).unwrap();
+        assert_eq!(a.str_or("missing", "dflt"), "dflt");
+        assert_eq!(a.str_or("iters", "dflt"), "10", "declared default wins over fallback");
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct RunConfig {
     pub workers: usize,
     pub nthreads: usize,
     pub seed: u64,
+    /// Autotune the workload's layer shapes (persisting winners in the
+    /// tuning cache) before the first training step, and build the model
+    /// through the primitives' `tuned()` path.
+    pub tune: bool,
 }
 
 impl Default for RunConfig {
@@ -58,6 +62,7 @@ impl Default for RunConfig {
             workers: 1,
             nthreads: 1,
             seed: 42,
+            tune: false,
         }
     }
 }
@@ -109,6 +114,9 @@ impl RunConfig {
         if let Some(lr) = j.get("lr").and_then(Json::as_f64) {
             cfg.lr = lr;
         }
+        if let Some(t) = j.get("tune").and_then(Json::as_bool) {
+            cfg.tune = t;
+        }
         if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
             bail!("batch/workers/nthreads must be positive");
         }
@@ -153,6 +161,15 @@ mod tests {
         let cfg = RunConfig::from_json(r#"{}"#).unwrap();
         assert_eq!(cfg.backend, Backend::Native);
         assert_eq!(cfg.batch, 32);
+        assert!(!cfg.tune, "tune-before-train defaults off");
+    }
+
+    #[test]
+    fn tune_flag_parses() {
+        let cfg = RunConfig::from_json(r#"{"tune": true}"#).unwrap();
+        assert!(cfg.tune);
+        let cfg = RunConfig::from_json(r#"{"tune": false}"#).unwrap();
+        assert!(!cfg.tune);
     }
 
     #[test]

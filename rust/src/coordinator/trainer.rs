@@ -14,17 +14,9 @@ use crate::coordinator::dist::{ring_allreduce, NetworkModel};
 use crate::primitives::eltwise::Act;
 use crate::primitives::fc::{FcConfig, FcPrimitive};
 use crate::tensor::layout::{pack_act_2d, transpose_packed_2d, unpack_act_2d};
+use crate::util::num::largest_divisor_le as pick;
 use crate::util::rng::Rng;
 use std::time::Instant;
-
-/// Largest divisor of `d` that is ≤ `pref` (blocking pick).
-fn pick(d: usize, pref: usize) -> usize {
-    let mut b = pref.min(d);
-    while d % b != 0 {
-        b -= 1;
-    }
-    b
-}
 
 /// One FC layer's state.
 struct Layer {
@@ -49,9 +41,25 @@ pub struct MlpModel {
 impl MlpModel {
     /// `sizes = [d_in, h1, ..., d_out]`; hidden layers ReLU, linear head.
     pub fn new(sizes: &[usize], batch: usize, nthreads: usize, rng: &mut Rng) -> MlpModel {
+        MlpModel::new_with(sizes, batch, nthreads, false, rng)
+    }
+
+    /// Like [`MlpModel::new`], with `tuned` consulting the autotuner's
+    /// persistent cache for each layer shape. Tuned blockings are then
+    /// *reconciled across layers* so the no-inter-layer-reformat invariant
+    /// holds: all layers share one `bn`, and each layer's input block `bc`
+    /// equals its producer's output block `bk` (the shared feature
+    /// dimension guarantees both are divisors of it).
+    pub fn new_with(
+        sizes: &[usize],
+        batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> MlpModel {
         assert!(sizes.len() >= 2);
         let bn = pick(batch, 24);
-        let layers = sizes
+        let mut cfgs: Vec<FcConfig> = sizes
             .windows(2)
             .enumerate()
             .map(|(i, wdim)| {
@@ -60,6 +68,25 @@ impl MlpModel {
                 let cfg = FcConfig::new(batch, c, k, act)
                     .with_blocking(bn, pick(c, 64), pick(k, 64))
                     .with_threads(nthreads);
+                if tuned {
+                    crate::autotune::tuned_fc_config(cfg)
+                } else {
+                    cfg
+                }
+            })
+            .collect();
+        if tuned {
+            // Reconcile: one bn everywhere, consumer bc = producer bk.
+            let shared_bn = cfgs[0].bn;
+            for i in 0..cfgs.len() {
+                let bc = if i == 0 { cfgs[0].bc } else { cfgs[i - 1].bk };
+                cfgs[i] = cfgs[i].with_blocking(shared_bn, bc, cfgs[i].bk);
+            }
+        }
+        let layers = cfgs
+            .into_iter()
+            .map(|cfg| {
+                let (c, k) = (cfg.c, cfg.k);
                 let prim = FcPrimitive::new(cfg);
                 // He init, packed directly (blocked layout is an internal
                 // detail; the plain-layout view only exists transiently).
@@ -254,10 +281,26 @@ impl DataParallelTrainer {
         lr: f32,
         seed: u64,
     ) -> DataParallelTrainer {
+        DataParallelTrainer::new_with(sizes, local_batch, workers, nthreads, lr, seed, false)
+    }
+
+    /// Like [`DataParallelTrainer::new`], with `tuned` replicas built
+    /// through the autotuner's cached blockings (every replica applies the
+    /// same cache entries, so bit-identical synchronous SGD is preserved).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with(
+        sizes: &[usize],
+        local_batch: usize,
+        workers: usize,
+        nthreads: usize,
+        lr: f32,
+        seed: u64,
+        tuned: bool,
+    ) -> DataParallelTrainer {
         let models = (0..workers)
             .map(|_| {
                 let mut rng = Rng::new(seed); // identical init across ranks
-                MlpModel::new(sizes, local_batch, nthreads, &mut rng)
+                MlpModel::new_with(sizes, local_batch, nthreads, tuned, &mut rng)
             })
             .collect();
         DataParallelTrainer { workers: models, net: NetworkModel::omnipath(), lr }
@@ -373,6 +416,47 @@ mod tests {
                 "dw[{}]: {} vs {}",
                 idx, num, dw0[idx]
             );
+        }
+    }
+
+    #[test]
+    fn tuned_model_matches_untuned_math() {
+        use crate::autotune::{cache, Candidate, TuneEntry, TuningCache};
+        use crate::primitives::fc::FcConfig;
+        // Unique layer shapes so no other test's cache entries collide.
+        let sizes = [22usize, 33, 11];
+        let batch = 8;
+        // Cache a non-default blocking for the first layer.
+        let cfg0 = FcConfig::new(batch, 22, 33, Act::Relu);
+        let cand = Candidate {
+            bn: 4,
+            bc: 11,
+            bk: 11,
+            bq: 1,
+            flat_bq: 0,
+            order: None,
+            fwd_strided: true,
+            upd_transpose: false,
+        };
+        TuningCache::global()
+            .lock()
+            .unwrap()
+            .put(&cache::fc_key(&cfg0), TuneEntry { cand, gflops: 1.0, model_gflops: 1.0 });
+
+        let x = Rng::new(55).vec_f32(batch * sizes[0], -1.0, 1.0);
+        let mut plain = MlpModel::new(&sizes, batch, 1, &mut Rng::new(91));
+        let mut tuned = MlpModel::new_with(&sizes, batch, 1, true, &mut Rng::new(91));
+        // The tuned path must apply the cached blocking (reconciled bn)...
+        assert_eq!(tuned.layers[0].prim.cfg.bc, 11);
+        assert!(tuned.layers[0].prim.cfg.fwd_strided);
+        // ...and the chain invariant bk(i) == bc(i+1) must hold.
+        assert_eq!(tuned.layers[0].prim.cfg.bk, tuned.layers[1].prim.cfg.bc);
+        assert_eq!(tuned.layers[0].prim.cfg.bn, tuned.layers[1].prim.cfg.bn);
+        // Blocking is a layout choice, not a math choice: same forward.
+        let yp = plain.forward(&x);
+        let yt = tuned.forward(&x);
+        for i in 0..yp.len() {
+            assert!((yp[i] - yt[i]).abs() < 1e-4, "[{}]: {} vs {}", i, yp[i], yt[i]);
         }
     }
 

@@ -26,10 +26,16 @@
 //!   paper's multi-node experiments.
 //! * [`perfmodel`] — roofline probes and efficiency accounting so results
 //!   can be reported as %-of-peak like the paper does.
+//! * [`autotune`] — the "automatic tuning of loops" the paper's thesis
+//!   promises: per-primitive tuning spaces (blockings, loop orders, BRGEMM
+//!   variants), an analytic cost model that prunes them, an empirical
+//!   tuner that ranks the survivors, and a persistent JSON tuning cache
+//!   the primitives' `tuned()` constructors load automatically.
 //! * [`util`] — self-contained substrates (JSON, RNG, stats, thread pool,
 //!   bench harness, property testing) — the crates.io registry is not
 //!   available in this environment, so these are built in-tree.
 
+pub mod autotune;
 pub mod brgemm;
 pub mod cli;
 pub mod coordinator;

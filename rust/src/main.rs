@@ -4,9 +4,11 @@
 //!   info        — platform, measured peak, artifact inventory
 //!   run         — execute a training run from a JSON config
 //!   primitive   — run one DL primitive and report GFLOPS/efficiency
+//!   tune        — autotune a primitive's blockings, persist the winner
 //!   xla         — execute one AOT artifact with synthetic inputs
 
 use anyhow::{anyhow, bail, Result};
+use brgemm_dl::autotune::{tuner, TuneOpts, TuningCache};
 use brgemm_dl::cli::{usage, Args, Command, OptSpec};
 use brgemm_dl::coordinator::config::{Backend, RunConfig, Workload};
 use brgemm_dl::coordinator::data::ClassifyData;
@@ -54,6 +56,25 @@ fn commands() -> Vec<Command> {
             ],
         },
         Command {
+            name: "tune",
+            about: "autotune blockings for one primitive (conv|fc|lstm), persist winners",
+            opts: vec![
+                OptSpec { name: "primitive", help: "conv|fc|lstm", takes_value: true, default: Some("conv") },
+                OptSpec { name: "n", help: "mini-batch", takes_value: true, default: Some("1") },
+                OptSpec { name: "c", help: "input features/channels", takes_value: true, default: Some("64") },
+                OptSpec { name: "k", help: "output features/channels", takes_value: true, default: Some("64") },
+                OptSpec { name: "hw", help: "conv spatial size", takes_value: true, default: Some("56") },
+                OptSpec { name: "r", help: "conv filter size (pad = r/2)", takes_value: true, default: Some("1") },
+                OptSpec { name: "stride", help: "conv stride", takes_value: true, default: Some("1") },
+                OptSpec { name: "t", help: "LSTM sequence length", takes_value: true, default: Some("8") },
+                OptSpec { name: "threads", help: "thread count to tune for", takes_value: true, default: Some("1") },
+                OptSpec { name: "top", help: "candidates measured after model pruning (default: 12, or 24 with --full)", takes_value: true, default: None },
+                OptSpec { name: "cache", help: "tuning-cache path (default: $BRGEMM_TUNE_CACHE or tuning_cache.json)", takes_value: true, default: None },
+                OptSpec { name: "train", help: "FC: rank by fwd+upd (enables upd variants)", takes_value: false, default: None },
+                OptSpec { name: "full", help: "thorough measurement protocol", takes_value: false, default: None },
+            ],
+        },
+        Command {
             name: "xla",
             about: "execute one AOT artifact with synthetic inputs",
             opts: vec![
@@ -87,6 +108,7 @@ fn main() {
         Some("info") => cmd_info(),
         Some("run") => cmd_run(&args),
         Some("primitive") => cmd_primitive(&args),
+        Some("tune") => cmd_tune(&args),
         Some("xla") => cmd_xla(&args),
         _ => {
             print!("{}", usage("brgemm-dl", "DL primitives via a single building block", &cmds));
@@ -141,16 +163,20 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
+    if cfg.tune {
+        tune_mlp_layers(cfg, sizes);
+    }
     let mut rng = Rng::new(cfg.seed);
     let data = ClassifyData::synth(4096, sizes[0], *sizes.last().unwrap(), 0.2, &mut rng);
     if cfg.workers > 1 {
-        let mut dp = DataParallelTrainer::new(
+        let mut dp = DataParallelTrainer::new_with(
             sizes,
             cfg.batch,
             cfg.workers,
             cfg.nthreads,
             cfg.lr as f32,
             cfg.seed,
+            cfg.tune,
         );
         for step in 0..cfg.steps {
             let shards: Vec<_> = (0..cfg.workers)
@@ -172,7 +198,7 @@ fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
         }
         log_info!("replicas consistent after {} steps", cfg.steps);
     } else {
-        let mut model = MlpModel::new(sizes, cfg.batch, cfg.nthreads, &mut rng);
+        let mut model = MlpModel::new_with(sizes, cfg.batch, cfg.nthreads, cfg.tune, &mut rng);
         log_info!("model params: {}", model.param_count());
         for step in 0..cfg.steps {
             let (x, labels) = data.batch(step, cfg.batch);
@@ -185,6 +211,35 @@ fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
         log_info!("final accuracy {:.1}%", acc * 100.0);
     }
     Ok(())
+}
+
+/// Tune-before-train: tune every FC layer shape of the MLP (quick
+/// protocol), persist winners into the global tuning cache, and save it so
+/// later runs skip straight to the cached blockings.
+fn tune_mlp_layers(cfg: &RunConfig, sizes: &[usize]) {
+    use brgemm_dl::primitives::eltwise::Act;
+    use brgemm_dl::primitives::fc::FcConfig;
+    let topts = TuneOpts::quick().with_train(true);
+    let mut cache = TuningCache::global().lock().unwrap();
+    for (i, wdim) in sizes.windows(2).enumerate() {
+        let act = if i + 2 == sizes.len() { Act::Identity } else { Act::Relu };
+        let fcfg = FcConfig::new(cfg.batch, wdim[0], wdim[1], act).with_threads(cfg.nthreads);
+        let rep = tuner::tune_fc_cached(&fcfg, &topts, &mut cache);
+        log_info!(
+            "tuned fc layer {} ({}x{}->{}): {} at {:.2} GF/s ({:.2}x default)",
+            i,
+            cfg.batch,
+            wdim[0],
+            wdim[1],
+            rep.best().cand.label(rep.kind),
+            rep.best().gflops,
+            rep.speedup_vs_default()
+        );
+    }
+    match cache.save() {
+        Ok(path) => log_info!("tuning cache saved to {}", path.display()),
+        Err(e) => log_warn!("could not save tuning cache: {}", e),
+    }
 }
 
 fn run_mlp_xla(cfg: &RunConfig) -> Result<()> {
@@ -282,6 +337,67 @@ fn cmd_primitive(args: &Args) -> Result<()> {
             report("conv fwd", cfg.flops() * iters as f64, t0.elapsed().as_secs_f64(), peak);
         }
         other => bail!("unknown primitive '{}'", other),
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let primitive = args.str_or("primitive", "conv");
+    let n = args.usize_or("n", 1).map_err(|e| anyhow!("{}", e))?;
+    let c = args.usize_or("c", 64).map_err(|e| anyhow!("{}", e))?;
+    let k = args.usize_or("k", 64).map_err(|e| anyhow!("{}", e))?;
+    let threads = args.usize_or("threads", 1).map_err(|e| anyhow!("{}", e))?;
+    let base = if args.flag("full") { TuneOpts::full() } else { TuneOpts::quick() };
+    let mut topts = base.with_train(args.flag("train"));
+    if let Some(top) = args.usize("top").map_err(|e| anyhow!("{}", e))? {
+        topts = topts.with_top_k(top);
+    }
+    let custom_cache_path = args.str("cache").map(|p| p.to_string());
+    let mut cache = match &custom_cache_path {
+        Some(p) => TuningCache::at(p),
+        None => TuningCache::load_default(),
+    };
+
+    let rep = match primitive {
+        "conv" => {
+            let hw = args.usize_or("hw", 56).map_err(|e| anyhow!("{}", e))?;
+            let r = args.usize_or("r", 1).map_err(|e| anyhow!("{}", e))?;
+            let stride = args.usize_or("stride", 1).map_err(|e| anyhow!("{}", e))?;
+            let pad = if r > 1 { r / 2 } else { 0 };
+            let cfg = ConvConfig::new(n, c, k, hw, hw, r, r, stride, pad).with_threads(threads);
+            tuner::tune_conv_cached(&cfg, &topts, &mut cache)
+        }
+        "fc" => {
+            let cfg = FcConfig::new(n, c, k, Act::Relu).with_threads(threads);
+            tuner::tune_fc_cached(&cfg, &topts, &mut cache)
+        }
+        "lstm" => {
+            let t = args.usize_or("t", 8).map_err(|e| anyhow!("{}", e))?;
+            let cfg = LstmConfig::new(n, c, k, t).with_threads(threads);
+            tuner::tune_lstm_cached(&cfg, &topts, &mut cache)
+        }
+        other => bail!("unknown primitive '{}' (conv|fc|lstm)", other),
+    };
+
+    print!("{}", rep.render());
+    let path = cache.save().map_err(|e| anyhow!("saving tuning cache: {}", e))?;
+    println!(
+        "cached winner under key '{}' in {} ({} entries total)",
+        rep.key.id(),
+        path.display(),
+        cache.len()
+    );
+    match custom_cache_path {
+        None => println!(
+            "ConvPrimitive::tuned / FcPrimitive::tuned / LstmPrimitive::tuned load this \
+             cache automatically for matching shape + ISA + thread count"
+        ),
+        // The tuned() constructors only consult the default location.
+        Some(p) => println!(
+            "note: the tuned() constructors read $BRGEMM_TUNE_CACHE or ./tuning_cache.json — \
+             set BRGEMM_TUNE_CACHE={} for them to load this cache",
+            p
+        ),
     }
     Ok(())
 }

@@ -24,6 +24,44 @@ pub struct PlatformModel {
 pub const SKX_PAPER: PlatformModel =
     PlatformModel { name: "SKX-8180 (paper)", peak_gflops_f32: 3050.0, cores: 28, stream_gbs: 105.0 };
 
+/// Cache hierarchy model used by the autotuner's analytic pruning
+/// (working-set-vs-cache constraints). Sizes are per core for L1/L2 and a
+/// conservative per-core share for the shared last level.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheModel {
+    pub l1_bytes: usize,
+    pub l2_bytes: usize,
+    pub l3_bytes: usize,
+    pub line_bytes: usize,
+}
+
+impl CacheModel {
+    /// SKX-class defaults (32 KiB L1D, 1 MiB L2, ~1.4 MiB/core L3 share) —
+    /// deliberately conservative so the model prunes rather than overfits.
+    pub fn host_default() -> CacheModel {
+        CacheModel { l1_bytes: 32 << 10, l2_bytes: 1 << 20, l3_bytes: 1 << 21, line_bytes: 64 }
+    }
+}
+
+/// Single-core platform model of *this* host: the peak is measured by
+/// [`host_peak_gflops`]; the bandwidth is a nominal per-core STREAM figure
+/// (the paper's 105 GB/s socket ≈ 3.75 GB/s/core is memory-parallelism
+/// limited; one core alone sustains more — we use a conservative midpoint).
+pub fn host_platform() -> PlatformModel {
+    PlatformModel {
+        name: "host (measured peak)",
+        peak_gflops_f32: host_peak_gflops(),
+        cores: 1,
+        stream_gbs: 12.0,
+    }
+}
+
+/// Roofline execution-time estimate: a kernel doing `flops` flops over
+/// `bytes` of memory traffic cannot run faster than either roof allows.
+pub fn roofline_secs(flops: f64, bytes: f64, p: &PlatformModel) -> f64 {
+    (flops / (p.peak_gflops_f32 * 1e9)).max(bytes / (p.stream_gbs * 1e9))
+}
+
 /// Measured peak of this host (cached after the first probe).
 pub fn host_peak_gflops() -> f64 {
     use std::sync::OnceLock;
@@ -144,6 +182,22 @@ mod tests {
     #[test]
     fn efficiency_math() {
         assert!((efficiency(50.0, 100.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roofline_takes_the_binding_roof() {
+        let p = PlatformModel { name: "t", peak_gflops_f32: 100.0, cores: 1, stream_gbs: 10.0 };
+        // Compute-bound: 1e11 flops / 1e11 flops-per-sec = 1 s >> 1e9 B / 1e10 B/s.
+        assert!((roofline_secs(1e11, 1e9, &p) - 1.0).abs() < 1e-9);
+        // Memory-bound: 1e11 B / 1e10 B/s = 10 s >> 1 s of compute.
+        assert!((roofline_secs(1e11, 1e11, &p) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cache_model_is_ordered() {
+        let c = CacheModel::host_default();
+        assert!(c.l1_bytes < c.l2_bytes && c.l2_bytes <= c.l3_bytes);
+        assert!(c.line_bytes.is_power_of_two());
     }
 
     #[test]

@@ -23,10 +23,23 @@
 
 use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
 use crate::primitives::eltwise::Act;
-use crate::primitives::partition::Partition2d;
+use crate::primitives::partition::{Partition2d, Strategy};
 use crate::tensor::layout;
+use crate::util::num::largest_divisor_le;
 use crate::util::pool::{parallel_region, SharedMut};
 use std::time::Instant;
+
+/// How the spatially-collapsed forward path (legal for 1×1/stride-1/no-pad
+/// layers, where P×Q is one contiguous pixel dimension) is driven.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlatSpatial {
+    /// Use it when legal, with an automatically picked pixel strip.
+    Auto,
+    /// Never use it (fall back to the per-row tap loop).
+    Off,
+    /// Use it with this pixel-strip length (rounded to a divisor of P·Q).
+    Strip(usize),
+}
 
 /// Convolution layer shape + blocking.
 #[derive(Debug, Clone, Copy)]
@@ -44,6 +57,11 @@ pub struct ConvConfig {
     pub bc: usize,
     pub bk: usize,
     pub bq: usize,
+    /// Spatial-collapse mode for eligible 1×1 layers (autotuned axis).
+    pub flat: FlatSpatial,
+    /// Forward loop order / thread partition override; `None` = the
+    /// paper's shape-driven heuristic ([`Partition2d::auto`]).
+    pub par_strategy: Option<Strategy>,
     pub act: Option<Act>,
     pub nthreads: usize,
 }
@@ -60,13 +78,6 @@ impl ConvConfig {
         stride: usize,
         pad: usize,
     ) -> ConvConfig {
-        let pick = |d: usize, pref: usize| {
-            let mut b = pref.min(d);
-            while d % b != 0 {
-                b -= 1;
-            }
-            b
-        };
         let q = (w + 2 * pad - s) / stride + 1;
         ConvConfig {
             n,
@@ -78,20 +89,49 @@ impl ConvConfig {
             s,
             stride,
             pad,
-            bc: pick(c, 64),
-            bk: pick(k, 64),
-            bq: pick(q, 28),
+            bc: largest_divisor_le(c, 64),
+            bk: largest_divisor_le(k, 64),
+            bq: largest_divisor_le(q, 28),
+            flat: FlatSpatial::Auto,
+            par_strategy: None,
             act: None,
             nthreads: 1,
         }
     }
 
+    /// Set the blocking factors. Each factor must be ≥ 1 and is rounded
+    /// *down* to the largest divisor of its dimension (`bc`|C, `bk`|K,
+    /// `bq`|Q) — a non-divisor block size would silently mis-shape every
+    /// downstream packed tensor, so it is never accepted verbatim.
     pub fn with_blocking(mut self, bc: usize, bk: usize, bq: usize) -> ConvConfig {
-        self.bc = bc;
-        self.bk = bk;
-        self.bq = bq;
+        assert!(bc >= 1 && bk >= 1 && bq >= 1, "block sizes must be >= 1");
+        self.bc = largest_divisor_le(self.c, bc);
+        self.bk = largest_divisor_le(self.k, bk);
+        self.bq = largest_divisor_le(self.q(), bq);
         self.validate();
         self
+    }
+
+    /// Override the spatial-collapse mode (autotuned axis; see
+    /// [`FlatSpatial`]).
+    pub fn with_flat(mut self, flat: FlatSpatial) -> ConvConfig {
+        self.flat = flat;
+        self
+    }
+
+    /// Pin the forward loop order / thread partition strategy instead of
+    /// the shape-driven heuristic (autotuned axis).
+    pub fn with_loop_order(mut self, s: Strategy) -> ConvConfig {
+        self.par_strategy = Some(s);
+        self
+    }
+
+    /// Forward-pass work partition honouring [`Self::par_strategy`].
+    fn partition(&self, rows: usize, cols: usize, big_weights: bool) -> Partition2d {
+        match self.par_strategy {
+            Some(s) => Partition2d::new(rows, cols, self.nthreads, s),
+            None => Partition2d::auto(rows, cols, self.nthreads, big_weights),
+        }
     }
 
     pub fn with_threads(mut self, t: usize) -> ConvConfig {
@@ -189,13 +229,15 @@ impl ConvPrimitive {
             beta: 0.0,
         });
         // Spatial collapse: legal when the input walk is contiguous across
-        // row ends, i.e. 1×1 taps, unit stride, no padding gap.
-        let fwd_flat = if cfg.r == 1 && cfg.s == 1 && cfg.stride == 1 && cfg.pad == 0 {
+        // row ends, i.e. 1×1 taps, unit stride, no padding gap. The mode
+        // and strip length are an autotuned axis ([`FlatSpatial`]).
+        let flat_legal = cfg.r == 1 && cfg.s == 1 && cfg.stride == 1 && cfg.pad == 0;
+        let fwd_flat = if flat_legal && cfg.flat != FlatSpatial::Off {
             let pq = cfg.p() * cfg.q();
-            let mut bq = 64.min(pq);
-            while pq % bq != 0 {
-                bq -= 1;
-            }
+            let bq = match cfg.flat {
+                FlatSpatial::Strip(s) => largest_divisor_le(pq, s.max(1)),
+                _ => largest_divisor_le(pq, 64),
+            };
             let kern = BrgemmKernel::new(BrgemmDesc {
                 m: bq,
                 n: cfg.bk,
@@ -227,6 +269,15 @@ impl ConvPrimitive {
         ConvPrimitive { cfg, fwd_kernel: fwd, fwd_flat, upd_kernel: upd }
     }
 
+    /// Like [`ConvPrimitive::new`], but first consults the persistent
+    /// tuning cache (shape + ISA + thread count key) and, on a hit, applies
+    /// the cached winning blocking / flat-strip / loop-order. On a miss the
+    /// config is used as-is — populate the cache with the `tune` CLI
+    /// subcommand or [`crate::autotune::tuner::tune_conv_cached`].
+    pub fn tuned(cfg: ConvConfig) -> ConvPrimitive {
+        ConvPrimitive::new(crate::autotune::tuned_conv_config(cfg))
+    }
+
     /// Forward (Algorithm 4): `out = conv(input, weights) [+bias, act]`.
     /// `input` is packed+padded, `weights` packed, `out` packed (unpadded).
     pub fn forward(&self, input: &[f32], weights: &[f32], bias: Option<&[f32]>, out: &mut [f32]) {
@@ -243,7 +294,7 @@ impl ConvPrimitive {
         let batch = cfg.r * cfg.s * cb;
         let wtap = cfg.bc * cfg.bk; // one packed weight block
         let shared = &SharedMut::new(out);
-        let part = Partition2d::auto(cfg.n, kb, cfg.nthreads, cfg.weights_len() > 1 << 20);
+        let part = cfg.partition(cfg.n, kb, cfg.weights_len() > 1 << 20);
         let epi = match (bias, cfg.act) {
             (Some(_), Some(a)) => Epilogue::BiasAct(a),
             (Some(_), None) => Epilogue::BiasAct(Act::Identity),
@@ -369,7 +420,7 @@ impl ConvPrimitive {
                 1,
                 cfg.r - 1,
             )
-            .with_blocking(cfg.bk, cfg.bc, pick_div(cfg.wp(), 64))
+            .with_blocking(cfg.bk, cfg.bc, largest_divisor_le(cfg.wp(), 64))
             .with_threads(cfg.nthreads);
             // Sanity: dual output spatial dims = padded input dims.
             debug_assert_eq!(dual_cfg.p(), cfg.hp());
@@ -496,14 +547,6 @@ impl ConvPrimitive {
         bd.gemm_secs += t0.elapsed().as_secs_f64();
         (dw, bd)
     }
-}
-
-fn pick_div(d: usize, pref: usize) -> usize {
-    let mut b = pref.min(d);
-    while d % b != 0 {
-        b -= 1;
-    }
-    b
 }
 
 // ---------------------------------------------------------------------------
@@ -766,6 +809,55 @@ mod tests {
         let mut y = vec![0.0; n * k * cfg.p() * cfg.q()];
         conv_forward_im2col(&cfg, &x, &wt, &mut y);
         check_close(&y, &want, 1e-3, "im2col baseline");
+    }
+
+    #[test]
+    fn with_blocking_rounds_to_divisors() {
+        let cfg = ConvConfig::new(1, 64, 96, 28, 28, 1, 1, 1, 0);
+        // 48 ∤ 64 → rounds to 32; 100 > 96 → clamps to 96; 30 ∤ 28 → 28.
+        let cfg = cfg.with_blocking(48, 100, 30);
+        assert_eq!((cfg.bc, cfg.bk, cfg.bq), (32, 96, 28));
+        // Exact divisors pass through untouched.
+        let cfg = cfg.with_blocking(16, 32, 14);
+        assert_eq!((cfg.bc, cfg.bk, cfg.bq), (16, 32, 14));
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1")]
+    fn with_blocking_rejects_zero() {
+        ConvConfig::new(1, 8, 8, 8, 8, 1, 1, 1, 0).with_blocking(0, 8, 8);
+    }
+
+    #[test]
+    fn flat_modes_agree_on_1x1() {
+        let (n, c, k, h, w) = (2, 8, 8, 6, 6);
+        let mut rng = Rng::new(21);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let wt = rng.vec_f32(k * c, -0.5, 0.5);
+        let base = ConvConfig::new(n, c, k, h, w, 1, 1, 1, 0);
+        let want = run_fwd(&base, &x, &wt); // Auto (flat on)
+        for cfg in [
+            base.with_flat(FlatSpatial::Off),
+            base.with_flat(FlatSpatial::Strip(12)),
+            base.with_flat(FlatSpatial::Strip(5)), // 5 ∤ 36 → rounded
+        ] {
+            let got = run_fwd(&cfg, &x, &wt);
+            check_close(&got, &want, 1e-4, &format!("flat mode {:?}", cfg.flat));
+        }
+    }
+
+    #[test]
+    fn loop_order_override_matches_auto() {
+        let (n, c, k, h, w) = (3, 4, 8, 6, 6);
+        let mut rng = Rng::new(22);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let wt = rng.vec_f32(k * c * 9, -0.5, 0.5);
+        let base = ConvConfig::new(n, c, k, h, w, 3, 3, 1, 1).with_threads(2);
+        let want = run_fwd(&base, &x, &wt);
+        for s in [Strategy::MinibatchFirst, Strategy::FeatureFirst, Strategy::Flat] {
+            let got = run_fwd(&base.with_loop_order(s), &x, &wt);
+            check_close(&got, &want, 1e-5, &format!("order {:?}", s));
+        }
     }
 
     #[test]

@@ -13,7 +13,8 @@
 use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
 use crate::primitives::eltwise::{act_backward, Act};
 use crate::primitives::partition::{Partition2d, Strategy};
-use crate::util::pool::{parallel_region, SharedMut};
+use crate::util::num::largest_divisor_le;
+use crate::util::pool::{parallel_for, parallel_region, SharedMut};
 
 /// Shape + blocking for one FC layer.
 #[derive(Debug, Clone, Copy)]
@@ -26,6 +27,16 @@ pub struct FcConfig {
     pub bn: usize,
     pub bc: usize,
     pub bk: usize,
+    /// Forward BRGEMM variant (autotuned axis): the Cb accumulation chain
+    /// has constant strides in both operands, so it can run through either
+    /// the address-list or the strided kernel interface.
+    pub fwd_strided: bool,
+    /// Weight-update A-operand variant (autotuned axis): `false` reads X
+    /// blocks transposed in place via the kernel's `a_kstride`; `true`
+    /// physically transposes them per call first (the abl01 trade-off).
+    pub upd_transpose: bool,
+    /// Forward loop order / thread partition override; `None` = heuristic.
+    pub par_strategy: Option<Strategy>,
     pub act: Act,
     pub nthreads: usize,
 }
@@ -34,29 +45,30 @@ impl FcConfig {
     /// Default blocking: the paper-style 64-wide feature blocks (the
     /// microkernel's sweet spot) clamped to the problem size.
     pub fn new(n: usize, c: usize, k: usize, act: Act) -> FcConfig {
-        let pick = |d: usize, pref: usize| {
-            let mut b = pref.min(d);
-            while d % b != 0 {
-                b -= 1;
-            }
-            b
-        };
         FcConfig {
             n,
             c,
             k,
-            bn: pick(n, 24),
-            bc: pick(c, 64),
-            bk: pick(k, 64),
+            bn: largest_divisor_le(n, 24),
+            bc: largest_divisor_le(c, 64),
+            bk: largest_divisor_le(k, 64),
+            fwd_strided: false,
+            upd_transpose: false,
+            par_strategy: None,
             act,
             nthreads: 1,
         }
     }
 
+    /// Set the blocking factors. Each factor must be ≥ 1 and is rounded
+    /// *down* to the largest divisor of its dimension (`bn`|N, `bc`|C,
+    /// `bk`|K) — a non-divisor block size would silently mis-shape the
+    /// packed layouts, so it is never accepted verbatim.
     pub fn with_blocking(mut self, bn: usize, bc: usize, bk: usize) -> FcConfig {
-        self.bn = bn;
-        self.bc = bc;
-        self.bk = bk;
+        assert!(bn >= 1 && bc >= 1 && bk >= 1, "block sizes must be >= 1");
+        self.bn = largest_divisor_le(self.n, bn);
+        self.bc = largest_divisor_le(self.c, bc);
+        self.bk = largest_divisor_le(self.k, bk);
         self.validate();
         self
     }
@@ -64,6 +76,32 @@ impl FcConfig {
     pub fn with_threads(mut self, t: usize) -> FcConfig {
         self.nthreads = t;
         self
+    }
+
+    /// Select the strided forward kernel variant (autotuned axis).
+    pub fn with_fwd_strided(mut self, strided: bool) -> FcConfig {
+        self.fwd_strided = strided;
+        self
+    }
+
+    /// Select the physical-transpose weight-update variant (autotuned axis).
+    pub fn with_upd_transpose(mut self, transpose: bool) -> FcConfig {
+        self.upd_transpose = transpose;
+        self
+    }
+
+    /// Pin the forward loop order / thread partition strategy.
+    pub fn with_loop_order(mut self, s: Strategy) -> FcConfig {
+        self.par_strategy = Some(s);
+        self
+    }
+
+    /// Forward-pass work partition honouring [`Self::par_strategy`].
+    fn partition(&self, rows: usize, cols: usize, big_weights: bool) -> Partition2d {
+        match self.par_strategy {
+            Some(s) => Partition2d::new(rows, cols, self.nthreads, s),
+            None => Partition2d::auto(rows, cols, self.nthreads, big_weights),
+        }
     }
 
     fn validate(&self) {
@@ -125,20 +163,47 @@ impl FcPrimitive {
             beta: 0.0,
         });
         // UPD: dW_blk[bc×bk] = Σ_nb Xᵀ_blk[bc×bn]·dZ_blk[bn×bk].
-        // X blocks are [bn][bc]; reading them transposed is free via
-        // a_kstride (lda = 1 walks channels, k-stride bc walks the batch).
-        let upd = BrgemmKernel::new(BrgemmDesc {
-            m: cfg.bc,
-            n: cfg.bk,
-            k: cfg.bn,
-            lda: 1,
-            ldb: cfg.bk,
-            ldc: cfg.bk,
-            a_kstride: cfg.bc,
-            alpha: 1.0,
-            beta: 0.0,
-        });
+        // Default: X blocks are [bn][bc] and are read transposed in place
+        // via a_kstride (lda = 1 walks channels, k-stride bc walks the
+        // batch). With `upd_transpose` the blocks are physically
+        // transposed to [bc][bn] first and read at unit stride — which
+        // wins once the strided broadcast walk stops fitting in cache
+        // (see the abl01 bench); the tuner picks per shape.
+        let upd = if cfg.upd_transpose {
+            BrgemmKernel::new(BrgemmDesc {
+                m: cfg.bc,
+                n: cfg.bk,
+                k: cfg.bn,
+                lda: cfg.bn,
+                ldb: cfg.bk,
+                ldc: cfg.bk,
+                a_kstride: 1,
+                alpha: 1.0,
+                beta: 0.0,
+            })
+        } else {
+            BrgemmKernel::new(BrgemmDesc {
+                m: cfg.bc,
+                n: cfg.bk,
+                k: cfg.bn,
+                lda: 1,
+                ldb: cfg.bk,
+                ldc: cfg.bk,
+                a_kstride: cfg.bc,
+                alpha: 1.0,
+                beta: 0.0,
+            })
+        };
         FcPrimitive { cfg, fwd_kernel: fwd, bwd_kernel: bwd, upd_kernel: upd }
+    }
+
+    /// Like [`FcPrimitive::new`], but first consults the persistent tuning
+    /// cache (shape + ISA + thread count key) and, on a hit, applies the
+    /// cached winning blocking / kernel variants. On a miss the config is
+    /// used as-is — populate the cache with the `tune` CLI subcommand or
+    /// [`crate::autotune::tuner::tune_fc_cached`].
+    pub fn tuned(cfg: FcConfig) -> FcPrimitive {
+        FcPrimitive::new(crate::autotune::tuned_fc_config(cfg))
     }
 
     /// Forward: `y = act(x·Wᵀ + b)` on blocked layouts.
@@ -152,28 +217,40 @@ impl FcPrimitive {
         let xblk = c.bn * c.bc;
         let wblk = c.bc * c.bk;
         let yblk = c.bn * c.bk;
-        let part = Partition2d::auto(nb, kb, c.nthreads, false);
+        let part = c.partition(nb, kb, false);
         let shared = &SharedMut::new(y);
         parallel_region(c.nthreads, |tid| {
-            let mut a_offs = vec![0usize; cb];
-            let mut b_offs = vec![0usize; cb];
+            // Offset buffers are only needed by the address-list variant.
+            let (mut a_offs, mut b_offs) = if c.fwd_strided {
+                (Vec::new(), Vec::new())
+            } else {
+                (vec![0usize; cb], vec![0usize; cb])
+            };
             for (inb, ikb) in part.tasks(tid) {
-                for icb in 0..cb {
-                    a_offs[icb] = (inb * cb + icb) * xblk;
-                    b_offs[icb] = (ikb * cb + icb) * wblk;
-                }
                 let y_off = (inb * kb + ikb) * yblk;
                 // SAFETY: blocks are disjoint per task; tasks are disjoint
                 // per thread (partition invariant).
                 let yb = unsafe { shared.slice(y_off, yblk) };
-                self.fwd_kernel.execute_offs(
-                    x,
-                    &a_offs,
-                    w,
-                    &b_offs,
-                    yb,
-                    Some(&bias[ikb * c.bk..(ikb + 1) * c.bk]),
-                );
+                let bias_blk = &bias[ikb * c.bk..(ikb + 1) * c.bk];
+                if c.fwd_strided {
+                    // The Cb chain walks both operands at a fixed stride —
+                    // the `strided-batch-gemm` special case of §2.
+                    self.fwd_kernel.execute_strided(
+                        &x[inb * cb * xblk..],
+                        xblk,
+                        &w[ikb * cb * wblk..],
+                        wblk,
+                        cb,
+                        yb,
+                        Some(bias_blk),
+                    );
+                } else {
+                    for icb in 0..cb {
+                        a_offs[icb] = (inb * cb + icb) * xblk;
+                        b_offs[icb] = (ikb * cb + icb) * wblk;
+                    }
+                    self.fwd_kernel.execute_offs(x, &a_offs, w, &b_offs, yb, Some(bias_blk));
+                }
             }
         });
     }
@@ -224,6 +301,32 @@ impl FcPrimitive {
         let xblk = c.bn * c.bc;
         let zblk = c.bn * c.bk;
         let wblk = c.bc * c.bk;
+        // Physical-transpose variant: rewrite every X block [bn][bc] →
+        // [bc][bn] once, so the accumulation chain reads unit-stride rows.
+        // The copy is charged to this call — exactly the trade the tuner
+        // weighs against the in-place a_kstride read. Blocks are disjoint,
+        // so the transpose itself parallelises over them.
+        let xt_owned: Vec<f32>;
+        let x_eff: &[f32] = if c.upd_transpose {
+            let mut xt = vec![0.0f32; x.len()];
+            {
+                let shared = &SharedMut::new(&mut xt);
+                parallel_for(c.nthreads, nb * cb, |_tid, blk| {
+                    let src = &x[blk * xblk..(blk + 1) * xblk];
+                    // SAFETY: block regions are disjoint per index.
+                    let dst = unsafe { shared.slice(blk * xblk, xblk) };
+                    for row in 0..c.bn {
+                        for col in 0..c.bc {
+                            dst[col * c.bn + row] = src[row * c.bc + col];
+                        }
+                    }
+                });
+            }
+            xt_owned = xt;
+            &xt_owned
+        } else {
+            x
+        };
         let part = Partition2d::new(kb, cb, c.nthreads, Strategy::Flat);
         let shared = &SharedMut::new(dw);
         parallel_region(c.nthreads, |tid| {
@@ -236,7 +339,7 @@ impl FcPrimitive {
                 }
                 let off = (ikb * cb + icb) * wblk;
                 let out = unsafe { shared.slice(off, wblk) };
-                self.upd_kernel.execute_offs(x, &a_offs, dz, &b_offs, out, None);
+                self.upd_kernel.execute_offs(x_eff, &a_offs, dz, &b_offs, out, None);
             }
         });
         // Bias gradient: reduce dz over the batch (cheap, single-threaded).
@@ -390,6 +493,80 @@ mod tests {
         let want = naive::fc_fwd(n, c, k, &x, &w, &b, Act::Relu);
         for i in 0..y.len() {
             assert!((y[i] - want[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn with_blocking_rounds_to_divisors() {
+        let cfg = FcConfig::new(24, 64, 96, Act::Relu);
+        // 7 ∤ 24 → 6; 48 ∤ 64 → 32; 200 > 96 → 96.
+        let cfg = cfg.with_blocking(7, 48, 200);
+        assert_eq!((cfg.bn, cfg.bc, cfg.bk), (6, 32, 96));
+        let cfg = cfg.with_blocking(12, 16, 24);
+        assert_eq!((cfg.bn, cfg.bc, cfg.bk), (12, 16, 24));
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 1")]
+    fn with_blocking_rejects_zero() {
+        FcConfig::new(8, 8, 8, Act::Relu).with_blocking(0, 1, 1);
+    }
+
+    #[test]
+    fn strided_forward_variant_matches_offs() {
+        let (n, c, k) = (12, 32, 24);
+        let (x, w, b) = setup(n, c, k, Act::Relu, 31);
+        let base = FcConfig::new(n, c, k, Act::Relu);
+        let xp = pack_act_2d(&x, n, c, base.bn, base.bc);
+        let wp = pack_weights_2d(&w, k, c, base.bk, base.bc);
+        let mut y_offs = vec![0.0; n * k];
+        FcPrimitive::new(base).forward(&xp, &wp, &b, &mut y_offs);
+        let mut y_str = vec![0.0; n * k];
+        FcPrimitive::new(base.with_fwd_strided(true)).forward(&xp, &wp, &b, &mut y_str);
+        assert_eq!(y_offs, y_str, "strided variant must be bit-identical");
+    }
+
+    #[test]
+    fn upd_transpose_variant_matches_inplace() {
+        let (n, c, k) = (12, 24, 16);
+        let (x, w, b) = setup(n, c, k, Act::Sigmoid, 37);
+        let base = FcConfig::new(n, c, k, Act::Sigmoid);
+        let xp = pack_act_2d(&x, n, c, base.bn, base.bc);
+        let wp = pack_weights_2d(&w, k, c, base.bk, base.bc);
+        let mut yp = vec![0.0; n * k];
+        let prim = FcPrimitive::new(base);
+        prim.forward(&xp, &wp, &b, &mut yp);
+        let dyp = vec![1.0; n * k];
+        let mut dzp = vec![0.0; n * k];
+        prim.dz_from_dy(&dyp, &yp, &mut dzp);
+        let run_upd = |cfg: FcConfig| {
+            let p = FcPrimitive::new(cfg);
+            let mut dw = vec![0.0; k * c];
+            let mut db = vec![0.0; k];
+            p.update(&xp, &dzp, &mut dw, &mut db);
+            (dw, db)
+        };
+        let (dw_a, db_a) = run_upd(base);
+        let (dw_b, db_b) = run_upd(base.with_upd_transpose(true));
+        for i in 0..dw_a.len() {
+            assert!((dw_a[i] - dw_b[i]).abs() < 1e-5, "dw[{}]: {} vs {}", i, dw_a[i], dw_b[i]);
+        }
+        assert_eq!(db_a, db_b);
+    }
+
+    #[test]
+    fn loop_order_override_matches_auto() {
+        let (n, c, k) = (24, 32, 48);
+        let (x, w, b) = setup(n, c, k, Act::Relu, 41);
+        let base = FcConfig::new(n, c, k, Act::Relu).with_threads(3);
+        let xp = pack_act_2d(&x, n, c, base.bn, base.bc);
+        let wp = pack_weights_2d(&w, k, c, base.bk, base.bc);
+        let mut want = vec![0.0; n * k];
+        FcPrimitive::new(base).forward(&xp, &wp, &b, &mut want);
+        for s in [Strategy::MinibatchFirst, Strategy::FeatureFirst, Strategy::Flat] {
+            let mut got = vec![0.0; n * k];
+            FcPrimitive::new(base.with_loop_order(s)).forward(&xp, &wp, &b, &mut got);
+            assert_eq!(got, want, "order {:?}", s);
         }
     }
 

@@ -41,29 +41,28 @@ pub struct LstmConfig {
 
 impl LstmConfig {
     pub fn new(n: usize, c: usize, k: usize, t: usize) -> LstmConfig {
-        let pick = |d: usize, pref: usize| {
-            let mut b = pref.min(d);
-            while d % b != 0 {
-                b -= 1;
-            }
-            b
-        };
+        use crate::util::num::largest_divisor_le;
         LstmConfig {
             n,
             c,
             k,
             t,
-            bn: pick(n, 24),
-            bc: pick(c, 64),
-            bk: pick(k, 64),
+            bn: largest_divisor_le(n, 24),
+            bc: largest_divisor_le(c, 64),
+            bk: largest_divisor_le(k, 64),
             nthreads: 1,
         }
     }
 
+    /// Set the blocking factors. Each factor must be ≥ 1 and is rounded
+    /// *down* to the largest divisor of its dimension (`bn`|N, `bc`|C,
+    /// `bk`|K) — non-divisor block sizes are never accepted verbatim.
     pub fn with_blocking(mut self, bn: usize, bc: usize, bk: usize) -> LstmConfig {
-        self.bn = bn;
-        self.bc = bc;
-        self.bk = bk;
+        use crate::util::num::largest_divisor_le;
+        assert!(bn >= 1 && bc >= 1 && bk >= 1, "block sizes must be >= 1");
+        self.bn = largest_divisor_le(self.n, bn);
+        self.bc = largest_divisor_le(self.c, bc);
+        self.bk = largest_divisor_le(self.k, bk);
         self.validate();
         self
     }
@@ -310,6 +309,16 @@ impl LstmPrimitive {
             kern_upd_w: upd_w,
             kern_upd_r: upd_r,
         }
+    }
+
+    /// Like [`LstmPrimitive::new`], but first consults the persistent
+    /// tuning cache ((N, C, K) + ISA + thread count key — blockings do not
+    /// depend on the sequence length, so entries generalise across `t`)
+    /// and, on a hit, applies the cached winning blocking. On a miss the
+    /// config is used as-is — populate the cache with the `tune` CLI
+    /// subcommand or [`crate::autotune::tuner::tune_lstm_cached`].
+    pub fn tuned(cfg: LstmConfig) -> LstmPrimitive {
+        LstmPrimitive::new(crate::autotune::tuned_lstm_config(cfg))
     }
 
     /// Forward propagation (Algorithm 2). `x` is `[T][N][C]`; initial state

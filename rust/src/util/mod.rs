@@ -21,6 +21,7 @@
 pub mod bench;
 pub mod json;
 pub mod logger;
+pub mod num;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,28 @@
+//! Small numeric helpers shared across layers (blocking arithmetic).
+
+/// Largest divisor of `d` that is ≤ `pref` (and ≥ 1). The canonical
+/// block-size rounding used by every config's `with_blocking` and by the
+/// autotuner's candidate generation.
+pub fn largest_divisor_le(d: usize, pref: usize) -> usize {
+    assert!(d >= 1, "dimension must be >= 1");
+    let mut b = pref.min(d).max(1);
+    while d % b != 0 {
+        b -= 1;
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_down_to_divisors() {
+        assert_eq!(largest_divisor_le(64, 48), 32);
+        assert_eq!(largest_divisor_le(64, 64), 64);
+        assert_eq!(largest_divisor_le(64, 1000), 64);
+        assert_eq!(largest_divisor_le(7, 4), 1);
+        assert_eq!(largest_divisor_le(1, 1), 1);
+        assert_eq!(largest_divisor_le(56, 28), 28);
+    }
+}
