@@ -4,6 +4,12 @@
 //! FWD/BWD because of the weight-tensor reduction and the activation
 //! transpose (reformat). The bench reports the same split (GEMM vs
 //! reformat) per layer.
+//!
+//! Caveat vs the paper's methodology: `update` now also produces the bias
+//! gradient (a parallel O(N·K·P·Q) reduction over dO), so the timed pass
+//! is dW **and** db while the flop count attributes dW only — a small
+//! systematic understatement of GF/s, largest on 1×1 layers. The
+//! GEMM/reformat split excludes the db sweep.
 
 mod common;
 
@@ -34,7 +40,7 @@ fn main() {
             black_box(prim.update(&case.x_packed, &out));
         });
         rows.push((case.layer, flops, table.rows.last().unwrap().time.min));
-        let (_, bd) = prim.update(&case.x_packed, &out);
+        let (_, _, bd) = prim.update(&case.x_packed, &out);
         reformat_share.push((case.layer.id, bd.reformat_secs / (bd.gemm_secs + bd.reformat_secs)));
     }
 

@@ -10,6 +10,12 @@
 //! at bench scale; the allreduce of ResNet-50's 25.5M-parameter gradient
 //! uses the α-β Omnipath model. Shape claims: near-linear scaling (conv
 //! nets are compute-dominated), efficiency >> the GNMT curves of fig10a.
+//!
+//! Caveat (shared with fig08): `update` now also produces the conv bias
+//! gradient, so the measured upd share — and therefore img/s — includes
+//! that O(N·K·P·Q) reduction; cross-version comparisons against pre-db
+//! numbers see a small systematic img/s drop that is not a scaling-model
+//! change.
 
 mod common;
 

@@ -118,7 +118,13 @@ impl TuneEntry {
     }
 }
 
-const FORMAT_VERSION: usize = 1;
+/// Schema version of the cache file. Bump whenever the candidate encoding
+/// or the tuning-space semantics change shape: entries written by an older
+/// binary are **ignored on load** (and rewritten at the current version on
+/// the next `save`), so stale cached blockings can never be applied to a
+/// reshaped tuning space. History: v1 = PR-1 encoding, unchecked on load;
+/// v2 = same encoding, version-checked (conv training-driver era).
+const FORMAT_VERSION: usize = 2;
 
 /// The cache: a keyed map of winners plus the file it persists to.
 #[derive(Debug)]
@@ -218,6 +224,14 @@ impl TuningCache {
 
     fn entries_from_json_text(text: &str) -> Result<BTreeMap<String, TuneEntry>, String> {
         let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != FORMAT_VERSION {
+            return Err(format!(
+                "schema v{} (this binary writes v{}); ignoring stale entries — the next save \
+                 rewrites the file at the current version",
+                version, FORMAT_VERSION
+            ));
+        }
         let entries = j
             .get("entries")
             .and_then(Json::as_obj)
@@ -336,6 +350,45 @@ mod tests {
         assert!(cache.is_empty(), "garbage file must load as empty, not panic");
         std::fs::write(&path, r#"{"version":1}"#).unwrap();
         assert!(TuningCache::at(&path).is_empty(), "missing entries key tolerated");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_schema_version_is_ignored_and_rewritten() {
+        let dir = std::env::temp_dir().join("brgemm_dl_tune_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache_stale_version.json");
+        // A v1 file (what pre-schema-check binaries wrote) holding a
+        // perfectly well-formed entry: it must load as empty, because the
+        // tuning space it was ranked against may since have been reshaped.
+        let entry_json = sample_entry().to_json().to_string_compact();
+        std::fs::write(
+            &path,
+            format!(r#"{{"version":1,"entries":{{"conv|stale|isa=scalar|t=1":{}}}}}"#, entry_json),
+        )
+        .unwrap();
+        let mut cache = TuningCache::at(&path);
+        assert!(cache.is_empty(), "v1 entries must not survive into a v2 binary");
+        // Same for a file with no version field at all.
+        std::fs::write(
+            &path,
+            format!(r#"{{"entries":{{"conv|stale|isa=scalar|t=1":{}}}}}"#, entry_json),
+        )
+        .unwrap();
+        assert!(TuningCache::at(&path).is_empty(), "unversioned entries ignored");
+        // A save rewrites the file at the current schema version, after
+        // which entries round-trip again.
+        let key = TuneKey {
+            primitive: "conv".into(),
+            shape: "fresh".into(),
+            isa: "scalar".into(),
+            nthreads: 1,
+        };
+        cache.put(&key, sample_entry());
+        cache.save().unwrap();
+        let reloaded = TuningCache::at(&path);
+        assert_eq!(reloaded.len(), 1);
+        assert_eq!(reloaded.get(&key).unwrap(), &sample_entry());
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,693 @@
+//! The CNN training driver: end-to-end convolution training through the
+//! coordinator (paper §4, Algorithms 4–5).
+//!
+//! [`CnnModel`] is the conv analogue of [`MlpModel`](super::trainer::MlpModel):
+//! a stack of [`ConvPrimitive`] layers — forward with fused bias+ReLU,
+//! `backward_data` for the gradient chain, `update` for `dW` **and** `db` —
+//! followed by an average-pool / flatten stage ([`AvgPool`]) and the FC
+//! softmax-cross-entropy head. Every GEMM of every pass is a BRGEMM
+//! primitive call, which is the paper's central claim exercised for CNN
+//! *training*, not just inference.
+//!
+//! Activations flow between conv layers in blocked form: the chain
+//! invariant (consumer `bc` = producer `bk`) makes the producer's output
+//! `[N][Kb][P][Q][bk]` exactly the consumer's unpadded input, so the only
+//! inter-layer reformat is the spatial border re-pad
+//! ([`layout::repad_blocked`] forward, [`layout::crop_blocked`] backward).
+//!
+//! The model implements [`Model`], so
+//! [`DataParallelTrainer`](super::trainer::DataParallelTrainer) and the
+//! ring-allreduce path in [`super::dist`] work over it unchanged. With
+//! `tuned`, layer construction routes through [`ConvPrimitive::tuned`]
+//! (and the head through the FC tuning cache), feeding the autotuner's
+//! cached winners a real conv training workload.
+
+use crate::coordinator::data::ClassifyData;
+use crate::coordinator::resnet;
+use crate::coordinator::trainer::{eval_accuracy, softmax_xent, Model};
+use crate::primitives::conv::{ConvConfig, ConvPrimitive};
+use crate::primitives::eltwise::{act_backward, Act};
+use crate::primitives::fc::{FcConfig, FcPrimitive};
+use crate::primitives::pool::{AvgPool, PoolConfig};
+use crate::tensor::layout;
+use crate::util::num::largest_divisor_le as pick;
+use crate::util::rng::Rng;
+
+/// Shape of one conv stage (plain dims; blocking is chosen internally and
+/// possibly overridden by the tuning cache).
+#[derive(Debug, Clone, Copy)]
+pub struct ConvSpec {
+    pub k: usize,
+    pub r: usize,
+    pub s: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+/// A full CNN topology: input image shape, conv stack, pool stage, head.
+#[derive(Debug, Clone)]
+pub struct CnnSpec {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub convs: Vec<ConvSpec>,
+    /// Average-pool window after the last conv; `0` = global pool
+    /// (ResNet-style: one feature per channel).
+    pub pool_win: usize,
+    /// Pool stride (ignored for global pooling).
+    pub pool_stride: usize,
+    pub classes: usize,
+}
+
+impl CnnSpec {
+    /// A compact topology drawn from the ResNet-50 layer table
+    /// ([`resnet::mini_stack`]): `depth` alternating 3×3 / 1×1 64-channel
+    /// stage-1 convs at `56/scale` spatial resolution, global average
+    /// pool, FC head. This is the `{"model": "cnn"}` run-config workload.
+    pub fn resnet_mini(scale: usize, depth: usize, classes: usize) -> CnnSpec {
+        let stack = resnet::mini_stack(depth);
+        let hw = (56 / scale.max(1)).max(3);
+        CnnSpec {
+            in_c: stack[0].c,
+            in_h: hw,
+            in_w: hw,
+            convs: stack
+                .iter()
+                .map(|l| ConvSpec { k: l.k, r: l.r, s: l.s, stride: l.stride, pad: l.pad })
+                .collect(),
+            pool_win: 0,
+            pool_stride: 1,
+            classes,
+        }
+    }
+
+    /// Flattened input dimensionality (`C·H·W`) — what the synthetic data
+    /// pipeline must produce per sample.
+    pub fn input_dim(&self) -> usize {
+        self.in_c * self.in_h * self.in_w
+    }
+
+    /// The default-blocking conv config of every layer, in chain order
+    /// (input dims propagated through strides/padding). The tune-before-
+    /// train path feeds exactly these shapes to the tuner, so its cache
+    /// entries hit at model construction.
+    pub fn conv_configs(&self, batch: usize, nthreads: usize) -> Vec<ConvConfig> {
+        let (mut c, mut h, mut w) = (self.in_c, self.in_h, self.in_w);
+        self.convs
+            .iter()
+            .map(|s| {
+                let cfg = ConvConfig::new(batch, c, s.k, h, w, s.r, s.s, s.stride, s.pad)
+                    .with_act(Act::Relu)
+                    .with_threads(nthreads);
+                c = s.k;
+                h = cfg.p();
+                w = cfg.q();
+                cfg
+            })
+            .collect()
+    }
+
+    /// The pool stage's geometry over the last conv's output (the channel
+    /// blocking is applied by the model, which matches it to the
+    /// producer's `bk`).
+    pub fn pool_config(&self, batch: usize, last: &ConvConfig) -> PoolConfig {
+        if self.pool_win == 0 {
+            PoolConfig::global(batch, last.k, last.p(), last.q())
+        } else {
+            PoolConfig::new(
+                batch,
+                last.k,
+                last.p(),
+                last.q(),
+                self.pool_win,
+                self.pool_stride.max(1),
+            )
+        }
+    }
+
+    /// The FC head's input width — last conv's channels × pooled spatial
+    /// dims. Kept on the spec so the tune-before-train path tunes the
+    /// exact head shape [`CnnModel::new_with`] constructs (global and
+    /// windowed pooling alike).
+    pub fn head_features(&self, batch: usize) -> usize {
+        let last = *self.conv_configs(batch, 1).last().unwrap();
+        let pcfg = self.pool_config(batch, &last);
+        last.k * pcfg.p() * pcfg.q()
+    }
+}
+
+/// One conv layer's state (packed weights + the buffers the training
+/// passes exchange).
+struct ConvLayer {
+    prim: ConvPrimitive,
+    w: Vec<f32>,  // packed [Kb][Cb][R][S][bc][bk]
+    b: Vec<f32>,  // [K]
+    /// Packed, padded input of this layer, kept for the update pass.
+    x: Vec<f32>,
+    /// Packed output (post bias+ReLU), kept for the ReLU backward.
+    y: Vec<f32>,
+    /// Pre-activation gradient (output geometry).
+    dz: Vec<f32>,
+    dw: Vec<f32>,
+    db: Vec<f32>,
+}
+
+/// The FC softmax head's state.
+struct FcHead {
+    prim: FcPrimitive,
+    w: Vec<f32>, // packed [Kb][Cb][bc][bk]
+    b: Vec<f32>, // [classes]
+    y: Vec<f32>,
+    dz: Vec<f32>,
+    dw: Vec<f32>,
+    db: Vec<f32>,
+}
+
+/// A CNN classifier built entirely from the BRGEMM conv/pool/FC
+/// primitives; same driver surface as `MlpModel`.
+pub struct CnnModel {
+    pub batch: usize,
+    pub classes: usize,
+    convs: Vec<ConvLayer>,
+    pool: AvgPool,
+    /// Pooled features, plain `[batch][feat]` (the pooled blocked layout
+    /// flattened per sample — a fixed permutation the head learns under).
+    pool_y: Vec<f32>,
+    /// The head's packed input, kept for its update pass.
+    head_x: Vec<f32>,
+    head: FcHead,
+}
+
+impl CnnModel {
+    pub fn new(spec: &CnnSpec, batch: usize, nthreads: usize, rng: &mut Rng) -> CnnModel {
+        CnnModel::new_with(spec, batch, nthreads, false, rng)
+    }
+
+    /// Like [`CnnModel::new`], with `tuned` routing every conv layer's
+    /// construction through [`ConvPrimitive::tuned`] (and the head through
+    /// the FC tuning cache). Where an independently tuned blocking breaks
+    /// the chain invariant (consumer `bc` = producer `bk`), the consumer
+    /// is re-blocked to restore it — the producer's `bk` always divides
+    /// the shared channel dimension, so the fix never violates a
+    /// divisibility constraint.
+    pub fn new_with(
+        spec: &CnnSpec,
+        batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> CnnModel {
+        assert!(!spec.convs.is_empty(), "need at least one conv layer");
+        assert!(spec.classes >= 2, "need at least two classes");
+        let cfgs = spec.conv_configs(batch, nthreads);
+        let mut prims: Vec<ConvPrimitive> = Vec::with_capacity(cfgs.len());
+        for (i, cfg) in cfgs.iter().enumerate() {
+            let mut prim =
+                if tuned { ConvPrimitive::tuned(*cfg) } else { ConvPrimitive::new(*cfg) };
+            if i > 0 {
+                let prev_bk = prims[i - 1].cfg.bk;
+                if prim.cfg.bc != prev_bk {
+                    let fixed = prim.cfg.with_blocking(prev_bk, prim.cfg.bk, prim.cfg.bq);
+                    prim = ConvPrimitive::new(fixed);
+                }
+            }
+            prims.push(prim);
+        }
+        let convs: Vec<ConvLayer> = prims
+            .into_iter()
+            .map(|prim| {
+                let cfg = prim.cfg;
+                // He init on the plain layout, packed directly (the
+                // blocked form is an internal detail).
+                let scale = (2.0 / (cfg.c * cfg.r * cfg.s) as f32).sqrt();
+                let w_plain = rng.vec_f32(cfg.k * cfg.c * cfg.r * cfg.s, -scale, scale);
+                let w = layout::pack_conv_weights(
+                    &w_plain, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc,
+                );
+                ConvLayer {
+                    w,
+                    b: vec![0.0; cfg.k],
+                    x: Vec::new(),
+                    y: vec![0.0; cfg.output_len()],
+                    dz: vec![0.0; cfg.output_len()],
+                    // Zeroed so grads_flat is well-formed before the first
+                    // backward; each backward replaces them with the
+                    // buffers `ConvPrimitive::update` returns.
+                    dw: vec![0.0; cfg.weights_len()],
+                    db: vec![0.0; cfg.k],
+                    prim,
+                }
+            })
+            .collect();
+
+        // Pool stage over the last conv's output, sharing its channel
+        // block so the blocked buffer is consumed in place.
+        let last = convs.last().unwrap().prim.cfg;
+        let pcfg = spec.pool_config(batch, &last).with_block(last.bk);
+        let pool = AvgPool::new(pcfg);
+        let feat = last.k * pcfg.p() * pcfg.q();
+
+        let mut hcfg = FcConfig::new(batch, feat, spec.classes, Act::Identity)
+            .with_blocking(pick(batch, 24), pick(feat, 64), pick(spec.classes, 64))
+            .with_threads(nthreads);
+        if tuned {
+            hcfg = crate::autotune::tuned_fc_config(hcfg);
+        }
+        let hprim = FcPrimitive::new(hcfg);
+        let hscale = (2.0 / feat as f32).sqrt();
+        let hw_plain = rng.vec_f32(spec.classes * feat, -hscale, hscale);
+        let head = FcHead {
+            w: layout::pack_weights_2d(&hw_plain, spec.classes, feat, hcfg.bk, hcfg.bc),
+            b: vec![0.0; spec.classes],
+            y: vec![0.0; batch * spec.classes],
+            dz: vec![0.0; batch * spec.classes],
+            dw: vec![0.0; spec.classes * feat],
+            db: vec![0.0; spec.classes],
+            prim: hprim,
+        };
+
+        CnnModel {
+            batch,
+            classes: spec.classes,
+            convs,
+            pool,
+            pool_y: vec![0.0; pcfg.output_len()],
+            head_x: Vec::new(),
+            head,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.convs.iter().map(|l| l.w.len() + l.b.len()).sum::<usize>()
+            + self.head.w.len()
+            + self.head.b.len()
+    }
+
+    /// Forward from a plain `[batch][C·H·W]` input (NCHW per sample);
+    /// returns plain logits `[batch][classes]`.
+    pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        let n = self.batch;
+        let cfg0 = self.convs[0].prim.cfg;
+        assert_eq!(x.len(), n * cfg0.c * cfg0.h * cfg0.w, "input shape mismatch");
+        let mut cur =
+            layout::pack_conv_act(x, n, cfg0.c, cfg0.h, cfg0.w, cfg0.bc, cfg0.pad, cfg0.pad);
+        for i in 0..self.convs.len() {
+            let next_cfg =
+                if i + 1 < self.convs.len() { Some(self.convs[i + 1].prim.cfg) } else { None };
+            let l = &mut self.convs[i];
+            l.x = cur;
+            l.prim.forward(&l.x, &l.w, Some(&l.b), &mut l.y);
+            cur = match next_cfg {
+                // Chain invariant: the output [N][Kb][P][Q][bk] is exactly
+                // the consumer's unpadded input — only the border re-pad
+                // remains.
+                Some(nc) => {
+                    layout::repad_blocked(&l.y, n, nc.cb_ct(), nc.h, nc.w, nc.bc, nc.pad, nc.pad)
+                }
+                None => Vec::new(),
+            };
+        }
+        let lastl = self.convs.last().unwrap();
+        self.pool.forward(&lastl.y, &mut self.pool_y);
+        let hcfg = self.head.prim.cfg;
+        self.head_x = layout::pack_act_2d(&self.pool_y, n, hcfg.c, hcfg.bn, hcfg.bc);
+        self.head.prim.forward(&self.head_x, &self.head.w, &self.head.b, &mut self.head.y);
+        layout::unpack_act_2d(&self.head.y, n, hcfg.k, hcfg.bn, hcfg.bk)
+    }
+
+    /// One SGD step; returns the mean cross-entropy loss.
+    pub fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32 {
+        let logits = self.forward(x);
+        let (loss, dlogits) = softmax_xent(&logits, labels, self.classes);
+        self.backward(&dlogits);
+        self.apply_sgd(lr);
+        loss
+    }
+
+    /// Backward from plain dlogits; fills every layer's dw/db.
+    pub fn backward(&mut self, dlogits: &[f32]) {
+        let n = self.batch;
+        let hcfg = self.head.prim.cfg;
+        assert_eq!(dlogits.len(), n * hcfg.k);
+        // Linear head: dz = dlogits, packed.
+        self.head.dz = layout::pack_act_2d(dlogits, n, hcfg.k, hcfg.bn, hcfg.bk);
+        self.head.prim.update(&self.head_x, &self.head.dz, &mut self.head.dw, &mut self.head.db);
+        let wt = layout::transpose_packed_2d(&self.head.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc);
+        let mut dpool_packed = vec![0.0f32; n * hcfg.c];
+        self.head.prim.backward_data(&self.head.dz, &wt, &mut dpool_packed);
+        // Pool-output gradient, plain [n][feat] = the pooled blocked layout.
+        let dpool = layout::unpack_act_2d(&dpool_packed, n, hcfg.c, hcfg.bn, hcfg.bc);
+        // Through the pool into the last conv's output geometry.
+        let mut dy = self.pool.backward(&dpool);
+        for i in (0..self.convs.len()).rev() {
+            let l = &mut self.convs[i];
+            // Chain through the fused ReLU: dz = dy ∘ relu'(y).
+            act_backward(Act::Relu, &dy, &l.y, &mut l.dz);
+            let (dw, db, _) = l.prim.update(&l.x, &l.dz);
+            l.dw = dw;
+            l.db = db;
+            if i > 0 {
+                let cfg = l.prim.cfg;
+                let (dip, _) = l.prim.backward_data(&l.dz, &l.w);
+                // dip has this layer's padded input geometry; cropping the
+                // border yields the producing layer's output gradient
+                // (pad 0 ⇒ the geometries coincide, move instead of copy).
+                dy = if cfg.pad == 0 {
+                    dip
+                } else {
+                    layout::crop_blocked(
+                        &dip, n, cfg.cb_ct(), cfg.h, cfg.w, cfg.bc, cfg.pad, cfg.pad,
+                    )
+                };
+            }
+        }
+    }
+
+    fn apply_sgd(&mut self, lr: f32) {
+        for l in &mut self.convs {
+            for (w, g) in l.w.iter_mut().zip(&l.dw) {
+                *w -= lr * g;
+            }
+            for (b, g) in l.b.iter_mut().zip(&l.db) {
+                *b -= lr * g;
+            }
+        }
+        for (w, g) in self.head.w.iter_mut().zip(&self.head.dw) {
+            *w -= lr * g;
+        }
+        for (b, g) in self.head.b.iter_mut().zip(&self.head.db) {
+            *b -= lr * g;
+        }
+    }
+
+    /// Flatten all gradients (for allreduce): conv layers in order
+    /// (dw then db each), then the head.
+    pub fn grads_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.convs {
+            out.extend_from_slice(&l.dw);
+            out.extend_from_slice(&l.db);
+        }
+        out.extend_from_slice(&self.head.dw);
+        out.extend_from_slice(&self.head.db);
+        out
+    }
+
+    /// Apply SGD from an external (e.g. allreduced) flat gradient.
+    pub fn apply_sgd_from_flat(&mut self, flat: &[f32], lr: f32) {
+        let mut off = 0;
+        for l in &mut self.convs {
+            for (w, g) in l.w.iter_mut().zip(&flat[off..off + l.dw.len()]) {
+                *w -= lr * g;
+            }
+            off += l.dw.len();
+            for (b, g) in l.b.iter_mut().zip(&flat[off..off + l.db.len()]) {
+                *b -= lr * g;
+            }
+            off += l.db.len();
+        }
+        for (w, g) in self.head.w.iter_mut().zip(&flat[off..off + self.head.dw.len()]) {
+            *w -= lr * g;
+        }
+        off += self.head.dw.len();
+        for (b, g) in self.head.b.iter_mut().zip(&flat[off..off + self.head.db.len()]) {
+            *b -= lr * g;
+        }
+        off += self.head.db.len();
+        assert_eq!(off, flat.len(), "flat gradient length mismatch");
+    }
+
+    /// Classification accuracy on plain data (partial final batches are
+    /// padded and masked — see [`eval_accuracy`]).
+    pub fn accuracy(&mut self, data: &ClassifyData, max_batches: usize) -> f64 {
+        eval_accuracy(self, data, max_batches)
+    }
+}
+
+impl Model for CnnModel {
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        CnnModel::forward(self, x)
+    }
+    fn backward(&mut self, dlogits: &[f32]) {
+        CnnModel::backward(self, dlogits)
+    }
+    fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32 {
+        CnnModel::train_step(self, x, labels, lr)
+    }
+    fn grads_flat(&self) -> Vec<f32> {
+        CnnModel::grads_flat(self)
+    }
+    fn apply_sgd_from_flat(&mut self, flat: &[f32], lr: f32) {
+        CnnModel::apply_sgd_from_flat(self, flat, lr)
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn param_count(&self) -> usize {
+        CnnModel::param_count(self)
+    }
+    fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.convs {
+            out.extend_from_slice(&l.w);
+            out.extend_from_slice(&l.b);
+        }
+        out.extend_from_slice(&self.head.w);
+        out.extend_from_slice(&self.head.b);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::DataParallelTrainer;
+
+    fn tiny_spec() -> CnnSpec {
+        CnnSpec {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            convs: vec![
+                ConvSpec { k: 3, r: 3, s: 3, stride: 1, pad: 1 },
+                ConvSpec { k: 4, r: 1, s: 1, stride: 1, pad: 0 },
+            ],
+            pool_win: 0,
+            pool_stride: 1,
+            classes: 3,
+        }
+    }
+
+    /// A spec whose second layer downsamples (strided 1×1), exercising the
+    /// strided backward-by-data path inside the training chain.
+    fn strided_spec() -> CnnSpec {
+        CnnSpec {
+            in_c: 2,
+            in_h: 6,
+            in_w: 6,
+            convs: vec![
+                ConvSpec { k: 4, r: 3, s: 3, stride: 1, pad: 1 },
+                ConvSpec { k: 4, r: 1, s: 1, stride: 2, pad: 0 },
+            ],
+            pool_win: 0,
+            pool_stride: 1,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn cnn_gradients_match_finite_difference() {
+        for (si, spec) in [tiny_spec(), strided_spec()].into_iter().enumerate() {
+            let batch = 2;
+            let classes = spec.classes;
+            let mut rng = Rng::new(5 + si as u64);
+            let mut model = CnnModel::new(&spec, batch, 1, &mut rng);
+            let x = rng.vec_f32(batch * spec.input_dim(), -1.0, 1.0);
+            let labels = vec![0, 2];
+
+            let logits = model.forward(&x);
+            let (_, dlogits) = softmax_xent(&logits, &labels, classes);
+            model.backward(&dlogits);
+            let dw0 = model.convs[0].dw.clone();
+            let db0 = model.convs[0].db.clone();
+            let db1 = model.convs[1].db.clone();
+            let hdw = model.head.dw.clone();
+
+            let eps = 1e-3f32;
+            let loss_of = |m: &mut CnnModel| {
+                let l = m.forward(&x);
+                softmax_xent(&l, &labels, classes).0
+            };
+            // First conv's weights (packed indices; gradients share the
+            // packing, so index-for-index comparison is exact).
+            for &idx in &[0usize, 7, 23, dw0.len() - 1] {
+                let orig = model.convs[0].w[idx];
+                model.convs[0].w[idx] = orig + eps;
+                let lp = loss_of(&mut model);
+                model.convs[0].w[idx] = orig - eps;
+                let lm = loss_of(&mut model);
+                model.convs[0].w[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - dw0[idx]).abs() < 1e-2,
+                    "spec {} conv0 dw[{}]: {} vs {}",
+                    si, idx, num, dw0[idx]
+                );
+            }
+            // Conv biases of both layers — the headline bugfix: without the
+            // db path these gradients would be silently absent.
+            for (li, db) in [(0usize, &db0), (1usize, &db1)] {
+                for idx in 0..db.len() {
+                    let orig = model.convs[li].b[idx];
+                    model.convs[li].b[idx] = orig + eps;
+                    let lp = loss_of(&mut model);
+                    model.convs[li].b[idx] = orig - eps;
+                    let lm = loss_of(&mut model);
+                    model.convs[li].b[idx] = orig;
+                    let num = (lp - lm) / (2.0 * eps);
+                    assert!(
+                        (num - db[idx]).abs() < 1e-2,
+                        "spec {} conv{} db[{}]: {} vs {}",
+                        si, li, idx, num, db[idx]
+                    );
+                }
+            }
+            // Head weights.
+            for &idx in &[0usize, hdw.len() / 2, hdw.len() - 1] {
+                let orig = model.head.w[idx];
+                model.head.w[idx] = orig + eps;
+                let lp = loss_of(&mut model);
+                model.head.w[idx] = orig - eps;
+                let lm = loss_of(&mut model);
+                model.head.w[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - hdw[idx]).abs() < 1e-2,
+                    "spec {} head dw[{}]: {} vs {}",
+                    si, idx, num, hdw[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cnn_learns_separable_data() {
+        let mut rng = Rng::new(11);
+        let spec = CnnSpec {
+            in_c: 3,
+            in_h: 6,
+            in_w: 6,
+            convs: vec![ConvSpec { k: 8, r: 3, s: 3, stride: 1, pad: 1 }],
+            pool_win: 3,
+            pool_stride: 3,
+            classes: 4,
+        };
+        let data = ClassifyData::synth(256, spec.input_dim(), 4, 0.1, &mut rng);
+        let mut model = CnnModel::new(&spec, 16, 1, &mut rng);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 0..100 {
+            let (x, labels) = data.batch(step, 16);
+            last = model.train_step(&x, &labels, 0.1);
+            first.get_or_insert(last);
+        }
+        assert!(last < first.unwrap() * 0.5, "loss {} -> {}", first.unwrap(), last);
+        let acc = model.accuracy(&data, 16);
+        assert!(acc > 0.8, "accuracy {}", acc);
+    }
+
+    #[test]
+    fn cnn_data_parallel_matches_single_worker_math() {
+        // 2 CNN workers on shards A,B through the generic trainer + real
+        // ring-allreduce must equal 1 worker on A∪B (same init, same total
+        // batch) — the dist path works over CnnModel unchanged.
+        let spec = tiny_spec();
+        let mut rng = Rng::new(17);
+        let data = ClassifyData::synth(128, spec.input_dim(), spec.classes, 0.2, &mut rng);
+        let workers: Vec<CnnModel> =
+            (0..2).map(|_| CnnModel::new(&spec, 8, 1, &mut Rng::new(99))).collect();
+        let mut dp = DataParallelTrainer::from_workers(workers, 0.1);
+        let (x0, l0) = data.batch(0, 8);
+        let (x1, l1) = data.batch(1, 8);
+        dp.step(&[(x0.clone(), l0.clone()), (x1.clone(), l1.clone())]);
+        assert!(dp.replicas_consistent());
+
+        let mut single = CnnModel::new(&spec, 16, 1, &mut Rng::new(99));
+        let mut x = x0;
+        x.extend(x1);
+        let mut l = l0;
+        l.extend(l1);
+        single.train_step(&x, &l, 0.1);
+        let a = dp.workers[0].params_flat();
+        let b = single.params_flat();
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-5, "param[{}]: {} vs {}", i, a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn tuned_cnn_applies_cached_blocking_and_matches_math() {
+        use crate::autotune::{cache, Candidate, TuneEntry, TuningCache};
+        // Unique conv shape so no other test's cache entries collide.
+        let spec = CnnSpec {
+            in_c: 6,
+            in_h: 7,
+            in_w: 7,
+            convs: vec![ConvSpec { k: 10, r: 3, s: 3, stride: 1, pad: 1 }],
+            pool_win: 0,
+            pool_stride: 1,
+            classes: 3,
+        };
+        let batch = 4;
+        let ccfg = spec.conv_configs(batch, 1)[0];
+        let cand = Candidate {
+            bn: 1,
+            bc: 3,
+            bk: 5,
+            bq: 7,
+            flat_bq: 0,
+            order: None,
+            fwd_strided: false,
+            upd_transpose: false,
+        };
+        TuningCache::global()
+            .lock()
+            .unwrap()
+            .put(&cache::conv_key(&ccfg), TuneEntry { cand, gflops: 1.0, model_gflops: 1.0 });
+
+        let x = Rng::new(3).vec_f32(batch * spec.input_dim(), -1.0, 1.0);
+        let mut plain = CnnModel::new(&spec, batch, 1, &mut Rng::new(9));
+        let mut tuned = CnnModel::new_with(&spec, batch, 1, true, &mut Rng::new(9));
+        // The tuned path must route through the cached blocking...
+        let tcfg = tuned.convs[0].prim.cfg;
+        assert_eq!((tcfg.bc, tcfg.bk, tcfg.bq), (3, 5, 7));
+        // ...while blocking stays a layout choice, not a math choice.
+        let yp = plain.forward(&x);
+        let yt = tuned.forward(&x);
+        for i in 0..yp.len() {
+            assert!((yp[i] - yt[i]).abs() < 1e-4, "[{}]: {} vs {}", i, yp[i], yt[i]);
+        }
+    }
+
+    #[test]
+    fn resnet_mini_spec_trains_a_step() {
+        // The `{"model": "cnn"}` default topology (scaled down hard) must
+        // run a full train_step end to end: 3×3 and 1×1 table rows, global
+        // pool, FC head.
+        let spec = CnnSpec::resnet_mini(16, 2, 4); // 64ch 3x3+1x1 at 3x3 px
+        assert_eq!(spec.in_c, 64);
+        assert_eq!(spec.convs.len(), 2);
+        let mut rng = Rng::new(21);
+        let data = ClassifyData::synth(16, spec.input_dim(), 4, 0.2, &mut rng);
+        let mut model = CnnModel::new(&spec, 4, 1, &mut rng);
+        let (x, labels) = data.batch(0, 4);
+        let l0 = model.train_step(&x, &labels, 0.05);
+        let l1 = model.train_step(&x, &labels, 0.05);
+        assert!(l0.is_finite() && l1.is_finite());
+        assert!(l1 < l0, "repeated step on one batch must reduce loss: {} -> {}", l0, l1);
+    }
+}

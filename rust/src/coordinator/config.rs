@@ -1,8 +1,22 @@
 //! Run configuration: JSON config files for the launcher.
 //!
-//! A config names a workload (mlp / lstm / resnet), its shape, and the
-//! execution backend (native BRGEMM primitives or compiled XLA artifacts)
-//! — the coordinator's equivalent of a framework's model + run spec.
+//! A config names a workload (mlp / cnn / lstm / resnet), its shape, and
+//! the execution backend (native BRGEMM primitives or compiled XLA
+//! artifacts) — the coordinator's equivalent of a framework's model + run
+//! spec. Two equivalent spellings are accepted:
+//!
+//! * the explicit form, e.g.
+//!   `{"workload": {"kind": "cnn", "scale": 8, "depth": 2, "classes": 8}}`;
+//! * the `model` shorthand, e.g. `{"model": "cnn", "tune": true}`, which
+//!   selects the workload's default shape (`mlp`: 64→128→10, optionally
+//!   overridden by a top-level `sizes` key; `cnn`: the ResNet-mini stack
+//!   of `coordinator::cnn::CnnSpec::resnet_mini` at scale 8, depth 2,
+//!   8 classes — optionally overridden by top-level
+//!   `scale`/`depth`/`classes` keys).
+//!
+//! With `{"tune": true}` the launcher tunes every layer shape before the
+//! first training step and builds the model through the primitives'
+//! `tuned()` constructors (for `cnn`: `ConvPrimitive::tuned`).
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -30,6 +44,9 @@ impl Backend {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Workload {
     Mlp { sizes: Vec<usize> },
+    /// End-to-end CNN training (conv stack + pool + FC head); shape is the
+    /// ResNet-mini stack at spatial `56/scale` with `depth` conv layers.
+    Cnn { scale: usize, depth: usize, classes: usize },
     Lstm { c: usize, k: usize, t: usize, layers: usize },
     Resnet { scale: usize },
 }
@@ -81,18 +98,17 @@ impl RunConfig {
                 .ok_or_else(|| anyhow!("workload.kind required"))?;
             cfg.workload = match kind {
                 "mlp" => {
-                    let sizes = w
+                    let arr = w
                         .get("sizes")
                         .and_then(Json::as_arr)
-                        .ok_or_else(|| anyhow!("mlp needs sizes"))?
-                        .iter()
-                        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad size")))
-                        .collect::<Result<Vec<_>>>()?;
-                    if sizes.len() < 2 {
-                        bail!("mlp sizes needs >= 2 entries");
-                    }
-                    Workload::Mlp { sizes }
+                        .ok_or_else(|| anyhow!("mlp needs sizes"))?;
+                    Workload::Mlp { sizes: parse_sizes(arr)? }
                 }
+                "cnn" => Workload::Cnn {
+                    scale: get_usize(w, "scale", 8)?,
+                    depth: get_usize(w, "depth", 2)?,
+                    classes: get_usize(w, "classes", 8)?,
+                },
                 "lstm" => Workload::Lstm {
                     c: get_usize(w, "c", 64)?,
                     k: get_usize(w, "k", 64)?,
@@ -101,6 +117,32 @@ impl RunConfig {
                 },
                 "resnet" => Workload::Resnet { scale: get_usize(w, "scale", 4)? },
                 other => bail!("unknown workload kind '{}'", other),
+            };
+        }
+        // `model` shorthand: the workload's default shape (top-level
+        // scale/depth/classes apply for cnn). Mutually exclusive with the
+        // explicit `workload` object.
+        if let Some(mv) = j.get("model") {
+            let m = mv.as_str().ok_or_else(|| anyhow!("model must be a string (mlp|cnn)"))?;
+            if j.get("workload").is_some() {
+                bail!("'model' and 'workload' are mutually exclusive; use one");
+            }
+            cfg.workload = match m {
+                "mlp" => {
+                    let sizes = match j.get("sizes") {
+                        None => vec![64, 128, 10],
+                        Some(v) => parse_sizes(
+                            v.as_arr().ok_or_else(|| anyhow!("sizes must be an array"))?,
+                        )?,
+                    };
+                    Workload::Mlp { sizes }
+                }
+                "cnn" => Workload::Cnn {
+                    scale: get_usize(&j, "scale", 8)?,
+                    depth: get_usize(&j, "depth", 2)?,
+                    classes: get_usize(&j, "classes", 8)?,
+                },
+                other => bail!("unknown model '{}' (mlp|cnn)", other),
             };
         }
         if let Some(b) = j.get("backend").and_then(Json::as_str) {
@@ -120,6 +162,11 @@ impl RunConfig {
         if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
             bail!("batch/workers/nthreads must be positive");
         }
+        if let Workload::Cnn { scale, depth, classes } = &cfg.workload {
+            if *scale == 0 || *depth == 0 || *classes < 2 {
+                bail!("cnn workload needs scale >= 1, depth >= 1, classes >= 2");
+            }
+        }
         Ok(cfg)
     }
 
@@ -128,6 +175,19 @@ impl RunConfig {
             .map_err(|e| anyhow!("reading config {}: {}", path, e))?;
         RunConfig::from_json(&text)
     }
+}
+
+/// Parse an MLP `sizes` array (shared by the explicit-workload and
+/// `model`-shorthand spellings, so validation can't drift between them).
+fn parse_sizes(arr: &[Json]) -> Result<Vec<usize>> {
+    let sizes = arr
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad size")))
+        .collect::<Result<Vec<_>>>()?;
+    if sizes.len() < 2 {
+        bail!("mlp sizes needs >= 2 entries");
+    }
+    Ok(sizes)
 }
 
 fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
@@ -170,6 +230,41 @@ mod tests {
         assert!(cfg.tune);
         let cfg = RunConfig::from_json(r#"{"tune": false}"#).unwrap();
         assert!(!cfg.tune);
+    }
+
+    #[test]
+    fn cnn_workload_and_model_shorthand() {
+        let cfg = RunConfig::from_json(
+            r#"{"workload": {"kind": "cnn", "scale": 4, "depth": 3, "classes": 5}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload, Workload::Cnn { scale: 4, depth: 3, classes: 5 });
+        // Shorthand picks the default shape…
+        let cfg = RunConfig::from_json(r#"{"model": "cnn", "tune": true}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Cnn { scale: 8, depth: 2, classes: 8 });
+        assert!(cfg.tune);
+        // …with optional top-level overrides.
+        let cfg = RunConfig::from_json(r#"{"model": "cnn", "scale": 2, "classes": 4}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Cnn { scale: 2, depth: 2, classes: 4 });
+        let cfg = RunConfig::from_json(r#"{"model": "mlp"}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Mlp { sizes: vec![64, 128, 10] });
+        // The mlp shorthand honors a top-level sizes override, like cnn's
+        // scale/depth/classes.
+        let cfg = RunConfig::from_json(r#"{"model": "mlp", "sizes": [784, 256, 10]}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Mlp { sizes: vec![784, 256, 10] });
+        assert!(RunConfig::from_json(r#"{"model": "mlp", "sizes": [5]}"#).is_err());
+        // Wrong-typed sizes/model must error, not silently fall back to
+        // defaults.
+        assert!(RunConfig::from_json(r#"{"model": "mlp", "sizes": 784}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"model": 5}"#).is_err());
+        // Unknown model / ambiguous forms are rejected.
+        assert!(RunConfig::from_json(r#"{"model": "gpt"}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"model": "cnn", "workload": {"kind": "mlp", "sizes": [4, 2]}}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json(r#"{"model": "cnn", "depth": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"model": "cnn", "classes": 1}"#).is_err());
     }
 
     #[test]

@@ -107,6 +107,29 @@ impl ClassifyData {
         self.labels.is_empty()
     }
 
+    /// Batch `i` of size `batch` with **no wraparound**, for evaluation.
+    /// Returns `(x, labels, valid)` where `valid` is how many of the
+    /// `batch` rows are real samples (0 when `i·batch` is past the end of
+    /// the data). Rows past the end are padding — copies of the last
+    /// sample, so the batch stays well-formed for a fixed-batch model —
+    /// and must be excluded from whatever statistic the caller computes.
+    pub fn batch_trimmed(&self, i: usize, batch: usize) -> (Vec<f32>, Vec<i32>, usize) {
+        let n = self.len();
+        if n == 0 {
+            return (vec![0.0; batch * self.dim], vec![0; batch], 0);
+        }
+        let start = i.saturating_mul(batch);
+        let valid = n.saturating_sub(start).min(batch);
+        let mut xs = Vec::with_capacity(batch * self.dim);
+        let mut ls = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let idx = (start + j).min(n - 1);
+            xs.extend_from_slice(&self.x[idx * self.dim..(idx + 1) * self.dim]);
+            ls.push(self.labels[idx]);
+        }
+        (xs, ls, valid)
+    }
+
     /// Batch `i` of size `batch` (wrapping).
     pub fn batch(&self, i: usize, batch: usize) -> (Vec<f32>, Vec<i32>) {
         let n = self.len();
@@ -211,6 +234,25 @@ mod tests {
             }
         }
         assert!(correct as f64 / d.len() as f64 > 0.95, "{}/512", correct);
+    }
+
+    #[test]
+    fn batch_trimmed_pads_and_reports_valid_rows() {
+        let mut rng = Rng::new(6);
+        let d = ClassifyData::synth(10, 4, 2, 0.1, &mut rng);
+        // Full batch: all rows valid.
+        let (x, l, valid) = d.batch_trimmed(0, 4);
+        assert_eq!((x.len(), l.len(), valid), (16, 4, 4));
+        assert_eq!(l[0], d.labels[0]);
+        // Final partial batch: 10 = 2*4 + 2 → 2 valid, padding = last sample.
+        let (x, l, valid) = d.batch_trimmed(2, 4);
+        assert_eq!(valid, 2);
+        assert_eq!(l[0], d.labels[8]);
+        assert_eq!(l[3], d.labels[9], "padding repeats the last sample");
+        assert_eq!(&x[3 * 4..4 * 4], &d.x[9 * 4..10 * 4]);
+        // Past the end: zero valid rows.
+        let (_, _, valid) = d.batch_trimmed(3, 4);
+        assert_eq!(valid, 0);
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! * [`data`]    — synthetic data pipelines (WMT-like sequence corpus with
 //!   the paper's length-bucketing load balancer; learnable classification
 //!   data for the e2e drivers).
-//! * [`trainer`] — training drivers over the native BRGEMM primitives,
-//!   including synchronous data-parallel training with a real
-//!   ring-allreduce.
+//! * [`trainer`] — training drivers over the native BRGEMM primitives
+//!   (the [`trainer::Model`] surface + the MLP driver), including
+//!   synchronous data-parallel training with a real ring-allreduce.
+//! * [`cnn`]     — the CNN training driver: conv stacks (fwd bias+ReLU,
+//!   backward-by-data, weight+bias update) with a pooling stage and the
+//!   FC softmax head, end to end through the conv primitives.
 //! * [`dist`]    — the distributed simulator: collective algorithms +
 //!   α-β network cost model reproducing the paper's multi-node scaling
 //!   experiments (Fig. 10) on a single host.
@@ -18,6 +21,7 @@
 //! * [`metrics`] — counters/timers with exact parallel merge and JSON
 //!   export.
 
+pub mod cnn;
 pub mod config;
 pub mod data;
 pub mod dist;

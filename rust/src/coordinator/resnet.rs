@@ -71,6 +71,18 @@ impl ResnetLayer {
     }
 }
 
+/// A compact, *chainable* conv stack for the CNN training driver, drawn
+/// from the stage-1 workhorse rows of the table: id 4 (the 3×3 64→64,
+/// stride 1, pad 1) alternated with id 3 (the 1×1 64→64). Unlike arbitrary
+/// table rows, consecutive entries compose (input channels = producer
+/// output channels, spatial dims preserved), so the stack trains end to
+/// end at any `depth`; spatial scaling is applied via
+/// [`ResnetLayer::conv_config`]-style division by the driver.
+pub fn mini_stack(depth: usize) -> Vec<ResnetLayer> {
+    assert!(depth >= 1, "need at least one conv layer");
+    (0..depth).map(|i| RESNET50_LAYERS[if i % 2 == 0 { 3 } else { 2 }]).collect()
+}
+
 /// Weighted GFLOPS over (layer, seconds) measurements, weights = reps
 /// (the paper's topology-weighted efficiency).
 pub fn weighted_gflops(measured: &[(ResnetLayer, f64, f64)]) -> f64 {
@@ -114,6 +126,20 @@ mod tests {
         assert_eq!(cfg.c, l.c);
         assert_eq!(cfg.k, l.k);
         assert_eq!(cfg.h, 28);
+    }
+
+    #[test]
+    fn mini_stack_chains() {
+        let stack = mini_stack(4);
+        assert_eq!(stack.len(), 4);
+        for w in stack.windows(2) {
+            assert_eq!(w[0].k, w[1].c, "consecutive layers must chain");
+        }
+        for l in &stack {
+            // Stride-1 with pad = r/2 ⇒ spatial dims preserved layer to layer.
+            assert_eq!(l.stride, 1);
+            assert_eq!(l.pad, l.r / 2);
+        }
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! every GEMM — forward, backward and update — is a BRGEMM primitive call;
 //! the layer blockings are chosen so activations flow between layers in
 //! blocked form with **no inter-layer reformat** (producer `bk` = consumer
-//! `bc`). [`DataParallelTrainer`] replicates a model across simulated
-//! workers, shards batches, combines gradients with the real
-//! [`super::dist::ring_allreduce`], and tracks both measured compute time
-//! and modelled communication time (Fig. 10 methodology).
+//! `bc`). The [`Model`] trait is the driver-facing surface every trainable
+//! model exposes (the CNN driver in [`super::cnn`] implements the same
+//! contract), so [`DataParallelTrainer`] is generic: it replicates any
+//! [`Model`] across simulated workers, shards batches, combines gradients
+//! with the real [`super::dist::ring_allreduce`], and tracks both measured
+//! compute time and modelled communication time (Fig. 10 methodology).
 
 use crate::coordinator::data::ClassifyData;
 use crate::coordinator::dist::{ring_allreduce, NetworkModel};
@@ -17,6 +19,72 @@ use crate::tensor::layout::{pack_act_2d, transpose_packed_2d, unpack_act_2d};
 use crate::util::num::largest_divisor_le as pick;
 use crate::util::rng::Rng;
 use std::time::Instant;
+
+/// The surface a trainable classifier exposes to the coordinator's
+/// drivers: plain-layout logits out, plain dlogits in, flat gradient
+/// exchange for the allreduce path. Implemented by [`MlpModel`] and the
+/// CNN driver ([`super::cnn::CnnModel`]); [`DataParallelTrainer`] and
+/// [`eval_accuracy`] work over any implementation unchanged.
+pub trait Model {
+    /// Forward from a plain `[batch][d_in]` input to plain
+    /// `[batch][classes]` logits (stores whatever the backward pass needs).
+    fn forward(&mut self, x: &[f32]) -> Vec<f32>;
+    /// Backward from plain dlogits; fills the per-layer gradients.
+    fn backward(&mut self, dlogits: &[f32]);
+    /// One local SGD step (forward → softmax-xent → backward → in-place
+    /// parameter update); returns the mean loss. In-place, so single-model
+    /// training pays no flat-gradient copy.
+    fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32;
+    /// Flatten all gradients (for allreduce), in deterministic layer order.
+    fn grads_flat(&self) -> Vec<f32>;
+    /// Apply SGD from an external (e.g. allreduced) flat gradient, in the
+    /// same order as [`Model::grads_flat`].
+    fn apply_sgd_from_flat(&mut self, flat: &[f32], lr: f32);
+    /// Softmax width (output classes).
+    fn classes(&self) -> usize;
+    /// The model's fixed mini-batch (rows per forward call).
+    fn batch_size(&self) -> usize;
+    /// Total trainable parameter count (weights + biases).
+    fn param_count(&self) -> usize;
+    /// Flattened parameters in [`Model::grads_flat`] order, for
+    /// replica-consistency checks.
+    fn params_flat(&self) -> Vec<f32>;
+}
+
+/// Classification accuracy of `model` over the first
+/// `min(max_batches · batch, data.len())` samples. The final batch may be
+/// partial (`len % batch != 0`): it is padded up to the model's fixed
+/// batch via [`ClassifyData::batch_trimmed`] and the padded rows are
+/// masked out of the count — no sample is dropped, double-counted, or
+/// wrapped around.
+pub fn eval_accuracy<M: Model>(model: &mut M, data: &ClassifyData, max_batches: usize) -> f64 {
+    let batch = model.batch_size();
+    let classes = model.classes();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..max_batches {
+        let (x, labels, valid) = data.batch_trimmed(i, batch);
+        if valid == 0 {
+            break;
+        }
+        let logits = model.forward(&x);
+        for (j, &lab) in labels.iter().take(valid).enumerate() {
+            let row = &logits[j * classes..(j + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == lab as usize);
+        }
+        total += valid;
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
 
 /// One FC layer's state.
 struct Layer {
@@ -208,27 +276,45 @@ impl MlpModel {
         }
     }
 
-    /// Classification accuracy on plain data.
+    /// Classification accuracy on plain data (partial final batches are
+    /// padded and masked — see [`eval_accuracy`]).
     pub fn accuracy(&mut self, data: &ClassifyData, max_batches: usize) -> f64 {
-        let classes = *self.sizes.last().unwrap();
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        for i in 0..max_batches {
-            let (x, labels) = data.batch(i, self.batch);
-            let logits = self.forward(&x);
-            for (j, &lab) in labels.iter().enumerate() {
-                let row = &logits[j * classes..(j + 1) * classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                correct += usize::from(pred == lab as usize);
-                total += 1;
-            }
+        eval_accuracy(self, data, max_batches)
+    }
+}
+
+impl Model for MlpModel {
+    fn forward(&mut self, x: &[f32]) -> Vec<f32> {
+        MlpModel::forward(self, x)
+    }
+    fn backward(&mut self, dlogits: &[f32]) {
+        MlpModel::backward(self, dlogits)
+    }
+    fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32 {
+        MlpModel::train_step(self, x, labels, lr)
+    }
+    fn grads_flat(&self) -> Vec<f32> {
+        MlpModel::grads_flat(self)
+    }
+    fn apply_sgd_from_flat(&mut self, flat: &[f32], lr: f32) {
+        MlpModel::apply_sgd_from_flat(self, flat, lr)
+    }
+    fn classes(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn param_count(&self) -> usize {
+        MlpModel::param_count(self)
+    }
+    fn params_flat(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.extend_from_slice(&l.w);
+            out.extend_from_slice(&l.b);
         }
-        correct as f64 / total as f64
+        out
     }
 }
 
@@ -264,14 +350,16 @@ pub struct DistStep {
     pub comm_secs: f64,
 }
 
-/// Synchronous data-parallel training over simulated workers.
-pub struct DataParallelTrainer {
-    pub workers: Vec<MlpModel>,
+/// Synchronous data-parallel training over simulated workers. Generic
+/// over the [`Model`] surface, so the MLP and CNN drivers (and any future
+/// model) share one trainer and one ring-allreduce path.
+pub struct DataParallelTrainer<M: Model = MlpModel> {
+    pub workers: Vec<M>,
     pub net: NetworkModel,
     pub lr: f32,
 }
 
-impl DataParallelTrainer {
+impl DataParallelTrainer<MlpModel> {
     /// All replicas start from identical parameters (same seed).
     pub fn new(
         sizes: &[usize],
@@ -280,7 +368,7 @@ impl DataParallelTrainer {
         nthreads: usize,
         lr: f32,
         seed: u64,
-    ) -> DataParallelTrainer {
+    ) -> DataParallelTrainer<MlpModel> {
         DataParallelTrainer::new_with(sizes, local_batch, workers, nthreads, lr, seed, false)
     }
 
@@ -296,14 +384,25 @@ impl DataParallelTrainer {
         lr: f32,
         seed: u64,
         tuned: bool,
-    ) -> DataParallelTrainer {
+    ) -> DataParallelTrainer<MlpModel> {
         let models = (0..workers)
             .map(|_| {
                 let mut rng = Rng::new(seed); // identical init across ranks
                 MlpModel::new_with(sizes, local_batch, nthreads, tuned, &mut rng)
             })
             .collect();
-        DataParallelTrainer { workers: models, net: NetworkModel::omnipath(), lr }
+        DataParallelTrainer::from_workers(models, lr)
+    }
+}
+
+impl<M: Model> DataParallelTrainer<M> {
+    /// Wrap pre-built replicas. Every replica must start from identical
+    /// parameters (checked), or synchronous SGD silently diverges.
+    pub fn from_workers(workers: Vec<M>, lr: f32) -> DataParallelTrainer<M> {
+        assert!(!workers.is_empty(), "need at least one worker");
+        let dp = DataParallelTrainer { workers, net: NetworkModel::omnipath(), lr };
+        assert!(dp.replicas_consistent(), "replicas must start from identical parameters");
+        dp
     }
 
     /// One synchronous step: worker `w` trains on `shards[w]`; gradients
@@ -317,8 +416,7 @@ impl DataParallelTrainer {
         for (w, (x, labels)) in self.workers.iter_mut().zip(shards) {
             let t0 = Instant::now();
             let logits = w.forward(x);
-            let (loss, dlogits) =
-                softmax_xent(&logits, labels, *w.sizes.last().unwrap());
+            let (loss, dlogits) = softmax_xent(&logits, labels, w.classes());
             w.backward(&dlogits);
             compute = compute.max(t0.elapsed().as_secs_f64());
             losses.push(loss);
@@ -339,15 +437,10 @@ impl DataParallelTrainer {
     }
 
     /// Replicas must stay bit-identical under synchronous SGD; used as a
-    /// consistency check by tests and the e2e driver.
+    /// consistency check by tests and the e2e drivers.
     pub fn replicas_consistent(&self) -> bool {
-        let r0 = &self.workers[0];
-        self.workers.iter().all(|w| {
-            w.layers
-                .iter()
-                .zip(&r0.layers)
-                .all(|(a, b)| a.w == b.w && a.b == b.b)
-        })
+        let r0 = self.workers[0].params_flat();
+        self.workers.iter().skip(1).all(|w| w.params_flat() == r0)
     }
 }
 
@@ -384,6 +477,37 @@ mod tests {
         assert!(last < first.unwrap() * 0.5, "loss {} -> {}", first.unwrap(), last);
         let acc = model.accuracy(&data, 8);
         assert!(acc > 0.9, "accuracy {}", acc);
+    }
+
+    #[test]
+    fn accuracy_handles_partial_final_batch() {
+        // 36 % 8 = 4: the old wrapping evaluation re-counted the first 4
+        // samples; pad-and-mask must count each of the 36 exactly once.
+        let mut rng = Rng::new(23);
+        let data = ClassifyData::synth(36, 8, 3, 0.15, &mut rng);
+        // Same init seed ⇒ identical weights regardless of model batch, so
+        // the batch-1 model is a per-sample oracle for the batch-8 model.
+        let mut m8 = MlpModel::new(&[8, 16, 3], 8, 1, &mut Rng::new(7));
+        let mut m1 = MlpModel::new(&[8, 16, 3], 1, 1, &mut Rng::new(7));
+        let mut correct = 0usize;
+        for i in 0..data.len() {
+            let (x, l) = data.batch(i, 1);
+            let logits = m1.forward(&x);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == l[0] as usize);
+        }
+        let want = correct as f64 / data.len() as f64;
+        // 5 batches of 8 cover the 36 samples only via a partial final batch.
+        let got = m8.accuracy(&data, 5);
+        assert!((got - want).abs() < 1e-9, "partial batch: {} vs {}", got, want);
+        // More batches than data must not wrap around and change the answer.
+        let again = m8.accuracy(&data, 100);
+        assert!((again - got).abs() < 1e-9, "no wraparound: {} vs {}", again, got);
     }
 
     #[test]

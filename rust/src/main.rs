@@ -10,9 +10,10 @@
 use anyhow::{anyhow, bail, Result};
 use brgemm_dl::autotune::{tuner, TuneOpts, TuningCache};
 use brgemm_dl::cli::{usage, Args, Command, OptSpec};
+use brgemm_dl::coordinator::cnn::{CnnModel, CnnSpec};
 use brgemm_dl::coordinator::config::{Backend, RunConfig, Workload};
 use brgemm_dl::coordinator::data::ClassifyData;
-use brgemm_dl::coordinator::trainer::{DataParallelTrainer, MlpModel};
+use brgemm_dl::coordinator::trainer::{eval_accuracy, DataParallelTrainer, MlpModel, Model};
 use brgemm_dl::perfmodel;
 use brgemm_dl::primitives::conv::{ConvConfig, ConvPrimitive};
 use brgemm_dl::primitives::eltwise::Act;
@@ -158,26 +159,28 @@ fn cmd_run(args: &Args) -> Result<()> {
     match (cfg.workload.clone(), cfg.backend) {
         (Workload::Mlp { sizes }, Backend::Native) => run_mlp_native(&cfg, &sizes),
         (Workload::Mlp { .. }, Backend::Xla) => run_mlp_xla(&cfg),
+        (Workload::Cnn { scale, depth, classes }, Backend::Native) => {
+            run_cnn_native(&cfg, scale, depth, classes)
+        }
         (w, b) => bail!("workload {:?} on backend {:?} not wired in the CLI (see examples/)", w, b),
     }
 }
 
-fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
-    if cfg.tune {
-        tune_mlp_layers(cfg, sizes);
-    }
-    let mut rng = Rng::new(cfg.seed);
-    let data = ClassifyData::synth(4096, sizes[0], *sizes.last().unwrap(), 0.2, &mut rng);
+/// Shared native training driver over any [`Model`]: multi-worker
+/// synchronous data-parallel (real ring-allreduce, modelled comm time) or
+/// single-model SGD, with step logging and a final accuracy report.
+/// `build` constructs one replica from a seeded RNG; every replica is
+/// built from the same seed so synchronous SGD starts bit-identical.
+fn drive_native<M: Model>(
+    cfg: &RunConfig,
+    data: &ClassifyData,
+    build: impl Fn(&mut Rng) -> M,
+) -> Result<()> {
     if cfg.workers > 1 {
-        let mut dp = DataParallelTrainer::new_with(
-            sizes,
-            cfg.batch,
-            cfg.workers,
-            cfg.nthreads,
-            cfg.lr as f32,
-            cfg.seed,
-            cfg.tune,
-        );
+        let workers: Vec<M> =
+            (0..cfg.workers).map(|_| build(&mut Rng::new(cfg.seed))).collect();
+        let mut dp = DataParallelTrainer::from_workers(workers, cfg.lr as f32);
+        log_info!("model params: {} × {} replicas", dp.workers[0].param_count(), cfg.workers);
         for step in 0..cfg.steps {
             let shards: Vec<_> = (0..cfg.workers)
                 .map(|w| data.batch(step * cfg.workers + w, cfg.batch))
@@ -197,20 +200,33 @@ fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
             bail!("replicas diverged");
         }
         log_info!("replicas consistent after {} steps", cfg.steps);
+        let acc = eval_accuracy(&mut dp.workers[0], data, 16);
+        log_info!("final accuracy {:.1}% (worker 0)", acc * 100.0);
     } else {
-        let mut model = MlpModel::new_with(sizes, cfg.batch, cfg.nthreads, cfg.tune, &mut rng);
+        let mut model = build(&mut Rng::new(cfg.seed));
         log_info!("model params: {}", model.param_count());
         for step in 0..cfg.steps {
             let (x, labels) = data.batch(step, cfg.batch);
             let loss = model.train_step(&x, &labels, cfg.lr as f32);
-            if step % 20 == 0 || step + 1 == cfg.steps {
+            if step % 10 == 0 || step + 1 == cfg.steps {
                 log_info!("step {:4} loss {:.4}", step, loss);
             }
         }
-        let acc = model.accuracy(&data, 16);
+        let acc = eval_accuracy(&mut model, data, 16);
         log_info!("final accuracy {:.1}%", acc * 100.0);
     }
     Ok(())
+}
+
+fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
+    if cfg.tune {
+        tune_mlp_layers(cfg, sizes);
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let data = ClassifyData::synth(4096, sizes[0], *sizes.last().unwrap(), 0.2, &mut rng);
+    drive_native(cfg, &data, |rng| {
+        MlpModel::new_with(sizes, cfg.batch, cfg.nthreads, cfg.tune, rng)
+    })
 }
 
 /// Tune-before-train: tune every FC layer shape of the MLP (quick
@@ -236,6 +252,73 @@ fn tune_mlp_layers(cfg: &RunConfig, sizes: &[usize]) {
             rep.speedup_vs_default()
         );
     }
+    match cache.save() {
+        Ok(path) => log_info!("tuning cache saved to {}", path.display()),
+        Err(e) => log_warn!("could not save tuning cache: {}", e),
+    }
+}
+
+/// Native CNN training: the conv stack + pool + FC head driver, trained
+/// end to end through the BRGEMM primitives (single- or multi-worker).
+fn run_cnn_native(cfg: &RunConfig, scale: usize, depth: usize, classes: usize) -> Result<()> {
+    let spec = CnnSpec::resnet_mini(scale, depth, classes);
+    if cfg.tune {
+        tune_cnn_layers(cfg, &spec);
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let data = ClassifyData::synth(1024, spec.input_dim(), classes, 0.3, &mut rng);
+    log_info!(
+        "cnn: {} conv layers at {}x{}x{}",
+        spec.convs.len(),
+        spec.in_c,
+        spec.in_h,
+        spec.in_w
+    );
+    drive_native(cfg, &data, |rng| {
+        CnnModel::new_with(&spec, cfg.batch, cfg.nthreads, cfg.tune, rng)
+    })
+}
+
+/// Tune-before-train for the CNN: tune every conv layer shape (quick
+/// protocol) plus the FC head, persist winners in the global tuning cache
+/// so `CnnModel::new_with(.., tuned: true, ..)` — which routes layer
+/// construction through `ConvPrimitive::tuned` — hits them.
+fn tune_cnn_layers(cfg: &RunConfig, spec: &CnnSpec) {
+    let topts = TuneOpts::quick();
+    let mut cache = TuningCache::global().lock().unwrap();
+    for (i, ccfg) in spec.conv_configs(cfg.batch, cfg.nthreads).iter().enumerate() {
+        let rep = tuner::tune_conv_cached(ccfg, &topts, &mut cache);
+        log_info!(
+            "tuned conv layer {} ({}x{} {}->{} {}x{}/{}): {} at {:.2} GF/s ({:.2}x default)",
+            i,
+            ccfg.h,
+            ccfg.w,
+            ccfg.c,
+            ccfg.k,
+            ccfg.r,
+            ccfg.s,
+            ccfg.stride,
+            rep.best().cand.label(rep.kind),
+            rep.best().gflops,
+            rep.speedup_vs_default()
+        );
+    }
+    // Head: the exact shape the model constructs (last conv's channels ×
+    // pooled spatial dims — see CnnSpec::head_features), tuned with the
+    // update pass enabled, like the MLP path.
+    let feat = spec.head_features(cfg.batch);
+    let fcfg =
+        FcConfig::new(cfg.batch, feat, spec.classes, Act::Identity).with_threads(cfg.nthreads);
+    let rep = tuner::tune_fc_cached(&fcfg, &topts.with_train(true), &mut cache);
+    log_info!(
+        "tuned fc head ({}x{}->{}): {} at {:.2} GF/s ({:.2}x default)",
+        cfg.batch,
+        feat,
+        spec.classes,
+        rep.best().cand.label(rep.kind),
+        rep.best().gflops,
+        rep.speedup_vs_default()
+    );
     match cache.save() {
         Ok(path) => log_info!("tuning cache saved to {}", path.display()),
         Err(e) => log_warn!("could not save tuning cache: {}", e),

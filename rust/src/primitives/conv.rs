@@ -26,7 +26,7 @@ use crate::primitives::eltwise::Act;
 use crate::primitives::partition::{Partition2d, Strategy};
 use crate::tensor::layout;
 use crate::util::num::largest_divisor_le;
-use crate::util::pool::{parallel_region, SharedMut};
+use crate::util::pool::{parallel_for, parallel_region, SharedMut};
 use std::time::Instant;
 
 /// How the spatially-collapsed forward path (legal for 1×1/stride-1/no-pad
@@ -502,8 +502,10 @@ impl ConvPrimitive {
 
     /// Weight update: `dW = Σ_{n,oj,oi} I ⊗ dO` reduced in one BRGEMM chain
     /// per weight block; activations are consumed via the per-row channel
-    /// transpose (the pass's reformat cost).
-    pub fn update(&self, input: &[f32], d_out: &[f32]) -> (Vec<f32>, ConvBreakdown) {
+    /// transpose (the pass's reformat cost). Also returns the bias gradient
+    /// `db[k] = Σ_{n,p,q} dO` — the reduction implied by the per-channel
+    /// bias that [`Self::forward`] consumes.
+    pub fn update(&self, input: &[f32], d_out: &[f32]) -> (Vec<f32>, Vec<f32>, ConvBreakdown) {
         let cfg = &self.cfg;
         assert_eq!(input.len(), cfg.input_len());
         assert_eq!(d_out.len(), cfg.output_len());
@@ -545,7 +547,29 @@ impl ConvPrimitive {
             }
         });
         bd.gemm_secs += t0.elapsed().as_secs_f64();
-        (dw, bd)
+        // Bias gradient: reduce dO over (mini-batch × output pixels). The
+        // blocked layout puts channel k at [kb][..][k % bk], so the db index
+        // ikb·bk + j is the plain channel index. Parallel over channel
+        // blocks (disjoint db slices); kept outside the GEMM/reformat
+        // accounting so the breakdown still reports the dW pass alone.
+        let mut db = vec![0.0f32; cfg.k];
+        {
+            let shared = &SharedMut::new(&mut db);
+            parallel_for(cfg.nthreads, kb, |_tid, ikb| {
+                // SAFETY: per-ikb slices are disjoint.
+                let dbk = unsafe { shared.slice(ikb * cfg.bk, cfg.bk) };
+                for n in 0..cfg.n {
+                    let base = (n * kb + ikb) * p * q * cfg.bk;
+                    for pix in 0..p * q {
+                        let off = base + pix * cfg.bk;
+                        for j in 0..cfg.bk {
+                            dbk[j] += d_out[off + j];
+                        }
+                    }
+                }
+            });
+        }
+        (dw, db, bd)
     }
 }
 
@@ -783,10 +807,30 @@ mod tests {
             let prim = ConvPrimitive::new(cfg);
             let xp = layout::pack_conv_act(&x, n, c, h, w, cfg.bc, pad, pad);
             let dyp = layout::pack_conv_act(&dy, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
-            let (dwp, _) = prim.update(&xp, &dyp);
+            let (dwp, db, _) = prim.update(&xp, &dyp);
             let dw = layout::unpack_conv_weights(&dwp, k, c, r, s, cfg.bk, cfg.bc);
             let want = naive::conv_upd(n, c, k, h, w, r, s, st, pad, &x, &dy);
             check_close(&dw, &want, 1e-3, &format!("upd {:?}", (r, s, st, pad)));
+            let db_want = naive::conv_bias_upd(n, k, cfg.p(), cfg.q(), &dy);
+            check_close(&db, &db_want, 1e-3, &format!("upd db {:?}", (r, s, st, pad)));
+        }
+    }
+
+    #[test]
+    fn update_bias_gradient_nonzero_and_blocked_order() {
+        // The headline bug: `forward` consumes a per-channel bias, so
+        // `update` must produce its gradient. dY = 1 everywhere ⇒
+        // db[k] = N·P·Q for every channel, regardless of blocking.
+        let (n, c, k, h, w) = (2, 4, 8, 5, 5);
+        let cfg = ConvConfig::new(n, c, k, h, w, 3, 3, 1, 1).with_blocking(2, 4, 5);
+        let prim = ConvPrimitive::new(cfg);
+        let xp = vec![0.5; cfg.input_len()];
+        let dyp = vec![1.0; cfg.output_len()];
+        let (_, db, _) = prim.update(&xp, &dyp);
+        assert_eq!(db.len(), k);
+        let want = (n * cfg.p() * cfg.q()) as f32;
+        for (i, v) in db.iter().enumerate() {
+            assert!((v - want).abs() < 1e-3, "db[{}] = {} want {}", i, v, want);
         }
     }
 

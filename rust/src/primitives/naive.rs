@@ -209,6 +209,24 @@ pub fn conv_upd(
     dw
 }
 
+/// Convolution bias gradient: `db[k] = Σ_{n,p,q} dY[n][k][p][q]`.
+pub fn conv_bias_upd(n: usize, k: usize, p: usize, q: usize, dy: &[f32]) -> Vec<f32> {
+    assert_eq!(dy.len(), n * k * p * q);
+    let mut db = vec![0.0f32; k];
+    for ni in 0..n {
+        for kk in 0..k {
+            let mut acc = 0.0f64;
+            for oj in 0..p {
+                for oi in 0..q {
+                    acc += dy[((ni * k + kk) * p + oj) * q + oi] as f64;
+                }
+            }
+            db[kk] += acc as f32;
+        }
+    }
+    db
+}
+
 /// One LSTM forward step over plain layouts (Equations 1-6 verbatim).
 /// Weights `w_*` are `K×C`, recurrent `r_*` are `K×K`, biases length K.
 /// Returns `(i, g, f, o, s_t, h_t)` each `N×K` (g = candidate `c_t`).

@@ -1,0 +1,308 @@
+//! Average pooling over blocked conv activations.
+//!
+//! Pooling is one of the non-GEMM stages the paper's CNN pipeline needs
+//! between convolution stages and the classifier head (ResNet-50 ends in a
+//! global average pool). It operates directly on the conv primitives'
+//! blocked layout `[N][Cb][H][W][bc]` — no unpack/repack round trip — and
+//! is deliberately a simple bandwidth-bound sweep: like the element-wise
+//! stages in [`super::eltwise`], its cost is data movement, not compute.
+//!
+//! The window average is linear, so the backward pass is an exact scatter
+//! of `dY / (win_h·win_w)` back over each input window (overlapping
+//! windows accumulate).
+
+use crate::util::num::largest_divisor_le;
+
+/// Pooling shape: input `[N][C][H][W]` (channel-blocked by `bc`), window
+/// `win_h × win_w` slid with `stride` in both spatial dims.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub win_h: usize,
+    pub win_w: usize,
+    pub stride: usize,
+    /// Channel block of the (blocked) operand; must divide C.
+    pub bc: usize,
+}
+
+impl PoolConfig {
+    pub fn new(n: usize, c: usize, h: usize, w: usize, win: usize, stride: usize) -> PoolConfig {
+        PoolConfig { n, c, h, w, win_h: win, win_w: win, stride, bc: largest_divisor_le(c, 64) }
+    }
+
+    /// Global average pool: one output pixel per channel (ResNet-style).
+    pub fn global(n: usize, c: usize, h: usize, w: usize) -> PoolConfig {
+        PoolConfig { n, c, h, w, win_h: h, win_w: w, stride: 1, bc: largest_divisor_le(c, 64) }
+    }
+
+    /// Override the channel block (rounded down to a divisor of C), e.g. to
+    /// match the producing conv layer's `bk`.
+    pub fn with_block(mut self, bc: usize) -> PoolConfig {
+        assert!(bc >= 1, "block size must be >= 1");
+        self.bc = largest_divisor_le(self.c, bc);
+        self
+    }
+
+    fn validate(&self) {
+        assert_eq!(self.c % self.bc, 0, "bc must divide C");
+        assert!(self.win_h >= 1 && self.win_w >= 1 && self.stride >= 1);
+        assert!(self.win_h <= self.h && self.win_w <= self.w, "window exceeds input");
+    }
+
+    /// Output spatial dims. Checked here (not only in `validate`) because
+    /// shape helpers call these on configs that never reach `AvgPool::new`
+    /// — an oversized window must fail loudly, not underflow.
+    pub fn p(&self) -> usize {
+        assert!(self.win_h <= self.h, "window exceeds input");
+        (self.h - self.win_h) / self.stride + 1
+    }
+    pub fn q(&self) -> usize {
+        assert!(self.win_w <= self.w, "window exceeds input");
+        (self.w - self.win_w) / self.stride + 1
+    }
+    pub fn cb_ct(&self) -> usize {
+        self.c / self.bc
+    }
+    pub fn input_len(&self) -> usize {
+        self.n * self.cb_ct() * self.h * self.w * self.bc
+    }
+    pub fn output_len(&self) -> usize {
+        self.n * self.cb_ct() * self.p() * self.q() * self.bc
+    }
+}
+
+/// The average-pooling primitive (forward + backward) on blocked layouts.
+pub struct AvgPool {
+    pub cfg: PoolConfig,
+}
+
+impl AvgPool {
+    pub fn new(cfg: PoolConfig) -> AvgPool {
+        cfg.validate();
+        AvgPool { cfg }
+    }
+
+    /// `y[n][cb][oj][oi][ic] = mean over the window of x` (blocked layouts,
+    /// x `[N][Cb][H][W][bc]`, y `[N][Cb][P][Q][bc]`).
+    pub fn forward(&self, x: &[f32], y: &mut [f32]) {
+        let c = &self.cfg;
+        assert_eq!(x.len(), c.input_len());
+        assert_eq!(y.len(), c.output_len());
+        let (cb, p, q) = (c.cb_ct(), c.p(), c.q());
+        let inv = 1.0 / (c.win_h * c.win_w) as f32;
+        for n in 0..c.n {
+            for icb in 0..cb {
+                let plane = (n * cb + icb) * c.h * c.w * c.bc;
+                for oj in 0..p {
+                    for oi in 0..q {
+                        let dst = (((n * cb + icb) * p + oj) * q + oi) * c.bc;
+                        y[dst..dst + c.bc].fill(0.0);
+                        for jj in 0..c.win_h {
+                            for ii in 0..c.win_w {
+                                let src = plane
+                                    + ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc;
+                                for ic in 0..c.bc {
+                                    y[dst + ic] += x[src + ic];
+                                }
+                            }
+                        }
+                        for v in &mut y[dst..dst + c.bc] {
+                            *v *= inv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Input gradient: scatter `dy / (win_h·win_w)` back over each window
+    /// (overlapping windows accumulate). Returns dX in the input geometry.
+    pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
+        let c = &self.cfg;
+        assert_eq!(dy.len(), c.output_len());
+        let (cb, p, q) = (c.cb_ct(), c.p(), c.q());
+        let inv = 1.0 / (c.win_h * c.win_w) as f32;
+        let mut dx = vec![0.0f32; c.input_len()];
+        for n in 0..c.n {
+            for icb in 0..cb {
+                let plane = (n * cb + icb) * c.h * c.w * c.bc;
+                for oj in 0..p {
+                    for oi in 0..q {
+                        let src = (((n * cb + icb) * p + oj) * q + oi) * c.bc;
+                        for jj in 0..c.win_h {
+                            for ii in 0..c.win_w {
+                                let dst = plane
+                                    + ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc;
+                                for ic in 0..c.bc {
+                                    dx[dst + ic] += dy[src + ic] * inv;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::layout::{pack_conv_act, unpack_conv_act};
+    use crate::util::rng::Rng;
+
+    /// Plain-NCHW oracle.
+    fn naive_avg_pool(
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        win_h: usize,
+        win_w: usize,
+        stride: usize,
+        x: &[f32],
+    ) -> Vec<f32> {
+        let p = (h - win_h) / stride + 1;
+        let q = (w - win_w) / stride + 1;
+        let mut y = vec![0.0f32; n * c * p * q];
+        for ni in 0..n {
+            for cc in 0..c {
+                for oj in 0..p {
+                    for oi in 0..q {
+                        let mut acc = 0.0f64;
+                        for jj in 0..win_h {
+                            for ii in 0..win_w {
+                                acc += x[((ni * c + cc) * h + (oj * stride + jj)) * w
+                                    + (oi * stride + ii)] as f64;
+                            }
+                        }
+                        y[((ni * c + cc) * p + oj) * q + oi] =
+                            (acc / (win_h * win_w) as f64) as f32;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn naive_avg_pool_bwd(
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        win_h: usize,
+        win_w: usize,
+        stride: usize,
+        dy: &[f32],
+    ) -> Vec<f32> {
+        let p = (h - win_h) / stride + 1;
+        let q = (w - win_w) / stride + 1;
+        let inv = 1.0 / (win_h * win_w) as f32;
+        let mut dx = vec![0.0f32; n * c * h * w];
+        for ni in 0..n {
+            for cc in 0..c {
+                for oj in 0..p {
+                    for oi in 0..q {
+                        let g = dy[((ni * c + cc) * p + oj) * q + oi] * inv;
+                        for jj in 0..win_h {
+                            for ii in 0..win_w {
+                                dx[((ni * c + cc) * h + (oj * stride + jj)) * w
+                                    + (oi * stride + ii)] += g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    #[test]
+    fn forward_matches_naive_various_shapes() {
+        // (n, c, h, w, win, stride, bc): non-overlapping, overlapping, global.
+        for &(n, c, h, w, win, stride, bc) in &[
+            (2usize, 4usize, 6usize, 6usize, 2usize, 2usize, 2usize),
+            (1, 6, 5, 7, 3, 1, 3),
+            (2, 4, 4, 4, 4, 1, 4), // global
+        ] {
+            let mut rng = Rng::new((c * h + w) as u64);
+            let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+            let cfg = PoolConfig::new(n, c, h, w, win, stride).with_block(bc);
+            let pool = AvgPool::new(cfg);
+            let xp = pack_conv_act(&x, n, c, h, w, cfg.bc, 0, 0);
+            let mut yp = vec![0.0; cfg.output_len()];
+            pool.forward(&xp, &mut yp);
+            let y = unpack_conv_act(&yp, n, c, cfg.p(), cfg.q(), cfg.bc, 0, 0);
+            let want = naive_avg_pool(n, c, h, w, win, win, stride, &x);
+            for i in 0..y.len() {
+                assert!(
+                    (y[i] - want[i]).abs() < 1e-5,
+                    "{:?} y[{}]: {} vs {}",
+                    (n, c, h, w, win, stride, bc),
+                    i,
+                    y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_naive_including_overlap() {
+        for &(n, c, h, w, win, stride) in
+            &[(1usize, 4usize, 6usize, 6usize, 2usize, 2usize), (2, 2, 5, 5, 3, 1)]
+        {
+            let cfg = PoolConfig::new(n, c, h, w, win, stride);
+            let pool = AvgPool::new(cfg);
+            let mut rng = Rng::new(9);
+            let dy = rng.vec_f32(n * c * cfg.p() * cfg.q(), -1.0, 1.0);
+            let dyp = pack_conv_act(&dy, n, c, cfg.p(), cfg.q(), cfg.bc, 0, 0);
+            let dxp = pool.backward(&dyp);
+            let dx = unpack_conv_act(&dxp, n, c, h, w, cfg.bc, 0, 0);
+            let want = naive_avg_pool_bwd(n, c, h, w, win, win, stride, &dy);
+            for i in 0..dx.len() {
+                assert!(
+                    (dx[i] - want[i]).abs() < 1e-5,
+                    "{:?} dx[{}]: {} vs {}",
+                    (n, c, h, w, win, stride),
+                    i,
+                    dx[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn global_pool_is_per_channel_mean() {
+        let (n, c, h, w) = (2, 4, 3, 5);
+        let mut rng = Rng::new(4);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let cfg = PoolConfig::global(n, c, h, w);
+        assert_eq!((cfg.p(), cfg.q()), (1, 1));
+        let pool = AvgPool::new(cfg);
+        let xp = pack_conv_act(&x, n, c, h, w, cfg.bc, 0, 0);
+        let mut yp = vec![0.0; cfg.output_len()];
+        pool.forward(&xp, &mut yp);
+        // Output [N][Cb][1][1][bc] flattens to plain [N][C].
+        for ni in 0..n {
+            for cc in 0..c {
+                let mean: f32 = x[(ni * c + cc) * h * w..(ni * c + cc + 1) * h * w]
+                    .iter()
+                    .sum::<f32>()
+                    / (h * w) as f32;
+                assert!((yp[ni * c + cc] - mean).abs() < 1e-5, "({}, {})", ni, cc);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "window exceeds input")]
+    fn oversized_window_rejected() {
+        AvgPool::new(PoolConfig::new(1, 4, 4, 4, 5, 1));
+    }
+}

@@ -316,6 +316,38 @@ pub fn repad_blocked(
     out
 }
 
+/// Inverse of [`repad_blocked`]: strip a spatial border off a blocked
+/// activation tensor, `[N][Cb][H+2ph][W+2pw][bc]` → `[N][Cb][H][W][bc]`
+/// (`h_dim`/`w_dim` are the *unpadded* dims). The CNN training driver uses
+/// it to turn a conv `backward_data` result — which has the padded input
+/// geometry — into the producing layer's output-gradient buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn crop_blocked(
+    src: &[f32],
+    n_dim: usize,
+    cb: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+    ph: usize,
+    pw: usize,
+) -> Vec<f32> {
+    let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
+    assert_eq!(src.len(), n_dim * cb * hp * wp * bc);
+    let mut out = vec![0.0f32; n_dim * cb * h_dim * w_dim * bc];
+    let row = w_dim * bc;
+    for n in 0..n_dim {
+        for icb in 0..cb {
+            for h in 0..h_dim {
+                let s = (((n * cb + icb) * hp + (h + ph)) * wp + pw) * bc;
+                let d = ((n * cb + icb) * h_dim + h) * row;
+                out[d..d + row].copy_from_slice(&src[s..s + row]);
+            }
+        }
+    }
+    out
+}
+
 /// Per-row channel transpose of blocked activations:
 /// I[N][Cb][H][W][bc] → IT[N][Cb][H][bc][W]. The weight-update pass reads
 /// activations channel-major ("Aᵀ" operand); this is its reformat
@@ -437,6 +469,24 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn crop_blocked_inverts_repad() {
+        let mut rng = Rng::new(7);
+        let (n, cb, h, w, bc) = (2, 3, 4, 5, 2);
+        let x = rng.vec_f32(n * cb * h * w * bc, -1.0, 1.0);
+        for (ph, pw) in [(0usize, 0usize), (1, 2), (2, 2)] {
+            let padded = repad_blocked(&x, n, cb, h, w, bc, ph, pw);
+            assert_eq!(crop_blocked(&padded, n, cb, h, w, bc, ph, pw), x, "pad {:?}", (ph, pw));
+        }
+        // And it extracts the interior of a padded pack: pack with padding,
+        // crop, compare against the pad-free pack.
+        let (c, plain_h, plain_w, pbc) = (4, 3, 3, 2);
+        let plain = rng.vec_f32(n * c * plain_h * plain_w, -1.0, 1.0);
+        let padded = pack_conv_act(&plain, n, c, plain_h, plain_w, pbc, 1, 1);
+        let cropped = crop_blocked(&padded, n, c / pbc, plain_h, plain_w, pbc, 1, 1);
+        assert_eq!(cropped, pack_conv_act(&plain, n, c, plain_h, plain_w, pbc, 0, 0));
     }
 
     #[test]

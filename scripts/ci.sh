@@ -27,4 +27,13 @@ else
     echo "formatting check failed (advisory; set CI_STRICT_FMT=1 to enforce)" >&2
 fi
 
+echo "== cargo clippy -q --release (advisory) =="
+if cargo clippy -q --release; then
+    echo "clippy clean"
+else
+    # Advisory like the fmt check: lint drift (or a missing clippy
+    # component) must never mask a real build/test regression above.
+    echo "clippy reported issues or is unavailable (advisory)" >&2
+fi
+
 echo "== tier-1 green =="
