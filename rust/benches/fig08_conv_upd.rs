@@ -5,11 +5,9 @@
 //! transpose (reformat). The bench reports the same split (GEMM vs
 //! reformat) per layer.
 //!
-//! Caveat vs the paper's methodology: `update` now also produces the bias
-//! gradient (a parallel O(N·K·P·Q) reduction over dO), so the timed pass
-//! is dW **and** db while the flop count attributes dW only — a small
-//! systematic understatement of GF/s, largest on 1×1 layers. The
-//! GEMM/reformat split excludes the db sweep.
+//! The timed pass is `update_weights` — dW only, exactly the paper's UPD
+//! methodology. The conv bias gradient is a separate `update_bias` pass
+//! that training drivers add when the layer's bias is learnable.
 
 mod common;
 
@@ -37,10 +35,10 @@ fn main() {
         prim.forward(&case.x_packed, &case.w_packed, None, &mut out);
 
         table.case(&label, "brgemm upd", flops, opts, || {
-            black_box(prim.update(&case.x_packed, &out));
+            black_box(prim.update_weights(&case.x_packed, &out));
         });
         rows.push((case.layer, flops, table.rows.last().unwrap().time.min));
-        let (_, _, bd) = prim.update(&case.x_packed, &out);
+        let (_, bd) = prim.update_weights(&case.x_packed, &out);
         reformat_share.push((case.layer.id, bd.reformat_secs / (bd.gemm_secs + bd.reformat_secs)));
     }
 

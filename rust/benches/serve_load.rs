@@ -1,0 +1,72 @@
+//! serve_load: sustained open-loop inference serving through the dynamic
+//! batcher — the serving analogue of the paper-figure benches.
+//!
+//! An MLP and a small CNN each serve a deterministic Poisson workload
+//! end to end (queue → batch buckets → worker pool → masked responses);
+//! the bench reports throughput, p50/p95/p99 latency and the batch-fill
+//! histogram, and writes the same rows as JSON to
+//! `bench_results/serve_load.json` (EXPERIMENTS.md tooling shape).
+//!
+//! `--quick` / `BENCH_QUICK=1` shrinks the request counts for CI-ish runs.
+
+use brgemm_dl::coordinator::cnn::CnnSpec;
+use brgemm_dl::serve::{run_open_loop, InferenceModel, LoadSpec, NetSpec, ServeOpts};
+use brgemm_dl::util::json::{obj, Json};
+use brgemm_dl::util::rng::Rng;
+
+struct Case {
+    name: &'static str,
+    spec: NetSpec,
+    load: LoadSpec,
+    opts: ServeOpts,
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick");
+    let (mlp_requests, cnn_requests) = if quick { (400, 120) } else { (4000, 800) };
+    let cases = [
+        Case {
+            name: "mlp 64-128-10",
+            spec: NetSpec::Mlp { sizes: vec![64, 128, 10] },
+            load: LoadSpec { requests: mlp_requests, rate_rps: 20_000.0, seed: 42 },
+            opts: ServeOpts { max_batch: 16, workers: 2 },
+        },
+        Case {
+            name: "cnn resnet-mini",
+            spec: NetSpec::Cnn(CnnSpec::resnet_mini(8, 2, 8)),
+            load: LoadSpec { requests: cnn_requests, rate_rps: 2_000.0, seed: 43 },
+            opts: ServeOpts { max_batch: 8, workers: 2 },
+        },
+    ];
+
+    let mut rows: Vec<Json> = Vec::new();
+    for case in &cases {
+        let mut rng = Rng::new(case.load.seed);
+        let model =
+            InferenceModel::from_spec(&case.spec, case.opts.max_batch, 1, false, &mut rng);
+        assert_eq!(
+            model.weight_alloc_ids().len(),
+            model.layer_count(),
+            "packed weights must be allocated exactly once per layer"
+        );
+        let (report, responses) = run_open_loop(model, case.opts, &case.load);
+        assert_eq!(responses.len(), case.load.requests, "open loop must sustain the load");
+        println!("\n== serve_load: {} ==", case.name);
+        print!("{}", report.render());
+        let mut row = report.to_json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("case".to_string(), Json::Str(case.name.to_string()));
+            map.insert("rate_rps".to_string(), Json::Num(case.load.rate_rps));
+            map.insert("max_batch".to_string(), Json::Num(case.opts.max_batch as f64));
+            map.insert("workers".to_string(), Json::Num(case.opts.workers as f64));
+        }
+        rows.push(row);
+    }
+
+    let out = obj([("title", "serve_load — open-loop dynamic-batching serving".into()),
+        ("rows", Json::Arr(rows))]);
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/serve_load.json", out.to_string_pretty()).ok();
+    println!("\nwrote bench_results/serve_load.json");
+}

@@ -243,7 +243,7 @@ impl CnnModel {
         // Pool stage over the last conv's output, sharing its channel
         // block so the blocked buffer is consumed in place.
         let last = convs.last().unwrap().prim.cfg;
-        let pcfg = spec.pool_config(batch, &last).with_block(last.bk);
+        let pcfg = spec.pool_config(batch, &last).with_block(last.bk).with_threads(nthreads);
         let pool = AvgPool::new(pcfg);
         let feat = last.k * pcfg.p() * pcfg.q();
 

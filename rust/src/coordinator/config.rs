@@ -17,6 +17,11 @@
 //! With `{"tune": true}` the launcher tunes every layer shape before the
 //! first training step and builds the model through the primitives'
 //! `tuned()` constructors (for `cnn`: `ConvPrimitive::tuned`).
+//!
+//! A `"serve"` section switches the run from training to inference
+//! serving (see `examples/serve.json`): the workload names the model
+//! topology, and `{"serve": {"rate": 2000, "requests": 512, "max_batch":
+//! 8, "workers": 2}}` shapes the open-loop load and the worker pool.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -51,6 +56,40 @@ pub enum Workload {
     Resnet { scale: usize },
 }
 
+/// Inference-serving parameters (the `"serve"` config section): an
+/// open-loop synthetic load plus the batcher/worker-pool shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeConfig {
+    /// Mean arrival rate of the Poisson open-loop load (requests/second).
+    pub rate: f64,
+    /// Total requests to generate.
+    pub requests: usize,
+    /// Top of the batch-bucket ladder (1/2/4/…/max_batch).
+    pub max_batch: usize,
+    /// Serving worker threads pulling batches off the queue.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { rate: 2000.0, requests: 512, max_batch: 8, workers: 2 }
+    }
+}
+
+impl ServeConfig {
+    /// Shared by the JSON parser and the `serve` CLI flags, so the two
+    /// entry points can never drift on what a legal serving run is.
+    pub fn validate(&self) -> Result<()> {
+        if self.rate <= 0.0 || !self.rate.is_finite() {
+            bail!("serve.rate must be a positive, finite req/s value");
+        }
+        if self.requests == 0 || self.max_batch == 0 || self.workers == 0 {
+            bail!("serve needs requests/max_batch/workers >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// A full run specification.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -66,6 +105,9 @@ pub struct RunConfig {
     /// tuning cache) before the first training step, and build the model
     /// through the primitives' `tuned()` path.
     pub tune: bool,
+    /// When set, the run serves inference traffic instead of training:
+    /// the workload names the topology, `serve` shapes load and pool.
+    pub serve: Option<ServeConfig>,
 }
 
 impl Default for RunConfig {
@@ -80,6 +122,7 @@ impl Default for RunConfig {
             nthreads: 1,
             seed: 42,
             tune: false,
+            serve: None,
         }
     }
 }
@@ -159,6 +202,20 @@ impl RunConfig {
         if let Some(t) = j.get("tune").and_then(Json::as_bool) {
             cfg.tune = t;
         }
+        if let Some(sv) = j.get("serve") {
+            if sv.as_obj().is_none() {
+                bail!("serve must be an object, e.g. {{\"serve\": {{\"rate\": 2000}}}}");
+            }
+            let d = ServeConfig::default();
+            let sc = ServeConfig {
+                rate: get_f64(sv, "rate", d.rate)?,
+                requests: get_usize(sv, "requests", d.requests)?,
+                max_batch: get_usize(sv, "max_batch", d.max_batch)?,
+                workers: get_usize(sv, "workers", d.workers)?,
+            };
+            sc.validate()?;
+            cfg.serve = Some(sc);
+        }
         if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
             bail!("batch/workers/nthreads must be positive");
         }
@@ -194,6 +251,15 @@ fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
     match j.get(key) {
         None => Ok(default),
         Some(v) => v.as_usize().ok_or_else(|| anyhow!("{} must be a non-negative integer", key)),
+    }
+}
+
+/// Like [`get_usize`]: absent → default, present-but-not-a-number → error
+/// (never a silent fallback).
+fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("{} must be a number", key)),
     }
 }
 
@@ -265,6 +331,29 @@ mod tests {
         .is_err());
         assert!(RunConfig::from_json(r#"{"model": "cnn", "depth": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"model": "cnn", "classes": 1}"#).is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_with_defaults_and_overrides() {
+        let cfg = RunConfig::from_json(r#"{}"#).unwrap();
+        assert!(cfg.serve.is_none(), "serving is opt-in");
+        let cfg = RunConfig::from_json(r#"{"model": "mlp", "serve": {}}"#).unwrap();
+        assert_eq!(cfg.serve.unwrap(), ServeConfig::default());
+        let cfg = RunConfig::from_json(
+            r#"{"model": "cnn", "serve":
+                {"rate": 500.5, "requests": 64, "max_batch": 4, "workers": 3}}"#,
+        )
+        .unwrap();
+        let sc = cfg.serve.unwrap();
+        assert!((sc.rate - 500.5).abs() < 1e-12);
+        assert_eq!((sc.requests, sc.max_batch, sc.workers), (64, 4, 3));
+        // Invalid shapes rejected, not silently defaulted.
+        assert!(RunConfig::from_json(r#"{"serve": 5}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"rate": 0}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"rate": "500"}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"requests": "many"}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"max_batch": 0}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"workers": 0}}"#).is_err());
     }
 
     #[test]

@@ -31,6 +31,12 @@
 //!   variants), an analytic cost model that prunes them, an empirical
 //!   tuner that ranks the survivors, and a persistent JSON tuning cache
 //!   the primitives' `tuned()` constructors load automatically.
+//! * [`serve`] — the inference-serving subsystem: a request queue +
+//!   dynamic batcher coalescing single-sample requests into pow-2 batch
+//!   buckets, a worker pool running forward-only MLP/CNN plans built per
+//!   bucket through `tuned()`, all buckets sharing one `Arc`-backed
+//!   packed-weight copy per layer, with latency/throughput/batch-fill
+//!   accounting and a deterministic open-loop load generator.
 //! * [`util`] — self-contained substrates (JSON, RNG, stats, thread pool,
 //!   bench harness, property testing) — the crates.io registry is not
 //!   available in this environment, so these are built in-tree.
@@ -42,5 +48,6 @@ pub mod coordinator;
 pub mod perfmodel;
 pub mod primitives;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   info        — platform, measured peak, artifact inventory
-//!   run         — execute a training run from a JSON config
+//!   run         — execute a training (or, with a "serve" section,
+//!                 serving) run from a JSON config
+//!   serve       — dynamic-batching inference serving under a synthetic
+//!                 open-loop load (see examples/serve.json)
 //!   primitive   — run one DL primitive and report GFLOPS/efficiency
 //!   tune        — autotune a primitive's blockings, persist the winner
 //!   xla         — execute one AOT artifact with synthetic inputs
@@ -11,7 +14,7 @@ use anyhow::{anyhow, bail, Result};
 use brgemm_dl::autotune::{tuner, TuneOpts, TuningCache};
 use brgemm_dl::cli::{usage, Args, Command, OptSpec};
 use brgemm_dl::coordinator::cnn::{CnnModel, CnnSpec};
-use brgemm_dl::coordinator::config::{Backend, RunConfig, Workload};
+use brgemm_dl::coordinator::config::{Backend, RunConfig, ServeConfig, Workload};
 use brgemm_dl::coordinator::data::ClassifyData;
 use brgemm_dl::coordinator::trainer::{eval_accuracy, DataParallelTrainer, MlpModel, Model};
 use brgemm_dl::perfmodel;
@@ -20,6 +23,7 @@ use brgemm_dl::primitives::eltwise::Act;
 use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
+use brgemm_dl::serve::{run_open_loop, InferenceModel, LoadSpec, NetSpec, ServeOpts};
 use brgemm_dl::tensor::layout;
 use brgemm_dl::util::logger;
 use brgemm_dl::util::rng::Rng;
@@ -36,10 +40,33 @@ fn commands() -> Vec<Command> {
         },
         Command {
             name: "run",
-            about: "run a training config (JSON)",
+            about: "run a JSON config: training, or serving when it has a \
+                    'serve' section (examples/serve.json)",
             opts: vec![
                 OptSpec { name: "config", help: "config file path", takes_value: true, default: None },
                 OptSpec { name: "steps", help: "override step count", takes_value: true, default: None },
+            ],
+        },
+        Command {
+            name: "serve",
+            about: "dynamic-batching inference serving under synthetic open-loop load \
+                    (run-config form: examples/serve.json)",
+            // No OptSpec defaults here: Args::parse would materialise them
+            // into the flag map, shadowing the single runtime source of
+            // serving defaults (ServeConfig::default()) and defeating the
+            // --config conflict detection below. Defaults are documented
+            // in the help strings instead.
+            opts: vec![
+                OptSpec { name: "config", help: "JSON run config with a 'serve' section (excludes the other flags)", takes_value: true, default: None },
+                OptSpec { name: "model", help: "mlp|cnn topology [default: mlp]", takes_value: true, default: None },
+                OptSpec { name: "rate", help: "mean arrival rate, req/s [default: 2000]", takes_value: true, default: None },
+                OptSpec { name: "requests", help: "total requests to generate [default: 512]", takes_value: true, default: None },
+                OptSpec { name: "max-batch", help: "top batch bucket (ladder 1/2/4/..) [default: 8]", takes_value: true, default: None },
+                OptSpec { name: "serve-workers", help: "serving worker threads [default: 2]", takes_value: true, default: None },
+                OptSpec { name: "nthreads", help: "threads per primitive call [default: 1]", takes_value: true, default: None },
+                OptSpec { name: "seed", help: "load + weight seed [default: 42]", takes_value: true, default: None },
+                OptSpec { name: "tune", help: "build bucket plans via the tuning cache", takes_value: false, default: None },
+                OptSpec { name: "json", help: "also print the report as one JSON row", takes_value: false, default: None },
             ],
         },
         Command {
@@ -108,6 +135,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("info") => cmd_info(),
         Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
         Some("primitive") => cmd_primitive(&args),
         Some("tune") => cmd_tune(&args),
         Some("xla") => cmd_xla(&args),
@@ -156,6 +184,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.steps = steps;
     }
     log_info!("run config: {:?}", cfg);
+    if let Some(sc) = cfg.serve {
+        return run_serve(&cfg, sc, args.flag("json"));
+    }
     match (cfg.workload.clone(), cfg.backend) {
         (Workload::Mlp { sizes }, Backend::Native) => run_mlp_native(&cfg, &sizes),
         (Workload::Mlp { .. }, Backend::Xla) => run_mlp_xla(&cfg),
@@ -164,6 +195,92 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         (w, b) => bail!("workload {:?} on backend {:?} not wired in the CLI (see examples/)", w, b),
     }
+}
+
+/// Serving driver shared by `run` (config `"serve"` section) and the
+/// `serve` subcommand: build the forward-only bucket-plan model from the
+/// workload topology, drive the deterministic open-loop load through the
+/// batcher + worker pool, and print the latency/throughput report.
+fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
+    let spec = match &cfg.workload {
+        Workload::Mlp { sizes } => NetSpec::Mlp { sizes: sizes.clone() },
+        Workload::Cnn { scale, depth, classes } => {
+            NetSpec::Cnn(CnnSpec::resnet_mini(*scale, *depth, *classes))
+        }
+        w => bail!("workload {:?} not servable (mlp|cnn)", w),
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let model =
+        InferenceModel::from_spec(&spec, sc.max_batch, cfg.nthreads, cfg.tune, &mut rng);
+    log_info!(
+        "serving {}: input dim {}, {} classes, buckets {:?}, {} weight allocations \
+         for {} layers, {} workers",
+        match &spec {
+            NetSpec::Mlp { .. } => "mlp",
+            NetSpec::Cnn(_) => "cnn",
+        },
+        model.input_dim(),
+        model.classes(),
+        model.buckets(),
+        model.weight_alloc_ids().len(),
+        model.layer_count(),
+        sc.workers
+    );
+    let load = LoadSpec { requests: sc.requests, rate_rps: sc.rate, seed: cfg.seed };
+    let opts = ServeOpts { max_batch: sc.max_batch, workers: sc.workers };
+    let (report, responses) = run_open_loop(model, opts, &load);
+    if responses.len() != sc.requests {
+        bail!("served {} of {} requests", responses.len(), sc.requests);
+    }
+    print!("{}", report.render());
+    if emit_json {
+        println!("{}", report.to_json().to_string_compact());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if let Some(path) = args.str("config") {
+        // The config file is authoritative: reject flags it would silently
+        // override (only --json composes with --config).
+        let conflicting: Vec<&str> =
+            ["model", "rate", "requests", "max-batch", "serve-workers", "nthreads", "seed",
+             "tune"]
+            .into_iter()
+            .filter(|&k| args.str(k).is_some())
+            .collect();
+        if !conflicting.is_empty() {
+            bail!(
+                "--config conflicts with --{}: edit the config file or drop --config",
+                conflicting.join(", --")
+            );
+        }
+        let cfg = RunConfig::from_file(path)?;
+        let sc = cfg
+            .serve
+            .ok_or_else(|| anyhow!("config {} has no \"serve\" section", path))?;
+        return run_serve(&cfg, sc, args.flag("json"));
+    }
+    let mut cfg = RunConfig::default();
+    cfg.workload = match args.str_or("model", "mlp") {
+        "mlp" => Workload::Mlp { sizes: vec![64, 128, 10] },
+        "cnn" => Workload::Cnn { scale: 8, depth: 2, classes: 8 },
+        other => bail!("unknown model '{}' (mlp|cnn)", other),
+    };
+    cfg.nthreads = args.usize_or("nthreads", 1).map_err(|e| anyhow!("{}", e))?;
+    cfg.seed = args.usize_or("seed", 42).map_err(|e| anyhow!("{}", e))? as u64;
+    cfg.tune = args.flag("tune");
+    // Runtime fallbacks come from ServeConfig::default() — the one source
+    // of serving defaults, shared with the run-config parser.
+    let d = ServeConfig::default();
+    let sc = ServeConfig {
+        rate: args.f64_or("rate", d.rate).map_err(|e| anyhow!("{}", e))?,
+        requests: args.usize_or("requests", d.requests).map_err(|e| anyhow!("{}", e))?,
+        max_batch: args.usize_or("max-batch", d.max_batch).map_err(|e| anyhow!("{}", e))?,
+        workers: args.usize_or("serve-workers", d.workers).map_err(|e| anyhow!("{}", e))?,
+    };
+    sc.validate()?;
+    run_serve(&cfg, sc, args.flag("json"))
 }
 
 /// Shared native training driver over any [`Model`]: multi-worker

@@ -26,7 +26,8 @@ use crate::primitives::eltwise::Act;
 use crate::primitives::partition::{Partition2d, Strategy};
 use crate::tensor::layout;
 use crate::util::num::largest_divisor_le;
-use crate::util::pool::{parallel_for, parallel_region, SharedMut};
+use crate::util::pool::{parallel_chunks_mut, parallel_region, SharedMut};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// How the spatially-collapsed forward path (legal for 1×1/stride-1/no-pad
@@ -203,6 +204,89 @@ pub struct ConvBreakdown {
     pub reformat_secs: f64,
 }
 
+/// Packed conv weights + bias split out of execution state and shared via
+/// [`Arc`]: one packed copy backs any number of [`ConvPrimitive`]
+/// execution plans (the serving subsystem builds one plan per batch
+/// bucket over a single weight allocation). The packed layout
+/// `[Kb][Cb][R][S][bc][bk]` depends only on the filter shape and the
+/// feature blocking `(bk, bc)` — never on the mini-batch — so every plan
+/// whose blocking matches executes against the same buffer.
+#[derive(Clone)]
+pub struct ConvSharedWeights {
+    pub k: usize,
+    pub c: usize,
+    pub r: usize,
+    pub s: usize,
+    pub bk: usize,
+    pub bc: usize,
+    w: Arc<Vec<f32>>,    // packed [Kb][Cb][R][S][bc][bk]
+    bias: Arc<Vec<f32>>, // [K]
+}
+
+impl ConvSharedWeights {
+    /// Pack plain `[K][C][R][S]` weights + `[K]` bias once for the
+    /// blocking of `cfg`. Clones bump the [`Arc`]s — no repack, no copy.
+    pub fn pack(cfg: &ConvConfig, w_plain: &[f32], bias: &[f32]) -> ConvSharedWeights {
+        assert_eq!(w_plain.len(), cfg.weights_len());
+        assert_eq!(bias.len(), cfg.k);
+        let packed = layout::pack_conv_weights(
+            w_plain, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc,
+        );
+        ConvSharedWeights {
+            k: cfg.k,
+            c: cfg.c,
+            r: cfg.r,
+            s: cfg.s,
+            bk: cfg.bk,
+            bc: cfg.bc,
+            w: Arc::new(packed),
+            bias: Arc::new(bias.to_vec()),
+        }
+    }
+
+    /// Wrap already-packed buffers (e.g. lifted out of a trained model).
+    pub fn from_packed(cfg: &ConvConfig, w: Vec<f32>, bias: Vec<f32>) -> ConvSharedWeights {
+        assert_eq!(w.len(), cfg.weights_len());
+        assert_eq!(bias.len(), cfg.k);
+        ConvSharedWeights {
+            k: cfg.k,
+            c: cfg.c,
+            r: cfg.r,
+            s: cfg.s,
+            bk: cfg.bk,
+            bc: cfg.bc,
+            w: Arc::new(w),
+            bias: Arc::new(bias),
+        }
+    }
+
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    /// Can an execution plan with this config run against these weights?
+    /// Filter shape and feature blocking must agree; the mini-batch (and
+    /// pixel strip `bq`) are free per plan.
+    pub fn matches(&self, cfg: &ConvConfig) -> bool {
+        self.k == cfg.k
+            && self.c == cfg.c
+            && self.r == cfg.r
+            && self.s == cfg.s
+            && self.bk == cfg.bk
+            && self.bc == cfg.bc
+    }
+
+    /// Stable identity of the underlying packed-weight allocation; two
+    /// clones share it (see [`crate::primitives::fc::FcSharedWeights::alloc_id`]).
+    pub fn alloc_id(&self) -> usize {
+        Arc::as_ptr(&self.w) as usize
+    }
+}
+
 /// The BRGEMM-based convolution primitive.
 pub struct ConvPrimitive {
     pub cfg: ConvConfig,
@@ -276,6 +360,20 @@ impl ConvPrimitive {
     /// subcommand or [`crate::autotune::tuner::tune_conv_cached`].
     pub fn tuned(cfg: ConvConfig) -> ConvPrimitive {
         ConvPrimitive::new(crate::autotune::tuned_conv_config(cfg))
+    }
+
+    /// Forward against [`ConvSharedWeights`]: asserts the blocking
+    /// matches, then runs [`Self::forward`] with the shared buffers (bias
+    /// always applied — serving layers carry one). This is the serving hot
+    /// path — many batch-bucket plans, one weight copy.
+    pub fn forward_shared(&self, input: &[f32], w: &ConvSharedWeights, out: &mut [f32]) {
+        assert!(
+            w.matches(&self.cfg),
+            "shared weights (k{} c{} {}x{} bk{} bc{}) do not match plan (k{} c{} {}x{} bk{} bc{})",
+            w.k, w.c, w.r, w.s, w.bk, w.bc,
+            self.cfg.k, self.cfg.c, self.cfg.r, self.cfg.s, self.cfg.bk, self.cfg.bc
+        );
+        self.forward(input, w.w(), Some(w.bias()), out);
     }
 
     /// Forward (Algorithm 4): `out = conv(input, weights) [+bias, act]`.
@@ -500,12 +598,23 @@ impl ConvPrimitive {
         (di, bd)
     }
 
+    /// Weight + bias update: convenience wrapper running
+    /// [`Self::update_weights`] and [`Self::update_bias`] — what a training
+    /// step with a learnable per-channel bias needs. Passes that only
+    /// consume dW (bias-free layers, the paper-exact Fig. 8 / Fig. 10b
+    /// timings) call [`Self::update_weights`] directly and skip the
+    /// O(N·K·P·Q) bias reduction entirely.
+    pub fn update(&self, input: &[f32], d_out: &[f32]) -> (Vec<f32>, Vec<f32>, ConvBreakdown) {
+        let (dw, bd) = self.update_weights(input, d_out);
+        let db = self.update_bias(d_out);
+        (dw, db, bd)
+    }
+
     /// Weight update: `dW = Σ_{n,oj,oi} I ⊗ dO` reduced in one BRGEMM chain
     /// per weight block; activations are consumed via the per-row channel
-    /// transpose (the pass's reformat cost). Also returns the bias gradient
-    /// `db[k] = Σ_{n,p,q} dO` — the reduction implied by the per-channel
-    /// bias that [`Self::forward`] consumes.
-    pub fn update(&self, input: &[f32], d_out: &[f32]) -> (Vec<f32>, Vec<f32>, ConvBreakdown) {
+    /// transpose (the pass's reformat cost). This is the paper's UPD pass
+    /// exactly — no bias gradient (see [`Self::update_bias`]).
+    pub fn update_weights(&self, input: &[f32], d_out: &[f32]) -> (Vec<f32>, ConvBreakdown) {
         let cfg = &self.cfg;
         assert_eq!(input.len(), cfg.input_len());
         assert_eq!(d_out.len(), cfg.output_len());
@@ -547,29 +656,39 @@ impl ConvPrimitive {
             }
         });
         bd.gemm_secs += t0.elapsed().as_secs_f64();
-        // Bias gradient: reduce dO over (mini-batch × output pixels). The
-        // blocked layout puts channel k at [kb][..][k % bk], so the db index
-        // ikb·bk + j is the plain channel index. Parallel over channel
-        // blocks (disjoint db slices); kept outside the GEMM/reformat
-        // accounting so the breakdown still reports the dW pass alone.
+        (dw, bd)
+    }
+
+    /// Bias gradient: `db[k] = Σ_{n,p,q} dO` — the reduction implied by the
+    /// per-channel bias that [`Self::forward`] consumes. The blocked layout
+    /// puts channel k at `[kb][..][k % bk]`, so the db index `ikb·bk + j`
+    /// is the plain channel index. Parallelism is *below* channel-block
+    /// granularity: the K channels are statically chunked across threads,
+    /// so kb = 1 layers (e.g. the 64-channel stage-1 stack) scale instead
+    /// of running the whole sweep on one thread. Per channel the
+    /// accumulation order (mini-batch, then pixels) is unchanged, so the
+    /// result is bit-identical at every thread count.
+    pub fn update_bias(&self, d_out: &[f32]) -> Vec<f32> {
+        let cfg = &self.cfg;
+        assert_eq!(d_out.len(), cfg.output_len());
+        let kb = cfg.kb_ct();
+        let (p, q) = (cfg.p(), cfg.q());
         let mut db = vec![0.0f32; cfg.k];
-        {
-            let shared = &SharedMut::new(&mut db);
-            parallel_for(cfg.nthreads, kb, |_tid, ikb| {
-                // SAFETY: per-ikb slices are disjoint.
-                let dbk = unsafe { shared.slice(ikb * cfg.bk, cfg.bk) };
+        parallel_chunks_mut(cfg.nthreads, &mut db, |_tid, offset, chunk| {
+            for (jj, slot) in chunk.iter_mut().enumerate() {
+                let ch = offset + jj;
+                let (ikb, lane) = (ch / cfg.bk, ch % cfg.bk);
+                let mut acc = 0.0f32;
                 for n in 0..cfg.n {
-                    let base = (n * kb + ikb) * p * q * cfg.bk;
+                    let base = (n * kb + ikb) * p * q * cfg.bk + lane;
                     for pix in 0..p * q {
-                        let off = base + pix * cfg.bk;
-                        for j in 0..cfg.bk {
-                            dbk[j] += d_out[off + j];
-                        }
+                        acc += d_out[base + pix * cfg.bk];
                     }
                 }
-            });
-        }
-        (dw, db, bd)
+                *slot = acc;
+            }
+        });
+        db
     }
 }
 
@@ -832,6 +951,28 @@ mod tests {
         for (i, v) in db.iter().enumerate() {
             assert!((v - want).abs() < 1e-3, "db[{}] = {} want {}", i, v, want);
         }
+    }
+
+    #[test]
+    fn update_split_and_parallel_bias_sweep() {
+        // update = update_weights + update_bias, and the db sweep is
+        // bit-identical at every thread count even below channel-block
+        // granularity (kb = 1 here: one 8-wide block, 4 threads).
+        let (n, c, k, h, w) = (2, 4, 8, 6, 6);
+        let mut rng = Rng::new(33);
+        let cfg = ConvConfig::new(n, c, k, h, w, 3, 3, 1, 1);
+        assert_eq!(cfg.kb_ct(), 1, "test wants a sub-block-parallel case");
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let dy = rng.vec_f32(n * k * cfg.p() * cfg.q(), -1.0, 1.0);
+        let xp = layout::pack_conv_act(&x, n, c, h, w, cfg.bc, 1, 1);
+        let dyp = layout::pack_conv_act(&dy, n, k, cfg.p(), cfg.q(), cfg.bk, 0, 0);
+        let prim = ConvPrimitive::new(cfg);
+        let (dw_all, db_all, _) = prim.update(&xp, &dyp);
+        let (dw_only, _) = prim.update_weights(&xp, &dyp);
+        assert_eq!(dw_all, dw_only, "update_weights must be the dW half of update");
+        assert_eq!(db_all, prim.update_bias(&dyp), "update_bias must be the db half");
+        let prim4 = ConvPrimitive::new(cfg.with_threads(4));
+        assert_eq!(prim4.update_bias(&dyp), db_all, "db bit-identical across thread counts");
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::primitives::eltwise::{act_backward, Act};
 use crate::primitives::partition::{Partition2d, Strategy};
 use crate::util::num::largest_divisor_le;
 use crate::util::pool::{parallel_for, parallel_region, SharedMut};
+use std::sync::Arc;
 
 /// Shape + blocking for one FC layer.
 #[derive(Debug, Clone, Copy)]
@@ -126,6 +127,79 @@ impl FcConfig {
     }
 }
 
+/// Packed FC weights + bias split out of execution state and shared via
+/// [`Arc`]: one packed copy backs any number of [`FcPrimitive`] execution
+/// plans (the serving subsystem builds one plan per batch bucket over a
+/// single weight allocation). The packed layout depends only on the
+/// feature blocking `(bk, bc)` — never on the mini-batch — so every plan
+/// whose blocking matches can execute against the same buffer;
+/// [`Self::matches`] is the compatibility check the executor asserts.
+#[derive(Clone)]
+pub struct FcSharedWeights {
+    pub k: usize,
+    pub c: usize,
+    pub bk: usize,
+    pub bc: usize,
+    w: Arc<Vec<f32>>,    // packed [Kb][Cb][bc][bk]
+    bias: Arc<Vec<f32>>, // [K]
+}
+
+impl FcSharedWeights {
+    /// Pack plain `[K][C]` weights + `[K]` bias once for the blocking of
+    /// `cfg`. Cloning the result never re-packs or re-allocates the
+    /// buffers — it bumps the [`Arc`]s.
+    pub fn pack(cfg: &FcConfig, w_plain: &[f32], bias: &[f32]) -> FcSharedWeights {
+        assert_eq!(w_plain.len(), cfg.k * cfg.c);
+        assert_eq!(bias.len(), cfg.k);
+        let packed =
+            crate::tensor::layout::pack_weights_2d(w_plain, cfg.k, cfg.c, cfg.bk, cfg.bc);
+        FcSharedWeights {
+            k: cfg.k,
+            c: cfg.c,
+            bk: cfg.bk,
+            bc: cfg.bc,
+            w: Arc::new(packed),
+            bias: Arc::new(bias.to_vec()),
+        }
+    }
+
+    /// Wrap already-packed buffers (e.g. lifted out of a trained model).
+    pub fn from_packed(cfg: &FcConfig, w: Vec<f32>, bias: Vec<f32>) -> FcSharedWeights {
+        assert_eq!(w.len(), cfg.k * cfg.c);
+        assert_eq!(bias.len(), cfg.k);
+        FcSharedWeights {
+            k: cfg.k,
+            c: cfg.c,
+            bk: cfg.bk,
+            bc: cfg.bc,
+            w: Arc::new(w),
+            bias: Arc::new(bias),
+        }
+    }
+
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+
+    /// Can an execution plan with this config run against these weights?
+    /// Shape and feature blocking must agree (`bn` is free — that is the
+    /// whole point of sharing across batch buckets).
+    pub fn matches(&self, cfg: &FcConfig) -> bool {
+        self.k == cfg.k && self.c == cfg.c && self.bk == cfg.bk && self.bc == cfg.bc
+    }
+
+    /// Stable identity of the underlying packed-weight allocation; two
+    /// clones share it. Used by tests to assert weights are allocated
+    /// exactly once however many bucket plans exist.
+    pub fn alloc_id(&self) -> usize {
+        Arc::as_ptr(&self.w) as usize
+    }
+}
+
 /// The BRGEMM-based FC primitive (forward + both training passes).
 pub struct FcPrimitive {
     pub cfg: FcConfig,
@@ -204,6 +278,18 @@ impl FcPrimitive {
     /// [`crate::autotune::tuner::tune_fc_cached`].
     pub fn tuned(cfg: FcConfig) -> FcPrimitive {
         FcPrimitive::new(crate::autotune::tuned_fc_config(cfg))
+    }
+
+    /// Forward against [`FcSharedWeights`]: asserts the blocking matches,
+    /// then runs [`Self::forward`] on the shared buffers. This is the
+    /// serving hot path — many batch-bucket plans, one weight copy.
+    pub fn forward_shared(&self, x: &[f32], w: &FcSharedWeights, y: &mut [f32]) {
+        assert!(
+            w.matches(&self.cfg),
+            "shared weights ({}x{} bk{} bc{}) do not match plan ({}x{} bk{} bc{})",
+            w.k, w.c, w.bk, w.bc, self.cfg.k, self.cfg.c, self.cfg.bk, self.cfg.bc
+        );
+        self.forward(x, w.w(), w.bias(), y);
     }
 
     /// Forward: `y = act(x·Wᵀ + b)` on blocked layouts.

@@ -11,7 +11,7 @@
 //! * [`conv`]   — direct convolutions (Algorithms 3/4) + the im2col and
 //!   small-GEMM-loop baselines of Figure 1.
 //! * [`eltwise`] — the fused non-GEMM stages (activations, Hadamard ops).
-//! * [`pool`]   — average pooling on the blocked conv layouts (the
+//! * [`pool`]   — average and max pooling on the blocked conv layouts (the
 //!   conv-stack → classifier-head bridge of the CNN training driver).
 //! * [`partition`] — the thread work-partitioning strategies (§3.2.2).
 //! * [`naive`]  — straightforward reference implementations (oracles).

@@ -1,17 +1,25 @@
-//! Average pooling over blocked conv activations.
+//! Pooling over blocked conv activations (average and max).
 //!
 //! Pooling is one of the non-GEMM stages the paper's CNN pipeline needs
 //! between convolution stages and the classifier head (ResNet-50 ends in a
-//! global average pool). It operates directly on the conv primitives'
-//! blocked layout `[N][Cb][H][W][bc]` — no unpack/repack round trip — and
-//! is deliberately a simple bandwidth-bound sweep: like the element-wise
-//! stages in [`super::eltwise`], its cost is data movement, not compute.
+//! global average pool and starts with a 3×3/s2 max pool). It operates
+//! directly on the conv primitives' blocked layout `[N][Cb][H][W][bc]` —
+//! no unpack/repack round trip — and is deliberately a simple
+//! bandwidth-bound sweep: like the element-wise stages in
+//! [`super::eltwise`], its cost is data movement, not compute. Both
+//! directions parallelise over the `(N × Cb)` planes — each plane is
+//! written by exactly one task, so threading never changes a result.
 //!
-//! The window average is linear, so the backward pass is an exact scatter
-//! of `dY / (win_h·win_w)` back over each input window (overlapping
-//! windows accumulate).
+//! [`AvgPool`]: the window average is linear, so the backward pass is an
+//! exact scatter of `dY / (win_h·win_w)` back over each input window
+//! (overlapping windows accumulate).
+//!
+//! [`MaxPool`]: the forward pass records each window's argmax (flat input
+//! index, first-maximum tie-break); the backward pass routes `dY` to
+//! exactly those positions — no recomputation of the forward sweep.
 
 use crate::util::num::largest_divisor_le;
+use crate::util::pool::{parallel_for, SharedMut};
 
 /// Pooling shape: input `[N][C][H][W]` (channel-blocked by `bc`), window
 /// `win_h × win_w` slid with `stride` in both spatial dims.
@@ -26,16 +34,37 @@ pub struct PoolConfig {
     pub stride: usize,
     /// Channel block of the (blocked) operand; must divide C.
     pub bc: usize,
+    pub nthreads: usize,
 }
 
 impl PoolConfig {
     pub fn new(n: usize, c: usize, h: usize, w: usize, win: usize, stride: usize) -> PoolConfig {
-        PoolConfig { n, c, h, w, win_h: win, win_w: win, stride, bc: largest_divisor_le(c, 64) }
+        PoolConfig {
+            n,
+            c,
+            h,
+            w,
+            win_h: win,
+            win_w: win,
+            stride,
+            bc: largest_divisor_le(c, 64),
+            nthreads: 1,
+        }
     }
 
     /// Global average pool: one output pixel per channel (ResNet-style).
     pub fn global(n: usize, c: usize, h: usize, w: usize) -> PoolConfig {
-        PoolConfig { n, c, h, w, win_h: h, win_w: w, stride: 1, bc: largest_divisor_le(c, 64) }
+        PoolConfig {
+            n,
+            c,
+            h,
+            w,
+            win_h: h,
+            win_w: w,
+            stride: 1,
+            bc: largest_divisor_le(c, 64),
+            nthreads: 1,
+        }
     }
 
     /// Override the channel block (rounded down to a divisor of C), e.g. to
@@ -46,15 +75,21 @@ impl PoolConfig {
         self
     }
 
+    pub fn with_threads(mut self, t: usize) -> PoolConfig {
+        self.nthreads = t;
+        self
+    }
+
     fn validate(&self) {
         assert_eq!(self.c % self.bc, 0, "bc must divide C");
         assert!(self.win_h >= 1 && self.win_w >= 1 && self.stride >= 1);
         assert!(self.win_h <= self.h && self.win_w <= self.w, "window exceeds input");
+        assert!(self.nthreads >= 1);
     }
 
     /// Output spatial dims. Checked here (not only in `validate`) because
-    /// shape helpers call these on configs that never reach `AvgPool::new`
-    /// — an oversized window must fail loudly, not underflow.
+    /// shape helpers call these on configs that never reach the pool
+    /// constructors — an oversized window must fail loudly, not underflow.
     pub fn p(&self) -> usize {
         assert!(self.win_h <= self.h, "window exceeds input");
         (self.h - self.win_h) / self.stride + 1
@@ -86,65 +121,160 @@ impl AvgPool {
     }
 
     /// `y[n][cb][oj][oi][ic] = mean over the window of x` (blocked layouts,
-    /// x `[N][Cb][H][W][bc]`, y `[N][Cb][P][Q][bc]`).
+    /// x `[N][Cb][H][W][bc]`, y `[N][Cb][P][Q][bc]`). Parallel over the
+    /// `(N × Cb)` planes — disjoint output regions per task.
     pub fn forward(&self, x: &[f32], y: &mut [f32]) {
         let c = &self.cfg;
         assert_eq!(x.len(), c.input_len());
         assert_eq!(y.len(), c.output_len());
         let (cb, p, q) = (c.cb_ct(), c.p(), c.q());
         let inv = 1.0 / (c.win_h * c.win_w) as f32;
-        for n in 0..c.n {
-            for icb in 0..cb {
-                let plane = (n * cb + icb) * c.h * c.w * c.bc;
-                for oj in 0..p {
-                    for oi in 0..q {
-                        let dst = (((n * cb + icb) * p + oj) * q + oi) * c.bc;
-                        y[dst..dst + c.bc].fill(0.0);
-                        for jj in 0..c.win_h {
-                            for ii in 0..c.win_w {
-                                let src = plane
-                                    + ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc;
-                                for ic in 0..c.bc {
-                                    y[dst + ic] += x[src + ic];
-                                }
+        let oplane = p * q * c.bc;
+        let shared = &SharedMut::new(y);
+        parallel_for(c.nthreads, c.n * cb, |_tid, t| {
+            let plane = t * c.h * c.w * c.bc;
+            // SAFETY: one output plane per task, tasks disjoint.
+            let yp = unsafe { shared.slice(t * oplane, oplane) };
+            for oj in 0..p {
+                for oi in 0..q {
+                    let dst = (oj * q + oi) * c.bc;
+                    yp[dst..dst + c.bc].fill(0.0);
+                    for jj in 0..c.win_h {
+                        for ii in 0..c.win_w {
+                            let src = plane
+                                + ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc;
+                            for ic in 0..c.bc {
+                                yp[dst + ic] += x[src + ic];
                             }
                         }
-                        for v in &mut y[dst..dst + c.bc] {
-                            *v *= inv;
-                        }
+                    }
+                    for v in &mut yp[dst..dst + c.bc] {
+                        *v *= inv;
                     }
                 }
             }
-        }
+        });
     }
 
     /// Input gradient: scatter `dy / (win_h·win_w)` back over each window
-    /// (overlapping windows accumulate). Returns dX in the input geometry.
+    /// (overlapping windows accumulate — serially within a plane, so the
+    /// parallel sweep is deterministic). Returns dX in the input geometry.
     pub fn backward(&self, dy: &[f32]) -> Vec<f32> {
         let c = &self.cfg;
         assert_eq!(dy.len(), c.output_len());
         let (cb, p, q) = (c.cb_ct(), c.p(), c.q());
         let inv = 1.0 / (c.win_h * c.win_w) as f32;
         let mut dx = vec![0.0f32; c.input_len()];
-        for n in 0..c.n {
-            for icb in 0..cb {
-                let plane = (n * cb + icb) * c.h * c.w * c.bc;
-                for oj in 0..p {
-                    for oi in 0..q {
-                        let src = (((n * cb + icb) * p + oj) * q + oi) * c.bc;
-                        for jj in 0..c.win_h {
-                            for ii in 0..c.win_w {
-                                let dst = plane
-                                    + ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc;
-                                for ic in 0..c.bc {
-                                    dx[dst + ic] += dy[src + ic] * inv;
-                                }
+        let iplane = c.h * c.w * c.bc;
+        let shared = &SharedMut::new(&mut dx);
+        parallel_for(c.nthreads, c.n * cb, |_tid, t| {
+            // SAFETY: one input plane per task, tasks disjoint.
+            let dxp = unsafe { shared.slice(t * iplane, iplane) };
+            for oj in 0..p {
+                for oi in 0..q {
+                    let src = (t * p * q + oj * q + oi) * c.bc;
+                    for jj in 0..c.win_h {
+                        for ii in 0..c.win_w {
+                            let dst =
+                                ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc;
+                            for ic in 0..c.bc {
+                                dxp[dst + ic] += dy[src + ic] * inv;
                             }
                         }
                     }
                 }
             }
-        }
+        });
+        dx
+    }
+}
+
+/// The max-pooling primitive on blocked layouts: forward records the
+/// argmax of every window, backward routes the gradient to exactly those
+/// input positions.
+pub struct MaxPool {
+    pub cfg: PoolConfig,
+}
+
+impl MaxPool {
+    pub fn new(cfg: PoolConfig) -> MaxPool {
+        cfg.validate();
+        assert!(cfg.input_len() <= u32::MAX as usize, "argmax indices are u32");
+        MaxPool { cfg }
+    }
+
+    /// `y[..] = max over the window of x`; `argmax[..]` gets the flat index
+    /// into `x` of each window's winner (first maximum wins ties, so the
+    /// routed backward is deterministic). Parallel over `(N × Cb)` planes.
+    pub fn forward(&self, x: &[f32], y: &mut [f32], argmax: &mut [u32]) {
+        let c = &self.cfg;
+        assert_eq!(x.len(), c.input_len());
+        assert_eq!(y.len(), c.output_len());
+        assert_eq!(argmax.len(), c.output_len());
+        let (cb, p, q) = (c.cb_ct(), c.p(), c.q());
+        let oplane = p * q * c.bc;
+        let shared_y = &SharedMut::new(y);
+        let shared_am: &SharedMut<u32> = &SharedMut::new(argmax);
+        parallel_for(c.nthreads, c.n * cb, |_tid, t| {
+            let plane = t * c.h * c.w * c.bc;
+            // SAFETY: one output plane per task, tasks disjoint (both
+            // buffers share the output geometry).
+            let yp = unsafe { shared_y.slice(t * oplane, oplane) };
+            let ap = unsafe { shared_am.slice(t * oplane, oplane) };
+            for oj in 0..p {
+                for oi in 0..q {
+                    let dst = (oj * q + oi) * c.bc;
+                    for ic in 0..c.bc {
+                        // Seed from the window's first element (not -inf /
+                        // index 0): an all-NaN window then still records an
+                        // in-window argmax instead of a plane-0 index that
+                        // would misroute (or panic) in backward.
+                        let first =
+                            plane + ((oj * c.stride) * c.w + (oi * c.stride)) * c.bc + ic;
+                        let mut best = x[first];
+                        let mut best_at = first as u32;
+                        for jj in 0..c.win_h {
+                            for ii in 0..c.win_w {
+                                let src = plane
+                                    + ((oj * c.stride + jj) * c.w + (oi * c.stride + ii)) * c.bc
+                                    + ic;
+                                if x[src] > best {
+                                    best = x[src];
+                                    best_at = src as u32;
+                                }
+                            }
+                        }
+                        yp[dst + ic] = best;
+                        ap[dst + ic] = best_at;
+                    }
+                }
+            }
+        });
+    }
+
+    /// Input gradient: `dx[argmax[j]] += dy[j]` — the routed scatter
+    /// (overlapping windows whose winners coincide accumulate; all of one
+    /// plane's argmax targets lie in that plane, so the parallel sweep
+    /// writes disjoint regions).
+    pub fn backward(&self, dy: &[f32], argmax: &[u32]) -> Vec<f32> {
+        let c = &self.cfg;
+        assert_eq!(dy.len(), c.output_len());
+        assert_eq!(argmax.len(), c.output_len());
+        let (cb, p, q) = (c.cb_ct(), c.p(), c.q());
+        let mut dx = vec![0.0f32; c.input_len()];
+        let iplane = c.h * c.w * c.bc;
+        let oplane = p * q * c.bc;
+        let shared = &SharedMut::new(&mut dx);
+        parallel_for(c.nthreads, c.n * cb, |_tid, t| {
+            // SAFETY: plane t's argmax indices all point into input plane t
+            // (forward only ever scans that plane); tasks disjoint.
+            let dxp = unsafe { shared.slice(t * iplane, iplane) };
+            for j in 0..oplane {
+                let at = argmax[t * oplane + j] as usize;
+                debug_assert!((t * iplane..(t + 1) * iplane).contains(&at));
+                dxp[at - t * iplane] += dy[t * oplane + j];
+            }
+        });
         dx
     }
 }
@@ -221,6 +351,48 @@ mod tests {
         dx
     }
 
+    /// Plain-NCHW max-pool oracle (forward + routed backward in one).
+    #[allow(clippy::too_many_arguments)]
+    fn naive_max_pool(
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        win: usize,
+        stride: usize,
+        x: &[f32],
+        dy: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let p = (h - win) / stride + 1;
+        let q = (w - win) / stride + 1;
+        let mut y = vec![0.0f32; n * c * p * q];
+        let mut dx = vec![0.0f32; n * c * h * w];
+        for ni in 0..n {
+            for cc in 0..c {
+                for oj in 0..p {
+                    for oi in 0..q {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut at = 0usize;
+                        for jj in 0..win {
+                            for ii in 0..win {
+                                let src = ((ni * c + cc) * h + (oj * stride + jj)) * w
+                                    + (oi * stride + ii);
+                                if x[src] > best {
+                                    best = x[src];
+                                    at = src;
+                                }
+                            }
+                        }
+                        let o = ((ni * c + cc) * p + oj) * q + oi;
+                        y[o] = best;
+                        dx[at] += dy[o];
+                    }
+                }
+            }
+        }
+        (y, dx)
+    }
+
     #[test]
     fn forward_matches_naive_various_shapes() {
         // (n, c, h, w, win, stride, bc): non-overlapping, overlapping, global.
@@ -275,6 +447,120 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_pool_is_bit_identical() {
+        let (n, c, h, w, win, stride) = (3, 8, 6, 6, 3, 1);
+        let mut rng = Rng::new(31);
+        let base = PoolConfig::new(n, c, h, w, win, stride).with_block(4);
+        let x = rng.vec_f32(base.input_len(), -1.0, 1.0);
+        let dy = rng.vec_f32(base.output_len(), -1.0, 1.0);
+        let p1 = AvgPool::new(base);
+        let p4 = AvgPool::new(base.with_threads(4));
+        let (mut y1, mut y4) = (vec![0.0; base.output_len()], vec![0.0; base.output_len()]);
+        p1.forward(&x, &mut y1);
+        p4.forward(&x, &mut y4);
+        assert_eq!(y1, y4, "avg fwd threads must not change bits");
+        assert_eq!(p1.backward(&dy), p4.backward(&dy), "avg bwd threads must not change bits");
+        let (m1, m4) = (MaxPool::new(base), MaxPool::new(base.with_threads(4)));
+        let mut am1 = vec![0u32; base.output_len()];
+        let mut am4 = vec![0u32; base.output_len()];
+        m1.forward(&x, &mut y1, &mut am1);
+        m4.forward(&x, &mut y4, &mut am4);
+        assert_eq!(y1, y4, "max fwd threads must not change bits");
+        assert_eq!(am1, am4, "argmax threads must not change routing");
+        assert_eq!(m1.backward(&dy, &am1), m4.backward(&dy, &am4));
+    }
+
+    #[test]
+    fn max_pool_matches_naive_oracle() {
+        // Non-overlapping, overlapping (routing accumulates), and strided.
+        for &(n, c, h, w, win, stride, bc) in &[
+            (2usize, 4usize, 6usize, 6usize, 2usize, 2usize, 2usize),
+            (1, 6, 5, 5, 3, 1, 3),
+            (2, 2, 7, 7, 3, 2, 2),
+        ] {
+            let mut rng = Rng::new((h * 7 + win) as u64);
+            let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+            let cfg = PoolConfig::new(n, c, h, w, win, stride).with_block(bc);
+            let pool = MaxPool::new(cfg);
+            let dy = rng.vec_f32(n * c * cfg.p() * cfg.q(), -1.0, 1.0);
+            let xp = pack_conv_act(&x, n, c, h, w, cfg.bc, 0, 0);
+            let dyp = pack_conv_act(&dy, n, c, cfg.p(), cfg.q(), cfg.bc, 0, 0);
+            let mut yp = vec![0.0; cfg.output_len()];
+            let mut am = vec![0u32; cfg.output_len()];
+            pool.forward(&xp, &mut yp, &mut am);
+            let dxp = pool.backward(&dyp, &am);
+            let y = unpack_conv_act(&yp, n, c, cfg.p(), cfg.q(), cfg.bc, 0, 0);
+            let dx = unpack_conv_act(&dxp, n, c, h, w, cfg.bc, 0, 0);
+            let (y_want, dx_want) = naive_max_pool(n, c, h, w, win, stride, &x, &dy);
+            for i in 0..y.len() {
+                assert!(
+                    (y[i] - y_want[i]).abs() < 1e-6,
+                    "{:?} y[{}]: {} vs {}",
+                    (n, c, h, w, win, stride),
+                    i,
+                    y[i],
+                    y_want[i]
+                );
+            }
+            for i in 0..dx.len() {
+                assert!(
+                    (dx[i] - dx_want[i]).abs() < 1e-6,
+                    "{:?} dx[{}]: {} vs {}",
+                    (n, c, h, w, win, stride),
+                    i,
+                    dx[i],
+                    dx_want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_pool_ties_route_to_first_maximum() {
+        // A constant plane: every window's winner is its first element, so
+        // dX gets the whole dY mass at stride-aligned positions.
+        let cfg = PoolConfig::new(1, 1, 4, 4, 2, 2).with_block(1);
+        let pool = MaxPool::new(cfg);
+        let x = vec![1.0f32; cfg.input_len()];
+        let mut y = vec![0.0; cfg.output_len()];
+        let mut am = vec![0u32; cfg.output_len()];
+        pool.forward(&x, &mut y, &mut am);
+        assert!(y.iter().all(|&v| v == 1.0));
+        assert_eq!(am, vec![0, 2, 8, 10], "first element of each window wins");
+        let dx = pool.backward(&[1.0, 2.0, 3.0, 4.0], &am);
+        let mut want = vec![0.0f32; 16];
+        want[0] = 1.0;
+        want[2] = 2.0;
+        want[8] = 3.0;
+        want[10] = 4.0;
+        assert_eq!(dx, want);
+    }
+
+    #[test]
+    fn max_pool_nan_window_routes_in_plane() {
+        // A NaN-poisoned window must still record an in-window argmax (the
+        // seed-from-first-element rule): y propagates the NaN and backward
+        // routes into the right plane instead of underflowing into plane 0.
+        let cfg = PoolConfig::new(2, 1, 4, 4, 2, 2).with_block(1);
+        let pool = MaxPool::new(cfg);
+        let mut x = vec![1.0f32; cfg.input_len()];
+        // Poison one full window in the second image's plane.
+        let plane1 = 16; // n=1, cb=0
+        for &off in &[0usize, 1, 4, 5] {
+            x[plane1 + off] = f32::NAN;
+        }
+        let mut y = vec![0.0; cfg.output_len()];
+        let mut am = vec![0u32; cfg.output_len()];
+        pool.forward(&x, &mut y, &mut am);
+        let out1 = 4; // plane 1's first output element
+        assert!(y[out1].is_nan(), "NaN window propagates NaN");
+        assert_eq!(am[out1], plane1 as u32, "argmax stays inside the window");
+        let dy = vec![1.0f32; cfg.output_len()];
+        let dx = pool.backward(&dy, &am); // must not panic
+        assert_eq!(dx[plane1], 1.0);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! The request queue, dynamic batcher, and worker pool.
+//!
+//! Single-sample requests enter a FIFO queue; free workers take up to
+//! `max_batch` queued requests at once, round the count **up** to the
+//! smallest batch bucket that fits (padding with zero samples), execute
+//! the bucket's forward plan, and surface only the real rows — the padded
+//! rows are masked out and never leave the worker. Bucketing keeps the
+//! number of distinct execution plans logarithmic in the maximum batch
+//! while a growing backlog automatically rides up the bucket ladder
+//! (deeper queue → bigger batches → higher throughput, the classic
+//! dynamic-batching trade against per-request latency).
+//!
+//! Shutdown is drain-first: [`Server::shutdown`] stops intake, wakes the
+//! workers, and joins them only after the queue is empty — every accepted
+//! request gets exactly one response (asserted by the drain test).
+
+use crate::serve::metrics::{ServeReport, ServeStats};
+use crate::serve::model::InferenceModel;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Worker-pool shape. `workers` is the number of serving threads pulling
+/// batches; each executes its plan with the thread count the model was
+/// built with (worker-level parallelism and primitive-level parallelism
+/// compose).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOpts {
+    pub max_batch: usize,
+    pub workers: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { max_batch: 8, workers: 2 }
+    }
+}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Plain `[classes]` logits of this request's row.
+    pub logits: Vec<f32>,
+    /// Enqueue → response seconds.
+    pub latency_secs: f64,
+    /// The bucket size the request was co-batched into.
+    pub bucket: usize,
+    /// Real (non-padded) rows in that batch.
+    pub fill: usize,
+}
+
+struct Pending {
+    id: u64,
+    input: Vec<f32>,
+    enqueued: Instant,
+}
+
+struct QueueState {
+    queue: VecDeque<Pending>,
+    accepting: bool,
+    next_id: u64,
+}
+
+struct Shared {
+    model: InferenceModel,
+    opts: ServeOpts,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    stats: Mutex<ServeStats>,
+}
+
+/// The serving front end: owns the queue and the worker pool.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Spin up `opts.workers` worker threads over `model`. Returns the
+    /// server handle and the response channel; the channel disconnects
+    /// once every worker has exited (i.e. after [`Server::shutdown`]
+    /// drained the queue), so a collector can simply `recv` to exhaustion.
+    pub fn start(model: InferenceModel, opts: ServeOpts) -> (Server, mpsc::Receiver<Response>) {
+        assert!(opts.workers >= 1, "need at least one worker");
+        assert_eq!(
+            opts.max_batch,
+            model.max_batch(),
+            "worker max_batch must equal the model's bucket ladder top"
+        );
+        let shared = Arc::new(Shared {
+            model,
+            opts,
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                accepting: true,
+                next_id: 0,
+            }),
+            cv: Condvar::new(),
+            stats: Mutex::new(ServeStats::new()),
+        });
+        let (tx, rx) = mpsc::channel();
+        let workers = (0..opts.workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let tx = tx.clone();
+                std::thread::spawn(move || worker_loop(&shared, &tx))
+            })
+            .collect();
+        // Workers hold the only senders: dropping `tx` here makes the
+        // channel disconnect exactly when the pool exits.
+        drop(tx);
+        (Server { shared, workers, started: Instant::now() }, rx)
+    }
+
+    /// Enqueue one single-sample request; returns its id. Panics if called
+    /// after [`Server::shutdown`] (the queue is no longer accepting).
+    pub fn submit(&self, input: Vec<f32>) -> u64 {
+        assert_eq!(input.len(), self.shared.model.input_dim(), "request shape mismatch");
+        let id = {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.accepting, "submit after shutdown");
+            let id = st.next_id;
+            st.next_id += 1;
+            st.queue.push_back(Pending { id, input, enqueued: Instant::now() });
+            id
+        };
+        self.shared.cv.notify_one();
+        id
+    }
+
+    /// Enqueue a burst atomically (one lock, one wake-all): no worker can
+    /// observe a partially submitted burst, so the batcher sees its full
+    /// depth at once. Returns the ids in submission order.
+    pub fn submit_all(&self, inputs: impl IntoIterator<Item = Vec<f32>>) -> Vec<u64> {
+        let dim = self.shared.model.input_dim();
+        let ids = {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.accepting, "submit after shutdown");
+            let now = Instant::now();
+            inputs
+                .into_iter()
+                .map(|input| {
+                    assert_eq!(input.len(), dim, "request shape mismatch");
+                    let id = st.next_id;
+                    st.next_id += 1;
+                    st.queue.push_back(Pending { id, input, enqueued: now });
+                    id
+                })
+                .collect()
+        };
+        self.shared.cv.notify_all();
+        ids
+    }
+
+    /// Requests accepted so far.
+    pub fn submitted(&self) -> u64 {
+        self.shared.state.lock().unwrap().next_id
+    }
+
+    /// Current queue backlog.
+    pub fn queue_len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Stop intake, drain the queue, join the workers, and report. Every
+    /// request accepted before this call is answered before it returns.
+    pub fn shutdown(self) -> ServeReport {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.accepting = false;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers {
+            h.join().expect("serve worker panicked");
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        self.shared.stats.lock().unwrap().report(wall)
+    }
+}
+
+fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
+    loop {
+        // Take up to max_batch requests, or exit once draining is done.
+        let (taken, depth_after) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if !st.queue.is_empty() {
+                    break;
+                }
+                if !st.accepting {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+            let k = st.queue.len().min(shared.opts.max_batch);
+            let taken: Vec<Pending> = st.queue.drain(..k).collect();
+            (taken, st.queue.len())
+        };
+        let fill = taken.len();
+        let bucket = shared.model.bucket_for(fill);
+        let dim = shared.model.input_dim();
+        // Pad to the bucket with zero rows; their outputs are computed and
+        // then masked (dropped) below — bit-identical real rows either way.
+        let mut x = vec![0.0f32; bucket * dim];
+        for (i, r) in taken.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(&r.input);
+        }
+        let logits = shared.model.forward(bucket, &x);
+        let classes = shared.model.classes();
+        let done = Instant::now();
+        let mut lats = Vec::with_capacity(fill);
+        for (i, r) in taken.into_iter().enumerate() {
+            let latency = done.duration_since(r.enqueued).as_secs_f64();
+            lats.push(latency);
+            // Send failures mean the collector hung up early; serving
+            // statistics still account the work.
+            let _ = tx.send(Response {
+                id: r.id,
+                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                latency_secs: latency,
+                bucket,
+                fill,
+            });
+        }
+        shared.stats.lock().unwrap().record_batch(bucket, fill, depth_after, &lats);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::InferenceModel;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn mlp_model(max_batch: usize) -> InferenceModel {
+        InferenceModel::new_mlp(&[10, 12, 4], max_batch, 1, false, &mut Rng::new(5))
+    }
+
+    #[test]
+    fn co_batched_responses_bit_identical_to_solo() {
+        // Submit a burst with one worker so requests genuinely co-batch,
+        // then check every response row against a solo batch-1 forward of
+        // the same input — padding/masking must be invisible.
+        let model = mlp_model(8);
+        let oracle = mlp_model(8); // same seed ⇒ identical weights
+        let mut rng = Rng::new(6);
+        let inputs: Vec<Vec<f32>> = (0..13).map(|_| rng.vec_f32(10, -1.0, 1.0)).collect();
+        let (server, rx) = Server::start(model, ServeOpts { max_batch: 8, workers: 1 });
+        // Atomic burst: the single worker necessarily sees depth 13 and
+        // co-batches (8 then 5→bucket 8, or some split — never 13 × b1).
+        let ids: Vec<u64> = server.submit_all(inputs.iter().cloned());
+        let report = server.shutdown();
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(report.requests, 13);
+        assert_eq!(responses.len(), 13);
+        let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+        let mut co_batched = 0usize;
+        for (id, x) in ids.iter().zip(&inputs) {
+            let r = by_id[id];
+            let solo = oracle.forward(1, x);
+            assert_eq!(r.logits, solo, "request {} logits differ from solo batch-1", id);
+            if r.bucket > 1 {
+                co_batched += 1;
+            }
+        }
+        // The burst outran the single worker, so most requests co-batched.
+        assert!(co_batched > 0, "burst must produce at least one multi-request batch");
+    }
+
+    #[test]
+    fn shutdown_drains_queue_no_lost_or_duplicated_responses() {
+        // Flood the queue far beyond what the workers can clear before
+        // shutdown is requested; drain semantics must still answer every
+        // request exactly once.
+        let model = mlp_model(4);
+        let (server, rx) = Server::start(model, ServeOpts { max_batch: 4, workers: 3 });
+        let mut rng = Rng::new(7);
+        let n = 200u64;
+        for _ in 0..n {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        assert_eq!(server.submitted(), n);
+        let report = server.shutdown(); // queue almost certainly non-empty here
+        let mut seen = BTreeMap::new();
+        for r in rx.iter() {
+            *seen.entry(r.id).or_insert(0usize) += 1;
+        }
+        assert_eq!(seen.len() as u64, n, "every request answered");
+        assert!(seen.values().all(|&c| c == 1), "no duplicated responses");
+        assert_eq!(
+            seen.keys().copied().collect::<Vec<u64>>(),
+            (0..n).collect::<Vec<u64>>(),
+            "ids are exactly the submitted ones"
+        );
+        assert_eq!(report.requests, n as usize, "stats agree with the channel");
+        // Batch accounting is consistent: per-bucket requests sum to n.
+        let hist_requests: f64 = report
+            .batch_fill
+            .iter()
+            .map(|&(b, batches, fill)| fill * (b * batches) as f64)
+            .sum();
+        assert!((hist_requests - n as f64).abs() < 1e-6, "{} vs {}", hist_requests, n);
+    }
+
+    #[test]
+    fn empty_shutdown_is_clean() {
+        let (server, rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 2 });
+        let report = server.shutdown();
+        assert_eq!(report.requests, 0);
+        assert_eq!(rx.iter().count(), 0, "channel disconnects with no responses");
+    }
+
+    #[test]
+    #[should_panic(expected = "request shape mismatch")]
+    fn wrong_shape_rejected() {
+        let (server, _rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 1 });
+        server.submit(vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Serving metrics: per-request latency percentiles, throughput, queue
+//! depth, and the batch-fill histogram.
+//!
+//! The batcher records one entry per executed batch ([`ServeStats::record_batch`]);
+//! the final [`ServeReport`] is what the `serve` CLI prints and the
+//! `serve_load` bench emits as a JSON row. Latencies are kept as raw
+//! samples (a serving run is at most a few hundred thousand requests);
+//! queue depth uses the [`Online`] accumulator.
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::{percentile, Online};
+use std::collections::BTreeMap;
+
+/// Per-bucket accounting: how many batches ran at this bucket size, and
+/// how many real (non-padded) requests they carried.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BucketStat {
+    pub batches: usize,
+    pub requests: usize,
+}
+
+/// Accumulated by the worker pool during a serving run.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    latencies: Vec<f64>,
+    queue_depth: Option<Online>,
+    buckets: BTreeMap<usize, BucketStat>,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats { latencies: Vec::new(), queue_depth: None, buckets: BTreeMap::new() }
+    }
+
+    /// One executed batch: `bucket` is the padded size, `fill` the real
+    /// request count (`fill <= bucket`), `depth_after` the queue backlog
+    /// right after the batch was taken, `latencies` the enqueue→response
+    /// seconds of the `fill` real requests.
+    pub fn record_batch(
+        &mut self,
+        bucket: usize,
+        fill: usize,
+        depth_after: usize,
+        latencies: &[f64],
+    ) {
+        assert!(fill <= bucket && fill == latencies.len());
+        let e = self.buckets.entry(bucket).or_default();
+        e.batches += 1;
+        e.requests += fill;
+        self.queue_depth.get_or_insert_with(Online::new).push(depth_after as f64);
+        self.latencies.extend_from_slice(latencies);
+    }
+
+    pub fn requests(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// Summarise into a report; `wall_secs` is the whole run's wall time
+    /// (open-loop: arrival pacing included, which is what a served client
+    /// experiences).
+    pub fn report(&self, wall_secs: f64) -> ServeReport {
+        let n = self.latencies.len();
+        let mut sorted = self.latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| if n == 0 { 0.0 } else { percentile(&sorted, q) * 1e3 };
+        let (qd_mean, qd_max) = match &self.queue_depth {
+            Some(o) => (o.mean(), o.max),
+            None => (0.0, 0.0),
+        };
+        ServeReport {
+            requests: n,
+            wall_secs,
+            throughput_rps: if wall_secs > 0.0 { n as f64 / wall_secs } else { 0.0 },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            mean_ms: if n == 0 {
+                0.0
+            } else {
+                self.latencies.iter().sum::<f64>() / n as f64 * 1e3
+            },
+            max_ms: sorted.last().copied().unwrap_or(0.0) * 1e3,
+            queue_depth_mean: qd_mean,
+            queue_depth_max: qd_max,
+            batch_fill: self
+                .buckets
+                .iter()
+                .map(|(&b, s)| (b, s.batches, s.requests as f64 / (s.batches * b) as f64))
+                .collect(),
+        }
+    }
+}
+
+/// The summary a serving run reports: throughput + latency percentiles +
+/// batching behaviour.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// Queue backlog sampled at every dequeue (mean / max).
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: f64,
+    /// Per bucket size: (bucket, batches executed, mean fill fraction).
+    pub batch_fill: Vec<(usize, usize, f64)>,
+}
+
+impl ServeReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "served {} requests in {:.2} s — {:.1} req/s\n",
+            self.requests, self.wall_secs, self.throughput_rps
+        ));
+        s.push_str(&format!(
+            "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  mean {:.3}  max {:.3}\n",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.mean_ms, self.max_ms
+        ));
+        s.push_str(&format!(
+            "queue depth at dequeue: mean {:.2}  max {:.0}\n",
+            self.queue_depth_mean, self.queue_depth_max
+        ));
+        s.push_str("batch-fill histogram (bucket: batches, mean fill):\n");
+        for (bucket, batches, fill) in &self.batch_fill {
+            s.push_str(&format!(
+                "  b{:<4} {:>6} batches  {:>5.1}% full\n",
+                bucket,
+                batches,
+                100.0 * fill
+            ));
+        }
+        s
+    }
+
+    /// One JSON row, shaped like the fig benches' output (consumed by
+    /// EXPERIMENTS.md tooling).
+    pub fn to_json(&self) -> Json {
+        let hist: Vec<Json> = self
+            .batch_fill
+            .iter()
+            .map(|&(b, n, f)| {
+                obj([
+                    ("bucket", (b as f64).into()),
+                    ("batches", (n as f64).into()),
+                    ("mean_fill", f.into()),
+                ])
+            })
+            .collect();
+        obj([
+            ("requests", (self.requests as f64).into()),
+            ("wall_s", self.wall_secs.into()),
+            ("throughput_rps", self.throughput_rps.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("max_ms", self.max_ms.into()),
+            ("queue_depth_mean", self.queue_depth_mean.into()),
+            ("queue_depth_max", self.queue_depth_max.into()),
+            ("batch_fill", Json::Arr(hist)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_histogram() {
+        let mut st = ServeStats::new();
+        // Two b4 batches (fills 4 and 2) and one b1 batch.
+        st.record_batch(4, 4, 3, &[0.010, 0.020, 0.030, 0.040]);
+        st.record_batch(4, 2, 1, &[0.050, 0.060]);
+        st.record_batch(1, 1, 0, &[0.070]);
+        assert_eq!(st.requests(), 7);
+        let r = st.report(1.0);
+        assert_eq!(r.requests, 7);
+        assert!((r.throughput_rps - 7.0).abs() < 1e-12);
+        assert!((r.p50_ms - 40.0).abs() < 1e-9, "p50 {}", r.p50_ms);
+        assert!((r.max_ms - 70.0).abs() < 1e-9);
+        assert!(r.p95_ms <= r.p99_ms && r.p99_ms <= r.max_ms);
+        // Histogram: b1 with 1 batch 100% full; b4 with 2 batches, fill
+        // (4+2)/(2*4) = 75%.
+        assert_eq!(r.batch_fill.len(), 2);
+        assert_eq!(r.batch_fill[0].0, 1);
+        assert!((r.batch_fill[0].2 - 1.0).abs() < 1e-12);
+        assert_eq!(r.batch_fill[1], (4, 2, 0.75));
+        // Queue depth mean over samples 3,1,0.
+        assert!((r.queue_depth_mean - 4.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.queue_depth_max, 3.0);
+        // JSON row carries the headline numbers.
+        let j = r.to_json().to_string_compact();
+        assert!(j.contains("\"throughput_rps\"") && j.contains("\"p99_ms\""), "{}", j);
+    }
+
+    #[test]
+    fn empty_run_reports_zeros() {
+        let r = ServeStats::new().report(0.5);
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.throughput_rps, 0.0);
+        assert_eq!(r.p99_ms, 0.0);
+        assert_eq!(r.queue_depth_max, 0.0);
+        assert!(r.batch_fill.is_empty());
+    }
+}

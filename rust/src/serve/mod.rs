@@ -1,0 +1,44 @@
+//! Inference serving: dynamic batching over shared-weight BRGEMM plans.
+//!
+//! The paper's thesis is that one tuned batch-reduce GEMM kernel plus
+//! cheap loops around it covers every DL workload. Training exercised
+//! that claim in the coordinator; this subsystem applies it to *serving*,
+//! where the mini-batch is a **runtime** axis instead of a config
+//! constant: single-sample requests arrive on an open loop, a dynamic
+//! batcher coalesces them into pow-2 batch buckets (pad-to-bucket, masked
+//! outputs), and a worker pool executes forward-only inference through
+//! per-bucket BRGEMM execution plans.
+//!
+//! The enabling refactor lives in the primitive layer: packed weights are
+//! split out of `FcPrimitive`/`ConvPrimitive` execution state into
+//! [`Arc`](std::sync::Arc)-shared structs
+//! ([`FcSharedWeights`](crate::primitives::fc::FcSharedWeights),
+//! [`ConvSharedWeights`](crate::primitives::conv::ConvSharedWeights)), so
+//! **one packed weight copy per layer** backs every bucket's plan — the
+//! packed layouts depend only on the feature blocking, never on the
+//! mini-batch. Each bucket's plan is constructed through the primitives'
+//! `tuned()` path, so the autotune cache is consulted per bucket shape.
+//!
+//! Modules:
+//!
+//! * [`model`]   — [`InferenceModel`]: the bucket-plan set over one shared
+//!   weight allocation per layer; forward-only MLP / CNN execution.
+//! * [`batcher`] — [`Server`]: request queue, dynamic batcher, worker
+//!   pool, drain-on-shutdown semantics.
+//! * [`metrics`] — per-request latency (p50/p95/p99), throughput, queue
+//!   depth, and the batch-fill histogram, with JSON export.
+//! * [`loadgen`] — deterministic open-loop load generator (Poisson
+//!   arrivals from [`crate::util::rng`]).
+//!
+//! Entry points: the `serve` CLI subcommand / `{"serve": {...}}`
+//! run-config (see `examples/serve.json`) and the `serve_load` bench.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod model;
+
+pub use batcher::{Response, ServeOpts, Server};
+pub use loadgen::{run_open_loop, LoadSpec};
+pub use metrics::{ServeReport, ServeStats};
+pub use model::{InferenceModel, NetSpec};

@@ -1,0 +1,524 @@
+//! Forward-only inference models with per-bucket execution plans over one
+//! shared weight allocation per layer.
+//!
+//! Serving makes the mini-batch a runtime axis: the dynamic batcher may
+//! hand a worker 1, 2, 4, … up to `max_batch` samples. Each bucket size
+//! gets its own execution plan — the primitives' configs (and therefore
+//! their BRGEMM descriptors and thread partitions) are built per bucket,
+//! routed through the `tuned()` constructors so the autotune cache is
+//! keyed per bucket shape. What the plans **share** is the packed
+//! weights: [`FcSharedWeights`] / [`ConvSharedWeights`] are allocated
+//! exactly once per layer and every plan executes against the same
+//! [`Arc`](std::sync::Arc)-backed buffers.
+//!
+//! The feature blocking `(bc, bk)` is pinned across buckets (the packed
+//! layout depends on it), so per-element accumulation order is identical
+//! at every bucket size — a co-batched request's logits are bit-identical
+//! to running it solo at batch 1, which is what makes pad-to-bucket
+//! masking safe (and is asserted by the batcher tests).
+
+use crate::coordinator::cnn::CnnSpec;
+use crate::primitives::conv::{ConvConfig, ConvPrimitive, ConvSharedWeights};
+use crate::primitives::eltwise::Act;
+use crate::primitives::fc::{FcConfig, FcPrimitive, FcSharedWeights};
+use crate::primitives::pool::AvgPool;
+use crate::tensor::layout;
+use crate::util::num::largest_divisor_le as pick;
+use crate::util::rng::Rng;
+
+/// Which network a serving model executes.
+#[derive(Debug, Clone)]
+pub enum NetSpec {
+    /// `sizes = [d_in, h1, ..., classes]`; hidden ReLU, linear head.
+    Mlp { sizes: Vec<usize> },
+    /// Conv stack + pool + FC head (the training driver's topology).
+    Cnn(CnnSpec),
+}
+
+impl NetSpec {
+    pub fn input_dim(&self) -> usize {
+        match self {
+            NetSpec::Mlp { sizes } => sizes[0],
+            NetSpec::Cnn(spec) => spec.input_dim(),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            NetSpec::Mlp { sizes } => *sizes.last().unwrap(),
+            NetSpec::Cnn(spec) => spec.classes,
+        }
+    }
+}
+
+/// The batch buckets for a maximum batch: powers of two up to `max`, plus
+/// `max` itself when it is not a power of two (so a full queue can always
+/// be taken whole).
+pub fn bucket_sizes(max_batch: usize) -> Vec<usize> {
+    assert!(max_batch >= 1);
+    let mut out = Vec::new();
+    let mut b = 1;
+    while b < max_batch {
+        out.push(b);
+        b *= 2;
+    }
+    out.push(max_batch);
+    out
+}
+
+/// One bucket's executable pipeline (primitives only — weights live in
+/// the shared structs on [`InferenceModel`]).
+enum PlanKind {
+    Mlp { fcs: Vec<FcPrimitive> },
+    Cnn { convs: Vec<ConvPrimitive>, pool: AvgPool, head: FcPrimitive },
+}
+
+struct Plan {
+    batch: usize,
+    kind: PlanKind,
+}
+
+/// A forward-only model: per-bucket plans over one shared weight copy per
+/// layer. `Send + Sync` (all state is plain config + `Arc` buffers), so
+/// the worker pool shares it behind one `Arc`.
+pub struct InferenceModel {
+    spec: NetSpec,
+    buckets: Vec<usize>,
+    /// MLP layer weights, or (for CNN) the single FC head entry.
+    fc_weights: Vec<FcSharedWeights>,
+    /// CNN conv-stack weights (empty for MLP).
+    conv_weights: Vec<ConvSharedWeights>,
+    plans: Vec<Plan>,
+}
+
+impl InferenceModel {
+    /// Build an MLP serving model with He-initialised weights. With
+    /// `tuned`, each bucket's layer configs consult the autotune cache
+    /// (the per-bucket shape is the cache key); the feature blocking is
+    /// then pinned back to the shared packed layout, so a tuning hit can
+    /// re-block the batch axis and kernel variants but never fork the
+    /// weight copy.
+    pub fn new_mlp(
+        sizes: &[usize],
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> InferenceModel {
+        assert!(sizes.len() >= 2, "mlp needs at least input + output sizes");
+        let buckets = bucket_sizes(max_batch);
+        // Canonical feature blocking (chain invariant bc_i = bk_{i-1}
+        // holds by construction: both are pick(shared dim, 64)).
+        let canon: Vec<FcConfig> = sizes
+            .windows(2)
+            .enumerate()
+            .map(|(i, wd)| {
+                let act = if i + 2 == sizes.len() { Act::Identity } else { Act::Relu };
+                FcConfig::new(max_batch, wd[0], wd[1], act)
+                    .with_blocking(pick(max_batch, 24), pick(wd[0], 64), pick(wd[1], 64))
+            })
+            .collect();
+        // One packed weight allocation per layer, shared by every plan.
+        let fc_weights: Vec<FcSharedWeights> = canon
+            .iter()
+            .map(|cfg| {
+                let scale = (2.0 / cfg.c as f32).sqrt();
+                let w_plain = rng.vec_f32(cfg.k * cfg.c, -scale, scale);
+                let bias = rng.vec_f32(cfg.k, -0.1, 0.1);
+                FcSharedWeights::pack(cfg, &w_plain, &bias)
+            })
+            .collect();
+        let plans = buckets
+            .iter()
+            .map(|&b| {
+                // One bn for the whole chain: blocked activations flow
+                // between layers with no repack, so every layer of a
+                // bucket's plan must agree on the batch block (the same
+                // reconciliation MlpModel applies). With tuning, layer 0's
+                // cached bn wins for the chain.
+                let mut shared_bn = pick(b, 24);
+                if tuned {
+                    let cfg0 = FcConfig::new(b, canon[0].c, canon[0].k, canon[0].act)
+                        .with_blocking(shared_bn, canon[0].bc, canon[0].bk)
+                        .with_threads(nthreads);
+                    shared_bn = crate::autotune::tuned_fc_config(cfg0).bn;
+                }
+                let fcs = canon
+                    .iter()
+                    .zip(&fc_weights)
+                    .map(|(base, w)| {
+                        let mut cfg = FcConfig::new(b, base.c, base.k, base.act)
+                            .with_blocking(shared_bn, base.bc, base.bk)
+                            .with_threads(nthreads);
+                        if tuned {
+                            // Per-bucket cache key; keep the tuned kernel
+                            // variants, pin bn to the chain's shared value
+                            // and the feature blocks to the shared packed
+                            // layout.
+                            let t = crate::autotune::tuned_fc_config(cfg);
+                            cfg = t.with_blocking(shared_bn, base.bc, base.bk);
+                        }
+                        assert!(w.matches(&cfg), "bucket plan must match shared weights");
+                        FcPrimitive::new(cfg)
+                    })
+                    .collect();
+                Plan { batch: b, kind: PlanKind::Mlp { fcs } }
+            })
+            .collect();
+        InferenceModel {
+            spec: NetSpec::Mlp { sizes: sizes.to_vec() },
+            buckets,
+            fc_weights,
+            conv_weights: Vec::new(),
+            plans,
+        }
+    }
+
+    /// Build a CNN serving model (conv stack + pool + FC head) with
+    /// He-initialised weights; same sharing/tuning contract as
+    /// [`Self::new_mlp`].
+    pub fn new_cnn(
+        spec: &CnnSpec,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> InferenceModel {
+        assert!(!spec.convs.is_empty(), "need at least one conv layer");
+        let buckets = bucket_sizes(max_batch);
+        // Canonical conv configs with the chain invariant enforced
+        // (consumer bc = producer bk), exactly like the training driver.
+        let mut canon: Vec<ConvConfig> = spec.conv_configs(max_batch, nthreads);
+        for i in 1..canon.len() {
+            let prev_bk = canon[i - 1].bk;
+            if canon[i].bc != prev_bk {
+                canon[i] = canon[i].with_blocking(prev_bk, canon[i].bk, canon[i].bq);
+            }
+        }
+        let conv_weights: Vec<ConvSharedWeights> = canon
+            .iter()
+            .map(|cfg| {
+                let scale = (2.0 / (cfg.c * cfg.r * cfg.s) as f32).sqrt();
+                let w_plain = rng.vec_f32(cfg.weights_len(), -scale, scale);
+                let bias = rng.vec_f32(cfg.k, -0.1, 0.1);
+                ConvSharedWeights::pack(cfg, &w_plain, &bias)
+            })
+            .collect();
+        let last = *canon.last().unwrap();
+        let pcfg0 = spec.pool_config(max_batch, &last).with_block(last.bk);
+        let feat = last.k * pcfg0.p() * pcfg0.q();
+        let head_canon = FcConfig::new(max_batch, feat, spec.classes, Act::Identity)
+            .with_blocking(pick(max_batch, 24), pick(feat, 64), pick(spec.classes, 64));
+        let head_weights = {
+            let scale = (2.0 / feat as f32).sqrt();
+            let w_plain = rng.vec_f32(spec.classes * feat, -scale, scale);
+            let bias = rng.vec_f32(spec.classes, -0.1, 0.1);
+            FcSharedWeights::pack(&head_canon, &w_plain, &bias)
+        };
+        let plans = buckets
+            .iter()
+            .map(|&b| {
+                let convs: Vec<ConvPrimitive> = spec
+                    .conv_configs(b, nthreads)
+                    .into_iter()
+                    .zip(&canon)
+                    .zip(&conv_weights)
+                    .map(|((cfg, base), w)| {
+                        let mut cfg = cfg;
+                        if tuned {
+                            cfg = crate::autotune::tuned_conv_config(cfg);
+                        }
+                        // Pin the feature blocks to the shared packed
+                        // layout (keeps any tuned bq / flat / loop order).
+                        if cfg.bc != base.bc || cfg.bk != base.bk {
+                            cfg = cfg.with_blocking(base.bc, base.bk, cfg.bq);
+                        }
+                        assert!(w.matches(&cfg), "bucket plan must match shared weights");
+                        ConvPrimitive::new(cfg)
+                    })
+                    .collect();
+                let blast = convs.last().unwrap().cfg;
+                let pool = AvgPool::new(
+                    spec.pool_config(b, &blast).with_block(blast.bk).with_threads(nthreads),
+                );
+                let mut hcfg = FcConfig::new(b, feat, spec.classes, Act::Identity)
+                    .with_blocking(pick(b, 24), head_canon.bc, head_canon.bk)
+                    .with_threads(nthreads);
+                if tuned {
+                    let t = crate::autotune::tuned_fc_config(hcfg);
+                    hcfg = t.with_blocking(t.bn, head_canon.bc, head_canon.bk);
+                }
+                assert!(head_weights.matches(&hcfg));
+                Plan {
+                    batch: b,
+                    kind: PlanKind::Cnn { convs, pool, head: FcPrimitive::new(hcfg) },
+                }
+            })
+            .collect();
+        InferenceModel {
+            spec: NetSpec::Cnn(spec.clone()),
+            buckets,
+            fc_weights: vec![head_weights],
+            conv_weights,
+            plans,
+        }
+    }
+
+    /// Build from a [`NetSpec`] (the run-config dispatch point).
+    pub fn from_spec(
+        spec: &NetSpec,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> InferenceModel {
+        match spec {
+            NetSpec::Mlp { sizes } => {
+                InferenceModel::new_mlp(sizes, max_batch, nthreads, tuned, rng)
+            }
+            NetSpec::Cnn(c) => InferenceModel::new_cnn(c, max_batch, nthreads, tuned, rng),
+        }
+    }
+
+    pub fn spec(&self) -> &NetSpec {
+        &self.spec
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.spec.input_dim()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.spec.classes()
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket that fits `k` requests (`1 <= k <= max_batch`).
+    pub fn bucket_for(&self, k: usize) -> usize {
+        assert!(k >= 1 && k <= self.max_batch(), "batch {} outside buckets", k);
+        *self.buckets.iter().find(|&&b| b >= k).unwrap()
+    }
+
+    /// Distinct packed-weight allocations backing this model — one per
+    /// layer, *regardless of the number of batch buckets* (the acceptance
+    /// invariant; plans hold no weight storage at all).
+    pub fn weight_alloc_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .conv_weights
+            .iter()
+            .map(|w| w.alloc_id())
+            .chain(self.fc_weights.iter().map(|w| w.alloc_id()))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Number of weight-bearing layers (conv stack + FC layers).
+    pub fn layer_count(&self) -> usize {
+        self.conv_weights.len() + self.fc_weights.len()
+    }
+
+    /// Forward `bucket` samples (plain `[bucket][input_dim]`, padded rows
+    /// included) through the bucket's plan; returns plain
+    /// `[bucket][classes]` logits. `&self` — safe to call concurrently
+    /// from many workers.
+    pub fn forward(&self, bucket: usize, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), bucket * self.input_dim(), "input shape mismatch");
+        let plan = self
+            .plans
+            .iter()
+            .find(|p| p.batch == bucket)
+            .unwrap_or_else(|| panic!("no plan for bucket {}", bucket));
+        match &plan.kind {
+            PlanKind::Mlp { fcs } => {
+                let cfg0 = fcs[0].cfg;
+                let mut cur = layout::pack_act_2d(x, bucket, cfg0.c, cfg0.bn, cfg0.bc);
+                for (fc, w) in fcs.iter().zip(&self.fc_weights) {
+                    let mut y = vec![0.0f32; bucket * fc.cfg.k];
+                    fc.forward_shared(&cur, w, &mut y);
+                    cur = y;
+                }
+                let lcfg = fcs.last().unwrap().cfg;
+                layout::unpack_act_2d(&cur, bucket, lcfg.k, lcfg.bn, lcfg.bk)
+            }
+            PlanKind::Cnn { convs, pool, head } => {
+                let cfg0 = convs[0].cfg;
+                let mut cur = layout::pack_conv_act(
+                    x, bucket, cfg0.c, cfg0.h, cfg0.w, cfg0.bc, cfg0.pad, cfg0.pad,
+                );
+                for (i, (prim, w)) in convs.iter().zip(&self.conv_weights).enumerate() {
+                    let mut y = vec![0.0f32; prim.cfg.output_len()];
+                    prim.forward_shared(&cur, w, &mut y);
+                    cur = match convs.get(i + 1) {
+                        // Chain invariant: the output is the consumer's
+                        // unpadded input; only the border re-pad remains.
+                        Some(next) => {
+                            let nc = next.cfg;
+                            layout::repad_blocked(
+                                &y, bucket, nc.cb_ct(), nc.h, nc.w, nc.bc, nc.pad, nc.pad,
+                            )
+                        }
+                        None => y,
+                    };
+                }
+                let mut pool_y = vec![0.0f32; pool.cfg.output_len()];
+                pool.forward(&cur, &mut pool_y);
+                let hcfg = head.cfg;
+                let head_x = layout::pack_act_2d(&pool_y, bucket, hcfg.c, hcfg.bn, hcfg.bc);
+                let mut head_y = vec![0.0f32; bucket * hcfg.k];
+                head.forward_shared(&head_x, &self.fc_weights[0], &mut head_y);
+                layout::unpack_act_2d(&head_y, bucket, hcfg.k, hcfg.bn, hcfg.bk)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cnn::ConvSpec;
+
+    fn tiny_cnn() -> CnnSpec {
+        CnnSpec {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            convs: vec![
+                ConvSpec { k: 3, r: 3, s: 3, stride: 1, pad: 1 },
+                ConvSpec { k: 4, r: 1, s: 1, stride: 1, pad: 0 },
+            ],
+            pool_win: 0,
+            pool_stride: 1,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn bucket_ladder_shapes() {
+        assert_eq!(bucket_sizes(1), vec![1]);
+        assert_eq!(bucket_sizes(8), vec![1, 2, 4, 8]);
+        assert_eq!(bucket_sizes(6), vec![1, 2, 4, 6]);
+        let m = InferenceModel::new_mlp(&[6, 8, 3], 6, 1, false, &mut Rng::new(1));
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(3), 4);
+        assert_eq!(m.bucket_for(5), 6);
+        assert_eq!(m.bucket_for(6), 6);
+    }
+
+    #[test]
+    fn packed_weights_allocated_once_per_layer() {
+        // The acceptance invariant: however many buckets exist, each
+        // layer's packed weights are one allocation shared by every plan.
+        let mlp = InferenceModel::new_mlp(&[12, 16, 8, 4], 16, 1, false, &mut Rng::new(2));
+        assert_eq!(mlp.buckets().len(), 5, "1/2/4/8/16");
+        assert_eq!(mlp.layer_count(), 3);
+        assert_eq!(mlp.weight_alloc_ids().len(), 3, "3 layers -> 3 allocations, not 15");
+
+        let cnn = InferenceModel::new_cnn(&tiny_cnn(), 8, 1, false, &mut Rng::new(3));
+        assert_eq!(cnn.layer_count(), 3, "2 convs + head");
+        assert_eq!(cnn.weight_alloc_ids().len(), 3, "3 layers -> 3 allocations, not 12");
+    }
+
+    #[test]
+    fn co_batched_rows_bit_identical_to_solo_mlp() {
+        let model = InferenceModel::new_mlp(&[10, 12, 5], 8, 1, false, &mut Rng::new(7));
+        let mut rng = Rng::new(8);
+        let dim = model.input_dim();
+        let samples: Vec<Vec<f32>> = (0..3).map(|_| rng.vec_f32(dim, -1.0, 1.0)).collect();
+        // 3 real rows padded into the 4-bucket.
+        let mut x = vec![0.0f32; 4 * dim];
+        for (i, s) in samples.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(s);
+        }
+        let batched = model.forward(4, &x);
+        let classes = model.classes();
+        for (i, s) in samples.iter().enumerate() {
+            let solo = model.forward(1, s);
+            assert_eq!(
+                &batched[i * classes..(i + 1) * classes],
+                &solo[..],
+                "row {} must be bit-identical to its solo batch-1 run",
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn co_batched_rows_bit_identical_to_solo_cnn() {
+        let model = InferenceModel::new_cnn(&tiny_cnn(), 4, 1, false, &mut Rng::new(11));
+        let mut rng = Rng::new(12);
+        let dim = model.input_dim();
+        let samples: Vec<Vec<f32>> = (0..3).map(|_| rng.vec_f32(dim, -1.0, 1.0)).collect();
+        let mut x = vec![0.0f32; 4 * dim];
+        for (i, s) in samples.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(s);
+        }
+        let batched = model.forward(4, &x);
+        let classes = model.classes();
+        for (i, s) in samples.iter().enumerate() {
+            let solo = model.forward(1, s);
+            assert_eq!(
+                &batched[i * classes..(i + 1) * classes],
+                &solo[..],
+                "cnn row {} must be bit-identical to its solo batch-1 run",
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_bucket_plans_share_weights_and_match_untuned_math() {
+        use crate::autotune::{cache, Candidate, TuneEntry, TuningCache};
+        // Seed the cache for the bucket-2 layer-0 shape only, with a
+        // candidate whose batch and feature blocks disagree with the
+        // defaults: the plan must adopt the tuned bn for the *whole chain*
+        // (blocked activations flow between layers with no repack) while
+        // pinning bc/bk back to the shared packing. Layer 1 has Cb > 1
+        // (130 features, bc 26), so a bn mismatch between the layers
+        // would scramble the layout and fail the math check below.
+        let sizes = [18usize, 130, 5];
+        let cfg_b2 = FcConfig::new(2, 18, 130, Act::Relu);
+        let cand = Candidate {
+            bn: 1,
+            bc: 9,
+            bk: 13,
+            bq: 1,
+            flat_bq: 0,
+            order: None,
+            fwd_strided: true,
+            upd_transpose: false,
+        };
+        TuningCache::global()
+            .lock()
+            .unwrap()
+            .put(&cache::fc_key(&cfg_b2), TuneEntry { cand, gflops: 1.0, model_gflops: 1.0 });
+        let plain = InferenceModel::new_mlp(&sizes, 4, 1, false, &mut Rng::new(21));
+        let tuned = InferenceModel::new_mlp(&sizes, 4, 1, true, &mut Rng::new(21));
+        assert_eq!(
+            tuned.weight_alloc_ids().len(),
+            2,
+            "tuning must not fork the weight copies"
+        );
+        let x = Rng::new(22).vec_f32(2 * 18, -1.0, 1.0);
+        let yp = plain.forward(2, &x);
+        let yt = tuned.forward(2, &x);
+        for i in 0..yp.len() {
+            assert!((yp[i] - yt[i]).abs() < 1e-4, "[{}]: {} vs {}", i, yp[i], yt[i]);
+        }
+        // The untuned buckets are unaffected by the cache entry.
+        let x4 = Rng::new(23).vec_f32(4 * 18, -1.0, 1.0);
+        let y4p = plain.forward(4, &x4);
+        let y4t = tuned.forward(4, &x4);
+        for i in 0..y4p.len() {
+            assert!((y4p[i] - y4t[i]).abs() < 1e-4, "b4 [{}]: {} vs {}", i, y4p[i], y4t[i]);
+        }
+    }
+}

@@ -98,23 +98,25 @@ where
     });
 }
 
-/// Shared mutable f32 buffer for threads writing *disjoint* regions.
+/// Shared mutable buffer for threads writing *disjoint* regions
+/// (defaulting to the primitives' f32 tensors; `MaxPool` shares its u32
+/// argmax buffer the same way).
 ///
 /// The primitives' parallelisation writes each output block from exactly
 /// one task, and each task runs on exactly one thread (invariants tested in
 /// `primitives::partition`). `SharedMut` is the narrow unsafe window that
 /// expresses this to the borrow checker.
-pub struct SharedMut<'a> {
-    ptr: *mut f32,
+pub struct SharedMut<'a, T = f32> {
+    ptr: *mut T,
     len: usize,
-    _marker: std::marker::PhantomData<&'a mut [f32]>,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
-unsafe impl Sync for SharedMut<'_> {}
-unsafe impl Send for SharedMut<'_> {}
+unsafe impl<T: Send> Sync for SharedMut<'_, T> {}
+unsafe impl<T: Send> Send for SharedMut<'_, T> {}
 
-impl<'a> SharedMut<'a> {
-    pub fn new(buf: &'a mut [f32]) -> SharedMut<'a> {
+impl<'a, T> SharedMut<'a, T> {
+    pub fn new(buf: &'a mut [T]) -> SharedMut<'a, T> {
         SharedMut { ptr: buf.as_mut_ptr(), len: buf.len(), _marker: std::marker::PhantomData }
     }
 
@@ -122,7 +124,7 @@ impl<'a> SharedMut<'a> {
     /// `[off, off+len)` must not overlap any region concurrently handed out
     /// to another thread.
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn slice(&self, off: usize, len: usize) -> &mut [f32] {
+    pub unsafe fn slice(&self, off: usize, len: usize) -> &mut [T] {
         debug_assert!(off + len <= self.len, "SharedMut slice out of bounds");
         std::slice::from_raw_parts_mut(self.ptr.add(off), len)
     }

@@ -17,6 +17,12 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== serve smoke (tiny model, 300 requests) =="
+# Exercise the serving subsystem end to end: queue -> dynamic batcher ->
+# worker pool -> drained shutdown. Fails hard if any request is lost.
+./target/release/brgemm-dl serve --model mlp --requests 300 --rate 50000 \
+    --max-batch 8 --serve-workers 2 --seed 7
+
 echo "== cargo fmt --check =="
 if cargo fmt --check; then
     echo "formatting clean"
