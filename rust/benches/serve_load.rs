@@ -30,13 +30,22 @@ fn main() {
             name: "mlp 64-128-10",
             spec: NetSpec::Mlp { sizes: vec![64, 128, 10] },
             load: LoadSpec { requests: mlp_requests, rate_rps: 20_000.0, seed: 42 },
-            opts: ServeOpts { max_batch: 16, workers: 2 },
+            opts: ServeOpts { max_batch: 16, workers: 2, ..ServeOpts::default() },
         },
         Case {
             name: "cnn resnet-mini",
             spec: NetSpec::Cnn(CnnSpec::resnet_mini(8, 2, 8)),
             load: LoadSpec { requests: cnn_requests, rate_rps: 2_000.0, seed: 43 },
-            opts: ServeOpts { max_batch: 8, workers: 2 },
+            opts: ServeOpts { max_batch: 8, workers: 2, ..ServeOpts::default() },
+        },
+        // Same MLP workload with a batching delay: the fill window trades
+        // a bounded latency add for fuller buckets — compare this row's
+        // batch-fill histogram (and p50) against the greedy row above.
+        Case {
+            name: "mlp 64-128-10 wait-fill",
+            spec: NetSpec::Mlp { sizes: vec![64, 128, 10] },
+            load: LoadSpec { requests: mlp_requests, rate_rps: 20_000.0, seed: 42 },
+            opts: ServeOpts { max_batch: 16, workers: 2, wait_for_fill_us: 500 },
         },
     ];
 
@@ -60,6 +69,10 @@ fn main() {
             map.insert("rate_rps".to_string(), Json::Num(case.load.rate_rps));
             map.insert("max_batch".to_string(), Json::Num(case.opts.max_batch as f64));
             map.insert("workers".to_string(), Json::Num(case.opts.workers as f64));
+            map.insert(
+                "wait_fill_us".to_string(),
+                Json::Num(case.opts.wait_for_fill_us as f64),
+            );
         }
         rows.push(row);
     }

@@ -1,0 +1,158 @@
+//! Shared model construction: one source of truth for layer configs.
+//!
+//! The training drivers ([`super::trainer::MlpModel`],
+//! [`super::cnn::CnnModel`]) and the serving models
+//! ([`crate::serve::InferenceModel`]) must agree *exactly* on how a
+//! topology maps to layer configs — the chain-invariant reconciliation
+//! (consumer `bc` = producer `bk`, one shared `bn` per FC chain) and the
+//! FC-head blocking formula. Before the model-artifact subsystem, that
+//! logic was duplicated between `coordinator/cnn.rs` and `serve/model.rs`
+//! and only stayed byte-compatible by review; weight lifting (train →
+//! artifact → serve) makes the agreement load-bearing, so it now lives
+//! here, once.
+
+use crate::coordinator::cnn::CnnSpec;
+use crate::primitives::conv::ConvConfig;
+use crate::primitives::eltwise::Act;
+use crate::primitives::fc::FcConfig;
+use crate::util::num::largest_divisor_le as pick;
+
+/// The FC layer configs of an MLP chain (`sizes = [d_in, h1, ...,
+/// classes]`; hidden ReLU, linear head) with the no-inter-layer-reformat
+/// invariant enforced: all layers share one `bn`, and each layer's input
+/// block `bc` equals its producer's output block `bk`. With `tuned`, each
+/// layer first consults the autotune cache and the reconciliation is then
+/// re-applied (layer 0's `bn` wins for the chain; the shared feature
+/// dimension guarantees every pinned block is a legal divisor).
+pub fn mlp_chain_configs(
+    sizes: &[usize],
+    batch: usize,
+    nthreads: usize,
+    tuned: bool,
+) -> Vec<FcConfig> {
+    assert!(sizes.len() >= 2, "mlp needs at least input + output sizes");
+    let bn = pick(batch, 24);
+    let mut cfgs: Vec<FcConfig> = sizes
+        .windows(2)
+        .enumerate()
+        .map(|(i, wdim)| {
+            let (c, k) = (wdim[0], wdim[1]);
+            let act = if i + 2 == sizes.len() { Act::Identity } else { Act::Relu };
+            let cfg = FcConfig::new(batch, c, k, act)
+                .with_blocking(bn, pick(c, 64), pick(k, 64))
+                .with_threads(nthreads);
+            if tuned {
+                crate::autotune::tuned_fc_config(cfg)
+            } else {
+                cfg
+            }
+        })
+        .collect();
+    if tuned {
+        // Reconcile: one bn everywhere, consumer bc = producer bk.
+        let shared_bn = cfgs[0].bn;
+        for i in 0..cfgs.len() {
+            let bc = if i == 0 { cfgs[0].bc } else { cfgs[i - 1].bk };
+            cfgs[i] = cfgs[i].with_blocking(shared_bn, bc, cfgs[i].bk);
+        }
+    }
+    cfgs
+}
+
+/// The conv-stack configs of a [`CnnSpec`] in chain order with the chain
+/// invariant enforced: where a (possibly tuned) consumer's `bc` disagrees
+/// with its producer's `bk`, the consumer is re-blocked — the producer's
+/// `bk` always divides the shared channel dimension, so the fix never
+/// violates a divisibility constraint. Tuned kernel variants (`bq`, flat
+/// strips, loop orders) survive the re-block.
+pub fn conv_chain_configs(
+    spec: &CnnSpec,
+    batch: usize,
+    nthreads: usize,
+    tuned: bool,
+) -> Vec<ConvConfig> {
+    assert!(!spec.convs.is_empty(), "need at least one conv layer");
+    let mut cfgs = spec.conv_configs(batch, nthreads);
+    if tuned {
+        for cfg in cfgs.iter_mut() {
+            *cfg = crate::autotune::tuned_conv_config(*cfg);
+        }
+    }
+    for i in 1..cfgs.len() {
+        let prev_bk = cfgs[i - 1].bk;
+        if cfgs[i].bc != prev_bk {
+            cfgs[i] = cfgs[i].with_blocking(prev_bk, cfgs[i].bk, cfgs[i].bq);
+        }
+    }
+    cfgs
+}
+
+/// The CNN softmax head's FC config over `feat` pooled features — the one
+/// blocking formula both the training driver and the serving models use,
+/// so a trained head lifts into any serving plan.
+pub fn head_fc_config(
+    batch: usize,
+    feat: usize,
+    classes: usize,
+    nthreads: usize,
+    tuned: bool,
+) -> FcConfig {
+    let cfg = FcConfig::new(batch, feat, classes, Act::Identity)
+        .with_blocking(pick(batch, 24), pick(feat, 64), pick(classes, 64))
+        .with_threads(nthreads);
+    if tuned {
+        crate::autotune::tuned_fc_config(cfg)
+    } else {
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cnn::ConvSpec;
+
+    #[test]
+    fn mlp_chain_invariant_holds_untuned_and_batchwise() {
+        for batch in [1usize, 2, 8, 24, 32] {
+            let cfgs = mlp_chain_configs(&[18, 130, 5], batch, 1, false);
+            assert_eq!(cfgs.len(), 2);
+            for w in cfgs.windows(2) {
+                assert_eq!(w[0].bk, w[1].bc, "consumer bc = producer bk");
+                assert_eq!(w[0].bn, w[1].bn, "one bn per chain");
+            }
+            assert_eq!(cfgs[0].act, Act::Relu);
+            assert_eq!(cfgs[1].act, Act::Identity, "linear head");
+        }
+    }
+
+    #[test]
+    fn conv_chain_invariant_holds() {
+        let spec = CnnSpec {
+            in_c: 6,
+            in_h: 7,
+            in_w: 7,
+            convs: vec![
+                ConvSpec { k: 10, r: 3, s: 3, stride: 1, pad: 1 },
+                ConvSpec { k: 4, r: 1, s: 1, stride: 1, pad: 0 },
+            ],
+            pool_win: 0,
+            pool_stride: 1,
+            classes: 3,
+        };
+        let cfgs = conv_chain_configs(&spec, 4, 1, false);
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].bk, cfgs[1].bc, "consumer bc = producer bk");
+    }
+
+    #[test]
+    fn head_formula_is_batch_block_only() {
+        // Same feature blocking at every batch (what makes the packed head
+        // weights shareable across batch buckets and liftable from a
+        // trained model of any batch size).
+        let a = head_fc_config(32, 256, 10, 1, false);
+        let b = head_fc_config(2, 256, 10, 4, false);
+        assert_eq!((a.bc, a.bk), (b.bc, b.bk));
+        assert_eq!(a.act, Act::Identity);
+    }
+}

@@ -22,20 +22,22 @@
 //! (and the head through the FC tuning cache), feeding the autotuner's
 //! cached winners a real conv training workload.
 
+use crate::coordinator::build;
 use crate::coordinator::data::ClassifyData;
 use crate::coordinator::resnet;
 use crate::coordinator::trainer::{eval_accuracy, softmax_xent, Model};
+use crate::modelio::{LayerKind, LayerParams};
 use crate::primitives::conv::{ConvConfig, ConvPrimitive};
 use crate::primitives::eltwise::{act_backward, Act};
-use crate::primitives::fc::{FcConfig, FcPrimitive};
+use crate::primitives::fc::FcPrimitive;
 use crate::primitives::pool::{AvgPool, PoolConfig};
 use crate::tensor::layout;
-use crate::util::num::largest_divisor_le as pick;
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 
 /// Shape of one conv stage (plain dims; blocking is chosen internally and
 /// possibly overridden by the tuning cache).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConvSpec {
     pub k: usize,
     pub r: usize,
@@ -45,7 +47,7 @@ pub struct ConvSpec {
 }
 
 /// A full CNN topology: input image shape, conv stack, pool stage, head.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CnnSpec {
     pub in_c: usize,
     pub in_h: usize,
@@ -199,24 +201,15 @@ impl CnnModel {
     ) -> CnnModel {
         assert!(!spec.convs.is_empty(), "need at least one conv layer");
         assert!(spec.classes >= 2, "need at least two classes");
-        let cfgs = spec.conv_configs(batch, nthreads);
-        let mut prims: Vec<ConvPrimitive> = Vec::with_capacity(cfgs.len());
-        for (i, cfg) in cfgs.iter().enumerate() {
-            let mut prim =
-                if tuned { ConvPrimitive::tuned(*cfg) } else { ConvPrimitive::new(*cfg) };
-            if i > 0 {
-                let prev_bk = prims[i - 1].cfg.bk;
-                if prim.cfg.bc != prev_bk {
-                    let fixed = prim.cfg.with_blocking(prev_bk, prim.cfg.bk, prim.cfg.bq);
-                    prim = ConvPrimitive::new(fixed);
-                }
-            }
-            prims.push(prim);
-        }
-        let convs: Vec<ConvLayer> = prims
+        // Layer configs (tuning consultation + chain-invariant fix) come
+        // from the shared construction module, so the training model and
+        // the serving plans agree by construction — weight lifting through
+        // artifacts depends on it.
+        let cfgs = build::conv_chain_configs(spec, batch, nthreads, tuned);
+        let convs: Vec<ConvLayer> = cfgs
             .into_iter()
-            .map(|prim| {
-                let cfg = prim.cfg;
+            .map(|cfg| {
+                let prim = ConvPrimitive::new(cfg);
                 // He init on the plain layout, packed directly (the
                 // blocked form is an internal detail).
                 let scale = (2.0 / (cfg.c * cfg.r * cfg.s) as f32).sqrt();
@@ -247,12 +240,7 @@ impl CnnModel {
         let pool = AvgPool::new(pcfg);
         let feat = last.k * pcfg.p() * pcfg.q();
 
-        let mut hcfg = FcConfig::new(batch, feat, spec.classes, Act::Identity)
-            .with_blocking(pick(batch, 24), pick(feat, 64), pick(spec.classes, 64))
-            .with_threads(nthreads);
-        if tuned {
-            hcfg = crate::autotune::tuned_fc_config(hcfg);
-        }
+        let hcfg = build::head_fc_config(batch, feat, spec.classes, nthreads, tuned);
         let hprim = FcPrimitive::new(hcfg);
         let hscale = (2.0 / feat as f32).sqrt();
         let hw_plain = rng.vec_f32(spec.classes * feat, -hscale, hscale);
@@ -458,6 +446,56 @@ impl Model for CnnModel {
         out.extend_from_slice(&self.head.w);
         out.extend_from_slice(&self.head.b);
         out
+    }
+    fn export_weights(&self) -> Vec<LayerParams> {
+        let mut out: Vec<LayerParams> = self
+            .convs
+            .iter()
+            .map(|l| {
+                let cfg = l.prim.cfg;
+                LayerParams::conv(
+                    cfg.k,
+                    cfg.c,
+                    cfg.r,
+                    cfg.s,
+                    layout::unpack_conv_weights(&l.w, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc),
+                    l.b.clone(),
+                )
+            })
+            .collect();
+        let hcfg = self.head.prim.cfg;
+        out.push(LayerParams::fc(
+            hcfg.k,
+            hcfg.c,
+            layout::unpack_weights_2d(&self.head.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc),
+            self.head.b.clone(),
+        ));
+        out
+    }
+    fn import_weights(&mut self, layers: &[LayerParams]) -> Result<()> {
+        if layers.len() != self.convs.len() + 1 {
+            bail!(
+                "cnn has {} layers (convs + head), artifact has {}",
+                self.convs.len() + 1,
+                layers.len()
+            );
+        }
+        for (i, (l, p)) in self.convs.iter_mut().zip(layers).enumerate() {
+            let cfg = l.prim.cfg;
+            p.expect(
+                &format!("cnn layer {}", i),
+                LayerKind::Conv,
+                &[cfg.k, cfg.c, cfg.r, cfg.s],
+            )?;
+            l.w = layout::pack_conv_weights(&p.w, cfg.k, cfg.c, cfg.r, cfg.s, cfg.bk, cfg.bc);
+            l.b = p.b.clone();
+        }
+        let p = layers.last().unwrap();
+        let hcfg = self.head.prim.cfg;
+        p.expect("cnn head", LayerKind::Fc, &[hcfg.k, hcfg.c])?;
+        self.head.w = layout::pack_weights_2d(&p.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc);
+        self.head.b = p.b.clone();
+        Ok(())
     }
 }
 
@@ -671,6 +709,37 @@ mod tests {
         for i in 0..yp.len() {
             assert!((yp[i] - yt[i]).abs() < 1e-4, "[{}]: {} vs {}", i, yp[i], yt[i]);
         }
+    }
+
+    #[test]
+    fn cnn_export_import_roundtrip_bit_identical() {
+        // Same blocking formulas at any batch (default blockings are
+        // batch-independent), so a trained CNN's canonical export imports
+        // into a different-batch model with bit-identical packed params
+        // and bit-identical forward outputs.
+        let spec = tiny_spec();
+        let mut rng = Rng::new(51);
+        let data = ClassifyData::synth(64, spec.input_dim(), spec.classes, 0.2, &mut rng);
+        let mut src = CnnModel::new(&spec, 4, 1, &mut rng);
+        for step in 0..6 {
+            let (x, l) = data.batch(step, 4);
+            src.train_step(&x, &l, 0.05);
+        }
+        let exported = src.export_weights();
+        assert_eq!(exported.len(), 3, "2 convs + head");
+        let mut dst = CnnModel::new(&spec, 2, 2, &mut Rng::new(999));
+        dst.import_weights(&exported).unwrap();
+        assert_eq!(dst.export_weights(), exported, "roundtrip is bitwise");
+        let x = Rng::new(52).vec_f32(2 * spec.input_dim(), -1.0, 1.0);
+        let y2 = dst.forward(&x);
+        let mut x4 = x.clone();
+        x4.extend(Rng::new(53).vec_f32(2 * spec.input_dim(), -1.0, 1.0));
+        let y4 = src.forward(&x4);
+        assert_eq!(&y4[..y2.len()], &y2[..], "same rows, same logits across batch blockings");
+        // Mismatched arch is rejected with a clear error.
+        let other = CnnSpec { classes: 4, ..tiny_spec() };
+        let mut wrong = CnnModel::new(&other, 2, 1, &mut Rng::new(1));
+        assert!(wrong.import_weights(&exported).is_err());
     }
 
     #[test]

@@ -57,8 +57,9 @@ pub enum Workload {
 }
 
 /// Inference-serving parameters (the `"serve"` config section): an
-/// open-loop synthetic load plus the batcher/worker-pool shape.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// open-loop synthetic load plus the batcher/worker-pool shape, and
+/// optionally a trained model artifact to serve.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     /// Mean arrival rate of the Poisson open-loop load (requests/second).
     pub rate: f64,
@@ -68,11 +69,31 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// Serving worker threads pulling batches off the queue.
     pub workers: usize,
+    /// Batching delay: microseconds a worker may wait for its bucket to
+    /// fill before dispatching a partial batch (0 = greedy dispatch, the
+    /// previous behaviour).
+    pub wait_for_fill_us: u64,
+    /// Serve trained weights from this model artifact instead of a random
+    /// init; the artifact's arch descriptor decides the topology.
+    pub model_path: Option<String>,
+    /// With `model_path`: replay the training distribution through the
+    /// server and fail the run if response accuracy falls below this
+    /// fraction — the end-to-end proof that the trained weights (not a
+    /// random init) are answering.
+    pub min_accuracy: Option<f64>,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { rate: 2000.0, requests: 512, max_batch: 8, workers: 2 }
+        ServeConfig {
+            rate: 2000.0,
+            requests: 512,
+            max_batch: 8,
+            workers: 2,
+            wait_for_fill_us: 0,
+            model_path: None,
+            min_accuracy: None,
+        }
     }
 }
 
@@ -85,6 +106,41 @@ impl ServeConfig {
         }
         if self.requests == 0 || self.max_batch == 0 || self.workers == 0 {
             bail!("serve needs requests/max_batch/workers >= 1");
+        }
+        if let Some(acc) = self.min_accuracy {
+            if self.model_path.is_none() {
+                bail!("serve.min_accuracy requires serve.model_path (a trained artifact)");
+            }
+            if !(0.0..=1.0).contains(&acc) {
+                bail!("serve.min_accuracy must be a fraction in [0, 1]");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Training-checkpoint parameters (the `"checkpoint"` config section):
+/// the trainer snapshots the model to `path` (a versioned, checksummed
+/// model artifact — see [`crate::modelio`]) every `every_epochs` epochs,
+/// and `run --resume <artifact>` continues a schedule from a snapshot
+/// with results identical to an uninterrupted run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// Artifact path; each snapshot atomically overwrites the previous
+    /// one (temp file + rename), so a hot-reloading server can watch it.
+    pub path: String,
+    /// Snapshot cadence in epochs (an epoch = one pass over the synthetic
+    /// training set).
+    pub every_epochs: usize,
+}
+
+impl CheckpointConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.path.is_empty() {
+            bail!("checkpoint.path must be a non-empty file path");
+        }
+        if self.every_epochs == 0 {
+            bail!("checkpoint.every_epochs must be >= 1");
         }
         Ok(())
     }
@@ -108,6 +164,11 @@ pub struct RunConfig {
     /// When set, the run serves inference traffic instead of training:
     /// the workload names the topology, `serve` shapes load and pool.
     pub serve: Option<ServeConfig>,
+    /// When set, train for `epochs` passes over the synthetic training
+    /// set (overriding `steps`); checkpoint cadence is counted in these.
+    pub epochs: Option<usize>,
+    /// Periodic training snapshots to a model artifact.
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 impl Default for RunConfig {
@@ -123,6 +184,8 @@ impl Default for RunConfig {
             seed: 42,
             tune: false,
             serve: None,
+            epochs: None,
+            checkpoint: None,
         }
     }
 }
@@ -212,9 +275,39 @@ impl RunConfig {
                 requests: get_usize(sv, "requests", d.requests)?,
                 max_batch: get_usize(sv, "max_batch", d.max_batch)?,
                 workers: get_usize(sv, "workers", d.workers)?,
+                wait_for_fill_us: get_usize(sv, "wait_for_fill_us", 0)? as u64,
+                model_path: get_opt_str(sv, "model_path")?,
+                min_accuracy: get_opt_f64(sv, "min_accuracy")?,
             };
             sc.validate()?;
             cfg.serve = Some(sc);
+        }
+        if let Some(ep) = j.get("epochs") {
+            let e = ep
+                .as_usize()
+                .ok_or_else(|| anyhow!("epochs must be a non-negative integer"))?;
+            if e == 0 {
+                bail!("epochs must be >= 1");
+            }
+            cfg.epochs = Some(e);
+        }
+        if let Some(cv) = j.get("checkpoint") {
+            if cv.as_obj().is_none() {
+                bail!(
+                    "checkpoint must be an object, e.g. \
+                     {{\"checkpoint\": {{\"path\": \"ckpt.bin\", \"every_epochs\": 1}}}}"
+                );
+            }
+            let ck = CheckpointConfig {
+                path: cv
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("checkpoint.path (string) required"))?
+                    .to_string(),
+                every_epochs: get_usize(cv, "every_epochs", 1)?,
+            };
+            ck.validate()?;
+            cfg.checkpoint = Some(ck);
         }
         if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
             bail!("batch/workers/nthreads must be positive");
@@ -260,6 +353,29 @@ fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64> {
     match j.get(key) {
         None => Ok(default),
         Some(v) => v.as_f64().ok_or_else(|| anyhow!("{} must be a number", key)),
+    }
+}
+
+/// Optional string field: absent or `null` → `None`, a string → `Some`,
+/// anything else → error.
+fn get_opt_str(j: &Json, key: &str) -> Result<Option<String>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| anyhow!("{} must be a string (or null)", key)),
+    }
+}
+
+/// Optional number field: absent or `null` → `None`.
+fn get_opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{} must be a number (or null)", key)),
     }
 }
 
@@ -354,6 +470,56 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"serve": {"requests": "many"}}"#).is_err());
         assert!(RunConfig::from_json(r#"{"serve": {"max_batch": 0}}"#).is_err());
         assert!(RunConfig::from_json(r#"{"serve": {"workers": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_trained_model_fields_parse() {
+        let cfg = RunConfig::from_json(
+            r#"{"serve": {"model_path": "checkpoints/mlp.bin", "min_accuracy": 0.5,
+                          "wait_for_fill_us": 250}}"#,
+        )
+        .unwrap();
+        let sc = cfg.serve.unwrap();
+        assert_eq!(sc.model_path.as_deref(), Some("checkpoints/mlp.bin"));
+        assert_eq!(sc.min_accuracy, Some(0.5));
+        assert_eq!(sc.wait_for_fill_us, 250);
+        // null model_path = absent (lets examples carry the key).
+        let cfg = RunConfig::from_json(r#"{"serve": {"model_path": null}}"#).unwrap();
+        assert!(cfg.serve.unwrap().model_path.is_none());
+        // min_accuracy without a model to serve is meaningless.
+        assert!(RunConfig::from_json(r#"{"serve": {"min_accuracy": 0.5}}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"serve": {"model_path": "x.bin", "min_accuracy": 1.5}}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"model_path": 7}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"wait_for_fill_us": -3}}"#).is_err());
+    }
+
+    #[test]
+    fn checkpoint_and_epochs_parse() {
+        let cfg = RunConfig::from_json(
+            r#"{"epochs": 2, "checkpoint": {"path": "checkpoints/mlp.bin",
+                                           "every_epochs": 1}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.epochs, Some(2));
+        let ck = cfg.checkpoint.unwrap();
+        assert_eq!(ck.path, "checkpoints/mlp.bin");
+        assert_eq!(ck.every_epochs, 1);
+        // Defaults: cadence 1, both sections opt-in.
+        let cfg = RunConfig::from_json(r#"{"checkpoint": {"path": "c.bin"}}"#).unwrap();
+        assert_eq!(cfg.checkpoint.unwrap().every_epochs, 1);
+        assert!(RunConfig::from_json(r#"{}"#).unwrap().checkpoint.is_none());
+        // Invalid shapes rejected, not silently defaulted.
+        assert!(RunConfig::from_json(r#"{"checkpoint": {}}"#).is_err(), "path required");
+        assert!(RunConfig::from_json(r#"{"checkpoint": "c.bin"}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"checkpoint": {"path": "c.bin", "every_epochs": 0}}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json(r#"{"epochs": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"epochs": "two"}"#).is_err());
     }
 
     #[test]

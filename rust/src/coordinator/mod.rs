@@ -3,6 +3,10 @@
 //! This is the GxM / Tensorflow-integration analogue of the paper's §4.2 —
 //! everything above the kernels that a training system needs:
 //!
+//! * [`build`]   — shared model construction: the chain-invariant
+//!   reconciliation and head-blocking formulas the training drivers *and*
+//!   the serving models build from, so trained weights lift into serving
+//!   plans byte-compatibly by construction.
 //! * [`config`]  — run specifications (workload, backend, batch, workers).
 //! * [`data`]    — synthetic data pipelines (WMT-like sequence corpus with
 //!   the paper's length-bucketing load balancer; learnable classification
@@ -21,6 +25,7 @@
 //! * [`metrics`] — counters/timers with exact parallel merge and JSON
 //!   export.
 
+pub mod build;
 pub mod cnn;
 pub mod config;
 pub mod data;

@@ -11,13 +11,16 @@
 //! with the real [`super::dist::ring_allreduce`], and tracks both measured
 //! compute time and modelled communication time (Fig. 10 methodology).
 
+use crate::coordinator::build;
 use crate::coordinator::data::ClassifyData;
 use crate::coordinator::dist::{ring_allreduce, NetworkModel};
-use crate::primitives::eltwise::Act;
-use crate::primitives::fc::{FcConfig, FcPrimitive};
-use crate::tensor::layout::{pack_act_2d, transpose_packed_2d, unpack_act_2d};
-use crate::util::num::largest_divisor_le as pick;
+use crate::modelio::{LayerKind, LayerParams};
+use crate::primitives::fc::FcPrimitive;
+use crate::tensor::layout::{
+    pack_act_2d, pack_weights_2d, transpose_packed_2d, unpack_act_2d, unpack_weights_2d,
+};
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// The surface a trainable classifier exposes to the coordinator's
@@ -49,6 +52,16 @@ pub trait Model {
     /// Flattened parameters in [`Model::grads_flat`] order, for
     /// replica-consistency checks.
     fn params_flat(&self) -> Vec<f32>;
+    /// Canonical **unblocked** parameters in deterministic layer order
+    /// (the model-artifact layer order — see
+    /// [`crate::modelio::Arch::layer_shapes`]). Unpacking is a pure index
+    /// permutation: export → [`Model::import_weights`] round-trips to
+    /// bit-identical packed parameters under any blocking.
+    fn export_weights(&self) -> Vec<LayerParams>;
+    /// Restore parameters from canonical layer params, re-packing them
+    /// into *this* model's blocking (which need not match the blocking
+    /// the params were exported under). Errors on any shape mismatch.
+    fn import_weights(&mut self, layers: &[LayerParams]) -> Result<()>;
 }
 
 /// Classification accuracy of `model` over the first
@@ -125,32 +138,10 @@ impl MlpModel {
         tuned: bool,
         rng: &mut Rng,
     ) -> MlpModel {
-        assert!(sizes.len() >= 2);
-        let bn = pick(batch, 24);
-        let mut cfgs: Vec<FcConfig> = sizes
-            .windows(2)
-            .enumerate()
-            .map(|(i, wdim)| {
-                let (c, k) = (wdim[0], wdim[1]);
-                let act = if i + 2 == sizes.len() { Act::Identity } else { Act::Relu };
-                let cfg = FcConfig::new(batch, c, k, act)
-                    .with_blocking(bn, pick(c, 64), pick(k, 64))
-                    .with_threads(nthreads);
-                if tuned {
-                    crate::autotune::tuned_fc_config(cfg)
-                } else {
-                    cfg
-                }
-            })
-            .collect();
-        if tuned {
-            // Reconcile: one bn everywhere, consumer bc = producer bk.
-            let shared_bn = cfgs[0].bn;
-            for i in 0..cfgs.len() {
-                let bc = if i == 0 { cfgs[0].bc } else { cfgs[i - 1].bk };
-                cfgs[i] = cfgs[i].with_blocking(shared_bn, bc, cfgs[i].bk);
-            }
-        }
+        // Layer configs come from the shared construction module, so the
+        // training model and the serving plans agree by construction
+        // (weight lifting through artifacts depends on it).
+        let cfgs = build::mlp_chain_configs(sizes, batch, nthreads, tuned);
         let layers = cfgs
             .into_iter()
             .map(|cfg| {
@@ -316,6 +307,32 @@ impl Model for MlpModel {
         }
         out
     }
+    fn export_weights(&self) -> Vec<LayerParams> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let cfg = l.prim.cfg;
+                LayerParams::fc(
+                    cfg.k,
+                    cfg.c,
+                    unpack_weights_2d(&l.w, cfg.k, cfg.c, cfg.bk, cfg.bc),
+                    l.b.clone(),
+                )
+            })
+            .collect()
+    }
+    fn import_weights(&mut self, layers: &[LayerParams]) -> Result<()> {
+        if layers.len() != self.layers.len() {
+            bail!("mlp has {} layers, artifact has {}", self.layers.len(), layers.len());
+        }
+        for (i, (l, p)) in self.layers.iter_mut().zip(layers).enumerate() {
+            let cfg = l.prim.cfg;
+            p.expect(&format!("mlp layer {}", i), LayerKind::Fc, &[cfg.k, cfg.c])?;
+            l.w = pack_weights_2d(&p.w, cfg.k, cfg.c, cfg.bk, cfg.bc);
+            l.b = p.b.clone();
+        }
+        Ok(())
+    }
 }
 
 /// Mean softmax cross-entropy and its logits-gradient.
@@ -447,6 +464,7 @@ impl<M: Model> DataParallelTrainer<M> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::primitives::eltwise::Act;
 
     #[test]
     fn softmax_xent_matches_hand_computation() {
@@ -611,6 +629,84 @@ mod tests {
         for i in 0..a.len() {
             assert!((a[i] - b[i]).abs() < 1e-5, "w[{}]: {} vs {}", i, a[i], b[i]);
         }
+    }
+
+    #[test]
+    fn export_import_roundtrip_bit_identical_across_blockings() {
+        // Train a few steps so the weights are non-trivial, export the
+        // canonical params, import into a model built with a *different*
+        // batch (hence different bn) and thread count: packed params and
+        // forward outputs must be bit-identical — blocking is a layout
+        // choice the artifact does not bake in.
+        let mut rng = Rng::new(31);
+        let data = ClassifyData::synth(128, 12, 3, 0.2, &mut rng);
+        let mut src = MlpModel::new(&[12, 130, 3], 8, 1, &mut rng);
+        for step in 0..10 {
+            let (x, l) = data.batch(step, 8);
+            src.train_step(&x, &l, 0.1);
+        }
+        let exported = src.export_weights();
+        // Different batch (bn 4 vs 8) and thread count.
+        let mut dst = MlpModel::new(&[12, 130, 3], 4, 2, &mut Rng::new(999));
+        dst.import_weights(&exported).unwrap();
+        // Round-trip equality in canonical space is bitwise.
+        let back = dst.export_weights();
+        assert_eq!(exported, back, "export -> import -> export must be bitwise identical");
+        // And the forward math agrees bit-for-bit row by row.
+        let x = Rng::new(5).vec_f32(4 * 12, -1.0, 1.0);
+        let y4 = dst.forward(&x);
+        let mut x8 = x.clone();
+        x8.extend(Rng::new(6).vec_f32(4 * 12, -1.0, 1.0));
+        let y8 = src.forward(&x8);
+        assert_eq!(&y8[..y4.len()], &y4[..], "same rows, same logits, any blocking");
+    }
+
+    #[test]
+    fn import_rejects_shape_mismatch() {
+        let mut rng = Rng::new(33);
+        let src = MlpModel::new(&[6, 8, 3], 4, 1, &mut rng);
+        let mut dst = MlpModel::new(&[6, 10, 3], 4, 1, &mut rng);
+        let err = dst.import_weights(&src.export_weights()).unwrap_err();
+        assert!(err.to_string().contains("expects fc"), "{}", err);
+        let mut dst = MlpModel::new(&[6, 8, 3, 3], 4, 1, &mut rng);
+        assert!(dst.import_weights(&src.export_weights()).is_err(), "layer count");
+    }
+
+    #[test]
+    fn resume_equals_uninterrupted_training() {
+        // K steps + export + import into a fresh model + K more steps must
+        // land on exactly the parameters of 2K uninterrupted steps: the
+        // artifact round-trip is bitwise and the data schedule is a pure
+        // function of the step index.
+        let spe = 8usize; // "steps per epoch"
+        let mut rng = Rng::new(41);
+        let data = ClassifyData::synth(64, 10, 3, 0.2, &mut rng);
+        let sizes = [10usize, 16, 3];
+
+        let mut full = MlpModel::new(&sizes, 8, 1, &mut Rng::new(77));
+        for step in 0..2 * spe {
+            let (x, l) = data.batch(step, 8);
+            full.train_step(&x, &l, 0.1);
+        }
+
+        let mut half = MlpModel::new(&sizes, 8, 1, &mut Rng::new(77));
+        for step in 0..spe {
+            let (x, l) = data.batch(step, 8);
+            half.train_step(&x, &l, 0.1);
+        }
+        let snapshot = half.export_weights();
+        drop(half); // the "interrupted" process is gone
+        let mut resumed = MlpModel::new(&sizes, 8, 1, &mut Rng::new(123)); // any init
+        resumed.import_weights(&snapshot).unwrap();
+        for step in spe..2 * spe {
+            let (x, l) = data.batch(step, 8);
+            resumed.train_step(&x, &l, 0.1);
+        }
+        assert_eq!(
+            full.params_flat(),
+            resumed.params_flat(),
+            "resumed training must be bit-identical to the uninterrupted run"
+        );
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //!   variants), an analytic cost model that prunes them, an empirical
 //!   tuner that ranks the survivors, and a persistent JSON tuning cache
 //!   the primitives' `tuned()` constructors load automatically.
+//! * [`modelio`] — the model-artifact subsystem: a versioned, checksummed
+//!   binary format holding the arch descriptor plus **canonical
+//!   unblocked** weights (re-packed on load for whatever blocking the
+//!   tuner picks) and training metadata — the persistence layer that
+//!   turns trainer, tuner and server into one train → checkpoint → serve
+//!   pipeline (checkpoint/resume in the coordinator, `--model-path` and
+//!   hot weight reload in serving).
 //! * [`serve`] — the inference-serving subsystem: a request queue +
 //!   dynamic batcher coalescing single-sample requests into pow-2 batch
 //!   buckets, a worker pool running forward-only MLP/CNN plans built per
@@ -45,6 +52,7 @@ pub mod autotune;
 pub mod brgemm;
 pub mod cli;
 pub mod coordinator;
+pub mod modelio;
 pub mod perfmodel;
 pub mod primitives;
 pub mod runtime;

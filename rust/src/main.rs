@@ -14,16 +14,21 @@ use anyhow::{anyhow, bail, Result};
 use brgemm_dl::autotune::{tuner, TuneOpts, TuningCache};
 use brgemm_dl::cli::{usage, Args, Command, OptSpec};
 use brgemm_dl::coordinator::cnn::{CnnModel, CnnSpec};
-use brgemm_dl::coordinator::config::{Backend, RunConfig, ServeConfig, Workload};
+use brgemm_dl::coordinator::config::{
+    Backend, CheckpointConfig, RunConfig, ServeConfig, Workload,
+};
 use brgemm_dl::coordinator::data::ClassifyData;
 use brgemm_dl::coordinator::trainer::{eval_accuracy, DataParallelTrainer, MlpModel, Model};
+use brgemm_dl::modelio::{Arch, ModelArtifact, TrainMeta};
 use brgemm_dl::perfmodel;
 use brgemm_dl::primitives::conv::{ConvConfig, ConvPrimitive};
 use brgemm_dl::primitives::eltwise::Act;
 use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
-use brgemm_dl::serve::{run_open_loop, InferenceModel, LoadSpec, NetSpec, ServeOpts};
+use brgemm_dl::serve::{
+    run_open_loop, run_open_loop_with, InferenceModel, LoadSpec, NetSpec, ServeOpts,
+};
 use brgemm_dl::tensor::layout;
 use brgemm_dl::util::logger;
 use brgemm_dl::util::rng::Rng;
@@ -45,6 +50,8 @@ fn commands() -> Vec<Command> {
             opts: vec![
                 OptSpec { name: "config", help: "config file path", takes_value: true, default: None },
                 OptSpec { name: "steps", help: "override step count", takes_value: true, default: None },
+                OptSpec { name: "epochs", help: "override epoch count (epoch = one pass over the training set)", takes_value: true, default: None },
+                OptSpec { name: "resume", help: "resume training from a model artifact (see examples/checkpoint.json)", takes_value: true, default: None },
             ],
         },
         Command {
@@ -59,6 +66,9 @@ fn commands() -> Vec<Command> {
             opts: vec![
                 OptSpec { name: "config", help: "JSON run config with a 'serve' section (excludes the other flags)", takes_value: true, default: None },
                 OptSpec { name: "model", help: "mlp|cnn topology [default: mlp]", takes_value: true, default: None },
+                OptSpec { name: "model-path", help: "serve trained weights from this model artifact (topology comes from the artifact)", takes_value: true, default: None },
+                OptSpec { name: "min-accuracy", help: "with --model-path: replay the training distribution and fail below this accuracy fraction", takes_value: true, default: None },
+                OptSpec { name: "wait-fill-us", help: "batching delay: wait up to this many us for a bucket to fill [default: 0 = greedy]", takes_value: true, default: None },
                 OptSpec { name: "rate", help: "mean arrival rate, req/s [default: 2000]", takes_value: true, default: None },
                 OptSpec { name: "requests", help: "total requests to generate [default: 512]", takes_value: true, default: None },
                 OptSpec { name: "max-batch", help: "top batch bucket (ladder 1/2/4/..) [default: 8]", takes_value: true, default: None },
@@ -182,39 +192,109 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     if let Some(steps) = args.usize("steps").map_err(|e| anyhow!("{}", e))? {
         cfg.steps = steps;
+        cfg.epochs = None; // an explicit step count overrides an epoch schedule
     }
+    if let Some(epochs) = args.usize("epochs").map_err(|e| anyhow!("{}", e))? {
+        if epochs == 0 {
+            bail!("--epochs must be >= 1");
+        }
+        cfg.epochs = Some(epochs);
+    }
+    let resume = match args.str("resume") {
+        Some(path) => {
+            let art = ModelArtifact::load(path)?;
+            log_info!(
+                "resuming from {}: {} — epoch {}, step {}, acc {:.1}%",
+                path,
+                art.arch.describe(),
+                art.meta.epoch,
+                art.meta.step,
+                art.meta.accuracy * 100.0
+            );
+            Some(art)
+        }
+        None => None,
+    };
     log_info!("run config: {:?}", cfg);
-    if let Some(sc) = cfg.serve {
+    if let Some(sc) = cfg.serve.clone() {
+        if resume.is_some() {
+            bail!("--resume is a training flag; serving reads --model-path / serve.model_path");
+        }
         return run_serve(&cfg, sc, args.flag("json"));
     }
     match (cfg.workload.clone(), cfg.backend) {
-        (Workload::Mlp { sizes }, Backend::Native) => run_mlp_native(&cfg, &sizes),
+        (Workload::Mlp { sizes }, Backend::Native) => run_mlp_native(&cfg, &sizes, resume),
         (Workload::Mlp { .. }, Backend::Xla) => run_mlp_xla(&cfg),
         (Workload::Cnn { scale, depth, classes }, Backend::Native) => {
-            run_cnn_native(&cfg, scale, depth, classes)
+            run_cnn_native(&cfg, scale, depth, classes, resume)
         }
         (w, b) => bail!("workload {:?} on backend {:?} not wired in the CLI (see examples/)", w, b),
     }
 }
 
-/// Serving driver shared by `run` (config `"serve"` section) and the
-/// `serve` subcommand: build the forward-only bucket-plan model from the
-/// workload topology, drive the deterministic open-loop load through the
-/// batcher + worker pool, and print the latency/throughput report.
-fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
-    let spec = match &cfg.workload {
-        Workload::Mlp { sizes } => NetSpec::Mlp { sizes: sizes.clone() },
-        Workload::Cnn { scale, depth, classes } => {
-            NetSpec::Cnn(CnnSpec::resnet_mini(*scale, *depth, *classes))
+/// The synthetic training dataset of an architecture — one definition
+/// shared by the training drivers and the serve-side accuracy replay, so
+/// a trained artifact's stored seed regenerates exactly the distribution
+/// it learned (the two paths can never drift).
+fn synth_dataset(arch: &Arch, seed: u64) -> ClassifyData {
+    let mut rng = Rng::new(seed);
+    match arch {
+        Arch::Mlp { sizes } => {
+            ClassifyData::synth(4096, sizes[0], *sizes.last().unwrap(), 0.2, &mut rng)
         }
-        w => bail!("workload {:?} not servable (mlp|cnn)", w),
+        Arch::Cnn(spec) => {
+            ClassifyData::synth(1024, spec.input_dim(), spec.classes, 0.3, &mut rng)
+        }
+    }
+}
+
+/// Serving driver shared by `run` (config `"serve"` section) and the
+/// `serve` subcommand: build the forward-only bucket-plan model — from a
+/// trained artifact when `model_path` is set, else from the workload
+/// topology with He init — drive the deterministic open-loop load through
+/// the batcher + worker pool, and print the latency/throughput report.
+/// With `min_accuracy`, the load replays the training distribution and
+/// the run fails unless the served responses classify it well enough —
+/// the end-to-end proof that trained weights flow through serving.
+fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
+    let artifact = match &sc.model_path {
+        Some(path) => {
+            let art = ModelArtifact::load(path)?;
+            log_info!(
+                "serving artifact {}: {} — epoch {}, step {}, trained acc {:.1}%",
+                path,
+                art.arch.describe(),
+                art.meta.epoch,
+                art.meta.step,
+                art.meta.accuracy * 100.0
+            );
+            Some(art)
+        }
+        None => None,
     };
-    let mut rng = Rng::new(cfg.seed);
-    let model =
-        InferenceModel::from_spec(&spec, sc.max_batch, cfg.nthreads, cfg.tune, &mut rng);
+    let (spec, model) = match &artifact {
+        Some(art) => {
+            // The artifact is authoritative for the topology.
+            let model = InferenceModel::from_artifact(art, sc.max_batch, cfg.nthreads, cfg.tune)?;
+            (NetSpec::from_arch(&art.arch), model)
+        }
+        None => {
+            let spec = match &cfg.workload {
+                Workload::Mlp { sizes } => NetSpec::Mlp { sizes: sizes.clone() },
+                Workload::Cnn { scale, depth, classes } => {
+                    NetSpec::Cnn(CnnSpec::resnet_mini(*scale, *depth, *classes))
+                }
+                w => bail!("workload {:?} not servable (mlp|cnn)", w),
+            };
+            let mut rng = Rng::new(cfg.seed);
+            let model =
+                InferenceModel::from_spec(&spec, sc.max_batch, cfg.nthreads, cfg.tune, &mut rng);
+            (spec, model)
+        }
+    };
     log_info!(
         "serving {}: input dim {}, {} classes, buckets {:?}, {} weight allocations \
-         for {} layers, {} workers",
+         for {} layers, {} workers, fill window {} us",
         match &spec {
             NetSpec::Mlp { .. } => "mlp",
             NetSpec::Cnn(_) => "cnn",
@@ -224,14 +304,39 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         model.buckets(),
         model.weight_alloc_ids().len(),
         model.layer_count(),
-        sc.workers
+        sc.workers,
+        sc.wait_for_fill_us
     );
-    let load = LoadSpec { requests: sc.requests, rate_rps: sc.rate, seed: cfg.seed };
-    let opts = ServeOpts { max_batch: sc.max_batch, workers: sc.workers };
-    let (report, responses) = run_open_loop(model, opts, &load);
-    if responses.len() != sc.requests {
-        bail!("served {} of {} requests", responses.len(), sc.requests);
-    }
+    let opts = ServeOpts {
+        max_batch: sc.max_batch,
+        workers: sc.workers,
+        wait_for_fill_us: sc.wait_for_fill_us,
+    };
+    let report = if let Some(min_acc) = sc.min_accuracy {
+        let art = artifact.as_ref().expect("validated: min_accuracy requires model_path");
+        let (report, accuracy) = serve_eval_load(model, opts, &sc, art)?;
+        log_info!(
+            "serve accuracy over the training distribution: {:.1}% (threshold {:.1}%)",
+            accuracy * 100.0,
+            min_acc * 100.0
+        );
+        if accuracy < min_acc {
+            bail!(
+                "served accuracy {:.3} below the required {:.3} — trained weights are not \
+                 flowing through serving",
+                accuracy,
+                min_acc
+            );
+        }
+        report
+    } else {
+        let load = LoadSpec { requests: sc.requests, rate_rps: sc.rate, seed: cfg.seed };
+        let (report, responses) = run_open_loop(model, opts, &load);
+        if responses.len() != sc.requests {
+            bail!("served {} of {} requests", responses.len(), sc.requests);
+        }
+        report
+    };
     print!("{}", report.render());
     if emit_json {
         println!("{}", report.to_json().to_string_compact());
@@ -239,13 +344,55 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     Ok(())
 }
 
+/// Accuracy-replay load: pace the artifact's own training distribution
+/// (regenerated from its stored seed) through the server open-loop, then
+/// score the responses against the labels. Request ids are submission
+/// order, so responses pair with labels by id. The pacing machinery is
+/// [`run_open_loop_with`] — the same loop as the synthetic load, fed
+/// dataset rows instead of noise.
+fn serve_eval_load(
+    model: InferenceModel,
+    opts: ServeOpts,
+    sc: &ServeConfig,
+    art: &ModelArtifact,
+) -> Result<(brgemm_dl::serve::ServeReport, f64)> {
+    let data = synth_dataset(&art.arch, art.meta.seed);
+    let n = sc.requests.min(data.len());
+    if n < sc.requests {
+        log_info!(
+            "eval load capped at {} requests (the training set size); {} were configured",
+            n,
+            sc.requests
+        );
+    }
+    let load = LoadSpec { requests: n, rate_rps: sc.rate, seed: art.meta.seed };
+    let (report, responses) =
+        run_open_loop_with(model, opts, &load, |_rng, i| data.batch(i, 1).0);
+    if responses.len() != n {
+        bail!("served {} of {} eval requests", responses.len(), n);
+    }
+    let mut correct = 0usize;
+    for r in &responses {
+        let (_, labels) = data.batch(r.id as usize, 1);
+        let pred = r
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        correct += usize::from(pred == labels[0] as usize);
+    }
+    Ok((report, correct as f64 / n as f64))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(path) = args.str("config") {
         // The config file is authoritative: reject flags it would silently
         // override (only --json composes with --config).
         let conflicting: Vec<&str> =
-            ["model", "rate", "requests", "max-batch", "serve-workers", "nthreads", "seed",
-             "tune"]
+            ["model", "model-path", "min-accuracy", "wait-fill-us", "rate", "requests",
+             "max-batch", "serve-workers", "nthreads", "seed", "tune"]
             .into_iter()
             .filter(|&k| args.str(k).is_some())
             .collect();
@@ -258,8 +405,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let cfg = RunConfig::from_file(path)?;
         let sc = cfg
             .serve
+            .clone()
             .ok_or_else(|| anyhow!("config {} has no \"serve\" section", path))?;
         return run_serve(&cfg, sc, args.flag("json"));
+    }
+    if args.str("model-path").is_some() && args.str("model").is_some() {
+        bail!("--model-path serves the artifact's own topology; drop --model");
     }
     let mut cfg = RunConfig::default();
     cfg.workload = match args.str_or("model", "mlp") {
@@ -278,32 +429,164 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests: args.usize_or("requests", d.requests).map_err(|e| anyhow!("{}", e))?,
         max_batch: args.usize_or("max-batch", d.max_batch).map_err(|e| anyhow!("{}", e))?,
         workers: args.usize_or("serve-workers", d.workers).map_err(|e| anyhow!("{}", e))?,
+        wait_for_fill_us: args.usize_or("wait-fill-us", 0).map_err(|e| anyhow!("{}", e))?
+            as u64,
+        model_path: args.str("model-path").map(String::from),
+        min_accuracy: args.f64("min-accuracy").map_err(|e| anyhow!("{}", e))?,
     };
     sc.validate()?;
     run_serve(&cfg, sc, args.flag("json"))
 }
 
+/// The training schedule derived from a config: epoch = one pass over
+/// the synthetic training set; an `epochs` config runs that many passes,
+/// otherwise the raw `steps` count applies. A data-parallel step
+/// consumes `workers` shards of `batch` samples, so the per-step sample
+/// count scales with the worker count.
+struct Schedule {
+    steps_per_epoch: usize,
+    total_steps: usize,
+}
+
+fn schedule_of(cfg: &RunConfig, data: &ClassifyData) -> Schedule {
+    let samples_per_step = cfg.batch * cfg.workers;
+    let steps_per_epoch = (data.len() / samples_per_step).max(1);
+    let total_steps = match cfg.epochs {
+        Some(e) => e * steps_per_epoch,
+        None => cfg.steps,
+    };
+    Schedule { steps_per_epoch, total_steps }
+}
+
+/// Snapshot `model` into a checkpoint artifact (canonical weights +
+/// training metadata, atomically replacing the file at `ck.path`).
+#[allow(clippy::too_many_arguments)]
+fn save_checkpoint<M: Model>(
+    ck: &CheckpointConfig,
+    arch: &Arch,
+    cfg: &RunConfig,
+    model: &mut M,
+    data: &ClassifyData,
+    epoch: usize,
+    step: usize,
+    loss: f32,
+    train_rng: &Rng,
+) -> Result<()> {
+    let accuracy = eval_accuracy(model, data, 16);
+    let meta = TrainMeta {
+        epoch: epoch as u64,
+        step: step as u64,
+        seed: cfg.seed,
+        rng: train_rng.state(),
+        loss,
+        accuracy,
+    };
+    let art = ModelArtifact::new(arch.clone(), meta, model.export_weights());
+    let path = art.save(&ck.path)?;
+    log_info!(
+        "checkpoint: epoch {} step {} loss {:.4} acc {:.1}% -> {}",
+        epoch,
+        step,
+        loss,
+        accuracy * 100.0,
+        path.display()
+    );
+    Ok(())
+}
+
 /// Shared native training driver over any [`Model`]: multi-worker
 /// synchronous data-parallel (real ring-allreduce, modelled comm time) or
-/// single-model SGD, with step logging and a final accuracy report.
-/// `build` constructs one replica from a seeded RNG; every replica is
-/// built from the same seed so synchronous SGD starts bit-identical.
+/// single-model SGD, with step logging, per-epoch checkpointing, resume
+/// from a model artifact, and a final accuracy report. `build` constructs
+/// one replica from a seeded RNG; every replica is built from the same
+/// seed so synchronous SGD starts bit-identical. A resumed run restores
+/// every replica's parameters from the artifact and continues at the
+/// stored step — bit-identical to a run that never stopped, because the
+/// data schedule is a pure function of the step index.
 fn drive_native<M: Model>(
     cfg: &RunConfig,
     data: &ClassifyData,
+    arch: &Arch,
+    resume: Option<&ModelArtifact>,
     build: impl Fn(&mut Rng) -> M,
 ) -> Result<()> {
+    let sched = schedule_of(cfg, data);
+    let spe = sched.steps_per_epoch;
+    let total = sched.total_steps;
+    let ckpt = cfg.checkpoint.as_ref();
+    let mut train_rng = Rng::new(cfg.seed);
+    let mut start_step = 0usize;
+    if let Some(art) = resume {
+        if art.arch != *arch {
+            bail!(
+                "resume artifact is {}, run config builds {}",
+                art.arch.describe(),
+                arch.describe()
+            );
+        }
+        if art.meta.seed != cfg.seed {
+            bail!(
+                "resume artifact was trained with seed {}, run config has seed {} — the \
+                 synthetic dataset and schedule are seed-derived, so resuming on a \
+                 different seed would silently train a different task; set \"seed\": {}",
+                art.meta.seed,
+                cfg.seed,
+                art.meta.seed
+            );
+        }
+        start_step = art.meta.step as usize;
+        train_rng = Rng::from_state(art.meta.rng);
+        if start_step >= total {
+            log_info!(
+                "artifact is already at step {} of {} — nothing to train \
+                 (raise --epochs/--steps to continue)",
+                start_step,
+                total
+            );
+        }
+    }
+    let at_epoch_end = |model: &mut M, step: usize, loss: f32, rng: &Rng| -> Result<()> {
+        let done = step + 1;
+        if done % spe != 0 {
+            return Ok(());
+        }
+        let epoch = done / spe;
+        if let Some(ck) = ckpt {
+            if epoch % ck.every_epochs == 0 {
+                save_checkpoint(ck, arch, cfg, model, data, epoch, done, loss, rng)?;
+            }
+        }
+        Ok(())
+    };
     if cfg.workers > 1 {
-        let workers: Vec<M> =
-            (0..cfg.workers).map(|_| build(&mut Rng::new(cfg.seed))).collect();
+        // Every replica must start bit-identical, so each is built from a
+        // fresh seed-rng — except worker 0 on a fresh run, which consumes
+        // `train_rng` (it starts equal to `Rng::new(cfg.seed)`, so the
+        // init is identical) to advance the checkpointed training stream
+        // past initialisation. On resume the stream position comes from
+        // the artifact, so init draws from throwaway rngs instead.
+        let mut workers: Vec<M> = (0..cfg.workers)
+            .map(|i| {
+                if i == 0 && resume.is_none() {
+                    build(&mut train_rng)
+                } else {
+                    build(&mut Rng::new(cfg.seed))
+                }
+            })
+            .collect();
+        if let Some(art) = resume {
+            for w in workers.iter_mut() {
+                w.import_weights(&art.layers)?;
+            }
+        }
         let mut dp = DataParallelTrainer::from_workers(workers, cfg.lr as f32);
         log_info!("model params: {} × {} replicas", dp.workers[0].param_count(), cfg.workers);
-        for step in 0..cfg.steps {
+        for step in start_step..total {
             let shards: Vec<_> = (0..cfg.workers)
                 .map(|w| data.batch(step * cfg.workers + w, cfg.batch))
                 .collect();
             let s = dp.step(&shards);
-            if step % 10 == 0 || step + 1 == cfg.steps {
+            if step % 10 == 0 || step + 1 == total {
                 log_info!(
                     "step {:4} loss {:.4} compute {:.1}ms comm(model) {:.2}ms",
                     step,
@@ -312,22 +595,35 @@ fn drive_native<M: Model>(
                     s.comm_secs * 1e3
                 );
             }
+            at_epoch_end(&mut dp.workers[0], step, s.loss, &train_rng)?;
         }
         if !dp.replicas_consistent() {
             bail!("replicas diverged");
         }
-        log_info!("replicas consistent after {} steps", cfg.steps);
+        log_info!("replicas consistent after {} steps", total.saturating_sub(start_step));
         let acc = eval_accuracy(&mut dp.workers[0], data, 16);
         log_info!("final accuracy {:.1}% (worker 0)", acc * 100.0);
     } else {
-        let mut model = build(&mut Rng::new(cfg.seed));
+        // Fresh run: init consumes the checkpointed training stream, so
+        // TrainMeta.rng records the post-init position. Resume: the
+        // position was restored from the artifact above; init uses a
+        // throwaway rng (its draws are overwritten by the import).
+        let mut model = if resume.is_none() {
+            build(&mut train_rng)
+        } else {
+            build(&mut Rng::new(cfg.seed))
+        };
+        if let Some(art) = resume {
+            model.import_weights(&art.layers)?;
+        }
         log_info!("model params: {}", model.param_count());
-        for step in 0..cfg.steps {
+        for step in start_step..total {
             let (x, labels) = data.batch(step, cfg.batch);
             let loss = model.train_step(&x, &labels, cfg.lr as f32);
-            if step % 10 == 0 || step + 1 == cfg.steps {
+            if step % 10 == 0 || step + 1 == total {
                 log_info!("step {:4} loss {:.4}", step, loss);
             }
+            at_epoch_end(&mut model, step, loss, &train_rng)?;
         }
         let acc = eval_accuracy(&mut model, data, 16);
         log_info!("final accuracy {:.1}%", acc * 100.0);
@@ -335,13 +631,13 @@ fn drive_native<M: Model>(
     Ok(())
 }
 
-fn run_mlp_native(cfg: &RunConfig, sizes: &[usize]) -> Result<()> {
+fn run_mlp_native(cfg: &RunConfig, sizes: &[usize], resume: Option<ModelArtifact>) -> Result<()> {
     if cfg.tune {
         tune_mlp_layers(cfg, sizes);
     }
-    let mut rng = Rng::new(cfg.seed);
-    let data = ClassifyData::synth(4096, sizes[0], *sizes.last().unwrap(), 0.2, &mut rng);
-    drive_native(cfg, &data, |rng| {
+    let arch = Arch::Mlp { sizes: sizes.to_vec() };
+    let data = synth_dataset(&arch, cfg.seed);
+    drive_native(cfg, &data, &arch, resume.as_ref(), |rng| {
         MlpModel::new_with(sizes, cfg.batch, cfg.nthreads, cfg.tune, rng)
     })
 }
@@ -377,13 +673,19 @@ fn tune_mlp_layers(cfg: &RunConfig, sizes: &[usize]) {
 
 /// Native CNN training: the conv stack + pool + FC head driver, trained
 /// end to end through the BRGEMM primitives (single- or multi-worker).
-fn run_cnn_native(cfg: &RunConfig, scale: usize, depth: usize, classes: usize) -> Result<()> {
+fn run_cnn_native(
+    cfg: &RunConfig,
+    scale: usize,
+    depth: usize,
+    classes: usize,
+    resume: Option<ModelArtifact>,
+) -> Result<()> {
     let spec = CnnSpec::resnet_mini(scale, depth, classes);
     if cfg.tune {
         tune_cnn_layers(cfg, &spec);
     }
-    let mut rng = Rng::new(cfg.seed);
-    let data = ClassifyData::synth(1024, spec.input_dim(), classes, 0.3, &mut rng);
+    let arch = Arch::Cnn(spec.clone());
+    let data = synth_dataset(&arch, cfg.seed);
     log_info!(
         "cnn: {} conv layers at {}x{}x{}",
         spec.convs.len(),
@@ -391,7 +693,7 @@ fn run_cnn_native(cfg: &RunConfig, scale: usize, depth: usize, classes: usize) -
         spec.in_h,
         spec.in_w
     );
-    drive_native(cfg, &data, |rng| {
+    drive_native(cfg, &data, &arch, resume.as_ref(), |rng| {
         CnnModel::new_with(&spec, cfg.batch, cfg.nthreads, cfg.tune, rng)
     })
 }

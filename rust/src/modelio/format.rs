@@ -1,0 +1,224 @@
+//! Low-level binary encoding for model artifacts.
+//!
+//! Everything is little-endian and length-prefixed; the [`Dec`] reader
+//! returns a hard error (with byte offset) on any truncation or
+//! out-of-range length instead of panicking, so a corrupted or cut-off
+//! artifact file is always rejected with a clear message. [`crc32`] is the
+//! standard IEEE-802.3 polynomial (reflected, `0xEDB88320`), computed over
+//! the payload so header and body corruption are both caught.
+
+use anyhow::{bail, Result};
+
+/// CRC-32 (IEEE) over `data` — table-free bitwise form; artifacts are a
+/// few MB at most, so simplicity beats a lookup table here.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Append-only little-endian writer.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed (u64) f32 slice.
+    pub fn f32_slice(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    /// Length-prefixed (u32) usize slice (stored as u32s — dims, sizes).
+    pub fn usize_slice(&mut self, v: &[usize]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u32(x as u32);
+        }
+    }
+}
+
+/// Little-endian reader with offset-carrying errors.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated artifact: need {} bytes for {} at offset {}, only {} left",
+                n,
+                what,
+                self.i,
+                self.remaining()
+            );
+        }
+        let b: &'a [u8] = self.b;
+        let start = self.i;
+        self.i += n;
+        Ok(&b[start..start + n])
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// u64-length-prefixed f32 slice; the length is bounds-checked against
+    /// the remaining bytes *before* allocating, so a corrupted length can
+    /// neither OOM nor panic.
+    pub fn f32_slice(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u64(what)? as usize;
+        if self.remaining() < n.saturating_mul(4) {
+            bail!(
+                "truncated artifact: {} claims {} f32s at offset {}, only {} bytes left",
+                what,
+                n,
+                self.i,
+                self.remaining()
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32(what)?);
+        }
+        Ok(out)
+    }
+
+    /// u32-length-prefixed u32 slice widened to usizes.
+    pub fn usize_slice(&mut self, what: &str) -> Result<Vec<usize>> {
+        let n = self.u32(what)? as usize;
+        if self.remaining() < n.saturating_mul(4) {
+            bail!(
+                "truncated artifact: {} claims {} entries at offset {}, only {} bytes left",
+                what,
+                n,
+                self.i,
+                self.remaining()
+            );
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32(what)? as usize);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn enc_dec_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u32(0xDEAD_BEEF);
+        e.u64(1 << 40);
+        e.f32(-1.5);
+        e.f64(std::f64::consts::PI);
+        e.f32_slice(&[1.0, 2.0, 3.5]);
+        e.usize_slice(&[64, 128, 10]);
+        let mut d = Dec::new(&e.buf);
+        assert_eq!(d.u8("a").unwrap(), 7);
+        assert_eq!(d.u32("b").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64("c").unwrap(), 1 << 40);
+        assert_eq!(d.f32("d").unwrap(), -1.5);
+        assert_eq!(d.f64("e").unwrap(), std::f64::consts::PI);
+        assert_eq!(d.f32_slice("f").unwrap(), vec![1.0, 2.0, 3.5]);
+        assert_eq!(d.usize_slice("g").unwrap(), vec![64, 128, 10]);
+        assert!(d.done());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.f32_slice(&[1.0; 16]);
+        for cut in [0, 3, 8, 11, e.buf.len() - 1] {
+            let err = Dec::new(&e.buf[..cut]).f32_slice("weights").unwrap_err();
+            assert!(err.to_string().contains("truncated"), "cut {}: {}", cut, err);
+        }
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected_before_allocating() {
+        let mut e = Enc::new();
+        e.u64(u64::MAX); // claims ~2^64 f32s follow
+        let err = Dec::new(&e.buf).f32_slice("weights").unwrap_err();
+        assert!(err.to_string().contains("claims"), "{}", err);
+    }
+}

@@ -1,0 +1,779 @@
+//! Model artifacts: the persistence layer between the trainer and the
+//! server (train → checkpoint → serve).
+//!
+//! The paper's thesis is that DL primitives are loops around one BRGEMM
+//! kernel with layout/blocking as a *tuning detail*. The artifact format
+//! takes that seriously: weights are stored in **canonical unblocked**
+//! form (`[K][C]` / `[K][C][R][S]` row-major, little-endian f32) and are
+//! re-packed on load for whatever blocking the loader's tuner picks —
+//! unlike vendor-library handles, a trained model is never baked into one
+//! execution layout. Packing is a pure index permutation, so
+//! save-under-one-blocking / load-under-another round-trips to
+//! bit-identical parameters.
+//!
+//! # File format (version 1)
+//!
+//! ```text
+//!   magic    8  b"BRGMMDL\0"
+//!   version  u32 (little-endian; readers reject other versions)
+//!   length   u64 payload byte count
+//!   crc32    u32 IEEE CRC of the payload
+//!   payload  arch descriptor + training metadata + per-layer params
+//! ```
+//!
+//! The payload is length-prefixed throughout (see [`format`]); corrupted,
+//! truncated, or stale-version files are rejected with a precise error —
+//! never a panic, never a silently wrong model.
+//!
+//! # Train → serve walkthrough
+//!
+//! Train an MLP with per-epoch checkpointing (`examples/checkpoint.json`):
+//!
+//! ```text
+//!   brgemm-dl run --config examples/checkpoint.json
+//!   # -> checkpoints/mlp.bin after every epoch
+//! ```
+//!
+//! Resume a longer schedule from the snapshot (bit-identical to a run
+//! that never stopped — the artifact carries the step cursor and RNG
+//! state, and the synthetic data pipeline is regenerated from the stored
+//! seed):
+//!
+//! ```text
+//!   brgemm-dl run --config examples/checkpoint.json --epochs 3 \
+//!       --resume checkpoints/mlp.bin
+//! ```
+//!
+//! Serve the trained weights — every batch-bucket plan is built from the
+//! artifact through the shared-weight structs, and `--min-accuracy`
+//! replays the training distribution through the server to prove the
+//! learned model (not a random init) is answering:
+//!
+//! ```text
+//!   brgemm-dl serve --model-path checkpoints/mlp.bin --min-accuracy 0.5
+//! ```
+//!
+//! A running server hot-reloads a newer artifact atomically
+//! ([`crate::serve::Server::reload`]): in-flight batches finish on the
+//! weights they started with, later batches use the new set, and the swap
+//! count lands in the serve metrics.
+
+pub mod format;
+
+use crate::coordinator::cnn::CnnSpec;
+use anyhow::{anyhow, bail, Result};
+use self::format::{crc32, Dec, Enc};
+use std::path::{Path, PathBuf};
+
+/// File magic (8 bytes).
+pub const MAGIC: [u8; 8] = *b"BRGMMDL\0";
+/// Schema version this build writes and reads.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// The architecture descriptor: which network the stored parameters
+/// belong to. Mirrors the run-config workloads (and converts to the
+/// serving [`NetSpec`](crate::serve::NetSpec)).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arch {
+    /// `sizes = [d_in, h1, ..., classes]`; hidden ReLU, linear head.
+    Mlp { sizes: Vec<usize> },
+    /// Conv stack + pool + FC head (the CNN training driver's topology).
+    Cnn(CnnSpec),
+}
+
+/// What one layer of an [`Arch`] must look like in the artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerShape {
+    pub kind: LayerKind,
+    /// `Fc`: `[k, c]`; `Conv`: `[k, c, r, s]`.
+    pub dims: Vec<usize>,
+}
+
+impl Arch {
+    pub fn input_dim(&self) -> usize {
+        match self {
+            Arch::Mlp { sizes } => sizes[0],
+            Arch::Cnn(spec) => spec.input_dim(),
+        }
+    }
+
+    pub fn classes(&self) -> usize {
+        match self {
+            Arch::Mlp { sizes } => *sizes.last().unwrap(),
+            Arch::Cnn(spec) => spec.classes,
+        }
+    }
+
+    /// Short human-readable form for logs.
+    pub fn describe(&self) -> String {
+        match self {
+            Arch::Mlp { sizes } => format!("mlp {:?}", sizes),
+            Arch::Cnn(spec) => format!(
+                "cnn {}x{}x{} ({} convs, {} classes)",
+                spec.in_c,
+                spec.in_h,
+                spec.in_w,
+                spec.convs.len(),
+                spec.classes
+            ),
+        }
+    }
+
+    /// Semantic validation: every decoded arch must describe a network
+    /// the model constructors can actually build. Checked *before* any
+    /// geometry-deriving call ([`Self::layer_shapes`],
+    /// `CnnSpec::conv_configs`), so a hostile-but-well-checksummed
+    /// artifact errors instead of panicking (divide-by-zero strides,
+    /// filters larger than the padded input, pool windows larger than
+    /// the final feature map).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Arch::Mlp { sizes } => {
+                if sizes.len() < 2 {
+                    bail!("mlp arch needs >= 2 sizes, got {:?}", sizes);
+                }
+                if sizes.iter().any(|&s| s == 0) {
+                    bail!("mlp arch sizes must all be >= 1, got {:?}", sizes);
+                }
+            }
+            Arch::Cnn(spec) => {
+                if spec.convs.is_empty() {
+                    bail!("cnn arch has no conv layers");
+                }
+                if spec.in_c == 0 || spec.in_h == 0 || spec.in_w == 0 {
+                    bail!(
+                        "cnn arch input {}x{}x{} must be >= 1 in every dim",
+                        spec.in_c, spec.in_h, spec.in_w
+                    );
+                }
+                if spec.classes < 2 {
+                    bail!("cnn arch needs >= 2 classes, got {}", spec.classes);
+                }
+                let (mut h, mut w) = (spec.in_h, spec.in_w);
+                for (i, cv) in spec.convs.iter().enumerate() {
+                    if cv.k == 0 || cv.r == 0 || cv.s == 0 || cv.stride == 0 {
+                        bail!(
+                            "cnn arch conv {}: k/r/s/stride must all be >= 1, got {:?}",
+                            i, cv
+                        );
+                    }
+                    if h + 2 * cv.pad < cv.r || w + 2 * cv.pad < cv.s {
+                        bail!(
+                            "cnn arch conv {}: {}x{} filter exceeds its {}x{} padded input",
+                            i,
+                            cv.r,
+                            cv.s,
+                            h + 2 * cv.pad,
+                            w + 2 * cv.pad
+                        );
+                    }
+                    h = (h + 2 * cv.pad - cv.r) / cv.stride + 1;
+                    w = (w + 2 * cv.pad - cv.s) / cv.stride + 1;
+                }
+                // Windowed pooling must fit the final feature map (global
+                // pooling — pool_win 0 — always fits; the pool stride is
+                // clamped to >= 1 by PoolConfig).
+                if spec.pool_win > 0 && (spec.pool_win > h || spec.pool_win > w) {
+                    bail!(
+                        "cnn arch pool window {} exceeds the {}x{} final feature map",
+                        spec.pool_win, h, w
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-layer shapes an artifact of this arch must carry, in the
+    /// canonical layer order ([`crate::coordinator::trainer::Model`]'s
+    /// export order): MLP layers first-to-last; CNN conv stack in chain
+    /// order, then the FC head. Call [`Self::validate`] first — this
+    /// derives geometry and assumes a well-formed arch.
+    pub fn layer_shapes(&self) -> Vec<LayerShape> {
+        match self {
+            Arch::Mlp { sizes } => sizes
+                .windows(2)
+                .map(|wd| LayerShape { kind: LayerKind::Fc, dims: vec![wd[1], wd[0]] })
+                .collect(),
+            Arch::Cnn(spec) => {
+                let cfgs = spec.conv_configs(1, 1);
+                let mut out: Vec<LayerShape> = cfgs
+                    .iter()
+                    .map(|c| LayerShape {
+                        kind: LayerKind::Conv,
+                        dims: vec![c.k, c.c, c.r, c.s],
+                    })
+                    .collect();
+                // The pooled spatial dims are batch-independent, so the
+                // head's input width is a pure property of the arch.
+                let feat = spec.head_features(1);
+                out.push(LayerShape { kind: LayerKind::Fc, dims: vec![spec.classes, feat] });
+                out
+            }
+        }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            Arch::Mlp { sizes } => {
+                e.u8(0);
+                e.usize_slice(sizes);
+            }
+            Arch::Cnn(spec) => {
+                e.u8(1);
+                e.u32(spec.in_c as u32);
+                e.u32(spec.in_h as u32);
+                e.u32(spec.in_w as u32);
+                e.u32(spec.convs.len() as u32);
+                for c in &spec.convs {
+                    e.usize_slice(&[c.k, c.r, c.s, c.stride, c.pad]);
+                }
+                e.u32(spec.pool_win as u32);
+                e.u32(spec.pool_stride as u32);
+                e.u32(spec.classes as u32);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec) -> Result<Arch> {
+        match d.u8("arch tag")? {
+            0 => {
+                let sizes = d.usize_slice("mlp sizes")?;
+                if sizes.len() < 2 {
+                    bail!("artifact mlp arch needs >= 2 sizes, got {:?}", sizes);
+                }
+                Ok(Arch::Mlp { sizes })
+            }
+            1 => {
+                let in_c = d.u32("cnn in_c")? as usize;
+                let in_h = d.u32("cnn in_h")? as usize;
+                let in_w = d.u32("cnn in_w")? as usize;
+                let n_convs = d.u32("cnn conv count")? as usize;
+                let mut convs = Vec::with_capacity(n_convs);
+                for i in 0..n_convs {
+                    let v = d.usize_slice("conv spec")?;
+                    if v.len() != 5 {
+                        bail!("artifact conv {} spec needs 5 fields, got {}", i, v.len());
+                    }
+                    convs.push(crate::coordinator::cnn::ConvSpec {
+                        k: v[0],
+                        r: v[1],
+                        s: v[2],
+                        stride: v[3],
+                        pad: v[4],
+                    });
+                }
+                if convs.is_empty() {
+                    bail!("artifact cnn arch has no conv layers");
+                }
+                let pool_win = d.u32("pool_win")? as usize;
+                let pool_stride = d.u32("pool_stride")? as usize;
+                let classes = d.u32("classes")? as usize;
+                Ok(Arch::Cnn(CnnSpec {
+                    in_c,
+                    in_h,
+                    in_w,
+                    convs,
+                    pool_win,
+                    pool_stride,
+                    classes,
+                }))
+            }
+            t => bail!("unknown arch tag {} in artifact", t),
+        }
+    }
+}
+
+/// Which primitive a stored layer belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Fc,
+    Conv,
+}
+
+/// One layer's canonical (unblocked) parameters. `Fc`: `w` is row-major
+/// `[K][C]`, dims `[k, c]`. `Conv`: `w` is row-major `[K][C][R][S]`, dims
+/// `[k, c, r, s]`. `b` is `[K]` either way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    pub kind: LayerKind,
+    pub dims: Vec<usize>,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LayerParams {
+    pub fn fc(k: usize, c: usize, w: Vec<f32>, b: Vec<f32>) -> LayerParams {
+        LayerParams { kind: LayerKind::Fc, dims: vec![k, c], w, b }
+    }
+
+    pub fn conv(
+        k: usize,
+        c: usize,
+        r: usize,
+        s: usize,
+        w: Vec<f32>,
+        b: Vec<f32>,
+    ) -> LayerParams {
+        LayerParams { kind: LayerKind::Conv, dims: vec![k, c, r, s], w, b }
+    }
+
+    /// Output-channel count (`K`) — the bias width of every layer kind.
+    pub fn k(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Check this stored layer against the kind + dims a model expects at
+    /// that position — the one mismatch gate every import path
+    /// (trainer re-pack, CNN re-pack, serving weight-set build) goes
+    /// through, so the check and its error message can never drift.
+    pub fn expect(&self, what: &str, kind: LayerKind, dims: &[usize]) -> Result<()> {
+        fn name(k: LayerKind) -> &'static str {
+            match k {
+                LayerKind::Fc => "fc",
+                LayerKind::Conv => "conv",
+            }
+        }
+        if self.kind != kind || self.dims != dims {
+            bail!(
+                "{}: model expects {} {:?}, artifact has {} {:?}",
+                what,
+                name(kind),
+                dims,
+                name(self.kind),
+                self.dims
+            );
+        }
+        Ok(())
+    }
+
+    fn weight_len(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Training-state metadata carried alongside the parameters, so a resumed
+/// run continues exactly where the snapshot was taken.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainMeta {
+    /// Completed epochs at snapshot time.
+    pub epoch: u64,
+    /// Global step cursor (the synthetic data pipeline indexes batches by
+    /// step, so this is all a resumed run needs to replay the schedule).
+    pub step: u64,
+    /// The run seed — regenerates the synthetic dataset (and the serving
+    /// eval set) deterministically.
+    pub seed: u64,
+    /// Training RNG state ([`crate::util::rng::Rng::state`]).
+    pub rng: [u64; 4],
+    /// Last training loss at snapshot time.
+    pub loss: f32,
+    /// Eval accuracy at snapshot time (fraction in `[0, 1]`).
+    pub accuracy: f64,
+}
+
+impl TrainMeta {
+    /// Metadata for a model that was not produced by the training driver
+    /// (e.g. hand-built in a test).
+    pub fn fresh(seed: u64) -> TrainMeta {
+        TrainMeta {
+            epoch: 0,
+            step: 0,
+            seed,
+            rng: crate::util::rng::Rng::new(seed).state(),
+            loss: 0.0,
+            accuracy: 0.0,
+        }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.epoch);
+        e.u64(self.step);
+        e.u64(self.seed);
+        for s in self.rng {
+            e.u64(s);
+        }
+        e.f32(self.loss);
+        e.f64(self.accuracy);
+    }
+
+    fn decode(d: &mut Dec) -> Result<TrainMeta> {
+        Ok(TrainMeta {
+            epoch: d.u64("meta epoch")?,
+            step: d.u64("meta step")?,
+            seed: d.u64("meta seed")?,
+            rng: [
+                d.u64("meta rng")?,
+                d.u64("meta rng")?,
+                d.u64("meta rng")?,
+                d.u64("meta rng")?,
+            ],
+            loss: d.f32("meta loss")?,
+            accuracy: d.f64("meta accuracy")?,
+        })
+    }
+}
+
+/// A complete model artifact: arch + training metadata + canonical
+/// per-layer parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    pub arch: Arch,
+    pub meta: TrainMeta,
+    pub layers: Vec<LayerParams>,
+}
+
+impl ModelArtifact {
+    pub fn new(arch: Arch, meta: TrainMeta, layers: Vec<LayerParams>) -> ModelArtifact {
+        ModelArtifact { arch, meta, layers }
+    }
+
+    /// Structural validation: the arch must be semantically buildable
+    /// ([`Arch::validate`]), the stored layers must match its expected
+    /// layer list exactly (kind, dims, weight/bias lengths), and every
+    /// parameter must be finite. Run on every load; callable on
+    /// hand-built artifacts too.
+    pub fn validate(&self) -> Result<()> {
+        self.arch.validate()?;
+        let want = self.arch.layer_shapes();
+        if self.layers.len() != want.len() {
+            bail!(
+                "artifact has {} layers, arch {} expects {}",
+                self.layers.len(),
+                self.arch.describe(),
+                want.len()
+            );
+        }
+        for (i, (l, w)) in self.layers.iter().zip(&want).enumerate() {
+            if l.kind != w.kind || l.dims != w.dims {
+                bail!(
+                    "artifact layer {}: stored {:?}{:?}, arch expects {:?}{:?}",
+                    i, l.kind, l.dims, w.kind, w.dims
+                );
+            }
+            if l.w.len() != l.weight_len() {
+                bail!(
+                    "artifact layer {}: {} weight values for dims {:?} (want {})",
+                    i,
+                    l.w.len(),
+                    l.dims,
+                    l.weight_len()
+                );
+            }
+            if l.b.len() != l.k() {
+                bail!("artifact layer {}: {} bias values, want {}", i, l.b.len(), l.k());
+            }
+            if let Some(j) = l.w.iter().chain(&l.b).position(|v| !v.is_finite()) {
+                bail!("artifact layer {}: non-finite parameter at flat index {}", i, j);
+            }
+        }
+        Ok(())
+    }
+
+    /// Total stored parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Serialize to the full file byte layout (header + checksummed
+    /// payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Enc::new();
+        self.arch.encode(&mut p);
+        self.meta.encode(&mut p);
+        p.u32(self.layers.len() as u32);
+        for l in &self.layers {
+            p.u8(match l.kind {
+                LayerKind::Fc => 0,
+                LayerKind::Conv => 1,
+            });
+            p.usize_slice(&l.dims);
+            p.f32_slice(&l.w);
+            p.f32_slice(&l.b);
+        }
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(&MAGIC);
+        e.u32(SCHEMA_VERSION);
+        e.u64(p.buf.len() as u64);
+        e.u32(crc32(&p.buf));
+        e.buf.extend_from_slice(&p.buf);
+        e.buf
+    }
+
+    /// Parse + verify the full file byte layout. Magic, version, length
+    /// and checksum are all hard gates; the decoded artifact is then
+    /// structurally [`Self::validate`]d.
+    pub fn decode(bytes: &[u8]) -> Result<ModelArtifact> {
+        let mut d = Dec::new(bytes);
+        let magic = (0..8)
+            .map(|_| d.u8("magic"))
+            .collect::<Result<Vec<u8>>>()
+            .map_err(|_| anyhow!("not a model artifact: file shorter than the header"))?;
+        if magic != MAGIC {
+            bail!("not a model artifact: bad magic {:02x?}", &magic[..]);
+        }
+        let version = d.u32("schema version")?;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "artifact schema version {} not supported (this build reads version {}); \
+                 re-export the model with a matching build",
+                version,
+                SCHEMA_VERSION
+            );
+        }
+        let payload_len = d.u64("payload length")? as usize;
+        let want_crc = d.u32("checksum")?;
+        if d.remaining() != payload_len {
+            bail!(
+                "artifact payload is {} bytes, header promises {} — file truncated or \
+                 trailing garbage",
+                d.remaining(),
+                payload_len
+            );
+        }
+        let payload = &bytes[bytes.len() - payload_len..];
+        let got_crc = crc32(payload);
+        if got_crc != want_crc {
+            bail!(
+                "artifact checksum mismatch (stored {:08x}, computed {:08x}) — file corrupted",
+                want_crc,
+                got_crc
+            );
+        }
+        let mut d = Dec::new(payload);
+        let arch = Arch::decode(&mut d)?;
+        let meta = TrainMeta::decode(&mut d)?;
+        let n_layers = d.u32("layer count")? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let kind = match d.u8("layer kind")? {
+                0 => LayerKind::Fc,
+                1 => LayerKind::Conv,
+                t => bail!("artifact layer {}: unknown kind tag {}", i, t),
+            };
+            let dims = d.usize_slice("layer dims")?;
+            let w = d.f32_slice("layer weights")?;
+            let b = d.f32_slice("layer bias")?;
+            layers.push(LayerParams { kind, dims, w, b });
+        }
+        if !d.done() {
+            bail!("artifact payload has {} trailing bytes after the last layer", d.remaining());
+        }
+        let art = ModelArtifact { arch, meta, layers };
+        art.validate()?;
+        Ok(art)
+    }
+
+    /// Write to `path` atomically: encode, write a sibling temp file, then
+    /// rename over the target — a hot-reloading server never observes a
+    /// half-written artifact.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<PathBuf> {
+        let path = path.as_ref();
+        self.validate()?;
+        let bytes = self.encode();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow!("creating artifact dir {}: {}", dir.display(), e))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes)
+            .map_err(|e| anyhow!("writing artifact {}: {}", tmp.display(), e))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow!("renaming artifact into {}: {}", path.display(), e))?;
+        Ok(path.to_path_buf())
+    }
+
+    /// Read + verify an artifact file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelArtifact> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow!("reading artifact {}: {}", path.display(), e))?;
+        ModelArtifact::decode(&bytes)
+            .map_err(|e| anyhow!("artifact {}: {}", path.display(), e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cnn::{CnnSpec, ConvSpec};
+    use crate::util::rng::Rng;
+
+    fn mlp_artifact() -> ModelArtifact {
+        let mut rng = Rng::new(5);
+        let arch = Arch::Mlp { sizes: vec![6, 8, 3] };
+        let layers = vec![
+            LayerParams::fc(8, 6, rng.vec_f32(48, -1.0, 1.0), rng.vec_f32(8, -0.1, 0.1)),
+            LayerParams::fc(3, 8, rng.vec_f32(24, -1.0, 1.0), rng.vec_f32(3, -0.1, 0.1)),
+        ];
+        ModelArtifact::new(arch, TrainMeta::fresh(5), layers)
+    }
+
+    fn cnn_artifact() -> ModelArtifact {
+        let mut rng = Rng::new(6);
+        let spec = CnnSpec {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            convs: vec![
+                ConvSpec { k: 3, r: 3, s: 3, stride: 1, pad: 1 },
+                ConvSpec { k: 4, r: 1, s: 1, stride: 1, pad: 0 },
+            ],
+            pool_win: 0,
+            pool_stride: 1,
+            classes: 3,
+        };
+        let layers = vec![
+            LayerParams::conv(3, 2, 3, 3, rng.vec_f32(54, -1.0, 1.0), rng.vec_f32(3, -0.1, 0.1)),
+            LayerParams::conv(4, 3, 1, 1, rng.vec_f32(12, -1.0, 1.0), rng.vec_f32(4, -0.1, 0.1)),
+            LayerParams::fc(3, 4, rng.vec_f32(12, -1.0, 1.0), rng.vec_f32(3, -0.1, 0.1)),
+        ];
+        ModelArtifact::new(Arch::Cnn(spec), TrainMeta::fresh(6), layers)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_both_arches() {
+        for art in [mlp_artifact(), cnn_artifact()] {
+            let bytes = art.encode();
+            let back = ModelArtifact::decode(&bytes).unwrap();
+            assert_eq!(art, back, "decode(encode(x)) must be x");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("brgemm_modelio_test");
+        let path = dir.join("roundtrip.bin");
+        let art = mlp_artifact();
+        art.save(&path).unwrap();
+        let back = ModelArtifact::load(&path).unwrap();
+        assert_eq!(art, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = mlp_artifact().encode();
+        bytes[0] ^= 0xFF;
+        let err = ModelArtifact::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{}", err);
+        // A short junk file is "not an artifact", not a panic.
+        let err = ModelArtifact::decode(b"hi").unwrap_err();
+        assert!(err.to_string().contains("not a model artifact"), "{}", err);
+    }
+
+    #[test]
+    fn stale_version_rejected_with_clear_error() {
+        let mut bytes = mlp_artifact().encode();
+        bytes[8..12].copy_from_slice(&(SCHEMA_VERSION + 1).to_le_bytes());
+        let err = ModelArtifact::decode(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("schema version") && msg.contains("not supported"), "{}", msg);
+    }
+
+    #[test]
+    fn corruption_rejected_by_checksum() {
+        let art = mlp_artifact();
+        let bytes = art.encode();
+        // Flip one payload bit anywhere: the CRC must catch it.
+        for at in [24usize, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x01;
+            let err = ModelArtifact::decode(&bad).unwrap_err();
+            assert!(
+                err.to_string().contains("checksum mismatch"),
+                "byte {}: {}",
+                at,
+                err
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = mlp_artifact().encode();
+        for cut in [10, 20, bytes.len() / 2, bytes.len() - 1] {
+            let err = ModelArtifact::decode(&bytes[..cut]).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("truncated") || msg.contains("shorter"),
+                "cut {}: {}",
+                cut,
+                msg
+            );
+        }
+    }
+
+    #[test]
+    fn validate_catches_shape_lies() {
+        // Wrong layer count.
+        let mut art = mlp_artifact();
+        art.layers.pop();
+        assert!(art.validate().unwrap_err().to_string().contains("expects 2"));
+        // Wrong dims.
+        let mut art = mlp_artifact();
+        art.layers[0].dims = vec![8, 7];
+        assert!(art.validate().is_err());
+        // Weight length disagrees with dims (forge dims+weights together so
+        // the dims check passes and the length check has to catch it).
+        let mut art = mlp_artifact();
+        art.layers[0].w.pop();
+        assert!(art.validate().unwrap_err().to_string().contains("weight values"));
+        // Non-finite parameter.
+        let mut art = mlp_artifact();
+        art.layers[1].w[3] = f32::NAN;
+        assert!(art.validate().unwrap_err().to_string().contains("non-finite"));
+        // A forged-but-consistent artifact still fails against its arch.
+        let mut art = cnn_artifact();
+        art.layers[0] = LayerParams::conv(3, 2, 1, 1, vec![0.0; 6], vec![0.0; 3]);
+        assert!(art.validate().is_err(), "conv dims must match the arch's filter shape");
+    }
+
+    #[test]
+    fn hostile_arch_rejected_with_error_not_panic() {
+        // A well-checksummed artifact whose *arch* is unbuildable must
+        // error on decode, never divide-by-zero or assert downstream.
+        let mut art = cnn_artifact();
+        if let Arch::Cnn(spec) = &mut art.arch {
+            spec.convs[1].stride = 0;
+        }
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains("stride"), "{}", err);
+
+        let mut art = cnn_artifact();
+        if let Arch::Cnn(spec) = &mut art.arch {
+            spec.convs[0].r = 99; // filter larger than the padded input
+        }
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{}", err);
+
+        let mut art = cnn_artifact();
+        if let Arch::Cnn(spec) = &mut art.arch {
+            spec.pool_win = 50; // window larger than the feature map
+        }
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains("pool window"), "{}", err);
+
+        let mut art = mlp_artifact();
+        art.arch = Arch::Mlp { sizes: vec![6, 0, 3] };
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{}", err);
+    }
+
+    #[test]
+    fn meta_survives_roundtrip() {
+        let mut art = mlp_artifact();
+        art.meta = TrainMeta {
+            epoch: 7,
+            step: 901,
+            seed: 42,
+            rng: [1, 2, 3, 4],
+            loss: 0.125,
+            accuracy: 0.9375,
+        };
+        let back = ModelArtifact::decode(&art.encode()).unwrap();
+        assert_eq!(back.meta, art.meta);
+    }
+}

@@ -268,6 +268,17 @@ impl ConvSharedWeights {
         &self.bias
     }
 
+    /// Unpack to the canonical plain layouts (`[K][C][R][S]` row-major
+    /// weights, `[K]` bias) — the weight-extraction path the
+    /// model-artifact subsystem uses. Packing is a pure permutation, so
+    /// `pack(cfg, to_plain())` reproduces the packed buffer bit for bit.
+    pub fn to_plain(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            layout::unpack_conv_weights(&self.w, self.k, self.c, self.r, self.s, self.bk, self.bc),
+            self.bias.to_vec(),
+        )
+    }
+
     /// Can an execution plan with this config run against these weights?
     /// Filter shape and feature blocking must agree; the mini-batch (and
     /// pixel strip `bq`) are free per plan.

@@ -185,6 +185,17 @@ impl FcSharedWeights {
         &self.bias
     }
 
+    /// Unpack to the canonical plain layouts (`[K][C]` row-major weights,
+    /// `[K]` bias) — the weight-extraction path the model-artifact
+    /// subsystem uses. Packing is a pure permutation, so
+    /// `pack(cfg, to_plain())` reproduces the packed buffer bit for bit.
+    pub fn to_plain(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            crate::tensor::layout::unpack_weights_2d(&self.w, self.k, self.c, self.bk, self.bc),
+            self.bias.to_vec(),
+        )
+    }
+
     /// Can an execution plan with this config run against these weights?
     /// Shape and feature blocking must agree (`bn` is free — that is the
     /// whole point of sharing across batch buckets).
@@ -568,6 +579,24 @@ mod tests {
         for i in 0..k {
             assert!((db[i] - db_want[i]).abs() < 1e-3);
         }
+    }
+
+    #[test]
+    fn shared_weights_to_plain_roundtrip_bitwise() {
+        let (k, c) = (12, 20);
+        let mut rng = Rng::new(71);
+        let w = rng.vec_f32(k * c, -1.0, 1.0);
+        let b = rng.vec_f32(k, -0.2, 0.2);
+        let cfg = FcConfig::new(4, c, k, Act::Relu).with_blocking(4, 5, 4);
+        let shared = FcSharedWeights::pack(&cfg, &w, &b);
+        let (wp, bp) = shared.to_plain();
+        assert_eq!(wp, w, "unpack(pack(w)) must be bitwise identical");
+        assert_eq!(bp, b);
+        // Re-pack under a *different* legal blocking and extract again:
+        // the canonical form is blocking-agnostic.
+        let cfg2 = FcConfig::new(2, c, k, Act::Relu).with_blocking(1, 10, 6);
+        let shared2 = FcSharedWeights::pack(&cfg2, &wp, &bp);
+        assert_eq!(shared2.to_plain().0, w);
     }
 
     #[test]

@@ -14,13 +14,15 @@
 //! workers, and joins them only after the queue is empty — every accepted
 //! request gets exactly one response (asserted by the drain test).
 
+use crate::modelio::ModelArtifact;
 use crate::serve::metrics::{ServeReport, ServeStats};
-use crate::serve::model::InferenceModel;
+use crate::serve::model::{InferenceModel, ServeScratch};
+use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Worker-pool shape. `workers` is the number of serving threads pulling
 /// batches; each executes its plan with the thread count the model was
@@ -30,11 +32,19 @@ use std::time::Instant;
 pub struct ServeOpts {
     pub max_batch: usize,
     pub workers: usize,
+    /// Batching delay knob: when a worker would dispatch a partial batch,
+    /// it may wait up to this many microseconds for the bucket to fill
+    /// (new arrivals wake it immediately; a full `max_batch`, shutdown,
+    /// or the deadline dispatch whatever is queued). `0` — the default —
+    /// preserves greedy dispatch: take whatever is queued, immediately.
+    /// The trade is the classic one: a small window raises batch fill
+    /// (throughput) at the cost of adding up to the window to latency.
+    pub wait_for_fill_us: u64,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_batch: 8, workers: 2 }
+        ServeOpts { max_batch: 8, workers: 2, wait_for_fill_us: 0 }
     }
 }
 
@@ -166,6 +176,14 @@ impl Server {
         self.shared.state.lock().unwrap().queue.len()
     }
 
+    /// Hot weight reload: atomically swap the serving model's weights for
+    /// the artifact's (same arch required). Batches in flight finish on
+    /// the weights they started with; batches taken after this call use
+    /// the new set. The swap count lands in the final report.
+    pub fn reload(&self, artifact: &ModelArtifact) -> Result<()> {
+        self.shared.model.reload(artifact)
+    }
+
     /// Stop intake, drain the queue, join the workers, and report. Every
     /// request accepted before this call is answered before it returns.
     pub fn shutdown(self) -> ServeReport {
@@ -178,39 +196,77 @@ impl Server {
             h.join().expect("serve worker panicked");
         }
         let wall = self.started.elapsed().as_secs_f64();
-        self.shared.stats.lock().unwrap().report(wall)
+        let reloads = self.shared.model.reload_count();
+        self.shared.stats.lock().unwrap().report(wall, reloads)
     }
 }
 
 fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
+    let dim = shared.model.input_dim();
+    let classes = shared.model.classes();
+    let max_batch = shared.opts.max_batch;
+    // Per-worker reusable buffers: the padded batch input and the forward
+    // plan's activation scratch both grow to their high-water mark during
+    // warm-up and are then reused — the steady-state path performs no
+    // per-request allocation (asserted by the scratch tests; the owned
+    // per-response logits row is the one API-mandated copy).
+    let mut scratch = ServeScratch::new();
+    let mut xbuf: Vec<f32> = Vec::new();
     loop {
         // Take up to max_batch requests, or exit once draining is done.
         let (taken, depth_after) = {
             let mut st = shared.state.lock().unwrap();
-            loop {
-                if !st.queue.is_empty() {
-                    break;
+            let taken: Vec<Pending> = loop {
+                while st.queue.is_empty() {
+                    if !st.accepting {
+                        return;
+                    }
+                    st = shared.cv.wait(st).unwrap();
                 }
-                if !st.accepting {
-                    return;
+                // Batching delay: wait up to the configured window for the
+                // bucket to fill before dispatching a partial batch. New
+                // arrivals (and shutdown) wake the wait; a full bucket or
+                // the deadline ends it.
+                if shared.opts.wait_for_fill_us > 0
+                    && st.queue.len() < max_batch
+                    && st.accepting
+                {
+                    let deadline =
+                        Instant::now() + Duration::from_micros(shared.opts.wait_for_fill_us);
+                    while st.queue.len() < max_batch && st.accepting {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        let (guard, _timeout) =
+                            shared.cv.wait_timeout(st, deadline - now).unwrap();
+                        st = guard;
+                    }
+                    // Another worker may have drained the queue while this
+                    // one waited — go back to waiting for work.
+                    if st.queue.is_empty() {
+                        continue;
+                    }
                 }
-                st = shared.cv.wait(st).unwrap();
-            }
-            let k = st.queue.len().min(shared.opts.max_batch);
-            let taken: Vec<Pending> = st.queue.drain(..k).collect();
-            (taken, st.queue.len())
+                let k = st.queue.len().min(max_batch);
+                break st.queue.drain(..k).collect();
+            };
+            let depth = st.queue.len();
+            (taken, depth)
         };
         let fill = taken.len();
         let bucket = shared.model.bucket_for(fill);
-        let dim = shared.model.input_dim();
         // Pad to the bucket with zero rows; their outputs are computed and
         // then masked (dropped) below — bit-identical real rows either way.
-        let mut x = vec![0.0f32; bucket * dim];
+        if xbuf.len() < bucket * dim {
+            xbuf.resize(bucket * dim, 0.0);
+        }
+        let x = &mut xbuf[..bucket * dim];
+        x.fill(0.0);
         for (i, r) in taken.iter().enumerate() {
             x[i * dim..(i + 1) * dim].copy_from_slice(&r.input);
         }
-        let logits = shared.model.forward(bucket, &x);
-        let classes = shared.model.classes();
+        let logits = shared.model.forward_with(bucket, x, &mut scratch);
         let done = Instant::now();
         let mut lats = Vec::with_capacity(fill);
         for (i, r) in taken.into_iter().enumerate() {
@@ -250,7 +306,7 @@ mod tests {
         let oracle = mlp_model(8); // same seed ⇒ identical weights
         let mut rng = Rng::new(6);
         let inputs: Vec<Vec<f32>> = (0..13).map(|_| rng.vec_f32(10, -1.0, 1.0)).collect();
-        let (server, rx) = Server::start(model, ServeOpts { max_batch: 8, workers: 1 });
+        let (server, rx) = Server::start(model, ServeOpts { max_batch: 8, workers: 1, ..ServeOpts::default() });
         // Atomic burst: the single worker necessarily sees depth 13 and
         // co-batches (8 then 5→bucket 8, or some split — never 13 × b1).
         let ids: Vec<u64> = server.submit_all(inputs.iter().cloned());
@@ -278,7 +334,7 @@ mod tests {
         // shutdown is requested; drain semantics must still answer every
         // request exactly once.
         let model = mlp_model(4);
-        let (server, rx) = Server::start(model, ServeOpts { max_batch: 4, workers: 3 });
+        let (server, rx) = Server::start(model, ServeOpts { max_batch: 4, workers: 3, ..ServeOpts::default() });
         let mut rng = Rng::new(7);
         let n = 200u64;
         for _ in 0..n {
@@ -309,16 +365,127 @@ mod tests {
 
     #[test]
     fn empty_shutdown_is_clean() {
-        let (server, rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 2 });
+        let (server, rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 2, ..ServeOpts::default() });
         let report = server.shutdown();
         assert_eq!(report.requests, 0);
         assert_eq!(rx.iter().count(), 0, "channel disconnects with no responses");
     }
 
     #[test]
+    fn wait_for_fill_coalesces_a_trickle_and_still_drains() {
+        // One worker, a generous fill window: requests submitted one by
+        // one (each submit wakes the waiting worker, which keeps waiting
+        // because the bucket is not full) must coalesce into fuller
+        // batches than greedy dispatch would produce, and a partial
+        // bucket must still dispatch — nothing hangs, nothing is lost.
+        let model = mlp_model(4);
+        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 200_000 };
+        let (server, rx) = Server::start(model, opts);
+        let mut rng = Rng::new(17);
+        for _ in 0..6 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        let report = server.shutdown();
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 6, "fill window must not lose requests");
+        assert_eq!(report.requests, 6);
+        // 6 requests into a 4-bucket ladder: the window holds the worker
+        // until the bucket fills, so the first batch carries 4 requests
+        // (greedy dispatch with one worker would almost surely start with
+        // a batch of 1) and the 2-request remainder dispatches at
+        // shutdown without waiting out the window.
+        let mut fills: Vec<usize> = responses.iter().map(|r| r.fill).collect();
+        fills.sort_unstable();
+        fills.dedup();
+        assert_eq!(fills, vec![2, 4], "one full bucket + the drained remainder");
+    }
+
+    #[test]
+    fn full_bucket_dispatches_without_waiting_out_the_window() {
+        // A burst that already fills max_batch must not pay the window.
+        let model = mlp_model(4);
+        // A window so large that waiting it out would trip the test's own
+        // timeout many times over.
+        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 60_000_000 };
+        let (server, rx) = Server::start(model, opts);
+        let mut rng = Rng::new(19);
+        let t0 = Instant::now();
+        server.submit_all((0..8).map(|_| rng.vec_f32(10, -1.0, 1.0)));
+        let _ = server.shutdown(); // shutdown also cuts any residual wait
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 8);
+        assert!(responses.iter().all(|r| r.fill == 4), "two full buckets");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "full buckets and shutdown must not wait out the fill window"
+        );
+    }
+
+    #[test]
+    fn hot_reload_swaps_weights_between_batches_without_losing_requests() {
+        use crate::coordinator::trainer::Model;
+        use crate::modelio::{Arch, ModelArtifact, TrainMeta};
+        let sizes = [10usize, 12, 4];
+        let model = InferenceModel::new_mlp(&sizes, 4, 1, false, &mut Rng::new(5));
+        let old_oracle = InferenceModel::new_mlp(&sizes, 4, 1, false, &mut Rng::new(5));
+        // The replacement weights: a differently-seeded model.
+        let donor =
+            crate::coordinator::trainer::MlpModel::new(&sizes, 4, 1, &mut Rng::new(99));
+        let art = ModelArtifact::new(
+            Arch::Mlp { sizes: sizes.to_vec() },
+            TrainMeta::fresh(99),
+            donor.export_weights(),
+        );
+        let new_oracle = InferenceModel::from_artifact(&art, 4, 1, false).unwrap();
+
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() },
+        );
+        let mut rng = Rng::new(7);
+        let inputs: Vec<Vec<f32>> = (0..60).map(|_| rng.vec_f32(10, -1.0, 1.0)).collect();
+        // Interleave submissions with a mid-stream reload: batches in
+        // flight finish on whatever generation they pinned, later batches
+        // use the new weights — every response must match exactly one of
+        // the two oracles, bit for bit (a torn read would match neither).
+        let ids: Vec<u64> = server.submit_all(inputs[..30].iter().cloned());
+        server.reload(&art).unwrap();
+        let ids2: Vec<u64> = server.submit_all(inputs[30..].iter().cloned());
+        let report = server.shutdown();
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 60, "reload must not drop or duplicate requests");
+        assert_eq!(report.requests, 60);
+        assert_eq!(report.reloads, 1, "the swap count lands in the metrics");
+        let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+        let mut matched_old = 0usize;
+        let mut matched_new = 0usize;
+        for (id, x) in ids.iter().chain(&ids2).zip(&inputs) {
+            let r = by_id[id];
+            let old = old_oracle.forward(1, x);
+            let new = new_oracle.forward(1, x);
+            if r.logits == old {
+                matched_old += 1;
+            } else if r.logits == new {
+                matched_new += 1;
+            } else {
+                panic!("response {} matches neither weight generation", id);
+            }
+        }
+        assert_eq!(matched_old + matched_new, 60);
+        // Everything submitted after the reload must be on the new set
+        // (the swap happened strictly before those requests entered the
+        // queue).
+        for (id, x) in ids2.iter().zip(&inputs[30..]) {
+            let r = by_id[id];
+            assert_eq!(r.logits, new_oracle.forward(1, x), "post-reload request {}", id);
+        }
+        assert!(matched_new >= 30, "at least the post-reload half is on the new weights");
+    }
+
+    #[test]
     #[should_panic(expected = "request shape mismatch")]
     fn wrong_shape_rejected() {
-        let (server, _rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 1 });
+        let (server, _rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 1, ..ServeOpts::default() });
         server.submit(vec![0.0; 3]);
     }
 }

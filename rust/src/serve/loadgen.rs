@@ -38,13 +38,29 @@ pub fn poisson_gap_secs(rng: &mut Rng, rate_rps: f64) -> f64 {
 /// Drive `model` with `load` through a [`Server`]: spawn the pool, pace
 /// the arrivals, drain on shutdown, and return the report plus every
 /// response (collected concurrently, so an unbounded backlog never sits
-/// in the channel at drain time).
+/// in the channel at drain time). Request rows are uniform noise drawn
+/// from the same stream as the arrival gaps, so schedule *and* contents
+/// are reproducible from the seed.
 pub fn run_open_loop(
     model: InferenceModel,
     opts: ServeOpts,
     load: &LoadSpec,
 ) -> (ServeReport, Vec<Response>) {
     let dim = model.input_dim();
+    run_open_loop_with(model, opts, load, move |rng, _i| rng.vec_f32(dim, -1.0, 1.0))
+}
+
+/// [`run_open_loop`] with a caller-supplied request source: `make_input`
+/// produces arrival `i`'s row (handed the load RNG, which has just drawn
+/// that arrival's gap). The `serve --min-accuracy` path uses this to
+/// replay a labelled dataset through the server; the pacing, stall-guard
+/// and drain logic live here once for both.
+pub fn run_open_loop_with(
+    model: InferenceModel,
+    opts: ServeOpts,
+    load: &LoadSpec,
+    mut make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
+) -> (ServeReport, Vec<Response>) {
     let (server, rx) = Server::start(model, opts);
     let collector = std::thread::spawn(move || {
         let mut out = Vec::new();
@@ -64,13 +80,13 @@ pub fn run_open_loop(
     // = e⁻¹⁰, so the delivered rate is unbiased at any configured rate
     // (a fixed-seconds cap would silently inflate low rates).
     let gap_cap = 10.0 / load.rate_rps;
-    for _ in 0..load.requests {
+    for i in 0..load.requests {
         due += poisson_gap_secs(&mut rng, load.rate_rps).min(gap_cap);
         let now = start.elapsed().as_secs_f64();
         if due > now {
             std::thread::sleep(Duration::from_secs_f64(due - now));
         }
-        server.submit(rng.vec_f32(dim, -1.0, 1.0));
+        server.submit(make_input(&mut rng, i));
     }
     let report = server.shutdown();
     let responses = collector.join().expect("response collector panicked");
@@ -99,7 +115,7 @@ mod tests {
         let model = InferenceModel::new_mlp(&[8, 10, 3], 4, 1, false, &mut Rng::new(13));
         let load = LoadSpec { requests: 60, rate_rps: 50_000.0, seed: 3 };
         let (report, responses) =
-            run_open_loop(model, ServeOpts { max_batch: 4, workers: 2 }, &load);
+            run_open_loop(model, ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() }, &load);
         assert_eq!(report.requests, 60);
         assert_eq!(responses.len(), 60);
         assert!(report.throughput_rps > 0.0);

@@ -57,8 +57,9 @@ impl ServeStats {
 
     /// Summarise into a report; `wall_secs` is the whole run's wall time
     /// (open-loop: arrival pacing included, which is what a served client
-    /// experiences).
-    pub fn report(&self, wall_secs: f64) -> ServeReport {
+    /// experiences); `reloads` is the number of hot weight swaps applied
+    /// during the run.
+    pub fn report(&self, wall_secs: f64, reloads: u64) -> ServeReport {
         let n = self.latencies.len();
         let mut sorted = self.latencies.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -69,6 +70,7 @@ impl ServeStats {
         };
         ServeReport {
             requests: n,
+            reloads,
             wall_secs,
             throughput_rps: if wall_secs > 0.0 { n as f64 / wall_secs } else { 0.0 },
             p50_ms: pct(0.50),
@@ -96,6 +98,8 @@ impl ServeStats {
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub requests: usize,
+    /// Hot weight reloads applied during the run (artifact swaps).
+    pub reloads: u64,
     pub wall_secs: f64,
     pub throughput_rps: f64,
     pub p50_ms: f64,
@@ -125,6 +129,9 @@ impl ServeReport {
             "queue depth at dequeue: mean {:.2}  max {:.0}\n",
             self.queue_depth_mean, self.queue_depth_max
         ));
+        if self.reloads > 0 {
+            s.push_str(&format!("hot weight reloads: {}\n", self.reloads));
+        }
         s.push_str("batch-fill histogram (bucket: batches, mean fill):\n");
         for (bucket, batches, fill) in &self.batch_fill {
             s.push_str(&format!(
@@ -153,6 +160,7 @@ impl ServeReport {
             .collect();
         obj([
             ("requests", (self.requests as f64).into()),
+            ("reloads", (self.reloads as f64).into()),
             ("wall_s", self.wall_secs.into()),
             ("throughput_rps", self.throughput_rps.into()),
             ("p50_ms", self.p50_ms.into()),
@@ -179,8 +187,9 @@ mod tests {
         st.record_batch(4, 2, 1, &[0.050, 0.060]);
         st.record_batch(1, 1, 0, &[0.070]);
         assert_eq!(st.requests(), 7);
-        let r = st.report(1.0);
+        let r = st.report(1.0, 2);
         assert_eq!(r.requests, 7);
+        assert_eq!(r.reloads, 2, "reload count flows into the report");
         assert!((r.throughput_rps - 7.0).abs() < 1e-12);
         assert!((r.p50_ms - 40.0).abs() < 1e-9, "p50 {}", r.p50_ms);
         assert!((r.max_ms - 70.0).abs() < 1e-9);
@@ -201,8 +210,9 @@ mod tests {
 
     #[test]
     fn empty_run_reports_zeros() {
-        let r = ServeStats::new().report(0.5);
+        let r = ServeStats::new().report(0.5, 0);
         assert_eq!(r.requests, 0);
+        assert_eq!(r.reloads, 0);
         assert_eq!(r.throughput_rps, 0.0);
         assert_eq!(r.p99_ms, 0.0);
         assert_eq!(r.queue_depth_max, 0.0);

@@ -19,19 +19,32 @@
 //! mini-batch. Each bucket's plan is constructed through the primitives'
 //! `tuned()` path, so the autotune cache is consulted per bucket shape.
 //!
+//! Weights come from He init or — the production path — from a trained
+//! [`ModelArtifact`](crate::modelio::ModelArtifact) (`serve --model-path`,
+//! [`InferenceModel::from_artifact`]), and a running server hot-swaps a
+//! new artifact atomically ([`Server::reload`]): in-flight batches finish
+//! on the generation they pinned at batch start, the swap count lands in
+//! the serve metrics.
+//!
 //! Modules:
 //!
 //! * [`model`]   — [`InferenceModel`]: the bucket-plan set over one shared
-//!   weight allocation per layer; forward-only MLP / CNN execution.
-//! * [`batcher`] — [`Server`]: request queue, dynamic batcher, worker
-//!   pool, drain-on-shutdown semantics.
+//!   weight allocation per layer; forward-only MLP / CNN execution with
+//!   per-worker scratch reuse ([`ServeScratch`] — no per-request
+//!   allocation on the steady-state path) and atomic weight-generation
+//!   swap for hot reload.
+//! * [`batcher`] — [`Server`]: request queue, dynamic batcher (greedy, or
+//!   delayed by the [`ServeOpts::wait_for_fill_us`] fill window), worker
+//!   pool, drain-on-shutdown semantics, hot reload entry point.
 //! * [`metrics`] — per-request latency (p50/p95/p99), throughput, queue
-//!   depth, and the batch-fill histogram, with JSON export.
+//!   depth, the batch-fill histogram, and the reload counter, with JSON
+//!   export.
 //! * [`loadgen`] — deterministic open-loop load generator (Poisson
 //!   arrivals from [`crate::util::rng`]).
 //!
 //! Entry points: the `serve` CLI subcommand / `{"serve": {...}}`
-//! run-config (see `examples/serve.json`) and the `serve_load` bench.
+//! run-config (see `examples/serve.json`; `serve --model-path <artifact>`
+//! serves trained weights) and the `serve_load` bench.
 
 pub mod batcher;
 pub mod loadgen;
@@ -39,6 +52,6 @@ pub mod metrics;
 pub mod model;
 
 pub use batcher::{Response, ServeOpts, Server};
-pub use loadgen::{run_open_loop, LoadSpec};
+pub use loadgen::{run_open_loop, run_open_loop_with, LoadSpec};
 pub use metrics::{ServeReport, ServeStats};
-pub use model::{InferenceModel, NetSpec};
+pub use model::{InferenceModel, NetSpec, ServeScratch};

@@ -9,15 +9,34 @@
 //! keyed per bucket shape. What the plans **share** is the packed
 //! weights: [`FcSharedWeights`] / [`ConvSharedWeights`] are allocated
 //! exactly once per layer and every plan executes against the same
-//! [`Arc`](std::sync::Arc)-backed buffers.
+//! [`Arc`]-backed buffers.
+//!
+//! The weight set itself is one immutable generation behind an
+//! `RwLock<Arc<_>>`: [`InferenceModel::reload`] atomically swaps in the
+//! parameters of a new [`ModelArtifact`] (re-packed against the canonical
+//! feature blocking), while every in-flight batch keeps the `Arc` it
+//! cloned at batch start and finishes on the weights it started with.
+//! Weights come from either He init ([`InferenceModel::new_mlp`] /
+//! [`InferenceModel::new_cnn`]) or a trained artifact
+//! ([`InferenceModel::from_artifact`]); both paths build layer configs
+//! through [`crate::coordinator::build`], the same module the training
+//! drivers use, so trained weights lift into serving plans byte-compatibly
+//! by construction.
 //!
 //! The feature blocking `(bc, bk)` is pinned across buckets (the packed
 //! layout depends on it), so per-element accumulation order is identical
 //! at every bucket size — a co-batched request's logits are bit-identical
 //! to running it solo at batch 1, which is what makes pad-to-bucket
 //! masking safe (and is asserted by the batcher tests).
+//!
+//! The steady-state path allocates nothing per request: workers run
+//! [`InferenceModel::forward_with`] against a per-worker [`ServeScratch`]
+//! whose buffers grow to their high-water mark and are then reused
+//! (asserted by the scratch test via [`ServeScratch::alloc_events`]).
 
+use crate::coordinator::build;
 use crate::coordinator::cnn::CnnSpec;
+use crate::modelio::{Arch, LayerKind, LayerParams, ModelArtifact};
 use crate::primitives::conv::{ConvConfig, ConvPrimitive, ConvSharedWeights};
 use crate::primitives::eltwise::Act;
 use crate::primitives::fc::{FcConfig, FcPrimitive, FcSharedWeights};
@@ -25,6 +44,9 @@ use crate::primitives::pool::AvgPool;
 use crate::tensor::layout;
 use crate::util::num::largest_divisor_le as pick;
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 /// Which network a serving model executes.
 #[derive(Debug, Clone)]
@@ -49,6 +71,21 @@ impl NetSpec {
             NetSpec::Cnn(spec) => spec.classes,
         }
     }
+
+    /// The artifact arch descriptor of this topology.
+    pub fn to_arch(&self) -> Arch {
+        match self {
+            NetSpec::Mlp { sizes } => Arch::Mlp { sizes: sizes.clone() },
+            NetSpec::Cnn(spec) => Arch::Cnn(spec.clone()),
+        }
+    }
+
+    pub fn from_arch(arch: &Arch) -> NetSpec {
+        match arch {
+            Arch::Mlp { sizes } => NetSpec::Mlp { sizes: sizes.clone() },
+            Arch::Cnn(spec) => NetSpec::Cnn(spec.clone()),
+        }
+    }
 }
 
 /// The batch buckets for a maximum batch: powers of two up to `max`, plus
@@ -67,7 +104,7 @@ pub fn bucket_sizes(max_batch: usize) -> Vec<usize> {
 }
 
 /// One bucket's executable pipeline (primitives only — weights live in
-/// the shared structs on [`InferenceModel`]).
+/// the model's current [`WeightSet`]).
 enum PlanKind {
     Mlp { fcs: Vec<FcPrimitive> },
     Cnn { convs: Vec<ConvPrimitive>, pool: AvgPool, head: FcPrimitive },
@@ -78,17 +115,115 @@ struct Plan {
     kind: PlanKind,
 }
 
+/// One immutable generation of packed weights. [`InferenceModel::reload`]
+/// replaces the whole set atomically; batches in flight keep the old
+/// generation alive through their cloned [`Arc`].
+struct WeightSet {
+    /// MLP layer weights, or (for CNN) the single FC head entry.
+    fc: Vec<FcSharedWeights>,
+    /// CNN conv-stack weights (empty for MLP).
+    conv: Vec<ConvSharedWeights>,
+}
+
+/// Per-worker reusable buffers for [`InferenceModel::forward_with`]. Each
+/// buffer grows to the high-water mark across the buckets the worker has
+/// executed and then stops allocating — the serving steady state performs
+/// zero per-request allocation on the activation path.
+#[derive(Default)]
+pub struct ServeScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    pool_y: Vec<f32>,
+    head_x: Vec<f32>,
+    head_y: Vec<f32>,
+    out: Vec<f32>,
+    grows: usize,
+}
+
+impl ServeScratch {
+    pub fn new() -> ServeScratch {
+        ServeScratch::default()
+    }
+
+    /// How many times any buffer had to (re)allocate. Stops increasing
+    /// once every bucket the worker serves has been seen — the assertion
+    /// handle for the no-per-request-allocation invariant.
+    pub fn alloc_events(&self) -> usize {
+        self.grows
+    }
+}
+
+/// Resize `buf` to exactly `len`, counting a grow event iff the resize
+/// had to allocate (capacity was insufficient).
+fn ensure(buf: &mut Vec<f32>, len: usize, grows: &mut usize) {
+    if buf.capacity() < len {
+        *grows += 1;
+        let cur = buf.len();
+        buf.reserve_exact(len - cur);
+    }
+    buf.resize(len, 0.0);
+}
+
+/// Pack canonical layer params against the canonical configs — the one
+/// routine behind fresh builds, artifact loads, and hot reloads. `params`
+/// order is the artifact layer order: conv stack first, then FC layers.
+fn pack_weight_set(
+    canon_fc: &[FcConfig],
+    canon_conv: &[ConvConfig],
+    params: &[LayerParams],
+) -> Result<WeightSet> {
+    if params.len() != canon_fc.len() + canon_conv.len() {
+        bail!(
+            "model has {} layers, artifact has {}",
+            canon_fc.len() + canon_conv.len(),
+            params.len()
+        );
+    }
+    let conv = canon_conv
+        .iter()
+        .zip(&params[..canon_conv.len()])
+        .enumerate()
+        .map(|(i, (cfg, p))| {
+            p.expect(
+                &format!("serving layer {}", i),
+                LayerKind::Conv,
+                &[cfg.k, cfg.c, cfg.r, cfg.s],
+            )?;
+            Ok(ConvSharedWeights::pack(cfg, &p.w, &p.b))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let fc = canon_fc
+        .iter()
+        .zip(&params[canon_conv.len()..])
+        .enumerate()
+        .map(|(i, (cfg, p))| {
+            p.expect(
+                &format!("serving layer {}", canon_conv.len() + i),
+                LayerKind::Fc,
+                &[cfg.k, cfg.c],
+            )?;
+            Ok(FcSharedWeights::pack(cfg, &p.w, &p.b))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(WeightSet { fc, conv })
+}
+
 /// A forward-only model: per-bucket plans over one shared weight copy per
-/// layer. `Send + Sync` (all state is plain config + `Arc` buffers), so
-/// the worker pool shares it behind one `Arc`.
+/// layer. `Send + Sync` (all state is plain config + `Arc`/lock-guarded
+/// buffers), so the worker pool shares it behind one `Arc`.
 pub struct InferenceModel {
     spec: NetSpec,
     buckets: Vec<usize>,
-    /// MLP layer weights, or (for CNN) the single FC head entry.
-    fc_weights: Vec<FcSharedWeights>,
-    /// CNN conv-stack weights (empty for MLP).
-    conv_weights: Vec<ConvSharedWeights>,
     plans: Vec<Plan>,
+    /// Canonical FC configs the packed layouts follow (all layers for
+    /// MLP; just the head for CNN) — what a reloaded artifact re-packs
+    /// against.
+    canon_fc: Vec<FcConfig>,
+    /// Canonical conv configs (empty for MLP).
+    canon_conv: Vec<ConvConfig>,
+    /// The current weight generation, swapped whole on reload.
+    weights: RwLock<Arc<WeightSet>>,
+    reloads: AtomicU64,
 }
 
 impl InferenceModel {
@@ -105,29 +240,114 @@ impl InferenceModel {
         tuned: bool,
         rng: &mut Rng,
     ) -> InferenceModel {
-        assert!(sizes.len() >= 2, "mlp needs at least input + output sizes");
-        let buckets = bucket_sizes(max_batch);
-        // Canonical feature blocking (chain invariant bc_i = bk_{i-1}
-        // holds by construction: both are pick(shared dim, 64)).
-        let canon: Vec<FcConfig> = sizes
-            .windows(2)
-            .enumerate()
-            .map(|(i, wd)| {
-                let act = if i + 2 == sizes.len() { Act::Identity } else { Act::Relu };
-                FcConfig::new(max_batch, wd[0], wd[1], act)
-                    .with_blocking(pick(max_batch, 24), pick(wd[0], 64), pick(wd[1], 64))
-            })
-            .collect();
-        // One packed weight allocation per layer, shared by every plan.
-        let fc_weights: Vec<FcSharedWeights> = canon
+        let canon = build::mlp_chain_configs(sizes, max_batch, nthreads, false);
+        let params: Vec<LayerParams> = canon
             .iter()
             .map(|cfg| {
                 let scale = (2.0 / cfg.c as f32).sqrt();
-                let w_plain = rng.vec_f32(cfg.k * cfg.c, -scale, scale);
-                let bias = rng.vec_f32(cfg.k, -0.1, 0.1);
-                FcSharedWeights::pack(cfg, &w_plain, &bias)
+                LayerParams::fc(
+                    cfg.k,
+                    cfg.c,
+                    rng.vec_f32(cfg.k * cfg.c, -scale, scale),
+                    rng.vec_f32(cfg.k, -0.1, 0.1),
+                )
             })
             .collect();
+        InferenceModel::build_mlp(sizes, max_batch, nthreads, tuned, &params)
+            .expect("freshly generated params always match their own configs")
+    }
+
+    /// Build a CNN serving model (conv stack + pool + FC head) with
+    /// He-initialised weights; same sharing/tuning contract as
+    /// [`Self::new_mlp`].
+    pub fn new_cnn(
+        spec: &CnnSpec,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> InferenceModel {
+        let canon = build::conv_chain_configs(spec, max_batch, nthreads, false);
+        let mut params: Vec<LayerParams> = canon
+            .iter()
+            .map(|cfg| {
+                let scale = (2.0 / (cfg.c * cfg.r * cfg.s) as f32).sqrt();
+                LayerParams::conv(
+                    cfg.k,
+                    cfg.c,
+                    cfg.r,
+                    cfg.s,
+                    rng.vec_f32(cfg.weights_len(), -scale, scale),
+                    rng.vec_f32(cfg.k, -0.1, 0.1),
+                )
+            })
+            .collect();
+        let last = *canon.last().unwrap();
+        let pcfg = spec.pool_config(max_batch, &last).with_block(last.bk);
+        let feat = last.k * pcfg.p() * pcfg.q();
+        let hscale = (2.0 / feat as f32).sqrt();
+        params.push(LayerParams::fc(
+            spec.classes,
+            feat,
+            rng.vec_f32(spec.classes * feat, -hscale, hscale),
+            rng.vec_f32(spec.classes, -0.1, 0.1),
+        ));
+        InferenceModel::build_cnn(spec, max_batch, nthreads, tuned, &params)
+            .expect("freshly generated params always match their own configs")
+    }
+
+    /// Build from a [`NetSpec`] (the run-config dispatch point).
+    pub fn from_spec(
+        spec: &NetSpec,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> InferenceModel {
+        match spec {
+            NetSpec::Mlp { sizes } => {
+                InferenceModel::new_mlp(sizes, max_batch, nthreads, tuned, rng)
+            }
+            NetSpec::Cnn(c) => InferenceModel::new_cnn(c, max_batch, nthreads, tuned, rng),
+        }
+    }
+
+    /// Build a serving model from a trained [`ModelArtifact`]: every
+    /// bucket plan executes against the artifact's weights, re-packed
+    /// once per layer into the canonical blocking (which need not match
+    /// whatever blocking the model trained under — the artifact stores
+    /// canonical unblocked parameters).
+    pub fn from_artifact(
+        art: &ModelArtifact,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+    ) -> Result<InferenceModel> {
+        art.validate()?;
+        match &art.arch {
+            Arch::Mlp { sizes } => {
+                InferenceModel::build_mlp(sizes, max_batch, nthreads, tuned, &art.layers)
+            }
+            Arch::Cnn(spec) => {
+                InferenceModel::build_cnn(spec, max_batch, nthreads, tuned, &art.layers)
+            }
+        }
+    }
+
+    fn build_mlp(
+        sizes: &[usize],
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        params: &[LayerParams],
+    ) -> Result<InferenceModel> {
+        assert!(sizes.len() >= 2, "mlp needs at least input + output sizes");
+        let buckets = bucket_sizes(max_batch);
+        // Canonical feature blocking from the shared construction module
+        // (chain invariant bc_i = bk_{i-1} holds by construction).
+        let canon = build::mlp_chain_configs(sizes, max_batch, nthreads, false);
+        // One packed weight allocation per layer, shared by every plan.
+        let ws = pack_weight_set(&canon, &[], params)?;
         let plans = buckets
             .iter()
             .map(|&b| {
@@ -145,7 +365,7 @@ impl InferenceModel {
                 }
                 let fcs = canon
                     .iter()
-                    .zip(&fc_weights)
+                    .zip(&ws.fc)
                     .map(|(base, w)| {
                         let mut cfg = FcConfig::new(b, base.c, base.k, base.act)
                             .with_blocking(shared_bn, base.bc, base.bk)
@@ -165,56 +385,35 @@ impl InferenceModel {
                 Plan { batch: b, kind: PlanKind::Mlp { fcs } }
             })
             .collect();
-        InferenceModel {
+        Ok(InferenceModel {
             spec: NetSpec::Mlp { sizes: sizes.to_vec() },
             buckets,
-            fc_weights,
-            conv_weights: Vec::new(),
             plans,
-        }
+            canon_fc: canon,
+            canon_conv: Vec::new(),
+            weights: RwLock::new(Arc::new(ws)),
+            reloads: AtomicU64::new(0),
+        })
     }
 
-    /// Build a CNN serving model (conv stack + pool + FC head) with
-    /// He-initialised weights; same sharing/tuning contract as
-    /// [`Self::new_mlp`].
-    pub fn new_cnn(
+    fn build_cnn(
         spec: &CnnSpec,
         max_batch: usize,
         nthreads: usize,
         tuned: bool,
-        rng: &mut Rng,
-    ) -> InferenceModel {
+        params: &[LayerParams],
+    ) -> Result<InferenceModel> {
         assert!(!spec.convs.is_empty(), "need at least one conv layer");
         let buckets = bucket_sizes(max_batch);
-        // Canonical conv configs with the chain invariant enforced
-        // (consumer bc = producer bk), exactly like the training driver.
-        let mut canon: Vec<ConvConfig> = spec.conv_configs(max_batch, nthreads);
-        for i in 1..canon.len() {
-            let prev_bk = canon[i - 1].bk;
-            if canon[i].bc != prev_bk {
-                canon[i] = canon[i].with_blocking(prev_bk, canon[i].bk, canon[i].bq);
-            }
-        }
-        let conv_weights: Vec<ConvSharedWeights> = canon
-            .iter()
-            .map(|cfg| {
-                let scale = (2.0 / (cfg.c * cfg.r * cfg.s) as f32).sqrt();
-                let w_plain = rng.vec_f32(cfg.weights_len(), -scale, scale);
-                let bias = rng.vec_f32(cfg.k, -0.1, 0.1);
-                ConvSharedWeights::pack(cfg, &w_plain, &bias)
-            })
-            .collect();
+        // Canonical conv configs with the chain invariant enforced, from
+        // the same construction module as the training driver.
+        let canon = build::conv_chain_configs(spec, max_batch, nthreads, false);
         let last = *canon.last().unwrap();
         let pcfg0 = spec.pool_config(max_batch, &last).with_block(last.bk);
         let feat = last.k * pcfg0.p() * pcfg0.q();
-        let head_canon = FcConfig::new(max_batch, feat, spec.classes, Act::Identity)
-            .with_blocking(pick(max_batch, 24), pick(feat, 64), pick(spec.classes, 64));
-        let head_weights = {
-            let scale = (2.0 / feat as f32).sqrt();
-            let w_plain = rng.vec_f32(spec.classes * feat, -scale, scale);
-            let bias = rng.vec_f32(spec.classes, -0.1, 0.1);
-            FcSharedWeights::pack(&head_canon, &w_plain, &bias)
-        };
+        let head_canon = build::head_fc_config(max_batch, feat, spec.classes, nthreads, false);
+        let canon_fc = vec![head_canon];
+        let ws = pack_weight_set(&canon_fc, &canon, params)?;
         let plans = buckets
             .iter()
             .map(|&b| {
@@ -222,7 +421,7 @@ impl InferenceModel {
                     .conv_configs(b, nthreads)
                     .into_iter()
                     .zip(&canon)
-                    .zip(&conv_weights)
+                    .zip(&ws.conv)
                     .map(|((cfg, base), w)| {
                         let mut cfg = cfg;
                         if tuned {
@@ -248,36 +447,47 @@ impl InferenceModel {
                     let t = crate::autotune::tuned_fc_config(hcfg);
                     hcfg = t.with_blocking(t.bn, head_canon.bc, head_canon.bk);
                 }
-                assert!(head_weights.matches(&hcfg));
+                assert!(ws.fc[0].matches(&hcfg));
                 Plan {
                     batch: b,
                     kind: PlanKind::Cnn { convs, pool, head: FcPrimitive::new(hcfg) },
                 }
             })
             .collect();
-        InferenceModel {
+        Ok(InferenceModel {
             spec: NetSpec::Cnn(spec.clone()),
             buckets,
-            fc_weights: vec![head_weights],
-            conv_weights,
             plans,
-        }
+            canon_fc,
+            canon_conv: canon,
+            weights: RwLock::new(Arc::new(ws)),
+            reloads: AtomicU64::new(0),
+        })
     }
 
-    /// Build from a [`NetSpec`] (the run-config dispatch point).
-    pub fn from_spec(
-        spec: &NetSpec,
-        max_batch: usize,
-        nthreads: usize,
-        tuned: bool,
-        rng: &mut Rng,
-    ) -> InferenceModel {
-        match spec {
-            NetSpec::Mlp { sizes } => {
-                InferenceModel::new_mlp(sizes, max_batch, nthreads, tuned, rng)
-            }
-            NetSpec::Cnn(c) => InferenceModel::new_cnn(c, max_batch, nthreads, tuned, rng),
+    /// Atomically swap in the weights of a new artifact (same arch
+    /// required). In-flight batches finish on the generation they cloned
+    /// at batch start; batches taken after this call run on the new
+    /// weights. Bumps [`Self::reload_count`].
+    pub fn reload(&self, art: &ModelArtifact) -> Result<()> {
+        let want = self.spec.to_arch();
+        if art.arch != want {
+            bail!(
+                "artifact arch ({}) does not match the serving model ({})",
+                art.arch.describe(),
+                want.describe()
+            );
         }
+        art.validate()?;
+        let ws = pack_weight_set(&self.canon_fc, &self.canon_conv, &art.layers)?;
+        *self.weights.write().unwrap() = Arc::new(ws);
+        self.reloads.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// How many weight reloads have been applied.
+    pub fn reload_count(&self) -> u64 {
+        self.reloads.load(Ordering::SeqCst)
     }
 
     pub fn spec(&self) -> &NetSpec {
@@ -306,15 +516,17 @@ impl InferenceModel {
         *self.buckets.iter().find(|&&b| b >= k).unwrap()
     }
 
-    /// Distinct packed-weight allocations backing this model — one per
-    /// layer, *regardless of the number of batch buckets* (the acceptance
-    /// invariant; plans hold no weight storage at all).
+    /// Distinct packed-weight allocations backing the current weight
+    /// generation — one per layer, *regardless of the number of batch
+    /// buckets* (the acceptance invariant; plans hold no weight storage
+    /// at all).
     pub fn weight_alloc_ids(&self) -> Vec<usize> {
-        let mut ids: Vec<usize> = self
-            .conv_weights
+        let ws = self.weights.read().unwrap().clone();
+        let mut ids: Vec<usize> = ws
+            .conv
             .iter()
             .map(|w| w.alloc_id())
-            .chain(self.fc_weights.iter().map(|w| w.alloc_id()))
+            .chain(ws.fc.iter().map(|w| w.alloc_id()))
             .collect();
         ids.sort_unstable();
         ids.dedup();
@@ -323,61 +535,130 @@ impl InferenceModel {
 
     /// Number of weight-bearing layers (conv stack + FC layers).
     pub fn layer_count(&self) -> usize {
-        self.conv_weights.len() + self.fc_weights.len()
+        self.canon_conv.len() + self.canon_fc.len()
     }
 
     /// Forward `bucket` samples (plain `[bucket][input_dim]`, padded rows
     /// included) through the bucket's plan; returns plain
-    /// `[bucket][classes]` logits. `&self` — safe to call concurrently
-    /// from many workers.
+    /// `[bucket][classes]` logits. Allocating convenience wrapper over
+    /// [`Self::forward_with`].
     pub fn forward(&self, bucket: usize, x: &[f32]) -> Vec<f32> {
+        let mut scratch = ServeScratch::new();
+        self.forward_with(bucket, x, &mut scratch).to_vec()
+    }
+
+    /// Forward through the bucket's plan using caller-owned scratch
+    /// buffers; returns the plain `[bucket][classes]` logits as a slice
+    /// into `scratch`. `&self` — safe to call concurrently from many
+    /// workers, each with its own scratch. The weight generation is
+    /// pinned once at entry, so a concurrent [`Self::reload`] never
+    /// affects a batch in flight.
+    pub fn forward_with<'s>(
+        &self,
+        bucket: usize,
+        x: &[f32],
+        scratch: &'s mut ServeScratch,
+    ) -> &'s [f32] {
         assert_eq!(x.len(), bucket * self.input_dim(), "input shape mismatch");
+        let ws: Arc<WeightSet> = self.weights.read().unwrap().clone();
         let plan = self
             .plans
             .iter()
             .find(|p| p.batch == bucket)
             .unwrap_or_else(|| panic!("no plan for bucket {}", bucket));
+        let classes = self.classes();
         match &plan.kind {
             PlanKind::Mlp { fcs } => {
                 let cfg0 = fcs[0].cfg;
-                let mut cur = layout::pack_act_2d(x, bucket, cfg0.c, cfg0.bn, cfg0.bc);
-                for (fc, w) in fcs.iter().zip(&self.fc_weights) {
-                    let mut y = vec![0.0f32; bucket * fc.cfg.k];
-                    fc.forward_shared(&cur, w, &mut y);
-                    cur = y;
+                ensure(&mut scratch.a, bucket * cfg0.c, &mut scratch.grows);
+                layout::pack_act_2d_into(x, bucket, cfg0.c, cfg0.bn, cfg0.bc, &mut scratch.a);
+                // Ping-pong between the two activation buffers.
+                let mut cur_in_a = true;
+                for (fc, w) in fcs.iter().zip(&ws.fc) {
+                    let ylen = bucket * fc.cfg.k;
+                    if cur_in_a {
+                        ensure(&mut scratch.b, ylen, &mut scratch.grows);
+                        fc.forward_shared(&scratch.a, w, &mut scratch.b);
+                    } else {
+                        ensure(&mut scratch.a, ylen, &mut scratch.grows);
+                        fc.forward_shared(&scratch.b, w, &mut scratch.a);
+                    }
+                    cur_in_a = !cur_in_a;
                 }
                 let lcfg = fcs.last().unwrap().cfg;
-                layout::unpack_act_2d(&cur, bucket, lcfg.k, lcfg.bn, lcfg.bk)
+                ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
+                let src = if cur_in_a { &scratch.a } else { &scratch.b };
+                layout::unpack_act_2d_into(
+                    src,
+                    bucket,
+                    lcfg.k,
+                    lcfg.bn,
+                    lcfg.bk,
+                    &mut scratch.out,
+                );
             }
             PlanKind::Cnn { convs, pool, head } => {
                 let cfg0 = convs[0].cfg;
-                let mut cur = layout::pack_conv_act(
-                    x, bucket, cfg0.c, cfg0.h, cfg0.w, cfg0.bc, cfg0.pad, cfg0.pad,
+                ensure(&mut scratch.a, cfg0.input_len(), &mut scratch.grows);
+                layout::pack_conv_act_into(
+                    x,
+                    bucket,
+                    cfg0.c,
+                    cfg0.h,
+                    cfg0.w,
+                    cfg0.bc,
+                    cfg0.pad,
+                    cfg0.pad,
+                    &mut scratch.a,
                 );
-                for (i, (prim, w)) in convs.iter().zip(&self.conv_weights).enumerate() {
-                    let mut y = vec![0.0f32; prim.cfg.output_len()];
-                    prim.forward_shared(&cur, w, &mut y);
-                    cur = match convs.get(i + 1) {
+                for (i, (prim, w)) in convs.iter().zip(&ws.conv).enumerate() {
+                    ensure(&mut scratch.b, prim.cfg.output_len(), &mut scratch.grows);
+                    prim.forward_shared(&scratch.a, w, &mut scratch.b);
+                    if let Some(next) = convs.get(i + 1) {
                         // Chain invariant: the output is the consumer's
                         // unpadded input; only the border re-pad remains.
-                        Some(next) => {
-                            let nc = next.cfg;
-                            layout::repad_blocked(
-                                &y, bucket, nc.cb_ct(), nc.h, nc.w, nc.bc, nc.pad, nc.pad,
-                            )
-                        }
-                        None => y,
-                    };
+                        let nc = next.cfg;
+                        ensure(&mut scratch.a, nc.input_len(), &mut scratch.grows);
+                        layout::repad_blocked_into(
+                            &scratch.b,
+                            bucket,
+                            nc.cb_ct(),
+                            nc.h,
+                            nc.w,
+                            nc.bc,
+                            nc.pad,
+                            nc.pad,
+                            &mut scratch.a,
+                        );
+                    }
                 }
-                let mut pool_y = vec![0.0f32; pool.cfg.output_len()];
-                pool.forward(&cur, &mut pool_y);
+                // The last conv's output is in `b`.
+                ensure(&mut scratch.pool_y, pool.cfg.output_len(), &mut scratch.grows);
+                pool.forward(&scratch.b, &mut scratch.pool_y);
                 let hcfg = head.cfg;
-                let head_x = layout::pack_act_2d(&pool_y, bucket, hcfg.c, hcfg.bn, hcfg.bc);
-                let mut head_y = vec![0.0f32; bucket * hcfg.k];
-                head.forward_shared(&head_x, &self.fc_weights[0], &mut head_y);
-                layout::unpack_act_2d(&head_y, bucket, hcfg.k, hcfg.bn, hcfg.bk)
+                ensure(&mut scratch.head_x, bucket * hcfg.c, &mut scratch.grows);
+                layout::pack_act_2d_into(
+                    &scratch.pool_y,
+                    bucket,
+                    hcfg.c,
+                    hcfg.bn,
+                    hcfg.bc,
+                    &mut scratch.head_x,
+                );
+                ensure(&mut scratch.head_y, bucket * hcfg.k, &mut scratch.grows);
+                head.forward_shared(&scratch.head_x, &ws.fc[0], &mut scratch.head_y);
+                ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
+                layout::unpack_act_2d_into(
+                    &scratch.head_y,
+                    bucket,
+                    hcfg.k,
+                    hcfg.bn,
+                    hcfg.bk,
+                    &mut scratch.out,
+                );
             }
         }
+        &scratch.out
     }
 }
 
@@ -385,6 +666,8 @@ impl InferenceModel {
 mod tests {
     use super::*;
     use crate::coordinator::cnn::ConvSpec;
+    use crate::coordinator::trainer::{MlpModel, Model};
+    use crate::modelio::TrainMeta;
 
     fn tiny_cnn() -> CnnSpec {
         CnnSpec {
@@ -520,5 +803,152 @@ mod tests {
         for i in 0..y4p.len() {
             assert!((y4p[i] - y4t[i]).abs() < 1e-4, "b4 [{}]: {} vs {}", i, y4p[i], y4t[i]);
         }
+    }
+
+    #[test]
+    fn scratch_stops_allocating_once_buckets_are_warm() {
+        // The no-per-request-allocation invariant: after one pass over
+        // every bucket a worker serves, the scratch high-water marks are
+        // set and further forwards perform zero allocations.
+        let mut rng = Rng::new(61);
+        for model in [
+            InferenceModel::new_mlp(&[10, 24, 4], 8, 1, false, &mut rng),
+            InferenceModel::new_cnn(&tiny_cnn(), 8, 1, false, &mut rng),
+        ] {
+            let dim = model.input_dim();
+            let mut scratch = ServeScratch::new();
+            let buckets: Vec<usize> = model.buckets().to_vec();
+            // Warm-up: largest bucket first would be enough, but visit all.
+            for &b in &buckets {
+                let x = rng.vec_f32(b * dim, -1.0, 1.0);
+                model.forward_with(b, &x, &mut scratch);
+            }
+            let warm = scratch.alloc_events();
+            assert!(warm > 0, "warm-up must have sized the buffers");
+            for round in 0..20 {
+                for &b in &buckets {
+                    let x = rng.vec_f32(b * dim, -1.0, 1.0);
+                    model.forward_with(b, &x, &mut scratch);
+                }
+                assert_eq!(
+                    scratch.alloc_events(),
+                    warm,
+                    "steady-state round {} must not allocate",
+                    round
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_with_matches_forward() {
+        let model = InferenceModel::new_cnn(&tiny_cnn(), 4, 1, false, &mut Rng::new(13));
+        let mut scratch = ServeScratch::new();
+        let mut rng = Rng::new(14);
+        for &b in model.buckets() {
+            let x = rng.vec_f32(b * model.input_dim(), -1.0, 1.0);
+            let fresh = model.forward(b, &x);
+            let reused = model.forward_with(b, &x, &mut scratch).to_vec();
+            assert_eq!(fresh, reused, "bucket {}: scratch reuse must not change the math", b);
+        }
+    }
+
+    #[test]
+    fn from_artifact_serves_trained_weights_bit_identically() {
+        // Train an MLP, export it through the artifact pipeline, serve it:
+        // every bucket's forward must be bit-identical to the trained
+        // model's forward on the same rows (FC accumulation order is
+        // invariant under batch re-blocking).
+        let sizes = [12usize, 32, 4];
+        let mut rng = Rng::new(71);
+        let data =
+            crate::coordinator::data::ClassifyData::synth(128, 12, 4, 0.2, &mut rng);
+        let mut trained = MlpModel::new(&sizes, 8, 1, &mut rng);
+        for step in 0..20 {
+            let (x, l) = data.batch(step, 8);
+            trained.train_step(&x, &l, 0.1);
+        }
+        let art = ModelArtifact::new(
+            Arch::Mlp { sizes: sizes.to_vec() },
+            TrainMeta::fresh(71),
+            trained.export_weights(),
+        );
+        // Round-trip through the *binary format* too, not just the structs.
+        let art = ModelArtifact::decode(&art.encode()).unwrap();
+        let served = InferenceModel::from_artifact(&art, 8, 1, false).unwrap();
+        assert_eq!(served.weight_alloc_ids().len(), 2, "one allocation per layer");
+        let x8 = Rng::new(72).vec_f32(8 * 12, -1.0, 1.0);
+        let want = trained.forward(&x8);
+        let got = served.forward(8, &x8);
+        assert_eq!(want, got, "served logits must be bit-identical to the trained model");
+        // And per-row at bucket 1.
+        for i in 0..3 {
+            let solo = served.forward(1, &x8[i * 12..(i + 1) * 12]);
+            assert_eq!(&want[i * 4..(i + 1) * 4], &solo[..], "row {}", i);
+        }
+        // Arch mismatch is a clear error.
+        let bad = ModelArtifact::new(
+            Arch::Mlp { sizes: vec![12, 32, 5] },
+            TrainMeta::fresh(0),
+            MlpModel::new(&[12, 32, 5], 4, 1, &mut Rng::new(1)).export_weights(),
+        );
+        assert!(served.reload(&bad).is_err(), "reload must reject a different arch");
+    }
+
+    #[test]
+    fn from_artifact_serves_trained_cnn_bit_identically() {
+        let spec = tiny_cnn();
+        let mut rng = Rng::new(81);
+        let data = crate::coordinator::data::ClassifyData::synth(
+            64,
+            spec.input_dim(),
+            spec.classes,
+            0.2,
+            &mut rng,
+        );
+        let mut trained = crate::coordinator::cnn::CnnModel::new(&spec, 4, 1, &mut rng);
+        for step in 0..5 {
+            let (x, l) = data.batch(step, 4);
+            trained.train_step(&x, &l, 0.05);
+        }
+        let art = ModelArtifact::new(
+            Arch::Cnn(spec.clone()),
+            TrainMeta::fresh(81),
+            trained.export_weights(),
+        );
+        let art = ModelArtifact::decode(&art.encode()).unwrap();
+        let served = InferenceModel::from_artifact(&art, 4, 1, false).unwrap();
+        let x = Rng::new(82).vec_f32(4 * spec.input_dim(), -1.0, 1.0);
+        let want = trained.forward(&x);
+        let got = served.forward(4, &x);
+        assert_eq!(want, got, "served CNN logits must be bit-identical to the trained model");
+    }
+
+    #[test]
+    fn reload_swaps_weights_atomically_and_counts() {
+        let sizes = [6usize, 10, 3];
+        let model = InferenceModel::new_mlp(&sizes, 4, 1, false, &mut Rng::new(91));
+        assert_eq!(model.reload_count(), 0);
+        let before_ids = model.weight_alloc_ids();
+        let x = Rng::new(92).vec_f32(6, -1.0, 1.0);
+        let y_old = model.forward(1, &x);
+        // A different trained model, lifted to an artifact.
+        let mut other = MlpModel::new(&sizes, 4, 1, &mut Rng::new(93));
+        let art = ModelArtifact::new(
+            Arch::Mlp { sizes: sizes.to_vec() },
+            TrainMeta::fresh(93),
+            other.export_weights(),
+        );
+        model.reload(&art).unwrap();
+        assert_eq!(model.reload_count(), 1);
+        assert_ne!(model.weight_alloc_ids(), before_ids, "new generation, new allocations");
+        let y_new = model.forward(1, &x);
+        assert_ne!(y_old, y_new, "different weights, different logits");
+        // `other` has batch 4; compare row 0 of a zero-padded batch (rows
+        // are independent in an MLP forward).
+        let mut x4 = x.clone();
+        x4.extend(vec![0.0; 3 * 6]);
+        let want4 = other.forward(&x4);
+        assert_eq!(&want4[..3], &y_new[..], "post-reload logits come from the new artifact");
     }
 }

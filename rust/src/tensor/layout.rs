@@ -78,11 +78,26 @@ pub fn transpose_packed_2d(
 
 /// X[N][C] → X[Nb][Cb][bn][bc] (FC activation blocking, Algorithm 5).
 pub fn pack_act_2d(x: &[f32], n_dim: usize, c_dim: usize, bn: usize, bc: usize) -> Vec<f32> {
+    let mut out = vec![0.0; x.len()];
+    pack_act_2d_into(x, n_dim, c_dim, bn, bc, &mut out);
+    out
+}
+
+/// [`pack_act_2d`] into a caller-owned buffer (`out.len() == x.len()`) —
+/// the allocation-free variant the serving scratch path uses.
+pub fn pack_act_2d_into(
+    x: &[f32],
+    n_dim: usize,
+    c_dim: usize,
+    bn: usize,
+    bc: usize,
+    out: &mut [f32],
+) {
     assert_eq!(n_dim % bn, 0, "bn must divide N");
     assert_eq!(c_dim % bc, 0, "bc must divide C");
     assert_eq!(x.len(), n_dim * c_dim);
+    assert_eq!(out.len(), x.len());
     let (nb, cb) = (n_dim / bn, c_dim / bc);
-    let mut out = vec![0.0; x.len()];
     for inb in 0..nb {
         for icb in 0..cb {
             let blk = ((inb * cb) + icb) * bn * bc;
@@ -93,14 +108,27 @@ pub fn pack_act_2d(x: &[f32], n_dim: usize, c_dim: usize, bn: usize, bc: usize) 
             }
         }
     }
-    out
 }
 
 /// Inverse of [`pack_act_2d`].
 pub fn unpack_act_2d(xb: &[f32], n_dim: usize, c_dim: usize, bn: usize, bc: usize) -> Vec<f32> {
+    let mut out = vec![0.0; xb.len()];
+    unpack_act_2d_into(xb, n_dim, c_dim, bn, bc, &mut out);
+    out
+}
+
+/// [`unpack_act_2d`] into a caller-owned buffer (allocation-free variant).
+pub fn unpack_act_2d_into(
+    xb: &[f32],
+    n_dim: usize,
+    c_dim: usize,
+    bn: usize,
+    bc: usize,
+    out: &mut [f32],
+) {
     let (nb, cb) = (n_dim / bn, c_dim / bc);
     assert_eq!(xb.len(), n_dim * c_dim);
-    let mut out = vec![0.0; xb.len()];
+    assert_eq!(out.len(), xb.len());
     for inb in 0..nb {
         for icb in 0..cb {
             let blk = ((inb * cb) + icb) * bn * bc;
@@ -111,7 +139,6 @@ pub fn unpack_act_2d(xb: &[f32], n_dim: usize, c_dim: usize, bn: usize, bc: usiz
             }
         }
     }
-    out
 }
 
 /// Conv weights W[K][C][R][S] → W[Kb][Cb][R][S][bc][bk] (paper §3.2.1).
@@ -234,11 +261,35 @@ pub fn pack_conv_act(
     ph: usize,
     pw: usize,
 ) -> Vec<f32> {
+    let cb = c_dim / bc;
+    let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
+    let mut out = vec![0.0; n_dim * cb * hp * wp * bc];
+    pack_conv_act_into(x, n_dim, c_dim, h_dim, w_dim, bc, ph, pw, &mut out);
+    out
+}
+
+/// [`pack_conv_act`] into a caller-owned buffer (allocation-free variant;
+/// `out` must have the padded blocked length and is fully overwritten,
+/// zero borders included).
+#[allow(clippy::too_many_arguments)]
+pub fn pack_conv_act_into(
+    x: &[f32],
+    n_dim: usize,
+    c_dim: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+    ph: usize,
+    pw: usize,
+    out: &mut [f32],
+) {
     assert_eq!(c_dim % bc, 0);
     assert_eq!(x.len(), n_dim * c_dim * h_dim * w_dim);
     let cb = c_dim / bc;
     let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
-    let mut out = vec![0.0; n_dim * cb * hp * wp * bc];
+    assert_eq!(out.len(), n_dim * cb * hp * wp * bc);
+    // A reused buffer may hold stale borders; the pad region must be zero.
+    out.fill(0.0);
     for n in 0..n_dim {
         for icb in 0..cb {
             for h in 0..h_dim {
@@ -251,7 +302,6 @@ pub fn pack_conv_act(
             }
         }
     }
-    out
 }
 
 /// Blocked (optionally padded) activations → plain NCHW.
@@ -300,9 +350,31 @@ pub fn repad_blocked(
     ph: usize,
     pw: usize,
 ) -> Vec<f32> {
-    assert_eq!(src.len(), n_dim * cb * h_dim * w_dim * bc);
     let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
     let mut out = vec![0.0f32; n_dim * cb * hp * wp * bc];
+    repad_blocked_into(src, n_dim, cb, h_dim, w_dim, bc, ph, pw, &mut out);
+    out
+}
+
+/// [`repad_blocked`] into a caller-owned buffer (allocation-free variant;
+/// `out` must have the padded length and is fully overwritten, zero
+/// borders included).
+#[allow(clippy::too_many_arguments)]
+pub fn repad_blocked_into(
+    src: &[f32],
+    n_dim: usize,
+    cb: usize,
+    h_dim: usize,
+    w_dim: usize,
+    bc: usize,
+    ph: usize,
+    pw: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(src.len(), n_dim * cb * h_dim * w_dim * bc);
+    let (hp, wp) = (h_dim + 2 * ph, w_dim + 2 * pw);
+    assert_eq!(out.len(), n_dim * cb * hp * wp * bc);
+    out.fill(0.0);
     let row = w_dim * bc;
     for n in 0..n_dim {
         for icb in 0..cb {
@@ -313,7 +385,6 @@ pub fn repad_blocked(
             }
         }
     }
-    out
 }
 
 /// Inverse of [`repad_blocked`]: strip a spatial border off a blocked
@@ -469,6 +540,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // The `_into` reformat variants are the serving scratch path:
+        // a reused buffer full of stale garbage must come out exactly as
+        // the allocating variant produces it — zero borders included.
+        let mut rng = Rng::new(31);
+        let (n, c, bn, bc) = (4, 10, 2, 5);
+        let x = rng.vec_f32(n * c, -1.0, 1.0);
+        let want = pack_act_2d(&x, n, c, bn, bc);
+        let mut dirty = vec![f32::NAN; n * c];
+        pack_act_2d_into(&x, n, c, bn, bc, &mut dirty);
+        assert_eq!(dirty, want);
+        let mut back = vec![f32::NAN; n * c];
+        unpack_act_2d_into(&want, n, c, bn, bc, &mut back);
+        assert_eq!(back, x);
+
+        let (h, w, ph, pw) = (3, 4, 1, 2);
+        let img = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let want = pack_conv_act(&img, n, c, h, w, bc, ph, pw);
+        let mut dirty = vec![f32::NAN; want.len()];
+        pack_conv_act_into(&img, n, c, h, w, bc, ph, pw, &mut dirty);
+        assert_eq!(dirty, want, "stale border values must be zeroed");
+
+        let cb = c / bc;
+        let blocked = rng.vec_f32(n * cb * h * w * bc, -1.0, 1.0);
+        let want = repad_blocked(&blocked, n, cb, h, w, bc, ph, pw);
+        let mut dirty = vec![f32::NAN; want.len()];
+        repad_blocked_into(&blocked, n, cb, h, w, bc, ph, pw, &mut dirty);
+        assert_eq!(dirty, want, "stale border values must be zeroed");
     }
 
     #[test]

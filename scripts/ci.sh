@@ -23,6 +23,20 @@ echo "== serve smoke (tiny model, 300 requests) =="
 ./target/release/brgemm-dl serve --model mlp --requests 300 --rate 50000 \
     --max-batch 8 --serve-workers 2 --seed 7
 
+echo "== train -> checkpoint -> serve smoke =="
+# The model-artifact pipeline end to end: train 2 epochs with per-epoch
+# checkpointing, resume the artifact for a 3rd epoch, then serve the
+# trained weights and replay the training distribution through the
+# batcher — the run fails unless served responses classify it well above
+# chance (10 classes), i.e. unless learned (not random) weights flowed
+# train -> artifact -> serve.
+rm -rf checkpoints
+./target/release/brgemm-dl run --config examples/checkpoint.json
+./target/release/brgemm-dl run --config examples/checkpoint.json \
+    --epochs 3 --resume checkpoints/mlp.bin
+./target/release/brgemm-dl serve --model-path checkpoints/mlp.bin \
+    --min-accuracy 0.5 --requests 300 --rate 50000 --serve-workers 2
+
 echo "== cargo fmt --check =="
 if cargo fmt --check; then
     echo "formatting clean"
