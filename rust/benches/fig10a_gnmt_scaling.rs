@@ -16,6 +16,7 @@
 mod common;
 
 use brgemm_dl::coordinator::dist::NetworkModel;
+use brgemm_dl::coordinator::rnn::{RnnModel, RnnSpec};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -101,6 +102,50 @@ fn main() {
         }
         println!();
     }
+    // Trained `{"model": "rnn"}` row: the full sequence driver — BPTT
+    // through the cell, FC softmax head, SGD update — measured per local
+    // batch, so the scaling table also reflects the end-to-end training
+    // step the coordinator actually runs (not just the raw cell's
+    // fwd+bwd). Same strong-scaling mechanism: the per-word cost rises
+    // as the local batch shrinks.
+    let (g0, paper_g0) = globals[0];
+    let spec = RnnSpec { c, k, t, classes: 16 };
+    println!(
+        "trained {{\"model\": \"rnn\"}} driver (cell+head+SGD), global batch {} (={}⁄28):",
+        g0, paper_g0
+    );
+    println!("{:<6} {:>12} {:>12} {:>10} {:>8}", "nodes", "µs/word", "compute ms", "KWPS", "eff%");
+    let mut base: Option<f64> = None;
+    for &p in &nodes {
+        let local = (g0 / p).max(1);
+        let mut rng = Rng::new(7);
+        let mut model = RnnModel::new(&spec, local, 1, &mut rng);
+        let x = rng.vec_f32(local * spec.input_dim(), -1.0, 1.0);
+        let labels: Vec<i32> = (0..local).map(|i| (i % spec.classes) as i32).collect();
+        model.train_step(&x, &labels, 0.01); // warmup
+        let reps = 2;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            model.train_step(&x, &labels, 0.01);
+        }
+        let per_word =
+            t0.elapsed().as_secs_f64() / (reps * local * t) as f64 * layers as f64;
+        let compute = per_word * local as f64 * t as f64;
+        let comm = net.ring_allreduce_secs(grad_bytes, p);
+        let kwps = (g0 * t) as f64 / (compute + comm) / 1e3;
+        let per_node = kwps / p as f64;
+        let eff = 100.0 * per_node / *base.get_or_insert(per_node);
+        println!(
+            "{:<6} {:>12.1} {:>12.1} {:>10.2} {:>8.1}",
+            p,
+            per_word * 1e6,
+            compute * 1e3,
+            kwps,
+            eff
+        );
+    }
+    println!();
+
     common::paper_note(
         "Fig10a",
         "N=1344: 38% eff @16 (35.8 KWPS); N=5376: 75.2% (65.9 KWPS)",

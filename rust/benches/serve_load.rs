@@ -1,8 +1,9 @@
 //! serve_load: sustained open-loop inference serving through the dynamic
 //! batcher — the serving analogue of the paper-figure benches.
 //!
-//! An MLP and a small CNN each serve a deterministic Poisson workload
-//! end to end (queue → batch buckets → worker pool → masked responses);
+//! An MLP, a small CNN, and an LSTM sequence classifier each serve a
+//! deterministic Poisson workload end to end (queue → batch buckets →
+//! worker pool → masked responses);
 //! the bench reports throughput, p50/p95/p99 latency and the batch-fill
 //! histogram, and writes the same rows as JSON to
 //! `bench_results/serve_load.json` (EXPERIMENTS.md tooling shape).
@@ -10,6 +11,7 @@
 //! `--quick` / `BENCH_QUICK=1` shrinks the request counts for CI-ish runs.
 
 use brgemm_dl::coordinator::cnn::CnnSpec;
+use brgemm_dl::coordinator::rnn::RnnSpec;
 use brgemm_dl::serve::{run_open_loop, InferenceModel, LoadSpec, NetSpec, ServeOpts};
 use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
@@ -25,6 +27,7 @@ fn main() {
     let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
         || std::env::args().any(|a| a == "--quick");
     let (mlp_requests, cnn_requests) = if quick { (400, 120) } else { (4000, 800) };
+    let rnn_requests = if quick { 200 } else { 1500 };
     let cases = [
         Case {
             name: "mlp 64-128-10",
@@ -46,6 +49,15 @@ fn main() {
             spec: NetSpec::Mlp { sizes: vec![64, 128, 10] },
             load: LoadSpec { requests: mlp_requests, rate_rps: 20_000.0, seed: 42 },
             opts: ServeOpts { max_batch: 16, workers: 2, wait_for_fill_us: 500 },
+        },
+        // Sequence requests: each request is one flattened [T][C]
+        // sequence through the per-bucket forward-only LSTM plans (one
+        // Arc-shared packed weight copy behind every bucket).
+        Case {
+            name: "rnn c16 k32 t8",
+            spec: NetSpec::Rnn(RnnSpec { c: 16, k: 32, t: 8, classes: 4 }),
+            load: LoadSpec { requests: rnn_requests, rate_rps: 5_000.0, seed: 44 },
+            opts: ServeOpts { max_batch: 8, workers: 2, ..ServeOpts::default() },
         },
     ];
 

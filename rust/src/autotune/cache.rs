@@ -61,12 +61,18 @@ pub fn fc_key(cfg: &FcConfig) -> TuneKey {
     }
 }
 
-/// Key for an LSTM cell shape. Blockings do not depend on the sequence
-/// length, so `t` is excluded and entries generalise across it.
+/// Key for an LSTM cell shape. The sequence length **is** part of the
+/// key: tuning measures a full `t`-step recurrence (per-step thread
+/// synchronisation, state-tensor footprint and the h/s reuse window all
+/// scale with `t`), so a blocking ranked at one sequence length must
+/// never be applied to a workload that differs only in `t`. (Cache files
+/// written before this fix carry `t`-less keys; the schema-version bump
+/// to v3 drops them wholesale on load rather than leaving permanently
+/// unreachable entries behind.)
 pub fn lstm_key(cfg: &LstmConfig) -> TuneKey {
     TuneKey {
         primitive: "lstm".to_string(),
-        shape: format!("n{} c{} k{}", cfg.n, cfg.c, cfg.k),
+        shape: format!("n{} c{} k{} t{}", cfg.n, cfg.c, cfg.k, cfg.t),
         isa: Isa::detect().name().to_string(),
         nthreads: cfg.nthreads,
     }
@@ -119,12 +125,15 @@ impl TuneEntry {
 }
 
 /// Schema version of the cache file. Bump whenever the candidate encoding
-/// or the tuning-space semantics change shape: entries written by an older
+/// or the **key semantics** change shape: entries written by an older
 /// binary are **ignored on load** (and rewritten at the current version on
 /// the next `save`), so stale cached blockings can never be applied to a
-/// reshaped tuning space. History: v1 = PR-1 encoding, unchecked on load;
-/// v2 = same encoding, version-checked (conv training-driver era).
-const FORMAT_VERSION: usize = 2;
+/// reshaped tuning space — and key-scheme changes cannot leave permanently
+/// unreachable dead entries in the file. History: v1 = PR-1 encoding,
+/// unchecked on load; v2 = same encoding, version-checked (conv
+/// training-driver era); v3 = LSTM keys gained the sequence length
+/// (`t{}`), orphaning every v2 `lstm|…` entry.
+const FORMAT_VERSION: usize = 3;
 
 /// The cache: a keyed map of winners plus the file it persists to.
 #[derive(Debug)]
@@ -334,10 +343,20 @@ mod tests {
     }
 
     #[test]
-    fn lstm_key_ignores_sequence_length() {
+    fn lstm_key_includes_sequence_length() {
+        // Regression: two workloads differing only in T must not share a
+        // cached blocking (T scales the per-step sync and state footprint
+        // the measurement was taken under).
         let a = lstm_key(&LstmConfig::new(16, 64, 64, 4));
         let b = lstm_key(&LstmConfig::new(16, 64, 64, 32));
-        assert_eq!(a.id(), b.id());
+        assert_ne!(a.id(), b.id(), "sequence length must participate in the key");
+        // Same shape including T still hits.
+        let c = lstm_key(&LstmConfig::new(16, 64, 64, 4));
+        assert_eq!(a.id(), c.id());
+        let mut cache = TuningCache::empty();
+        cache.put(&a, sample_entry());
+        assert!(cache.get(&a).is_some());
+        assert!(cache.get(&b).is_none(), "a T=4 winner must miss at T=32");
     }
 
     #[test]
@@ -368,7 +387,7 @@ mod tests {
         )
         .unwrap();
         let mut cache = TuningCache::at(&path);
-        assert!(cache.is_empty(), "v1 entries must not survive into a v2 binary");
+        assert!(cache.is_empty(), "stale-version entries must not survive into this binary");
         // Same for a file with no version field at all.
         std::fs::write(
             &path,

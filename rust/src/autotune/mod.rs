@@ -130,6 +130,33 @@ mod tests {
         assert!(prim.cfg.fwd_strided);
     }
 
+    #[test]
+    fn lstm_cache_entry_is_keyed_by_sequence_length() {
+        use crate::primitives::lstm::LstmPrimitive;
+        // Unique (n, c, k) so no other test's entries collide. Cache a
+        // winner for T=5: it must apply at T=5 and be invisible at T=9 —
+        // the satellite regression for the T-less key bug.
+        let cfg5 = LstmConfig::new(6, 18, 12, 5);
+        let cfg9 = LstmConfig::new(6, 18, 12, 9);
+        let cand = Candidate { bn: 3, bc: 9, bk: 6, ..cache_neutral() };
+        TuningCache::global()
+            .lock()
+            .unwrap()
+            .put(&cache::lstm_key(&cfg5), TuneEntry { cand, gflops: 1.0, model_gflops: 1.0 });
+        TuningCache::global().lock().unwrap().remove(&cache::lstm_key(&cfg9));
+        let hit = tuned_lstm_config(cfg5);
+        assert_eq!((hit.bn, hit.bc, hit.bk), (3, 9, 6), "same T applies the winner");
+        let miss = tuned_lstm_config(cfg9);
+        assert_eq!(
+            (miss.bn, miss.bc, miss.bk),
+            (cfg9.bn, cfg9.bc, cfg9.bk),
+            "a different T must be a cache miss, not a cross-T hit"
+        );
+        // And the tuned constructor builds fine either way.
+        let prim = LstmPrimitive::tuned(cfg5);
+        assert_eq!((prim.cfg.bn, prim.cfg.bc, prim.cfg.bk), (3, 9, 6));
+    }
+
     fn cache_neutral() -> Candidate {
         Candidate {
             bn: 1,

@@ -12,9 +12,11 @@
 //! here, once.
 
 use crate::coordinator::cnn::CnnSpec;
+use crate::coordinator::rnn::RnnSpec;
 use crate::primitives::conv::ConvConfig;
 use crate::primitives::eltwise::Act;
 use crate::primitives::fc::FcConfig;
+use crate::primitives::lstm::LstmConfig;
 use crate::util::num::largest_divisor_le as pick;
 
 /// The FC layer configs of an MLP chain (`sizes = [d_in, h1, ...,
@@ -87,9 +89,10 @@ pub fn conv_chain_configs(
     cfgs
 }
 
-/// The CNN softmax head's FC config over `feat` pooled features — the one
-/// blocking formula both the training driver and the serving models use,
-/// so a trained head lifts into any serving plan.
+/// The softmax head's FC config over `feat` input features — the one
+/// blocking formula both the training drivers (CNN over pooled features,
+/// RNN over the final hidden state) and the serving models use, so a
+/// trained head lifts into any serving plan.
 pub fn head_fc_config(
     batch: usize,
     feat: usize,
@@ -102,6 +105,21 @@ pub fn head_fc_config(
         .with_threads(nthreads);
     if tuned {
         crate::autotune::tuned_fc_config(cfg)
+    } else {
+        cfg
+    }
+}
+
+/// The LSTM cell config of the sequence driver. The feature blocking
+/// `(bc, bk)` depends only on `(c, k)` — never on the batch or sequence
+/// length — which is what lets one packed weight copy back every serving
+/// batch bucket and lets trained cell weights lift into any plan. With
+/// `tuned`, the autotune cache is consulted (its shape key includes the
+/// sequence length, so entries never cross `t`).
+pub fn rnn_cell_config(spec: &RnnSpec, batch: usize, nthreads: usize, tuned: bool) -> LstmConfig {
+    let cfg = LstmConfig::new(batch, spec.c, spec.k, spec.t).with_threads(nthreads);
+    if tuned {
+        crate::autotune::tuned_lstm_config(cfg)
     } else {
         cfg
     }
@@ -143,6 +161,17 @@ mod tests {
         let cfgs = conv_chain_configs(&spec, 4, 1, false);
         assert_eq!(cfgs.len(), 2);
         assert_eq!(cfgs[0].bk, cfgs[1].bc, "consumer bc = producer bk");
+    }
+
+    #[test]
+    fn rnn_cell_feature_blocking_is_batch_and_t_independent() {
+        let spec = crate::coordinator::rnn::RnnSpec { c: 24, k: 48, t: 6, classes: 4 };
+        let a = rnn_cell_config(&spec, 32, 1, false);
+        let b = rnn_cell_config(&spec, 1, 2, false);
+        assert_eq!((a.bc, a.bk), (b.bc, b.bk), "feature blocking shared across batches");
+        let longer = crate::coordinator::rnn::RnnSpec { t: 20, ..spec };
+        let c = rnn_cell_config(&longer, 32, 1, false);
+        assert_eq!((a.bc, a.bk), (c.bc, c.bk), "feature blocking shared across T");
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Run configuration: JSON config files for the launcher.
 //!
-//! A config names a workload (mlp / cnn / lstm / resnet), its shape, and
-//! the execution backend (native BRGEMM primitives or compiled XLA
-//! artifacts) — the coordinator's equivalent of a framework's model + run
-//! spec. Two equivalent spellings are accepted:
+//! A config names a workload (mlp / cnn / rnn / lstm / resnet), its
+//! shape, and the execution backend (native BRGEMM primitives or compiled
+//! XLA artifacts) — the coordinator's equivalent of a framework's model +
+//! run spec. Two equivalent spellings are accepted:
 //!
 //! * the explicit form, e.g.
 //!   `{"workload": {"kind": "cnn", "scale": 8, "depth": 2, "classes": 8}}`;
@@ -12,7 +12,9 @@
 //!   overridden by a top-level `sizes` key; `cnn`: the ResNet-mini stack
 //!   of `coordinator::cnn::CnnSpec::resnet_mini` at scale 8, depth 2,
 //!   8 classes — optionally overridden by top-level
-//!   `scale`/`depth`/`classes` keys).
+//!   `scale`/`depth`/`classes` keys; `rnn`: the LSTM sequence classifier
+//!   at c 16, k 32, t 8, 4 classes — optionally overridden by top-level
+//!   `c`/`k`/`t`/`classes` keys).
 //!
 //! With `{"tune": true}` the launcher tunes every layer shape before the
 //! first training step and builds the model through the primitives'
@@ -52,6 +54,9 @@ pub enum Workload {
     /// End-to-end CNN training (conv stack + pool + FC head); shape is the
     /// ResNet-mini stack at spatial `56/scale` with `depth` conv layers.
     Cnn { scale: usize, depth: usize, classes: usize },
+    /// End-to-end RNN training (LSTM cell + FC softmax head on the final
+    /// hidden state) over length-`t` sequences of `c`-dim steps.
+    Rnn { c: usize, k: usize, t: usize, classes: usize },
     Lstm { c: usize, k: usize, t: usize, layers: usize },
     Resnet { scale: usize },
 }
@@ -81,6 +86,11 @@ pub struct ServeConfig {
     /// fraction — the end-to-end proof that the trained weights (not a
     /// random init) are answering.
     pub min_accuracy: Option<f64>,
+    /// With `model_path`: poll the artifact file for content changes and
+    /// hot-reload it into the running server (a concurrent trainer's
+    /// atomic checkpoint renames are picked up automatically; reload
+    /// events land in the serve metrics).
+    pub watch_model: bool,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +103,7 @@ impl Default for ServeConfig {
             wait_for_fill_us: 0,
             model_path: None,
             min_accuracy: None,
+            watch_model: false,
         }
     }
 }
@@ -114,6 +125,9 @@ impl ServeConfig {
             if !(0.0..=1.0).contains(&acc) {
                 bail!("serve.min_accuracy must be a fraction in [0, 1]");
             }
+        }
+        if self.watch_model && self.model_path.is_none() {
+            bail!("serve.watch_model requires serve.model_path (the artifact file to watch)");
         }
         Ok(())
     }
@@ -215,6 +229,12 @@ impl RunConfig {
                     depth: get_usize(w, "depth", 2)?,
                     classes: get_usize(w, "classes", 8)?,
                 },
+                "rnn" => Workload::Rnn {
+                    c: get_usize(w, "c", 16)?,
+                    k: get_usize(w, "k", 32)?,
+                    t: get_usize(w, "t", 8)?,
+                    classes: get_usize(w, "classes", 4)?,
+                },
                 "lstm" => Workload::Lstm {
                     c: get_usize(w, "c", 64)?,
                     k: get_usize(w, "k", 64)?,
@@ -229,7 +249,7 @@ impl RunConfig {
         // scale/depth/classes apply for cnn). Mutually exclusive with the
         // explicit `workload` object.
         if let Some(mv) = j.get("model") {
-            let m = mv.as_str().ok_or_else(|| anyhow!("model must be a string (mlp|cnn)"))?;
+            let m = mv.as_str().ok_or_else(|| anyhow!("model must be a string (mlp|cnn|rnn)"))?;
             if j.get("workload").is_some() {
                 bail!("'model' and 'workload' are mutually exclusive; use one");
             }
@@ -248,7 +268,13 @@ impl RunConfig {
                     depth: get_usize(&j, "depth", 2)?,
                     classes: get_usize(&j, "classes", 8)?,
                 },
-                other => bail!("unknown model '{}' (mlp|cnn)", other),
+                "rnn" => Workload::Rnn {
+                    c: get_usize(&j, "c", 16)?,
+                    k: get_usize(&j, "k", 32)?,
+                    t: get_usize(&j, "t", 8)?,
+                    classes: get_usize(&j, "classes", 4)?,
+                },
+                other => bail!("unknown model '{}' (mlp|cnn|rnn)", other),
             };
         }
         if let Some(b) = j.get("backend").and_then(Json::as_str) {
@@ -278,6 +304,12 @@ impl RunConfig {
                 wait_for_fill_us: get_usize(sv, "wait_for_fill_us", 0)? as u64,
                 model_path: get_opt_str(sv, "model_path")?,
                 min_accuracy: get_opt_f64(sv, "min_accuracy")?,
+                watch_model: match sv.get("watch_model") {
+                    None | Some(Json::Null) => false,
+                    Some(v) => v
+                        .as_bool()
+                        .ok_or_else(|| anyhow!("watch_model must be a boolean"))?,
+                },
             };
             sc.validate()?;
             cfg.serve = Some(sc);
@@ -315,6 +347,11 @@ impl RunConfig {
         if let Workload::Cnn { scale, depth, classes } = &cfg.workload {
             if *scale == 0 || *depth == 0 || *classes < 2 {
                 bail!("cnn workload needs scale >= 1, depth >= 1, classes >= 2");
+            }
+        }
+        if let Workload::Rnn { c, k, t, classes } = &cfg.workload {
+            if *c == 0 || *k == 0 || *t == 0 || *classes < 2 {
+                bail!("rnn workload needs c/k/t >= 1 and classes >= 2");
             }
         }
         Ok(cfg)
@@ -447,6 +484,49 @@ mod tests {
         .is_err());
         assert!(RunConfig::from_json(r#"{"model": "cnn", "depth": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"model": "cnn", "classes": 1}"#).is_err());
+    }
+
+    #[test]
+    fn rnn_workload_and_model_shorthand() {
+        let cfg = RunConfig::from_json(
+            r#"{"workload": {"kind": "rnn", "c": 8, "k": 16, "t": 5, "classes": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload, Workload::Rnn { c: 8, k: 16, t: 5, classes: 3 });
+        // Shorthand picks the default shape…
+        let cfg = RunConfig::from_json(r#"{"model": "rnn", "tune": true}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 8, classes: 4 });
+        assert!(cfg.tune);
+        // …with optional top-level overrides.
+        let cfg = RunConfig::from_json(r#"{"model": "rnn", "t": 12, "classes": 6}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 12, classes: 6 });
+        // Invalid shapes rejected, not silently defaulted.
+        assert!(RunConfig::from_json(r#"{"model": "rnn", "t": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"model": "rnn", "classes": 1}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"workload": {"kind": "rnn", "c": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn watch_model_parses_and_requires_model_path() {
+        let cfg = RunConfig::from_json(
+            r#"{"serve": {"model_path": "checkpoints/rnn.bin", "watch_model": true}}"#,
+        )
+        .unwrap();
+        assert!(cfg.serve.unwrap().watch_model);
+        // Defaults off; null tolerated (lets examples carry the key).
+        let cfg = RunConfig::from_json(r#"{"serve": {}}"#).unwrap();
+        assert!(!cfg.serve.unwrap().watch_model);
+        let cfg = RunConfig::from_json(
+            r#"{"serve": {"model_path": "m.bin", "watch_model": null}}"#,
+        )
+        .unwrap();
+        assert!(!cfg.serve.unwrap().watch_model);
+        // Watching nothing is meaningless; wrong types error.
+        assert!(RunConfig::from_json(r#"{"serve": {"watch_model": true}}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"serve": {"model_path": "m.bin", "watch_model": "yes"}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -99,6 +99,49 @@ impl ClassifyData {
         ClassifyData { dim, classes, x, labels }
     }
 
+    /// Synthetic sequence-classification data for the RNN driver: each
+    /// class is a smooth *trajectory* — a bounded random walk in `c`-dim
+    /// feature space sampled once per class — and each sample is that
+    /// trajectory plus per-element Gaussian noise. Unlike
+    /// [`ClassifyData::synth`]'s iid clusters, consecutive steps are
+    /// temporally correlated, so rows genuinely read as sequences. Rows
+    /// are flattened `[t][c]` (dim = `t·c`), which keeps the whole
+    /// batching / eval machinery unchanged; the RNN driver re-views each
+    /// row as a length-`t` sequence.
+    pub fn synth_sequences(
+        n: usize,
+        t: usize,
+        c: usize,
+        classes: usize,
+        spread: f32,
+        rng: &mut Rng,
+    ) -> ClassifyData {
+        assert!(t >= 1 && c >= 1 && classes >= 1);
+        let mut trajectories: Vec<Vec<f32>> = Vec::with_capacity(classes);
+        for _ in 0..classes {
+            let mut traj = Vec::with_capacity(t * c);
+            let mut cur = rng.vec_f32(c, -1.0, 1.0);
+            for _ in 0..t {
+                traj.extend_from_slice(&cur);
+                for v in cur.iter_mut() {
+                    *v = (*v + 0.4 * rng.normal() as f32).clamp(-1.5, 1.5);
+                }
+            }
+            trajectories.push(traj);
+        }
+        let dim = t * c;
+        let mut x = Vec::with_capacity(n * dim);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cls = rng.below(classes);
+            labels.push(cls as i32);
+            for d in 0..dim {
+                x.push(trajectories[cls][d] + spread * rng.normal() as f32);
+            }
+        }
+        ClassifyData { dim, classes, x, labels }
+    }
+
     pub fn len(&self) -> usize {
         self.labels.len()
     }
@@ -234,6 +277,73 @@ mod tests {
             }
         }
         assert!(correct as f64 / d.len() as f64 > 0.95, "{}/512", correct);
+    }
+
+    #[test]
+    fn sequence_data_is_deterministic_separable_and_temporally_correlated() {
+        let (n, t, c, classes) = (256usize, 6usize, 4usize, 3usize);
+        let a = ClassifyData::synth_sequences(n, t, c, classes, 0.1, &mut Rng::new(11));
+        let b = ClassifyData::synth_sequences(n, t, c, classes, 0.1, &mut Rng::new(11));
+        assert_eq!(a.x, b.x, "same seed, same data");
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.dim, t * c);
+        assert_eq!(a.len(), n);
+        // Nearest-trajectory rule (trajectories re-estimated from the data)
+        // classifies near-perfectly at low spread — the workload is
+        // genuinely learnable.
+        let dim = a.dim;
+        let mut cents = vec![vec![0.0f64; dim]; classes];
+        let mut counts = vec![0usize; classes];
+        for i in 0..n {
+            let cls = a.labels[i] as usize;
+            counts[cls] += 1;
+            for d in 0..dim {
+                cents[cls][d] += a.x[i * dim + d] as f64;
+            }
+        }
+        for cls in 0..classes {
+            for d in 0..dim {
+                cents[cls][d] /= counts[cls].max(1) as f64;
+            }
+        }
+        let mut correct = 0usize;
+        for i in 0..n {
+            let mut best = (f64::INFINITY, 0usize);
+            for cls in 0..classes {
+                let dist: f64 = (0..dim)
+                    .map(|d| (a.x[i * dim + d] as f64 - cents[cls][d]).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, cls);
+                }
+            }
+            correct += usize::from(best.1 == a.labels[i] as usize);
+        }
+        assert!(correct as f64 / n as f64 > 0.95, "{}/{}", correct, n);
+        // Temporal correlation: consecutive steps are much closer than
+        // the walk's endpoints (the trajectory is smooth), i.e. the rows
+        // are sequences with a step-to-step structure, not iid noise in
+        // t·c dimensions (where both gaps would be equal in expectation).
+        let sq_gap = |i: usize, t0: usize, t1: usize| -> f64 {
+            (0..c)
+                .map(|ci| {
+                    let x0 = a.x[i * dim + t0 * c + ci] as f64;
+                    let x1 = a.x[i * dim + t1 * c + ci] as f64;
+                    (x0 - x1).powi(2)
+                })
+                .sum()
+        };
+        let step_gap: f64 = (0..n)
+            .map(|i| (0..t - 1).map(|ti| sq_gap(i, ti, ti + 1)).sum::<f64>() / (t - 1) as f64)
+            .sum::<f64>()
+            / n as f64;
+        let end_gap: f64 = (0..n).map(|i| sq_gap(i, 0, t - 1)).sum::<f64>() / n as f64;
+        assert!(
+            end_gap > step_gap * 1.5,
+            "random-walk smoothness: end-to-end gap {} should dominate step gap {}",
+            end_gap,
+            step_gap
+        );
     }
 
     #[test]

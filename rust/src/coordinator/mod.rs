@@ -17,6 +17,9 @@
 //! * [`cnn`]     — the CNN training driver: conv stacks (fwd bias+ReLU,
 //!   backward-by-data, weight+bias update) with a pooling stage and the
 //!   FC softmax head, end to end through the conv primitives.
+//! * [`rnn`]     — the RNN training driver: the BRGEMM LSTM cell unrolled
+//!   over `[T][N][C]` sequences with BPTT and an FC softmax head on the
+//!   final hidden state — the paper's third workload class, end to end.
 //! * [`dist`]    — the distributed simulator: collective algorithms +
 //!   α-β network cost model reproducing the paper's multi-node scaling
 //!   experiments (Fig. 10) on a single host.
@@ -32,4 +35,5 @@ pub mod data;
 pub mod dist;
 pub mod metrics;
 pub mod resnet;
+pub mod rnn;
 pub mod trainer;

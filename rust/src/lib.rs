@@ -40,10 +40,11 @@
 //!   hot weight reload in serving).
 //! * [`serve`] — the inference-serving subsystem: a request queue +
 //!   dynamic batcher coalescing single-sample requests into pow-2 batch
-//!   buckets, a worker pool running forward-only MLP/CNN plans built per
-//!   bucket through `tuned()`, all buckets sharing one `Arc`-backed
+//!   buckets, a worker pool running forward-only MLP/CNN/RNN plans built
+//!   per bucket through `tuned()`, all buckets sharing one `Arc`-backed
 //!   packed-weight copy per layer, with latency/throughput/batch-fill
-//!   accounting and a deterministic open-loop load generator.
+//!   accounting, a deterministic open-loop load generator, and an
+//!   artifact-file watcher for hot reload of trainer checkpoints.
 //! * [`util`] — self-contained substrates (JSON, RNG, stats, thread pool,
 //!   bench harness, property testing) — the crates.io registry is not
 //!   available in this environment, so these are built in-tree.

@@ -18,6 +18,7 @@ use brgemm_dl::coordinator::config::{
     Backend, CheckpointConfig, RunConfig, ServeConfig, Workload,
 };
 use brgemm_dl::coordinator::data::ClassifyData;
+use brgemm_dl::coordinator::rnn::{RnnModel, RnnSpec};
 use brgemm_dl::coordinator::trainer::{eval_accuracy, DataParallelTrainer, MlpModel, Model};
 use brgemm_dl::modelio::{Arch, ModelArtifact, TrainMeta};
 use brgemm_dl::perfmodel;
@@ -27,14 +28,15 @@ use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
 use brgemm_dl::serve::{
-    run_open_loop, run_open_loop_with, InferenceModel, LoadSpec, NetSpec, ServeOpts,
+    drive_open_loop, InferenceModel, LoadSpec, ModelWatcher, NetSpec, Response, ServeOpts,
+    Server,
 };
 use brgemm_dl::tensor::layout;
 use brgemm_dl::util::logger;
 use brgemm_dl::util::rng::Rng;
 use brgemm_dl::{log_info, log_warn};
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn commands() -> Vec<Command> {
     vec![
@@ -65,9 +67,10 @@ fn commands() -> Vec<Command> {
             // in the help strings instead.
             opts: vec![
                 OptSpec { name: "config", help: "JSON run config with a 'serve' section (excludes the other flags)", takes_value: true, default: None },
-                OptSpec { name: "model", help: "mlp|cnn topology [default: mlp]", takes_value: true, default: None },
+                OptSpec { name: "model", help: "mlp|cnn|rnn topology [default: mlp]", takes_value: true, default: None },
                 OptSpec { name: "model-path", help: "serve trained weights from this model artifact (topology comes from the artifact)", takes_value: true, default: None },
                 OptSpec { name: "min-accuracy", help: "with --model-path: replay the training distribution and fail below this accuracy fraction", takes_value: true, default: None },
+                OptSpec { name: "watch-model", help: "with --model-path: poll the artifact file and hot-reload it on change", takes_value: false, default: None },
                 OptSpec { name: "wait-fill-us", help: "batching delay: wait up to this many us for a bucket to fill [default: 0 = greedy]", takes_value: true, default: None },
                 OptSpec { name: "rate", help: "mean arrival rate, req/s [default: 2000]", takes_value: true, default: None },
                 OptSpec { name: "requests", help: "total requests to generate [default: 512]", takes_value: true, default: None },
@@ -228,6 +231,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         (Workload::Cnn { scale, depth, classes }, Backend::Native) => {
             run_cnn_native(&cfg, scale, depth, classes, resume)
         }
+        (Workload::Rnn { c, k, t, classes }, Backend::Native) => {
+            run_rnn_native(&cfg, RnnSpec { c, k, t, classes }, resume)
+        }
         (w, b) => bail!("workload {:?} on backend {:?} not wired in the CLI (see examples/)", w, b),
     }
 }
@@ -244,6 +250,9 @@ fn synth_dataset(arch: &Arch, seed: u64) -> ClassifyData {
         }
         Arch::Cnn(spec) => {
             ClassifyData::synth(1024, spec.input_dim(), spec.classes, 0.3, &mut rng)
+        }
+        Arch::Rnn(spec) => {
+            ClassifyData::synth_sequences(2048, spec.t, spec.c, spec.classes, 0.2, &mut rng)
         }
     }
 }
@@ -284,7 +293,10 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
                 Workload::Cnn { scale, depth, classes } => {
                     NetSpec::Cnn(CnnSpec::resnet_mini(*scale, *depth, *classes))
                 }
-                w => bail!("workload {:?} not servable (mlp|cnn)", w),
+                Workload::Rnn { c, k, t, classes } => {
+                    NetSpec::Rnn(RnnSpec { c: *c, k: *k, t: *t, classes: *classes })
+                }
+                w => bail!("workload {:?} not servable (mlp|cnn|rnn)", w),
             };
             let mut rng = Rng::new(cfg.seed);
             let model =
@@ -298,6 +310,7 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         match &spec {
             NetSpec::Mlp { .. } => "mlp",
             NetSpec::Cnn(_) => "cnn",
+            NetSpec::Rnn(_) => "rnn",
         },
         model.input_dim(),
         model.classes(),
@@ -312,9 +325,18 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         workers: sc.workers,
         wait_for_fill_us: sc.wait_for_fill_us,
     };
+    // `--watch-model`: the validated config guarantees a model path, and
+    // run_serve loaded the artifact above — it becomes the watcher's
+    // change-detection baseline, so a checkpoint landing while the bucket
+    // plans were being built is applied on the first poll.
+    let watch: Option<(&str, &ModelArtifact)> = if sc.watch_model {
+        sc.model_path.as_deref().zip(artifact.as_ref())
+    } else {
+        None
+    };
     let report = if let Some(min_acc) = sc.min_accuracy {
         let art = artifact.as_ref().expect("validated: min_accuracy requires model_path");
-        let (report, accuracy) = serve_eval_load(model, opts, &sc, art)?;
+        let (report, accuracy) = serve_eval_load(model, opts, &sc, art, watch)?;
         log_info!(
             "serve accuracy over the training distribution: {:.1}% (threshold {:.1}%)",
             accuracy * 100.0,
@@ -331,7 +353,11 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         report
     } else {
         let load = LoadSpec { requests: sc.requests, rate_rps: sc.rate, seed: cfg.seed };
-        let (report, responses) = run_open_loop(model, opts, &load);
+        let dim = model.input_dim();
+        let (report, responses) =
+            open_loop_watched(model, opts, &load, watch, move |rng, _i| {
+                rng.vec_f32(dim, -1.0, 1.0)
+            });
         if responses.len() != sc.requests {
             bail!("served {} of {} requests", responses.len(), sc.requests);
         }
@@ -344,17 +370,41 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     Ok(())
 }
 
+/// Start the server, optionally attach the `--watch-model` file poller,
+/// pace the open-loop load, and drain — the one open-loop entry both
+/// serving paths (synthetic noise and the accuracy replay) go through.
+fn open_loop_watched(
+    model: InferenceModel,
+    opts: ServeOpts,
+    load: &LoadSpec,
+    watch: Option<(&str, &ModelArtifact)>,
+    make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
+) -> (brgemm_dl::serve::ServeReport, Vec<Response>) {
+    let (server, rx) = Server::start(model, opts);
+    let watcher = watch.map(|(p, loaded)| {
+        log_info!("watch-model: polling {} for changes", p);
+        ModelWatcher::spawn(server.reload_handle(), p, Duration::from_millis(50), Some(loaded))
+    });
+    let out = drive_open_loop(server, rx, load, make_input);
+    if let Some(w) = watcher {
+        let applied = w.stop();
+        log_info!("watch-model: {} reload(s) applied during the run", applied);
+    }
+    out
+}
+
 /// Accuracy-replay load: pace the artifact's own training distribution
 /// (regenerated from its stored seed) through the server open-loop, then
 /// score the responses against the labels. Request ids are submission
 /// order, so responses pair with labels by id. The pacing machinery is
-/// [`run_open_loop_with`] — the same loop as the synthetic load, fed
+/// [`open_loop_watched`] — the same loop as the synthetic load, fed
 /// dataset rows instead of noise.
 fn serve_eval_load(
     model: InferenceModel,
     opts: ServeOpts,
     sc: &ServeConfig,
     art: &ModelArtifact,
+    watch: Option<(&str, &ModelArtifact)>,
 ) -> Result<(brgemm_dl::serve::ServeReport, f64)> {
     let data = synth_dataset(&art.arch, art.meta.seed);
     let n = sc.requests.min(data.len());
@@ -367,7 +417,7 @@ fn serve_eval_load(
     }
     let load = LoadSpec { requests: n, rate_rps: sc.rate, seed: art.meta.seed };
     let (report, responses) =
-        run_open_loop_with(model, opts, &load, |_rng, i| data.batch(i, 1).0);
+        open_loop_watched(model, opts, &load, watch, |_rng, i| data.batch(i, 1).0);
     if responses.len() != n {
         bail!("served {} of {} eval requests", responses.len(), n);
     }
@@ -391,8 +441,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // The config file is authoritative: reject flags it would silently
         // override (only --json composes with --config).
         let conflicting: Vec<&str> =
-            ["model", "model-path", "min-accuracy", "wait-fill-us", "rate", "requests",
-             "max-batch", "serve-workers", "nthreads", "seed", "tune"]
+            ["model", "model-path", "min-accuracy", "watch-model", "wait-fill-us", "rate",
+             "requests", "max-batch", "serve-workers", "nthreads", "seed", "tune"]
             .into_iter()
             .filter(|&k| args.str(k).is_some())
             .collect();
@@ -416,7 +466,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.workload = match args.str_or("model", "mlp") {
         "mlp" => Workload::Mlp { sizes: vec![64, 128, 10] },
         "cnn" => Workload::Cnn { scale: 8, depth: 2, classes: 8 },
-        other => bail!("unknown model '{}' (mlp|cnn)", other),
+        "rnn" => Workload::Rnn { c: 16, k: 32, t: 8, classes: 4 },
+        other => bail!("unknown model '{}' (mlp|cnn|rnn)", other),
     };
     cfg.nthreads = args.usize_or("nthreads", 1).map_err(|e| anyhow!("{}", e))?;
     cfg.seed = args.usize_or("seed", 42).map_err(|e| anyhow!("{}", e))? as u64;
@@ -433,6 +484,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             as u64,
         model_path: args.str("model-path").map(String::from),
         min_accuracy: args.f64("min-accuracy").map_err(|e| anyhow!("{}", e))?,
+        watch_model: args.flag("watch-model"),
     };
     sc.validate()?;
     run_serve(&cfg, sc, args.flag("json"))
@@ -733,6 +785,63 @@ fn tune_cnn_layers(cfg: &RunConfig, spec: &CnnSpec) {
         "tuned fc head ({}x{}->{}): {} at {:.2} GF/s ({:.2}x default)",
         cfg.batch,
         feat,
+        spec.classes,
+        rep.best().cand.label(rep.kind),
+        rep.best().gflops,
+        rep.speedup_vs_default()
+    );
+    match cache.save() {
+        Ok(path) => log_info!("tuning cache saved to {}", path.display()),
+        Err(e) => log_warn!("could not save tuning cache: {}", e),
+    }
+}
+
+/// Native RNN training: the LSTM sequence-classifier driver (cell
+/// unrolled with BPTT + FC softmax head on the final hidden state),
+/// trained end to end through the BRGEMM primitives.
+fn run_rnn_native(cfg: &RunConfig, spec: RnnSpec, resume: Option<ModelArtifact>) -> Result<()> {
+    if cfg.tune {
+        tune_rnn_layers(cfg, &spec);
+    }
+    let arch = Arch::Rnn(spec);
+    let data = synth_dataset(&arch, cfg.seed);
+    log_info!(
+        "rnn: lstm cell c{} k{} over T={} steps, {} classes",
+        spec.c,
+        spec.k,
+        spec.t,
+        spec.classes
+    );
+    drive_native(cfg, &data, &arch, resume.as_ref(), |rng| {
+        RnnModel::new_with(&spec, cfg.batch, cfg.nthreads, cfg.tune, rng)
+    })
+}
+
+/// Tune-before-train for the RNN: tune the LSTM cell shape (the cache
+/// key includes the sequence length) plus the FC head, persisting
+/// winners so `RnnModel::new_with(.., tuned: true, ..)` hits them.
+fn tune_rnn_layers(cfg: &RunConfig, spec: &RnnSpec) {
+    let topts = TuneOpts::quick();
+    let mut cache = TuningCache::global().lock().unwrap();
+    let lcfg = LstmConfig::new(cfg.batch, spec.c, spec.k, spec.t).with_threads(cfg.nthreads);
+    let rep = tuner::tune_lstm_cached(&lcfg, &topts, &mut cache);
+    log_info!(
+        "tuned lstm cell ({}x{}->{} T{}): {} at {:.2} GF/s ({:.2}x default)",
+        cfg.batch,
+        spec.c,
+        spec.k,
+        spec.t,
+        rep.best().cand.label(rep.kind),
+        rep.best().gflops,
+        rep.speedup_vs_default()
+    );
+    let fcfg = FcConfig::new(cfg.batch, spec.k, spec.classes, Act::Identity)
+        .with_threads(cfg.nthreads);
+    let rep = tuner::tune_fc_cached(&fcfg, &topts.with_train(true), &mut cache);
+    log_info!(
+        "tuned fc head ({}x{}->{}): {} at {:.2} GF/s ({:.2}x default)",
+        cfg.batch,
+        spec.k,
         spec.classes,
         rep.best().cand.label(rep.kind),
         rep.best().gflops,

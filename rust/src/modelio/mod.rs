@@ -56,11 +56,32 @@
 //! A running server hot-reloads a newer artifact atomically
 //! ([`crate::serve::Server::reload`]): in-flight batches finish on the
 //! weights they started with, later batches use the new set, and the swap
-//! count lands in the serve metrics.
+//! count lands in the serve metrics. A long-running server can watch the
+//! artifact file itself (`serve ... --watch-model`,
+//! [`crate::serve::ModelWatcher`]): every atomic checkpoint rename a
+//! concurrent trainer performs is picked up by header-signature polling
+//! and applied through the same reload path.
+//!
+//! # The RNN path
+//!
+//! The same pipeline covers sequence models. An `{"model": "rnn"}` config
+//! trains the LSTM sequence classifier (`examples/rnn.json`) with the
+//! identical checkpoint/resume contract; the artifact's [`Arch::Rnn`]
+//! stores the whole cell as one [`LayerKind::Lstm`] layer — canonical
+//! unblocked per-gate `W`/`R`/`b` (gate order i, g, f, o) — plus the FC
+//! head, so export → import round-trips bit-identically under any
+//! `{bn, bc, bk, threads}`:
+//!
+//! ```text
+//!   brgemm-dl run --config examples/rnn.json
+//!   brgemm-dl run --config examples/rnn.json --epochs 3 --resume checkpoints/rnn.bin
+//!   brgemm-dl serve --model-path checkpoints/rnn.bin --min-accuracy 0.5
+//! ```
 
 pub mod format;
 
 use crate::coordinator::cnn::CnnSpec;
+use crate::coordinator::rnn::RnnSpec;
 use anyhow::{anyhow, bail, Result};
 use self::format::{crc32, Dec, Enc};
 use std::path::{Path, PathBuf};
@@ -79,6 +100,9 @@ pub enum Arch {
     Mlp { sizes: Vec<usize> },
     /// Conv stack + pool + FC head (the CNN training driver's topology).
     Cnn(CnnSpec),
+    /// LSTM cell over `[T][N][C]` sequences + FC softmax head on the
+    /// final hidden state (the RNN training driver's topology).
+    Rnn(RnnSpec),
 }
 
 /// What one layer of an [`Arch`] must look like in the artifact.
@@ -94,6 +118,7 @@ impl Arch {
         match self {
             Arch::Mlp { sizes } => sizes[0],
             Arch::Cnn(spec) => spec.input_dim(),
+            Arch::Rnn(spec) => spec.input_dim(),
         }
     }
 
@@ -101,6 +126,7 @@ impl Arch {
         match self {
             Arch::Mlp { sizes } => *sizes.last().unwrap(),
             Arch::Cnn(spec) => spec.classes,
+            Arch::Rnn(spec) => spec.classes,
         }
     }
 
@@ -115,6 +141,10 @@ impl Arch {
                 spec.in_w,
                 spec.convs.len(),
                 spec.classes
+            ),
+            Arch::Rnn(spec) => format!(
+                "rnn c{} k{} t{} ({} classes)",
+                spec.c, spec.k, spec.t, spec.classes
             ),
         }
     }
@@ -180,6 +210,17 @@ impl Arch {
                     );
                 }
             }
+            Arch::Rnn(spec) => {
+                if spec.c == 0 || spec.k == 0 || spec.t == 0 {
+                    bail!(
+                        "rnn arch c/k/t must all be >= 1, got c{} k{} t{}",
+                        spec.c, spec.k, spec.t
+                    );
+                }
+                if spec.classes < 2 {
+                    bail!("rnn arch needs >= 2 classes, got {}", spec.classes);
+                }
+            }
         }
         Ok(())
     }
@@ -187,8 +228,9 @@ impl Arch {
     /// The per-layer shapes an artifact of this arch must carry, in the
     /// canonical layer order ([`crate::coordinator::trainer::Model`]'s
     /// export order): MLP layers first-to-last; CNN conv stack in chain
-    /// order, then the FC head. Call [`Self::validate`] first — this
-    /// derives geometry and assumes a well-formed arch.
+    /// order, then the FC head; RNN: the LSTM cell, then the FC head.
+    /// Call [`Self::validate`] first — this derives geometry and assumes
+    /// a well-formed arch.
     pub fn layer_shapes(&self) -> Vec<LayerShape> {
         match self {
             Arch::Mlp { sizes } => sizes
@@ -210,6 +252,10 @@ impl Arch {
                 out.push(LayerShape { kind: LayerKind::Fc, dims: vec![spec.classes, feat] });
                 out
             }
+            Arch::Rnn(spec) => vec![
+                LayerShape { kind: LayerKind::Lstm, dims: vec![spec.k, spec.c] },
+                LayerShape { kind: LayerKind::Fc, dims: vec![spec.classes, spec.k] },
+            ],
         }
     }
 
@@ -230,6 +276,13 @@ impl Arch {
                 }
                 e.u32(spec.pool_win as u32);
                 e.u32(spec.pool_stride as u32);
+                e.u32(spec.classes as u32);
+            }
+            Arch::Rnn(spec) => {
+                e.u8(2);
+                e.u32(spec.c as u32);
+                e.u32(spec.k as u32);
+                e.u32(spec.t as u32);
                 e.u32(spec.classes as u32);
             }
         }
@@ -279,6 +332,13 @@ impl Arch {
                     classes,
                 }))
             }
+            2 => {
+                let c = d.u32("rnn c")? as usize;
+                let k = d.u32("rnn k")? as usize;
+                let t = d.u32("rnn t")? as usize;
+                let classes = d.u32("rnn classes")? as usize;
+                Ok(Arch::Rnn(RnnSpec { c, k, t, classes }))
+            }
             t => bail!("unknown arch tag {} in artifact", t),
         }
     }
@@ -289,11 +349,17 @@ impl Arch {
 pub enum LayerKind {
     Fc,
     Conv,
+    /// A whole LSTM cell: all four gates' input and recurrent weights.
+    Lstm,
 }
 
 /// One layer's canonical (unblocked) parameters. `Fc`: `w` is row-major
-/// `[K][C]`, dims `[k, c]`. `Conv`: `w` is row-major `[K][C][R][S]`, dims
-/// `[k, c, r, s]`. `b` is `[K]` either way.
+/// `[K][C]`, dims `[k, c]`, `b` is `[K]`. `Conv`: `w` is row-major
+/// `[K][C][R][S]`, dims `[k, c, r, s]`, `b` is `[K]`. `Lstm`: dims
+/// `[k, c]` (hidden width, per-step input width); `w` is the gate-major
+/// concatenation `[4][K][C]` (input weights W) followed by `[4][K][K]`
+/// (recurrent weights R), `b` is `[4][K]` — gate order i, g, f, o
+/// throughout ([`crate::primitives::lstm::GATE_ACTS`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerParams {
     pub kind: LayerKind,
@@ -318,7 +384,13 @@ impl LayerParams {
         LayerParams { kind: LayerKind::Conv, dims: vec![k, c, r, s], w, b }
     }
 
-    /// Output-channel count (`K`) — the bias width of every layer kind.
+    /// One LSTM cell (`k` = hidden width, `c` = per-step input width):
+    /// `w = [W: 4·K·C | R: 4·K·K]`, `b = [4][K]`, gate-major.
+    pub fn lstm(k: usize, c: usize, w: Vec<f32>, b: Vec<f32>) -> LayerParams {
+        LayerParams { kind: LayerKind::Lstm, dims: vec![k, c], w, b }
+    }
+
+    /// Output-channel count (`K`) — `dims[0]` for every layer kind.
     pub fn k(&self) -> usize {
         self.dims[0]
     }
@@ -332,6 +404,7 @@ impl LayerParams {
             match k {
                 LayerKind::Fc => "fc",
                 LayerKind::Conv => "conv",
+                LayerKind::Lstm => "lstm",
             }
         }
         if self.kind != kind || self.dims != dims {
@@ -348,7 +421,19 @@ impl LayerParams {
     }
 
     fn weight_len(&self) -> usize {
-        self.dims.iter().product()
+        match self.kind {
+            // One LSTM cell stores all four gates' W ([4][K][C]) and R
+            // ([4][K][K]) back to back.
+            LayerKind::Lstm => 4 * self.dims[0] * (self.dims[1] + self.dims[0]),
+            _ => self.dims.iter().product(),
+        }
+    }
+
+    fn bias_len(&self) -> usize {
+        match self.kind {
+            LayerKind::Lstm => 4 * self.k(),
+            _ => self.k(),
+        }
     }
 }
 
@@ -460,8 +545,13 @@ impl ModelArtifact {
                     l.weight_len()
                 );
             }
-            if l.b.len() != l.k() {
-                bail!("artifact layer {}: {} bias values, want {}", i, l.b.len(), l.k());
+            if l.b.len() != l.bias_len() {
+                bail!(
+                    "artifact layer {}: {} bias values, want {}",
+                    i,
+                    l.b.len(),
+                    l.bias_len()
+                );
             }
             if let Some(j) = l.w.iter().chain(&l.b).position(|v| !v.is_finite()) {
                 bail!("artifact layer {}: non-finite parameter at flat index {}", i, j);
@@ -486,6 +576,7 @@ impl ModelArtifact {
             p.u8(match l.kind {
                 LayerKind::Fc => 0,
                 LayerKind::Conv => 1,
+                LayerKind::Lstm => 2,
             });
             p.usize_slice(&l.dims);
             p.f32_slice(&l.w);
@@ -549,6 +640,7 @@ impl ModelArtifact {
             let kind = match d.u8("layer kind")? {
                 0 => LayerKind::Fc,
                 1 => LayerKind::Conv,
+                2 => LayerKind::Lstm,
                 t => bail!("artifact layer {}: unknown kind tag {}", i, t),
             };
             let dims = d.usize_slice("layer dims")?;
@@ -633,13 +725,53 @@ mod tests {
         ModelArtifact::new(Arch::Cnn(spec), TrainMeta::fresh(6), layers)
     }
 
+    fn rnn_artifact() -> ModelArtifact {
+        let mut rng = Rng::new(7);
+        let spec = crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 3 };
+        let layers = vec![
+            LayerParams::lstm(
+                4,
+                3,
+                rng.vec_f32(4 * 4 * (3 + 4), -1.0, 1.0),
+                rng.vec_f32(4 * 4, -0.1, 0.1),
+            ),
+            LayerParams::fc(3, 4, rng.vec_f32(12, -1.0, 1.0), rng.vec_f32(3, -0.1, 0.1)),
+        ];
+        ModelArtifact::new(Arch::Rnn(spec), TrainMeta::fresh(7), layers)
+    }
+
     #[test]
-    fn encode_decode_roundtrip_both_arches() {
-        for art in [mlp_artifact(), cnn_artifact()] {
+    fn encode_decode_roundtrip_all_arches() {
+        for art in [mlp_artifact(), cnn_artifact(), rnn_artifact()] {
             let bytes = art.encode();
             let back = ModelArtifact::decode(&bytes).unwrap();
             assert_eq!(art, back, "decode(encode(x)) must be x");
         }
+    }
+
+    #[test]
+    fn rnn_artifact_validation_catches_lies() {
+        // Truncated cell weights (W+R concat too short).
+        let mut art = rnn_artifact();
+        art.layers[0].w.pop();
+        assert!(art.validate().unwrap_err().to_string().contains("weight values"));
+        // Gate biases must be [4][K], not [K].
+        let mut art = rnn_artifact();
+        art.layers[0].b.truncate(4);
+        assert!(art.validate().unwrap_err().to_string().contains("bias values"));
+        // Arch/layer kind mismatch.
+        let mut art = rnn_artifact();
+        art.layers[0] = LayerParams::fc(4, 3, vec![0.0; 12], vec![0.0; 4]);
+        assert!(art.validate().is_err(), "fc layer where the arch expects an lstm cell");
+        // Hostile arch values error on decode, never panic downstream.
+        let mut art = rnn_artifact();
+        art.arch = Arch::Rnn(crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 0, classes: 3 });
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{}", err);
+        let mut art = rnn_artifact();
+        art.arch = Arch::Rnn(crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 1 });
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains("classes"), "{}", err);
     }
 
     #[test]

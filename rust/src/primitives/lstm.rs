@@ -18,8 +18,9 @@
 use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
 use crate::primitives::eltwise::Act;
 use crate::primitives::partition::{Partition2d, Strategy};
-use crate::tensor::layout::{pack_weights_2d, transpose_packed_2d};
+use crate::tensor::layout::{pack_weights_2d, transpose_packed_2d, unpack_weights_2d};
 use crate::util::pool::{parallel_region, SharedMut};
+use std::sync::Arc;
 use std::time::Instant;
 
 pub const GATES: usize = 4;
@@ -159,9 +160,98 @@ pub struct LstmWeightsT {
     pub reformat_secs: f64,
 }
 
-/// Forward workspace: gate activations and states kept for training.
-/// `h`/`s` have T+1 steps with step 0 = the initial state.
+/// Packed LSTM cell weights behind [`Arc`]s, shared across forward-only
+/// execution plans — the serving analogue of
+/// [`FcSharedWeights`](crate::primitives::fc::FcSharedWeights) /
+/// [`ConvSharedWeights`](crate::primitives::conv::ConvSharedWeights).
+/// The packed layouts depend only on the feature blocking `(bc, bk)`,
+/// never on the mini-batch or sequence length, so one packed copy backs
+/// every batch-bucket plan. Cloning bumps the [`Arc`]s; it never re-packs.
 #[derive(Debug, Clone)]
+pub struct LstmSharedWeights {
+    pub k: usize,
+    pub c: usize,
+    pub bk: usize,
+    pub bc: usize,
+    w: Arc<Vec<f32>>, // [4][Kb][Cb][bc][bk]
+    r: Arc<Vec<f32>>, // [4][Kb][Kb][bk][bk]
+    b: Arc<Vec<f32>>, // [4][K]
+}
+
+impl LstmSharedWeights {
+    /// Pack canonical unblocked gate weights once for the blocking of
+    /// `cfg`. `w_gates` is `[4][K][C]` row-major (gate-major, the artifact
+    /// layout), `r_gates` is `[4][K][K]`, `b_gates` is `[4][K]`; gate
+    /// order i, g, f, o throughout.
+    pub fn pack(cfg: &LstmConfig, w_gates: &[f32], r_gates: &[f32], b_gates: &[f32]) -> LstmSharedWeights {
+        let (k, c) = (cfg.k, cfg.c);
+        assert_eq!(w_gates.len(), GATES * k * c);
+        assert_eq!(r_gates.len(), GATES * k * k);
+        assert_eq!(b_gates.len(), GATES * k);
+        let mut w = Vec::with_capacity(GATES * k * c);
+        let mut r = Vec::with_capacity(GATES * k * k);
+        for z in 0..GATES {
+            w.extend(pack_weights_2d(&w_gates[z * k * c..(z + 1) * k * c], k, c, cfg.bk, cfg.bc));
+            r.extend(pack_weights_2d(&r_gates[z * k * k..(z + 1) * k * k], k, k, cfg.bk, cfg.bk));
+        }
+        LstmSharedWeights {
+            k,
+            c,
+            bk: cfg.bk,
+            bc: cfg.bc,
+            w: Arc::new(w),
+            r: Arc::new(r),
+            b: Arc::new(b_gates.to_vec()),
+        }
+    }
+
+    pub fn w(&self) -> &[f32] {
+        &self.w
+    }
+
+    pub fn r(&self) -> &[f32] {
+        &self.r
+    }
+
+    pub fn b(&self) -> &[f32] {
+        &self.b
+    }
+
+    /// Canonical unblocked form: (`[4][K][C]` input weights, `[4][K][K]`
+    /// recurrent weights, `[4][K]` biases) — the exact inverse of
+    /// [`LstmSharedWeights::pack`].
+    pub fn to_plain(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (k, c) = (self.k, self.c);
+        let gw = k * c;
+        let gr = k * k;
+        let mut w = Vec::with_capacity(GATES * gw);
+        let mut r = Vec::with_capacity(GATES * gr);
+        for z in 0..GATES {
+            w.extend(unpack_weights_2d(&self.w[z * gw..(z + 1) * gw], k, c, self.bk, self.bc));
+            r.extend(unpack_weights_2d(&self.r[z * gr..(z + 1) * gr], k, k, self.bk, self.bk));
+        }
+        (w, r, self.b.to_vec())
+    }
+
+    /// Can an execution plan with this config run against these weights?
+    /// Shape and feature blocking must agree (`bn` and `t` are free —
+    /// that is what lets one packed copy back every batch bucket).
+    pub fn matches(&self, cfg: &LstmConfig) -> bool {
+        self.k == cfg.k && self.c == cfg.c && self.bk == cfg.bk && self.bc == cfg.bc
+    }
+
+    /// Stable identity of the underlying packed-weight allocation; two
+    /// clones share it. Used by tests to assert weights are allocated
+    /// exactly once however many bucket plans exist.
+    pub fn alloc_id(&self) -> usize {
+        Arc::as_ptr(&self.w) as usize
+    }
+}
+
+/// Forward workspace: gate activations and states kept for training.
+/// `h`/`s` have T+1 steps with step 0 = the initial state. (`Default`
+/// gives empty buffers; the serving scratch resizes them per bucket.)
+#[derive(Debug, Clone, Default)]
 pub struct LstmWorkspace {
     pub gates: Vec<f32>, // [4][T][N][K], post-activation
     pub h: Vec<f32>,     // [T+1][N][K]
@@ -312,11 +402,12 @@ impl LstmPrimitive {
     }
 
     /// Like [`LstmPrimitive::new`], but first consults the persistent
-    /// tuning cache ((N, C, K) + ISA + thread count key — blockings do not
-    /// depend on the sequence length, so entries generalise across `t`)
-    /// and, on a hit, applies the cached winning blocking. On a miss the
-    /// config is used as-is — populate the cache with the `tune` CLI
-    /// subcommand or [`crate::autotune::tuner::tune_lstm_cached`].
+    /// tuning cache ((N, C, K, T) + ISA + thread count key — the sequence
+    /// length participates in the key, so two workloads differing only in
+    /// `t` never share a cached blocking) and, on a hit, applies the
+    /// cached winning blocking. On a miss the config is used as-is —
+    /// populate the cache with the `tune` CLI subcommand or
+    /// [`crate::autotune::tuner::tune_lstm_cached`].
     pub fn tuned(cfg: LstmConfig) -> LstmPrimitive {
         LstmPrimitive::new(crate::autotune::tuned_lstm_config(cfg))
     }
@@ -332,10 +423,50 @@ impl LstmPrimitive {
         weights: &LstmWeights,
         ws: &mut LstmWorkspace,
     ) -> LstmBreakdown {
+        self.forward_parts(x, h0, s0, &weights.w, &weights.r, &weights.b, weights.reformat_secs, ws)
+    }
+
+    /// [`LstmPrimitive::forward`] against [`Arc`]-shared packed weights —
+    /// the serving path: many bucket plans, one packed copy.
+    pub fn forward_shared(
+        &self,
+        x: &[f32],
+        h0: Option<&[f32]>,
+        s0: Option<&[f32]>,
+        weights: &LstmSharedWeights,
+        ws: &mut LstmWorkspace,
+    ) -> LstmBreakdown {
+        assert!(
+            weights.matches(&self.cfg),
+            "shared weights ({}x{} bk{} bc{}) do not match plan ({}x{} bk{} bc{})",
+            weights.k, weights.c, weights.bk, weights.bc,
+            self.cfg.k, self.cfg.c, self.cfg.bk, self.cfg.bc
+        );
+        self.forward_parts(x, h0, s0, weights.w(), weights.r(), weights.b(), 0.0, ws)
+    }
+
+    /// The forward body over raw packed-weight slices (`w`
+    /// `[4][Kb][Cb][bc][bk]`, `r` `[4][Kb][Kb][bk][bk]`, `b` `[4][K]`);
+    /// `reformat_secs` is charged to the returned breakdown.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_parts(
+        &self,
+        x: &[f32],
+        h0: Option<&[f32]>,
+        s0: Option<&[f32]>,
+        w: &[f32],
+        r: &[f32],
+        b: &[f32],
+        reformat_secs: f64,
+        ws: &mut LstmWorkspace,
+    ) -> LstmBreakdown {
         let cfg = &self.cfg;
         assert_eq!(x.len(), cfg.t * cfg.n * cfg.c);
         let nk = cfg.n * cfg.k;
         let tnk = cfg.t * nk;
+        assert_eq!(ws.gates.len(), GATES * tnk, "workspace gates sized for this config");
+        assert_eq!(ws.h.len(), (cfg.t + 1) * nk, "workspace h sized for this config");
+        assert_eq!(ws.s.len(), (cfg.t + 1) * nk, "workspace s sized for this config");
         if let Some(h0) = h0 {
             ws.h[..nk].copy_from_slice(h0);
         } else {
@@ -353,7 +484,7 @@ impl LstmPrimitive {
         let gr = cfg.k * cfg.k;
         let wblk = cfg.bc * cfg.bk;
         let rblk = cfg.bk * cfg.bk;
-        let mut bd = LstmBreakdown { reformat_secs: weights.reformat_secs, ..Default::default() };
+        let mut bd = LstmBreakdown { reformat_secs, ..Default::default() };
 
         for t in 0..cfg.t {
             let t0 = Instant::now();
@@ -386,7 +517,7 @@ impl LstmPrimitive {
                         self.kern_wx.execute_offs(
                             x,
                             &a_offs[..cb],
-                            &weights.w,
+                            w,
                             &b_offs[..cb],
                             gate_blk,
                             None,
@@ -399,10 +530,10 @@ impl LstmPrimitive {
                         self.kern_rh[z].execute_offs(
                             h_prev,
                             &a_offs[..kb],
-                            &weights.r,
+                            r,
                             &b_offs[..kb],
                             gate_blk,
-                            Some(&weights.b[z * cfg.k + ik0..z * cfg.k + ik0 + cfg.bk]),
+                            Some(&b[z * cfg.k + ik0..z * cfg.k + ik0 + cfg.bk]),
                         );
                     }
                     // State recurrences on the hot block (Eq. 5-6).
@@ -872,8 +1003,8 @@ mod tests {
                 "dx[{}]: {} vs {}", idx, num, grads.dx[idx]
             );
         }
-        // dW (gate 0 and 2; unpack the blocked gradient first)
-        for z in [0usize, 2] {
+        // dW — every gate (unpack the blocked gradient first).
+        for z in 0..GATES {
             let gw = cfg.k * cfg.c;
             let dwz = crate::tensor::layout::unpack_weights_2d(
                 &grads.dw[z * gw..(z + 1) * gw],
@@ -892,9 +1023,8 @@ mod tests {
                 );
             }
         }
-        // dR (gate 1)
-        {
-            let z = 1;
+        // dR — every gate.
+        for z in 0..GATES {
             let gr = cfg.k * cfg.k;
             let drz = crate::tensor::layout::unpack_weights_2d(
                 &grads.dr[z * gr..(z + 1) * gr],
@@ -909,13 +1039,12 @@ mod tests {
                     / (2.0 * eps as f64);
                 assert!(
                     (num - drz[idx] as f64).abs() < 5e-3,
-                    "dR[{}]: {} vs {}", idx, num, drz[idx]
+                    "dR[{}][{}]: {} vs {}", z, idx, num, drz[idx]
                 );
             }
         }
-        // db (gate 3)
-        {
-            let z = 3;
+        // db — every gate.
+        for z in 0..GATES {
             for idx in [0usize, 3] {
                 let mut bp = s.b.clone();
                 bp[z][idx] += eps;
@@ -925,10 +1054,80 @@ mod tests {
                     / (2.0 * eps as f64);
                 assert!(
                     (num - grads.db[z * cfg.k + idx] as f64).abs() < 5e-3,
-                    "db[{}]: {} vs {}", idx, num, grads.db[z * cfg.k + idx]
+                    "db[{}][{}]: {} vs {}", z, idx, num, grads.db[z * cfg.k + idx]
                 );
             }
         }
+    }
+
+    /// Threading is a work-partitioning choice, never a math choice: the
+    /// forward states and all four gradient tensors must be **bitwise**
+    /// identical at any thread count (each `(nb, kb)`-style block is
+    /// computed whole by exactly one task, with a fixed accumulation
+    /// order, so partitioning only changes who computes a block).
+    #[test]
+    fn forward_and_backward_bit_identical_across_thread_counts() {
+        let s = setup(8, 16, 16, 4, 99);
+        let dh_out = Rng::new(5).vec_f32(s.cfg.t * s.cfg.n * s.cfg.k, -1.0, 1.0);
+        let run = |threads: usize| {
+            // Small blocks so the (nb × kb) task grid is genuinely
+            // partitioned differently at each thread count.
+            let cfg = s.cfg.with_blocking(4, 8, 8).with_threads(threads);
+            let prim = LstmPrimitive::new(cfg);
+            let wref: Vec<&[f32]> = s.w.iter().map(|v| v.as_slice()).collect();
+            let rref: Vec<&[f32]> = s.r.iter().map(|v| v.as_slice()).collect();
+            let bref: Vec<&[f32]> = s.b.iter().map(|v| v.as_slice()).collect();
+            let weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
+            let wt = weights.transposed();
+            let mut ws = LstmWorkspace::new(&cfg);
+            prim.forward(&s.x, None, None, &weights, &mut ws);
+            let (grads, _) = prim.backward(&s.x, &dh_out, &wt, &ws);
+            (ws.h.clone(), ws.s.clone(), grads)
+        };
+        let (h1, s1, g1) = run(1);
+        for threads in [2usize, 3, 4] {
+            let (h, st, g) = run(threads);
+            assert_eq!(h, h1, "h differs at {} threads", threads);
+            assert_eq!(st, s1, "s differs at {} threads", threads);
+            assert_eq!(g.dx, g1.dx, "dx differs at {} threads", threads);
+            assert_eq!(g.dw, g1.dw, "dW differs at {} threads", threads);
+            assert_eq!(g.dr, g1.dr, "dR differs at {} threads", threads);
+            assert_eq!(g.db, g1.db, "db differs at {} threads", threads);
+        }
+    }
+
+    #[test]
+    fn shared_weights_pack_matches_training_pack_and_forward() {
+        // One shared packed copy must produce bit-identical forwards to
+        // the training-side LstmWeights pack, round-trip to the canonical
+        // form exactly, and share its allocation across clones.
+        let s = setup(4, 8, 8, 3, 77);
+        let cfg = s.cfg;
+        let prim = LstmPrimitive::new(cfg);
+        let wref: Vec<&[f32]> = s.w.iter().map(|v| v.as_slice()).collect();
+        let rref: Vec<&[f32]> = s.r.iter().map(|v| v.as_slice()).collect();
+        let bref: Vec<&[f32]> = s.b.iter().map(|v| v.as_slice()).collect();
+        let weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
+        // Canonical gate-major concatenations (the artifact layout).
+        let w_cat: Vec<f32> = s.w.iter().flatten().copied().collect();
+        let r_cat: Vec<f32> = s.r.iter().flatten().copied().collect();
+        let b_cat: Vec<f32> = s.b.iter().flatten().copied().collect();
+        let shared = LstmSharedWeights::pack(&cfg, &w_cat, &r_cat, &b_cat);
+        assert_eq!(shared.w(), &weights.w[..], "same packed input weights");
+        assert_eq!(shared.r(), &weights.r[..], "same packed recurrent weights");
+        assert_eq!(shared.b(), &weights.b[..]);
+        let (wp, rp, bp) = shared.to_plain();
+        assert_eq!(wp, w_cat, "to_plain inverts pack bitwise");
+        assert_eq!(rp, r_cat);
+        assert_eq!(bp, b_cat);
+        assert!(shared.matches(&cfg));
+        assert_eq!(shared.clone().alloc_id(), shared.alloc_id(), "clones share the allocation");
+        let mut ws_a = LstmWorkspace::new(&cfg);
+        let mut ws_b = LstmWorkspace::new(&cfg);
+        prim.forward(&s.x, None, None, &weights, &mut ws_a);
+        prim.forward_shared(&s.x, None, None, &shared, &mut ws_b);
+        assert_eq!(ws_a.h, ws_b.h, "shared-weight forward must be bit-identical");
+        assert_eq!(ws_a.s, ws_b.s);
     }
 
     #[test]

@@ -184,6 +184,15 @@ impl Server {
         self.shared.model.reload(artifact)
     }
 
+    /// A cloneable handle that can apply reloads from another thread (the
+    /// model-file watcher). The handle outlives the [`Server`] value —
+    /// [`Server::shutdown`] consumes the server while the watcher keeps
+    /// running until stopped — and a reload applied after shutdown is a
+    /// harmless swap on the final weight generation.
+    pub fn reload_handle(&self) -> ReloadHandle {
+        ReloadHandle { shared: Arc::clone(&self.shared) }
+    }
+
     /// Stop intake, drain the queue, join the workers, and report. Every
     /// request accepted before this call is answered before it returns.
     pub fn shutdown(self) -> ServeReport {
@@ -198,6 +207,25 @@ impl Server {
         let wall = self.started.elapsed().as_secs_f64();
         let reloads = self.shared.model.reload_count();
         self.shared.stats.lock().unwrap().report(wall, reloads)
+    }
+}
+
+/// Reload access to a running (or drained) server, detached from the
+/// [`Server`] value's lifetime — see [`Server::reload_handle`].
+#[derive(Clone)]
+pub struct ReloadHandle {
+    shared: Arc<Shared>,
+}
+
+impl ReloadHandle {
+    /// Same contract as [`Server::reload`].
+    pub fn reload(&self, artifact: &ModelArtifact) -> Result<()> {
+        self.shared.model.reload(artifact)
+    }
+
+    /// Total reloads applied to the underlying model so far.
+    pub fn reload_count(&self) -> u64 {
+        self.shared.model.reload_count()
     }
 }
 

@@ -59,9 +59,22 @@ pub fn run_open_loop_with(
     model: InferenceModel,
     opts: ServeOpts,
     load: &LoadSpec,
-    mut make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
+    make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
 ) -> (ServeReport, Vec<Response>) {
     let (server, rx) = Server::start(model, opts);
+    drive_open_loop(server, rx, load, make_input)
+}
+
+/// Pace `load` into an **already-started** server and drain it — the
+/// split lets a caller attach side channels (e.g. the `--watch-model`
+/// file watcher, via [`Server::reload_handle`]) between starting the pool
+/// and applying load.
+pub fn drive_open_loop(
+    server: Server,
+    rx: std::sync::mpsc::Receiver<Response>,
+    load: &LoadSpec,
+    mut make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
+) -> (ServeReport, Vec<Response>) {
     let collector = std::thread::spawn(move || {
         let mut out = Vec::new();
         while let Ok(r) = rx.recv() {

@@ -41,6 +41,13 @@
 //!   export.
 //! * [`loadgen`] — deterministic open-loop load generator (Poisson
 //!   arrivals from [`crate::util::rng`]).
+//! * [`watch`]   — `--watch-model`: a file-polling thread that applies
+//!   a changed artifact file through the hot-reload path, so a
+//!   long-running server tracks a concurrent trainer's checkpoints.
+//!
+//! Forward-only plans cover all three of the paper's workload classes —
+//! MLP, CNN, and RNN (LSTM cell + head over fixed-length sequence
+//! requests, [`crate::primitives::lstm::LstmSharedWeights`]).
 //!
 //! Entry points: the `serve` CLI subcommand / `{"serve": {...}}`
 //! run-config (see `examples/serve.json`; `serve --model-path <artifact>`
@@ -50,8 +57,10 @@ pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
 pub mod model;
+pub mod watch;
 
-pub use batcher::{Response, ServeOpts, Server};
-pub use loadgen::{run_open_loop, run_open_loop_with, LoadSpec};
+pub use batcher::{ReloadHandle, Response, ServeOpts, Server};
+pub use loadgen::{drive_open_loop, run_open_loop, run_open_loop_with, LoadSpec};
 pub use metrics::{ServeReport, ServeStats};
 pub use model::{InferenceModel, NetSpec, ServeScratch};
+pub use watch::ModelWatcher;

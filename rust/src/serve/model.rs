@@ -36,10 +36,14 @@
 
 use crate::coordinator::build;
 use crate::coordinator::cnn::CnnSpec;
+use crate::coordinator::rnn::RnnSpec;
 use crate::modelio::{Arch, LayerKind, LayerParams, ModelArtifact};
 use crate::primitives::conv::{ConvConfig, ConvPrimitive, ConvSharedWeights};
 use crate::primitives::eltwise::Act;
 use crate::primitives::fc::{FcConfig, FcPrimitive, FcSharedWeights};
+use crate::primitives::lstm::{
+    LstmConfig, LstmPrimitive, LstmSharedWeights, LstmWorkspace, GATES,
+};
 use crate::primitives::pool::AvgPool;
 use crate::tensor::layout;
 use crate::util::num::largest_divisor_le as pick;
@@ -55,6 +59,9 @@ pub enum NetSpec {
     Mlp { sizes: Vec<usize> },
     /// Conv stack + pool + FC head (the training driver's topology).
     Cnn(CnnSpec),
+    /// LSTM cell over fixed-length sequences + FC head on the final
+    /// hidden state; a request is one flattened `[T][C]` sequence.
+    Rnn(RnnSpec),
 }
 
 impl NetSpec {
@@ -62,6 +69,7 @@ impl NetSpec {
         match self {
             NetSpec::Mlp { sizes } => sizes[0],
             NetSpec::Cnn(spec) => spec.input_dim(),
+            NetSpec::Rnn(spec) => spec.input_dim(),
         }
     }
 
@@ -69,6 +77,7 @@ impl NetSpec {
         match self {
             NetSpec::Mlp { sizes } => *sizes.last().unwrap(),
             NetSpec::Cnn(spec) => spec.classes,
+            NetSpec::Rnn(spec) => spec.classes,
         }
     }
 
@@ -77,6 +86,7 @@ impl NetSpec {
         match self {
             NetSpec::Mlp { sizes } => Arch::Mlp { sizes: sizes.clone() },
             NetSpec::Cnn(spec) => Arch::Cnn(spec.clone()),
+            NetSpec::Rnn(spec) => Arch::Rnn(*spec),
         }
     }
 
@@ -84,6 +94,7 @@ impl NetSpec {
         match arch {
             Arch::Mlp { sizes } => NetSpec::Mlp { sizes: sizes.clone() },
             Arch::Cnn(spec) => NetSpec::Cnn(spec.clone()),
+            Arch::Rnn(spec) => NetSpec::Rnn(*spec),
         }
     }
 }
@@ -108,6 +119,7 @@ pub fn bucket_sizes(max_batch: usize) -> Vec<usize> {
 enum PlanKind {
     Mlp { fcs: Vec<FcPrimitive> },
     Cnn { convs: Vec<ConvPrimitive>, pool: AvgPool, head: FcPrimitive },
+    Rnn { cell: LstmPrimitive, head: FcPrimitive },
 }
 
 struct Plan {
@@ -119,10 +131,12 @@ struct Plan {
 /// replaces the whole set atomically; batches in flight keep the old
 /// generation alive through their cloned [`Arc`].
 struct WeightSet {
-    /// MLP layer weights, or (for CNN) the single FC head entry.
+    /// MLP layer weights, or (for CNN/RNN) the single FC head entry.
     fc: Vec<FcSharedWeights>,
-    /// CNN conv-stack weights (empty for MLP).
+    /// CNN conv-stack weights (empty otherwise).
     conv: Vec<ConvSharedWeights>,
+    /// RNN cell weights (empty otherwise).
+    lstm: Vec<LstmSharedWeights>,
 }
 
 /// Per-worker reusable buffers for [`InferenceModel::forward_with`]. Each
@@ -137,6 +151,9 @@ pub struct ServeScratch {
     head_x: Vec<f32>,
     head_y: Vec<f32>,
     out: Vec<f32>,
+    /// RNN plans' cell workspace (gates/h/s), resized per bucket like
+    /// every other buffer.
+    lstm: LstmWorkspace,
     grows: usize,
 }
 
@@ -166,16 +183,18 @@ fn ensure(buf: &mut Vec<f32>, len: usize, grows: &mut usize) {
 
 /// Pack canonical layer params against the canonical configs — the one
 /// routine behind fresh builds, artifact loads, and hot reloads. `params`
-/// order is the artifact layer order: conv stack first, then FC layers.
+/// order is the artifact layer order: conv stack first, then LSTM cells,
+/// then FC layers.
 fn pack_weight_set(
     canon_fc: &[FcConfig],
     canon_conv: &[ConvConfig],
+    canon_lstm: &[LstmConfig],
     params: &[LayerParams],
 ) -> Result<WeightSet> {
-    if params.len() != canon_fc.len() + canon_conv.len() {
+    if params.len() != canon_fc.len() + canon_conv.len() + canon_lstm.len() {
         bail!(
             "model has {} layers, artifact has {}",
-            canon_fc.len() + canon_conv.len(),
+            canon_fc.len() + canon_conv.len() + canon_lstm.len(),
             params.len()
         );
     }
@@ -192,20 +211,34 @@ fn pack_weight_set(
             Ok(ConvSharedWeights::pack(cfg, &p.w, &p.b))
         })
         .collect::<Result<Vec<_>>>()?;
-    let fc = canon_fc
+    let lstm = canon_lstm
         .iter()
-        .zip(&params[canon_conv.len()..])
+        .zip(&params[canon_conv.len()..canon_conv.len() + canon_lstm.len()])
         .enumerate()
         .map(|(i, (cfg, p))| {
             p.expect(
                 &format!("serving layer {}", canon_conv.len() + i),
+                LayerKind::Lstm,
+                &[cfg.k, cfg.c],
+            )?;
+            let (w_gates, r_gates) = p.w.split_at(GATES * cfg.k * cfg.c);
+            Ok(LstmSharedWeights::pack(cfg, w_gates, r_gates, &p.b))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let fc = canon_fc
+        .iter()
+        .zip(&params[canon_conv.len() + canon_lstm.len()..])
+        .enumerate()
+        .map(|(i, (cfg, p))| {
+            p.expect(
+                &format!("serving layer {}", canon_conv.len() + canon_lstm.len() + i),
                 LayerKind::Fc,
                 &[cfg.k, cfg.c],
             )?;
             Ok(FcSharedWeights::pack(cfg, &p.w, &p.b))
         })
         .collect::<Result<Vec<_>>>()?;
-    Ok(WeightSet { fc, conv })
+    Ok(WeightSet { fc, conv, lstm })
 }
 
 /// A forward-only model: per-bucket plans over one shared weight copy per
@@ -216,11 +249,13 @@ pub struct InferenceModel {
     buckets: Vec<usize>,
     plans: Vec<Plan>,
     /// Canonical FC configs the packed layouts follow (all layers for
-    /// MLP; just the head for CNN) — what a reloaded artifact re-packs
-    /// against.
+    /// MLP; just the head for CNN/RNN) — what a reloaded artifact
+    /// re-packs against.
     canon_fc: Vec<FcConfig>,
-    /// Canonical conv configs (empty for MLP).
+    /// Canonical conv configs (empty otherwise).
     canon_conv: Vec<ConvConfig>,
+    /// Canonical LSTM cell configs (empty otherwise).
+    canon_lstm: Vec<LstmConfig>,
     /// The current weight generation, swapped whole on reload.
     weights: RwLock<Arc<WeightSet>>,
     reloads: AtomicU64,
@@ -296,6 +331,39 @@ impl InferenceModel {
             .expect("freshly generated params always match their own configs")
     }
 
+    /// Build an RNN serving model (LSTM cell + FC head on the final
+    /// hidden state) with random-init weights; same sharing/tuning
+    /// contract as [`Self::new_mlp`].
+    pub fn new_rnn(
+        spec: &RnnSpec,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        rng: &mut Rng,
+    ) -> InferenceModel {
+        let (k, c) = (spec.k, spec.c);
+        let wscale = (1.0 / c as f32).sqrt();
+        let rscale = (1.0 / k as f32).sqrt();
+        // Canonical gate-major cell params ([4][K][C] | [4][K][K]), then
+        // the head — the artifact layer layout.
+        let mut w = rng.vec_f32(GATES * k * c, -wscale, wscale);
+        w.extend(rng.vec_f32(GATES * k * k, -rscale, rscale));
+        let mut b = vec![0.0f32; GATES * k];
+        b[2 * k..3 * k].fill(1.0); // forget-gate bias, gate order i,g,f,o
+        let hscale = (2.0 / k as f32).sqrt();
+        let params = vec![
+            LayerParams::lstm(k, c, w, b),
+            LayerParams::fc(
+                spec.classes,
+                k,
+                rng.vec_f32(spec.classes * k, -hscale, hscale),
+                rng.vec_f32(spec.classes, -0.1, 0.1),
+            ),
+        ];
+        InferenceModel::build_rnn(spec, max_batch, nthreads, tuned, &params)
+            .expect("freshly generated params always match their own configs")
+    }
+
     /// Build from a [`NetSpec`] (the run-config dispatch point).
     pub fn from_spec(
         spec: &NetSpec,
@@ -309,6 +377,7 @@ impl InferenceModel {
                 InferenceModel::new_mlp(sizes, max_batch, nthreads, tuned, rng)
             }
             NetSpec::Cnn(c) => InferenceModel::new_cnn(c, max_batch, nthreads, tuned, rng),
+            NetSpec::Rnn(r) => InferenceModel::new_rnn(r, max_batch, nthreads, tuned, rng),
         }
     }
 
@@ -331,6 +400,9 @@ impl InferenceModel {
             Arch::Cnn(spec) => {
                 InferenceModel::build_cnn(spec, max_batch, nthreads, tuned, &art.layers)
             }
+            Arch::Rnn(spec) => {
+                InferenceModel::build_rnn(spec, max_batch, nthreads, tuned, &art.layers)
+            }
         }
     }
 
@@ -347,7 +419,7 @@ impl InferenceModel {
         // (chain invariant bc_i = bk_{i-1} holds by construction).
         let canon = build::mlp_chain_configs(sizes, max_batch, nthreads, false);
         // One packed weight allocation per layer, shared by every plan.
-        let ws = pack_weight_set(&canon, &[], params)?;
+        let ws = pack_weight_set(&canon, &[], &[], params)?;
         let plans = buckets
             .iter()
             .map(|&b| {
@@ -391,6 +463,7 @@ impl InferenceModel {
             plans,
             canon_fc: canon,
             canon_conv: Vec::new(),
+            canon_lstm: Vec::new(),
             weights: RwLock::new(Arc::new(ws)),
             reloads: AtomicU64::new(0),
         })
@@ -413,7 +486,7 @@ impl InferenceModel {
         let feat = last.k * pcfg0.p() * pcfg0.q();
         let head_canon = build::head_fc_config(max_batch, feat, spec.classes, nthreads, false);
         let canon_fc = vec![head_canon];
-        let ws = pack_weight_set(&canon_fc, &canon, params)?;
+        let ws = pack_weight_set(&canon_fc, &canon, &[], params)?;
         let plans = buckets
             .iter()
             .map(|&b| {
@@ -460,6 +533,69 @@ impl InferenceModel {
             plans,
             canon_fc,
             canon_conv: canon,
+            canon_lstm: Vec::new(),
+            weights: RwLock::new(Arc::new(ws)),
+            reloads: AtomicU64::new(0),
+        })
+    }
+
+    fn build_rnn(
+        spec: &RnnSpec,
+        max_batch: usize,
+        nthreads: usize,
+        tuned: bool,
+        params: &[LayerParams],
+    ) -> Result<InferenceModel> {
+        assert!(spec.classes >= 2, "rnn needs at least two classes");
+        assert!(spec.c >= 1 && spec.k >= 1 && spec.t >= 1, "rnn c/k/t must be >= 1");
+        let buckets = bucket_sizes(max_batch);
+        // Canonical cell + head configs from the shared construction
+        // module: the feature blocking (bc, bk) depends only on (c, k),
+        // so the packed weights are shareable across every batch bucket
+        // and byte-compatible with the training driver's packing.
+        let canon_cell = build::rnn_cell_config(spec, max_batch, nthreads, false);
+        let head_canon = build::head_fc_config(max_batch, spec.k, spec.classes, nthreads, false);
+        let canon_fc = vec![head_canon];
+        let canon_lstm = vec![canon_cell];
+        let ws = pack_weight_set(&canon_fc, &[], &canon_lstm, params)?;
+        let plans = buckets
+            .iter()
+            .map(|&b| {
+                let mut ccfg = LstmConfig::new(b, spec.c, spec.k, spec.t)
+                    .with_blocking(pick(b, 24), canon_cell.bc, canon_cell.bk)
+                    .with_threads(nthreads);
+                if tuned {
+                    // Per-bucket cache key (includes T); keep the tuned
+                    // batch block, pin the feature blocks back to the
+                    // shared packed layout.
+                    let t = crate::autotune::tuned_lstm_config(ccfg);
+                    ccfg = t.with_blocking(t.bn, canon_cell.bc, canon_cell.bk);
+                }
+                assert!(ws.lstm[0].matches(&ccfg), "bucket plan must match shared weights");
+                let mut hcfg = FcConfig::new(b, spec.k, spec.classes, Act::Identity)
+                    .with_blocking(pick(b, 24), head_canon.bc, head_canon.bk)
+                    .with_threads(nthreads);
+                if tuned {
+                    let t = crate::autotune::tuned_fc_config(hcfg);
+                    hcfg = t.with_blocking(t.bn, head_canon.bc, head_canon.bk);
+                }
+                assert!(ws.fc[0].matches(&hcfg));
+                Plan {
+                    batch: b,
+                    kind: PlanKind::Rnn {
+                        cell: LstmPrimitive::new(ccfg),
+                        head: FcPrimitive::new(hcfg),
+                    },
+                }
+            })
+            .collect();
+        Ok(InferenceModel {
+            spec: NetSpec::Rnn(*spec),
+            buckets,
+            plans,
+            canon_fc,
+            canon_conv: Vec::new(),
+            canon_lstm,
             weights: RwLock::new(Arc::new(ws)),
             reloads: AtomicU64::new(0),
         })
@@ -479,7 +615,7 @@ impl InferenceModel {
             );
         }
         art.validate()?;
-        let ws = pack_weight_set(&self.canon_fc, &self.canon_conv, &art.layers)?;
+        let ws = pack_weight_set(&self.canon_fc, &self.canon_conv, &self.canon_lstm, &art.layers)?;
         *self.weights.write().unwrap() = Arc::new(ws);
         self.reloads.fetch_add(1, Ordering::SeqCst);
         Ok(())
@@ -526,6 +662,7 @@ impl InferenceModel {
             .conv
             .iter()
             .map(|w| w.alloc_id())
+            .chain(ws.lstm.iter().map(|w| w.alloc_id()))
             .chain(ws.fc.iter().map(|w| w.alloc_id()))
             .collect();
         ids.sort_unstable();
@@ -533,9 +670,10 @@ impl InferenceModel {
         ids
     }
 
-    /// Number of weight-bearing layers (conv stack + FC layers).
+    /// Number of weight-bearing layers (conv stack + LSTM cells + FC
+    /// layers).
     pub fn layer_count(&self) -> usize {
-        self.canon_conv.len() + self.canon_fc.len()
+        self.canon_conv.len() + self.canon_lstm.len() + self.canon_fc.len()
     }
 
     /// Forward `bucket` samples (plain `[bucket][input_dim]`, padded rows
@@ -657,6 +795,47 @@ impl InferenceModel {
                     &mut scratch.out,
                 );
             }
+            PlanKind::Rnn { cell, head } => {
+                let ccfg = cell.cfg;
+                let (t, c, k) = (ccfg.t, ccfg.c, ccfg.k);
+                // Rows are flattened [T][C] sequences; the cell wants
+                // time-major [T][bucket][C].
+                ensure(&mut scratch.a, t * bucket * c, &mut scratch.grows);
+                for ni in 0..bucket {
+                    for ti in 0..t {
+                        let src = &x[(ni * t + ti) * c..(ni * t + ti + 1) * c];
+                        let dst = (ti * bucket + ni) * c;
+                        scratch.a[dst..dst + c].copy_from_slice(src);
+                    }
+                }
+                let nk = bucket * k;
+                ensure(&mut scratch.lstm.gates, GATES * t * nk, &mut scratch.grows);
+                ensure(&mut scratch.lstm.h, (t + 1) * nk, &mut scratch.grows);
+                ensure(&mut scratch.lstm.s, (t + 1) * nk, &mut scratch.grows);
+                cell.forward_shared(&scratch.a, None, None, &ws.lstm[0], &mut scratch.lstm);
+                let h_last = scratch.lstm.h_t(&ccfg, t - 1);
+                let hcfg = head.cfg;
+                ensure(&mut scratch.head_x, bucket * hcfg.c, &mut scratch.grows);
+                layout::pack_act_2d_into(
+                    h_last,
+                    bucket,
+                    hcfg.c,
+                    hcfg.bn,
+                    hcfg.bc,
+                    &mut scratch.head_x,
+                );
+                ensure(&mut scratch.head_y, bucket * hcfg.k, &mut scratch.grows);
+                head.forward_shared(&scratch.head_x, &ws.fc[0], &mut scratch.head_y);
+                ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
+                layout::unpack_act_2d_into(
+                    &scratch.head_y,
+                    bucket,
+                    hcfg.k,
+                    hcfg.bn,
+                    hcfg.bk,
+                    &mut scratch.out,
+                );
+            }
         }
         &scratch.out
     }
@@ -682,6 +861,10 @@ mod tests {
             pool_stride: 1,
             classes: 3,
         }
+    }
+
+    fn tiny_rnn() -> RnnSpec {
+        RnnSpec { c: 6, k: 12, t: 4, classes: 3 }
     }
 
     #[test]
@@ -758,6 +941,90 @@ mod tests {
     }
 
     #[test]
+    fn co_batched_rows_bit_identical_to_solo_rnn() {
+        // Pad-to-bucket co-batched sequences must be bit-identical to a
+        // solo batch-1 run — the acceptance invariant for sequence
+        // requests (the cell's per-row accumulation order is independent
+        // of the batch block).
+        let model = InferenceModel::new_rnn(&tiny_rnn(), 8, 1, false, &mut Rng::new(17));
+        let mut rng = Rng::new(18);
+        let dim = model.input_dim();
+        let samples: Vec<Vec<f32>> = (0..3).map(|_| rng.vec_f32(dim, -1.0, 1.0)).collect();
+        let mut x = vec![0.0f32; 4 * dim];
+        for (i, s) in samples.iter().enumerate() {
+            x[i * dim..(i + 1) * dim].copy_from_slice(s);
+        }
+        let batched = model.forward(4, &x);
+        let classes = model.classes();
+        for (i, s) in samples.iter().enumerate() {
+            let solo = model.forward(1, s);
+            assert_eq!(
+                &batched[i * classes..(i + 1) * classes],
+                &solo[..],
+                "rnn row {} must be bit-identical to its solo batch-1 run",
+                i
+            );
+        }
+    }
+
+    #[test]
+    fn rnn_packed_weights_allocated_once_per_layer() {
+        let rnn = InferenceModel::new_rnn(&tiny_rnn(), 8, 1, false, &mut Rng::new(19));
+        assert_eq!(rnn.buckets().len(), 4, "1/2/4/8");
+        assert_eq!(rnn.layer_count(), 2, "cell + head");
+        assert_eq!(rnn.weight_alloc_ids().len(), 2, "2 layers -> 2 allocations, not 8");
+    }
+
+    #[test]
+    fn from_artifact_serves_trained_rnn_bit_identically() {
+        use crate::coordinator::rnn::RnnModel;
+        // Train the sequence classifier, lift it through the binary
+        // artifact format, serve it: every bucket's forward must be
+        // bit-identical to the trained model's forward on the same rows.
+        let spec = tiny_rnn();
+        let mut rng = Rng::new(91);
+        let data = crate::coordinator::data::ClassifyData::synth_sequences(
+            64,
+            spec.t,
+            spec.c,
+            spec.classes,
+            0.2,
+            &mut rng,
+        );
+        let mut trained = RnnModel::new(&spec, 4, 1, &mut rng);
+        for step in 0..10 {
+            let (x, l) = data.batch(step, 4);
+            trained.train_step(&x, &l, 0.1);
+        }
+        let art = ModelArtifact::new(
+            Arch::Rnn(spec),
+            crate::modelio::TrainMeta::fresh(91),
+            trained.export_weights(),
+        );
+        let art = ModelArtifact::decode(&art.encode()).unwrap();
+        let served = InferenceModel::from_artifact(&art, 4, 1, false).unwrap();
+        let x = Rng::new(92).vec_f32(4 * spec.input_dim(), -1.0, 1.0);
+        let want = trained.forward(&x);
+        let got = served.forward(4, &x);
+        assert_eq!(want, got, "served RNN logits must be bit-identical to the trained model");
+        // And per-row at bucket 1.
+        let dim = spec.input_dim();
+        for i in 0..3 {
+            let solo = served.forward(1, &x[i * dim..(i + 1) * dim]);
+            assert_eq!(&want[i * spec.classes..(i + 1) * spec.classes], &solo[..], "row {}", i);
+        }
+        // Reload with a different arch is a clear error.
+        let other = RnnSpec { k: 8, ..spec };
+        let donor = RnnModel::new(&other, 4, 1, &mut Rng::new(1));
+        let bad = ModelArtifact::new(
+            Arch::Rnn(other),
+            crate::modelio::TrainMeta::fresh(1),
+            donor.export_weights(),
+        );
+        assert!(served.reload(&bad).is_err(), "reload must reject a different arch");
+    }
+
+    #[test]
     fn tuned_bucket_plans_share_weights_and_match_untuned_math() {
         use crate::autotune::{cache, Candidate, TuneEntry, TuningCache};
         // Seed the cache for the bucket-2 layer-0 shape only, with a
@@ -814,6 +1081,7 @@ mod tests {
         for model in [
             InferenceModel::new_mlp(&[10, 24, 4], 8, 1, false, &mut rng),
             InferenceModel::new_cnn(&tiny_cnn(), 8, 1, false, &mut rng),
+            InferenceModel::new_rnn(&tiny_rnn(), 8, 1, false, &mut rng),
         ] {
             let dim = model.input_dim();
             let mut scratch = ServeScratch::new();

@@ -1,0 +1,280 @@
+//! `serve --watch-model`: file-polling auto-reload for a long-running
+//! server.
+//!
+//! [`crate::serve::Server::reload`] has been API-level since the model
+//! artifact subsystem landed; this module closes the loop for a server
+//! that outlives its operator. A [`ModelWatcher`] thread polls the
+//! artifact file's **header signature** (payload length + CRC — content
+//! derived, so a rewrite is caught even on filesystems with coarse mtime
+//! granularity) and, on change, loads + validates the artifact and
+//! applies it through a [`ReloadHandle`] — the exact same atomic
+//! weight-generation swap as an API reload, so in-flight batches still
+//! finish on the weights they pinned and every applied swap lands in the
+//! serve metrics (`ServeReport::reloads`).
+//!
+//! Trainer checkpoints are written atomically (temp file + rename), so a
+//! poll never observes a half-written artifact: it sees either the old
+//! file or the new one. A load or validation failure (torn copy from a
+//! non-atomic writer, schema mismatch, different arch) is logged and
+//! skipped — the server keeps answering on its current weights, and the
+//! next signature change is tried afresh.
+
+use crate::modelio::ModelArtifact;
+use crate::serve::batcher::ReloadHandle;
+use crate::{log_info, log_warn};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// The polling reload thread. Spawn with [`ModelWatcher::spawn`]; stop
+/// (and join) with [`ModelWatcher::stop`].
+pub struct ModelWatcher {
+    stop: Arc<AtomicBool>,
+    applied: Arc<AtomicU64>,
+    handle: JoinHandle<()>,
+}
+
+impl ModelWatcher {
+    /// Watch `path` every `poll` interval, applying changed artifacts
+    /// through `reload`. Change detection compares the artifact file's
+    /// **header signature** (magic + schema version + payload length +
+    /// CRC — see [`file_sig`]), which is content-derived: a rewrite is
+    /// detected even when the filesystem's mtime granularity would
+    /// swallow it. `loaded` is the artifact the server was built from —
+    /// its re-encoded header is the baseline, so a checkpoint written
+    /// *between* the server's load and this spawn is picked up on the
+    /// first poll instead of silently becoming the baseline. With
+    /// `loaded: None` the baseline is whatever is on disk at spawn.
+    pub fn spawn(
+        reload: ReloadHandle,
+        path: impl Into<PathBuf>,
+        poll: Duration,
+        loaded: Option<&ModelArtifact>,
+    ) -> ModelWatcher {
+        let path = path.into();
+        let stop = Arc::new(AtomicBool::new(false));
+        let applied = Arc::new(AtomicU64::new(0));
+        let stop_flag = Arc::clone(&stop);
+        let applied_ctr = Arc::clone(&applied);
+        // `save` writes exactly `encode()`'s bytes, so the loaded
+        // artifact's re-encoded header equals the on-disk header iff the
+        // file is still the one the server loaded.
+        let baseline = loaded.map(|art| art.encode()[..SIG_LEN].to_vec());
+        let handle = std::thread::spawn(move || {
+            let mut last = baseline.or_else(|| file_sig(&path));
+            while !stop_flag.load(Ordering::SeqCst) {
+                std::thread::sleep(poll);
+                let cur = file_sig(&path);
+                if cur.is_none() || cur == last {
+                    // Missing file: keep serving the current weights and
+                    // keep the old baseline, so the file *reappearing*
+                    // with new contents (next atomic rename) is picked up.
+                    continue;
+                }
+                last = cur;
+                match ModelArtifact::load(&path) {
+                    Ok(art) => match reload.reload(&art) {
+                        Ok(()) => {
+                            applied_ctr.fetch_add(1, Ordering::SeqCst);
+                            log_info!(
+                                "watch-model: reloaded {} ({}, epoch {}, acc {:.1}%)",
+                                path.display(),
+                                art.arch.describe(),
+                                art.meta.epoch,
+                                art.meta.accuracy * 100.0
+                            );
+                        }
+                        Err(e) => {
+                            log_warn!("watch-model: reload of {} rejected: {:#}", path.display(), e)
+                        }
+                    },
+                    Err(e) => log_warn!("watch-model: {:#}", e),
+                }
+            }
+        });
+        ModelWatcher { stop, applied, handle }
+    }
+
+    /// Reloads this watcher has successfully applied so far.
+    pub fn reloads_applied(&self) -> u64 {
+        self.applied.load(Ordering::SeqCst)
+    }
+
+    /// Stop polling and join the thread; returns the number of reloads
+    /// the watcher applied over its lifetime.
+    pub fn stop(self) -> u64 {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle.join().expect("model watcher panicked");
+        self.applied.load(Ordering::SeqCst)
+    }
+}
+
+/// Artifact-header length: magic (8) + schema version (4) + payload
+/// length (8) + payload CRC-32 (4) — see [`crate::modelio`]. The CRC
+/// makes the signature content-derived.
+const SIG_LEN: usize = 24;
+
+/// The first [`SIG_LEN`] bytes of the file (fewer if the file is
+/// shorter), or `None` if it cannot be opened. Two artifact files have
+/// equal signatures iff their payload length and checksum agree —
+/// change detection that is immune to coarse filesystem mtimes.
+fn file_sig(path: &Path) -> Option<Vec<u8>> {
+    let mut buf = Vec::with_capacity(SIG_LEN);
+    std::fs::File::open(path)
+        .ok()?
+        .take(SIG_LEN as u64)
+        .read_to_end(&mut buf)
+        .ok()?;
+    Some(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::{MlpModel, Model};
+    use crate::modelio::{Arch, TrainMeta};
+    use crate::serve::batcher::{Response, ServeOpts, Server};
+    use crate::serve::model::InferenceModel;
+    use crate::util::rng::Rng;
+    use std::time::Instant;
+
+    fn artifact_for_seed(sizes: &[usize], seed: u64) -> ModelArtifact {
+        let model = MlpModel::new(sizes, 4, 1, &mut Rng::new(seed));
+        ModelArtifact::new(
+            Arch::Mlp { sizes: sizes.to_vec() },
+            TrainMeta::fresh(seed),
+            model.export_weights(),
+        )
+    }
+
+    #[test]
+    fn watcher_applies_new_artifact_and_metrics_count_it() {
+        let dir = std::env::temp_dir().join("brgemm_watch_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        let sizes = [6usize, 10, 3];
+        let art1 = artifact_for_seed(&sizes, 1);
+        art1.save(&path).unwrap();
+
+        let model = InferenceModel::from_artifact(&art1, 4, 1, false).unwrap();
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 1, ..ServeOpts::default() },
+        );
+        let watcher = ModelWatcher::spawn(
+            server.reload_handle(),
+            &path,
+            Duration::from_millis(2),
+            Some(&art1),
+        );
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(watcher.reloads_applied(), 0, "the loaded artifact must not trigger");
+
+        // A new artifact lands via the trainer's atomic rename; detection
+        // is by header signature (length + CRC), not mtime, so no
+        // granularity games are needed.
+        let art2 = artifact_for_seed(&sizes, 2);
+        art2.save(&path).unwrap();
+        let t0 = Instant::now();
+        while watcher.reloads_applied() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(watcher.reloads_applied() >= 1, "watcher never picked up the new artifact");
+
+        // Requests submitted after the reload answer with the new weights.
+        let x = Rng::new(3).vec_f32(6, -1.0, 1.0);
+        let id = server.submit(x.clone());
+        let report = server.shutdown();
+        let applied = watcher.stop();
+        assert!(report.reloads >= applied, "watch reloads land in the serve metrics");
+        assert!(applied >= 1);
+        let responses: Vec<Response> = rx.iter().collect();
+        let r = responses.iter().find(|r| r.id == id).expect("response delivered");
+        let new_oracle = InferenceModel::from_artifact(&art2, 4, 1, false).unwrap();
+        assert_eq!(
+            r.logits,
+            new_oracle.forward(1, &x),
+            "post-reload responses come from the watched artifact"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_landing_before_spawn_is_not_missed() {
+        // Regression: the baseline is the artifact the server *loaded*,
+        // not whatever is on disk at spawn — a checkpoint written in the
+        // window between the server's load and the watcher's spawn must
+        // be applied on the first poll, not silently become the baseline.
+        let dir = std::env::temp_dir().join("brgemm_watch_model_window_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        let sizes = [6usize, 10, 3];
+        let art1 = artifact_for_seed(&sizes, 1);
+        art1.save(&path).unwrap();
+        let model = InferenceModel::from_artifact(&art1, 4, 1, false).unwrap();
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 1, ..ServeOpts::default() },
+        );
+        // The trainer checkpoints *before* the watcher is up.
+        let art2 = artifact_for_seed(&sizes, 2);
+        art2.save(&path).unwrap();
+        let watcher = ModelWatcher::spawn(
+            server.reload_handle(),
+            &path,
+            Duration::from_millis(2),
+            Some(&art1),
+        );
+        let t0 = Instant::now();
+        while watcher.reloads_applied() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(watcher.reloads_applied(), 1, "pre-spawn checkpoint must be applied");
+        let _ = server.shutdown();
+        watcher.stop();
+        drop(rx);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn watcher_skips_bad_files_and_recovers() {
+        // A corrupt write must be logged + skipped (server keeps its
+        // weights), and a later good artifact must still be applied.
+        let dir = std::env::temp_dir().join("brgemm_watch_model_bad_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.bin");
+        let sizes = [6usize, 10, 3];
+        let art1 = artifact_for_seed(&sizes, 1);
+        art1.save(&path).unwrap();
+        let model = InferenceModel::from_artifact(&art1, 4, 1, false).unwrap();
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 1, ..ServeOpts::default() },
+        );
+        let watcher = ModelWatcher::spawn(
+            server.reload_handle(),
+            &path,
+            Duration::from_millis(2),
+            Some(&art1),
+        );
+        std::fs::write(&path, b"not an artifact").unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(watcher.reloads_applied(), 0, "garbage must not be applied");
+        // Recovery: a good artifact replaces the garbage — detected by
+        // signature change regardless of how close the writes landed.
+        let art2 = artifact_for_seed(&sizes, 2);
+        art2.save(&path).unwrap();
+        let t0 = Instant::now();
+        while watcher.reloads_applied() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(watcher.reloads_applied(), 1, "recovery artifact applied");
+        let _ = server.shutdown();
+        watcher.stop();
+        drop(rx);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

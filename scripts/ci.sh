@@ -37,6 +37,19 @@ rm -rf checkpoints
 ./target/release/brgemm-dl serve --model-path checkpoints/mlp.bin \
     --min-accuracy 0.5 --requests 300 --rate 50000 --serve-workers 2
 
+echo "== rnn train -> checkpoint -> resume -> serve smoke =="
+# The sequence workload through the same pipeline: train the LSTM
+# classifier 2 epochs with per-epoch checkpointing, resume the artifact
+# for a 3rd epoch, then serve the trained weights and replay the training
+# distribution — the run fails unless served responses classify well
+# above chance (4 classes), i.e. unless learned recurrent weights flowed
+# train -> artifact -> serve.
+./target/release/brgemm-dl run --config examples/rnn.json
+./target/release/brgemm-dl run --config examples/rnn.json \
+    --epochs 3 --resume checkpoints/rnn.bin
+./target/release/brgemm-dl serve --model-path checkpoints/rnn.bin \
+    --min-accuracy 0.5 --requests 200 --rate 20000 --serve-workers 2
+
 echo "== cargo fmt --check =="
 if cargo fmt --check; then
     echo "formatting clean"
