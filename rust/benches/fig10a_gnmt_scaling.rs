@@ -18,6 +18,7 @@ mod common;
 use brgemm_dl::coordinator::dist::NetworkModel;
 use brgemm_dl::coordinator::rnn::{RnnModel, RnnSpec};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
+use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -79,6 +80,7 @@ fn main() {
         "\n{:<16} {:>6} {:>12} {:>10} {:>10} {:>8}",
         "batch(paper)", "nodes", "compute ms", "comm ms", "KWPS", "eff%"
     );
+    let mut rows: Vec<Json> = Vec::new();
     for (g, paper_g) in globals {
         let mut base: Option<f64> = None;
         for &p in &nodes {
@@ -99,6 +101,13 @@ fn main() {
                 kwps,
                 eff
             );
+            rows.push(obj([
+                ("global_batch", g.into()),
+                ("paper_batch", paper_g.into()),
+                ("nodes", p.into()),
+                ("kwps", kwps.into()),
+                ("eff_pct", eff.into()),
+            ]));
         }
         println!();
     }
@@ -115,6 +124,7 @@ fn main() {
         g0, paper_g0
     );
     println!("{:<6} {:>12} {:>12} {:>10} {:>8}", "nodes", "µs/word", "compute ms", "KWPS", "eff%");
+    let mut trained_rows: Vec<Json> = Vec::new();
     let mut base: Option<f64> = None;
     for &p in &nodes {
         let local = (g0 / p).max(1);
@@ -143,8 +153,24 @@ fn main() {
             kwps,
             eff
         );
+        trained_rows.push(obj([
+            ("global_batch", g0.into()),
+            ("nodes", p.into()),
+            ("kwps", kwps.into()),
+            ("eff_pct", eff.into()),
+        ]));
     }
     println!();
+
+    let out = obj([
+        ("title", "Fig10a: GNMT LSTM distributed strong scaling".into()),
+        ("rows", Json::Arr(rows)),
+        ("trained_rows", Json::Arr(trained_rows)),
+    ]);
+    std::fs::create_dir_all("bench_results").ok();
+    if std::fs::write("bench_results/fig10a.json", out.to_string_pretty()).is_ok() {
+        println!("rows written to bench_results/fig10a.json");
+    }
 
     common::paper_note(
         "Fig10a",

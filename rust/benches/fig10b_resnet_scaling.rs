@@ -19,6 +19,7 @@ mod common;
 
 use brgemm_dl::coordinator::dist::{strong_scaling, NetworkModel};
 use brgemm_dl::primitives::conv::ConvPrimitive;
+use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
 use std::time::Instant;
 
@@ -66,6 +67,7 @@ fn main() {
         "nodes", "compute ms", "comm ms", "img/s", "eff%"
     );
     // Weak scaling like the paper (fixed local batch): global = 56×nodes.
+    let mut rows: Vec<Json> = Vec::new();
     let mut base: Option<f64> = None;
     for &p in &nodes {
         let compute = per_image * local_batch as f64;
@@ -82,10 +84,18 @@ fn main() {
             imgs,
             eff
         );
+        rows.push(obj([
+            ("nodes", p.into()),
+            ("compute_ms", (compute * 1e3).into()),
+            ("comm_ms", (comm * 1e3).into()),
+            ("imgs_per_s", imgs.into()),
+            ("eff_pct", eff.into()),
+        ]));
     }
     // Also show the strong-scaling view at a fixed global batch.
     println!("\nstrong scaling at global batch 224:");
     let pts = strong_scaling(&net, &nodes, 224, per_image, 0.0, grad_bytes, 1.0);
+    let mut strong_rows: Vec<Json> = Vec::new();
     for p in &pts {
         println!(
             "  {:>2} nodes: {:>8.1} img/s  eff {:>5.1}%",
@@ -93,6 +103,21 @@ fn main() {
             p.throughput,
             100.0 * p.efficiency
         );
+        strong_rows.push(obj([
+            ("nodes", p.nodes.into()),
+            ("imgs_per_s", p.throughput.into()),
+            ("eff_pct", (100.0 * p.efficiency).into()),
+        ]));
+    }
+    let out = obj([
+        ("title", "Fig10b: ResNet-50 distributed training scaling".into()),
+        ("per_image_ms", (per_image * 1e3).into()),
+        ("rows", Json::Arr(rows)),
+        ("strong_rows", Json::Arr(strong_rows)),
+    ]);
+    std::fs::create_dir_all("bench_results").ok();
+    if std::fs::write("bench_results/fig10b.json", out.to_string_pretty()).is_ok() {
+        println!("rows written to bench_results/fig10b.json");
     }
     common::paper_note(
         "Fig10b",

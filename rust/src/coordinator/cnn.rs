@@ -31,9 +31,11 @@ use crate::primitives::conv::{ConvConfig, ConvPrimitive};
 use crate::primitives::eltwise::{act_backward, Act};
 use crate::primitives::fc::FcPrimitive;
 use crate::primitives::pool::{AvgPool, PoolConfig};
+use crate::telemetry::{self, Metrics};
 use crate::tensor::layout;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::time::Instant;
 
 /// Shape of one conv stage (plain dims; blocking is chosen internally and
 /// possibly overridden by the tuning cache).
@@ -178,6 +180,9 @@ pub struct CnnModel {
     /// The head's packed input, kept for its update pass.
     head_x: Vec<f32>,
     head: FcHead,
+    /// Per-pass training breakdown (incl. the pool stage) — only fed
+    /// while telemetry is enabled.
+    metrics: Metrics,
 }
 
 impl CnnModel {
@@ -262,6 +267,7 @@ impl CnnModel {
             pool_y: vec![0.0; pcfg.output_len()],
             head_x: Vec::new(),
             head,
+            metrics: Metrics::new(),
         }
     }
 
@@ -296,19 +302,40 @@ impl CnnModel {
             };
         }
         let lastl = self.convs.last().unwrap();
+        let t_pool = telemetry::enabled().then(Instant::now);
         self.pool.forward(&lastl.y, &mut self.pool_y);
+        if let Some(t) = t_pool {
+            self.metrics.observe_secs("pool", t.elapsed().as_secs_f64());
+        }
         let hcfg = self.head.prim.cfg;
         self.head_x = layout::pack_act_2d(&self.pool_y, n, hcfg.c, hcfg.bn, hcfg.bc);
         self.head.prim.forward(&self.head_x, &self.head.w, &self.head.b, &mut self.head.y);
         layout::unpack_act_2d(&self.head.y, n, hcfg.k, hcfg.bn, hcfg.bk)
     }
 
-    /// One SGD step; returns the mean cross-entropy loss.
+    /// One SGD step; returns the mean cross-entropy loss. While telemetry
+    /// is enabled, the per-pass breakdown (fwd / bwd incl. the loss / upd,
+    /// plus the pool stage timed inside forward/backward) lands in
+    /// [`Model::metrics`]; disabled, the step pays one branch.
     pub fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32 {
+        if !telemetry::enabled() {
+            let logits = self.forward(x);
+            let (loss, dlogits) = softmax_xent(&logits, labels, self.classes);
+            self.backward(&dlogits);
+            self.apply_sgd(lr);
+            return loss;
+        }
+        let t0 = Instant::now();
         let logits = self.forward(x);
+        let t1 = Instant::now();
         let (loss, dlogits) = softmax_xent(&logits, labels, self.classes);
         self.backward(&dlogits);
+        let t2 = Instant::now();
         self.apply_sgd(lr);
+        self.metrics.observe_secs("fwd", (t1 - t0).as_secs_f64());
+        self.metrics.observe_secs("bwd", (t2 - t1).as_secs_f64());
+        self.metrics.observe_secs("upd", t2.elapsed().as_secs_f64());
+        self.metrics.inc("steps", 1);
         loss
     }
 
@@ -326,7 +353,11 @@ impl CnnModel {
         // Pool-output gradient, plain [n][feat] = the pooled blocked layout.
         let dpool = layout::unpack_act_2d(&dpool_packed, n, hcfg.c, hcfg.bn, hcfg.bc);
         // Through the pool into the last conv's output geometry.
+        let t_pool = telemetry::enabled().then(Instant::now);
         let mut dy = self.pool.backward(&dpool);
+        if let Some(t) = t_pool {
+            self.metrics.observe_secs("pool", t.elapsed().as_secs_f64());
+        }
         for i in (0..self.convs.len()).rev() {
             let l = &mut self.convs[i];
             // Chain through the fused ReLU: dz = dy ∘ relu'(y).
@@ -496,6 +527,12 @@ impl Model for CnnModel {
         self.head.w = layout::pack_weights_2d(&p.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc);
         self.head.b = p.b.clone();
         Ok(())
+    }
+    fn metrics(&self) -> Option<&Metrics> {
+        Some(&self.metrics)
+    }
+    fn metrics_mut(&mut self) -> Option<&mut Metrics> {
+        Some(&mut self.metrics)
     }
 }
 

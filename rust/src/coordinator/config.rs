@@ -91,6 +91,9 @@ pub struct ServeConfig {
     /// atomic checkpoint renames are picked up automatically; reload
     /// events land in the serve metrics).
     pub watch_model: bool,
+    /// Log a point-in-time serving snapshot (one compact JSON line at
+    /// info level) every this many seconds while the load runs.
+    pub metrics_every: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -104,6 +107,7 @@ impl Default for ServeConfig {
             model_path: None,
             min_accuracy: None,
             watch_model: false,
+            metrics_every: None,
         }
     }
 }
@@ -128,6 +132,11 @@ impl ServeConfig {
         }
         if self.watch_model && self.model_path.is_none() {
             bail!("serve.watch_model requires serve.model_path (the artifact file to watch)");
+        }
+        if let Some(e) = self.metrics_every {
+            if e <= 0.0 || !e.is_finite() {
+                bail!("serve.metrics_every must be a positive, finite number of seconds");
+            }
         }
         Ok(())
     }
@@ -183,6 +192,10 @@ pub struct RunConfig {
     pub epochs: Option<usize>,
     /// Periodic training snapshots to a model artifact.
     pub checkpoint: Option<CheckpointConfig>,
+    /// Write run metrics as JSON lines to this path: one line per epoch
+    /// (per-pass timer breakdown) plus a final line with the per-primitive
+    /// BRGEMM profile. Enables the telemetry profiler for the run.
+    pub metrics_out: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -200,6 +213,7 @@ impl Default for RunConfig {
             serve: None,
             epochs: None,
             checkpoint: None,
+            metrics_out: None,
         }
     }
 }
@@ -310,6 +324,7 @@ impl RunConfig {
                         .as_bool()
                         .ok_or_else(|| anyhow!("watch_model must be a boolean"))?,
                 },
+                metrics_every: get_opt_f64(sv, "metrics_every")?,
             };
             sc.validate()?;
             cfg.serve = Some(sc);
@@ -340,6 +355,10 @@ impl RunConfig {
             };
             ck.validate()?;
             cfg.checkpoint = Some(ck);
+        }
+        cfg.metrics_out = get_opt_str(&j, "metrics_out")?;
+        if matches!(cfg.metrics_out.as_deref(), Some("")) {
+            bail!("metrics_out must be a non-empty file path");
         }
         if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
             bail!("batch/workers/nthreads must be positive");
@@ -600,6 +619,24 @@ mod tests {
         .is_err());
         assert!(RunConfig::from_json(r#"{"epochs": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"epochs": "two"}"#).is_err());
+    }
+
+    #[test]
+    fn metrics_keys_parse() {
+        // Top-level metrics_out; serve-section metrics_every.
+        let cfg = RunConfig::from_json(r#"{"metrics_out": "metrics.jsonl"}"#).unwrap();
+        assert_eq!(cfg.metrics_out.as_deref(), Some("metrics.jsonl"));
+        assert!(RunConfig::from_json(r#"{}"#).unwrap().metrics_out.is_none());
+        // null tolerated (lets examples carry the key).
+        let cfg = RunConfig::from_json(r#"{"metrics_out": null}"#).unwrap();
+        assert!(cfg.metrics_out.is_none());
+        assert!(RunConfig::from_json(r#"{"metrics_out": ""}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"metrics_out": 7}"#).is_err());
+        let cfg =
+            RunConfig::from_json(r#"{"serve": {"metrics_every": 0.5}}"#).unwrap();
+        assert_eq!(cfg.serve.unwrap().metrics_every, Some(0.5));
+        assert!(RunConfig::from_json(r#"{"serve": {"metrics_every": 0}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"metrics_every": "fast"}}"#).is_err());
     }
 
     #[test]

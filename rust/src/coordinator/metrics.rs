@@ -1,160 +1,5 @@
-//! Metric collection for the coordinator: named counters and timers with a
-//! JSON-lines export (consumed by EXPERIMENTS.md tooling and the CLI's
-//! `--metrics-out`).
+//! Compatibility re-export: the metric registry moved to
+//! [`crate::telemetry`], which unifies it with the per-primitive BRGEMM
+//! profiler. Existing `coordinator::metrics::Metrics` paths keep working.
 
-use crate::util::json::{obj, Json};
-use crate::util::stats::Online;
-use std::collections::BTreeMap;
-use std::time::Instant;
-
-/// A metric registry. Not thread-safe by design — each worker owns one and
-/// they are merged at the end (the same pattern the primitives use for
-/// outputs: no shared mutable state on the hot path).
-#[derive(Debug, Default)]
-pub struct Metrics {
-    counters: BTreeMap<String, u64>,
-    timers: BTreeMap<String, Online>,
-}
-
-impl Metrics {
-    pub fn new() -> Metrics {
-        Metrics::default()
-    }
-
-    pub fn inc(&mut self, name: &str, by: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += by;
-    }
-
-    pub fn observe_secs(&mut self, name: &str, secs: f64) {
-        self.timers.entry(name.to_string()).or_insert_with(Online::new).push(secs);
-    }
-
-    /// Time a closure and record it.
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
-        let out = f();
-        self.observe_secs(name, t0.elapsed().as_secs_f64());
-        out
-    }
-
-    pub fn counter(&self, name: &str) -> u64 {
-        self.counters.get(name).copied().unwrap_or(0)
-    }
-
-    pub fn timer_mean(&self, name: &str) -> Option<f64> {
-        self.timers.get(name).map(|o| o.mean())
-    }
-
-    /// Merge another registry into this one (post-run worker merge).
-    pub fn merge(&mut self, other: &Metrics) {
-        for (k, v) in &other.counters {
-            *self.counters.entry(k.clone()).or_insert(0) += v;
-        }
-        for (k, o) in &other.timers {
-            let mine = self.timers.entry(k.clone()).or_insert_with(Online::new);
-            *mine = merge_online(mine, o);
-        }
-    }
-
-    pub fn to_json(&self) -> Json {
-        let counters = Json::Obj(
-            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
-        );
-        let timers = Json::Obj(
-            self.timers
-                .iter()
-                .map(|(k, o)| {
-                    (
-                        k.clone(),
-                        obj([
-                            ("n", o.n.into()),
-                            ("mean_s", o.mean().into()),
-                            ("std_s", o.std().into()),
-                            ("min_s", o.min.into()),
-                            ("max_s", o.max.into()),
-                        ]),
-                    )
-                })
-                .collect(),
-        );
-        obj([("counters", counters), ("timers", timers)])
-    }
-}
-
-/// Chan et al. parallel-Welford merge (exact).
-fn merge_online(a: &Online, b: &Online) -> Online {
-    if b.n == 0 {
-        return a.clone();
-    }
-    if a.n == 0 {
-        return b.clone();
-    }
-    let (na, nb) = (a.n as f64, b.n as f64);
-    let delta = b.mean() - a.mean();
-    let mean = a.mean() + delta * nb / (na + nb);
-    let m2 = a.std().powi(2) * (na - 1.0).max(0.0)
-        + b.std().powi(2) * (nb - 1.0).max(0.0)
-        + delta * delta * na * nb / (na + nb);
-    Online::from_moments(a.n + b.n, mean, m2, a.min.min(b.min), a.max.max(b.max))
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn counters_and_timers() {
-        let mut m = Metrics::new();
-        m.inc("requests", 2);
-        m.inc("requests", 3);
-        assert_eq!(m.counter("requests"), 5);
-        m.observe_secs("step", 0.1);
-        m.observe_secs("step", 0.3);
-        assert!((m.timer_mean("step").unwrap() - 0.2).abs() < 1e-12);
-    }
-
-    #[test]
-    fn time_records_and_returns() {
-        let mut m = Metrics::new();
-        let v = m.time("op", || 42);
-        assert_eq!(v, 42);
-        assert_eq!(m.timers.get("op").unwrap().n, 1);
-    }
-
-    #[test]
-    fn merge_combines_exactly() {
-        let mut a = Metrics::new();
-        let mut b = Metrics::new();
-        for x in [1.0, 2.0, 3.0] {
-            a.observe_secs("t", x);
-        }
-        for x in [4.0, 5.0] {
-            b.observe_secs("t", x);
-        }
-        a.inc("c", 1);
-        b.inc("c", 2);
-        a.merge(&b);
-        assert_eq!(a.counter("c"), 3);
-        let mut whole = Metrics::new();
-        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
-            whole.observe_secs("t", x);
-        }
-        let got = a.timers.get("t").unwrap();
-        let want = whole.timers.get("t").unwrap();
-        assert_eq!(got.n, want.n);
-        assert!((got.mean() - want.mean()).abs() < 1e-12);
-        assert!((got.std() - want.std()).abs() < 1e-9);
-        assert_eq!(got.min, want.min);
-        assert_eq!(got.max, want.max);
-    }
-
-    #[test]
-    fn json_export_shape() {
-        let mut m = Metrics::new();
-        m.inc("x", 1);
-        m.observe_secs("t", 0.5);
-        let j = m.to_json();
-        assert_eq!(j.get("counters").unwrap().get("x").unwrap().as_f64(), Some(1.0));
-        assert!(j.get("timers").unwrap().get("t").unwrap().get("mean_s").is_some());
-    }
-}
+pub use crate::telemetry::{merge_online, Metrics};

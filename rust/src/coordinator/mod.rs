@@ -25,8 +25,9 @@
 //!   experiments (Fig. 10) on a single host.
 //! * [`resnet`]  — the ResNet-50 layer table (paper Table 2) and
 //!   weighted-efficiency accounting.
-//! * [`metrics`] — counters/timers with exact parallel merge and JSON
-//!   export.
+//! * [`metrics`] — re-export of [`crate::telemetry`]'s counter/timer
+//!   registry (exact parallel merge, JSON export), kept for path
+//!   compatibility.
 
 pub mod build;
 pub mod cnn;

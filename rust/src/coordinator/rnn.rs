@@ -33,9 +33,11 @@ use crate::coordinator::trainer::{eval_accuracy, softmax_xent, Model};
 use crate::modelio::{LayerKind, LayerParams};
 use crate::primitives::fc::FcPrimitive;
 use crate::primitives::lstm::{LstmPrimitive, LstmWeights, LstmWorkspace, GATES};
+use crate::telemetry::{self, Metrics};
 use crate::tensor::layout;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::time::Instant;
 
 /// Shape of the RNN sequence-classification workload: per-step input
 /// width `c`, hidden width `k`, sequence length (BPTT window) `t`, and
@@ -86,6 +88,8 @@ pub struct RnnModel {
     dw: Vec<f32>,
     dr: Vec<f32>,
     db: Vec<f32>,
+    /// Per-pass training breakdown — only fed while telemetry is enabled.
+    metrics: Metrics,
 }
 
 impl RnnModel {
@@ -159,6 +163,7 @@ impl RnnModel {
             x_seq: vec![0.0; spec.t * batch * c],
             head_x: Vec::new(),
             head,
+            metrics: Metrics::new(),
         }
     }
 
@@ -193,12 +198,28 @@ impl RnnModel {
         layout::unpack_act_2d(&self.head.y, n, hcfg.k, hcfg.bn, hcfg.bk)
     }
 
-    /// One SGD step; returns the mean cross-entropy loss.
+    /// One SGD step; returns the mean cross-entropy loss. While telemetry
+    /// is enabled, the per-pass breakdown (fwd / bwd incl. the loss / upd)
+    /// lands in [`Model::metrics`]; disabled, the step pays one branch.
     pub fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32 {
+        if !telemetry::enabled() {
+            let logits = self.forward(x);
+            let (loss, dlogits) = softmax_xent(&logits, labels, self.spec.classes);
+            self.backward(&dlogits);
+            self.apply_sgd(lr);
+            return loss;
+        }
+        let t0 = Instant::now();
         let logits = self.forward(x);
+        let t1 = Instant::now();
         let (loss, dlogits) = softmax_xent(&logits, labels, self.spec.classes);
         self.backward(&dlogits);
+        let t2 = Instant::now();
         self.apply_sgd(lr);
+        self.metrics.observe_secs("fwd", (t1 - t0).as_secs_f64());
+        self.metrics.observe_secs("bwd", (t2 - t1).as_secs_f64());
+        self.metrics.observe_secs("upd", t2.elapsed().as_secs_f64());
+        self.metrics.inc("steps", 1);
         loss
     }
 
@@ -375,6 +396,12 @@ impl Model for RnnModel {
         self.head.w = layout::pack_weights_2d(&p.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc);
         self.head.b = p.b.clone();
         Ok(())
+    }
+    fn metrics(&self) -> Option<&Metrics> {
+        Some(&self.metrics)
+    }
+    fn metrics_mut(&mut self) -> Option<&mut Metrics> {
+        Some(&mut self.metrics)
     }
 }
 

@@ -16,6 +16,7 @@ use crate::coordinator::data::ClassifyData;
 use crate::coordinator::dist::{ring_allreduce, NetworkModel};
 use crate::modelio::{LayerKind, LayerParams};
 use crate::primitives::fc::FcPrimitive;
+use crate::telemetry::{self, Metrics};
 use crate::tensor::layout::{
     pack_act_2d, pack_weights_2d, transpose_packed_2d, unpack_act_2d, unpack_weights_2d,
 };
@@ -62,6 +63,17 @@ pub trait Model {
     /// into *this* model's blocking (which need not match the blocking
     /// the params were exported under). Errors on any shape mismatch.
     fn import_weights(&mut self, layers: &[LayerParams]) -> Result<()>;
+    /// The model's per-pass metric registry (fwd/bwd/upd timers, step
+    /// counters) — populated only while [`crate::telemetry`] is enabled.
+    /// Defaults to `None` for models that keep no registry.
+    fn metrics(&self) -> Option<&Metrics> {
+        None
+    }
+    /// Mutable access to the registry, for drivers that add their own
+    /// stage timers (eval, checkpoint) to a model's breakdown.
+    fn metrics_mut(&mut self) -> Option<&mut Metrics> {
+        None
+    }
 }
 
 /// Classification accuracy of `model` over the first
@@ -117,6 +129,8 @@ pub struct MlpModel {
     pub batch: usize,
     layers: Vec<Layer>,
     x_packed: Vec<f32>,
+    /// Per-pass training breakdown — only fed while telemetry is enabled.
+    metrics: Metrics,
 }
 
 impl MlpModel {
@@ -163,7 +177,13 @@ impl MlpModel {
                 }
             })
             .collect();
-        MlpModel { sizes: sizes.to_vec(), batch, layers, x_packed: vec![0.0; batch * sizes[0]] }
+        MlpModel {
+            sizes: sizes.to_vec(),
+            batch,
+            layers,
+            x_packed: vec![0.0; batch * sizes[0]],
+            metrics: Metrics::new(),
+        }
     }
 
     pub fn param_count(&self) -> usize {
@@ -187,12 +207,28 @@ impl MlpModel {
         unpack_act_2d(&last.y, self.batch, cfg.k, cfg.bn, cfg.bk)
     }
 
-    /// One SGD step; returns the mean cross-entropy loss.
+    /// One SGD step; returns the mean cross-entropy loss. While telemetry
+    /// is enabled, the per-pass breakdown (fwd / bwd incl. the loss / upd)
+    /// lands in [`Model::metrics`]; disabled, the step pays one branch.
     pub fn train_step(&mut self, x: &[f32], labels: &[i32], lr: f32) -> f32 {
+        if !telemetry::enabled() {
+            let logits = self.forward(x);
+            let (loss, dlogits) = softmax_xent(&logits, labels, self.sizes[self.sizes.len() - 1]);
+            self.backward(&dlogits);
+            self.apply_sgd(lr);
+            return loss;
+        }
+        let t0 = Instant::now();
         let logits = self.forward(x);
+        let t1 = Instant::now();
         let (loss, dlogits) = softmax_xent(&logits, labels, self.sizes[self.sizes.len() - 1]);
         self.backward(&dlogits);
+        let t2 = Instant::now();
         self.apply_sgd(lr);
+        self.metrics.observe_secs("fwd", (t1 - t0).as_secs_f64());
+        self.metrics.observe_secs("bwd", (t2 - t1).as_secs_f64());
+        self.metrics.observe_secs("upd", t2.elapsed().as_secs_f64());
+        self.metrics.inc("steps", 1);
         loss
     }
 
@@ -333,6 +369,12 @@ impl Model for MlpModel {
         }
         Ok(())
     }
+    fn metrics(&self) -> Option<&Metrics> {
+        Some(&self.metrics)
+    }
+    fn metrics_mut(&mut self) -> Option<&mut Metrics> {
+        Some(&mut self.metrics)
+    }
 }
 
 /// Mean softmax cross-entropy and its logits-gradient.
@@ -374,6 +416,9 @@ pub struct DataParallelTrainer<M: Model = MlpModel> {
     pub workers: Vec<M>,
     pub net: NetworkModel,
     pub lr: f32,
+    /// The trainer's own stage timers (allreduce, apply) — fed only while
+    /// telemetry is enabled; see [`DataParallelTrainer::merged_metrics`].
+    pub metrics: Metrics,
 }
 
 impl DataParallelTrainer<MlpModel> {
@@ -417,7 +462,12 @@ impl<M: Model> DataParallelTrainer<M> {
     /// parameters (checked), or synchronous SGD silently diverges.
     pub fn from_workers(workers: Vec<M>, lr: f32) -> DataParallelTrainer<M> {
         assert!(!workers.is_empty(), "need at least one worker");
-        let dp = DataParallelTrainer { workers, net: NetworkModel::omnipath(), lr };
+        let dp = DataParallelTrainer {
+            workers,
+            net: NetworkModel::omnipath(),
+            lr,
+            metrics: Metrics::new(),
+        };
         assert!(dp.replicas_consistent(), "replicas must start from identical parameters");
         dp
     }
@@ -433,24 +483,54 @@ impl<M: Model> DataParallelTrainer<M> {
         for (w, (x, labels)) in self.workers.iter_mut().zip(shards) {
             let t0 = Instant::now();
             let logits = w.forward(x);
+            let t1 = telemetry::enabled().then(Instant::now);
             let (loss, dlogits) = softmax_xent(&logits, labels, w.classes());
             w.backward(&dlogits);
             compute = compute.max(t0.elapsed().as_secs_f64());
+            if let Some(t1) = t1 {
+                let bwd = t1.elapsed().as_secs_f64();
+                if let Some(m) = w.metrics_mut() {
+                    m.observe_secs("fwd", (t1 - t0).as_secs_f64());
+                    m.observe_secs("bwd", bwd);
+                }
+            }
             losses.push(loss);
             grads.push(w.grads_flat());
         }
         let grad_bytes = grads[0].len() * 4;
+        let t_ar = telemetry::enabled().then(Instant::now);
         ring_allreduce(&mut grads);
+        if let Some(t) = t_ar {
+            self.metrics.observe_secs("allreduce", t.elapsed().as_secs_f64());
+        }
+        let t_up = telemetry::enabled().then(Instant::now);
         let scale = 1.0 / p as f32;
         for (w, g) in self.workers.iter_mut().zip(&grads) {
             let mean: Vec<f32> = g.iter().map(|v| v * scale).collect();
             w.apply_sgd_from_flat(&mean, self.lr);
+        }
+        if let Some(t) = t_up {
+            self.metrics.observe_secs("upd", t.elapsed().as_secs_f64());
+            self.metrics.inc("steps", 1);
         }
         DistStep {
             loss: losses.iter().sum::<f32>() / p as f32,
             compute_secs: compute,
             comm_secs: self.net.ring_allreduce_secs(grad_bytes, p),
         }
+    }
+
+    /// The trainer's registry merged with every worker's, via the exact
+    /// parallel-Welford merge — per-worker fwd/bwd timer moments combine
+    /// as if one registry had observed every sample.
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut out = self.metrics.clone();
+        for w in &self.workers {
+            if let Some(m) = w.metrics() {
+                out.merge(m);
+            }
+        }
+        out
     }
 
     /// Replicas must stay bit-identical under synchronous SGD; used as a
@@ -707,6 +787,79 @@ mod tests {
             resumed.params_flat(),
             "resumed training must be bit-identical to the uninterrupted run"
         );
+    }
+
+    #[test]
+    fn instrumented_training_is_bit_identical() {
+        // The whole point of the gated profiler: enabling it must change
+        // timing side channels only. Same seed, same data, same steps —
+        // the final parameters must match bitwise with and without it.
+        let _g = telemetry::test_lock();
+        let run = |instrument: bool| {
+            if instrument {
+                telemetry::install();
+            } else {
+                telemetry::uninstall();
+            }
+            let mut rng = Rng::new(7);
+            let data = ClassifyData::synth(64, 8, 3, 0.2, &mut rng);
+            let mut m = MlpModel::new(&[8, 16, 3], 8, 1, &mut Rng::new(42));
+            for step in 0..6 {
+                let (x, l) = data.batch(step, 8);
+                m.train_step(&x, &l, 0.1);
+            }
+            telemetry::uninstall();
+            m.params_flat()
+        };
+        assert_eq!(run(true), run(false), "profiling must not change the math");
+    }
+
+    #[test]
+    fn train_step_breakdown_is_gated_and_recorded() {
+        let _g = telemetry::test_lock();
+        let mut rng = Rng::new(3);
+        let data = ClassifyData::synth(32, 8, 2, 0.2, &mut rng);
+        // Disabled: no timers land.
+        telemetry::uninstall();
+        let mut m = MlpModel::new(&[8, 8, 2], 8, 1, &mut Rng::new(1));
+        let (x, l) = data.batch(0, 8);
+        m.train_step(&x, &l, 0.1);
+        assert_eq!(Model::metrics(&m).unwrap().counter("steps"), 0);
+        // Enabled: fwd/bwd/upd timers and the step counter land.
+        telemetry::install();
+        let mut m = MlpModel::new(&[8, 8, 2], 8, 1, &mut Rng::new(1));
+        for step in 0..3 {
+            let (x, l) = data.batch(step, 8);
+            m.train_step(&x, &l, 0.1);
+        }
+        let metrics = Model::metrics(&m).unwrap();
+        assert_eq!(metrics.counter("steps"), 3);
+        for pass in ["fwd", "bwd", "upd"] {
+            assert!(metrics.timer_mean(pass).unwrap() >= 0.0, "{} timer present", pass);
+        }
+        telemetry::uninstall();
+    }
+
+    #[test]
+    fn data_parallel_merges_worker_breakdowns() {
+        let _g = telemetry::test_lock();
+        telemetry::install();
+        let mut rng = Rng::new(19);
+        let data = ClassifyData::synth(64, 8, 2, 0.2, &mut rng);
+        let mut dp = DataParallelTrainer::new(&[8, 8, 2], 8, 2, 1, 0.05, 1);
+        let shards: Vec<_> = (0..2).map(|i| data.batch(i, 8)).collect();
+        dp.step(&shards);
+        dp.step(&shards);
+        let merged = dp.merged_metrics();
+        assert_eq!(merged.counter("steps"), 2);
+        // 2 workers x 2 steps = 4 fwd samples in the merged view.
+        assert!((merged.to_json().get("timers").unwrap().get("fwd").unwrap())
+            .get("n")
+            .unwrap()
+            .as_f64()
+            == Some(4.0));
+        assert!(merged.timer_mean("allreduce").is_some());
+        telemetry::uninstall();
     }
 
     #[test]

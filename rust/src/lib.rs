@@ -38,6 +38,11 @@
 //!   turns trainer, tuner and server into one train → checkpoint → serve
 //!   pipeline (checkpoint/resume in the coordinator, `--model-path` and
 //!   hot weight reload in serving).
+//! * [`telemetry`] — the observability layer: metric registries (counters
+//!   + timers with an exact parallel-Welford merge, exported as JSON lines
+//!   by `run --metrics-out`) and a gated per-primitive BRGEMM profiler
+//!   (per-pass kernel-invocation/flop/byte/time counters with
+//!   efficiency-vs-roofline, branch-only on the hot path when disabled).
 //! * [`serve`] — the inference-serving subsystem: a request queue +
 //!   dynamic batcher coalescing single-sample requests into pow-2 batch
 //!   buckets, a worker pool running forward-only MLP/CNN/RNN plans built
@@ -58,5 +63,6 @@ pub mod perfmodel;
 pub mod primitives;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;

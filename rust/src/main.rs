@@ -8,6 +8,8 @@
 //!                 open-loop load (see examples/serve.json)
 //!   primitive   — run one DL primitive and report GFLOPS/efficiency
 //!   tune        — autotune a primitive's blockings, persist the winner
+//!   perfcheck   — validate --metrics-out files, compare bench JSON
+//!                 against a committed baseline (advisory in ci.sh)
 //!   xla         — execute one AOT artifact with synthetic inputs
 
 use anyhow::{anyhow, bail, Result};
@@ -28,10 +30,12 @@ use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
 use brgemm_dl::serve::{
-    drive_open_loop, InferenceModel, LoadSpec, ModelWatcher, NetSpec, Response, ServeOpts,
+    drive_open_loop_every, InferenceModel, LoadSpec, ModelWatcher, NetSpec, Response, ServeOpts,
     Server,
 };
+use brgemm_dl::telemetry;
 use brgemm_dl::tensor::layout;
+use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::logger;
 use brgemm_dl::util::rng::Rng;
 use brgemm_dl::{log_info, log_warn};
@@ -54,6 +58,7 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "steps", help: "override step count", takes_value: true, default: None },
                 OptSpec { name: "epochs", help: "override epoch count (epoch = one pass over the training set)", takes_value: true, default: None },
                 OptSpec { name: "resume", help: "resume training from a model artifact (see examples/checkpoint.json)", takes_value: true, default: None },
+                OptSpec { name: "metrics-out", help: "write run metrics as JSON lines: per-epoch pass breakdown + per-primitive BRGEMM profile", takes_value: true, default: None },
             ],
         },
         Command {
@@ -80,6 +85,8 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "seed", help: "load + weight seed [default: 42]", takes_value: true, default: None },
                 OptSpec { name: "tune", help: "build bucket plans via the tuning cache", takes_value: false, default: None },
                 OptSpec { name: "json", help: "also print the report as one JSON row", takes_value: false, default: None },
+                OptSpec { name: "metrics-out", help: "write the final report + per-primitive BRGEMM profile as JSON", takes_value: true, default: None },
+                OptSpec { name: "metrics-every", help: "log a point-in-time serving snapshot every this many seconds", takes_value: true, default: None },
             ],
         },
         Command {
@@ -113,6 +120,17 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "cache", help: "tuning-cache path (default: $BRGEMM_TUNE_CACHE or tuning_cache.json)", takes_value: true, default: None },
                 OptSpec { name: "train", help: "FC: rank by fwd+upd (enables upd variants)", takes_value: false, default: None },
                 OptSpec { name: "full", help: "thorough measurement protocol", takes_value: false, default: None },
+            ],
+        },
+        Command {
+            name: "perfcheck",
+            about: "validate --metrics-out files; compare bench JSON against a baseline",
+            opts: vec![
+                OptSpec { name: "metrics", help: "JSON-lines metrics file: every line must parse (see --require)", takes_value: true, default: None },
+                OptSpec { name: "require", help: "comma-separated keys that must appear in --metrics with a nonzero/non-empty value", takes_value: true, default: None },
+                OptSpec { name: "baseline", help: "committed baseline JSON (BENCH_*.json at the repo root)", takes_value: true, default: None },
+                OptSpec { name: "current", help: "freshly measured JSON (bench_results/*.json)", takes_value: true, default: None },
+                OptSpec { name: "tolerance", help: "allowed fractional throughput drop vs baseline [default: 0.5]", takes_value: true, default: None },
             ],
         },
         Command {
@@ -151,6 +169,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("primitive") => cmd_primitive(&args),
         Some("tune") => cmd_tune(&args),
+        Some("perfcheck") => cmd_perfcheck(&args),
         Some("xla") => cmd_xla(&args),
         _ => {
             print!("{}", usage("brgemm-dl", "DL primitives via a single building block", &cmds));
@@ -202,6 +221,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             bail!("--epochs must be >= 1");
         }
         cfg.epochs = Some(epochs);
+    }
+    if let Some(path) = args.str("metrics-out") {
+        if path.is_empty() {
+            bail!("--metrics-out needs a non-empty file path");
+        }
+        cfg.metrics_out = Some(path.to_string());
     }
     let resume = match args.str("resume") {
         Some(path) => {
@@ -266,6 +291,9 @@ fn synth_dataset(arch: &Arch, seed: u64) -> ClassifyData {
 /// the run fails unless the served responses classify it well enough —
 /// the end-to-end proof that trained weights flow through serving.
 fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
+    // Install before the model is built: the bucket plans' primitives
+    // register their profiler slots at construction time.
+    let profiler = cfg.metrics_out.as_ref().map(|_| telemetry::install());
     let artifact = match &sc.model_path {
         Some(path) => {
             let art = ModelArtifact::load(path)?;
@@ -355,7 +383,7 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         let load = LoadSpec { requests: sc.requests, rate_rps: sc.rate, seed: cfg.seed };
         let dim = model.input_dim();
         let (report, responses) =
-            open_loop_watched(model, opts, &load, watch, move |rng, _i| {
+            open_loop_watched(model, opts, &load, watch, sc.metrics_every, move |rng, _i| {
                 rng.vec_f32(dim, -1.0, 1.0)
             });
         if responses.len() != sc.requests {
@@ -366,6 +394,16 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     print!("{}", report.render());
     if emit_json {
         println!("{}", report.to_json().to_string_compact());
+    }
+    if let (Some(path), Some(prof)) = (&cfg.metrics_out, profiler) {
+        let mut doc = report.to_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("primitives".to_string(), prof.snapshot());
+        }
+        std::fs::write(path, format!("{}\n", doc.to_string_compact()))
+            .map_err(|e| anyhow!("writing {}: {}", path, e))?;
+        log_info!("serve metrics written to {}", path);
+        telemetry::uninstall();
     }
     Ok(())
 }
@@ -378,6 +416,7 @@ fn open_loop_watched(
     opts: ServeOpts,
     load: &LoadSpec,
     watch: Option<(&str, &ModelArtifact)>,
+    metrics_every: Option<f64>,
     make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
 ) -> (brgemm_dl::serve::ServeReport, Vec<Response>) {
     let (server, rx) = Server::start(model, opts);
@@ -385,7 +424,7 @@ fn open_loop_watched(
         log_info!("watch-model: polling {} for changes", p);
         ModelWatcher::spawn(server.reload_handle(), p, Duration::from_millis(50), Some(loaded))
     });
-    let out = drive_open_loop(server, rx, load, make_input);
+    let out = drive_open_loop_every(server, rx, load, metrics_every, make_input);
     if let Some(w) = watcher {
         let applied = w.stop();
         log_info!("watch-model: {} reload(s) applied during the run", applied);
@@ -417,7 +456,9 @@ fn serve_eval_load(
     }
     let load = LoadSpec { requests: n, rate_rps: sc.rate, seed: art.meta.seed };
     let (report, responses) =
-        open_loop_watched(model, opts, &load, watch, |_rng, i| data.batch(i, 1).0);
+        open_loop_watched(model, opts, &load, watch, sc.metrics_every, |_rng, i| {
+            data.batch(i, 1).0
+        });
     if responses.len() != n {
         bail!("served {} of {} eval requests", responses.len(), n);
     }
@@ -442,7 +483,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // override (only --json composes with --config).
         let conflicting: Vec<&str> =
             ["model", "model-path", "min-accuracy", "watch-model", "wait-fill-us", "rate",
-             "requests", "max-batch", "serve-workers", "nthreads", "seed", "tune"]
+             "requests", "max-batch", "serve-workers", "nthreads", "seed", "tune",
+             "metrics-out", "metrics-every"]
             .into_iter()
             .filter(|&k| args.str(k).is_some())
             .collect();
@@ -485,8 +527,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model_path: args.str("model-path").map(String::from),
         min_accuracy: args.f64("min-accuracy").map_err(|e| anyhow!("{}", e))?,
         watch_model: args.flag("watch-model"),
+        metrics_every: args.f64("metrics-every").map_err(|e| anyhow!("{}", e))?,
     };
     sc.validate()?;
+    cfg.metrics_out = args.str("metrics-out").map(String::from);
     run_serve(&cfg, sc, args.flag("json"))
 }
 
@@ -566,6 +610,16 @@ fn drive_native<M: Model>(
     let spe = sched.steps_per_epoch;
     let total = sched.total_steps;
     let ckpt = cfg.checkpoint.as_ref();
+    // --metrics-out: enable telemetry before any replica is built (the
+    // primitives register their profiler slots at construction), then
+    // stream one JSON line per epoch plus a final per-primitive profile.
+    let profiler = cfg.metrics_out.as_ref().map(|_| telemetry::install());
+    let mut sink = match &cfg.metrics_out {
+        Some(path) => Some(std::io::BufWriter::new(
+            std::fs::File::create(path).map_err(|e| anyhow!("creating {}: {}", path, e))?,
+        )),
+        None => None,
+    };
     let mut train_rng = Rng::new(cfg.seed);
     let mut start_step = 0usize;
     if let Some(art) = resume {
@@ -648,13 +702,39 @@ fn drive_native<M: Model>(
                 );
             }
             at_epoch_end(&mut dp.workers[0], step, s.loss, &train_rng)?;
+            if let Some(w) = sink.as_mut() {
+                if (step + 1) % spe == 0 {
+                    write_metrics_line(
+                        w,
+                        &obj([
+                            ("epoch", ((step + 1) / spe).into()),
+                            ("step", (step + 1).into()),
+                            ("loss", (s.loss as f64).into()),
+                            ("metrics", dp.merged_metrics().to_json()),
+                        ]),
+                    )?;
+                }
+            }
         }
         if !dp.replicas_consistent() {
             bail!("replicas diverged");
         }
         log_info!("replicas consistent after {} steps", total.saturating_sub(start_step));
+        let t_eval = telemetry::enabled().then(Instant::now);
         let acc = eval_accuracy(&mut dp.workers[0], data, 16);
+        if let Some(t) = t_eval {
+            dp.metrics.observe_secs("eval", t.elapsed().as_secs_f64());
+        }
         log_info!("final accuracy {:.1}% (worker 0)", acc * 100.0);
+        if let Some(w) = sink.as_mut() {
+            write_metrics_line(
+                w,
+                &obj([
+                    ("final_accuracy", acc.into()),
+                    ("metrics", dp.merged_metrics().to_json()),
+                ]),
+            )?;
+        }
     } else {
         // Fresh run: init consumes the checkpointed training stream, so
         // TrainMeta.rng records the post-init position. Resume: the
@@ -676,11 +756,56 @@ fn drive_native<M: Model>(
                 log_info!("step {:4} loss {:.4}", step, loss);
             }
             at_epoch_end(&mut model, step, loss, &train_rng)?;
+            if let Some(w) = sink.as_mut() {
+                if (step + 1) % spe == 0 {
+                    write_metrics_line(
+                        w,
+                        &obj([
+                            ("epoch", ((step + 1) / spe).into()),
+                            ("step", (step + 1).into()),
+                            ("loss", (loss as f64).into()),
+                            (
+                                "metrics",
+                                model.metrics().map(|m| m.to_json()).unwrap_or(Json::Null),
+                            ),
+                        ]),
+                    )?;
+                }
+            }
         }
+        let t_eval = telemetry::enabled().then(Instant::now);
         let acc = eval_accuracy(&mut model, data, 16);
+        if let (Some(t), Some(m)) = (t_eval, model.metrics_mut()) {
+            m.observe_secs("eval", t.elapsed().as_secs_f64());
+        }
         log_info!("final accuracy {:.1}%", acc * 100.0);
+        if let Some(w) = sink.as_mut() {
+            write_metrics_line(
+                w,
+                &obj([
+                    ("final_accuracy", acc.into()),
+                    ("metrics", model.metrics().map(|m| m.to_json()).unwrap_or(Json::Null)),
+                ]),
+            )?;
+        }
+    }
+    if let (Some(mut w), Some(prof)) = (sink, profiler) {
+        write_metrics_line(&mut w, &obj([("primitives", prof.snapshot())]))?;
+        use std::io::Write;
+        w.flush().map_err(|e| anyhow!("flushing metrics: {}", e))?;
+        log_info!(
+            "metrics written to {}\n{}",
+            cfg.metrics_out.as_deref().unwrap_or_default(),
+            prof.render()
+        );
+        telemetry::uninstall();
     }
     Ok(())
+}
+
+/// One compact JSON line into the `--metrics-out` stream.
+fn write_metrics_line(w: &mut impl std::io::Write, j: &Json) -> Result<()> {
+    writeln!(w, "{}", j.to_string_compact()).map_err(|e| anyhow!("writing metrics: {}", e))
 }
 
 fn run_mlp_native(cfg: &RunConfig, sizes: &[usize], resume: Option<ModelArtifact>) -> Result<()> {
@@ -1013,8 +1138,188 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Throughput-like keys (higher is better) compared by
+/// `perfcheck --baseline/--current`. Timings and counters are ignored —
+/// only sustained-rate numbers are meaningful across runs.
+const PERF_KEYS: [&str; 4] = ["gflops", "kwps", "imgs_per_s", "throughput_rps"];
+
+/// `perfcheck` — CI's observability gate. Two independent modes that can
+/// be combined in one invocation:
+///
+/// * `--metrics <file> [--require k1,k2]`: the file must be non-empty
+///   JSON lines, and each required key must occur somewhere in it with a
+///   nonzero number / non-empty container.
+/// * `--baseline <json> --current <json> [--tolerance f]`: every
+///   throughput-like leaf (see [`PERF_KEYS`]) present in both documents
+///   at the same path must not have dropped by more than the tolerance
+///   fraction. Exit status is the verdict; ci.sh runs this advisorily.
+fn cmd_perfcheck(args: &Args) -> Result<()> {
+    let did_metrics = match args.str("metrics") {
+        Some(path) => {
+            check_metrics_file(path, args.str("require").unwrap_or(""))?;
+            true
+        }
+        None => false,
+    };
+    match (args.str("baseline"), args.str("current")) {
+        (Some(b), Some(c)) => {
+            let tol = args.f64_or("tolerance", 0.5).map_err(|e| anyhow!("{}", e))?;
+            if !(0.0..1.0).contains(&tol) {
+                bail!("--tolerance must be in [0, 1)");
+            }
+            compare_perf(b, c, tol)
+        }
+        (None, None) if did_metrics => Ok(()),
+        (None, None) => bail!("perfcheck needs --metrics and/or --baseline/--current"),
+        _ => bail!("--baseline and --current must be given together"),
+    }
+}
+
+fn check_metrics_file(path: &str, require: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {}: {}", path, e))?;
+    let mut docs: Vec<Json> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        docs.push(
+            Json::parse(line).map_err(|e| anyhow!("{} line {}: {:?}", path, i + 1, e))?,
+        );
+    }
+    if docs.is_empty() {
+        bail!("{} has no JSON lines", path);
+    }
+    for key in require.split(',').map(str::trim).filter(|k| !k.is_empty()) {
+        let mut vals: Vec<&Json> = Vec::new();
+        for d in &docs {
+            collect_key(d, key, &mut vals);
+        }
+        if vals.is_empty() {
+            bail!("{}: required key '{}' not found", path, key);
+        }
+        let ok = vals.iter().any(|v| match v {
+            Json::Num(x) => *x > 0.0,
+            Json::Null => false,
+            Json::Arr(a) => !a.is_empty(),
+            Json::Obj(o) => !o.is_empty(),
+            _ => true,
+        });
+        if !ok {
+            bail!("{}: key '{}' present but every occurrence is zero/empty", path, key);
+        }
+        println!("perfcheck {}: '{}' ok ({} occurrence(s))", path, key, vals.len());
+    }
+    println!("perfcheck {}: {} JSON line(s) parse", path, docs.len());
+    Ok(())
+}
+
+/// Collect every value stored under `key` anywhere in the document.
+fn collect_key<'a>(j: &'a Json, key: &str, out: &mut Vec<&'a Json>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                if k == key {
+                    out.push(v);
+                }
+                collect_key(v, key, out);
+            }
+        }
+        Json::Arr(a) => {
+            for v in a {
+                collect_key(v, key, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Collect `(path, value)` for every [`PERF_KEYS`] numeric leaf; paths
+/// use object keys and array indices, so two structurally equal documents
+/// pair up exactly.
+fn collect_perf(j: &Json, path: &mut String, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let len = path.len();
+                path.push('/');
+                path.push_str(k);
+                if let Json::Num(x) = v {
+                    if PERF_KEYS.contains(&k.as_str()) {
+                        out.push((path.clone(), *x));
+                    }
+                }
+                collect_perf(v, path, out);
+                path.truncate(len);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                let len = path.len();
+                path.push_str(&format!("/{}", i));
+                collect_perf(v, path, out);
+                path.truncate(len);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn compare_perf(baseline: &str, current: &str, tol: f64) -> Result<()> {
+    let load = |p: &str| -> Result<Json> {
+        let s = std::fs::read_to_string(p).map_err(|e| anyhow!("reading {}: {}", p, e))?;
+        Json::parse(&s).map_err(|e| anyhow!("{}: {:?}", p, e))
+    };
+    let (b, c) = (load(baseline)?, load(current)?);
+    let mut bvals: Vec<(String, f64)> = Vec::new();
+    let mut cvals: Vec<(String, f64)> = Vec::new();
+    collect_perf(&b, &mut String::new(), &mut bvals);
+    collect_perf(&c, &mut String::new(), &mut cvals);
+    let cmap: std::collections::BTreeMap<String, f64> = cvals.into_iter().collect();
+    let mut compared = 0usize;
+    let mut regressions = 0usize;
+    for (path, bv) in &bvals {
+        if let Some(cv) = cmap.get(path) {
+            compared += 1;
+            if *bv > 0.0 && *cv < *bv * (1.0 - tol) {
+                regressions += 1;
+                println!(
+                    "REGRESSION {}: {:.3} vs baseline {:.3} (allowed drop {:.0}%)",
+                    path,
+                    cv,
+                    bv,
+                    tol * 100.0
+                );
+            }
+        }
+    }
+    if compared == 0 {
+        bail!(
+            "no comparable perf keys ({}) shared between {} and {}",
+            PERF_KEYS.join("/"),
+            baseline,
+            current
+        );
+    }
+    if regressions > 0 {
+        bail!(
+            "{} of {} perf point(s) regressed beyond {:.0}% of baseline {}",
+            regressions,
+            compared,
+            tol * 100.0,
+            baseline
+        );
+    }
+    println!(
+        "perfcheck: {} perf point(s) within {:.0}% of baseline {}",
+        compared,
+        tol * 100.0,
+        baseline
+    );
+    Ok(())
+}
+
 fn report(what: &str, flops: f64, secs: f64, peak: f64) {
-    let gf = flops / secs / 1e9;
+    let gf = telemetry::achieved_gflops(flops, secs);
     println!(
         "{}: {:.1} GFLOPS ({:.1}% of measured 1-core peak {:.1})",
         what,

@@ -24,6 +24,7 @@
 use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
 use crate::primitives::eltwise::Act;
 use crate::primitives::partition::{Partition2d, Strategy};
+use crate::telemetry::{self, Pass, PrimSlot};
 use crate::tensor::layout;
 use crate::util::num::largest_divisor_le;
 use crate::util::pool::{parallel_chunks_mut, parallel_region, SharedMut};
@@ -307,10 +308,29 @@ pub struct ConvPrimitive {
     /// optimisation). `None` when not applicable.
     fwd_flat: Option<(BrgemmKernel, usize)>,
     upd_kernel: BrgemmKernel,
+    /// Profiler slot — `None` (one branch per pass) unless a
+    /// [`crate::telemetry`] profiler was installed at construction time.
+    tele: Option<Arc<PrimSlot>>,
 }
 
 impl ConvPrimitive {
     pub fn new(cfg: ConvConfig) -> ConvPrimitive {
+        let mut prim = ConvPrimitive::new_internal(cfg);
+        prim.tele = telemetry::register(
+            "conv",
+            format!(
+                "n{} c{} k{} {}x{} f{}x{}/{}",
+                cfg.n, cfg.c, cfg.k, cfg.h, cfg.w, cfg.r, cfg.s, cfg.stride
+            ),
+        );
+        prim
+    }
+
+    /// Construction without profiler registration — for internal helper
+    /// primitives (the backward pass builds a dual-convolution plan per
+    /// call; its kernel work is charged to the *outer* primitive's slot,
+    /// so it must not register its own).
+    fn new_internal(cfg: ConvConfig) -> ConvPrimitive {
         cfg.validate();
         let fwd = BrgemmKernel::new(BrgemmDesc {
             m: cfg.bq,
@@ -361,7 +381,29 @@ impl ConvPrimitive {
             alpha: 1.0,
             beta: 1.0,
         });
-        ConvPrimitive { cfg, fwd_kernel: fwd, fwd_flat, upd_kernel: upd }
+        ConvPrimitive { cfg, fwd_kernel: fwd, fwd_flat, upd_kernel: upd, tele: None }
+    }
+
+    /// Tensor bytes one pass touches (input + output + weights, f32) —
+    /// the roofline's memory term for this shape.
+    fn bytes_moved(&self) -> u64 {
+        let c = &self.cfg;
+        4 * (c.input_len() + c.output_len() + c.weights_len()) as u64
+    }
+
+    /// Exact BRGEMM invocation count of one [`Self::forward`] call — a
+    /// pure function of the config, so the backward pass (which reuses the
+    /// forward loop nest through an internal dual primitive) can charge
+    /// the right count to its own slot.
+    fn fwd_brgemm_calls(&self) -> u64 {
+        let cfg = &self.cfg;
+        let kb = cfg.kb_ct();
+        match &self.fwd_flat {
+            // Flat path: one call per fbq-pixel strip (fbq divides P·Q).
+            Some((_, fbq)) => (cfg.n * kb * (cfg.p() * cfg.q() / fbq)) as u64,
+            // General path: one call per output row × bq-pixel strip.
+            None => (cfg.n * kb * cfg.p() * (cfg.q() / cfg.bq)) as u64,
+        }
     }
 
     /// Like [`ConvPrimitive::new`], but first consults the persistent
@@ -397,6 +439,7 @@ impl ConvPrimitive {
         if let Some(b) = bias {
             assert_eq!(b.len(), cfg.k);
         }
+        let t0 = self.tele.as_ref().map(|_| Instant::now());
         let (cb, kb) = (cfg.cb_ct(), cfg.kb_ct());
         let (p, q) = (cfg.p(), cfg.q());
         let (hp, wp) = (cfg.hp(), cfg.wp());
@@ -431,6 +474,15 @@ impl ConvPrimitive {
                     }
                 }
             });
+            if let (Some(slot), Some(t0)) = (self.tele.as_ref(), t0) {
+                slot.record(
+                    Pass::Fwd,
+                    self.fwd_brgemm_calls(),
+                    cfg.flops(),
+                    self.bytes_moved(),
+                    t0.elapsed(),
+                );
+            }
             return;
         }
 
@@ -466,6 +518,15 @@ impl ConvPrimitive {
                 }
             }
         });
+        if let (Some(slot), Some(t0)) = (self.tele.as_ref(), t0) {
+            slot.record(
+                Pass::Fwd,
+                self.fwd_brgemm_calls(),
+                cfg.flops(),
+                self.bytes_moved(),
+                t0.elapsed(),
+            );
+        }
     }
 
     /// Dual-weight reformat for [`Self::backward_data_pre`]: (C↔K)-
@@ -497,6 +558,7 @@ impl ConvPrimitive {
         let cfg = &self.cfg;
         assert_eq!(d_out.len(), cfg.output_len());
         assert_eq!(dual.len(), cfg.weights_len());
+        let tele0 = self.tele.as_ref().map(|_| Instant::now());
         let mut bd = ConvBreakdown::default();
 
         if cfg.stride == 1 {
@@ -534,10 +596,22 @@ impl ConvPrimitive {
             // Sanity: dual output spatial dims = padded input dims.
             debug_assert_eq!(dual_cfg.p(), cfg.hp());
             debug_assert_eq!(dual_cfg.q(), cfg.wp());
-            let prim = ConvPrimitive::new(dual_cfg);
+            // new_internal: the dual plan's kernel work is charged to THIS
+            // primitive's slot — a registering constructor here would leak
+            // one fresh slot per backward call.
+            let prim = ConvPrimitive::new_internal(dual_cfg);
             let mut di = vec![0.0f32; dual_cfg.output_len()];
             prim.forward(dop, dual, None, &mut di);
             bd.gemm_secs += t0.elapsed().as_secs_f64();
+            if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
+                slot.record(
+                    Pass::Bwd,
+                    prim.fwd_brgemm_calls(),
+                    cfg.flops(),
+                    self.bytes_moved(),
+                    tele0.elapsed(),
+                );
+            }
             // di is [N][Cb][Hp][Wp][bc] — exactly the padded input geometry.
             return (di, bd);
         }
@@ -587,6 +661,11 @@ impl ConvPrimitive {
                 }
             });
             bd.gemm_secs += t0.elapsed().as_secs_f64();
+            if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
+                // One BRGEMM call per (n, icb, oj, oi-strip).
+                let calls = (cfg.n * cb * p * (q / cfg.bq)) as u64;
+                slot.record(Pass::Bwd, calls, cfg.flops(), self.bytes_moved(), tele0.elapsed());
+            }
             return (di, bd);
         }
 
@@ -606,6 +685,10 @@ impl ConvPrimitive {
         );
         let di = layout::pack_conv_act(&dx, cfg.n, cfg.c, cfg.h, cfg.w, cfg.bc, cfg.pad, cfg.pad);
         bd.gemm_secs += t0.elapsed().as_secs_f64();
+        if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
+            // Naive fallback: the flops happen, but no BRGEMM is issued.
+            slot.record(Pass::Bwd, 0, cfg.flops(), self.bytes_moved(), tele0.elapsed());
+        }
         (di, bd)
     }
 
@@ -629,6 +712,7 @@ impl ConvPrimitive {
         let cfg = &self.cfg;
         assert_eq!(input.len(), cfg.input_len());
         assert_eq!(d_out.len(), cfg.output_len());
+        let tele0 = self.tele.as_ref().map(|_| Instant::now());
         let mut bd = ConvBreakdown::default();
         let (cb, kb) = (cfg.cb_ct(), cfg.kb_ct());
         let (p, q) = (cfg.p(), cfg.q());
@@ -667,6 +751,12 @@ impl ConvPrimitive {
             }
         });
         bd.gemm_secs += t0.elapsed().as_secs_f64();
+        if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
+            // One BRGEMM call per (Kb × Cb) block × (R·S) tap; the bias
+            // reduction ([`Self::update_bias`]) issues none.
+            let calls = (kb * cb * cfg.r * cfg.s) as u64;
+            slot.record(Pass::Upd, calls, cfg.flops(), self.bytes_moved(), tele0.elapsed());
+        }
         (dw, bd)
     }
 
@@ -1054,6 +1144,50 @@ mod tests {
             let got = run_fwd(&base.with_loop_order(s), &x, &wt);
             check_close(&got, &want, 1e-5, &format!("order {:?}", s));
         }
+    }
+
+    #[test]
+    fn profiler_counts_exact_and_backward_leaks_no_slot() {
+        use crate::telemetry::{self, Pass};
+        let _g = telemetry::test_lock();
+        let p = telemetry::install();
+        let (n, c, k, h, w, r, s) = (1, 4, 6, 5, 5, 3, 3);
+        let cfg = ConvConfig::new(n, c, k, h, w, r, s, 1, 1);
+        let prim = ConvPrimitive::new(cfg);
+        let mut rng = Rng::new(5);
+        let x = rng.vec_f32(n * c * h * w, -1.0, 1.0);
+        let wt = rng.vec_f32(k * c * r * s, -0.5, 0.5);
+        let xp = layout::pack_conv_act(&x, n, c, h, w, cfg.bc, cfg.pad, cfg.pad);
+        let wp = layout::pack_conv_weights(&wt, k, c, r, s, cfg.bk, cfg.bc);
+        let mut op = vec![0.0; cfg.output_len()];
+        prim.forward(&xp, &wp, None, &mut op);
+        let before = p.slots().len();
+        let (_dip, _) = prim.backward_data(&op, &wp);
+        let (_dw, _db, _) = prim.update(&xp, &op);
+        assert_eq!(
+            p.slots().len(),
+            before,
+            "the backward pass's internal dual plan must not register its own slot"
+        );
+        let slot = p
+            .slots()
+            .into_iter()
+            .find(|sl| sl.kind() == "conv" && sl.label() == "n1 c4 k6 5x5 f3x3/1")
+            .expect("slot registered at construction");
+        // bk = 6 -> kb = 1; bq = 5 -> one strip per row; P = 5 rows.
+        let fwd = slot.pass_snapshot(Pass::Fwd);
+        assert_eq!(fwd.calls, 1);
+        assert_eq!(fwd.brgemm_calls, 5, "fwd: one BRGEMM per (n, kb, row, strip)");
+        assert_eq!(fwd.flops, cfg.flops() as u64);
+        // Stride-1 bwd runs the dual conv (c=6, k=4, 7x7 output, bq=7):
+        // 1 * 1 * 7 * 1 = 7 calls, charged to this slot.
+        let bwd = slot.pass_snapshot(Pass::Bwd);
+        assert_eq!(bwd.calls, 1);
+        assert_eq!(bwd.brgemm_calls, 7, "bwd charges the dual conv's calls here");
+        // upd: one BRGEMM per (Kb x Cb) block x (R*S) tap = 1*1*9.
+        let upd = slot.pass_snapshot(Pass::Upd);
+        assert_eq!(upd.brgemm_calls, 9);
+        telemetry::uninstall();
     }
 
     #[test]

@@ -13,9 +13,11 @@
 use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
 use crate::primitives::eltwise::{act_backward, Act};
 use crate::primitives::partition::{Partition2d, Strategy};
+use crate::telemetry::{self, Pass, PrimSlot};
 use crate::util::num::largest_divisor_le;
 use crate::util::pool::{parallel_for, parallel_region, SharedMut};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Shape + blocking for one FC layer.
 #[derive(Debug, Clone, Copy)]
@@ -217,6 +219,9 @@ pub struct FcPrimitive {
     fwd_kernel: BrgemmKernel,
     bwd_kernel: BrgemmKernel,
     upd_kernel: BrgemmKernel,
+    /// Profiler slot — `None` (one branch per pass) unless a
+    /// [`crate::telemetry`] profiler was installed at construction time.
+    tele: Option<Arc<PrimSlot>>,
 }
 
 impl FcPrimitive {
@@ -279,7 +284,15 @@ impl FcPrimitive {
                 beta: 0.0,
             })
         };
-        FcPrimitive { cfg, fwd_kernel: fwd, bwd_kernel: bwd, upd_kernel: upd }
+        let tele = telemetry::register("fc", format!("n{} c{} k{}", cfg.n, cfg.c, cfg.k));
+        FcPrimitive { cfg, fwd_kernel: fwd, bwd_kernel: bwd, upd_kernel: upd, tele }
+    }
+
+    /// Tensor bytes one pass touches (activations + weights + outputs +
+    /// bias, f32) — the roofline's memory term for this shape.
+    fn bytes_moved(&self) -> u64 {
+        let c = &self.cfg;
+        4 * (c.n * c.c + c.k * c.c + c.n * c.k + c.k) as u64
     }
 
     /// Like [`FcPrimitive::new`], but first consults the persistent tuning
@@ -310,6 +323,7 @@ impl FcPrimitive {
         assert_eq!(w.len(), c.k * c.c);
         assert_eq!(bias.len(), c.k);
         assert_eq!(y.len(), c.n * c.k);
+        let t0 = self.tele.as_ref().map(|_| Instant::now());
         let (nb, cb, kb) = (c.nb(), c.cb(), c.kb());
         let xblk = c.bn * c.bc;
         let wblk = c.bc * c.bk;
@@ -350,6 +364,16 @@ impl FcPrimitive {
                 }
             }
         });
+        if let (Some(slot), Some(t0)) = (self.tele.as_ref(), t0) {
+            // One BRGEMM call per (Nb × Kb) output block.
+            slot.record(
+                Pass::Fwd,
+                (nb * kb) as u64,
+                c.flops(),
+                self.bytes_moved(),
+                t0.elapsed(),
+            );
+        }
     }
 
     /// Pre-activation gradient: `dz = dy ∘ act'(y)` (blocked, elementwise).
@@ -364,6 +388,7 @@ impl FcPrimitive {
         assert_eq!(dz.len(), c.n * c.k);
         assert_eq!(wt.len(), c.k * c.c);
         assert_eq!(dx.len(), c.n * c.c);
+        let t0 = self.tele.as_ref().map(|_| Instant::now());
         let (nb, cb, kb) = (c.nb(), c.cb(), c.kb());
         let zblk = c.bn * c.bk;
         let wblk = c.bc * c.bk;
@@ -383,6 +408,16 @@ impl FcPrimitive {
                 self.bwd_kernel.execute_offs(dz, &a_offs, wt, &b_offs, out, None);
             }
         });
+        if let (Some(slot), Some(t0)) = (self.tele.as_ref(), t0) {
+            // One BRGEMM call per (Nb × Cb) input-gradient block.
+            slot.record(
+                Pass::Bwd,
+                (nb * cb) as u64,
+                c.flops(),
+                self.bytes_moved(),
+                t0.elapsed(),
+            );
+        }
     }
 
     /// Weight update: `dW = Xᵀ·dZ` (blocked), `db = Σ_n dz`.
@@ -394,6 +429,7 @@ impl FcPrimitive {
         assert_eq!(dz.len(), c.n * c.k);
         assert_eq!(dw.len(), c.k * c.c);
         assert_eq!(db.len(), c.k);
+        let t0 = self.tele.as_ref().map(|_| Instant::now());
         let (nb, cb, kb) = (c.nb(), c.cb(), c.kb());
         let xblk = c.bn * c.bc;
         let zblk = c.bn * c.bk;
@@ -450,6 +486,17 @@ impl FcPrimitive {
                     }
                 }
             }
+        }
+        if let (Some(slot), Some(t0)) = (self.tele.as_ref(), t0) {
+            // One BRGEMM call per (Kb × Cb) weight-gradient block; the
+            // bias reduction is plain loops.
+            slot.record(
+                Pass::Upd,
+                (kb * cb) as u64,
+                c.flops(),
+                self.bytes_moved(),
+                t0.elapsed(),
+            );
         }
     }
 }
@@ -683,6 +730,45 @@ mod tests {
             FcPrimitive::new(base.with_loop_order(s)).forward(&xp, &wp, &b, &mut got);
             assert_eq!(got, want, "order {:?}", s);
         }
+    }
+
+    #[test]
+    fn profiler_counts_brgemm_calls_exactly() {
+        use crate::telemetry::{self, Pass};
+        let _g = telemetry::test_lock();
+        let p = telemetry::install();
+        // Distinctive shape so this test's slot is unambiguous even if
+        // other tests construct primitives while the profiler is live.
+        let (n, c, k) = (20, 22, 26);
+        let cfg = FcConfig::new(n, c, k, Act::Relu).with_blocking(5, 11, 13);
+        assert_eq!((cfg.nb(), cfg.cb(), cfg.kb()), (4, 2, 2));
+        let prim = FcPrimitive::new(cfg);
+        let (x, w, b) = setup(n, c, k, Act::Relu, 9);
+        let xp = pack_act_2d(&x, n, c, cfg.bn, cfg.bc);
+        let wp = pack_weights_2d(&w, k, c, cfg.bk, cfg.bc);
+        let mut yp = vec![0.0; n * k];
+        prim.forward(&xp, &wp, &b, &mut yp);
+        let dzp = vec![1.0; n * k];
+        let wt = transpose_packed_2d(&wp, k, c, cfg.bk, cfg.bc);
+        let mut dxp = vec![0.0; n * c];
+        prim.backward_data(&dzp, &wt, &mut dxp);
+        let mut dwp = vec![0.0; k * c];
+        let mut db = vec![0.0; k];
+        prim.update(&xp, &dzp, &mut dwp, &mut db);
+        let slot = p
+            .slots()
+            .into_iter()
+            .find(|s| s.kind() == "fc" && s.label() == "n20 c22 k26")
+            .expect("slot registered at construction");
+        let fwd = slot.pass_snapshot(Pass::Fwd);
+        assert_eq!(fwd.calls, 1);
+        assert_eq!(fwd.brgemm_calls, 8, "fwd issues one BRGEMM per (Nb x Kb) block");
+        assert_eq!(fwd.flops, cfg.flops() as u64);
+        let bwd = slot.pass_snapshot(Pass::Bwd);
+        assert_eq!(bwd.brgemm_calls, 8, "bwd issues one BRGEMM per (Nb x Cb) block");
+        let upd = slot.pass_snapshot(Pass::Upd);
+        assert_eq!(upd.brgemm_calls, 4, "upd issues one BRGEMM per (Kb x Cb) block");
+        telemetry::uninstall();
     }
 
     #[test]

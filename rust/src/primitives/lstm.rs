@@ -18,6 +18,7 @@
 use crate::brgemm::{BrgemmDesc, BrgemmKernel, Epilogue, Gemm};
 use crate::primitives::eltwise::Act;
 use crate::primitives::partition::{Partition2d, Strategy};
+use crate::telemetry::{self, Pass, PrimSlot};
 use crate::tensor::layout::{pack_weights_2d, transpose_packed_2d, unpack_weights_2d};
 use crate::util::pool::{parallel_region, SharedMut};
 use std::sync::Arc;
@@ -307,6 +308,9 @@ pub struct LstmPrimitive {
     kern_bwd_h: BrgemmKernel,         // dz·Rᵀ → dh
     kern_upd_w: BrgemmKernel,         // xᵀ·dz → dW
     kern_upd_r: BrgemmKernel,         // hᵀ·dz → dR
+    /// Profiler slot — None (one branch per pass) unless a profiler was
+    /// installed at construction time.
+    tele: Option<Arc<PrimSlot>>,
 }
 
 impl LstmPrimitive {
@@ -390,6 +394,8 @@ impl LstmPrimitive {
             alpha: 1.0,
             beta: 0.0,
         });
+        let tele =
+            telemetry::register("lstm", format!("n{} c{} k{} t{}", cfg.n, cfg.c, cfg.k, cfg.t));
         LstmPrimitive {
             cfg,
             kern_wx: wx,
@@ -398,7 +404,20 @@ impl LstmPrimitive {
             kern_bwd_h: bwd_h,
             kern_upd_w: upd_w,
             kern_upd_r: upd_r,
+            tele,
         }
+    }
+
+    /// Bytes of the pass working set (x, gates, h, s, weights, biases —
+    /// f32); the backward/update passes touch gradient tensors of the same
+    /// shapes, so one estimate serves every pass's roofline denominator.
+    fn bytes_moved(&self) -> u64 {
+        let c = &self.cfg;
+        4 * (c.t * c.n * c.c
+            + GATES * c.t * c.n * c.k
+            + 2 * (c.t + 1) * c.n * c.k
+            + GATES * c.k * (c.c + c.k)
+            + GATES * c.k) as u64
     }
 
     /// Like [`LstmPrimitive::new`], but first consults the persistent
@@ -478,6 +497,7 @@ impl LstmPrimitive {
             ws.s[..nk].fill(0.0);
         }
 
+        let tele0 = self.tele.as_ref().map(|_| Instant::now());
         let (nb, cb, kb) = (cfg.nb(), cfg.cb(), cfg.kb());
         let part = Partition2d::auto(nb, kb, cfg.nthreads, false);
         let gw = cfg.k * cfg.c; // per-gate packed W size
@@ -568,6 +588,11 @@ impl LstmPrimitive {
             bd.eltwise_secs += el;
             bd.gemm_secs += t0.elapsed().as_secs_f64() - el;
         }
+        if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
+            // Two BRGEMM calls (W·x, R·h) per gate per (nb × kb) block per step.
+            let calls = (cfg.t * nb * kb * GATES * 2) as u64;
+            slot.record(Pass::Fwd, calls, cfg.fwd_flops(), self.bytes_moved(), tele0.elapsed());
+        }
         bd
     }
 
@@ -586,6 +611,7 @@ impl LstmPrimitive {
         let nk = cfg.n * cfg.k;
         let tnk = cfg.t * nk;
         assert_eq!(dh_out.len(), tnk);
+        let tele0 = self.tele.as_ref().map(|_| Instant::now());
         let (nb, cb, kb) = (cfg.nb(), cfg.cb(), cfg.kb());
         let mut bd =
             LstmBreakdown { reformat_secs: weights_t.reformat_secs, ..Default::default() };
@@ -697,6 +723,15 @@ impl LstmPrimitive {
             }
             bd.gemm_secs += g0.elapsed().as_secs_f64();
         }
+        let tele1 = if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
+            // Per step: one dh chain per (nb × kb) block + one dx chain per
+            // (nb × cb) block; GEMM work equals one forward pass.
+            let calls = (cfg.t * nb * (kb + cb)) as u64;
+            slot.record(Pass::Bwd, calls, cfg.fwd_flops(), self.bytes_moved(), tele0.elapsed());
+            Some(Instant::now())
+        } else {
+            None
+        };
 
         // --- weight update: batch over (t, nb) in a single BRGEMM chain ---
         // Physical activation transposes (reformat; see kernel docs above).
@@ -792,6 +827,12 @@ impl LstmPrimitive {
             }
         }
         bd.gemm_secs += g0.elapsed().as_secs_f64();
+        if let (Some(slot), Some(tele1)) = (self.tele.as_ref(), tele1) {
+            // One (T·Nb)-long chain per dW block (4·Kb·Cb) + per dR block
+            // (4·Kb·Kb); GEMM work again equals one forward pass.
+            let calls = (GATES * kb * (cb + kb)) as u64;
+            slot.record(Pass::Upd, calls, cfg.fwd_flops(), self.bytes_moved(), tele1.elapsed());
+        }
 
         (LstmGrads { dx, dw, dr, db }, bd)
     }
@@ -1128,6 +1169,38 @@ mod tests {
         prim.forward_shared(&s.x, None, None, &shared, &mut ws_b);
         assert_eq!(ws_a.h, ws_b.h, "shared-weight forward must be bit-identical");
         assert_eq!(ws_a.s, ws_b.s);
+    }
+
+    #[test]
+    fn profiler_counts_brgemm_calls_exactly() {
+        let _g = telemetry::test_lock();
+        let p = telemetry::install();
+        let s = setup(4, 8, 8, 3, 21);
+        let cfg = s.cfg; // bn=4 cb=1 kb=1 nb=1
+        let prim = LstmPrimitive::new(cfg);
+        let wref: Vec<&[f32]> = s.w.iter().map(|v| v.as_slice()).collect();
+        let rref: Vec<&[f32]> = s.r.iter().map(|v| v.as_slice()).collect();
+        let bref: Vec<&[f32]> = s.b.iter().map(|v| v.as_slice()).collect();
+        let weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
+        let wt = weights.transposed();
+        let mut ws = LstmWorkspace::new(&cfg);
+        prim.forward(&s.x, None, None, &weights, &mut ws);
+        let dh_out = vec![1.0f32; cfg.t * cfg.n * cfg.k];
+        let (_grads, _) = prim.backward(&s.x, &dh_out, &wt, &ws);
+        let slot = p
+            .slots()
+            .into_iter()
+            .find(|sl| sl.kind() == "lstm" && sl.label() == "n4 c8 k8 t3")
+            .expect("slot registered at construction");
+        let fwd = slot.pass_snapshot(Pass::Fwd);
+        assert_eq!(fwd.calls, 1);
+        assert_eq!(fwd.brgemm_calls, 24, "T * Nb * Kb * gates * 2 = 3*1*1*4*2");
+        assert_eq!(fwd.flops, cfg.fwd_flops() as u64);
+        let bwd = slot.pass_snapshot(Pass::Bwd);
+        assert_eq!(bwd.brgemm_calls, 6, "T * Nb * (Kb + Cb) = 3*1*2");
+        let upd = slot.pass_snapshot(Pass::Upd);
+        assert_eq!(upd.brgemm_calls, 8, "gates * Kb * (Cb + Kb) = 4*1*2");
+        telemetry::uninstall();
     }
 
     #[test]

@@ -193,6 +193,15 @@ impl Server {
         ReloadHandle { shared: Arc::clone(&self.shared) }
     }
 
+    /// Point-in-time report over everything served so far. The run keeps
+    /// going — this is what the periodic `--metrics-every` emitter prints;
+    /// throughput uses the wall clock since [`Server::start`].
+    pub fn stats_snapshot(&self) -> ServeReport {
+        let wall = self.started.elapsed().as_secs_f64();
+        let reloads = self.shared.model.reload_count();
+        self.shared.stats.lock().unwrap().report(wall, reloads)
+    }
+
     /// Stop intake, drain the queue, join the workers, and report. Every
     /// request accepted before this call is answered before it returns.
     pub fn shutdown(self) -> ServeReport {
@@ -282,6 +291,9 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
             let depth = st.queue.len();
             (taken, depth)
         };
+        // The dequeue instant splits each request's latency into its two
+        // stages: enqueue→here is queue wait, the rest is batch execution.
+        let dequeued = Instant::now();
         let fill = taken.len();
         let bucket = shared.model.bucket_for(fill);
         // Pad to the bucket with zero rows; their outputs are computed and
@@ -294,12 +306,16 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
         for (i, r) in taken.iter().enumerate() {
             x[i * dim..(i + 1) * dim].copy_from_slice(&r.input);
         }
+        let t_fwd = Instant::now();
         let logits = shared.model.forward_with(bucket, x, &mut scratch);
         let done = Instant::now();
+        let compute_secs = done.duration_since(t_fwd).as_secs_f64();
         let mut lats = Vec::with_capacity(fill);
+        let mut waits = Vec::with_capacity(fill);
         for (i, r) in taken.into_iter().enumerate() {
             let latency = done.duration_since(r.enqueued).as_secs_f64();
             lats.push(latency);
+            waits.push(dequeued.duration_since(r.enqueued).as_secs_f64());
             // Send failures mean the collector hung up early; serving
             // statistics still account the work.
             let _ = tx.send(Response {
@@ -310,7 +326,18 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
                 fill,
             });
         }
-        shared.stats.lock().unwrap().record_batch(bucket, fill, depth_after, &lats);
+        crate::log_trace!(
+            "batch b{} fill {} depth {} compute {:.3} ms",
+            bucket,
+            fill,
+            depth_after,
+            compute_secs * 1e3
+        );
+        shared
+            .stats
+            .lock()
+            .unwrap()
+            .record_batch(bucket, fill, depth_after, &lats, &waits, compute_secs);
     }
 }
 
@@ -389,6 +416,16 @@ mod tests {
             .map(|&(b, batches, fill)| fill * (b * batches) as f64)
             .sum();
         assert!((hist_requests - n as f64).abs() < 1e-6, "{} vs {}", hist_requests, n);
+        // Stage tracing: every batch timed its forward, and a request's
+        // queue wait is a prefix of its latency, so the means must order.
+        assert!(report.compute_mean_ms > 0.0, "forward compute was timed");
+        assert!(
+            report.queue_wait_mean_ms <= report.mean_ms + 1e-9,
+            "queue wait {} must not exceed end-to-end latency {}",
+            report.queue_wait_mean_ms,
+            report.mean_ms
+        );
+        assert_eq!(report.bucket_stages.len(), report.batch_fill.len());
     }
 
     #[test]

@@ -73,6 +73,20 @@ pub fn drive_open_loop(
     server: Server,
     rx: std::sync::mpsc::Receiver<Response>,
     load: &LoadSpec,
+    make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
+) -> (ServeReport, Vec<Response>) {
+    drive_open_loop_every(server, rx, load, None, make_input)
+}
+
+/// [`drive_open_loop`] with an optional periodic snapshot: every
+/// `every` seconds (checked at arrival granularity) the server's
+/// point-in-time [`ServeReport`] is logged as one compact JSON line —
+/// the `serve --metrics-every` flag lands here.
+pub fn drive_open_loop_every(
+    server: Server,
+    rx: std::sync::mpsc::Receiver<Response>,
+    load: &LoadSpec,
+    every: Option<f64>,
     mut make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
 ) -> (ServeReport, Vec<Response>) {
     let collector = std::thread::spawn(move || {
@@ -93,6 +107,10 @@ pub fn drive_open_loop(
     // = e⁻¹⁰, so the delivered rate is unbiased at any configured rate
     // (a fixed-seconds cap would silently inflate low rates).
     let gap_cap = 10.0 / load.rate_rps;
+    let mut next_snapshot = every.map(|e| {
+        assert!(e > 0.0, "--metrics-every must be positive");
+        e
+    });
     for i in 0..load.requests {
         due += poisson_gap_secs(&mut rng, load.rate_rps).min(gap_cap);
         let now = start.elapsed().as_secs_f64();
@@ -100,6 +118,16 @@ pub fn drive_open_loop(
             std::thread::sleep(Duration::from_secs_f64(due - now));
         }
         server.submit(make_input(&mut rng, i));
+        if let Some(at) = next_snapshot {
+            let elapsed = start.elapsed().as_secs_f64();
+            if elapsed >= at {
+                let snap = server.stats_snapshot();
+                crate::log_info!("serve snapshot: {}", snap.to_json().to_string_compact());
+                // Skip past missed ticks instead of bursting to catch up.
+                let e = every.unwrap();
+                next_snapshot = Some(at + (((elapsed - at) / e).floor() + 1.0) * e);
+            }
+        }
     }
     let report = server.shutdown();
     let responses = collector.join().expect("response collector panicked");

@@ -11,42 +11,86 @@ use crate::util::json::{obj, Json};
 use crate::util::stats::{percentile, Online};
 use std::collections::BTreeMap;
 
-/// Per-bucket accounting: how many batches ran at this bucket size, and
-/// how many real (non-padded) requests they carried.
-#[derive(Debug, Clone, Copy, Default)]
+/// Per-bucket accounting: how many batches ran at this bucket size, how
+/// many real (non-padded) requests they carried, and the stage split —
+/// time requests spent queued vs the batch's forward-compute time.
+#[derive(Debug, Clone)]
 pub struct BucketStat {
     pub batches: usize,
     pub requests: usize,
+    /// Enqueue→dequeue seconds of the real requests in this bucket.
+    pub queue_wait: Online,
+    /// Forward-compute seconds per batch executed at this bucket size.
+    pub compute: Online,
+}
+
+impl Default for BucketStat {
+    fn default() -> BucketStat {
+        // Explicit so the Online accumulators start with the ±∞ min/max
+        // sentinels of `Online::new`, not the derived zeros.
+        BucketStat {
+            batches: 0,
+            requests: 0,
+            queue_wait: Online::new(),
+            compute: Online::new(),
+        }
+    }
 }
 
 /// Accumulated by the worker pool during a serving run.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServeStats {
     latencies: Vec<f64>,
     queue_depth: Option<Online>,
     buckets: BTreeMap<usize, BucketStat>,
+    /// Run-wide stage accumulators (the per-bucket splits, merged).
+    queue_wait: Online,
+    compute: Online,
+}
+
+impl Default for ServeStats {
+    fn default() -> ServeStats {
+        ServeStats::new()
+    }
 }
 
 impl ServeStats {
     pub fn new() -> ServeStats {
-        ServeStats { latencies: Vec::new(), queue_depth: None, buckets: BTreeMap::new() }
+        ServeStats {
+            latencies: Vec::new(),
+            queue_depth: None,
+            buckets: BTreeMap::new(),
+            queue_wait: Online::new(),
+            compute: Online::new(),
+        }
     }
 
     /// One executed batch: `bucket` is the padded size, `fill` the real
     /// request count (`fill <= bucket`), `depth_after` the queue backlog
     /// right after the batch was taken, `latencies` the enqueue→response
-    /// seconds of the `fill` real requests.
+    /// seconds of the `fill` real requests, `queue_waits` their
+    /// enqueue→dequeue seconds (same order), and `compute_secs` the
+    /// batch's forward-compute time.
     pub fn record_batch(
         &mut self,
         bucket: usize,
         fill: usize,
         depth_after: usize,
         latencies: &[f64],
+        queue_waits: &[f64],
+        compute_secs: f64,
     ) {
         assert!(fill <= bucket && fill == latencies.len());
+        assert_eq!(queue_waits.len(), fill, "one queue-wait sample per real request");
         let e = self.buckets.entry(bucket).or_default();
         e.batches += 1;
         e.requests += fill;
+        for &w in queue_waits {
+            e.queue_wait.push(w);
+            self.queue_wait.push(w);
+        }
+        e.compute.push(compute_secs);
+        self.compute.push(compute_secs);
         self.queue_depth.get_or_insert_with(Online::new).push(depth_after as f64);
         self.latencies.extend_from_slice(latencies);
     }
@@ -62,12 +106,18 @@ impl ServeStats {
     pub fn report(&self, wall_secs: f64, reloads: u64) -> ServeReport {
         let n = self.latencies.len();
         let mut sorted = self.latencies.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a single NaN sample (a
+        // clock hiccup) must not panic the report; NaNs sort to the end.
+        sorted.sort_by(f64::total_cmp);
         let pct = |q: f64| if n == 0 { 0.0 } else { percentile(&sorted, q) * 1e3 };
         let (qd_mean, qd_max) = match &self.queue_depth {
             Some(o) => (o.mean(), o.max),
             None => (0.0, 0.0),
         };
+        let stage_ms = |o: &Online| if o.n == 0 { (0.0, 0.0) } else { (o.mean() * 1e3, o.max * 1e3) };
+        let (qw_mean, qw_max) = stage_ms(&self.queue_wait);
+        let (cp_mean, cp_max) = stage_ms(&self.compute);
+        let bucket_mean = |o: &Online| if o.n == 0 { 0.0 } else { o.mean() * 1e3 };
         ServeReport {
             requests: n,
             reloads,
@@ -84,10 +134,19 @@ impl ServeStats {
             max_ms: sorted.last().copied().unwrap_or(0.0) * 1e3,
             queue_depth_mean: qd_mean,
             queue_depth_max: qd_max,
+            queue_wait_mean_ms: qw_mean,
+            queue_wait_max_ms: qw_max,
+            compute_mean_ms: cp_mean,
+            compute_max_ms: cp_max,
             batch_fill: self
                 .buckets
                 .iter()
                 .map(|(&b, s)| (b, s.batches, s.requests as f64 / (s.batches * b) as f64))
+                .collect(),
+            bucket_stages: self
+                .buckets
+                .iter()
+                .map(|(&b, s)| (b, bucket_mean(&s.queue_wait), bucket_mean(&s.compute)))
                 .collect(),
         }
     }
@@ -110,8 +169,17 @@ pub struct ServeReport {
     /// Queue backlog sampled at every dequeue (mean / max).
     pub queue_depth_mean: f64,
     pub queue_depth_max: f64,
+    /// Stage split of the end-to-end latency: time a request spent queued
+    /// before the batcher dequeued it (ms)...
+    pub queue_wait_mean_ms: f64,
+    pub queue_wait_max_ms: f64,
+    /// ...vs the forward-compute time of the batch that carried it (ms).
+    pub compute_mean_ms: f64,
+    pub compute_max_ms: f64,
     /// Per bucket size: (bucket, batches executed, mean fill fraction).
     pub batch_fill: Vec<(usize, usize, f64)>,
+    /// Per bucket size: (bucket, mean queue-wait ms, mean compute ms).
+    pub bucket_stages: Vec<(usize, f64, f64)>,
 }
 
 impl ServeReport {
@@ -129,17 +197,27 @@ impl ServeReport {
             "queue depth at dequeue: mean {:.2}  max {:.0}\n",
             self.queue_depth_mean, self.queue_depth_max
         ));
+        s.push_str(&format!(
+            "stage split ms: queue-wait mean {:.3} max {:.3}  compute mean {:.3} max {:.3}\n",
+            self.queue_wait_mean_ms, self.queue_wait_max_ms, self.compute_mean_ms, self.compute_max_ms
+        ));
         if self.reloads > 0 {
             s.push_str(&format!("hot weight reloads: {}\n", self.reloads));
         }
-        s.push_str("batch-fill histogram (bucket: batches, mean fill):\n");
-        for (bucket, batches, fill) in &self.batch_fill {
+        s.push_str("batch-fill histogram (bucket: batches, mean fill, stage split):\n");
+        for (i, (bucket, batches, fill)) in self.batch_fill.iter().enumerate() {
             s.push_str(&format!(
-                "  b{:<4} {:>6} batches  {:>5.1}% full\n",
+                "  b{:<4} {:>6} batches  {:>5.1}% full",
                 bucket,
                 batches,
                 100.0 * fill
             ));
+            // bucket_stages parallels batch_fill (both walk the same
+            // ordered bucket map), but guard anyway.
+            if let Some((_, qw, cp)) = self.bucket_stages.get(i) {
+                s.push_str(&format!("  wait {:.3} ms  compute {:.3} ms", qw, cp));
+            }
+            s.push('\n');
         }
         s
     }
@@ -150,11 +228,19 @@ impl ServeReport {
         let hist: Vec<Json> = self
             .batch_fill
             .iter()
-            .map(|&(b, n, f)| {
+            .enumerate()
+            .map(|(i, &(b, n, f))| {
+                let (qw, cp) = self
+                    .bucket_stages
+                    .get(i)
+                    .map(|&(_, qw, cp)| (qw, cp))
+                    .unwrap_or((0.0, 0.0));
                 obj([
                     ("bucket", (b as f64).into()),
                     ("batches", (n as f64).into()),
                     ("mean_fill", f.into()),
+                    ("queue_wait_ms", qw.into()),
+                    ("compute_ms", cp.into()),
                 ])
             })
             .collect();
@@ -170,6 +256,20 @@ impl ServeReport {
             ("max_ms", self.max_ms.into()),
             ("queue_depth_mean", self.queue_depth_mean.into()),
             ("queue_depth_max", self.queue_depth_max.into()),
+            (
+                "queue_wait",
+                obj([
+                    ("mean_ms", self.queue_wait_mean_ms.into()),
+                    ("max_ms", self.queue_wait_max_ms.into()),
+                ]),
+            ),
+            (
+                "compute",
+                obj([
+                    ("mean_ms", self.compute_mean_ms.into()),
+                    ("max_ms", self.compute_max_ms.into()),
+                ]),
+            ),
             ("batch_fill", Json::Arr(hist)),
         ])
     }
@@ -183,9 +283,9 @@ mod tests {
     fn percentiles_and_histogram() {
         let mut st = ServeStats::new();
         // Two b4 batches (fills 4 and 2) and one b1 batch.
-        st.record_batch(4, 4, 3, &[0.010, 0.020, 0.030, 0.040]);
-        st.record_batch(4, 2, 1, &[0.050, 0.060]);
-        st.record_batch(1, 1, 0, &[0.070]);
+        st.record_batch(4, 4, 3, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004], 0.006);
+        st.record_batch(4, 2, 1, &[0.050, 0.060], &[0.005, 0.006], 0.044);
+        st.record_batch(1, 1, 0, &[0.070], &[0.010], 0.060);
         assert_eq!(st.requests(), 7);
         let r = st.report(1.0, 2);
         assert_eq!(r.requests, 7);
@@ -203,9 +303,47 @@ mod tests {
         // Queue depth mean over samples 3,1,0.
         assert!((r.queue_depth_mean - 4.0 / 3.0).abs() < 1e-12);
         assert_eq!(r.queue_depth_max, 3.0);
-        // JSON row carries the headline numbers.
+        // JSON row carries the headline numbers and the stage split.
         let j = r.to_json().to_string_compact();
         assert!(j.contains("\"throughput_rps\"") && j.contains("\"p99_ms\""), "{}", j);
+        assert!(j.contains("\"queue_wait\"") && j.contains("\"compute\""), "{}", j);
+    }
+
+    #[test]
+    fn queue_wait_compute_split_arithmetic() {
+        let mut st = ServeStats::new();
+        st.record_batch(4, 4, 3, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004], 0.006);
+        st.record_batch(4, 2, 1, &[0.050, 0.060], &[0.005, 0.006], 0.044);
+        st.record_batch(1, 1, 0, &[0.070], &[0.010], 0.060);
+        let r = st.report(1.0, 0);
+        // Run-wide queue wait over 7 samples: (1+2+3+4+5+6+10)/7 ms.
+        assert!((r.queue_wait_mean_ms - 31.0 / 7.0).abs() < 1e-9, "{}", r.queue_wait_mean_ms);
+        assert!((r.queue_wait_max_ms - 10.0).abs() < 1e-9);
+        // Compute per batch: 6, 44, 60 ms → mean 110/3.
+        assert!((r.compute_mean_ms - 110.0 / 3.0).abs() < 1e-9, "{}", r.compute_mean_ms);
+        assert!((r.compute_max_ms - 60.0).abs() < 1e-9);
+        // Per-bucket splits parallel the fill histogram ordering (b1, b4).
+        assert_eq!(r.bucket_stages.len(), 2);
+        assert_eq!(r.bucket_stages[0].0, 1);
+        assert!((r.bucket_stages[0].1 - 10.0).abs() < 1e-9);
+        assert!((r.bucket_stages[0].2 - 60.0).abs() < 1e-9);
+        assert_eq!(r.bucket_stages[1].0, 4);
+        assert!((r.bucket_stages[1].1 - 21.0 / 6.0).abs() < 1e-9, "{}", r.bucket_stages[1].1);
+        assert!((r.bucket_stages[1].2 - 25.0).abs() < 1e-9);
+        // And the render mentions the split.
+        assert!(r.render().contains("stage split"), "{}", r.render());
+    }
+
+    #[test]
+    fn nan_latency_sample_does_not_panic() {
+        let mut st = ServeStats::new();
+        // One corrupt (NaN) latency among three good ones: the old
+        // partial_cmp().unwrap() sort comparator panicked here.
+        st.record_batch(4, 4, 0, &[0.010, 0.020, f64::NAN, 0.030], &[0.001; 4], 0.005);
+        let r = st.report(1.0, 0);
+        assert_eq!(r.requests, 4);
+        // NaN sorts last under total_cmp, so the median stays finite.
+        assert!(r.p50_ms.is_finite(), "{}", r.p50_ms);
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub mod model;
 pub mod watch;
 
 pub use batcher::{ReloadHandle, Response, ServeOpts, Server};
-pub use loadgen::{drive_open_loop, run_open_loop, run_open_loop_with, LoadSpec};
+pub use loadgen::{drive_open_loop, drive_open_loop_every, run_open_loop, run_open_loop_with, LoadSpec};
 pub use metrics::{ServeReport, ServeStats};
 pub use model::{InferenceModel, NetSpec, ServeScratch};
 pub use watch::ModelWatcher;

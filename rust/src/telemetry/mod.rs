@@ -1,0 +1,544 @@
+//! Crate-wide telemetry: metric registries, and a gated per-primitive
+//! BRGEMM profiler.
+//!
+//! Two complementary pieces live here:
+//!
+//! * [`Metrics`] — named counters and timers owned by one worker (no
+//!   shared mutable state on the hot path) and merged exactly at the end
+//!   via the parallel-Welford merge ([`merge_online`]). The training
+//!   drivers export these as JSON lines through `run --metrics-out`.
+//! * The **profiler** — a process-global, explicitly installed registry of
+//!   per-primitive [`PrimSlot`]s. Every `FcPrimitive` / `ConvPrimitive` /
+//!   `LstmPrimitive` asks [`register`] for a slot at construction; when no
+//!   profiler is installed that returns `None` and the hot path pays a
+//!   single branch per pass — nothing else. When installed, each pass
+//!   records BRGEMM invocations, flops, bytes moved, and wall time with
+//!   relaxed atomics, and [`Profiler::snapshot`] turns that into achieved
+//!   GFLOPS and efficiency-vs-roofline using the measured host peak from
+//!   [`crate::perfmodel`].
+//!
+//! Instrumentation never touches the math: enabling the profiler changes
+//! timing side channels only, so instrumented and uninstrumented runs are
+//! bit-identical (tested below).
+
+use crate::perfmodel::{host_platform, roofline_secs};
+use crate::util::json::{obj, Json};
+use crate::util::stats::Online;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A metric registry. Not thread-safe by design — each worker owns one and
+/// they are merged at the end (the same pattern the primitives use for
+/// outputs: no shared mutable state on the hot path).
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, Online>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe_secs(&mut self, name: &str, secs: f64) {
+        self.timers.entry(name.to_string()).or_insert_with(Online::new).push(secs);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.observe_secs(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn timer_mean(&self, name: &str) -> Option<f64> {
+        self.timers.get(name).map(|o| o.mean())
+    }
+
+    /// Merge another registry into this one (post-run worker merge).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, o) in &other.timers {
+            let mine = self.timers.entry(k.clone()).or_insert_with(Online::new);
+            *mine = merge_online(mine, o);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let timers = Json::Obj(
+            self.timers
+                .iter()
+                .map(|(k, o)| {
+                    (
+                        k.clone(),
+                        obj([
+                            ("n", o.n.into()),
+                            ("mean_s", o.mean().into()),
+                            ("std_s", o.std().into()),
+                            ("min_s", o.min.into()),
+                            ("max_s", o.max.into()),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj([("counters", counters), ("timers", timers)])
+    }
+}
+
+/// Chan et al. parallel-Welford merge (exact). Public so anything merging
+/// per-worker [`Online`] accumulators gets the same numerics as
+/// [`Metrics::merge`].
+pub fn merge_online(a: &Online, b: &Online) -> Online {
+    if b.n == 0 {
+        return a.clone();
+    }
+    if a.n == 0 {
+        return b.clone();
+    }
+    let (na, nb) = (a.n as f64, b.n as f64);
+    let delta = b.mean() - a.mean();
+    let mean = a.mean() + delta * nb / (na + nb);
+    let m2 = a.std().powi(2) * (na - 1.0).max(0.0)
+        + b.std().powi(2) * (nb - 1.0).max(0.0)
+        + delta * delta * na * nb / (na + nb);
+    Online::from_moments(a.n + b.n, mean, m2, a.min.min(b.min), a.max.max(b.max))
+}
+
+/// Achieved GFLOPS — the one flop-rate formula shared by the bench
+/// harness, the profiler snapshot, and the CLI's `primitive` report.
+pub fn achieved_gflops(flops: f64, secs: f64) -> f64 {
+    if secs > 0.0 {
+        flops / secs / 1e9
+    } else {
+        0.0
+    }
+}
+
+/// The three primitive passes a slot distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Fwd = 0,
+    Bwd = 1,
+    Upd = 2,
+}
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::Fwd => "fwd",
+            Pass::Bwd => "bwd",
+            Pass::Upd => "upd",
+        }
+    }
+}
+
+const PASSES: [Pass; 3] = [Pass::Fwd, Pass::Bwd, Pass::Upd];
+
+/// Per-pass accumulators. Relaxed atomics: slots are shared between the
+/// serving worker pool's threads and counters only ever accumulate — no
+/// ordering is needed, and a snapshot mid-run is allowed to be slightly
+/// torn (it is a monitoring read, not a consistency point).
+#[derive(Debug, Default)]
+struct PassCounters {
+    calls: AtomicU64,
+    brgemm_calls: AtomicU64,
+    flops: AtomicU64,
+    bytes: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// A read-out of one pass of one slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassSnapshot {
+    pub calls: u64,
+    pub brgemm_calls: u64,
+    pub flops: u64,
+    pub bytes: u64,
+    pub secs: f64,
+}
+
+/// One instrumented primitive instance: a `kind` ("fc" | "conv" | "lstm"),
+/// a shape label, and per-pass counters.
+#[derive(Debug)]
+pub struct PrimSlot {
+    kind: &'static str,
+    label: String,
+    passes: [PassCounters; 3],
+}
+
+impl PrimSlot {
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Record one executed pass: how many BRGEMM kernel invocations it
+    /// issued, the flops and bytes it moved, and how long it took.
+    pub fn record(&self, pass: Pass, brgemm_calls: u64, flops: f64, bytes: u64, took: Duration) {
+        let p = &self.passes[pass as usize];
+        p.calls.fetch_add(1, Ordering::Relaxed);
+        p.brgemm_calls.fetch_add(brgemm_calls, Ordering::Relaxed);
+        p.flops.fetch_add(flops as u64, Ordering::Relaxed);
+        p.bytes.fetch_add(bytes, Ordering::Relaxed);
+        p.nanos.fetch_add(took.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn pass_snapshot(&self, pass: Pass) -> PassSnapshot {
+        let p = &self.passes[pass as usize];
+        PassSnapshot {
+            calls: p.calls.load(Ordering::Relaxed),
+            brgemm_calls: p.brgemm_calls.load(Ordering::Relaxed),
+            flops: p.flops.load(Ordering::Relaxed),
+            bytes: p.bytes.load(Ordering::Relaxed),
+            secs: p.nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// The process-global slot registry. Primitives register at construction;
+/// [`Profiler::snapshot`] reads everything out as JSON.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    slots: Mutex<Vec<Arc<PrimSlot>>>,
+}
+
+impl Profiler {
+    pub fn slots(&self) -> Vec<Arc<PrimSlot>> {
+        self.slots.lock().unwrap().clone()
+    }
+
+    /// Per-slot, per-pass read-out with achieved GFLOPS and
+    /// efficiency-vs-roofline (roofline time / actual time, clamped to 1;
+    /// the roofline uses the measured single-core host peak and the
+    /// modelled stream bandwidth from [`crate::perfmodel`]).
+    pub fn snapshot(&self) -> Json {
+        let platform = host_platform();
+        let rows: Vec<Json> = self
+            .slots()
+            .iter()
+            .filter_map(|slot| {
+                let passes: Vec<Json> = PASSES
+                    .iter()
+                    .filter_map(|&pass| {
+                        let s = slot.pass_snapshot(pass);
+                        if s.calls == 0 {
+                            return None;
+                        }
+                        let gflops = achieved_gflops(s.flops as f64, s.secs);
+                        let roof = roofline_secs(s.flops as f64, s.bytes as f64, &platform);
+                        let efficiency =
+                            if s.secs > 0.0 { (roof / s.secs).min(1.0) } else { 0.0 };
+                        Some(obj([
+                            ("pass", pass.name().into()),
+                            ("calls", (s.calls as f64).into()),
+                            ("brgemm_calls", (s.brgemm_calls as f64).into()),
+                            ("flops", (s.flops as f64).into()),
+                            ("bytes", (s.bytes as f64).into()),
+                            ("secs", s.secs.into()),
+                            ("gflops", gflops.into()),
+                            ("efficiency", efficiency.into()),
+                        ]))
+                    })
+                    .collect();
+                if passes.is_empty() {
+                    return None;
+                }
+                Some(obj([
+                    ("kind", slot.kind.into()),
+                    ("label", slot.label.as_str().into()),
+                    ("passes", Json::Arr(passes)),
+                ]))
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// Render the snapshot as aligned text lines (the `--metrics-out`
+    /// JSON is the machine form; this is for the log).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for slot in self.slots() {
+            for &pass in &PASSES {
+                let p = slot.pass_snapshot(pass);
+                if p.calls == 0 {
+                    continue;
+                }
+                let gf = achieved_gflops(p.flops as f64, p.secs);
+                s.push_str(&format!(
+                    "  {:<5} {:<28} {:>4} {:>6} calls  {:>8} brgemm  {:>8.2} GF/s\n",
+                    slot.kind,
+                    slot.label,
+                    pass.name(),
+                    p.calls,
+                    p.brgemm_calls,
+                    gf
+                ));
+            }
+        }
+        s
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PROFILER: Mutex<Option<Arc<Profiler>>> = Mutex::new(None);
+
+/// Install a fresh global profiler and return it. Primitives constructed
+/// from now on register slots in it. Idempotent: installing again replaces
+/// the registry (slots held by live primitives keep accumulating into
+/// their own `Arc`s, but they leave the new snapshot).
+pub fn install() -> Arc<Profiler> {
+    let p = Arc::new(Profiler::default());
+    *PROFILER.lock().unwrap() = Some(p.clone());
+    ENABLED.store(true, Ordering::Release);
+    p
+}
+
+/// Remove the global profiler. Already-constructed primitives drop to the
+/// branch-only disabled path on their next pass? No — they keep their
+/// slot `Arc` and keep recording into it; only *new* primitives skip
+/// registration. Uninstall is for test isolation, not mid-run toggling.
+pub fn uninstall() {
+    ENABLED.store(false, Ordering::Release);
+    *PROFILER.lock().unwrap() = None;
+}
+
+/// Whether a profiler is currently installed (one atomic load).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// Called by primitive constructors: a slot in the installed profiler, or
+/// `None` (the common case) when profiling is off — the primitive then
+/// pays one branch per pass and nothing else.
+pub fn register(kind: &'static str, label: String) -> Option<Arc<PrimSlot>> {
+    if !enabled() {
+        return None;
+    }
+    let guard = PROFILER.lock().unwrap();
+    let profiler = guard.as_ref()?;
+    let slot = Arc::new(PrimSlot { kind, label, passes: Default::default() });
+    profiler.slots.lock().unwrap().push(slot.clone());
+    Some(slot)
+}
+
+/// Serialises tests (and anything else) that install the global profiler,
+/// so concurrent `cargo test` threads cannot swap it under each other.
+/// Lock poisoning from a failed test is ignored — the lock only provides
+/// exclusion, it guards no data.
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let mut m = Metrics::new();
+        m.inc("requests", 2);
+        m.inc("requests", 3);
+        assert_eq!(m.counter("requests"), 5);
+        m.observe_secs("step", 0.1);
+        m.observe_secs("step", 0.3);
+        assert!((m.timer_mean("step").unwrap() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_records_and_returns() {
+        let mut m = Metrics::new();
+        let v = m.time("op", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.timers.get("op").unwrap().n, 1);
+    }
+
+    #[test]
+    fn merge_combines_exactly() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        for x in [1.0, 2.0, 3.0] {
+            a.observe_secs("t", x);
+        }
+        for x in [4.0, 5.0] {
+            b.observe_secs("t", x);
+        }
+        a.inc("c", 1);
+        b.inc("c", 2);
+        a.merge(&b);
+        assert_eq!(a.counter("c"), 3);
+        let mut whole = Metrics::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            whole.observe_secs("t", x);
+        }
+        let got = a.timers.get("t").unwrap();
+        let want = whole.timers.get("t").unwrap();
+        assert_eq!(got.n, want.n);
+        assert!((got.mean() - want.mean()).abs() < 1e-12);
+        assert!((got.std() - want.std()).abs() < 1e-9);
+        assert_eq!(got.min, want.min);
+        assert_eq!(got.max, want.max);
+    }
+
+    #[test]
+    fn merge_single_sample_registries() {
+        // n=1 on both sides: (na-1) and (nb-1) weights are zero, the
+        // variance comes entirely from the delta term.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.observe_secs("t", 2.0);
+        b.observe_secs("t", 4.0);
+        a.merge(&b);
+        let got = a.timers.get("t").unwrap();
+        let mut whole = Online::new();
+        whole.push(2.0);
+        whole.push(4.0);
+        assert_eq!(got.n, 2);
+        assert!((got.mean() - whole.mean()).abs() < 1e-12);
+        assert!((got.std() - whole.std()).abs() < 1e-12);
+        assert_eq!(got.min, 2.0);
+        assert_eq!(got.max, 4.0);
+    }
+
+    #[test]
+    fn merge_empty_into_nonempty_and_back() {
+        let mut a = Metrics::new();
+        for x in [1.0, 3.0] {
+            a.observe_secs("t", x);
+        }
+        let before = a.timers.get("t").unwrap().clone();
+        a.merge(&Metrics::new()); // empty other: a unchanged
+        let after = a.timers.get("t").unwrap();
+        assert_eq!(after.n, before.n);
+        assert!((after.mean() - before.mean()).abs() < 1e-15);
+        assert_eq!(after.min, before.min);
+
+        let mut empty = Metrics::new();
+        empty.merge(&a); // empty self: becomes a copy
+        let got = empty.timers.get("t").unwrap();
+        assert_eq!(got.n, 2);
+        assert!((got.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(got.min, 1.0);
+        assert_eq!(got.max, 3.0);
+    }
+
+    #[test]
+    fn merge_counter_only_registries() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.inc("steps", 7);
+        b.inc("steps", 5);
+        b.inc("evals", 1);
+        a.merge(&b);
+        assert_eq!(a.counter("steps"), 12);
+        assert_eq!(a.counter("evals"), 1);
+        assert!(a.timers.is_empty());
+    }
+
+    #[test]
+    fn merge_online_is_exact_across_splits() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut whole = Online::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        for split in 1..xs.len() {
+            let (l, r) = xs.split_at(split);
+            let mut a = Online::new();
+            let mut b = Online::new();
+            l.iter().for_each(|&x| a.push(x));
+            r.iter().for_each(|&x| b.push(x));
+            let m = merge_online(&a, &b);
+            assert_eq!(m.n, whole.n);
+            assert!((m.mean() - whole.mean()).abs() < 1e-12);
+            assert!((m.std() - whole.std()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut m = Metrics::new();
+        m.inc("x", 1);
+        m.observe_secs("t", 0.5);
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get("x").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("timers").unwrap().get("t").unwrap().get("mean_s").is_some());
+    }
+
+    #[test]
+    fn profiler_register_gating() {
+        let _g = test_lock();
+        uninstall();
+        assert!(!enabled());
+        assert!(register("fc", "off".into()).is_none());
+        let p = install();
+        assert!(enabled());
+        let slot = register("fc", "on".into()).expect("profiler installed");
+        slot.record(Pass::Fwd, 6, 100.0, 50, Duration::from_micros(10));
+        slot.record(Pass::Fwd, 6, 100.0, 50, Duration::from_micros(10));
+        let s = slot.pass_snapshot(Pass::Fwd);
+        assert_eq!(s.calls, 2);
+        assert_eq!(s.brgemm_calls, 12);
+        assert_eq!(s.flops, 200);
+        assert_eq!(s.bytes, 100);
+        assert!(s.secs > 0.0);
+        assert_eq!(p.slots().len(), 1);
+        uninstall();
+    }
+
+    #[test]
+    fn snapshot_reports_efficiency_in_unit_interval() {
+        let _g = test_lock();
+        let p = install();
+        let slot = register("fc", "eff-test".into()).unwrap();
+        // A plausible pass: 1 GFLOP in 10 ms -> 100 GF/s. Efficiency must
+        // land in (0, 1] whatever the measured host peak is.
+        slot.record(Pass::Fwd, 4, 1e9, 1 << 20, Duration::from_millis(10));
+        let j = p.snapshot();
+        let row = match &j {
+            Json::Arr(rows) => rows
+                .iter()
+                .find(|r| r.get("label").and_then(|l| l.as_str()) == Some("eff-test"))
+                .expect("slot present"),
+            _ => panic!("snapshot is an array"),
+        };
+        let pass = match row.get("passes").unwrap() {
+            Json::Arr(ps) => ps[0].clone(),
+            _ => panic!("passes is an array"),
+        };
+        assert_eq!(pass.get("pass").unwrap().as_str(), Some("fwd"));
+        assert_eq!(pass.get("brgemm_calls").unwrap().as_f64(), Some(4.0));
+        let eff = pass.get("efficiency").unwrap().as_f64().unwrap();
+        assert!(eff > 0.0 && eff <= 1.0, "efficiency {}", eff);
+        let gf = pass.get("gflops").unwrap().as_f64().unwrap();
+        assert!((gf - 100.0).abs() < 1.0, "gflops {}", gf);
+        uninstall();
+    }
+
+    #[test]
+    fn achieved_gflops_formula() {
+        assert!((achieved_gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(achieved_gflops(1e9, 0.0), 0.0);
+    }
+}

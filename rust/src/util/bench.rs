@@ -18,7 +18,7 @@ pub struct Row {
 
 impl Row {
     pub fn gflops(&self) -> f64 {
-        self.flops / self.time.min / 1e9
+        crate::telemetry::achieved_gflops(self.flops, self.time.min)
     }
 }
 
@@ -111,11 +111,7 @@ impl Table {
             .iter()
             .filter(|r| r.impl_name == impl_name)
             .fold((0.0, 0.0), |(fl, t), r| (fl + r.flops, t + r.time.min));
-        if t == 0.0 {
-            0.0
-        } else {
-            fl / t / 1e9
-        }
+        crate::telemetry::achieved_gflops(fl, t)
     }
 
     /// Render the table. If `peak_gflops` is set, adds an efficiency column.

@@ -77,6 +77,8 @@ macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logger::log($crate::util:
 macro_rules! log_info { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($a)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($a)*)) } }
 
 #[cfg(test)]
 mod tests {
@@ -95,6 +97,19 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        init(Some(Level::Info)); // restore default for other tests
+    }
+
+    #[test]
+    fn trace_gating() {
+        // Trace is the most verbose level: off at the Info default, on
+        // only when explicitly requested — so per-batch serve trace lines
+        // cost one atomic load unless BRGEMM_DL_LOG=trace.
+        init(Some(Level::Info));
+        assert!(!enabled(Level::Trace));
+        init(Some(Level::Trace));
+        assert!(enabled(Level::Trace));
+        assert!(enabled(Level::Debug));
         init(Some(Level::Info)); // restore default for other tests
     }
 }

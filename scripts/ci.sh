@@ -20,8 +20,15 @@ cargo test -q
 echo "== serve smoke (tiny model, 300 requests) =="
 # Exercise the serving subsystem end to end: queue -> dynamic batcher ->
 # worker pool -> drained shutdown. Fails hard if any request is lost.
+# --metrics-out exercises the telemetry path: the report JSON must parse,
+# carry the queue-wait/compute stage split, and show nonzero BRGEMM calls
+# from the bucket plans' profiler slots.
 ./target/release/brgemm-dl serve --model mlp --requests 300 --rate 50000 \
-    --max-batch 8 --serve-workers 2 --seed 7
+    --max-batch 8 --serve-workers 2 --seed 7 \
+    --metrics-out serve_metrics.json --metrics-every 0.5
+test -f serve_metrics.json
+./target/release/brgemm-dl perfcheck --metrics serve_metrics.json \
+    --require queue_wait,compute,brgemm_calls,throughput_rps
 
 echo "== train -> checkpoint -> serve smoke =="
 # The model-artifact pipeline end to end: train 2 epochs with per-epoch
@@ -31,7 +38,14 @@ echo "== train -> checkpoint -> serve smoke =="
 # chance (10 classes), i.e. unless learned (not random) weights flowed
 # train -> artifact -> serve.
 rm -rf checkpoints
-./target/release/brgemm-dl run --config examples/checkpoint.json
+# --metrics-out streams one JSON line per epoch (pass-timer breakdown)
+# plus a final per-primitive BRGEMM profile; every line must parse and
+# the profile must show nonzero brgemm_calls and a fwd timer.
+./target/release/brgemm-dl run --config examples/checkpoint.json \
+    --metrics-out train_metrics.jsonl
+test -f train_metrics.jsonl
+./target/release/brgemm-dl perfcheck --metrics train_metrics.jsonl \
+    --require brgemm_calls,fwd,bwd,upd,final_accuracy
 ./target/release/brgemm-dl run --config examples/checkpoint.json \
     --epochs 3 --resume checkpoints/mlp.bin
 ./target/release/brgemm-dl serve --model-path checkpoints/mlp.bin \
@@ -49,6 +63,27 @@ echo "== rnn train -> checkpoint -> resume -> serve smoke =="
     --epochs 3 --resume checkpoints/rnn.bin
 ./target/release/brgemm-dl serve --model-path checkpoints/rnn.bin \
     --min-accuracy 0.5 --requests 200 --rate 20000 --serve-workers 2
+
+echo "== bench perf-regression check (advisory) =="
+# Compare a fresh smoke-scale serve_load run against the committed
+# baseline (BENCH_serve_load.json). Advisory only: the baselines are
+# host-dependent, so a slow CI box must never mask a real build/test
+# regression above. fig10a/fig10b are only compared when a previous
+# full bench run left results behind (they are too slow to run here).
+if cargo bench --bench serve_load -- --quick >/dev/null 2>&1; then
+    ./target/release/brgemm-dl perfcheck --baseline BENCH_serve_load.json \
+        --current bench_results/serve_load.json --tolerance 0.6 \
+        || echo "serve_load perf below baseline (advisory)" >&2
+else
+    echo "serve_load bench failed to run (advisory)" >&2
+fi
+for fig in fig10a fig10b; do
+    if [ -f "bench_results/$fig.json" ]; then
+        ./target/release/brgemm-dl perfcheck --baseline "BENCH_$fig.json" \
+            --current "bench_results/$fig.json" --tolerance 0.6 \
+            || echo "$fig perf below baseline (advisory)" >&2
+    fi
+done
 
 echo "== cargo fmt --check =="
 if cargo fmt --check; then
