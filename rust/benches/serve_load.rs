@@ -8,13 +8,23 @@
 //! histogram, and writes the same rows as JSON to
 //! `bench_results/serve_load.json` (EXPERIMENTS.md tooling shape).
 //!
+//! The final two rows drive GNMT-style variable-length traffic through a
+//! stacked (2-layer) LSTM twice — routed through the length-bucket ladder
+//! vs padded to the model's full T — and score both on **useful words/s**
+//! (true sequence steps served, padding excluded); bucketing must win.
+//!
 //! `--quick` / `BENCH_QUICK=1` shrinks the request counts for CI-ish runs.
 
 use brgemm_dl::coordinator::cnn::CnnSpec;
 use brgemm_dl::coordinator::rnn::RnnSpec;
-use brgemm_dl::serve::{run_open_loop, InferenceModel, LoadSpec, NetSpec, ServeOpts};
+use brgemm_dl::serve::{
+    run_open_loop, run_open_loop_with, seq_request_len, InferenceModel, LoadSpec, NetSpec,
+    ServeOpts,
+};
 use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 struct Case {
     name: &'static str,
@@ -55,7 +65,7 @@ fn main() {
         // Arc-shared packed weight copy behind every bucket).
         Case {
             name: "rnn c16 k32 t8",
-            spec: NetSpec::Rnn(RnnSpec { c: 16, k: 32, t: 8, classes: 4 }),
+            spec: NetSpec::Rnn(RnnSpec { c: 16, k: 32, t: 8, classes: 4, layers: 1 }),
             load: LoadSpec { requests: rnn_requests, rate_rps: 5_000.0, seed: 44 },
             opts: ServeOpts { max_batch: 8, workers: 2, ..ServeOpts::default() },
         },
@@ -88,6 +98,69 @@ fn main() {
         }
         rows.push(row);
     }
+
+    // Variable-length GNMT-style traffic through the same stacked model,
+    // served two ways from identical arrivals (same seed ⇒ same schedule,
+    // lengths, and step contents): routed through the length-bucket
+    // ladder, vs padded to the full T=24 up front (what a fixed-shape
+    // server forces). The honest rate is useful words/s — true sequence
+    // steps delivered, padding excluded — and bucketing must win it: a
+    // typical-8 request costs a t_run≈8 prefix instead of 24 full steps.
+    // Appended after the fixed cases so the baseline rows pair by index.
+    let seq = RnnSpec { c: 16, k: 32, t: 24, classes: 4, layers: 2 };
+    let seq_requests = if quick { 300 } else { 2000 };
+    // Over-drive the arrival rate so the pool is compute-bound; open loop
+    // lets the backlog grow and both runs drain the same request set.
+    let seq_load = LoadSpec { requests: seq_requests, rate_rps: 50_000.0, seed: 45 };
+    let seq_opts = ServeOpts { max_batch: 8, workers: 2, ..ServeOpts::default() };
+    let typical = 8;
+    let mut useful = [0.0f64; 2];
+    for (mode, pad_to_max) in [("bucketed", false), ("pad-to-max", true)] {
+        let mut rng = Rng::new(seq_load.seed);
+        let model =
+            InferenceModel::from_spec(&NetSpec::Rnn(seq), seq_opts.max_batch, 1, false, &mut rng);
+        let words = Arc::new(AtomicUsize::new(0));
+        let w = Arc::clone(&words);
+        let (c, t) = (seq.c, seq.t);
+        let (report, responses) =
+            run_open_loop_with(model, seq_opts, &seq_load, move |rng, _i| {
+                let len = seq_request_len(rng, typical, t);
+                w.fetch_add(len, Ordering::Relaxed);
+                let mut v = rng.vec_f32(len * c, -1.0, 1.0);
+                if pad_to_max {
+                    v.resize(t * c, 0.0);
+                }
+                v
+            });
+        assert_eq!(responses.len(), seq_requests, "open loop must sustain the load");
+        let useful_wps = words.load(Ordering::Relaxed) as f64 / report.wall_secs;
+        useful[usize::from(pad_to_max)] = useful_wps;
+        println!("\n== serve_load: rnn mixed-len {} ==", mode);
+        print!("{}", report.render());
+        println!("useful words/s (padding excluded): {:.0}", useful_wps);
+        let mut row = report.to_json();
+        if let Json::Obj(map) = &mut row {
+            map.insert("case".to_string(), Json::Str(format!("rnn mixed-len {}", mode)));
+            map.insert("rate_rps".to_string(), Json::Num(seq_load.rate_rps));
+            map.insert("max_batch".to_string(), Json::Num(seq_opts.max_batch as f64));
+            map.insert("workers".to_string(), Json::Num(seq_opts.workers as f64));
+            map.insert("wait_fill_us".to_string(), Json::Num(0.0));
+            map.insert("useful_wps".to_string(), Json::Num(useful_wps));
+        }
+        rows.push(row);
+    }
+    assert!(
+        useful[0] > useful[1],
+        "length bucketing must beat pad-to-max on useful words/s ({:.0} vs {:.0})",
+        useful[0],
+        useful[1]
+    );
+    println!(
+        "\nbucketed vs pad-to-max useful words/s: {:.0} vs {:.0} ({:.2}x)",
+        useful[0],
+        useful[1],
+        useful[0] / useful[1]
+    );
 
     let out = obj([("title", "serve_load — open-loop dynamic-batching serving".into()),
         ("rows", Json::Arr(rows))]);

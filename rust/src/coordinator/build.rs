@@ -125,6 +125,34 @@ pub fn rnn_cell_config(spec: &RnnSpec, batch: usize, nthreads: usize, tuned: boo
     }
 }
 
+/// The per-layer cell configs of a stacked LSTM (`spec.layers` cells):
+/// layer 0 maps `c -> k`, every deeper layer maps `k -> k` (its input is
+/// the hidden sequence of the layer below). The depth-chain invariant —
+/// consumer `bc` = producer `bk` — holds by construction: both sides of
+/// every inter-layer seam block the same `k` with the same formula. Each
+/// layer consults the autotune cache independently under `tuned` (the
+/// cache key includes the layer's own `c`, so layer 0 and the deeper
+/// layers never share an entry unless `c == k`).
+pub fn rnn_stack_configs(
+    spec: &RnnSpec,
+    batch: usize,
+    nthreads: usize,
+    tuned: bool,
+) -> Vec<LstmConfig> {
+    assert!(spec.layers >= 1, "rnn needs at least one layer");
+    (0..spec.layers)
+        .map(|i| {
+            let c_in = if i == 0 { spec.c } else { spec.k };
+            let cfg = LstmConfig::new(batch, c_in, spec.k, spec.t).with_threads(nthreads);
+            if tuned {
+                crate::autotune::tuned_lstm_config(cfg)
+            } else {
+                cfg
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,13 +193,36 @@ mod tests {
 
     #[test]
     fn rnn_cell_feature_blocking_is_batch_and_t_independent() {
-        let spec = crate::coordinator::rnn::RnnSpec { c: 24, k: 48, t: 6, classes: 4 };
+        let spec = crate::coordinator::rnn::RnnSpec { c: 24, k: 48, t: 6, classes: 4, layers: 1 };
         let a = rnn_cell_config(&spec, 32, 1, false);
         let b = rnn_cell_config(&spec, 1, 2, false);
         assert_eq!((a.bc, a.bk), (b.bc, b.bk), "feature blocking shared across batches");
         let longer = crate::coordinator::rnn::RnnSpec { t: 20, ..spec };
         let c = rnn_cell_config(&longer, 32, 1, false);
         assert_eq!((a.bc, a.bk), (c.bc, c.bk), "feature blocking shared across T");
+    }
+
+    #[test]
+    fn rnn_stack_chains_hidden_width_and_keeps_depth_invariant() {
+        let spec = crate::coordinator::rnn::RnnSpec { c: 24, k: 48, t: 6, classes: 4, layers: 3 };
+        let cfgs = rnn_stack_configs(&spec, 16, 2, false);
+        assert_eq!(cfgs.len(), 3);
+        assert_eq!((cfgs[0].c, cfgs[0].k), (24, 48), "layer 0 maps c -> k");
+        for cfg in &cfgs[1..] {
+            assert_eq!((cfg.c, cfg.k), (48, 48), "deeper layers map k -> k");
+        }
+        for w in cfgs.windows(2) {
+            assert_eq!(w[0].bk, w[1].bc, "depth seam: consumer bc = producer bk");
+            assert_eq!(w[0].bn, w[1].bn, "one batch block across the stack");
+            assert_eq!(w[0].t, w[1].t, "one unroll window across the stack");
+        }
+        // Layer 0 of the stack is exactly the single-cell formula — what
+        // keeps pre-stack (layers=1) artifacts loadable bit-identically.
+        let solo = rnn_cell_config(&spec, 16, 2, false);
+        assert_eq!(
+            (cfgs[0].bn, cfgs[0].bc, cfgs[0].bk),
+            (solo.bn, solo.bc, solo.bk)
+        );
     }
 
     #[test]

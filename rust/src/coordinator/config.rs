@@ -54,9 +54,11 @@ pub enum Workload {
     /// End-to-end CNN training (conv stack + pool + FC head); shape is the
     /// ResNet-mini stack at spatial `56/scale` with `depth` conv layers.
     Cnn { scale: usize, depth: usize, classes: usize },
-    /// End-to-end RNN training (LSTM cell + FC softmax head on the final
-    /// hidden state) over length-`t` sequences of `c`-dim steps.
-    Rnn { c: usize, k: usize, t: usize, classes: usize },
+    /// End-to-end RNN training (`layers` stacked LSTM cells + FC softmax
+    /// head on the top layer's final hidden state) over length-`t`
+    /// sequences of `c`-dim steps. `layers` is honored, never silently
+    /// coerced: a 2-layer config trains a genuinely 2-layer stack.
+    Rnn { c: usize, k: usize, t: usize, classes: usize, layers: usize },
     Lstm { c: usize, k: usize, t: usize, layers: usize },
     Resnet { scale: usize },
 }
@@ -91,6 +93,15 @@ pub struct ServeConfig {
     /// atomic checkpoint renames are picked up automatically; reload
     /// events land in the serve metrics).
     pub watch_model: bool,
+    /// Poll cadence of the artifact watcher in milliseconds (with
+    /// `watch_model`; previously hard-coded at the spawn site).
+    pub watch_poll_ms: u64,
+    /// Sequence workloads only: generate a *mixed-length* open-loop load
+    /// instead of full-`T` requests — per-request lengths drawn from the
+    /// truncated log-normal GNMT-style distribution around this typical
+    /// length (clamped to `[2, T]`), routed through the length-bucket
+    /// ladder. `None` = every request at the arch's full `T`.
+    pub seq_len_typical: Option<usize>,
     /// Log a point-in-time serving snapshot (one compact JSON line at
     /// info level) every this many seconds while the load runs.
     pub metrics_every: Option<f64>,
@@ -107,6 +118,8 @@ impl Default for ServeConfig {
             model_path: None,
             min_accuracy: None,
             watch_model: false,
+            watch_poll_ms: 50,
+            seq_len_typical: None,
             metrics_every: None,
         }
     }
@@ -132,6 +145,14 @@ impl ServeConfig {
         }
         if self.watch_model && self.model_path.is_none() {
             bail!("serve.watch_model requires serve.model_path (the artifact file to watch)");
+        }
+        if self.watch_poll_ms == 0 {
+            bail!("serve.watch_poll_ms must be >= 1 (watcher poll cadence in ms)");
+        }
+        if let Some(l) = self.seq_len_typical {
+            if l == 0 {
+                bail!("serve.seq_len_typical must be >= 1 (typical sequence length)");
+            }
         }
         if let Some(e) = self.metrics_every {
             if e <= 0.0 || !e.is_finite() {
@@ -248,6 +269,7 @@ impl RunConfig {
                     k: get_usize(w, "k", 32)?,
                     t: get_usize(w, "t", 8)?,
                     classes: get_usize(w, "classes", 4)?,
+                    layers: get_usize(w, "layers", 1)?,
                 },
                 "lstm" => Workload::Lstm {
                     c: get_usize(w, "c", 64)?,
@@ -287,6 +309,7 @@ impl RunConfig {
                     k: get_usize(&j, "k", 32)?,
                     t: get_usize(&j, "t", 8)?,
                     classes: get_usize(&j, "classes", 4)?,
+                    layers: get_usize(&j, "layers", 1)?,
                 },
                 other => bail!("unknown model '{}' (mlp|cnn|rnn)", other),
             };
@@ -323,6 +346,13 @@ impl RunConfig {
                     Some(v) => v
                         .as_bool()
                         .ok_or_else(|| anyhow!("watch_model must be a boolean"))?,
+                },
+                watch_poll_ms: get_usize(sv, "watch_poll_ms", d.watch_poll_ms as usize)? as u64,
+                seq_len_typical: match sv.get("seq_len_typical") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(v.as_usize().ok_or_else(|| {
+                        anyhow!("seq_len_typical must be a non-negative integer")
+                    })?),
                 },
                 metrics_every: get_opt_f64(sv, "metrics_every")?,
             };
@@ -368,9 +398,12 @@ impl RunConfig {
                 bail!("cnn workload needs scale >= 1, depth >= 1, classes >= 2");
             }
         }
-        if let Workload::Rnn { c, k, t, classes } = &cfg.workload {
+        if let Workload::Rnn { c, k, t, classes, layers } = &cfg.workload {
             if *c == 0 || *k == 0 || *t == 0 || *classes < 2 {
                 bail!("rnn workload needs c/k/t >= 1 and classes >= 2");
+            }
+            if *layers == 0 {
+                bail!("rnn workload needs layers >= 1 (stacked LSTM depth)");
             }
         }
         Ok(cfg)
@@ -511,18 +544,37 @@ mod tests {
             r#"{"workload": {"kind": "rnn", "c": 8, "k": 16, "t": 5, "classes": 3}}"#,
         )
         .unwrap();
-        assert_eq!(cfg.workload, Workload::Rnn { c: 8, k: 16, t: 5, classes: 3 });
+        assert_eq!(cfg.workload, Workload::Rnn { c: 8, k: 16, t: 5, classes: 3, layers: 1 });
         // Shorthand picks the default shape…
         let cfg = RunConfig::from_json(r#"{"model": "rnn", "tune": true}"#).unwrap();
-        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 8, classes: 4 });
+        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 8, classes: 4, layers: 1 });
         assert!(cfg.tune);
         // …with optional top-level overrides.
         let cfg = RunConfig::from_json(r#"{"model": "rnn", "t": 12, "classes": 6}"#).unwrap();
-        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 12, classes: 6 });
+        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 12, classes: 6, layers: 1 });
         // Invalid shapes rejected, not silently defaulted.
         assert!(RunConfig::from_json(r#"{"model": "rnn", "t": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"model": "rnn", "classes": 1}"#).is_err());
         assert!(RunConfig::from_json(r#"{"workload": {"kind": "rnn", "c": 0}}"#).is_err());
+    }
+
+    #[test]
+    fn rnn_layers_parse_in_both_spellings_and_zero_is_rejected() {
+        // Honor-or-error: a layers field must reach the workload (the
+        // model constructor then builds a genuinely stacked RnnModel) —
+        // it can never be silently dropped to 1 again.
+        let cfg = RunConfig::from_json(
+            r#"{"workload": {"kind": "rnn", "c": 8, "k": 16, "t": 5, "classes": 3, "layers": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workload, Workload::Rnn { c: 8, k: 16, t: 5, classes: 3, layers: 2 });
+        let cfg = RunConfig::from_json(r#"{"model": "rnn", "layers": 4}"#).unwrap();
+        assert_eq!(cfg.workload, Workload::Rnn { c: 16, k: 32, t: 8, classes: 4, layers: 4 });
+        assert!(RunConfig::from_json(r#"{"model": "rnn", "layers": 0}"#).is_err());
+        assert!(
+            RunConfig::from_json(r#"{"workload": {"kind": "rnn", "layers": 0}}"#).is_err()
+        );
+        assert!(RunConfig::from_json(r#"{"model": "rnn", "layers": "four"}"#).is_err());
     }
 
     #[test]
@@ -546,6 +598,37 @@ mod tests {
             r#"{"serve": {"model_path": "m.bin", "watch_model": "yes"}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn watch_poll_ms_parses_with_default_and_bounds() {
+        // Default matches the previously hard-coded spawn-site cadence.
+        let cfg = RunConfig::from_json(r#"{"serve": {}}"#).unwrap();
+        assert_eq!(cfg.serve.unwrap().watch_poll_ms, 50);
+        let cfg = RunConfig::from_json(
+            r#"{"serve": {"model_path": "m.bin", "watch_model": true, "watch_poll_ms": 5}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.unwrap().watch_poll_ms, 5);
+        // Zero would spin the watcher; wrong types error.
+        assert!(RunConfig::from_json(r#"{"serve": {"watch_poll_ms": 0}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"watch_poll_ms": "fast"}}"#).is_err());
+    }
+
+    #[test]
+    fn seq_len_typical_parses() {
+        let cfg = RunConfig::from_json(r#"{"serve": {}}"#).unwrap();
+        assert!(cfg.serve.unwrap().seq_len_typical.is_none(), "full-T load by default");
+        let cfg = RunConfig::from_json(
+            r#"{"model": "rnn", "serve": {"seq_len_typical": 6}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.unwrap().seq_len_typical, Some(6));
+        // null tolerated (lets examples carry the key); invalid rejected.
+        let cfg = RunConfig::from_json(r#"{"serve": {"seq_len_typical": null}}"#).unwrap();
+        assert!(cfg.serve.unwrap().seq_len_typical.is_none());
+        assert!(RunConfig::from_json(r#"{"serve": {"seq_len_typical": 0}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"seq_len_typical": "short"}}"#).is_err());
     }
 
     #[test]

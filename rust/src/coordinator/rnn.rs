@@ -1,31 +1,40 @@
-//! The RNN training driver: end-to-end LSTM sequence classification
-//! through the coordinator (paper §3.1, Fig. 6 / Tab. 1 workload class).
+//! The RNN training driver: end-to-end stacked-LSTM sequence
+//! classification through the coordinator (paper §3.1, Fig. 6 / Fig. 10a
+//! / Tab. 1 workload class — GNMT is a 4-layer stack of this cell).
 //!
 //! [`RnnModel`] is the sequence analogue of
 //! [`MlpModel`](super::trainer::MlpModel) / [`CnnModel`](super::cnn::CnnModel):
-//! one [`LstmPrimitive`] cell unrolled over `[T][N][C]` inputs (every
-//! per-step GEMM a BRGEMM call, threads synchronising per time-step), an
-//! FC softmax head reading the **final hidden state** `h_T`, and
-//! backpropagation-through-time over the full stored window — the head
-//! gradient enters the cell at step `T` and the recurrent `dh`/`ds`
-//! carries flow it back to step 1 inside
-//! [`LstmPrimitive::backward`]'s fused sweep. `T` is the truncation
+//! `spec.layers` stacked [`LstmPrimitive`] cells unrolled over `[T][N][C]`
+//! inputs (every per-step GEMM a BRGEMM call, threads synchronising per
+//! time-step). Layer 0 maps `c -> k`; each deeper layer consumes the full
+//! hidden sequence of the layer below (`k -> k`) — the workspace's
+//! `[T][N][K]` hidden history is handed to the next cell as its input
+//! with no reformat, exactly the "same BRGEMM loop nest, stacked" shape
+//! the paper's GNMT run uses. An FC softmax head reads the **top layer's
+//! final hidden state** `h_T`.
+//!
+//! Backpropagation-through-time chains *both* directions of the stack:
+//! the head gradient enters the top cell at step `T`, each cell's fused
+//! sweep ([`LstmPrimitive::backward`]) carries it back through time via
+//! the recurrent `dh`/`ds` carries, and the cell's input gradient `dx`
+//! (`[T][N][K]`) is exactly the upstream `dh_out` of the layer below —
+//! depth chaining is one buffer handoff per seam. `T` is the truncation
 //! window: the driver never backpropagates across batch boundaries.
 //!
 //! The model implements [`Model`], so
 //! [`DataParallelTrainer`](super::trainer::DataParallelTrainer) and the
 //! ring-allreduce path work over it unchanged (`grads_flat` /
-//! `apply_sgd_from_flat` flatten cell + head gradients in a fixed order),
-//! and the model-artifact pipeline covers it: `export_weights` emits the
-//! cell as one canonical [`LayerKind::Lstm`] layer (unblocked per-gate
-//! `W`/`R`/`b`, gate order i, g, f, o) plus the FC head — a pure index
-//! permutation, so export → import round-trips bit-identically under any
-//! `{bn, bc, bk, threads}`.
+//! `apply_sgd_from_flat` flatten every cell's gradients bottom-up, then
+//! the head), and the model-artifact pipeline covers it: `export_weights`
+//! emits one canonical [`LayerKind::Lstm`] layer per cell (unblocked
+//! per-gate `W`/`R`/`b`, gate order i, g, f, o) plus the FC head —
+//! `layers + 1` artifact layers, a pure index permutation, so export →
+//! import round-trips bit-identically under any `{bn, bc, bk, threads}`.
 //!
 //! Inputs are [`ClassifyData`] rows of `dim = T·C` (one flattened
 //! `[T][C]` sequence per sample — see
 //! [`ClassifyData::synth_sequences`]); the driver re-views each batch as
-//! time-major `[T][N][C]` for the cell.
+//! time-major `[T][N][C]` for the bottom cell.
 
 use crate::coordinator::build;
 use crate::coordinator::data::ClassifyData;
@@ -40,14 +49,17 @@ use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// Shape of the RNN sequence-classification workload: per-step input
-/// width `c`, hidden width `k`, sequence length (BPTT window) `t`, and
-/// the softmax width.
+/// width `c`, hidden width `k`, sequence length (BPTT window) `t`, the
+/// softmax width, and the number of stacked cells.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RnnSpec {
     pub c: usize,
     pub k: usize,
     pub t: usize,
     pub classes: usize,
+    /// Stacked LSTM depth (GNMT uses 4). Layer 0 maps `c -> k`; every
+    /// deeper layer maps `k -> k` over the hidden sequence below it.
+    pub layers: usize,
 }
 
 impl RnnSpec {
@@ -69,25 +81,31 @@ struct FcHead {
     db: Vec<f32>,
 }
 
-/// An LSTM sequence classifier built entirely from the BRGEMM cell and
-/// FC primitives; same driver surface as `MlpModel`/`CnnModel`.
-pub struct RnnModel {
-    pub spec: RnnSpec,
-    pub batch: usize,
-    cell: LstmPrimitive,
+/// One cell of the stack: primitive + packed weights + workspace + the
+/// gradient accumulators of the last backward (index-for-index with the
+/// packed weight layouts).
+struct CellState {
+    prim: LstmPrimitive,
     weights: LstmWeights,
     ws: LstmWorkspace,
-    /// Time-major input of the last forward (`[T][N][C]`), kept for the
-    /// cell's update pass.
-    x_seq: Vec<f32>,
-    /// The head's packed input (`h_T`), kept for its update pass.
-    head_x: Vec<f32>,
-    head: FcHead,
-    /// Cell gradients in the packed weight layouts (index-for-index with
-    /// `weights.w` / `weights.r` / `weights.b`).
     dw: Vec<f32>,
     dr: Vec<f32>,
     db: Vec<f32>,
+}
+
+/// A stacked-LSTM sequence classifier built entirely from the BRGEMM
+/// cell and FC primitives; same driver surface as `MlpModel`/`CnnModel`.
+pub struct RnnModel {
+    pub spec: RnnSpec,
+    pub batch: usize,
+    /// Bottom-up stack of `spec.layers` cells.
+    cells: Vec<CellState>,
+    /// Time-major input of the last forward (`[T][N][C]`), kept for the
+    /// bottom cell's update pass.
+    x_seq: Vec<f32>,
+    /// The head's packed input (top-layer `h_T`), kept for its update pass.
+    head_x: Vec<f32>,
+    head: FcHead,
     /// Per-pass training breakdown — only fed while telemetry is enabled.
     metrics: Metrics,
 }
@@ -97,10 +115,10 @@ impl RnnModel {
         RnnModel::new_with(spec, batch, nthreads, false, rng)
     }
 
-    /// Like [`RnnModel::new`], with `tuned` routing the cell through the
-    /// autotuner's cached blockings (the cache key includes `t`) and the
-    /// head through the FC tuning cache — the `{"tune": true}` run-config
-    /// path.
+    /// Like [`RnnModel::new`], with `tuned` routing each cell through the
+    /// autotuner's cached blockings (the cache key includes `t` and the
+    /// layer's own input width) and the head through the FC tuning cache —
+    /// the `{"tune": true}` run-config path.
     pub fn new_with(
         spec: &RnnSpec,
         batch: usize,
@@ -110,31 +128,49 @@ impl RnnModel {
     ) -> RnnModel {
         assert!(spec.classes >= 2, "need at least two classes");
         assert!(spec.c >= 1 && spec.k >= 1 && spec.t >= 1, "c/k/t must be >= 1");
+        assert!(spec.layers >= 1, "rnn needs at least one layer");
         // Cell + head configs come from the shared construction module,
         // so the training model and the serving plans agree by
         // construction (weight lifting through artifacts depends on it).
-        let cfg = build::rnn_cell_config(spec, batch, nthreads, tuned);
-        let cell = LstmPrimitive::new(cfg);
-        let (k, c) = (spec.k, spec.c);
-        // Uniform init scaled by the fan-in of each weight class; the
-        // forget-gate bias starts at +1 so early training does not flush
-        // the cell state (standard LSTM practice). Gate order i, g, f, o.
-        let wscale = (1.0 / c as f32).sqrt();
-        let rscale = (1.0 / k as f32).sqrt();
-        let w_plain: Vec<Vec<f32>> =
-            (0..GATES).map(|_| rng.vec_f32(k * c, -wscale, wscale)).collect();
-        let r_plain: Vec<Vec<f32>> =
-            (0..GATES).map(|_| rng.vec_f32(k * k, -rscale, rscale)).collect();
-        let b_plain: Vec<Vec<f32>> = (0..GATES)
-            .map(|z| if z == 2 { vec![1.0f32; k] } else { vec![0.0f32; k] })
+        let cfgs = build::rnn_stack_configs(spec, batch, nthreads, tuned);
+        let k = spec.k;
+        let cells: Vec<CellState> = cfgs
+            .into_iter()
+            .map(|cfg| {
+                // Uniform init scaled by the fan-in of each weight class
+                // (layer 0 sees `c` inputs, deeper layers see `k`); the
+                // forget-gate bias starts at +1 so early training does not
+                // flush the cell state (standard LSTM practice). Gate
+                // order i, g, f, o.
+                let c_in = cfg.c;
+                let wscale = (1.0 / c_in as f32).sqrt();
+                let rscale = (1.0 / k as f32).sqrt();
+                let w_plain: Vec<Vec<f32>> =
+                    (0..GATES).map(|_| rng.vec_f32(k * c_in, -wscale, wscale)).collect();
+                let r_plain: Vec<Vec<f32>> =
+                    (0..GATES).map(|_| rng.vec_f32(k * k, -rscale, rscale)).collect();
+                let b_plain: Vec<Vec<f32>> = (0..GATES)
+                    .map(|z| if z == 2 { vec![1.0f32; k] } else { vec![0.0f32; k] })
+                    .collect();
+                let wref: Vec<&[f32]> = w_plain.iter().map(|v| v.as_slice()).collect();
+                let rref: Vec<&[f32]> = r_plain.iter().map(|v| v.as_slice()).collect();
+                let bref: Vec<&[f32]> = b_plain.iter().map(|v| v.as_slice()).collect();
+                let weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
+                CellState {
+                    prim: LstmPrimitive::new(cfg),
+                    ws: LstmWorkspace::new(&cfg),
+                    // Zeroed so grads_flat is well-formed before the first
+                    // backward (the allreduce path flattens unconditionally).
+                    dw: vec![0.0; weights.w.len()],
+                    dr: vec![0.0; weights.r.len()],
+                    db: vec![0.0; weights.b.len()],
+                    weights,
+                }
+            })
             .collect();
-        let wref: Vec<&[f32]> = w_plain.iter().map(|v| v.as_slice()).collect();
-        let rref: Vec<&[f32]> = r_plain.iter().map(|v| v.as_slice()).collect();
-        let bref: Vec<&[f32]> = b_plain.iter().map(|v| v.as_slice()).collect();
-        let weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
 
-        // The RNN head is the shared softmax-head formula over the final
-        // hidden state's `k` features.
+        // The RNN head is the shared softmax-head formula over the top
+        // layer's final hidden state's `k` features.
         let hcfg = build::head_fc_config(batch, k, spec.classes, nthreads, tuned);
         let hprim = FcPrimitive::new(hcfg);
         let hscale = (2.0 / k as f32).sqrt();
@@ -152,15 +188,8 @@ impl RnnModel {
         RnnModel {
             spec: *spec,
             batch,
-            ws: LstmWorkspace::new(&cfg),
-            cell,
-            // Zeroed so grads_flat is well-formed before the first
-            // backward (the allreduce path flattens unconditionally).
-            dw: vec![0.0; weights.w.len()],
-            dr: vec![0.0; weights.r.len()],
-            db: vec![0.0; weights.b.len()],
-            weights,
-            x_seq: vec![0.0; spec.t * batch * c],
+            cells,
+            x_seq: vec![0.0; spec.t * batch * spec.c],
             head_x: Vec::new(),
             head,
             metrics: Metrics::new(),
@@ -168,9 +197,10 @@ impl RnnModel {
     }
 
     pub fn param_count(&self) -> usize {
-        self.weights.w.len()
-            + self.weights.r.len()
-            + self.weights.b.len()
+        self.cells
+            .iter()
+            .map(|c| c.weights.w.len() + c.weights.r.len() + c.weights.b.len())
+            .sum::<usize>()
             + self.head.w.len()
             + self.head.b.len()
     }
@@ -178,7 +208,7 @@ impl RnnModel {
     /// Forward from a plain `[batch][T·C]` input (one flattened `[T][C]`
     /// sequence per row); returns plain logits `[batch][classes]`.
     pub fn forward(&mut self, x: &[f32]) -> Vec<f32> {
-        let (n, c, t) = (self.batch, self.spec.c, self.spec.t);
+        let (n, c, t, k) = (self.batch, self.spec.c, self.spec.t, self.spec.k);
         assert_eq!(x.len(), n * t * c, "input shape mismatch");
         // Rows are sample-major [N][T][C]; the cell wants time-major
         // [T][N][C] (a pure transpose — the sequence analogue of the
@@ -190,10 +220,22 @@ impl RnnModel {
                 self.x_seq[dst..dst + c].copy_from_slice(src);
             }
         }
-        self.cell.forward(&self.x_seq, None, None, &self.weights, &mut self.ws);
-        let h_last = self.ws.h_t(&self.cell.cfg, t - 1);
+        let nk = n * k;
+        for li in 0..self.cells.len() {
+            // Layer li's input: the raw sequence for the bottom cell, the
+            // full [T][N][K] hidden history of the cell below otherwise
+            // (workspace `h` holds the initial state at step 0, then the
+            // T step outputs — skip the initial-state row).
+            let (below, rest) = self.cells.split_at_mut(li);
+            let x_in: &[f32] =
+                if li == 0 { &self.x_seq } else { &below[li - 1].ws.h[nk..] };
+            let CellState { prim, weights, ws, .. } = &mut rest[0];
+            prim.forward(x_in, None, None, weights, ws);
+        }
+        let top = self.cells.last().unwrap();
+        let h_last = top.ws.h_t(&top.prim.cfg, t - 1);
         let hcfg = self.head.prim.cfg;
-        self.head_x = layout::pack_act_2d(h_last, n, self.spec.k, hcfg.bn, hcfg.bc);
+        self.head_x = layout::pack_act_2d(h_last, n, k, hcfg.bn, hcfg.bc);
         self.head.prim.forward(&self.head_x, &self.head.w, &self.head.b, &mut self.head.y);
         layout::unpack_act_2d(&self.head.y, n, hcfg.k, hcfg.bn, hcfg.bk)
     }
@@ -224,10 +266,13 @@ impl RnnModel {
     }
 
     /// Backward from plain dlogits: head update + backward-by-data gives
-    /// `dh_T`, which enters the cell's fused BPTT sweep as the upstream
-    /// gradient of the final step (zero at every earlier step — the loss
-    /// reads only `h_T`; gradients still reach every step through the
-    /// recurrent carries).
+    /// the top layer's `dh_T`, which enters that cell's fused BPTT sweep
+    /// as the upstream gradient of the final step (zero at every earlier
+    /// step — the loss reads only the top `h_T`). Each cell's input
+    /// gradient `dx` (`[T][N][K]`) is handed down as the *full* upstream
+    /// `dh_out` of the layer below — the only external consumer of a
+    /// non-top layer's hidden sequence is the cell above it, so depth
+    /// chaining is one buffer swap per seam.
     pub fn backward(&mut self, dlogits: &[f32]) {
         let (n, t, k) = (self.batch, self.spec.t, self.spec.k);
         let hcfg = self.head.prim.cfg;
@@ -242,24 +287,36 @@ impl RnnModel {
         let nk = n * k;
         let mut dh_out = vec![0.0f32; t * nk];
         dh_out[(t - 1) * nk..].copy_from_slice(&dh_last);
-        // Packed weight transposes for backward-by-data (amortised across
-        // all T steps inside the sweep).
-        let wt_cell = self.weights.transposed();
-        let (grads, _) = self.cell.backward(&self.x_seq, &dh_out, &wt_cell, &self.ws);
-        self.dw = grads.dw;
-        self.dr = grads.dr;
-        self.db = grads.db;
+        for li in (0..self.cells.len()).rev() {
+            let (below, rest) = self.cells.split_at_mut(li);
+            let x_in: &[f32] =
+                if li == 0 { &self.x_seq } else { &below[li - 1].ws.h[nk..] };
+            let cell = &mut rest[0];
+            // Packed weight transposes for backward-by-data (amortised
+            // across all T steps inside the sweep).
+            let wt_cell = cell.weights.transposed();
+            let (grads, _) = cell.prim.backward(x_in, &dh_out, &wt_cell, &cell.ws);
+            cell.dw = grads.dw;
+            cell.dr = grads.dr;
+            cell.db = grads.db;
+            if li > 0 {
+                // dx is [T][N][K]: exactly the layer-below upstream grad.
+                dh_out = grads.dx;
+            }
+        }
     }
 
     fn apply_sgd(&mut self, lr: f32) {
-        for (w, g) in self.weights.w.iter_mut().zip(&self.dw) {
-            *w -= lr * g;
-        }
-        for (r, g) in self.weights.r.iter_mut().zip(&self.dr) {
-            *r -= lr * g;
-        }
-        for (b, g) in self.weights.b.iter_mut().zip(&self.db) {
-            *b -= lr * g;
+        for cell in self.cells.iter_mut() {
+            for (w, g) in cell.weights.w.iter_mut().zip(&cell.dw) {
+                *w -= lr * g;
+            }
+            for (r, g) in cell.weights.r.iter_mut().zip(&cell.dr) {
+                *r -= lr * g;
+            }
+            for (b, g) in cell.weights.b.iter_mut().zip(&cell.db) {
+                *b -= lr * g;
+            }
         }
         for (w, g) in self.head.w.iter_mut().zip(&self.head.dw) {
             *w -= lr * g;
@@ -288,27 +345,31 @@ impl Model for RnnModel {
     }
     fn grads_flat(&self) -> Vec<f32> {
         let mut out = Vec::new();
-        out.extend_from_slice(&self.dw);
-        out.extend_from_slice(&self.dr);
-        out.extend_from_slice(&self.db);
+        for cell in &self.cells {
+            out.extend_from_slice(&cell.dw);
+            out.extend_from_slice(&cell.dr);
+            out.extend_from_slice(&cell.db);
+        }
         out.extend_from_slice(&self.head.dw);
         out.extend_from_slice(&self.head.db);
         out
     }
     fn apply_sgd_from_flat(&mut self, flat: &[f32], lr: f32) {
         let mut off = 0;
-        for (w, g) in self.weights.w.iter_mut().zip(&flat[off..off + self.dw.len()]) {
-            *w -= lr * g;
+        for cell in self.cells.iter_mut() {
+            for (w, g) in cell.weights.w.iter_mut().zip(&flat[off..off + cell.dw.len()]) {
+                *w -= lr * g;
+            }
+            off += cell.dw.len();
+            for (r, g) in cell.weights.r.iter_mut().zip(&flat[off..off + cell.dr.len()]) {
+                *r -= lr * g;
+            }
+            off += cell.dr.len();
+            for (b, g) in cell.weights.b.iter_mut().zip(&flat[off..off + cell.db.len()]) {
+                *b -= lr * g;
+            }
+            off += cell.db.len();
         }
-        off += self.dw.len();
-        for (r, g) in self.weights.r.iter_mut().zip(&flat[off..off + self.dr.len()]) {
-            *r -= lr * g;
-        }
-        off += self.dr.len();
-        for (b, g) in self.weights.b.iter_mut().zip(&flat[off..off + self.db.len()]) {
-            *b -= lr * g;
-        }
-        off += self.db.len();
         for (w, g) in self.head.w.iter_mut().zip(&flat[off..off + self.head.dw.len()]) {
             *w -= lr * g;
         }
@@ -330,67 +391,84 @@ impl Model for RnnModel {
     }
     fn params_flat(&self) -> Vec<f32> {
         let mut out = Vec::new();
-        out.extend_from_slice(&self.weights.w);
-        out.extend_from_slice(&self.weights.r);
-        out.extend_from_slice(&self.weights.b);
+        for cell in &self.cells {
+            out.extend_from_slice(&cell.weights.w);
+            out.extend_from_slice(&cell.weights.r);
+            out.extend_from_slice(&cell.weights.b);
+        }
         out.extend_from_slice(&self.head.w);
         out.extend_from_slice(&self.head.b);
         out
     }
     fn export_weights(&self) -> Vec<LayerParams> {
-        let cfg = self.cell.cfg;
-        let (k, c) = (cfg.k, cfg.c);
-        let gw = k * c;
-        let gr = k * k;
-        // Canonical gate-major concatenation: [4][K][C] then [4][K][K]
-        // (the LayerKind::Lstm artifact layout). Unpacking is a pure
-        // index permutation.
-        let mut w = Vec::with_capacity(GATES * (gw + gr));
-        for z in 0..GATES {
-            w.extend(layout::unpack_weights_2d(
-                &self.weights.w[z * gw..(z + 1) * gw],
-                k,
-                c,
-                cfg.bk,
-                cfg.bc,
-            ));
-        }
-        for z in 0..GATES {
-            w.extend(layout::unpack_weights_2d(
-                &self.weights.r[z * gr..(z + 1) * gr],
-                k,
-                k,
-                cfg.bk,
-                cfg.bk,
-            ));
-        }
+        // One canonical Lstm layer per cell (bottom-up), then the head —
+        // `layers + 1` artifact layers. Canonical gate-major
+        // concatenation per cell: [4][K][C_in] then [4][K][K] (the
+        // LayerKind::Lstm artifact layout). Unpacking is a pure index
+        // permutation.
+        let mut out: Vec<LayerParams> = self
+            .cells
+            .iter()
+            .map(|cell| {
+                let cfg = cell.prim.cfg;
+                let (k, c) = (cfg.k, cfg.c);
+                let gw = k * c;
+                let gr = k * k;
+                let mut w = Vec::with_capacity(GATES * (gw + gr));
+                for z in 0..GATES {
+                    w.extend(layout::unpack_weights_2d(
+                        &cell.weights.w[z * gw..(z + 1) * gw],
+                        k,
+                        c,
+                        cfg.bk,
+                        cfg.bc,
+                    ));
+                }
+                for z in 0..GATES {
+                    w.extend(layout::unpack_weights_2d(
+                        &cell.weights.r[z * gr..(z + 1) * gr],
+                        k,
+                        k,
+                        cfg.bk,
+                        cfg.bk,
+                    ));
+                }
+                LayerParams::lstm(k, c, w, cell.weights.b.clone())
+            })
+            .collect();
         let hcfg = self.head.prim.cfg;
-        vec![
-            LayerParams::lstm(k, c, w, self.weights.b.clone()),
-            LayerParams::fc(
-                hcfg.k,
-                hcfg.c,
-                layout::unpack_weights_2d(&self.head.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc),
-                self.head.b.clone(),
-            ),
-        ]
+        out.push(LayerParams::fc(
+            hcfg.k,
+            hcfg.c,
+            layout::unpack_weights_2d(&self.head.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc),
+            self.head.b.clone(),
+        ));
+        out
     }
     fn import_weights(&mut self, layers: &[LayerParams]) -> Result<()> {
-        if layers.len() != 2 {
-            bail!("rnn has 2 layers (lstm cell + head), artifact has {}", layers.len());
+        let want = self.cells.len() + 1;
+        if layers.len() != want {
+            bail!(
+                "rnn has {} layers ({} stacked cells + head), artifact has {}",
+                want,
+                self.cells.len(),
+                layers.len()
+            );
         }
-        let cfg = self.cell.cfg;
-        let (k, c) = (cfg.k, cfg.c);
-        layers[0].expect("rnn cell", LayerKind::Lstm, &[k, c])?;
-        let (w_gates, r_gates) = layers[0].w.split_at(GATES * k * c);
-        let wref: Vec<&[f32]> =
-            (0..GATES).map(|z| &w_gates[z * k * c..(z + 1) * k * c]).collect();
-        let rref: Vec<&[f32]> =
-            (0..GATES).map(|z| &r_gates[z * k * k..(z + 1) * k * k]).collect();
-        let bref: Vec<&[f32]> =
-            (0..GATES).map(|z| &layers[0].b[z * k..(z + 1) * k]).collect();
-        self.weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
-        let p = &layers[1];
+        for (li, cell) in self.cells.iter_mut().enumerate() {
+            let cfg = cell.prim.cfg;
+            let (k, c) = (cfg.k, cfg.c);
+            layers[li].expect("rnn cell", LayerKind::Lstm, &[k, c])?;
+            let (w_gates, r_gates) = layers[li].w.split_at(GATES * k * c);
+            let wref: Vec<&[f32]> =
+                (0..GATES).map(|z| &w_gates[z * k * c..(z + 1) * k * c]).collect();
+            let rref: Vec<&[f32]> =
+                (0..GATES).map(|z| &r_gates[z * k * k..(z + 1) * k * k]).collect();
+            let bref: Vec<&[f32]> =
+                (0..GATES).map(|z| &layers[li].b[z * k..(z + 1) * k]).collect();
+            cell.weights = LstmWeights::pack(cfg, &wref, &rref, &bref);
+        }
+        let p = &layers[want - 1];
         let hcfg = self.head.prim.cfg;
         p.expect("rnn head", LayerKind::Fc, &[hcfg.k, hcfg.c])?;
         self.head.w = layout::pack_weights_2d(&p.w, hcfg.k, hcfg.c, hcfg.bk, hcfg.bc);
@@ -411,7 +489,11 @@ mod tests {
     use crate::coordinator::trainer::DataParallelTrainer;
 
     fn tiny_spec() -> RnnSpec {
-        RnnSpec { c: 8, k: 16, t: 6, classes: 3 }
+        RnnSpec { c: 8, k: 16, t: 6, classes: 3, layers: 1 }
+    }
+
+    fn stacked_spec() -> RnnSpec {
+        RnnSpec { c: 8, k: 16, t: 6, classes: 3, layers: 2 }
     }
 
     #[test]
@@ -438,12 +520,44 @@ mod tests {
     }
 
     #[test]
+    fn stacked_rnn_learns_and_exports_layers_plus_one() {
+        // The honor-or-error contract made real: layers=2 trains two
+        // genuinely distinct cells (the artifact has 3 layers, the second
+        // cell is k -> k) and the stack still learns the workload.
+        let spec = stacked_spec();
+        let mut rng = Rng::new(22);
+        let data = ClassifyData::synth_sequences(256, spec.t, spec.c, spec.classes, 0.1, &mut rng);
+        let mut model = RnnModel::new(&spec, 16, 1, &mut rng);
+        let exported = model.export_weights();
+        assert_eq!(exported.len(), 3, "layers + 1 artifact layers");
+        assert_eq!(exported[0].dims, vec![spec.k, spec.c], "layer 0: c -> k");
+        assert_eq!(exported[1].dims, vec![spec.k, spec.k], "layer 1: k -> k");
+        assert_eq!(exported[2].kind, LayerKind::Fc);
+        let mut first = None;
+        let mut last = 0.0;
+        for step in 0..120 {
+            let (x, labels) = data.batch(step, 16);
+            last = model.train_step(&x, &labels, 0.1);
+            first.get_or_insert(last);
+        }
+        assert!(
+            last < first.unwrap() * 0.5,
+            "stacked loss must at least halve: {} -> {}",
+            first.unwrap(),
+            last
+        );
+        let acc = model.accuracy(&data, 16);
+        assert!(acc > 0.6, "stacked accuracy {} not above chance enough", acc);
+    }
+
+    #[test]
     fn rnn_gradients_match_finite_difference() {
-        // The assembled driver backward (head chain + BPTT entry at T)
-        // against central differences of the packed parameters. Gradients
-        // share the packed layouts, so index-for-index comparison is
-        // exact.
-        let spec = RnnSpec { c: 4, k: 4, t: 3, classes: 3 };
+        // The assembled *stacked* driver backward (head chain + BPTT entry
+        // at the top layer's step T + depth chaining through dx) against
+        // central differences of the packed parameters of BOTH cells.
+        // Gradients share the packed layouts, so index-for-index
+        // comparison is exact.
+        let spec = RnnSpec { c: 4, k: 4, t: 3, classes: 3, layers: 2 };
         let mut rng = Rng::new(31);
         let mut model = RnnModel::new(&spec, 2, 1, &mut rng);
         let x = rng.vec_f32(2 * spec.input_dim(), -1.0, 1.0);
@@ -451,44 +565,67 @@ mod tests {
         let logits = model.forward(&x);
         let (_, dlogits) = softmax_xent(&logits, &labels, spec.classes);
         model.backward(&dlogits);
-        let dw = model.dw.clone();
-        let dr = model.dr.clone();
-        let db = model.db.clone();
         let hdw = model.head.dw.clone();
         let eps = 1e-3f32;
         let loss_of = |m: &mut RnnModel| {
             let l = m.forward(&x);
             softmax_xent(&l, &labels, spec.classes).0
         };
-        for &idx in &[0usize, 7, 23, dw.len() - 1] {
-            let orig = model.weights.w[idx];
-            model.weights.w[idx] = orig + eps;
-            let lp = loss_of(&mut model);
-            model.weights.w[idx] = orig - eps;
-            let lm = loss_of(&mut model);
-            model.weights.w[idx] = orig;
-            let num = (lp - lm) / (2.0 * eps);
-            assert!((num - dw[idx]).abs() < 1e-2, "dW[{}]: {} vs {}", idx, num, dw[idx]);
-        }
-        for &idx in &[0usize, 9, dr.len() - 1] {
-            let orig = model.weights.r[idx];
-            model.weights.r[idx] = orig + eps;
-            let lp = loss_of(&mut model);
-            model.weights.r[idx] = orig - eps;
-            let lm = loss_of(&mut model);
-            model.weights.r[idx] = orig;
-            let num = (lp - lm) / (2.0 * eps);
-            assert!((num - dr[idx]).abs() < 1e-2, "dR[{}]: {} vs {}", idx, num, dr[idx]);
-        }
-        for &idx in &[0usize, 5, db.len() - 1] {
-            let orig = model.weights.b[idx];
-            model.weights.b[idx] = orig + eps;
-            let lp = loss_of(&mut model);
-            model.weights.b[idx] = orig - eps;
-            let lm = loss_of(&mut model);
-            model.weights.b[idx] = orig;
-            let num = (lp - lm) / (2.0 * eps);
-            assert!((num - db[idx]).abs() < 1e-2, "db[{}]: {} vs {}", idx, num, db[idx]);
+        for li in 0..2 {
+            let dw = model.cells[li].dw.clone();
+            let dr = model.cells[li].dr.clone();
+            let db = model.cells[li].db.clone();
+            for &idx in &[0usize, 7, 23, dw.len() - 1] {
+                let orig = model.cells[li].weights.w[idx];
+                model.cells[li].weights.w[idx] = orig + eps;
+                let lp = loss_of(&mut model);
+                model.cells[li].weights.w[idx] = orig - eps;
+                let lm = loss_of(&mut model);
+                model.cells[li].weights.w[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - dw[idx]).abs() < 1e-2,
+                    "cell {} dW[{}]: {} vs {}",
+                    li,
+                    idx,
+                    num,
+                    dw[idx]
+                );
+            }
+            for &idx in &[0usize, 9, dr.len() - 1] {
+                let orig = model.cells[li].weights.r[idx];
+                model.cells[li].weights.r[idx] = orig + eps;
+                let lp = loss_of(&mut model);
+                model.cells[li].weights.r[idx] = orig - eps;
+                let lm = loss_of(&mut model);
+                model.cells[li].weights.r[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - dr[idx]).abs() < 1e-2,
+                    "cell {} dR[{}]: {} vs {}",
+                    li,
+                    idx,
+                    num,
+                    dr[idx]
+                );
+            }
+            for &idx in &[0usize, 5, db.len() - 1] {
+                let orig = model.cells[li].weights.b[idx];
+                model.cells[li].weights.b[idx] = orig + eps;
+                let lp = loss_of(&mut model);
+                model.cells[li].weights.b[idx] = orig - eps;
+                let lm = loss_of(&mut model);
+                model.cells[li].weights.b[idx] = orig;
+                let num = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (num - db[idx]).abs() < 1e-2,
+                    "cell {} db[{}]: {} vs {}",
+                    li,
+                    idx,
+                    num,
+                    db[idx]
+                );
+            }
         }
         for &idx in &[0usize, hdw.len() - 1] {
             let orig = model.head.w[idx];
@@ -504,11 +641,12 @@ mod tests {
 
     #[test]
     fn export_import_roundtrip_bit_identical_across_blockings() {
-        // Train a few steps, export canonical params, import into a model
-        // with a different batch (hence bn) and thread count: packed
-        // params and forward outputs must be bit-identical — blocking is
-        // a layout choice the artifact does not bake in.
-        let spec = tiny_spec();
+        // Train a stacked model a few steps, export canonical params,
+        // import into a model with a different batch (hence bn) and
+        // thread count: packed params and forward outputs must be
+        // bit-identical — blocking is a layout choice the artifact does
+        // not bake in.
+        let spec = stacked_spec();
         let mut rng = Rng::new(41);
         let data = ClassifyData::synth_sequences(64, spec.t, spec.c, spec.classes, 0.2, &mut rng);
         let mut src = RnnModel::new(&spec, 8, 1, &mut rng);
@@ -544,13 +682,19 @@ mod tests {
         one.pop();
         let mut dst = RnnModel::new(&spec, 4, 1, &mut rng);
         assert!(dst.import_weights(&one).is_err(), "layer count");
+        // Depth mismatch: a 1-layer export must not import into a 2-layer
+        // stack (and vice versa) — layers is honored, never coerced.
+        let mut deep = RnnModel::new(&stacked_spec(), 4, 1, &mut Rng::new(52));
+        let err = deep.import_weights(&src.export_weights()).unwrap_err();
+        assert!(err.to_string().contains("stacked cells"), "{}", err);
     }
 
     #[test]
     fn resume_equals_uninterrupted_training() {
         // K steps + export + import into a fresh model + K more steps
-        // must land on exactly the parameters of 2K uninterrupted steps.
-        let spec = tiny_spec();
+        // must land on exactly the parameters of 2K uninterrupted steps —
+        // for the stacked model.
+        let spec = stacked_spec();
         let spe = 6usize;
         let mut rng = Rng::new(61);
         let data = ClassifyData::synth_sequences(48, spec.t, spec.c, spec.classes, 0.2, &mut rng);
@@ -585,8 +729,9 @@ mod tests {
     fn data_parallel_replicas_stay_consistent() {
         // The Model-trait contract the trainer depends on: identical-seed
         // replicas stay bit-identical under synchronous SGD with the real
-        // ring-allreduce over grads_flat.
-        let spec = tiny_spec();
+        // ring-allreduce over grads_flat — including the stacked flatten
+        // order (cells bottom-up, then head).
+        let spec = stacked_spec();
         let mut rng = Rng::new(71);
         let data = ClassifyData::synth_sequences(64, spec.t, spec.c, spec.classes, 0.2, &mut rng);
         let workers: Vec<RnnModel> =

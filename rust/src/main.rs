@@ -15,6 +15,7 @@
 use anyhow::{anyhow, bail, Result};
 use brgemm_dl::autotune::{tuner, TuneOpts, TuningCache};
 use brgemm_dl::cli::{usage, Args, Command, OptSpec};
+use brgemm_dl::coordinator::build::rnn_stack_configs;
 use brgemm_dl::coordinator::cnn::{CnnModel, CnnSpec};
 use brgemm_dl::coordinator::config::{
     Backend, CheckpointConfig, RunConfig, ServeConfig, Workload,
@@ -30,8 +31,8 @@ use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
 use brgemm_dl::serve::{
-    drive_open_loop_every, InferenceModel, LoadSpec, ModelWatcher, NetSpec, Response, ServeOpts,
-    Server,
+    drive_open_loop_every, seq_request_source, InferenceModel, LoadSpec, ModelWatcher, NetSpec,
+    Response, ServeOpts, Server,
 };
 use brgemm_dl::telemetry;
 use brgemm_dl::tensor::layout;
@@ -73,9 +74,12 @@ fn commands() -> Vec<Command> {
             opts: vec![
                 OptSpec { name: "config", help: "JSON run config with a 'serve' section (excludes the other flags)", takes_value: true, default: None },
                 OptSpec { name: "model", help: "mlp|cnn|rnn topology [default: mlp]", takes_value: true, default: None },
+                OptSpec { name: "layers", help: "with --model rnn: stacked LSTM depth [default: 1]", takes_value: true, default: None },
+                OptSpec { name: "seq-len-typical", help: "rnn: mixed-length load with this typical request length (GNMT-style lognormal, bucketed by length) [default: off = full-T requests]", takes_value: true, default: None },
                 OptSpec { name: "model-path", help: "serve trained weights from this model artifact (topology comes from the artifact)", takes_value: true, default: None },
                 OptSpec { name: "min-accuracy", help: "with --model-path: replay the training distribution and fail below this accuracy fraction", takes_value: true, default: None },
                 OptSpec { name: "watch-model", help: "with --model-path: poll the artifact file and hot-reload it on change", takes_value: false, default: None },
+                OptSpec { name: "watch-poll-ms", help: "with --watch-model: poll cadence in milliseconds [default: 50]", takes_value: true, default: None },
                 OptSpec { name: "wait-fill-us", help: "batching delay: wait up to this many us for a bucket to fill [default: 0 = greedy]", takes_value: true, default: None },
                 OptSpec { name: "rate", help: "mean arrival rate, req/s [default: 2000]", takes_value: true, default: None },
                 OptSpec { name: "requests", help: "total requests to generate [default: 512]", takes_value: true, default: None },
@@ -130,7 +134,7 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "require", help: "comma-separated keys that must appear in --metrics with a nonzero/non-empty value", takes_value: true, default: None },
                 OptSpec { name: "baseline", help: "committed baseline JSON (BENCH_*.json at the repo root)", takes_value: true, default: None },
                 OptSpec { name: "current", help: "freshly measured JSON (bench_results/*.json)", takes_value: true, default: None },
-                OptSpec { name: "tolerance", help: "allowed fractional throughput drop vs baseline [default: 0.5]", takes_value: true, default: None },
+                OptSpec { name: "tolerance", help: "allowed fractional change vs baseline: throughput drop or latency rise [default: 0.5]", takes_value: true, default: None },
             ],
         },
         Command {
@@ -256,8 +260,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         (Workload::Cnn { scale, depth, classes }, Backend::Native) => {
             run_cnn_native(&cfg, scale, depth, classes, resume)
         }
-        (Workload::Rnn { c, k, t, classes }, Backend::Native) => {
-            run_rnn_native(&cfg, RnnSpec { c, k, t, classes }, resume)
+        (Workload::Rnn { c, k, t, classes, layers }, Backend::Native) => {
+            run_rnn_native(&cfg, RnnSpec { c, k, t, classes, layers }, resume)
         }
         (w, b) => bail!("workload {:?} on backend {:?} not wired in the CLI (see examples/)", w, b),
     }
@@ -321,9 +325,13 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
                 Workload::Cnn { scale, depth, classes } => {
                     NetSpec::Cnn(CnnSpec::resnet_mini(*scale, *depth, *classes))
                 }
-                Workload::Rnn { c, k, t, classes } => {
-                    NetSpec::Rnn(RnnSpec { c: *c, k: *k, t: *t, classes: *classes })
-                }
+                Workload::Rnn { c, k, t, classes, layers } => NetSpec::Rnn(RnnSpec {
+                    c: *c,
+                    k: *k,
+                    t: *t,
+                    classes: *classes,
+                    layers: *layers,
+                }),
                 w => bail!("workload {:?} not servable (mlp|cnn|rnn)", w),
             };
             let mut rng = Rng::new(cfg.seed);
@@ -364,6 +372,12 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     };
     let report = if let Some(min_acc) = sc.min_accuracy {
         let art = artifact.as_ref().expect("validated: min_accuracy requires model_path");
+        if sc.seq_len_typical.is_some() {
+            log_warn!(
+                "min_accuracy replays the training distribution at its full sequence \
+                 length; seq_len_typical is ignored for this run"
+            );
+        }
         let (report, accuracy) = serve_eval_load(model, opts, &sc, art, watch)?;
         log_info!(
             "serve accuracy over the training distribution: {:.1}% (threshold {:.1}%)",
@@ -381,11 +395,53 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         report
     } else {
         let load = LoadSpec { requests: sc.requests, rate_rps: sc.rate, seed: cfg.seed };
-        let dim = model.input_dim();
-        let (report, responses) =
-            open_loop_watched(model, opts, &load, watch, sc.metrics_every, move |rng, _i| {
-                rng.vec_f32(dim, -1.0, 1.0)
-            });
+        let (report, responses) = match sc.seq_len_typical {
+            Some(typical) => {
+                let step = model.seq_step_dim().ok_or_else(|| {
+                    anyhow!(
+                        "serve.seq_len_typical needs a sequence (rnn) model; this model \
+                         takes fixed {}-float requests",
+                        model.input_dim()
+                    )
+                })?;
+                let t = model.seq_max_len().expect("sequence model has a max length");
+                if typical > t {
+                    bail!(
+                        "serve.seq_len_typical {} exceeds the model's sequence capacity T={}",
+                        typical,
+                        t
+                    );
+                }
+                log_info!(
+                    "mixed-length load: lengths ~ lognormal around {} (clamped to [2, {}]), \
+                     routed through length buckets {:?}",
+                    typical,
+                    t,
+                    model.len_buckets()
+                );
+                open_loop_watched(
+                    model,
+                    opts,
+                    &load,
+                    watch,
+                    sc.metrics_every,
+                    sc.watch_poll_ms,
+                    seq_request_source(step, typical, t),
+                )
+            }
+            None => {
+                let dim = model.input_dim();
+                open_loop_watched(
+                    model,
+                    opts,
+                    &load,
+                    watch,
+                    sc.metrics_every,
+                    sc.watch_poll_ms,
+                    move |rng, _i| rng.vec_f32(dim, -1.0, 1.0),
+                )
+            }
+        };
         if responses.len() != sc.requests {
             bail!("served {} of {} requests", responses.len(), sc.requests);
         }
@@ -417,12 +473,18 @@ fn open_loop_watched(
     load: &LoadSpec,
     watch: Option<(&str, &ModelArtifact)>,
     metrics_every: Option<f64>,
+    watch_poll_ms: u64,
     make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
 ) -> (brgemm_dl::serve::ServeReport, Vec<Response>) {
     let (server, rx) = Server::start(model, opts);
     let watcher = watch.map(|(p, loaded)| {
-        log_info!("watch-model: polling {} for changes", p);
-        ModelWatcher::spawn(server.reload_handle(), p, Duration::from_millis(50), Some(loaded))
+        log_info!("watch-model: polling {} every {} ms for changes", p, watch_poll_ms);
+        ModelWatcher::spawn(
+            server.reload_handle(),
+            p,
+            Duration::from_millis(watch_poll_ms),
+            Some(loaded),
+        )
     });
     let out = drive_open_loop_every(server, rx, load, metrics_every, make_input);
     if let Some(w) = watcher {
@@ -455,10 +517,15 @@ fn serve_eval_load(
         );
     }
     let load = LoadSpec { requests: n, rate_rps: sc.rate, seed: art.meta.seed };
-    let (report, responses) =
-        open_loop_watched(model, opts, &load, watch, sc.metrics_every, |_rng, i| {
-            data.batch(i, 1).0
-        });
+    let (report, responses) = open_loop_watched(
+        model,
+        opts,
+        &load,
+        watch,
+        sc.metrics_every,
+        sc.watch_poll_ms,
+        |_rng, i| data.batch(i, 1).0,
+    );
     if responses.len() != n {
         bail!("served {} of {} eval requests", responses.len(), n);
     }
@@ -482,9 +549,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // The config file is authoritative: reject flags it would silently
         // override (only --json composes with --config).
         let conflicting: Vec<&str> =
-            ["model", "model-path", "min-accuracy", "watch-model", "wait-fill-us", "rate",
-             "requests", "max-batch", "serve-workers", "nthreads", "seed", "tune",
-             "metrics-out", "metrics-every"]
+            ["model", "layers", "seq-len-typical", "model-path", "min-accuracy", "watch-model",
+             "watch-poll-ms", "wait-fill-us", "rate", "requests", "max-batch", "serve-workers",
+             "nthreads", "seed", "tune", "metrics-out", "metrics-every"]
             .into_iter()
             .filter(|&k| args.str(k).is_some())
             .collect();
@@ -505,12 +572,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--model-path serves the artifact's own topology; drop --model");
     }
     let mut cfg = RunConfig::default();
+    let layers = args.usize_or("layers", 1).map_err(|e| anyhow!("{}", e))?;
+    if layers == 0 {
+        bail!("--layers must be >= 1 (stacked LSTM depth)");
+    }
     cfg.workload = match args.str_or("model", "mlp") {
         "mlp" => Workload::Mlp { sizes: vec![64, 128, 10] },
         "cnn" => Workload::Cnn { scale: 8, depth: 2, classes: 8 },
-        "rnn" => Workload::Rnn { c: 16, k: 32, t: 8, classes: 4 },
+        "rnn" => Workload::Rnn { c: 16, k: 32, t: 8, classes: 4, layers },
         other => bail!("unknown model '{}' (mlp|cnn|rnn)", other),
     };
+    if args.str("layers").is_some() && !matches!(cfg.workload, Workload::Rnn { .. }) {
+        bail!("--layers applies to --model rnn (stacked LSTM depth)");
+    }
     cfg.nthreads = args.usize_or("nthreads", 1).map_err(|e| anyhow!("{}", e))?;
     cfg.seed = args.usize_or("seed", 42).map_err(|e| anyhow!("{}", e))? as u64;
     cfg.tune = args.flag("tune");
@@ -527,6 +601,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         model_path: args.str("model-path").map(String::from),
         min_accuracy: args.f64("min-accuracy").map_err(|e| anyhow!("{}", e))?,
         watch_model: args.flag("watch-model"),
+        watch_poll_ms: args
+            .usize_or("watch-poll-ms", d.watch_poll_ms as usize)
+            .map_err(|e| anyhow!("{}", e))? as u64,
+        seq_len_typical: args.usize("seq-len-typical").map_err(|e| anyhow!("{}", e))?,
         metrics_every: args.f64("metrics-every").map_err(|e| anyhow!("{}", e))?,
     };
     sc.validate()?;
@@ -931,7 +1009,8 @@ fn run_rnn_native(cfg: &RunConfig, spec: RnnSpec, resume: Option<ModelArtifact>)
     let arch = Arch::Rnn(spec);
     let data = synth_dataset(&arch, cfg.seed);
     log_info!(
-        "rnn: lstm cell c{} k{} over T={} steps, {} classes",
+        "rnn: {} stacked lstm cell(s), c{} -> k{} over T={} steps, {} classes",
+        spec.layers,
         spec.c,
         spec.k,
         spec.t,
@@ -942,24 +1021,29 @@ fn run_rnn_native(cfg: &RunConfig, spec: RnnSpec, resume: Option<ModelArtifact>)
     })
 }
 
-/// Tune-before-train for the RNN: tune the LSTM cell shape (the cache
-/// key includes the sequence length) plus the FC head, persisting
-/// winners so `RnnModel::new_with(.., tuned: true, ..)` hits them.
+/// Tune-before-train for the RNN: tune every LSTM cell shape of the
+/// stack (layer 0 maps `c -> k`, deeper layers `k -> k`; the cache key
+/// includes each layer's own input width and the sequence length) plus
+/// the FC head, persisting winners so
+/// `RnnModel::new_with(.., tuned: true, ..)` hits them.
 fn tune_rnn_layers(cfg: &RunConfig, spec: &RnnSpec) {
     let topts = TuneOpts::quick();
     let mut cache = TuningCache::global().lock().unwrap();
-    let lcfg = LstmConfig::new(cfg.batch, spec.c, spec.k, spec.t).with_threads(cfg.nthreads);
-    let rep = tuner::tune_lstm_cached(&lcfg, &topts, &mut cache);
-    log_info!(
-        "tuned lstm cell ({}x{}->{} T{}): {} at {:.2} GF/s ({:.2}x default)",
-        cfg.batch,
-        spec.c,
-        spec.k,
-        spec.t,
-        rep.best().cand.label(rep.kind),
-        rep.best().gflops,
-        rep.speedup_vs_default()
-    );
+    // `tuned: false`: these are the raw shapes to tune, not cache lookups.
+    for (i, lcfg) in rnn_stack_configs(spec, cfg.batch, cfg.nthreads, false).iter().enumerate() {
+        let rep = tuner::tune_lstm_cached(lcfg, &topts, &mut cache);
+        log_info!(
+            "tuned lstm layer {} ({}x{}->{} T{}): {} at {:.2} GF/s ({:.2}x default)",
+            i,
+            cfg.batch,
+            lcfg.c,
+            lcfg.k,
+            spec.t,
+            rep.best().cand.label(rep.kind),
+            rep.best().gflops,
+            rep.speedup_vs_default()
+        );
+    }
     let fcfg = FcConfig::new(cfg.batch, spec.k, spec.classes, Act::Identity)
         .with_threads(cfg.nthreads);
     let rep = tuner::tune_fc_cached(&fcfg, &topts.with_train(true), &mut cache);
@@ -1139,9 +1223,17 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 /// Throughput-like keys (higher is better) compared by
-/// `perfcheck --baseline/--current`. Timings and counters are ignored —
-/// only sustained-rate numbers are meaningful across runs.
-const PERF_KEYS: [&str; 4] = ["gflops", "kwps", "imgs_per_s", "throughput_rps"];
+/// `perfcheck --baseline/--current`. `useful_wps` is the serve bench's
+/// useful-words-per-second rate (padding excluded). Counters and
+/// timestamps are ignored — only sustained-rate numbers are meaningful
+/// across runs.
+const PERF_KEYS: [&str; 5] = ["gflops", "kwps", "imgs_per_s", "throughput_rps", "useful_wps"];
+
+/// Latency-like keys (**lower** is better), compared with the same
+/// tolerance in the opposite direction: a *rise* beyond the allowed
+/// fraction is the regression. `queue_wait_ms` is the per-bucket
+/// queue-wait leaf of the serve report's bucket table.
+const LAT_KEYS: [&str; 4] = ["p50_ms", "p95_ms", "p99_ms", "queue_wait_ms"];
 
 /// `perfcheck` — CI's observability gate. Two independent modes that can
 /// be combined in one invocation:
@@ -1149,10 +1241,12 @@ const PERF_KEYS: [&str; 4] = ["gflops", "kwps", "imgs_per_s", "throughput_rps"];
 /// * `--metrics <file> [--require k1,k2]`: the file must be non-empty
 ///   JSON lines, and each required key must occur somewhere in it with a
 ///   nonzero number / non-empty container.
-/// * `--baseline <json> --current <json> [--tolerance f]`: every
-///   throughput-like leaf (see [`PERF_KEYS`]) present in both documents
-///   at the same path must not have dropped by more than the tolerance
-///   fraction. Exit status is the verdict; ci.sh runs this advisorily.
+/// * `--baseline <json> --current <json> [--tolerance f]`: every perf
+///   leaf present in both documents at the same path must stay within
+///   the tolerance fraction of baseline — throughput keys
+///   ([`PERF_KEYS`]) may not drop below `base * (1 - tol)`, latency keys
+///   ([`LAT_KEYS`]) may not rise above `base * (1 + tol)`. Exit status
+///   is the verdict; ci.sh runs this advisorily.
 fn cmd_perfcheck(args: &Args) -> Result<()> {
     let did_metrics = match args.str("metrics") {
         Some(path) => {
@@ -1233,10 +1327,10 @@ fn collect_key<'a>(j: &'a Json, key: &str, out: &mut Vec<&'a Json>) {
     }
 }
 
-/// Collect `(path, value)` for every [`PERF_KEYS`] numeric leaf; paths
-/// use object keys and array indices, so two structurally equal documents
-/// pair up exactly.
-fn collect_perf(j: &Json, path: &mut String, out: &mut Vec<(String, f64)>) {
+/// Collect `(path, value)` for every numeric leaf whose key is in
+/// `keys`; paths use object keys and array indices, so two structurally
+/// equal documents pair up exactly.
+fn collect_perf(j: &Json, keys: &[&str], path: &mut String, out: &mut Vec<(String, f64)>) {
     match j {
         Json::Obj(m) => {
             for (k, v) in m {
@@ -1244,11 +1338,11 @@ fn collect_perf(j: &Json, path: &mut String, out: &mut Vec<(String, f64)>) {
                 path.push('/');
                 path.push_str(k);
                 if let Json::Num(x) = v {
-                    if PERF_KEYS.contains(&k.as_str()) {
+                    if keys.contains(&k.as_str()) {
                         out.push((path.clone(), *x));
                     }
                 }
-                collect_perf(v, path, out);
+                collect_perf(v, keys, path, out);
                 path.truncate(len);
             }
         }
@@ -1256,12 +1350,54 @@ fn collect_perf(j: &Json, path: &mut String, out: &mut Vec<(String, f64)>) {
             for (i, v) in a.iter().enumerate() {
                 let len = path.len();
                 path.push_str(&format!("/{}", i));
-                collect_perf(v, path, out);
+                collect_perf(v, keys, path, out);
                 path.truncate(len);
             }
         }
         _ => {}
     }
+}
+
+/// Direction-aware comparison of every shared perf leaf: throughput keys
+/// ([`PERF_KEYS`]) regress by *dropping* below `base * (1 - tol)`,
+/// latency keys ([`LAT_KEYS`]) regress by *rising* above
+/// `base * (1 + tol)`. Zero/negative baselines are skipped — there is no
+/// meaningful fraction of nothing. Returns the number of compared points
+/// plus one message per regression.
+fn perf_deltas(b: &Json, c: &Json, tol: f64) -> (usize, Vec<String>) {
+    let mut compared = 0usize;
+    let mut regressions: Vec<String> = Vec::new();
+    for (keys, lower_is_better) in [(&PERF_KEYS[..], false), (&LAT_KEYS[..], true)] {
+        let mut bvals: Vec<(String, f64)> = Vec::new();
+        let mut cvals: Vec<(String, f64)> = Vec::new();
+        collect_perf(b, keys, &mut String::new(), &mut bvals);
+        collect_perf(c, keys, &mut String::new(), &mut cvals);
+        let cmap: std::collections::BTreeMap<String, f64> = cvals.into_iter().collect();
+        for (path, bv) in &bvals {
+            if let Some(cv) = cmap.get(path) {
+                compared += 1;
+                if *bv <= 0.0 {
+                    continue;
+                }
+                let bad = if lower_is_better {
+                    *cv > *bv * (1.0 + tol)
+                } else {
+                    *cv < *bv * (1.0 - tol)
+                };
+                if bad {
+                    regressions.push(format!(
+                        "REGRESSION {}: {:.3} vs baseline {:.3} (allowed {} {:.0}%)",
+                        path,
+                        cv,
+                        bv,
+                        if lower_is_better { "rise" } else { "drop" },
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    (compared, regressions)
 }
 
 fn compare_perf(baseline: &str, current: &str, tol: f64) -> Result<()> {
@@ -1270,40 +1406,23 @@ fn compare_perf(baseline: &str, current: &str, tol: f64) -> Result<()> {
         Json::parse(&s).map_err(|e| anyhow!("{}: {:?}", p, e))
     };
     let (b, c) = (load(baseline)?, load(current)?);
-    let mut bvals: Vec<(String, f64)> = Vec::new();
-    let mut cvals: Vec<(String, f64)> = Vec::new();
-    collect_perf(&b, &mut String::new(), &mut bvals);
-    collect_perf(&c, &mut String::new(), &mut cvals);
-    let cmap: std::collections::BTreeMap<String, f64> = cvals.into_iter().collect();
-    let mut compared = 0usize;
-    let mut regressions = 0usize;
-    for (path, bv) in &bvals {
-        if let Some(cv) = cmap.get(path) {
-            compared += 1;
-            if *bv > 0.0 && *cv < *bv * (1.0 - tol) {
-                regressions += 1;
-                println!(
-                    "REGRESSION {}: {:.3} vs baseline {:.3} (allowed drop {:.0}%)",
-                    path,
-                    cv,
-                    bv,
-                    tol * 100.0
-                );
-            }
-        }
+    let (compared, regressions) = perf_deltas(&b, &c, tol);
+    for r in &regressions {
+        println!("{}", r);
     }
     if compared == 0 {
         bail!(
-            "no comparable perf keys ({}) shared between {} and {}",
+            "no comparable perf keys ({} / {}) shared between {} and {}",
             PERF_KEYS.join("/"),
+            LAT_KEYS.join("/"),
             baseline,
             current
         );
     }
-    if regressions > 0 {
+    if !regressions.is_empty() {
         bail!(
             "{} of {} perf point(s) regressed beyond {:.0}% of baseline {}",
-            regressions,
+            regressions.len(),
             compared,
             tol * 100.0,
             baseline
@@ -1327,6 +1446,66 @@ fn report(what: &str, flops: f64, secs: f64, peak: f64) {
         100.0 * gf / peak,
         peak
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn throughput_drop_is_a_regression_and_rise_is_not() {
+        let base = j(r#"{"throughput_rps": 100.0, "gflops": 50.0}"#);
+        let worse = j(r#"{"throughput_rps": 40.0, "gflops": 50.0}"#);
+        let (compared, regs) = perf_deltas(&base, &worse, 0.5);
+        assert_eq!(compared, 2);
+        assert_eq!(regs.len(), 1, "{:?}", regs);
+        assert!(regs[0].contains("/throughput_rps") && regs[0].contains("drop"));
+        // 10x better throughput is never a "regression".
+        let better = j(r#"{"throughput_rps": 1000.0, "gflops": 500.0}"#);
+        assert!(perf_deltas(&base, &better, 0.5).1.is_empty());
+    }
+
+    #[test]
+    fn latency_rise_is_a_regression_and_drop_is_not() {
+        let base = j(r#"{"p95_ms": 10.0, "p99_ms": 20.0, "throughput_rps": 100.0}"#);
+        // p99 triples: beyond a 50% allowed rise. p95 halves: fine —
+        // lower latency is the good direction.
+        let cur = j(r#"{"p95_ms": 5.0, "p99_ms": 60.0, "throughput_rps": 100.0}"#);
+        let (compared, regs) = perf_deltas(&base, &cur, 0.5);
+        assert_eq!(compared, 3);
+        assert_eq!(regs.len(), 1, "{:?}", regs);
+        assert!(regs[0].contains("/p99_ms") && regs[0].contains("rise"));
+        // Within tolerance on both axes: clean.
+        let ok = j(r#"{"p95_ms": 12.0, "p99_ms": 25.0, "throughput_rps": 80.0}"#);
+        assert!(perf_deltas(&base, &ok, 0.5).1.is_empty());
+    }
+
+    #[test]
+    fn perf_leaves_pair_by_path_through_arrays_and_zero_baselines_skip() {
+        // Rows pair by index, so appended rows in current are ignored and
+        // a reordered baseline would not cross-compare.
+        let base = j(r#"{"rows": [{"kwps": 5.0}, {"kwps": 0.0}]}"#);
+        let cur = j(r#"{"rows": [{"kwps": 1.0}, {"kwps": 7.0}, {"useful_wps": 3.0}]}"#);
+        let (compared, regs) = perf_deltas(&base, &cur, 0.5);
+        // Both kwps paths exist in both docs; the zero baseline is
+        // counted but never regresses.
+        assert_eq!(compared, 2);
+        assert_eq!(regs.len(), 1, "{:?}", regs);
+        assert!(regs[0].contains("/rows/0/kwps"));
+    }
+
+    #[test]
+    fn queue_wait_and_useful_wps_leaves_are_compared() {
+        let base = j(r#"{"buckets": [{"queue_wait_ms": 2.0}], "useful_wps": 100.0}"#);
+        let cur = j(r#"{"buckets": [{"queue_wait_ms": 9.0}], "useful_wps": 20.0}"#);
+        let (compared, regs) = perf_deltas(&base, &cur, 0.5);
+        assert_eq!(compared, 2);
+        assert_eq!(regs.len(), 2, "{:?}", regs);
+    }
 }
 
 fn cmd_xla(args: &Args) -> Result<()> {

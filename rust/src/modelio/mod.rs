@@ -65,18 +65,29 @@
 //! # The RNN path
 //!
 //! The same pipeline covers sequence models. An `{"model": "rnn"}` config
-//! trains the LSTM sequence classifier (`examples/rnn.json`) with the
-//! identical checkpoint/resume contract; the artifact's [`Arch::Rnn`]
-//! stores the whole cell as one [`LayerKind::Lstm`] layer — canonical
-//! unblocked per-gate `W`/`R`/`b` (gate order i, g, f, o) — plus the FC
-//! head, so export → import round-trips bit-identically under any
-//! `{bn, bc, bk, threads}`:
+//! trains the stacked LSTM sequence classifier (`examples/rnn.json` is a
+//! 2-layer stack; `"layers"` is honored, never coerced) with the
+//! identical checkpoint/resume contract. The artifact's [`Arch::Rnn`]
+//! stores each cell of the stack as one [`LayerKind::Lstm`] layer —
+//! canonical unblocked per-gate `W`/`R`/`b` (gate order i, g, f, o),
+//! layer 0 shaped `c -> k`, deeper layers `k -> k` — plus the FC head,
+//! so export → import round-trips bit-identically under any
+//! `{bn, bc, bk, threads}`. Single-layer specs still encode in the
+//! pre-stack byte format (arch tag 2), so old artifacts and old readers
+//! stay compatible in both directions; stacked specs use tag 3:
 //!
 //! ```text
 //!   brgemm-dl run --config examples/rnn.json
 //!   brgemm-dl run --config examples/rnn.json --epochs 3 --resume checkpoints/rnn.bin
 //!   brgemm-dl serve --model-path checkpoints/rnn.bin --min-accuracy 0.5
 //! ```
+//!
+//! A served sequence model also accepts **variable-length** requests: any
+//! whole number of steps up to the trained `T` is routed through the
+//! batcher's length-bucket ladder and computed as a prefix of the
+//! full-length plans (`serve --model-path checkpoints/rnn.bin
+//! --seq-len-typical 4` drives a GNMT-style mixed-length load; responses
+//! are bit-identical to solo full-padding runs).
 
 pub mod format;
 
@@ -100,8 +111,12 @@ pub enum Arch {
     Mlp { sizes: Vec<usize> },
     /// Conv stack + pool + FC head (the CNN training driver's topology).
     Cnn(CnnSpec),
-    /// LSTM cell over `[T][N][C]` sequences + FC softmax head on the
-    /// final hidden state (the RNN training driver's topology).
+    /// Stacked LSTM cells over `[T][N][C]` sequences + FC softmax head on
+    /// the top layer's final hidden state (the RNN training driver's
+    /// topology): `spec.layers` cells, layer 0 `c -> k`, deeper layers
+    /// `k -> k`. Encoded as tag 2 (the pre-stack format) when
+    /// `layers == 1` and tag 3 otherwise, so artifacts written before the
+    /// stack refactor load unchanged.
     Rnn(RnnSpec),
 }
 
@@ -143,8 +158,8 @@ impl Arch {
                 spec.classes
             ),
             Arch::Rnn(spec) => format!(
-                "rnn c{} k{} t{} ({} classes)",
-                spec.c, spec.k, spec.t, spec.classes
+                "rnn c{} k{} t{} x{} ({} classes)",
+                spec.c, spec.k, spec.t, spec.layers, spec.classes
             ),
         }
     }
@@ -220,6 +235,9 @@ impl Arch {
                 if spec.classes < 2 {
                     bail!("rnn arch needs >= 2 classes, got {}", spec.classes);
                 }
+                if spec.layers == 0 {
+                    bail!("rnn arch needs >= 1 stacked layer, got 0");
+                }
             }
         }
         Ok(())
@@ -252,10 +270,22 @@ impl Arch {
                 out.push(LayerShape { kind: LayerKind::Fc, dims: vec![spec.classes, feat] });
                 out
             }
-            Arch::Rnn(spec) => vec![
-                LayerShape { kind: LayerKind::Lstm, dims: vec![spec.k, spec.c] },
-                LayerShape { kind: LayerKind::Fc, dims: vec![spec.classes, spec.k] },
-            ],
+            Arch::Rnn(spec) => {
+                // One Lstm layer per stacked cell (bottom-up: c -> k, then
+                // k -> k), then the head — kind-aware validation falls out
+                // of the shared per-layer dims/length checks.
+                let mut out: Vec<LayerShape> = (0..spec.layers)
+                    .map(|i| LayerShape {
+                        kind: LayerKind::Lstm,
+                        dims: vec![spec.k, if i == 0 { spec.c } else { spec.k }],
+                    })
+                    .collect();
+                out.push(LayerShape {
+                    kind: LayerKind::Fc,
+                    dims: vec![spec.classes, spec.k],
+                });
+                out
+            }
         }
     }
 
@@ -279,11 +309,24 @@ impl Arch {
                 e.u32(spec.classes as u32);
             }
             Arch::Rnn(spec) => {
-                e.u8(2);
+                // Tag 2 is the pre-stack single-cell format (no layer
+                // count; the payload runs straight into TrainMeta, so the
+                // field cannot be appended in place). A 1-layer spec
+                // writes it byte-identically — old readers and new
+                // artifacts interoperate — and only a real stack uses the
+                // tag-3 form with the explicit depth.
+                if spec.layers == 1 {
+                    e.u8(2);
+                } else {
+                    e.u8(3);
+                }
                 e.u32(spec.c as u32);
                 e.u32(spec.k as u32);
                 e.u32(spec.t as u32);
                 e.u32(spec.classes as u32);
+                if spec.layers != 1 {
+                    e.u32(spec.layers as u32);
+                }
             }
         }
     }
@@ -332,12 +375,15 @@ impl Arch {
                     classes,
                 }))
             }
-            2 => {
+            tag @ (2 | 3) => {
                 let c = d.u32("rnn c")? as usize;
                 let k = d.u32("rnn k")? as usize;
                 let t = d.u32("rnn t")? as usize;
                 let classes = d.u32("rnn classes")? as usize;
-                Ok(Arch::Rnn(RnnSpec { c, k, t, classes }))
+                // Tag 2 = the pre-stack format: exactly one cell.
+                let layers =
+                    if tag == 2 { 1 } else { d.u32("rnn layers")? as usize };
+                Ok(Arch::Rnn(RnnSpec { c, k, t, classes, layers }))
             }
             t => bail!("unknown arch tag {} in artifact", t),
         }
@@ -727,7 +773,7 @@ mod tests {
 
     fn rnn_artifact() -> ModelArtifact {
         let mut rng = Rng::new(7);
-        let spec = crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 3 };
+        let spec = crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 3, layers: 1 };
         let layers = vec![
             LayerParams::lstm(
                 4,
@@ -740,13 +786,112 @@ mod tests {
         ModelArtifact::new(Arch::Rnn(spec), TrainMeta::fresh(7), layers)
     }
 
+    fn stacked_rnn_artifact() -> ModelArtifact {
+        let mut rng = Rng::new(8);
+        let spec = crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 3, layers: 3 };
+        let mut layers = vec![LayerParams::lstm(
+            4,
+            3,
+            rng.vec_f32(4 * 4 * (3 + 4), -1.0, 1.0),
+            rng.vec_f32(4 * 4, -0.1, 0.1),
+        )];
+        for _ in 1..3 {
+            layers.push(LayerParams::lstm(
+                4,
+                4,
+                rng.vec_f32(4 * 4 * (4 + 4), -1.0, 1.0),
+                rng.vec_f32(4 * 4, -0.1, 0.1),
+            ));
+        }
+        layers.push(LayerParams::fc(3, 4, rng.vec_f32(12, -1.0, 1.0), rng.vec_f32(3, -0.1, 0.1)));
+        ModelArtifact::new(Arch::Rnn(spec), TrainMeta::fresh(8), layers)
+    }
+
     #[test]
     fn encode_decode_roundtrip_all_arches() {
-        for art in [mlp_artifact(), cnn_artifact(), rnn_artifact()] {
+        for art in [mlp_artifact(), cnn_artifact(), rnn_artifact(), stacked_rnn_artifact()] {
             let bytes = art.encode();
             let back = ModelArtifact::decode(&bytes).unwrap();
             assert_eq!(art, back, "decode(encode(x)) must be x");
         }
+    }
+
+    #[test]
+    fn single_layer_rnn_artifact_keeps_the_pre_stack_byte_format() {
+        // Back-compat is a byte-level contract: a layers=1 arch must
+        // encode to exactly the pre-stack tag-2 payload (no trailing
+        // depth field — the old format runs straight into TrainMeta), and
+        // a hand-built old-format payload must decode as layers=1.
+        let art = rnn_artifact();
+        let bytes = art.encode();
+        // Header is magic(8) + version(4) + len(8) + crc(4) = 24 bytes;
+        // the first payload byte is the arch tag.
+        assert_eq!(bytes[24], 2, "layers=1 writes the pre-stack arch tag");
+        let spec = match &art.arch {
+            Arch::Rnn(s) => *s,
+            _ => unreachable!(),
+        };
+        // Rebuild the payload exactly as a pre-stack writer would have.
+        let mut p = Enc::new();
+        p.u8(2);
+        p.u32(spec.c as u32);
+        p.u32(spec.k as u32);
+        p.u32(spec.t as u32);
+        p.u32(spec.classes as u32);
+        art.meta.encode(&mut p);
+        p.u32(art.layers.len() as u32);
+        for l in &art.layers {
+            p.u8(match l.kind {
+                LayerKind::Fc => 0,
+                LayerKind::Conv => 1,
+                LayerKind::Lstm => 2,
+            });
+            p.usize_slice(&l.dims);
+            p.f32_slice(&l.w);
+            p.f32_slice(&l.b);
+        }
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(&MAGIC);
+        e.u32(SCHEMA_VERSION);
+        e.u64(p.buf.len() as u64);
+        e.u32(crc32(&p.buf));
+        e.buf.extend_from_slice(&p.buf);
+        assert_eq!(bytes, e.buf, "layers=1 byte layout unchanged from pre-stack");
+        let back = ModelArtifact::decode(&e.buf).unwrap();
+        assert_eq!(back, art, "old-format bytes decode as a layers=1 stack");
+        // And a real stack takes the tag-3 form.
+        let stacked = stacked_rnn_artifact().encode();
+        assert_eq!(stacked[24], 3, "layers>1 uses the explicit-depth tag");
+    }
+
+    #[test]
+    fn stacked_rnn_artifact_validation_is_per_cell() {
+        // A deep cell must be k -> k; lying about its input width is
+        // caught by the kind-aware per-layer shape check.
+        let mut art = stacked_rnn_artifact();
+        art.layers[1] = LayerParams::lstm(
+            4,
+            3,
+            vec![0.0; 4 * 4 * (3 + 4)],
+            vec![0.0; 16],
+        );
+        let err = art.validate().unwrap_err();
+        assert!(err.to_string().contains("layer 1"), "{}", err);
+        // Wrong depth: arch says 3 cells + head, artifact carries 2 + head.
+        let mut art = stacked_rnn_artifact();
+        art.layers.remove(1);
+        assert!(art.validate().unwrap_err().to_string().contains("expects 4"));
+        // layers=0 is unbuildable and must error on decode, not panic.
+        let mut art = rnn_artifact();
+        art.arch = Arch::Rnn(crate::coordinator::rnn::RnnSpec {
+            c: 3,
+            k: 4,
+            t: 2,
+            classes: 3,
+            layers: 0,
+        });
+        let err = ModelArtifact::decode(&art.encode()).unwrap_err();
+        assert!(err.to_string().contains("stacked layer"), "{}", err);
     }
 
     #[test]
@@ -765,11 +910,13 @@ mod tests {
         assert!(art.validate().is_err(), "fc layer where the arch expects an lstm cell");
         // Hostile arch values error on decode, never panic downstream.
         let mut art = rnn_artifact();
-        art.arch = Arch::Rnn(crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 0, classes: 3 });
+        art.arch =
+            Arch::Rnn(crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 0, classes: 3, layers: 1 });
         let err = ModelArtifact::decode(&art.encode()).unwrap_err();
         assert!(err.to_string().contains(">= 1"), "{}", err);
         let mut art = rnn_artifact();
-        art.arch = Arch::Rnn(crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 1 });
+        art.arch =
+            Arch::Rnn(crate::coordinator::rnn::RnnSpec { c: 3, k: 4, t: 2, classes: 1, layers: 1 });
         let err = ModelArtifact::decode(&art.encode()).unwrap_err();
         assert!(err.to_string().contains("classes"), "{}", err);
     }

@@ -92,9 +92,14 @@ impl LstmConfig {
 
     /// GEMM flops of the full forward pass.
     pub fn fwd_flops(&self) -> f64 {
+        self.fwd_flops_t(self.t)
+    }
+
+    /// GEMM flops of a forward pass over the first `t_run` steps.
+    pub fn fwd_flops_t(&self, t_run: usize) -> f64 {
         let per_step =
             2.0 * GATES as f64 * self.n as f64 * self.k as f64 * (self.c + self.k) as f64;
-        per_step * self.t as f64
+        per_step * t_run as f64
     }
 
     /// GEMM flops of backward-by-data + weight-update (2× fwd: dx/dh GEMMs
@@ -442,7 +447,35 @@ impl LstmPrimitive {
         weights: &LstmWeights,
         ws: &mut LstmWorkspace,
     ) -> LstmBreakdown {
-        self.forward_parts(x, h0, s0, &weights.w, &weights.r, &weights.b, weights.reformat_secs, ws)
+        self.forward_t(x, h0, s0, weights, ws, self.cfg.t)
+    }
+
+    /// [`LstmPrimitive::forward`] over only the first `t_run <= cfg.t`
+    /// time-steps — prefix execution: the same packed weights, kernels and
+    /// full-capacity workspace serve any runtime sequence length up to the
+    /// config's `t`, so one tuned config covers a whole length bucket.
+    /// `x` must hold at least `t_run` steps (`[t_run][N][C]` prefix);
+    /// workspace entries past `t_run` are left untouched.
+    pub fn forward_t(
+        &self,
+        x: &[f32],
+        h0: Option<&[f32]>,
+        s0: Option<&[f32]>,
+        weights: &LstmWeights,
+        ws: &mut LstmWorkspace,
+        t_run: usize,
+    ) -> LstmBreakdown {
+        self.forward_parts(
+            x,
+            h0,
+            s0,
+            &weights.w,
+            &weights.r,
+            &weights.b,
+            weights.reformat_secs,
+            ws,
+            t_run,
+        )
     }
 
     /// [`LstmPrimitive::forward`] against [`Arc`]-shared packed weights —
@@ -455,13 +488,28 @@ impl LstmPrimitive {
         weights: &LstmSharedWeights,
         ws: &mut LstmWorkspace,
     ) -> LstmBreakdown {
+        self.forward_shared_t(x, h0, s0, weights, ws, self.cfg.t)
+    }
+
+    /// [`LstmPrimitive::forward_shared`] over only the first `t_run` steps
+    /// (see [`LstmPrimitive::forward_t`]) — what a (length bucket × batch
+    /// bucket) serving plan executes.
+    pub fn forward_shared_t(
+        &self,
+        x: &[f32],
+        h0: Option<&[f32]>,
+        s0: Option<&[f32]>,
+        weights: &LstmSharedWeights,
+        ws: &mut LstmWorkspace,
+        t_run: usize,
+    ) -> LstmBreakdown {
         assert!(
             weights.matches(&self.cfg),
             "shared weights ({}x{} bk{} bc{}) do not match plan ({}x{} bk{} bc{})",
             weights.k, weights.c, weights.bk, weights.bc,
             self.cfg.k, self.cfg.c, self.cfg.bk, self.cfg.bc
         );
-        self.forward_parts(x, h0, s0, weights.w(), weights.r(), weights.b(), 0.0, ws)
+        self.forward_parts(x, h0, s0, weights.w(), weights.r(), weights.b(), 0.0, ws, t_run)
     }
 
     /// The forward body over raw packed-weight slices (`w`
@@ -478,9 +526,16 @@ impl LstmPrimitive {
         b: &[f32],
         reformat_secs: f64,
         ws: &mut LstmWorkspace,
+        t_run: usize,
     ) -> LstmBreakdown {
         let cfg = &self.cfg;
-        assert_eq!(x.len(), cfg.t * cfg.n * cfg.c);
+        assert!(
+            t_run >= 1 && t_run <= cfg.t,
+            "t_run {} must be in 1..={} (the config's capacity)",
+            t_run,
+            cfg.t
+        );
+        assert!(x.len() >= t_run * cfg.n * cfg.c, "x holds at least t_run steps");
         let nk = cfg.n * cfg.k;
         let tnk = cfg.t * nk;
         assert_eq!(ws.gates.len(), GATES * tnk, "workspace gates sized for this config");
@@ -506,7 +561,7 @@ impl LstmPrimitive {
         let rblk = cfg.bk * cfg.bk;
         let mut bd = LstmBreakdown { reformat_secs, ..Default::default() };
 
-        for t in 0..cfg.t {
+        for t in 0..t_run {
             let t0 = Instant::now();
             let gates_shared = &SharedMut::new(&mut ws.gates);
             // split h/s into (past, current) so threads can read h[t], s[t]
@@ -589,9 +644,16 @@ impl LstmPrimitive {
             bd.gemm_secs += t0.elapsed().as_secs_f64() - el;
         }
         if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
-            // Two BRGEMM calls (W·x, R·h) per gate per (nb × kb) block per step.
-            let calls = (cfg.t * nb * kb * GATES * 2) as u64;
-            slot.record(Pass::Fwd, calls, cfg.fwd_flops(), self.bytes_moved(), tele0.elapsed());
+            // Two BRGEMM calls (W·x, R·h) per gate per (nb × kb) block per
+            // executed step.
+            let calls = (t_run * nb * kb * GATES * 2) as u64;
+            slot.record(
+                Pass::Fwd,
+                calls,
+                cfg.fwd_flops_t(t_run),
+                self.bytes_moved(),
+                tele0.elapsed(),
+            );
         }
         bd
     }
@@ -607,27 +669,51 @@ impl LstmPrimitive {
         weights_t: &LstmWeightsT,
         ws: &LstmWorkspace,
     ) -> (LstmGrads, LstmBreakdown) {
+        self.backward_t(x, dh_out, weights_t, ws, self.cfg.t)
+    }
+
+    /// [`LstmPrimitive::backward`] over only the first `t_run <= cfg.t`
+    /// steps — the BPTT mirror of [`LstmPrimitive::forward_t`]: `dh_out`
+    /// is `[t_run][N][K]`, the returned `dx` is `[t_run][N][C]`, and the
+    /// weight gradients accumulate over exactly the executed prefix.
+    pub fn backward_t(
+        &self,
+        x: &[f32],
+        dh_out: &[f32],
+        weights_t: &LstmWeightsT,
+        ws: &LstmWorkspace,
+        t_run: usize,
+    ) -> (LstmGrads, LstmBreakdown) {
         let cfg = &self.cfg;
+        assert!(
+            t_run >= 1 && t_run <= cfg.t,
+            "t_run {} must be in 1..={} (the config's capacity)",
+            t_run,
+            cfg.t
+        );
         let nk = cfg.n * cfg.k;
         let tnk = cfg.t * nk;
-        assert_eq!(dh_out.len(), tnk);
+        assert_eq!(dh_out.len(), t_run * nk);
+        assert!(x.len() >= t_run * cfg.n * cfg.c, "x holds at least t_run steps");
         let tele0 = self.tele.as_ref().map(|_| Instant::now());
         let (nb, cb, kb) = (cfg.nb(), cfg.cb(), cfg.kb());
         let mut bd =
             LstmBreakdown { reformat_secs: weights_t.reformat_secs, ..Default::default() };
 
         // Pre-activation gate gradients for every t (filled back-to-front).
+        // Full-capacity strides (tnk) so the gate offsets match the forward
+        // workspace layout; only the first t_run steps are ever touched.
         let mut dz = vec![0.0f32; GATES * tnk];
         let mut dh = vec![0.0f32; nk]; // recurrent dh carry
         let mut ds = vec![0.0f32; nk]; // recurrent ds carry
-        let mut dx = vec![0.0f32; cfg.t * cfg.n * cfg.c];
+        let mut dx = vec![0.0f32; t_run * cfg.n * cfg.c];
 
         let gw = cfg.k * cfg.c;
         let gr = cfg.k * cfg.k;
         let wblk = cfg.bc * cfg.bk;
         let rblk = cfg.bk * cfg.bk;
 
-        for t in (0..cfg.t).rev() {
+        for t in (0..t_run).rev() {
             // --- eltwise: gate gradients (per element) ---
             let e0 = Instant::now();
             {
@@ -726,8 +812,14 @@ impl LstmPrimitive {
         let tele1 = if let (Some(slot), Some(tele0)) = (self.tele.as_ref(), tele0) {
             // Per step: one dh chain per (nb × kb) block + one dx chain per
             // (nb × cb) block; GEMM work equals one forward pass.
-            let calls = (cfg.t * nb * (kb + cb)) as u64;
-            slot.record(Pass::Bwd, calls, cfg.fwd_flops(), self.bytes_moved(), tele0.elapsed());
+            let calls = (t_run * nb * (kb + cb)) as u64;
+            slot.record(
+                Pass::Bwd,
+                calls,
+                cfg.fwd_flops_t(t_run),
+                self.bytes_moved(),
+                tele0.elapsed(),
+            );
             Some(Instant::now())
         } else {
             None
@@ -736,8 +828,8 @@ impl LstmPrimitive {
         // --- weight update: batch over (t, nb) in a single BRGEMM chain ---
         // Physical activation transposes (reformat; see kernel docs above).
         let r0 = Instant::now();
-        let mut xt = vec![0.0f32; cfg.t * cfg.c * cfg.n];
-        for t in 0..cfg.t {
+        let mut xt = vec![0.0f32; t_run * cfg.c * cfg.n];
+        for t in 0..t_run {
             let src = &x[t * cfg.n * cfg.c..(t + 1) * cfg.n * cfg.c];
             let dst = &mut xt[t * cfg.c * cfg.n..(t + 1) * cfg.c * cfg.n];
             for ni in 0..cfg.n {
@@ -746,9 +838,9 @@ impl LstmPrimitive {
                 }
             }
         }
-        // h_{t-1} sequence (steps 0..T of ws.h), transposed per step.
-        let mut ht = vec![0.0f32; cfg.t * cfg.k * cfg.n];
-        for t in 0..cfg.t {
+        // h_{t-1} sequence (steps 0..t_run of ws.h), transposed per step.
+        let mut ht = vec![0.0f32; t_run * cfg.k * cfg.n];
+        for t in 0..t_run {
             let src = &ws.h[t * nk..(t + 1) * nk];
             let dst = &mut ht[t * cfg.k * cfg.n..(t + 1) * cfg.k * cfg.n];
             for ni in 0..cfg.n {
@@ -768,13 +860,13 @@ impl LstmPrimitive {
             let dw_shared = &SharedMut::new(&mut dw);
             let part = Partition2d::new(GATES * kb, cb, cfg.nthreads, Strategy::Flat);
             parallel_region(cfg.nthreads, |tid| {
-                let batch = cfg.t * nb;
+                let batch = t_run * nb;
                 let mut a_offs = vec![0usize; batch];
                 let mut b_offs = vec![0usize; batch];
                 for (zikb, icb) in part.tasks(tid) {
                     let (z, ikb) = (zikb / kb, zikb % kb);
                     let mut bi = 0;
-                    for t in 0..cfg.t {
+                    for t in 0..t_run {
                         for inb in 0..nb {
                             // xT[t][icb*bc + :][inb*bn + :]
                             a_offs[bi] =
@@ -793,13 +885,13 @@ impl LstmPrimitive {
             let dr_shared = &SharedMut::new(&mut dr);
             let part = Partition2d::new(GATES * kb, kb, cfg.nthreads, Strategy::Flat);
             parallel_region(cfg.nthreads, |tid| {
-                let batch = cfg.t * nb;
+                let batch = t_run * nb;
                 let mut a_offs = vec![0usize; batch];
                 let mut b_offs = vec![0usize; batch];
                 for (zikb, ikb2) in part.tasks(tid) {
                     let (z, ikb) = (zikb / kb, zikb % kb);
                     let mut bi = 0;
-                    for t in 0..cfg.t {
+                    for t in 0..t_run {
                         for inb in 0..nb {
                             // hT[t][ikb2*bk + :][inb*bn + :]  (h step t = h_{t-1})
                             a_offs[bi] =
@@ -817,7 +909,7 @@ impl LstmPrimitive {
         }
         // db: plain reduction.
         for z in 0..GATES {
-            for t in 0..cfg.t {
+            for t in 0..t_run {
                 for n in 0..cfg.n {
                     let row = z * tnk + t * nk + n * cfg.k;
                     for j in 0..cfg.k {
@@ -828,10 +920,16 @@ impl LstmPrimitive {
         }
         bd.gemm_secs += g0.elapsed().as_secs_f64();
         if let (Some(slot), Some(tele1)) = (self.tele.as_ref(), tele1) {
-            // One (T·Nb)-long chain per dW block (4·Kb·Cb) + per dR block
-            // (4·Kb·Kb); GEMM work again equals one forward pass.
+            // One (t_run·Nb)-long chain per dW block (4·Kb·Cb) + per dR
+            // block (4·Kb·Kb); GEMM work again equals one forward pass.
             let calls = (GATES * kb * (cb + kb)) as u64;
-            slot.record(Pass::Upd, calls, cfg.fwd_flops(), self.bytes_moved(), tele1.elapsed());
+            slot.record(
+                Pass::Upd,
+                calls,
+                cfg.fwd_flops_t(t_run),
+                self.bytes_moved(),
+                tele1.elapsed(),
+            );
         }
 
         (LstmGrads { dx, dw, dr, db }, bd)
@@ -1201,6 +1299,63 @@ mod tests {
         let upd = slot.pass_snapshot(Pass::Upd);
         assert_eq!(upd.brgemm_calls, 8, "gates * Kb * (Cb + Kb) = 4*1*2");
         telemetry::uninstall();
+    }
+
+    /// Prefix execution: running `t_run < cfg.t` steps over a
+    /// full-capacity config must be **bit-identical** (forward states and
+    /// every gradient tensor) to a config built at exactly `t = t_run`
+    /// with the same blocking — that equivalence is what lets one tuned
+    /// config and one workspace serve a whole length bucket.
+    #[test]
+    fn prefix_execution_matches_shorter_config() {
+        let (n, c, k, t_cap, t_run) = (4usize, 8usize, 8usize, 5usize, 3usize);
+        let s = setup(n, c, k, t_cap, 63);
+        let wref: Vec<&[f32]> = s.w.iter().map(|v| v.as_slice()).collect();
+        let rref: Vec<&[f32]> = s.r.iter().map(|v| v.as_slice()).collect();
+        let bref: Vec<&[f32]> = s.b.iter().map(|v| v.as_slice()).collect();
+        let dh_out = Rng::new(8).vec_f32(t_run * n * k, -1.0, 1.0);
+
+        // Full-capacity config, prefix execution.
+        let cfg_cap = s.cfg;
+        let prim_cap = LstmPrimitive::new(cfg_cap);
+        let weights_cap = LstmWeights::pack(cfg_cap, &wref, &rref, &bref);
+        let wt_cap = weights_cap.transposed();
+        let mut ws_cap = LstmWorkspace::new(&cfg_cap);
+        prim_cap.forward_t(&s.x, None, None, &weights_cap, &mut ws_cap, t_run);
+        let (g_cap, _) = prim_cap.backward_t(&s.x, &dh_out, &wt_cap, &ws_cap, t_run);
+
+        // Exact-length config over the same x prefix.
+        let cfg_ex = LstmConfig::new(n, c, k, t_run)
+            .with_blocking(cfg_cap.bn, cfg_cap.bc, cfg_cap.bk);
+        let prim_ex = LstmPrimitive::new(cfg_ex);
+        let weights_ex = LstmWeights::pack(cfg_ex, &wref, &rref, &bref);
+        let wt_ex = weights_ex.transposed();
+        let mut ws_ex = LstmWorkspace::new(&cfg_ex);
+        let x_prefix = &s.x[..t_run * n * c];
+        prim_ex.forward(x_prefix, None, None, &weights_ex, &mut ws_ex);
+        let (g_ex, _) = prim_ex.backward(x_prefix, &dh_out, &wt_ex, &ws_ex);
+
+        let nk = n * k;
+        assert_eq!(
+            &ws_cap.h[..(t_run + 1) * nk],
+            &ws_ex.h[..],
+            "h prefix must be bit-identical"
+        );
+        assert_eq!(&ws_cap.s[..(t_run + 1) * nk], &ws_ex.s[..]);
+        assert_eq!(g_cap.dx, g_ex.dx, "dx over the executed prefix");
+        assert_eq!(g_cap.dw, g_ex.dw, "dW accumulates over exactly t_run steps");
+        assert_eq!(g_cap.dr, g_ex.dr);
+        assert_eq!(g_cap.db, g_ex.db);
+
+        // And the shared-weights serving path agrees with the training path
+        // under prefix execution too.
+        let w_cat: Vec<f32> = s.w.iter().flatten().copied().collect();
+        let r_cat: Vec<f32> = s.r.iter().flatten().copied().collect();
+        let b_cat: Vec<f32> = s.b.iter().flatten().copied().collect();
+        let shared = LstmSharedWeights::pack(&cfg_cap, &w_cat, &r_cat, &b_cat);
+        let mut ws_sh = LstmWorkspace::new(&cfg_cap);
+        prim_cap.forward_shared_t(&s.x, None, None, &shared, &mut ws_sh, t_run);
+        assert_eq!(&ws_sh.h[..(t_run + 1) * nk], &ws_ex.h[..]);
     }
 
     #[test]

@@ -10,6 +10,17 @@
 //! (deeper queue → bigger batches → higher throughput, the classic
 //! dynamic-batching trade against per-request latency).
 //!
+//! Sequence models add a second grouping axis: requests are queued per
+//! **length bucket** (the smallest power-of-two step count that fits the
+//! request, up to the arch's capacity `T`), and a worker dispatches from
+//! exactly one length bucket at a time — the bucket whose front request
+//! has waited longest, so no length is starved. A co-batched group is
+//! zero-padded in time to its length bucket and executed as a prefix run
+//! of the batch bucket's plan ([`InferenceModel::forward_seq_with`]);
+//! short requests never pay for the arch's full unroll, which is where
+//! the padded-vs-bucketed useful-words/s gap in the `serve_load` bench
+//! comes from.
+//!
 //! Shutdown is drain-first: [`Server::shutdown`] stops intake, wakes the
 //! workers, and joins them only after the queue is empty — every accepted
 //! request gets exactly one response (asserted by the drain test).
@@ -18,7 +29,7 @@ use crate::modelio::ModelArtifact;
 use crate::serve::metrics::{ServeReport, ServeStats};
 use crate::serve::model::{InferenceModel, ServeScratch};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -60,18 +71,78 @@ pub struct Response {
     pub bucket: usize,
     /// Real (non-padded) rows in that batch.
     pub fill: usize,
+    /// The runtime sequence-length bucket the batch dispatched under
+    /// (`0` for fixed-shape models).
+    pub len_bucket: usize,
 }
 
 struct Pending {
     id: u64,
     input: Vec<f32>,
+    /// True step count of a sequence request (`0` for fixed-shape).
+    len: usize,
     enqueued: Instant,
 }
 
 struct QueueState {
-    queue: VecDeque<Pending>,
+    /// Per-length-bucket FIFO queues, keyed by the request's length
+    /// bucket (fixed-shape models use the single key `0`). A dispatch
+    /// drains from exactly one length bucket, so a batch never mixes
+    /// runtime lengths beyond its own bucket's padding.
+    queues: BTreeMap<usize, VecDeque<Pending>>,
+    /// Total backlog across every length bucket.
+    depth: usize,
     accepting: bool,
     next_id: u64,
+}
+
+impl QueueState {
+    fn push(&mut self, len_bucket: usize, p: Pending) {
+        self.queues.entry(len_bucket).or_default().push_back(p);
+        self.depth += 1;
+    }
+
+    /// The length bucket whose front request has waited longest — FIFO
+    /// fairness across buckets (a deep backlog surfaces there anyway,
+    /// since its front is its oldest).
+    fn oldest_bucket(&self) -> Option<usize> {
+        self.queues
+            .iter()
+            .filter_map(|(&lb, q)| q.front().map(|p| (p.enqueued, lb)))
+            .min()
+            .map(|(_, lb)| lb)
+    }
+
+    /// The deepest single length bucket (what a fill window can hope to
+    /// dispatch in one batch).
+    fn max_bucket_depth(&self) -> usize {
+        self.queues.values().map(|q| q.len()).max().unwrap_or(0)
+    }
+}
+
+/// Validate one request's shape and resolve `(true_len, len_bucket)`:
+/// fixed-shape models demand exactly `input_dim` features (sentinel
+/// `(0, 0)`); sequence models accept any flattened `[len][c]` sequence
+/// with `1 <= len <= t`.
+fn classify_request(model: &InferenceModel, input: &[f32]) -> (usize, usize) {
+    match model.seq_step_dim() {
+        None => {
+            assert_eq!(input.len(), model.input_dim(), "request shape mismatch");
+            (0, 0)
+        }
+        Some(c) => {
+            let cap = model.seq_max_len().unwrap();
+            assert!(
+                !input.is_empty() && input.len() % c == 0 && input.len() / c <= cap,
+                "request shape mismatch: {} floats is not 1..={} whole steps of {} features",
+                input.len(),
+                cap,
+                c
+            );
+            let len = input.len() / c;
+            (len, model.len_bucket_for(len))
+        }
+    }
 }
 
 struct Shared {
@@ -105,7 +176,8 @@ impl Server {
             model,
             opts,
             state: Mutex::new(QueueState {
-                queue: VecDeque::new(),
+                queues: BTreeMap::new(),
+                depth: 0,
                 accepting: true,
                 next_id: 0,
             }),
@@ -126,16 +198,19 @@ impl Server {
         (Server { shared, workers, started: Instant::now() }, rx)
     }
 
-    /// Enqueue one single-sample request; returns its id. Panics if called
-    /// after [`Server::shutdown`] (the queue is no longer accepting).
+    /// Enqueue one single-sample request; returns its id. Fixed-shape
+    /// models take exactly `input_dim` features; sequence models take any
+    /// flattened `[len][c]` sequence with `1 <= len <= t`, queued under
+    /// its length bucket. Panics if called after [`Server::shutdown`]
+    /// (the queue is no longer accepting).
     pub fn submit(&self, input: Vec<f32>) -> u64 {
-        assert_eq!(input.len(), self.shared.model.input_dim(), "request shape mismatch");
+        let (len, len_bucket) = classify_request(&self.shared.model, &input);
         let id = {
             let mut st = self.shared.state.lock().unwrap();
             assert!(st.accepting, "submit after shutdown");
             let id = st.next_id;
             st.next_id += 1;
-            st.queue.push_back(Pending { id, input, enqueued: Instant::now() });
+            st.push(len_bucket, Pending { id, input, len, enqueued: Instant::now() });
             id
         };
         self.shared.cv.notify_one();
@@ -146,7 +221,6 @@ impl Server {
     /// observe a partially submitted burst, so the batcher sees its full
     /// depth at once. Returns the ids in submission order.
     pub fn submit_all(&self, inputs: impl IntoIterator<Item = Vec<f32>>) -> Vec<u64> {
-        let dim = self.shared.model.input_dim();
         let ids = {
             let mut st = self.shared.state.lock().unwrap();
             assert!(st.accepting, "submit after shutdown");
@@ -154,10 +228,10 @@ impl Server {
             inputs
                 .into_iter()
                 .map(|input| {
-                    assert_eq!(input.len(), dim, "request shape mismatch");
+                    let (len, len_bucket) = classify_request(&self.shared.model, &input);
                     let id = st.next_id;
                     st.next_id += 1;
-                    st.queue.push_back(Pending { id, input, enqueued: now });
+                    st.push(len_bucket, Pending { id, input, len, enqueued: now });
                     id
                 })
                 .collect()
@@ -171,9 +245,9 @@ impl Server {
         self.shared.state.lock().unwrap().next_id
     }
 
-    /// Current queue backlog.
+    /// Current queue backlog (across every length bucket).
     pub fn queue_len(&self) -> usize {
-        self.shared.state.lock().unwrap().queue.len()
+        self.shared.state.lock().unwrap().depth
     }
 
     /// Hot weight reload: atomically swap the serving model's weights for
@@ -239,9 +313,9 @@ impl ReloadHandle {
 }
 
 fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
-    let dim = shared.model.input_dim();
     let classes = shared.model.classes();
     let max_batch = shared.opts.max_batch;
+    let step_dim = shared.model.seq_step_dim();
     // Per-worker reusable buffers: the padded batch input and the forward
     // plan's activation scratch both grow to their high-water mark during
     // warm-up and are then reused — the steady-state path performs no
@@ -249,28 +323,30 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
     // per-response logits row is the one API-mandated copy).
     let mut scratch = ServeScratch::new();
     let mut xbuf: Vec<f32> = Vec::new();
+    let mut lens: Vec<usize> = Vec::new();
     loop {
-        // Take up to max_batch requests, or exit once draining is done.
-        let (taken, depth_after) = {
+        // Take up to max_batch requests from one length bucket, or exit
+        // once draining is done.
+        let (taken, len_bucket, depth_after) = {
             let mut st = shared.state.lock().unwrap();
-            let taken: Vec<Pending> = loop {
-                while st.queue.is_empty() {
+            let (taken, len_bucket): (Vec<Pending>, usize) = loop {
+                while st.depth == 0 {
                     if !st.accepting {
                         return;
                     }
                     st = shared.cv.wait(st).unwrap();
                 }
-                // Batching delay: wait up to the configured window for the
-                // bucket to fill before dispatching a partial batch. New
-                // arrivals (and shutdown) wake the wait; a full bucket or
-                // the deadline ends it.
+                // Batching delay: wait up to the configured window for
+                // some length bucket to fill before dispatching a partial
+                // batch. New arrivals (and shutdown) wake the wait; a
+                // full bucket or the deadline ends it.
                 if shared.opts.wait_for_fill_us > 0
-                    && st.queue.len() < max_batch
+                    && st.max_bucket_depth() < max_batch
                     && st.accepting
                 {
                     let deadline =
                         Instant::now() + Duration::from_micros(shared.opts.wait_for_fill_us);
-                    while st.queue.len() < max_batch && st.accepting {
+                    while st.max_bucket_depth() < max_batch && st.accepting {
                         let now = Instant::now();
                         if now >= deadline {
                             break;
@@ -281,33 +357,56 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
                     }
                     // Another worker may have drained the queue while this
                     // one waited — go back to waiting for work.
-                    if st.queue.is_empty() {
+                    if st.depth == 0 {
                         continue;
                     }
                 }
-                let k = st.queue.len().min(max_batch);
-                break st.queue.drain(..k).collect();
+                // Dispatch the length bucket whose front request has
+                // waited longest; the group stays homogeneous so one
+                // prefix run serves the whole batch.
+                let lb = st.oldest_bucket().expect("depth > 0 implies a non-empty bucket");
+                let taken: Vec<Pending> = {
+                    let q = st.queues.get_mut(&lb).unwrap();
+                    let k = q.len().min(max_batch);
+                    q.drain(..k).collect()
+                };
+                st.depth -= taken.len();
+                break (taken, lb);
             };
-            let depth = st.queue.len();
-            (taken, depth)
+            (taken, len_bucket, st.depth)
         };
         // The dequeue instant splits each request's latency into its two
         // stages: enqueue→here is queue wait, the rest is batch execution.
         let dequeued = Instant::now();
         let fill = taken.len();
         let bucket = shared.model.bucket_for(fill);
-        // Pad to the bucket with zero rows; their outputs are computed and
+        // Row width under this dispatch: the length bucket's padded
+        // sequence for sequence models, the fixed input otherwise.
+        let row = match step_dim {
+            None => shared.model.input_dim(),
+            Some(c) => len_bucket * c,
+        };
+        // Pad to the bucket with zero rows (and zero time-padding past
+        // each sequence's true length); padded outputs are computed and
         // then masked (dropped) below — bit-identical real rows either way.
-        if xbuf.len() < bucket * dim {
-            xbuf.resize(bucket * dim, 0.0);
+        if xbuf.len() < bucket * row {
+            xbuf.resize(bucket * row, 0.0);
         }
-        let x = &mut xbuf[..bucket * dim];
+        let x = &mut xbuf[..bucket * row];
         x.fill(0.0);
         for (i, r) in taken.iter().enumerate() {
-            x[i * dim..(i + 1) * dim].copy_from_slice(&r.input);
+            x[i * row..i * row + r.input.len()].copy_from_slice(&r.input);
         }
         let t_fwd = Instant::now();
-        let logits = shared.model.forward_with(bucket, x, &mut scratch);
+        let logits = match step_dim {
+            None => shared.model.forward_with(bucket, x, &mut scratch),
+            Some(_) => {
+                lens.clear();
+                lens.extend(taken.iter().map(|r| r.len));
+                lens.resize(bucket, len_bucket); // padded tail rows
+                shared.model.forward_seq_with(bucket, len_bucket, &lens, x, &mut scratch)
+            }
+        };
         let done = Instant::now();
         let compute_secs = done.duration_since(t_fwd).as_secs_f64();
         let mut lats = Vec::with_capacity(fill);
@@ -324,11 +423,13 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
                 latency_secs: latency,
                 bucket,
                 fill,
+                len_bucket,
             });
         }
         crate::log_trace!(
-            "batch b{} fill {} depth {} compute {:.3} ms",
+            "batch b{} t{} fill {} depth {} compute {:.3} ms",
             bucket,
+            len_bucket,
             fill,
             depth_after,
             compute_secs * 1e3
@@ -337,7 +438,7 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
             .stats
             .lock()
             .unwrap()
-            .record_batch(bucket, fill, depth_after, &lats, &waits, compute_secs);
+            .record_batch(bucket, len_bucket, fill, depth_after, &lats, &waits, compute_secs);
     }
 }
 
@@ -552,5 +653,99 @@ mod tests {
     fn wrong_shape_rejected() {
         let (server, _rx) = Server::start(mlp_model(2), ServeOpts { max_batch: 2, workers: 1, ..ServeOpts::default() });
         server.submit(vec![0.0; 3]);
+    }
+
+    fn rnn_model(seed: u64, max_batch: usize) -> InferenceModel {
+        let spec =
+            crate::coordinator::rnn::RnnSpec { c: 5, k: 8, t: 8, classes: 3, layers: 2 };
+        InferenceModel::new_rnn(&spec, max_batch, 1, false, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn mixed_length_backlog_rides_the_ladder_and_answers_everything() {
+        // 50 mixed-length requests — far beyond the top batch bucket —
+        // into one worker: the backlog must ride both ladders (length
+        // bucket x batch bucket), a batch must never mix length buckets,
+        // and every response must be bit-identical to a solo batch-1 run
+        // at the request's own length.
+        let c = 5usize;
+        let model = rnn_model(23, 8);
+        let oracle = rnn_model(23, 8); // same seed ⇒ identical weights
+        let mut rng = Rng::new(24);
+        let reqs: Vec<Vec<f32>> =
+            (0..50).map(|i| rng.vec_f32((1 + i % 8) * c, -1.0, 1.0)).collect();
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 8, workers: 1, ..ServeOpts::default() },
+        );
+        let ids = server.submit_all(reqs.iter().cloned());
+        let report = server.shutdown();
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 50, "every mixed-length request answered");
+        assert_eq!(report.requests, 50);
+        let by_id: BTreeMap<u64, &Response> = responses.iter().map(|r| (r.id, r)).collect();
+        let mut co_batched = 0usize;
+        for (id, x) in ids.iter().zip(&reqs) {
+            let r = by_id[id];
+            let len = x.len() / c;
+            let lb = oracle.len_bucket_for(len);
+            assert_eq!(r.len_bucket, lb, "request {} dispatched in its own length bucket", id);
+            let mut solo = vec![0.0f32; lb * c];
+            solo[..x.len()].copy_from_slice(x);
+            let want = oracle.forward_seq(1, lb, &[len], &solo);
+            assert_eq!(r.logits, want, "request {} (len {}) differs from its solo run", id, len);
+            if r.fill > 1 {
+                co_batched += 1;
+            }
+        }
+        assert!(co_batched > 0, "the backlog must have co-batched same-length requests");
+        // The report splits the run by length bucket (lengths 1..=8 land
+        // in buckets 1, 2, 4, 8) and its request counts add back up.
+        assert_eq!(report.len_buckets.len(), 4, "{:?}", report.len_buckets);
+        let split_total: usize = report.len_buckets.iter().map(|&(_, _, n, _)| n).sum();
+        assert_eq!(split_total, 50);
+    }
+
+    #[test]
+    fn full_length_sequence_traffic_matches_the_fixed_path() {
+        // All-full-length requests collapse to one length bucket (the
+        // arch's t) and must reproduce the fixed-shape forward exactly.
+        let model = rnn_model(29, 4);
+        let oracle = rnn_model(29, 4);
+        let dim = oracle.input_dim();
+        let mut rng = Rng::new(30);
+        let reqs: Vec<Vec<f32>> = (0..10).map(|_| rng.vec_f32(dim, -1.0, 1.0)).collect();
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() },
+        );
+        let ids = server.submit_all(reqs.iter().cloned());
+        let _ = server.shutdown();
+        let by_id: BTreeMap<u64, Response> = rx.iter().map(|r| (r.id, r)).collect();
+        for (id, x) in ids.iter().zip(&reqs) {
+            let r = &by_id[id];
+            assert_eq!(r.len_bucket, 8, "full-length requests land in the top bucket");
+            assert_eq!(r.logits, oracle.forward(1, x), "request {}", id);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "request shape mismatch")]
+    fn seq_request_with_partial_step_rejected() {
+        let (server, _rx) = Server::start(
+            rnn_model(31, 2),
+            ServeOpts { max_batch: 2, workers: 1, ..ServeOpts::default() },
+        );
+        server.submit(vec![0.0; 2 * 5 + 1]); // 2 steps and a bit
+    }
+
+    #[test]
+    #[should_panic(expected = "request shape mismatch")]
+    fn seq_request_longer_than_capacity_rejected() {
+        let (server, _rx) = Server::start(
+            rnn_model(33, 2),
+            ServeOpts { max_batch: 2, workers: 1, ..ServeOpts::default() },
+        );
+        server.submit(vec![0.0; 9 * 5]); // t = 8
     }
 }

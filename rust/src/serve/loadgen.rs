@@ -35,6 +35,33 @@ pub fn poisson_gap_secs(rng: &mut Rng, rate_rps: f64) -> f64 {
     -(1.0 - rng.f64()).ln() / rate_rps
 }
 
+/// One GNMT-style request length: clamped log-normal around
+/// `ln(typical_len)` with σ = 0.6 — the same length law
+/// [`crate::coordinator::data::SeqCorpus::synth`] uses for training
+/// corpora, so the serving arrival mix matches what the model trained on.
+pub fn seq_request_len(rng: &mut Rng, typical_len: usize, max_len: usize) -> usize {
+    assert!(max_len >= 2 && typical_len >= 1 && typical_len <= max_len);
+    let mu = (typical_len as f64).ln();
+    ((mu + 0.6 * rng.normal()).exp().round() as i64).clamp(2, max_len as i64) as usize
+}
+
+/// A `make_input` source for sequence models: each arrival is a
+/// flattened `[len][step_dim]` sequence whose length is drawn by
+/// [`seq_request_len`] and whose contents are uniform noise from the
+/// same stream — schedule, lengths, *and* contents all reproduce from
+/// the load seed. Feed to [`run_open_loop_with`] /
+/// [`drive_open_loop_every`].
+pub fn seq_request_source(
+    step_dim: usize,
+    typical_len: usize,
+    max_len: usize,
+) -> impl FnMut(&mut Rng, usize) -> Vec<f32> {
+    move |rng, _i| {
+        let len = seq_request_len(rng, typical_len, max_len);
+        rng.vec_f32(len * step_dim, -1.0, 1.0)
+    }
+}
+
 /// Drive `model` with `load` through a [`Server`]: spawn the pool, pace
 /// the arrivals, drain on shutdown, and return the report plus every
 /// response (collected concurrently, so an unbounded backlog never sits
@@ -149,6 +176,42 @@ mod tests {
         let mean = ga.iter().sum::<f64>() / ga.len() as f64;
         // Exponential(λ=100) has mean 0.01 s; 5000 samples pin it well.
         assert!((mean - 0.01).abs() < 0.002, "mean gap {}", mean);
+    }
+
+    #[test]
+    fn seq_lengths_are_deterministic_and_clamped() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let la: Vec<usize> = (0..2000).map(|_| seq_request_len(&mut a, 8, 24)).collect();
+        let lb: Vec<usize> = (0..2000).map(|_| seq_request_len(&mut b, 8, 24)).collect();
+        assert_eq!(la, lb, "same seed, same length mix");
+        assert!(la.iter().all(|&l| (2..=24).contains(&l)));
+        // The mode sits near the typical length and the mix is genuinely
+        // mixed — both shorter and longer than typical appear.
+        assert!(la.iter().any(|&l| l < 8) && la.iter().any(|&l| l > 8));
+        let mean = la.iter().sum::<usize>() as f64 / la.len() as f64;
+        assert!(mean > 4.0 && mean < 16.0, "mean length {}", mean);
+    }
+
+    #[test]
+    fn mixed_length_open_loop_serves_every_request() {
+        use crate::coordinator::rnn::RnnSpec;
+        let spec = RnnSpec { c: 4, k: 8, t: 8, classes: 3, layers: 2 };
+        let model = InferenceModel::new_rnn(&spec, 4, 1, false, &mut Rng::new(15));
+        let load = LoadSpec { requests: 40, rate_rps: 50_000.0, seed: 5 };
+        let (report, responses) = run_open_loop_with(
+            model,
+            ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() },
+            &load,
+            seq_request_source(spec.c, 4, spec.t),
+        );
+        assert_eq!(report.requests, 40);
+        assert_eq!(responses.len(), 40);
+        assert!(!report.len_buckets.is_empty(), "length split recorded");
+        let split: usize = report.len_buckets.iter().map(|&(_, _, n, _)| n).sum();
+        assert_eq!(split, 40, "every request accounted to a length bucket");
+        assert!(responses.iter().all(|r| r.logits.len() == 3 && r.len_bucket >= 2));
+        assert!(responses.iter().flat_map(|r| &r.logits).all(|v| v.is_finite()));
     }
 
     #[test]

@@ -37,12 +37,32 @@ impl Default for BucketStat {
     }
 }
 
+/// Per-length-bucket accounting for sequence models: how many batches a
+/// runtime length bucket dispatched, the real requests they carried, and
+/// their forward-compute time (a batch never mixes length buckets, so
+/// the split is exact).
+#[derive(Debug, Clone)]
+pub struct LenBucketStat {
+    pub batches: usize,
+    pub requests: usize,
+    pub compute: Online,
+}
+
+impl Default for LenBucketStat {
+    fn default() -> LenBucketStat {
+        LenBucketStat { batches: 0, requests: 0, compute: Online::new() }
+    }
+}
+
 /// Accumulated by the worker pool during a serving run.
 #[derive(Debug)]
 pub struct ServeStats {
     latencies: Vec<f64>,
     queue_depth: Option<Online>,
     buckets: BTreeMap<usize, BucketStat>,
+    /// Sequence-length split (empty for fixed-shape models, which record
+    /// the `0` sentinel and are skipped).
+    len_buckets: BTreeMap<usize, LenBucketStat>,
     /// Run-wide stage accumulators (the per-bucket splits, merged).
     queue_wait: Online,
     compute: Online,
@@ -60,20 +80,25 @@ impl ServeStats {
             latencies: Vec::new(),
             queue_depth: None,
             buckets: BTreeMap::new(),
+            len_buckets: BTreeMap::new(),
             queue_wait: Online::new(),
             compute: Online::new(),
         }
     }
 
-    /// One executed batch: `bucket` is the padded size, `fill` the real
-    /// request count (`fill <= bucket`), `depth_after` the queue backlog
-    /// right after the batch was taken, `latencies` the enqueue→response
-    /// seconds of the `fill` real requests, `queue_waits` their
-    /// enqueue→dequeue seconds (same order), and `compute_secs` the
-    /// batch's forward-compute time.
+    /// One executed batch: `bucket` is the padded size, `len_bucket` the
+    /// runtime sequence-length bucket the batch dispatched under (`0` for
+    /// fixed-shape models — not tracked), `fill` the real request count
+    /// (`fill <= bucket`), `depth_after` the queue backlog right after
+    /// the batch was taken, `latencies` the enqueue→response seconds of
+    /// the `fill` real requests, `queue_waits` their enqueue→dequeue
+    /// seconds (same order), and `compute_secs` the batch's
+    /// forward-compute time.
+    #[allow(clippy::too_many_arguments)]
     pub fn record_batch(
         &mut self,
         bucket: usize,
+        len_bucket: usize,
         fill: usize,
         depth_after: usize,
         latencies: &[f64],
@@ -82,6 +107,12 @@ impl ServeStats {
     ) {
         assert!(fill <= bucket && fill == latencies.len());
         assert_eq!(queue_waits.len(), fill, "one queue-wait sample per real request");
+        if len_bucket > 0 {
+            let l = self.len_buckets.entry(len_bucket).or_default();
+            l.batches += 1;
+            l.requests += fill;
+            l.compute.push(compute_secs);
+        }
         let e = self.buckets.entry(bucket).or_default();
         e.batches += 1;
         e.requests += fill;
@@ -148,6 +179,11 @@ impl ServeStats {
                 .iter()
                 .map(|(&b, s)| (b, bucket_mean(&s.queue_wait), bucket_mean(&s.compute)))
                 .collect(),
+            len_buckets: self
+                .len_buckets
+                .iter()
+                .map(|(&lb, s)| (lb, s.batches, s.requests, bucket_mean(&s.compute)))
+                .collect(),
         }
     }
 }
@@ -180,6 +216,9 @@ pub struct ServeReport {
     pub batch_fill: Vec<(usize, usize, f64)>,
     /// Per bucket size: (bucket, mean queue-wait ms, mean compute ms).
     pub bucket_stages: Vec<(usize, f64, f64)>,
+    /// Per runtime sequence-length bucket: (len bucket, batches, real
+    /// requests, mean compute ms). Empty for fixed-shape models.
+    pub len_buckets: Vec<(usize, usize, usize, f64)>,
 }
 
 impl ServeReport {
@@ -218,6 +257,15 @@ impl ServeReport {
                 s.push_str(&format!("  wait {:.3} ms  compute {:.3} ms", qw, cp));
             }
             s.push('\n');
+        }
+        if !self.len_buckets.is_empty() {
+            s.push_str("length-bucket split (len bucket: batches, requests, compute):\n");
+            for (lb, batches, requests, cp) in &self.len_buckets {
+                s.push_str(&format!(
+                    "  t{:<4} {:>6} batches  {:>6} requests  compute {:.3} ms\n",
+                    lb, batches, requests, cp
+                ));
+            }
         }
         s
     }
@@ -271,6 +319,22 @@ impl ServeReport {
                 ]),
             ),
             ("batch_fill", Json::Arr(hist)),
+            (
+                "len_buckets",
+                Json::Arr(
+                    self.len_buckets
+                        .iter()
+                        .map(|&(lb, batches, requests, cp)| {
+                            obj([
+                                ("len_bucket", (lb as f64).into()),
+                                ("batches", (batches as f64).into()),
+                                ("requests", (requests as f64).into()),
+                                ("compute_ms", cp.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -283,9 +347,9 @@ mod tests {
     fn percentiles_and_histogram() {
         let mut st = ServeStats::new();
         // Two b4 batches (fills 4 and 2) and one b1 batch.
-        st.record_batch(4, 4, 3, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004], 0.006);
-        st.record_batch(4, 2, 1, &[0.050, 0.060], &[0.005, 0.006], 0.044);
-        st.record_batch(1, 1, 0, &[0.070], &[0.010], 0.060);
+        st.record_batch(4, 0, 4, 3, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004], 0.006);
+        st.record_batch(4, 0, 2, 1, &[0.050, 0.060], &[0.005, 0.006], 0.044);
+        st.record_batch(1, 0, 1, 0, &[0.070], &[0.010], 0.060);
         assert_eq!(st.requests(), 7);
         let r = st.report(1.0, 2);
         assert_eq!(r.requests, 7);
@@ -312,9 +376,9 @@ mod tests {
     #[test]
     fn queue_wait_compute_split_arithmetic() {
         let mut st = ServeStats::new();
-        st.record_batch(4, 4, 3, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004], 0.006);
-        st.record_batch(4, 2, 1, &[0.050, 0.060], &[0.005, 0.006], 0.044);
-        st.record_batch(1, 1, 0, &[0.070], &[0.010], 0.060);
+        st.record_batch(4, 0, 4, 3, &[0.010, 0.020, 0.030, 0.040], &[0.001, 0.002, 0.003, 0.004], 0.006);
+        st.record_batch(4, 0, 2, 1, &[0.050, 0.060], &[0.005, 0.006], 0.044);
+        st.record_batch(1, 0, 1, 0, &[0.070], &[0.010], 0.060);
         let r = st.report(1.0, 0);
         // Run-wide queue wait over 7 samples: (1+2+3+4+5+6+10)/7 ms.
         assert!((r.queue_wait_mean_ms - 31.0 / 7.0).abs() < 1e-9, "{}", r.queue_wait_mean_ms);
@@ -339,11 +403,39 @@ mod tests {
         let mut st = ServeStats::new();
         // One corrupt (NaN) latency among three good ones: the old
         // partial_cmp().unwrap() sort comparator panicked here.
-        st.record_batch(4, 4, 0, &[0.010, 0.020, f64::NAN, 0.030], &[0.001; 4], 0.005);
+        st.record_batch(4, 0, 4, 0, &[0.010, 0.020, f64::NAN, 0.030], &[0.001; 4], 0.005);
         let r = st.report(1.0, 0);
         assert_eq!(r.requests, 4);
         // NaN sorts last under total_cmp, so the median stays finite.
         assert!(r.p50_ms.is_finite(), "{}", r.p50_ms);
+    }
+
+    #[test]
+    fn len_bucket_split_tracks_sequence_batches() {
+        let mut st = ServeStats::new();
+        // Two length-8 batches and one length-2 batch; a fixed-shape
+        // batch (sentinel 0) must not pollute the split.
+        st.record_batch(4, 8, 4, 0, &[0.01; 4], &[0.001; 4], 0.008);
+        st.record_batch(2, 8, 2, 0, &[0.01; 2], &[0.001; 2], 0.004);
+        st.record_batch(4, 2, 3, 0, &[0.01; 3], &[0.001; 3], 0.002);
+        st.record_batch(1, 0, 1, 0, &[0.01], &[0.001], 0.001);
+        let r = st.report(1.0, 0);
+        assert_eq!(r.len_buckets.len(), 2, "two length buckets, sentinel skipped");
+        let (lb, batches, requests, cp) = r.len_buckets[0];
+        assert_eq!((lb, batches, requests), (2, 1, 3));
+        assert!((cp - 2.0).abs() < 1e-9, "{}", cp);
+        let (lb, batches, requests, cp) = r.len_buckets[1];
+        assert_eq!((lb, batches, requests), (8, 2, 6));
+        assert!((cp - 6.0).abs() < 1e-9, "{}", cp);
+        // The JSON row carries per-entry "len_bucket" keys (the CI smoke
+        // greps for them) and the render mentions the split.
+        let j = r.to_json().to_string_compact();
+        assert_eq!(j.matches("\"len_bucket\"").count(), 2, "{}", j);
+        assert!(r.render().contains("length-bucket split"), "{}", r.render());
+        // Fixed-shape-only runs keep the split empty.
+        let mut fixed = ServeStats::new();
+        fixed.record_batch(2, 0, 2, 0, &[0.01; 2], &[0.001; 2], 0.001);
+        assert!(fixed.report(1.0, 0).len_buckets.is_empty());
     }
 
     #[test]

@@ -40,14 +40,21 @@
 //!   depth, the batch-fill histogram, and the reload counter, with JSON
 //!   export.
 //! * [`loadgen`] — deterministic open-loop load generator (Poisson
-//!   arrivals from [`crate::util::rng`]).
+//!   arrivals from [`crate::util::rng`]); [`loadgen::seq_request_source`]
+//!   draws GNMT-style mixed-length sequence requests from the same seed.
 //! * [`watch`]   — `--watch-model`: a file-polling thread that applies
 //!   a changed artifact file through the hot-reload path, so a
 //!   long-running server tracks a concurrent trainer's checkpoints.
 //!
 //! Forward-only plans cover all three of the paper's workload classes —
-//! MLP, CNN, and RNN (LSTM cell + head over fixed-length sequence
-//! requests, [`crate::primitives::lstm::LstmSharedWeights`]).
+//! MLP, CNN, and RNN (a stack of LSTM cells + classifier head,
+//! [`crate::primitives::lstm::LstmSharedWeights`] per layer). Sequence
+//! requests additionally carry a **runtime length** axis: the batcher
+//! rounds each request up to a pow-2 *length bucket*, queues per length
+//! bucket, and the model runs the stacked recurrence as a `t_run =
+//! len_bucket` prefix of its full-capacity plans — gathering each row's
+//! final hidden state at its true length, so co-batched variable-length
+//! rows are bit-identical to solo batch-1 runs.
 //!
 //! Entry points: the `serve` CLI subcommand / `{"serve": {...}}`
 //! run-config (see `examples/serve.json`; `serve --model-path <artifact>`
@@ -60,7 +67,10 @@ pub mod model;
 pub mod watch;
 
 pub use batcher::{ReloadHandle, Response, ServeOpts, Server};
-pub use loadgen::{drive_open_loop, drive_open_loop_every, run_open_loop, run_open_loop_with, LoadSpec};
+pub use loadgen::{
+    drive_open_loop, drive_open_loop_every, run_open_loop, run_open_loop_with, seq_request_len,
+    seq_request_source, LoadSpec,
+};
 pub use metrics::{ServeReport, ServeStats};
 pub use model::{InferenceModel, NetSpec, ServeScratch};
 pub use watch::ModelWatcher;

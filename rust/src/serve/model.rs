@@ -29,6 +29,17 @@
 //! to running it solo at batch 1, which is what makes pad-to-bucket
 //! masking safe (and is asserted by the batcher tests).
 //!
+//! Sequence models add a second bucket axis: runtime length. Each plan's
+//! stacked LSTM cells are configured at the arch's full capacity `T`, and
+//! a batch of requests sharing a *length bucket* executes the same plan
+//! as a prefix run ([`LstmPrimitive::forward_shared_t`] with `t_run` =
+//! the length bucket) — no extra plans, no extra packed weights, one
+//! tuned config per batch bucket covering every length. Each row's final
+//! hidden state is gathered at the row's **own** true length, so a short
+//! request co-batched under a longer bucket is bit-identical to running
+//! it solo (zero time-padding past a row's length never feeds back into
+//! the steps before it, and batch rows are computationally independent).
+//!
 //! The steady-state path allocates nothing per request: workers run
 //! [`InferenceModel::forward_with`] against a per-worker [`ServeScratch`]
 //! whose buffers grow to their high-water mark and are then reused
@@ -59,8 +70,10 @@ pub enum NetSpec {
     Mlp { sizes: Vec<usize> },
     /// Conv stack + pool + FC head (the training driver's topology).
     Cnn(CnnSpec),
-    /// LSTM cell over fixed-length sequences + FC head on the final
-    /// hidden state; a request is one flattened `[T][C]` sequence.
+    /// Stacked LSTM cells + FC head on the top cell's final hidden
+    /// state; a request is one flattened `[len][C]` sequence with
+    /// `1 <= len <= spec.t` (runtime lengths ride the length-bucket
+    /// ladder).
     Rnn(RnnSpec),
 }
 
@@ -119,7 +132,7 @@ pub fn bucket_sizes(max_batch: usize) -> Vec<usize> {
 enum PlanKind {
     Mlp { fcs: Vec<FcPrimitive> },
     Cnn { convs: Vec<ConvPrimitive>, pool: AvgPool, head: FcPrimitive },
-    Rnn { cell: LstmPrimitive, head: FcPrimitive },
+    Rnn { cells: Vec<LstmPrimitive>, head: FcPrimitive },
 }
 
 struct Plan {
@@ -135,7 +148,7 @@ struct WeightSet {
     fc: Vec<FcSharedWeights>,
     /// CNN conv-stack weights (empty otherwise).
     conv: Vec<ConvSharedWeights>,
-    /// RNN cell weights (empty otherwise).
+    /// Stacked RNN cell weights, bottom-up (empty otherwise).
     lstm: Vec<LstmSharedWeights>,
 }
 
@@ -151,9 +164,10 @@ pub struct ServeScratch {
     head_x: Vec<f32>,
     head_y: Vec<f32>,
     out: Vec<f32>,
-    /// RNN plans' cell workspace (gates/h/s), resized per bucket like
-    /// every other buffer.
-    lstm: LstmWorkspace,
+    /// RNN plans' per-stacked-cell workspaces (gates/h/s), one per layer,
+    /// sized at the config's full capacity `T` per bucket — prefix runs
+    /// over any length bucket reuse the same buffers.
+    lstm: Vec<LstmWorkspace>,
     grows: usize,
 }
 
@@ -247,6 +261,11 @@ fn pack_weight_set(
 pub struct InferenceModel {
     spec: NetSpec,
     buckets: Vec<usize>,
+    /// Runtime sequence-length buckets (powers of two up to the arch's
+    /// `t`, plus `t` itself) for sequence models; empty otherwise. A
+    /// batch of requests sharing a length bucket executes its batch
+    /// bucket's plan as a prefix run at `t_run` = the length bucket.
+    len_buckets: Vec<usize>,
     plans: Vec<Plan>,
     /// Canonical FC configs the packed layouts follow (all layers for
     /// MLP; just the head for CNN/RNN) — what a reloaded artifact
@@ -331,9 +350,9 @@ impl InferenceModel {
             .expect("freshly generated params always match their own configs")
     }
 
-    /// Build an RNN serving model (LSTM cell + FC head on the final
-    /// hidden state) with random-init weights; same sharing/tuning
-    /// contract as [`Self::new_mlp`].
+    /// Build an RNN serving model (stacked LSTM cells + FC head on the
+    /// top cell's final hidden state) with random-init weights; same
+    /// sharing/tuning contract as [`Self::new_mlp`].
     pub fn new_rnn(
         spec: &RnnSpec,
         max_batch: usize,
@@ -341,25 +360,29 @@ impl InferenceModel {
         tuned: bool,
         rng: &mut Rng,
     ) -> InferenceModel {
-        let (k, c) = (spec.k, spec.c);
-        let wscale = (1.0 / c as f32).sqrt();
-        let rscale = (1.0 / k as f32).sqrt();
-        // Canonical gate-major cell params ([4][K][C] | [4][K][K]), then
-        // the head — the artifact layer layout.
-        let mut w = rng.vec_f32(GATES * k * c, -wscale, wscale);
-        w.extend(rng.vec_f32(GATES * k * k, -rscale, rscale));
-        let mut b = vec![0.0f32; GATES * k];
-        b[2 * k..3 * k].fill(1.0); // forget-gate bias, gate order i,g,f,o
+        let k = spec.k;
+        // Canonical gate-major cell params ([4][K][C_in] | [4][K][K]) per
+        // stacked cell bottom-up, then the head — the artifact layer
+        // layout (layer 0 reads the input, deeper cells read the hidden
+        // sequence below, so their input width is k).
+        let mut params = Vec::with_capacity(spec.layers + 1);
+        for li in 0..spec.layers {
+            let c_in = if li == 0 { spec.c } else { k };
+            let wscale = (1.0 / c_in as f32).sqrt();
+            let rscale = (1.0 / k as f32).sqrt();
+            let mut w = rng.vec_f32(GATES * k * c_in, -wscale, wscale);
+            w.extend(rng.vec_f32(GATES * k * k, -rscale, rscale));
+            let mut b = vec![0.0f32; GATES * k];
+            b[2 * k..3 * k].fill(1.0); // forget-gate bias, gate order i,g,f,o
+            params.push(LayerParams::lstm(k, c_in, w, b));
+        }
         let hscale = (2.0 / k as f32).sqrt();
-        let params = vec![
-            LayerParams::lstm(k, c, w, b),
-            LayerParams::fc(
-                spec.classes,
-                k,
-                rng.vec_f32(spec.classes * k, -hscale, hscale),
-                rng.vec_f32(spec.classes, -0.1, 0.1),
-            ),
-        ];
+        params.push(LayerParams::fc(
+            spec.classes,
+            k,
+            rng.vec_f32(spec.classes * k, -hscale, hscale),
+            rng.vec_f32(spec.classes, -0.1, 0.1),
+        ));
         InferenceModel::build_rnn(spec, max_batch, nthreads, tuned, &params)
             .expect("freshly generated params always match their own configs")
     }
@@ -460,6 +483,7 @@ impl InferenceModel {
         Ok(InferenceModel {
             spec: NetSpec::Mlp { sizes: sizes.to_vec() },
             buckets,
+            len_buckets: Vec::new(),
             plans,
             canon_fc: canon,
             canon_conv: Vec::new(),
@@ -530,6 +554,7 @@ impl InferenceModel {
         Ok(InferenceModel {
             spec: NetSpec::Cnn(spec.clone()),
             buckets,
+            len_buckets: Vec::new(),
             plans,
             canon_fc,
             canon_conv: canon,
@@ -548,30 +573,41 @@ impl InferenceModel {
     ) -> Result<InferenceModel> {
         assert!(spec.classes >= 2, "rnn needs at least two classes");
         assert!(spec.c >= 1 && spec.k >= 1 && spec.t >= 1, "rnn c/k/t must be >= 1");
+        assert!(spec.layers >= 1, "rnn needs at least one stacked cell");
         let buckets = bucket_sizes(max_batch);
-        // Canonical cell + head configs from the shared construction
-        // module: the feature blocking (bc, bk) depends only on (c, k),
-        // so the packed weights are shareable across every batch bucket
-        // and byte-compatible with the training driver's packing.
-        let canon_cell = build::rnn_cell_config(spec, max_batch, nthreads, false);
+        // Canonical per-cell + head configs from the shared construction
+        // module: the feature blocking (bc, bk) depends only on the
+        // layer's (c, k), so the packed weights are shareable across
+        // every batch bucket and byte-compatible with the training
+        // driver's packing. Cells are configured at the arch's full
+        // capacity T; shorter length buckets run the same plan as a
+        // prefix (`forward_shared_t`), so T never forks a plan either.
+        let canon_cells = build::rnn_stack_configs(spec, max_batch, nthreads, false);
         let head_canon = build::head_fc_config(max_batch, spec.k, spec.classes, nthreads, false);
         let canon_fc = vec![head_canon];
-        let canon_lstm = vec![canon_cell];
-        let ws = pack_weight_set(&canon_fc, &[], &canon_lstm, params)?;
+        let ws = pack_weight_set(&canon_fc, &[], &canon_cells, params)?;
         let plans = buckets
             .iter()
             .map(|&b| {
-                let mut ccfg = LstmConfig::new(b, spec.c, spec.k, spec.t)
-                    .with_blocking(pick(b, 24), canon_cell.bc, canon_cell.bk)
-                    .with_threads(nthreads);
-                if tuned {
-                    // Per-bucket cache key (includes T); keep the tuned
-                    // batch block, pin the feature blocks back to the
-                    // shared packed layout.
-                    let t = crate::autotune::tuned_lstm_config(ccfg);
-                    ccfg = t.with_blocking(t.bn, canon_cell.bc, canon_cell.bk);
-                }
-                assert!(ws.lstm[0].matches(&ccfg), "bucket plan must match shared weights");
+                let cells: Vec<LstmPrimitive> = canon_cells
+                    .iter()
+                    .zip(&ws.lstm)
+                    .map(|(base, w)| {
+                        let mut ccfg = LstmConfig::new(b, base.c, base.k, base.t)
+                            .with_blocking(pick(b, 24), base.bc, base.bk)
+                            .with_threads(nthreads);
+                        if tuned {
+                            // Per-(bucket, layer) cache key (the layer's
+                            // own input width participates); keep the
+                            // tuned batch block, pin the feature blocks
+                            // back to the shared packed layout.
+                            let t = crate::autotune::tuned_lstm_config(ccfg);
+                            ccfg = t.with_blocking(t.bn, base.bc, base.bk);
+                        }
+                        assert!(w.matches(&ccfg), "bucket plan must match shared weights");
+                        LstmPrimitive::new(ccfg)
+                    })
+                    .collect();
                 let mut hcfg = FcConfig::new(b, spec.k, spec.classes, Act::Identity)
                     .with_blocking(pick(b, 24), head_canon.bc, head_canon.bk)
                     .with_threads(nthreads);
@@ -582,20 +618,18 @@ impl InferenceModel {
                 assert!(ws.fc[0].matches(&hcfg));
                 Plan {
                     batch: b,
-                    kind: PlanKind::Rnn {
-                        cell: LstmPrimitive::new(ccfg),
-                        head: FcPrimitive::new(hcfg),
-                    },
+                    kind: PlanKind::Rnn { cells, head: FcPrimitive::new(hcfg) },
                 }
             })
             .collect();
         Ok(InferenceModel {
             spec: NetSpec::Rnn(*spec),
             buckets,
+            len_buckets: bucket_sizes(spec.t),
             plans,
             canon_fc,
             canon_conv: Vec::new(),
-            canon_lstm,
+            canon_lstm: canon_cells,
             weights: RwLock::new(Arc::new(ws)),
             reloads: AtomicU64::new(0),
         })
@@ -650,6 +684,40 @@ impl InferenceModel {
     pub fn bucket_for(&self, k: usize) -> usize {
         assert!(k >= 1 && k <= self.max_batch(), "batch {} outside buckets", k);
         *self.buckets.iter().find(|&&b| b >= k).unwrap()
+    }
+
+    /// The runtime sequence-length buckets (empty for fixed-shape
+    /// models).
+    pub fn len_buckets(&self) -> &[usize] {
+        &self.len_buckets
+    }
+
+    /// Per-step feature width for sequence models (`Some(c)` — a request
+    /// is a flattened `[len][c]` sequence); `None` for fixed-shape
+    /// models.
+    pub fn seq_step_dim(&self) -> Option<usize> {
+        match &self.spec {
+            NetSpec::Rnn(spec) => Some(spec.c),
+            _ => None,
+        }
+    }
+
+    /// Maximum runtime sequence length (the arch's unroll capacity `t`)
+    /// for sequence models; `None` otherwise.
+    pub fn seq_max_len(&self) -> Option<usize> {
+        match &self.spec {
+            NetSpec::Rnn(spec) => Some(spec.t),
+            _ => None,
+        }
+    }
+
+    /// Smallest length bucket that fits a sequence of `len` steps
+    /// (`1 <= len <= seq_max_len`). Panics on fixed-shape models.
+    pub fn len_bucket_for(&self, len: usize) -> usize {
+        assert!(!self.len_buckets.is_empty(), "not a sequence model");
+        let cap = *self.len_buckets.last().unwrap();
+        assert!(len >= 1 && len <= cap, "sequence length {} outside 1..={}", len, cap);
+        *self.len_buckets.iter().find(|&&b| b >= len).unwrap()
     }
 
     /// Distinct packed-weight allocations backing the current weight
@@ -795,49 +863,171 @@ impl InferenceModel {
                     &mut scratch.out,
                 );
             }
-            PlanKind::Rnn { cell, head } => {
-                let ccfg = cell.cfg;
-                let (t, c, k) = (ccfg.t, ccfg.c, ccfg.k);
-                // Rows are flattened [T][C] sequences; the cell wants
-                // time-major [T][bucket][C].
-                ensure(&mut scratch.a, t * bucket * c, &mut scratch.grows);
-                for ni in 0..bucket {
-                    for ti in 0..t {
-                        let src = &x[(ni * t + ti) * c..(ni * t + ti + 1) * c];
-                        let dst = (ti * bucket + ni) * c;
-                        scratch.a[dst..dst + c].copy_from_slice(src);
-                    }
-                }
-                let nk = bucket * k;
-                ensure(&mut scratch.lstm.gates, GATES * t * nk, &mut scratch.grows);
-                ensure(&mut scratch.lstm.h, (t + 1) * nk, &mut scratch.grows);
-                ensure(&mut scratch.lstm.s, (t + 1) * nk, &mut scratch.grows);
-                cell.forward_shared(&scratch.a, None, None, &ws.lstm[0], &mut scratch.lstm);
-                let h_last = scratch.lstm.h_t(&ccfg, t - 1);
-                let hcfg = head.cfg;
-                ensure(&mut scratch.head_x, bucket * hcfg.c, &mut scratch.grows);
+            PlanKind::Rnn { cells, head } => {
+                let t = cells[0].cfg.t;
+                Self::run_rnn(cells, head, &ws, bucket, classes, t, None, x, scratch);
+            }
+        }
+        &scratch.out
+    }
+
+    /// Allocating convenience wrapper over [`Self::forward_seq_with`].
+    pub fn forward_seq(
+        &self,
+        bucket: usize,
+        len_bucket: usize,
+        lens: &[usize],
+        x: &[f32],
+    ) -> Vec<f32> {
+        let mut scratch = ServeScratch::new();
+        self.forward_seq_with(bucket, len_bucket, lens, x, &mut scratch).to_vec()
+    }
+
+    /// Forward a co-batched group of variable-length sequence requests:
+    /// `x` is `[bucket][len_bucket * c]` (each row a flattened
+    /// `[len_bucket][c]` sequence, zero-padded in time past its true
+    /// length and zero-padded rows at the tail past the real requests),
+    /// `lens[i]` is row `i`'s true step count (`1 <= lens[i] <=
+    /// len_bucket`; padded tail rows pass `len_bucket`). Executes the
+    /// batch bucket's plan as a prefix run at `t_run = len_bucket` and
+    /// gathers each row's final hidden state at the row's own length, so
+    /// every row's logits are bit-identical to a solo batch-1 run of
+    /// that request. Panics on fixed-shape models.
+    pub fn forward_seq_with<'s>(
+        &self,
+        bucket: usize,
+        len_bucket: usize,
+        lens: &[usize],
+        x: &[f32],
+        scratch: &'s mut ServeScratch,
+    ) -> &'s [f32] {
+        let c = self.seq_step_dim().expect("forward_seq_with needs a sequence model");
+        assert!(
+            self.len_buckets.contains(&len_bucket),
+            "length bucket {} not on the ladder {:?}",
+            len_bucket,
+            self.len_buckets
+        );
+        assert_eq!(lens.len(), bucket, "one true length per (possibly padded) row");
+        for (i, &l) in lens.iter().enumerate() {
+            assert!(l >= 1 && l <= len_bucket, "row {} length {} outside 1..={}", i, l, len_bucket);
+        }
+        assert_eq!(x.len(), bucket * len_bucket * c, "input shape mismatch");
+        let ws: Arc<WeightSet> = self.weights.read().unwrap().clone();
+        let plan = self
+            .plans
+            .iter()
+            .find(|p| p.batch == bucket)
+            .unwrap_or_else(|| panic!("no plan for bucket {}", bucket));
+        let classes = self.classes();
+        match &plan.kind {
+            PlanKind::Rnn { cells, head } => {
+                Self::run_rnn(cells, head, &ws, bucket, classes, len_bucket, Some(lens), x, scratch);
+            }
+            _ => unreachable!("sequence spec always builds Rnn plans"),
+        }
+        &scratch.out
+    }
+
+    /// The stacked variable-length RNN forward body shared by
+    /// [`Self::forward_with`] (full-length, `lens = None`) and
+    /// [`Self::forward_seq_with`]. `x` is `[bucket][t_run][c]` row-major;
+    /// each cell runs a prefix of `t_run` steps over full-capacity
+    /// workspaces, layer `i > 0` reading the hidden sequence of the layer
+    /// below in place.
+    #[allow(clippy::too_many_arguments)]
+    fn run_rnn(
+        cells: &[LstmPrimitive],
+        head: &FcPrimitive,
+        ws: &WeightSet,
+        bucket: usize,
+        classes: usize,
+        t_run: usize,
+        lens: Option<&[usize]>,
+        x: &[f32],
+        scratch: &mut ServeScratch,
+    ) {
+        let c = cells[0].cfg.c;
+        let k = cells[0].cfg.k;
+        let t_cap = cells[0].cfg.t;
+        let nk = bucket * k;
+        // Rows are flattened [t_run][C] sequences; the cell wants
+        // time-major [t_run][bucket][C].
+        ensure(&mut scratch.a, t_run * bucket * c, &mut scratch.grows);
+        for ni in 0..bucket {
+            for ti in 0..t_run {
+                let src = &x[(ni * t_run + ti) * c..(ni * t_run + ti + 1) * c];
+                let dst = (ti * bucket + ni) * c;
+                scratch.a[dst..dst + c].copy_from_slice(src);
+            }
+        }
+        // One workspace per stacked cell, sized at full capacity T —
+        // every length bucket shares the same high-water buffers (the
+        // prefix run leaves entries past t_run untouched).
+        if scratch.lstm.len() < cells.len() {
+            scratch.grows += 1;
+            scratch.lstm.resize_with(cells.len(), LstmWorkspace::default);
+        }
+        for li in 0..cells.len() {
+            let (below, rest) = scratch.lstm.split_at_mut(li);
+            let ws_l = &mut rest[0];
+            ensure(&mut ws_l.gates, GATES * t_cap * nk, &mut scratch.grows);
+            ensure(&mut ws_l.h, (t_cap + 1) * nk, &mut scratch.grows);
+            ensure(&mut ws_l.s, (t_cap + 1) * nk, &mut scratch.grows);
+            // Layer 0 reads the transposed input; deeper layers read the
+            // hidden sequence of the cell below ([T][N][K] starting at
+            // step 1's slot — exactly the [T][N][C] the cell wants).
+            let x_in: &[f32] =
+                if li == 0 { &scratch.a } else { &below[li - 1].h[nk..] };
+            cells[li].forward_shared_t(x_in, None, None, &ws.lstm[li], ws_l, t_run);
+        }
+        let top = scratch.lstm[cells.len() - 1].h.as_slice();
+        let hcfg = head.cfg;
+        ensure(&mut scratch.head_x, bucket * hcfg.c, &mut scratch.grows);
+        match lens {
+            None => {
+                // Every row ran the full t_run steps: the final hidden
+                // states are the contiguous step-(t_run-1) slot.
                 layout::pack_act_2d_into(
-                    h_last,
+                    &top[t_run * nk..(t_run + 1) * nk],
                     bucket,
                     hcfg.c,
                     hcfg.bn,
                     hcfg.bc,
                     &mut scratch.head_x,
                 );
-                ensure(&mut scratch.head_y, bucket * hcfg.k, &mut scratch.grows);
-                head.forward_shared(&scratch.head_x, &ws.fc[0], &mut scratch.head_y);
-                ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
-                layout::unpack_act_2d_into(
-                    &scratch.head_y,
+            }
+            Some(lens) => {
+                // Gather each row's final hidden state at the row's own
+                // true length (h slot l = the state after l steps) — the
+                // step that makes a short request co-batched under a
+                // longer bucket bit-identical to its solo run.
+                ensure(&mut scratch.b, nk, &mut scratch.grows);
+                for (i, &l) in lens.iter().enumerate() {
+                    let off = l * nk + i * k;
+                    scratch.b[i * k..(i + 1) * k].copy_from_slice(&top[off..off + k]);
+                }
+                layout::pack_act_2d_into(
+                    &scratch.b[..nk],
                     bucket,
-                    hcfg.k,
+                    hcfg.c,
                     hcfg.bn,
-                    hcfg.bk,
-                    &mut scratch.out,
+                    hcfg.bc,
+                    &mut scratch.head_x,
                 );
             }
         }
-        &scratch.out
+        ensure(&mut scratch.head_y, bucket * hcfg.k, &mut scratch.grows);
+        head.forward_shared(&scratch.head_x, &ws.fc[0], &mut scratch.head_y);
+        ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
+        layout::unpack_act_2d_into(
+            &scratch.head_y,
+            bucket,
+            hcfg.k,
+            hcfg.bn,
+            hcfg.bk,
+            &mut scratch.out,
+        );
     }
 }
 
@@ -864,7 +1054,11 @@ mod tests {
     }
 
     fn tiny_rnn() -> RnnSpec {
-        RnnSpec { c: 6, k: 12, t: 4, classes: 3 }
+        RnnSpec { c: 6, k: 12, t: 4, classes: 3, layers: 1 }
+    }
+
+    fn stacked_rnn() -> RnnSpec {
+        RnnSpec { c: 6, k: 12, t: 8, classes: 3, layers: 2 }
     }
 
     #[test]
@@ -973,6 +1167,148 @@ mod tests {
         assert_eq!(rnn.buckets().len(), 4, "1/2/4/8");
         assert_eq!(rnn.layer_count(), 2, "cell + head");
         assert_eq!(rnn.weight_alloc_ids().len(), 2, "2 layers -> 2 allocations, not 8");
+        // Stacked: one allocation per cell plus the head, still shared
+        // across every (batch bucket x length bucket) combination.
+        let stacked = InferenceModel::new_rnn(&stacked_rnn(), 8, 1, false, &mut Rng::new(20));
+        assert_eq!(stacked.layer_count(), 3, "2 cells + head");
+        assert_eq!(stacked.weight_alloc_ids().len(), 3);
+    }
+
+    #[test]
+    fn len_bucket_ladder_shapes() {
+        let model = InferenceModel::new_rnn(&stacked_rnn(), 4, 1, false, &mut Rng::new(23));
+        assert_eq!(model.len_buckets(), &[1, 2, 4, 8], "pow-2 ladder up to t");
+        assert_eq!(model.seq_step_dim(), Some(6));
+        assert_eq!(model.seq_max_len(), Some(8));
+        assert_eq!(model.len_bucket_for(1), 1);
+        assert_eq!(model.len_bucket_for(3), 4);
+        assert_eq!(model.len_bucket_for(5), 8);
+        assert_eq!(model.len_bucket_for(8), 8);
+        let mlp = InferenceModel::new_mlp(&[6, 8, 3], 4, 1, false, &mut Rng::new(24));
+        assert!(mlp.len_buckets().is_empty(), "fixed-shape models have no length axis");
+        assert_eq!(mlp.seq_step_dim(), None);
+        assert_eq!(mlp.seq_max_len(), None);
+    }
+
+    #[test]
+    fn variable_length_co_batched_rows_bit_identical_to_solo() {
+        // The tentpole acceptance invariant: mixed-length requests
+        // co-batched under one (len bucket x batch bucket) plan must be
+        // bit-identical to running each request solo at batch 1 in its
+        // own length bucket — short rows' zero time-padding and the
+        // other rows in the batch must not perturb a single bit.
+        let spec = stacked_rnn();
+        let model = InferenceModel::new_rnn(&spec, 8, 1, false, &mut Rng::new(31));
+        let c = spec.c;
+        let lens = [3usize, 8, 5, 2];
+        let lb = 8; // top length bucket holds them all
+        let mut rng = Rng::new(32);
+        let mut x = vec![0.0f32; 4 * lb * c];
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for (i, &l) in lens.iter().enumerate() {
+            let data = rng.vec_f32(l * c, -1.0, 1.0);
+            x[i * lb * c..i * lb * c + l * c].copy_from_slice(&data);
+            rows.push(data);
+        }
+        let batched = model.forward_seq(4, lb, &lens, &x);
+        let classes = spec.classes;
+        for (i, &l) in lens.iter().enumerate() {
+            let solo_lb = model.len_bucket_for(l);
+            let mut solo_x = vec![0.0f32; solo_lb * c];
+            solo_x[..l * c].copy_from_slice(&rows[i]);
+            let solo = model.forward_seq(1, solo_lb, &[l], &solo_x);
+            assert_eq!(
+                &batched[i * classes..(i + 1) * classes],
+                &solo[..],
+                "row {} (len {}) must be bit-identical to its solo run at len bucket {}",
+                i,
+                l,
+                solo_lb
+            );
+        }
+        // A full-length row also agrees with the fixed-length entry point.
+        let full = model.forward(1, &x[lb * c..2 * lb * c]);
+        assert_eq!(&batched[classes..2 * classes], &full[..]);
+    }
+
+    #[test]
+    fn stacked_rnn_from_artifact_serves_bit_identically() {
+        use crate::coordinator::rnn::RnnModel;
+        // Train a 2-deep stacked model, lift it through the binary
+        // artifact format, serve it: full-length forwards and the
+        // variable-length entry point at full length must both be
+        // bit-identical to the trained model.
+        let spec = stacked_rnn();
+        let mut rng = Rng::new(41);
+        let data = crate::coordinator::data::ClassifyData::synth_sequences(
+            32,
+            spec.t,
+            spec.c,
+            spec.classes,
+            0.2,
+            &mut rng,
+        );
+        let mut trained = RnnModel::new(&spec, 4, 1, &mut rng);
+        for step in 0..5 {
+            let (x, l) = data.batch(step, 4);
+            trained.train_step(&x, &l, 0.1);
+        }
+        let art = ModelArtifact::new(
+            Arch::Rnn(spec),
+            TrainMeta::fresh(41),
+            trained.export_weights(),
+        );
+        let art = ModelArtifact::decode(&art.encode()).unwrap();
+        let served = InferenceModel::from_artifact(&art, 4, 1, false).unwrap();
+        assert_eq!(served.layer_count(), 3, "2 cells + head");
+        assert_eq!(served.weight_alloc_ids().len(), 3);
+        let x = Rng::new(42).vec_f32(4 * spec.input_dim(), -1.0, 1.0);
+        let want = trained.forward(&x);
+        let got = served.forward(4, &x);
+        assert_eq!(want, got, "served stacked logits must match the trained model");
+        let lens = vec![spec.t; 4];
+        let seq = served.forward_seq(4, spec.t, &lens, &x);
+        assert_eq!(want, seq, "the variable-length path at full length is the same math");
+    }
+
+    #[test]
+    fn seq_scratch_stops_allocating_across_len_buckets() {
+        // Mixed-length steady state: once every (batch bucket x length
+        // bucket) combination has been seen, further traffic of any
+        // length mix performs zero allocations (the cell workspaces are
+        // sized at full capacity T, so length buckets share them).
+        let spec = stacked_rnn();
+        let model = InferenceModel::new_rnn(&spec, 4, 1, false, &mut Rng::new(51));
+        let c = spec.c;
+        let mut rng = Rng::new(52);
+        let mut scratch = ServeScratch::new();
+        let buckets: Vec<usize> = model.buckets().to_vec();
+        let len_buckets: Vec<usize> = model.len_buckets().to_vec();
+        for &b in &buckets {
+            for &lb in &len_buckets {
+                let lens = vec![lb; b];
+                let x = rng.vec_f32(b * lb * c, -1.0, 1.0);
+                model.forward_seq_with(b, lb, &lens, &x, &mut scratch);
+            }
+        }
+        let warm = scratch.alloc_events();
+        assert!(warm > 0, "warm-up must have sized the buffers");
+        for round in 0..10 {
+            for &b in &buckets {
+                for &lb in &len_buckets {
+                    // Vary the true lengths within the bucket too.
+                    let lens: Vec<usize> = (0..b).map(|i| 1 + (i % lb)).collect();
+                    let x = rng.vec_f32(b * lb * c, -1.0, 1.0);
+                    model.forward_seq_with(b, lb, &lens, &x, &mut scratch);
+                }
+            }
+            assert_eq!(
+                scratch.alloc_events(),
+                warm,
+                "steady-state round {} must not allocate",
+                round
+            );
+        }
     }
 
     #[test]

@@ -64,6 +64,24 @@ echo "== rnn train -> checkpoint -> resume -> serve smoke =="
 ./target/release/brgemm-dl serve --model-path checkpoints/rnn.bin \
     --min-accuracy 0.5 --requests 200 --rate 20000 --serve-workers 2
 
+echo "== mixed-length bucketed serving smoke (stacked rnn) =="
+# Variable-length requests through the stacked (layers=2) artifact:
+# lengths drawn from the GNMT-style distribution route through the
+# length-bucket ladder, and the report's length-bucket split must show
+# at least two distinct buckets actually served traffic.
+./target/release/brgemm-dl serve --model-path checkpoints/rnn.bin \
+    --seq-len-typical 4 --requests 300 --rate 50000 --serve-workers 2 \
+    --metrics-out serve_rnn_metrics.json
+test -f serve_rnn_metrics.json
+./target/release/brgemm-dl perfcheck --metrics serve_rnn_metrics.json \
+    --require len_buckets,throughput_rps
+lb=$(grep -o '"len_bucket"' serve_rnn_metrics.json | wc -l)
+if [ "$lb" -lt 2 ]; then
+    echo "expected >=2 length buckets in serve_rnn_metrics.json, got $lb" >&2
+    exit 1
+fi
+echo "length-bucket split covers $lb buckets"
+
 echo "== bench perf-regression check (advisory) =="
 # Compare a fresh smoke-scale serve_load run against the committed
 # baseline (BENCH_serve_load.json). Advisory only: the baselines are
