@@ -58,7 +58,7 @@ fn main() {
             name: "mlp 64-128-10 wait-fill",
             spec: NetSpec::Mlp { sizes: vec![64, 128, 10] },
             load: LoadSpec { requests: mlp_requests, rate_rps: 20_000.0, seed: 42 },
-            opts: ServeOpts { max_batch: 16, workers: 2, wait_for_fill_us: 500 },
+            opts: ServeOpts { max_batch: 16, workers: 2, wait_for_fill_us: 500, ..ServeOpts::default() },
         },
         // Sequence requests: each request is one flattened [T][C]
         // sequence through the per-bucket forward-only LSTM plans (one

@@ -105,6 +105,16 @@ pub struct ServeConfig {
     /// Log a point-in-time serving snapshot (one compact JSON line at
     /// info level) every this many seconds while the load runs.
     pub metrics_every: Option<f64>,
+    /// Bind a Unix-domain-socket admin endpoint at this path for the
+    /// run's duration: line-delimited JSON `stats` / `trace` / `reload` /
+    /// `drain` commands against the live server (the push-style superset
+    /// of `watch_model`).
+    pub admin_sock: Option<String>,
+    /// Span-tracer sampling period: trace 1 request in every
+    /// `trace_sample` (deterministic, keyed off the request id). `1` =
+    /// every request. Only meaningful when tracing is on (`--trace-out`
+    /// or an `admin_sock` `trace` consumer).
+    pub trace_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -121,6 +131,8 @@ impl Default for ServeConfig {
             watch_poll_ms: 50,
             seq_len_typical: None,
             metrics_every: None,
+            admin_sock: None,
+            trace_sample: 1,
         }
     }
 }
@@ -158,6 +170,12 @@ impl ServeConfig {
             if e <= 0.0 || !e.is_finite() {
                 bail!("serve.metrics_every must be a positive, finite number of seconds");
             }
+        }
+        if matches!(self.admin_sock.as_deref(), Some("")) {
+            bail!("serve.admin_sock must be a non-empty socket path");
+        }
+        if self.trace_sample == 0 {
+            bail!("serve.trace_sample must be >= 1 (trace 1 request in every N)");
         }
         Ok(())
     }
@@ -217,6 +235,11 @@ pub struct RunConfig {
     /// (per-pass timer breakdown) plus a final line with the per-primitive
     /// BRGEMM profile. Enables the telemetry profiler for the run.
     pub metrics_out: Option<String>,
+    /// Write a Chrome trace-event JSON document (Perfetto /
+    /// chrome://tracing viewable) to this path at the end of the run.
+    /// Enables the span tracer: per-request spans on serve runs,
+    /// per-worker per-pass spans on training runs.
+    pub trace_out: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -235,6 +258,7 @@ impl Default for RunConfig {
             epochs: None,
             checkpoint: None,
             metrics_out: None,
+            trace_out: None,
         }
     }
 }
@@ -355,6 +379,8 @@ impl RunConfig {
                     })?),
                 },
                 metrics_every: get_opt_f64(sv, "metrics_every")?,
+                admin_sock: get_opt_str(sv, "admin_sock")?,
+                trace_sample: get_usize(sv, "trace_sample", d.trace_sample as usize)? as u64,
             };
             sc.validate()?;
             cfg.serve = Some(sc);
@@ -389,6 +415,10 @@ impl RunConfig {
         cfg.metrics_out = get_opt_str(&j, "metrics_out")?;
         if matches!(cfg.metrics_out.as_deref(), Some("")) {
             bail!("metrics_out must be a non-empty file path");
+        }
+        cfg.trace_out = get_opt_str(&j, "trace_out")?;
+        if matches!(cfg.trace_out.as_deref(), Some("")) {
+            bail!("trace_out must be a non-empty file path");
         }
         if cfg.batch == 0 || cfg.workers == 0 || cfg.nthreads == 0 {
             bail!("batch/workers/nthreads must be positive");
@@ -720,6 +750,42 @@ mod tests {
         assert_eq!(cfg.serve.unwrap().metrics_every, Some(0.5));
         assert!(RunConfig::from_json(r#"{"serve": {"metrics_every": 0}}"#).is_err());
         assert!(RunConfig::from_json(r#"{"serve": {"metrics_every": "fast"}}"#).is_err());
+    }
+
+    #[test]
+    fn trace_and_admin_keys_parse() {
+        // Top-level trace_out (training + serve); serve-section
+        // admin_sock and trace_sample.
+        let cfg = RunConfig::from_json(r#"{"trace_out": "trace.json"}"#).unwrap();
+        assert_eq!(cfg.trace_out.as_deref(), Some("trace.json"));
+        assert!(RunConfig::from_json(r#"{}"#).unwrap().trace_out.is_none());
+        // null tolerated (lets examples carry the key); empty rejected.
+        let cfg = RunConfig::from_json(r#"{"trace_out": null}"#).unwrap();
+        assert!(cfg.trace_out.is_none());
+        assert!(RunConfig::from_json(r#"{"trace_out": ""}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"trace_out": 7}"#).is_err());
+
+        let cfg = RunConfig::from_json(
+            r#"{"serve": {"admin_sock": "/tmp/srv.sock", "trace_sample": 8}}"#,
+        )
+        .unwrap();
+        let sc = cfg.serve.unwrap();
+        assert_eq!(sc.admin_sock.as_deref(), Some("/tmp/srv.sock"));
+        assert_eq!(sc.trace_sample, 8);
+        // Defaults: no socket, sample every request.
+        let sc = RunConfig::from_json(r#"{"serve": {}}"#).unwrap().serve.unwrap();
+        assert!(sc.admin_sock.is_none());
+        assert_eq!(sc.trace_sample, 1);
+        let sc = RunConfig::from_json(r#"{"serve": {"admin_sock": null}}"#)
+            .unwrap()
+            .serve
+            .unwrap();
+        assert!(sc.admin_sock.is_none());
+        // Invalid shapes rejected, not silently defaulted.
+        assert!(RunConfig::from_json(r#"{"serve": {"admin_sock": ""}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"admin_sock": 5}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"trace_sample": 0}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"trace_sample": "all"}}"#).is_err());
     }
 
     #[test]

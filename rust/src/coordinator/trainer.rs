@@ -16,6 +16,7 @@ use crate::coordinator::data::ClassifyData;
 use crate::coordinator::dist::{ring_allreduce, NetworkModel};
 use crate::modelio::{LayerKind, LayerParams};
 use crate::primitives::fc::FcPrimitive;
+use crate::telemetry::trace::{self, SpanEvent, SpanKind, SpanRing, TraceGroup, Tracer};
 use crate::telemetry::{self, Metrics};
 use crate::tensor::layout::{
     pack_act_2d, pack_weights_2d, transpose_packed_2d, unpack_act_2d, unpack_weights_2d,
@@ -419,6 +420,15 @@ pub struct DataParallelTrainer<M: Model = MlpModel> {
     /// The trainer's own stage timers (allreduce, apply) — fed only while
     /// telemetry is enabled; see [`DataParallelTrainer::merged_metrics`].
     pub metrics: Metrics,
+    /// Span-tracer handle, captured lazily on the first traced step (a
+    /// fresh ring registration per step would leak rings). `None` until
+    /// tracing is opted in via [`DataParallelTrainer::trace_steps`] *and*
+    /// a tracer is installed; steps stay single-branch when tracing is off.
+    trace: Option<(std::sync::Arc<Tracer>, std::sync::Arc<SpanRing>)>,
+    /// Opt-in flag mirroring `ServeOpts::trace`: a trainer that was not
+    /// asked to trace never writes into a tracer some other component
+    /// installed. The CLI sets it alongside `--trace-out`.
+    trace_opt_in: bool,
 }
 
 impl DataParallelTrainer<MlpModel> {
@@ -467,6 +477,8 @@ impl<M: Model> DataParallelTrainer<M> {
             net: NetworkModel::omnipath(),
             lr,
             metrics: Metrics::new(),
+            trace: None,
+            trace_opt_in: false,
         };
         assert!(dp.replicas_consistent(), "replicas must start from identical parameters");
         dp
@@ -477,15 +489,34 @@ impl<M: Model> DataParallelTrainer<M> {
     pub fn step(&mut self, shards: &[(Vec<f32>, Vec<i32>)]) -> DistStep {
         let p = self.workers.len();
         assert_eq!(shards.len(), p);
+        // Capture the installed tracer once per trainer; every step after
+        // that pays one branch here when tracing is off.
+        if self.trace_opt_in && trace::enabled() && self.trace.is_none() {
+            self.trace = trace::current().map(|t| {
+                let ring = t.ring();
+                (t, ring)
+            });
+        }
+        // Step ids advance on every step while a tracer is live, so 1-in-N
+        // sampling picks a deterministic subsequence of steps.
+        let mut group: Option<(u64, TraceGroup, Instant)> = match &self.trace {
+            Some((t, _)) if trace::enabled() => {
+                let sid = t.next_step_id();
+                t.sampled(sid).then(|| (sid, TraceGroup::new(0), Instant::now()))
+            }
+            _ => None,
+        };
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(p);
         let mut losses = Vec::with_capacity(p);
         let mut compute = 0.0f64;
-        for (w, (x, labels)) in self.workers.iter_mut().zip(shards) {
+        for (wi, (w, (x, labels))) in self.workers.iter_mut().zip(shards).enumerate() {
             let t0 = Instant::now();
             let logits = w.forward(x);
             let t1 = telemetry::enabled().then(Instant::now);
+            let tf = group.as_ref().map(|_| Instant::now());
             let (loss, dlogits) = softmax_xent(&logits, labels, w.classes());
             w.backward(&dlogits);
+            let tb = group.as_ref().map(|_| Instant::now());
             compute = compute.max(t0.elapsed().as_secs_f64());
             if let Some(t1) = t1 {
                 let bwd = t1.elapsed().as_secs_f64();
@@ -494,16 +525,43 @@ impl<M: Model> DataParallelTrainer<M> {
                     m.observe_secs("bwd", bwd);
                 }
             }
+            if let (Some((sid, g, _)), Some(tf), Some(tb)) = (group.as_mut(), tf, tb) {
+                let tr = &self.trace.as_ref().unwrap().0;
+                let (fs, fd) = tr.span_us(t0, tf);
+                g.push(SpanEvent {
+                    kind: SpanKind::Fwd,
+                    label: "",
+                    trace_id: *sid,
+                    tid: wi as u32,
+                    start_us: fs,
+                    dur_us: fd,
+                    a: wi as u32,
+                    b: 0,
+                });
+                let (bs, bd) = tr.span_us(tf, tb);
+                g.push(SpanEvent {
+                    kind: SpanKind::BwdData,
+                    label: "",
+                    trace_id: *sid,
+                    tid: wi as u32,
+                    start_us: bs,
+                    dur_us: bd,
+                    a: wi as u32,
+                    b: 0,
+                });
+            }
             losses.push(loss);
             grads.push(w.grads_flat());
         }
         let grad_bytes = grads[0].len() * 4;
         let t_ar = telemetry::enabled().then(Instant::now);
+        let tar0 = group.as_ref().map(|_| Instant::now());
         ring_allreduce(&mut grads);
         if let Some(t) = t_ar {
             self.metrics.observe_secs("allreduce", t.elapsed().as_secs_f64());
         }
         let t_up = telemetry::enabled().then(Instant::now);
+        let tup0 = group.as_ref().map(|_| Instant::now());
         let scale = 1.0 / p as f32;
         for (w, g) in self.workers.iter_mut().zip(&grads) {
             let mean: Vec<f32> = g.iter().map(|v| v * scale).collect();
@@ -513,10 +571,72 @@ impl<M: Model> DataParallelTrainer<M> {
             self.metrics.observe_secs("upd", t.elapsed().as_secs_f64());
             self.metrics.inc("steps", 1);
         }
+        if let Some((sid, mut g, t_step0)) = group.take() {
+            let (tr, ring) = self.trace.as_ref().unwrap();
+            let tend = Instant::now();
+            let (tar0, tup0) = (tar0.unwrap(), tup0.unwrap());
+            // The worker-pool region: every replica's fwd+bwd, serialized
+            // here, one simulated-rank lane each in the export.
+            let (ps, pd) = tr.span_us(t_step0, tar0);
+            g.push(SpanEvent {
+                kind: SpanKind::Pool,
+                label: "",
+                trace_id: sid,
+                tid: p as u32,
+                start_us: ps,
+                dur_us: pd,
+                a: p as u32,
+                b: 0,
+            });
+            let (ars, ard) = tr.span_us(tar0, tup0);
+            g.push(SpanEvent {
+                kind: SpanKind::Allreduce,
+                label: "",
+                trace_id: sid,
+                tid: p as u32,
+                start_us: ars,
+                dur_us: ard,
+                a: grad_bytes.min(u32::MAX as usize) as u32,
+                b: p as u32,
+            });
+            let (us, ud) = tr.span_us(tup0, tend);
+            g.push(SpanEvent {
+                kind: SpanKind::Upd,
+                label: "",
+                trace_id: sid,
+                tid: p as u32,
+                start_us: us,
+                dur_us: ud,
+                a: p as u32,
+                b: 0,
+            });
+            let (ss, sd) = tr.span_us(t_step0, tend);
+            g.push(SpanEvent {
+                kind: SpanKind::Step,
+                label: "",
+                trace_id: sid,
+                tid: p as u32,
+                start_us: ss,
+                dur_us: sd,
+                a: p as u32,
+                b: 0,
+            });
+            ring.push(g);
+        }
         DistStep {
             loss: losses.iter().sum::<f32>() / p as f32,
             compute_secs: compute,
             comm_secs: self.net.ring_allreduce_secs(grad_bytes, p),
+        }
+    }
+
+    /// Opt this trainer into recording per-step spans when a tracer is
+    /// installed (`--trace-out` sets it). Off by default so an untraced
+    /// run never touches the global tracer.
+    pub fn trace_steps(&mut self, on: bool) {
+        self.trace_opt_in = on;
+        if !on {
+            self.trace = None;
         }
     }
 
@@ -791,15 +911,18 @@ mod tests {
 
     #[test]
     fn instrumented_training_is_bit_identical() {
-        // The whole point of the gated profiler: enabling it must change
-        // timing side channels only. Same seed, same data, same steps —
-        // the final parameters must match bitwise with and without it.
+        // The whole point of the gated instrumentation: enabling the
+        // profiler AND the span tracer must change timing side channels
+        // only. Same seed, same data, same steps — the final parameters
+        // must match bitwise with and without them.
         let _g = telemetry::test_lock();
         let run = |instrument: bool| {
             if instrument {
                 telemetry::install();
+                trace::install(1, 64);
             } else {
                 telemetry::uninstall();
+                trace::uninstall();
             }
             let mut rng = Rng::new(7);
             let data = ClassifyData::synth(64, 8, 3, 0.2, &mut rng);
@@ -808,10 +931,34 @@ mod tests {
                 let (x, l) = data.batch(step, 8);
                 m.train_step(&x, &l, 0.1);
             }
+            // The data-parallel path is where per-step trace spans land.
+            let mut dp = DataParallelTrainer::new(&[8, 16, 3], 8, 2, 1, 0.05, 21);
+            dp.trace_steps(instrument);
+            let shards: Vec<_> = (0..2).map(|i| data.batch(i, 8)).collect();
+            for _ in 0..4 {
+                dp.step(&shards);
+            }
+            if instrument {
+                let drained = trace::current().unwrap().drain();
+                assert!(
+                    drained.groups.iter().any(|g| g.find(SpanKind::Step).is_some()),
+                    "traced steps must land Step spans"
+                );
+                assert!(
+                    drained.groups.iter().any(|g| g.find(SpanKind::Fwd).is_some()
+                        && g.find(SpanKind::BwdData).is_some()
+                        && g.find(SpanKind::Allreduce).is_some()
+                        && g.find(SpanKind::Upd).is_some()),
+                    "per-worker pass spans must land too"
+                );
+            }
             telemetry::uninstall();
-            m.params_flat()
+            trace::uninstall();
+            let mut out = m.params_flat();
+            out.extend(dp.workers[0].params_flat());
+            out
         };
-        assert_eq!(run(true), run(false), "profiling must not change the math");
+        assert_eq!(run(true), run(false), "instrumentation must not change the math");
     }
 
     #[test]

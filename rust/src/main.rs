@@ -31,10 +31,11 @@ use brgemm_dl::primitives::fc::{FcConfig, FcPrimitive};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
 use brgemm_dl::serve::{
-    drive_open_loop_every, seq_request_source, InferenceModel, LoadSpec, ModelWatcher, NetSpec,
-    Response, ServeOpts, Server,
+    drive_open_loop_every, seq_request_source, AdminServer, InferenceModel, LoadSpec,
+    ModelWatcher, NetSpec, Response, ServeOpts, Server,
 };
 use brgemm_dl::telemetry;
+use brgemm_dl::telemetry::trace;
 use brgemm_dl::tensor::layout;
 use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::logger;
@@ -60,6 +61,7 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "epochs", help: "override epoch count (epoch = one pass over the training set)", takes_value: true, default: None },
                 OptSpec { name: "resume", help: "resume training from a model artifact (see examples/checkpoint.json)", takes_value: true, default: None },
                 OptSpec { name: "metrics-out", help: "write run metrics as JSON lines: per-epoch pass breakdown + per-primitive BRGEMM profile", takes_value: true, default: None },
+                OptSpec { name: "trace-out", help: "write a Chrome trace-event JSON of per-step fwd/bwd/allreduce/update spans (data-parallel runs; open in Perfetto)", takes_value: true, default: None },
             ],
         },
         Command {
@@ -91,6 +93,17 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "json", help: "also print the report as one JSON row", takes_value: false, default: None },
                 OptSpec { name: "metrics-out", help: "write the final report + per-primitive BRGEMM profile as JSON", takes_value: true, default: None },
                 OptSpec { name: "metrics-every", help: "log a point-in-time serving snapshot every this many seconds", takes_value: true, default: None },
+                OptSpec { name: "trace-out", help: "write a Chrome trace-event JSON of request/batch/layer spans (open in Perfetto)", takes_value: true, default: None },
+                OptSpec { name: "trace-sample", help: "with tracing on: record 1 in N requests, keyed off the request id [default: 1 = all]", takes_value: true, default: None },
+                OptSpec { name: "admin-sock", help: "listen on this Unix socket for line-delimited JSON admin commands (stats|trace|reload|drain)", takes_value: true, default: None },
+            ],
+        },
+        Command {
+            name: "admin",
+            about: "send one command to a running server's --admin-sock endpoint",
+            opts: vec![
+                OptSpec { name: "sock", help: "Unix socket path the server listens on", takes_value: true, default: None },
+                OptSpec { name: "cmd", help: "command line to send: stats | drain | a JSON object like {\"cmd\":\"reload\",\"path\":\"m.bin\"}", takes_value: true, default: None },
             ],
         },
         Command {
@@ -135,6 +148,8 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "baseline", help: "committed baseline JSON (BENCH_*.json at the repo root)", takes_value: true, default: None },
                 OptSpec { name: "current", help: "freshly measured JSON (bench_results/*.json)", takes_value: true, default: None },
                 OptSpec { name: "tolerance", help: "allowed fractional change vs baseline: throughput drop or latency rise [default: 0.5]", takes_value: true, default: None },
+                OptSpec { name: "trace", help: "Chrome trace-event JSON (--trace-out file): must parse with nonzero complete spans", takes_value: true, default: None },
+                OptSpec { name: "min-span-cats", help: "with --trace: require at least this many distinct span categories [default: 2]", takes_value: true, default: None },
             ],
         },
         Command {
@@ -171,6 +186,7 @@ fn main() {
         Some("info") => cmd_info(),
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("admin") => cmd_admin(&args),
         Some("primitive") => cmd_primitive(&args),
         Some("tune") => cmd_tune(&args),
         Some("perfcheck") => cmd_perfcheck(&args),
@@ -231,6 +247,12 @@ fn cmd_run(args: &Args) -> Result<()> {
             bail!("--metrics-out needs a non-empty file path");
         }
         cfg.metrics_out = Some(path.to_string());
+    }
+    if let Some(path) = args.str("trace-out") {
+        if path.is_empty() {
+            bail!("--trace-out needs a non-empty file path");
+        }
+        cfg.trace_out = Some(path.to_string());
     }
     let resume = match args.str("resume") {
         Some(path) => {
@@ -298,6 +320,18 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     // Install before the model is built: the bucket plans' primitives
     // register their profiler slots at construction time.
     let profiler = cfg.metrics_out.as_ref().map(|_| telemetry::install());
+    // The span tracer turns on when anything can observe it: a
+    // --trace-out file, or a live admin socket (its `trace` command
+    // drains the same rings).
+    let tracing = cfg.trace_out.is_some() || sc.admin_sock.is_some();
+    let tracer = tracing.then(|| trace::install(sc.trace_sample, trace::DEFAULT_RING_CAP));
+    if tracing {
+        log_info!(
+            "tracing: sampling 1 in {} request(s), ring capacity {} group(s) per worker",
+            sc.trace_sample,
+            trace::DEFAULT_RING_CAP
+        );
+    }
     let artifact = match &sc.model_path {
         Some(path) => {
             let art = ModelArtifact::load(path)?;
@@ -360,6 +394,7 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         max_batch: sc.max_batch,
         workers: sc.workers,
         wait_for_fill_us: sc.wait_for_fill_us,
+        trace: tracing,
     };
     // `--watch-model`: the validated config guarantees a model path, and
     // run_serve loaded the artifact above — it becomes the watcher's
@@ -424,10 +459,11 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
                     opts,
                     &load,
                     watch,
+                    sc.admin_sock.as_deref(),
                     sc.metrics_every,
                     sc.watch_poll_ms,
                     seq_request_source(step, typical, t),
-                )
+                )?
             }
             None => {
                 let dim = model.input_dim();
@@ -436,20 +472,49 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
                     opts,
                     &load,
                     watch,
+                    sc.admin_sock.as_deref(),
                     sc.metrics_every,
                     sc.watch_poll_ms,
                     move |rng, _i| rng.vec_f32(dim, -1.0, 1.0),
-                )
+                )?
             }
         };
         if responses.len() != sc.requests {
-            bail!("served {} of {} requests", responses.len(), sc.requests);
+            // An admin `drain` legitimately ends the run early: the load
+            // generator stops at the first rejected submit and every
+            // accepted request was still answered.
+            if sc.admin_sock.is_some() && responses.len() < sc.requests {
+                log_info!(
+                    "served {} of {} requests (admin drain ended the run early)",
+                    responses.len(),
+                    sc.requests
+                );
+            } else {
+                bail!("served {} of {} requests", responses.len(), sc.requests);
+            }
         }
         report
     };
     print!("{}", report.render());
     if emit_json {
         println!("{}", report.to_json().to_string_compact());
+    }
+    if let Some(t) = tracer {
+        // Whatever an admin `trace` command already drained is gone by
+        // design (the rings hand out each group once); this exports the
+        // remainder.
+        if let Some(path) = &cfg.trace_out {
+            let drained = t.drain();
+            log_info!(
+                "trace: {} span group(s) captured, {} dropped by ring overflow",
+                drained.groups.len(),
+                drained.dropped_groups
+            );
+            std::fs::write(path, format!("{}\n", drained.to_chrome().to_string_compact()))
+                .map_err(|e| anyhow!("writing {}: {}", path, e))?;
+            log_info!("chrome trace written to {} (open in Perfetto / chrome://tracing)", path);
+        }
+        trace::uninstall();
     }
     if let (Some(path), Some(prof)) = (&cfg.metrics_out, profiler) {
         let mut doc = report.to_json();
@@ -464,19 +529,29 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     Ok(())
 }
 
-/// Start the server, optionally attach the `--watch-model` file poller,
-/// pace the open-loop load, and drain — the one open-loop entry both
-/// serving paths (synthetic noise and the accuracy replay) go through.
+/// Start the server, optionally attach the `--watch-model` file poller
+/// and the `--admin-sock` control endpoint, pace the open-loop load, and
+/// drain — the one open-loop entry both serving paths (synthetic noise
+/// and the accuracy replay) go through.
 fn open_loop_watched(
     model: InferenceModel,
     opts: ServeOpts,
     load: &LoadSpec,
     watch: Option<(&str, &ModelArtifact)>,
+    admin_sock: Option<&str>,
     metrics_every: Option<f64>,
     watch_poll_ms: u64,
     make_input: impl FnMut(&mut Rng, usize) -> Vec<f32>,
-) -> (brgemm_dl::serve::ServeReport, Vec<Response>) {
+) -> Result<(brgemm_dl::serve::ServeReport, Vec<Response>)> {
     let (server, rx) = Server::start(model, opts);
+    let admin = match admin_sock {
+        Some(path) => {
+            let a = AdminServer::start(path, server.admin_handle())?;
+            log_info!("admin: listening on {} (stats | trace | reload | drain)", path);
+            Some(a)
+        }
+        None => None,
+    };
     let watcher = watch.map(|(p, loaded)| {
         log_info!("watch-model: polling {} every {} ms for changes", p, watch_poll_ms);
         ModelWatcher::spawn(
@@ -491,7 +566,10 @@ fn open_loop_watched(
         let applied = w.stop();
         log_info!("watch-model: {} reload(s) applied during the run", applied);
     }
-    out
+    if let Some(a) = admin {
+        a.stop();
+    }
+    Ok(out)
 }
 
 /// Accuracy-replay load: pace the artifact's own training distribution
@@ -522,10 +600,11 @@ fn serve_eval_load(
         opts,
         &load,
         watch,
+        sc.admin_sock.as_deref(),
         sc.metrics_every,
         sc.watch_poll_ms,
         |_rng, i| data.batch(i, 1).0,
-    );
+    )?;
     if responses.len() != n {
         bail!("served {} of {} eval requests", responses.len(), n);
     }
@@ -551,7 +630,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let conflicting: Vec<&str> =
             ["model", "layers", "seq-len-typical", "model-path", "min-accuracy", "watch-model",
              "watch-poll-ms", "wait-fill-us", "rate", "requests", "max-batch", "serve-workers",
-             "nthreads", "seed", "tune", "metrics-out", "metrics-every"]
+             "nthreads", "seed", "tune", "metrics-out", "metrics-every", "trace-out",
+             "trace-sample", "admin-sock"]
             .into_iter()
             .filter(|&k| args.str(k).is_some())
             .collect();
@@ -606,10 +686,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("{}", e))? as u64,
         seq_len_typical: args.usize("seq-len-typical").map_err(|e| anyhow!("{}", e))?,
         metrics_every: args.f64("metrics-every").map_err(|e| anyhow!("{}", e))?,
+        admin_sock: args.str("admin-sock").map(String::from),
+        trace_sample: args
+            .usize_or("trace-sample", d.trace_sample as usize)
+            .map_err(|e| anyhow!("{}", e))? as u64,
     };
     sc.validate()?;
     cfg.metrics_out = args.str("metrics-out").map(String::from);
+    cfg.trace_out = args.str("trace-out").map(String::from);
     run_serve(&cfg, sc, args.flag("json"))
+}
+
+/// One-shot admin client: send a single command line to a running
+/// server's `--admin-sock` endpoint and print the JSON reply. Bare
+/// `stats` / `drain` / `trace` are wrapped into the JSON form; anything
+/// containing `{` is sent verbatim. Exit status follows the reply's
+/// `ok` field, so shell scripts can gate on it directly.
+fn cmd_admin(args: &Args) -> Result<()> {
+    let sock = args.str("sock").ok_or_else(|| anyhow!("admin needs --sock <path>"))?;
+    let cmd = args.str("cmd").ok_or_else(|| anyhow!("admin needs --cmd <command>"))?;
+    let line = if cmd.contains('{') {
+        cmd.to_string()
+    } else {
+        obj([("cmd", cmd.into())]).to_string_compact()
+    };
+    let reply = brgemm_dl::serve::admin::send_command(sock, &line)?;
+    println!("{}", reply);
+    let ok = Json::parse(&reply)
+        .ok()
+        .and_then(|j| j.get("ok").and_then(Json::as_bool))
+        .unwrap_or(false);
+    if !ok {
+        bail!("admin command failed (reply above)");
+    }
+    Ok(())
 }
 
 /// The training schedule derived from a config: epoch = one pass over
@@ -692,6 +802,16 @@ fn drive_native<M: Model>(
     // primitives register their profiler slots at construction), then
     // stream one JSON line per epoch plus a final per-primitive profile.
     let profiler = cfg.metrics_out.as_ref().map(|_| telemetry::install());
+    // --trace-out: per-step fwd/bwd/allreduce/update spans come from the
+    // data-parallel trainer; every step is recorded (steps are few and
+    // coarse next to serve requests, so sampling buys nothing here).
+    let tracer = cfg.trace_out.as_ref().map(|_| trace::install(1, trace::DEFAULT_RING_CAP));
+    if tracer.is_some() && cfg.workers <= 1 {
+        log_warn!(
+            "--trace-out: step spans are recorded by the data-parallel path; this \
+             single-worker run will produce an empty trace (set \"workers\": 2+)"
+        );
+    }
     let mut sink = match &cfg.metrics_out {
         Some(path) => Some(std::io::BufWriter::new(
             std::fs::File::create(path).map_err(|e| anyhow!("creating {}: {}", path, e))?,
@@ -764,6 +884,7 @@ fn drive_native<M: Model>(
             }
         }
         let mut dp = DataParallelTrainer::from_workers(workers, cfg.lr as f32);
+        dp.trace_steps(tracer.is_some());
         log_info!("model params: {} × {} replicas", dp.workers[0].param_count(), cfg.workers);
         for step in start_step..total {
             let shards: Vec<_> = (0..cfg.workers)
@@ -866,6 +987,20 @@ fn drive_native<M: Model>(
                 ]),
             )?;
         }
+    }
+    if let Some(t) = tracer {
+        if let Some(path) = &cfg.trace_out {
+            let drained = t.drain();
+            log_info!(
+                "trace: {} step group(s) captured, {} dropped by ring overflow",
+                drained.groups.len(),
+                drained.dropped_groups
+            );
+            std::fs::write(path, format!("{}\n", drained.to_chrome().to_string_compact()))
+                .map_err(|e| anyhow!("writing {}: {}", path, e))?;
+            log_info!("chrome trace written to {} (open in Perfetto / chrome://tracing)", path);
+        }
+        trace::uninstall();
     }
     if let (Some(mut w), Some(prof)) = (sink, profiler) {
         write_metrics_line(&mut w, &obj([("primitives", prof.snapshot())]))?;
@@ -1232,8 +1367,10 @@ const PERF_KEYS: [&str; 5] = ["gflops", "kwps", "imgs_per_s", "throughput_rps", 
 /// Latency-like keys (**lower** is better), compared with the same
 /// tolerance in the opposite direction: a *rise* beyond the allowed
 /// fraction is the regression. `queue_wait_ms` is the per-bucket
-/// queue-wait leaf of the serve report's bucket table.
-const LAT_KEYS: [&str; 4] = ["p50_ms", "p95_ms", "p99_ms", "queue_wait_ms"];
+/// queue-wait leaf of the serve report's bucket table;
+/// `queue_depth_max` is the high-water queue depth — a backlog metric,
+/// so growth is the bad direction exactly like a latency.
+const LAT_KEYS: [&str; 5] = ["p50_ms", "p95_ms", "p99_ms", "queue_wait_ms", "queue_depth_max"];
 
 /// `perfcheck` — CI's observability gate. Two independent modes that can
 /// be combined in one invocation:
@@ -1255,6 +1392,14 @@ fn cmd_perfcheck(args: &Args) -> Result<()> {
         }
         None => false,
     };
+    let did_trace = match args.str("trace") {
+        Some(path) => {
+            let min_cats = args.usize_or("min-span-cats", 2).map_err(|e| anyhow!("{}", e))?;
+            check_trace_file(path, min_cats)?;
+            true
+        }
+        None => false,
+    };
     match (args.str("baseline"), args.str("current")) {
         (Some(b), Some(c)) => {
             let tol = args.f64_or("tolerance", 0.5).map_err(|e| anyhow!("{}", e))?;
@@ -1263,10 +1408,61 @@ fn cmd_perfcheck(args: &Args) -> Result<()> {
             }
             compare_perf(b, c, tol)
         }
-        (None, None) if did_metrics => Ok(()),
-        (None, None) => bail!("perfcheck needs --metrics and/or --baseline/--current"),
+        (None, None) if did_metrics || did_trace => Ok(()),
+        (None, None) => bail!("perfcheck needs --metrics, --trace, and/or --baseline/--current"),
         _ => bail!("--baseline and --current must be given together"),
     }
+}
+
+/// Validate a `--trace-out` document: it must parse as a Chrome
+/// trace-event JSON with a nonzero number of complete (`"ph":"X"`) span
+/// events covering at least `min_cats` distinct categories — the proof
+/// that the tracer actually recorded more than one stage of the
+/// pipeline, not just one span kind in a loop.
+fn check_trace_file(path: &str, min_cats: usize) -> Result<()> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {}: {}", path, e))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {:?}", path, e))?;
+    let (spans, cats) = trace_span_summary(&doc)
+        .ok_or_else(|| anyhow!("{}: no traceEvents array (not a --trace-out document)", path))?;
+    if spans == 0 {
+        bail!("{}: traceEvents has no complete ('X') span events", path);
+    }
+    if cats.len() < min_cats {
+        bail!(
+            "{}: only {} span categor{} ({}); {} required",
+            path,
+            cats.len(),
+            if cats.len() == 1 { "y" } else { "ies" },
+            cats.join(", "),
+            min_cats
+        );
+    }
+    println!(
+        "perfcheck {}: {} span(s) across {} categories ({})",
+        path,
+        spans,
+        cats.len(),
+        cats.join(", ")
+    );
+    Ok(())
+}
+
+/// `(complete-span count, sorted distinct categories)` of a Chrome
+/// trace-event document, or `None` when it has no `traceEvents` array.
+/// Flow arrows (`ph` "s"/"f") are deliberately not counted as spans.
+fn trace_span_summary(doc: &Json) -> Option<(usize, Vec<String>)> {
+    let events = doc.get("traceEvents").and_then(Json::as_arr)?;
+    let mut spans = 0usize;
+    let mut cats = std::collections::BTreeSet::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) == Some("X") {
+            spans += 1;
+            if let Some(c) = e.get("cat").and_then(Json::as_str) {
+                cats.insert(c.to_string());
+            }
+        }
+    }
+    Some((spans, cats.into_iter().collect()))
 }
 
 fn check_metrics_file(path: &str, require: &str) -> Result<()> {
@@ -1505,6 +1701,43 @@ mod tests {
         let (compared, regs) = perf_deltas(&base, &cur, 0.5);
         assert_eq!(compared, 2);
         assert_eq!(regs.len(), 2, "{:?}", regs);
+    }
+
+    #[test]
+    fn queue_depth_growth_is_a_regression_and_shrink_is_not() {
+        // queue_depth_max is a backlog high-water mark: lower is better,
+        // like a latency — a deeper queue at the same load is the
+        // regression, a shallower one never is.
+        let base = j(r#"{"queue_depth_max": 10.0, "p99_ms": 5.0}"#);
+        let worse = j(r#"{"queue_depth_max": 40.0, "p99_ms": 5.0}"#);
+        let (compared, regs) = perf_deltas(&base, &worse, 0.5);
+        assert_eq!(compared, 2);
+        assert_eq!(regs.len(), 1, "{:?}", regs);
+        assert!(regs[0].contains("/queue_depth_max") && regs[0].contains("rise"));
+        let better = j(r#"{"queue_depth_max": 2.0, "p99_ms": 4.0}"#);
+        assert!(perf_deltas(&base, &better, 0.5).1.is_empty());
+    }
+
+    #[test]
+    fn trace_summary_counts_complete_spans_and_distinct_categories() {
+        // Flow arrows (ph "s"/"f") must not count as spans; categories
+        // come only from complete events.
+        let doc = j(
+            r#"{"traceEvents": [
+                {"ph": "X", "cat": "serve.request", "name": "request"},
+                {"ph": "X", "cat": "serve.batch", "name": "batch"},
+                {"ph": "X", "cat": "serve.batch", "name": "batch"},
+                {"ph": "s", "cat": "flow", "name": "served_in"},
+                {"ph": "f", "cat": "flow", "name": "served_in"}
+            ], "dropped_groups": 0}"#,
+        );
+        let (spans, cats) = trace_span_summary(&doc).unwrap();
+        assert_eq!(spans, 3);
+        assert_eq!(cats, vec!["serve.batch".to_string(), "serve.request".to_string()]);
+        // Not a trace document at all.
+        assert!(trace_span_summary(&j(r#"{"rows": []}"#)).is_none());
+        // Empty traceEvents parses but carries zero spans.
+        assert_eq!(trace_span_summary(&j(r#"{"traceEvents": []}"#)).unwrap().0, 0);
     }
 }
 

@@ -1,0 +1,344 @@
+//! Admin plane: a Unix-domain-socket control endpoint over a running
+//! server (`serve --admin-sock <path>`).
+//!
+//! The ROADMAP's push-style answer to poll-only `--watch-model`: instead
+//! of a thread watching an artifact file's mtime, an operator (or CI)
+//! connects to the socket and *tells* the server what to do. The protocol
+//! is deliberately tiny — one JSON object per line in, one JSON object
+//! per line out:
+//!
+//! ```text
+//! {"cmd":"stats"}                  → {"ok":true,"stats":{...ServeReport...}}
+//! {"cmd":"trace"}                  → {"ok":true,"trace":{"traceEvents":[...]}}
+//! {"cmd":"reload","path":"m.json"} → {"ok":true,"reloads":N}
+//! {"cmd":"drain"}                  → {"ok":true,"stats":{...final report...}}
+//! anything else                    → {"ok":false,"error":"..."}
+//! ```
+//!
+//! `stats` snapshots the live [`ServeReport`]; `trace` drains the span
+//! tracer's rings into a Chrome trace-event document (error when no
+//! tracer is installed); `reload` loads a [`ModelArtifact`] from a path
+//! visible to the *server* process and hot-swaps it atomically (in-flight
+//! batches finish on the generation they pinned — same contract as
+//! `Server::reload`); `drain` stops intake, waits until every accepted
+//! request is answered, and returns the final report.
+//!
+//! Connections are served one at a time on a single thread: the admin
+//! plane is a control path, not a data path, and a serialized `drain`
+//! blocking a concurrent `stats` for its duration is the semantics an
+//! operator expects. The accept loop polls with a short sleep so
+//! [`AdminServer::stop`] (and `Drop`) can always reclaim the thread and
+//! unlink the socket file.
+
+use crate::modelio::ModelArtifact;
+use crate::serve::batcher::AdminHandle;
+use crate::serve::metrics::ServeReport;
+use crate::telemetry::trace;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How long the accept/read loops sleep between stop-flag checks.
+const POLL: Duration = Duration::from_millis(20);
+
+/// A running admin endpoint; unlinks its socket file and joins its
+/// thread on [`AdminServer::stop`] or drop.
+pub struct AdminServer {
+    path: PathBuf,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl AdminServer {
+    /// Bind `path` and start serving commands against `handle`. A stale
+    /// socket file at `path` (e.g. from a killed process) is replaced.
+    pub fn start(path: impl AsRef<Path>, handle: AdminHandle) -> Result<AdminServer> {
+        let path = path.as_ref().to_path_buf();
+        if path.exists() {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("removing stale admin socket {}", path.display()))?;
+        }
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("binding admin socket {}", path.display()))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting admin socket non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Errors on one connection (client hung up
+                        // mid-line) must not take the admin plane down.
+                        let _ = serve_conn(stream, &handle, &stop2);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(AdminServer { path, stop, thread: Some(thread) })
+    }
+
+    /// The socket path this endpoint is bound to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Stop accepting, join the serving thread, unlink the socket file.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One connection: read newline-delimited commands until EOF (or server
+/// stop), answering each with one JSON line.
+fn serve_conn(stream: UnixStream, handle: &AdminHandle, stop: &AtomicBool) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(POLL))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                if !line.ends_with('\n') {
+                    // EOF mid-line: still answer what we got.
+                }
+                let reply = handle_command(line.trim(), handle);
+                writer.write_all(reply.to_string_compact().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                line.clear();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn err_reply(msg: impl Into<String>) -> Json {
+    obj([("ok", false.into()), ("error", Json::Str(msg.into()))])
+}
+
+fn stats_reply(report: &ServeReport) -> Json {
+    obj([("ok", true.into()), ("stats", report.to_json())])
+}
+
+/// Execute one protocol line. Pure request→reply; never panics on
+/// malformed input (the admin plane must survive a fat-fingered client).
+pub fn handle_command(line: &str, handle: &AdminHandle) -> Json {
+    if line.is_empty() {
+        return err_reply("empty command");
+    }
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_reply(format!("bad json: {}", e)),
+    };
+    let cmd = match req.get("cmd").and_then(|c| c.as_str()) {
+        Some(c) => c,
+        None => return err_reply("missing \"cmd\""),
+    };
+    match cmd {
+        "stats" => stats_reply(&handle.stats()),
+        "trace" => match trace::current() {
+            Some(t) => obj([("ok", true.into()), ("trace", t.drain().to_chrome())]),
+            None => err_reply("no tracer installed (serve --trace-out enables it)"),
+        },
+        "reload" => {
+            let path = match req.get("path").and_then(|p| p.as_str()) {
+                Some(p) => p,
+                None => return err_reply("reload needs a \"path\""),
+            };
+            let artifact = match ModelArtifact::load(path) {
+                Ok(a) => a,
+                Err(e) => return err_reply(format!("loading {}: {}", path, e)),
+            };
+            match handle.reload(&artifact) {
+                Ok(()) => obj([
+                    ("ok", true.into()),
+                    ("reloads", (handle.reload_count() as usize).into()),
+                ]),
+                Err(e) => err_reply(format!("reload rejected: {}", e)),
+            }
+        }
+        "drain" => stats_reply(&handle.drain()),
+        other => err_reply(format!("unknown cmd {:?}", other)),
+    }
+}
+
+/// One-shot client: connect to `sock`, send `line`, return the reply
+/// line. What `admin --sock <path> <cmd>` (and ci.sh) drive.
+pub fn send_command(sock: impl AsRef<Path>, line: &str) -> Result<String> {
+    let sock = sock.as_ref();
+    let mut stream = UnixStream::connect(sock)
+        .with_context(|| format!("connecting to admin socket {}", sock.display()))?;
+    stream.write_all(line.as_bytes()).context("sending admin command")?;
+    stream.write_all(b"\n").context("sending admin command")?;
+    stream.flush().context("sending admin command")?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).context("reading admin reply")?;
+    Ok(reply.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::trainer::Model;
+    use crate::modelio::{Arch, TrainMeta};
+    use crate::serve::batcher::{ServeOpts, Server};
+    use crate::serve::model::InferenceModel;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+
+    static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    /// A unique, short socket path (sun_path is ~108 bytes — stay short).
+    fn sock_path(tag: &str) -> PathBuf {
+        let n = SOCK_SEQ.fetch_add(1, AOrd::Relaxed);
+        std::env::temp_dir().join(format!("adm-{}-{}-{}.sock", std::process::id(), tag, n))
+    }
+
+    fn mlp_server() -> (Server, std::sync::mpsc::Receiver<crate::serve::batcher::Response>) {
+        let model = InferenceModel::new_mlp(&[10, 12, 4], 4, 1, false, &mut Rng::new(5));
+        Server::start(model, ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() })
+    }
+
+    #[test]
+    fn stats_round_trip_over_a_real_socket() {
+        let (server, rx) = mlp_server();
+        let admin = AdminServer::start(sock_path("stats"), server.admin_handle()).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        // The worker pool is asynchronous: poll until all 10 are served.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let served = loop {
+            let reply = send_command(admin.path(), "{\"cmd\":\"stats\"}").unwrap();
+            let v = Json::parse(&reply).expect("stats reply is valid JSON");
+            assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+            let n = v
+                .get("stats")
+                .and_then(|s| s.get("requests"))
+                .and_then(|r| r.as_f64())
+                .unwrap();
+            if n >= 10.0 || std::time::Instant::now() > deadline {
+                break n;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        assert_eq!(served, 10.0, "live stats see every served request");
+        admin.stop();
+        let report = server.shutdown();
+        assert_eq!(report.requests, 10);
+        assert_eq!(rx.iter().count(), 10);
+    }
+
+    #[test]
+    fn reload_via_socket_bumps_the_visible_count() {
+        let (server, rx) = mlp_server();
+        let admin = AdminServer::start(sock_path("reload"), server.admin_handle()).unwrap();
+        // Donor artifact on disk, as the protocol requires.
+        let donor = crate::coordinator::trainer::MlpModel::new(
+            &[10usize, 12, 4],
+            4,
+            1,
+            &mut Rng::new(99),
+        );
+        let art = ModelArtifact::new(
+            Arch::Mlp { sizes: vec![10, 12, 4] },
+            TrainMeta::fresh(99),
+            donor.export_weights(),
+        );
+        let art_path = std::env::temp_dir()
+            .join(format!("adm-art-{}.json", std::process::id()));
+        art.save(&art_path).unwrap();
+
+        let cmd = format!("{{\"cmd\":\"reload\",\"path\":\"{}\"}}", art_path.display());
+        let reply = Json::parse(&send_command(admin.path(), &cmd).unwrap()).unwrap();
+        assert_eq!(reply.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(reply.get("reloads").and_then(|r| r.as_f64()), Some(1.0));
+        // The count is visible in a subsequent stats reply — the CI
+        // round-trip contract.
+        let stats = Json::parse(&send_command(admin.path(), "{\"cmd\":\"stats\"}").unwrap()).unwrap();
+        assert_eq!(
+            stats.get("stats").and_then(|s| s.get("reloads")).and_then(|r| r.as_f64()),
+            Some(1.0)
+        );
+        std::fs::remove_file(&art_path).ok();
+        admin.stop();
+        drop(server.shutdown());
+        drop(rx);
+    }
+
+    #[test]
+    fn drain_answers_everything_and_bad_commands_do_not_kill_the_plane() {
+        let (server, rx) = mlp_server();
+        let admin = AdminServer::start(sock_path("drain"), server.admin_handle()).unwrap();
+        let mut rng = Rng::new(11);
+        for _ in 0..25 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        // Garbage first: the plane answers with ok:false and keeps going.
+        let bad = Json::parse(&send_command(admin.path(), "not json").unwrap()).unwrap();
+        assert_eq!(bad.get("ok").and_then(|b| b.as_bool()), Some(false));
+        let bad2 = Json::parse(&send_command(admin.path(), "{\"cmd\":\"nope\"}").unwrap()).unwrap();
+        assert_eq!(bad2.get("ok").and_then(|b| b.as_bool()), Some(false));
+        // Drain: blocks until all 25 are answered, then reports.
+        let reply = Json::parse(&send_command(admin.path(), "{\"cmd\":\"drain\"}").unwrap()).unwrap();
+        assert_eq!(reply.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert_eq!(
+            reply.get("stats").and_then(|s| s.get("requests")).and_then(|r| r.as_f64()),
+            Some(25.0)
+        );
+        admin.stop();
+        let report = server.shutdown();
+        assert_eq!(report.requests, 25);
+        assert_eq!(rx.iter().count(), 25, "drain loses no responses");
+    }
+
+    #[test]
+    fn trace_command_requires_an_installed_tracer() {
+        let _g = crate::telemetry::test_lock();
+        trace::uninstall();
+        let (server, rx) = mlp_server();
+        let admin = AdminServer::start(sock_path("trace"), server.admin_handle()).unwrap();
+        let off = Json::parse(&send_command(admin.path(), "{\"cmd\":\"trace\"}").unwrap()).unwrap();
+        assert_eq!(off.get("ok").and_then(|b| b.as_bool()), Some(false));
+        trace::install(1, 64);
+        let on = Json::parse(&send_command(admin.path(), "{\"cmd\":\"trace\"}").unwrap()).unwrap();
+        assert_eq!(on.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert!(on.get("trace").and_then(|t| t.get("traceEvents")).is_some());
+        trace::uninstall();
+        admin.stop();
+        drop(server.shutdown());
+        drop(rx);
+    }
+}

@@ -28,6 +28,7 @@
 use crate::modelio::ModelArtifact;
 use crate::serve::metrics::{ServeReport, ServeStats};
 use crate::serve::model::{InferenceModel, ServeScratch};
+use crate::telemetry::trace::{self, SpanEvent, SpanKind, TraceGroup};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
@@ -51,11 +52,17 @@ pub struct ServeOpts {
     /// The trade is the classic one: a small window raises batch fill
     /// (throughput) at the cost of adding up to the window to latency.
     pub wait_for_fill_us: u64,
+    /// Record request/batch spans into the installed span tracer
+    /// ([`crate::telemetry::trace`]). Opt-in per server so a server that
+    /// did not ask for tracing never writes into a tracer some *other*
+    /// component installed (the CLI sets it alongside `--trace-out` /
+    /// `--admin-sock`). No tracer installed ⇒ no spans either way.
+    pub trace: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_batch: 8, workers: 2, wait_for_fill_us: 0 }
+        ServeOpts { max_batch: 8, workers: 2, wait_for_fill_us: 0, trace: false }
     }
 }
 
@@ -92,6 +99,10 @@ struct QueueState {
     queues: BTreeMap<usize, VecDeque<Pending>>,
     /// Total backlog across every length bucket.
     depth: usize,
+    /// Requests dequeued into a batch but not yet responded to. A drain
+    /// is complete only when `depth == 0 && in_flight == 0` — the queue
+    /// being empty says nothing about batches still computing.
+    in_flight: usize,
     accepting: bool,
     next_id: u64,
 }
@@ -178,6 +189,7 @@ impl Server {
             state: Mutex::new(QueueState {
                 queues: BTreeMap::new(),
                 depth: 0,
+                in_flight: 0,
                 accepting: true,
                 next_id: 0,
             }),
@@ -186,10 +198,10 @@ impl Server {
         });
         let (tx, rx) = mpsc::channel();
         let workers = (0..opts.workers)
-            .map(|_| {
+            .map(|widx| {
                 let shared = Arc::clone(&shared);
                 let tx = tx.clone();
-                std::thread::spawn(move || worker_loop(&shared, &tx))
+                std::thread::spawn(move || worker_loop(&shared, widx, &tx))
             })
             .collect();
         // Workers hold the only senders: dropping `tx` here makes the
@@ -202,19 +214,30 @@ impl Server {
     /// models take exactly `input_dim` features; sequence models take any
     /// flattened `[len][c]` sequence with `1 <= len <= t`, queued under
     /// its length bucket. Panics if called after [`Server::shutdown`]
-    /// (the queue is no longer accepting).
+    /// (the queue is no longer accepting). The id doubles as the
+    /// request's trace id — minted sequentially here, so the tracer's
+    /// 1-in-N sampling is deterministic for a fixed load schedule.
     pub fn submit(&self, input: Vec<f32>) -> u64 {
+        self.try_submit(input).expect("submit after shutdown")
+    }
+
+    /// [`Server::submit`] that signals shutdown/drain instead of
+    /// panicking: `None` means the queue stopped accepting (an admin
+    /// `drain` raced the load generator) and the request was not queued.
+    pub fn try_submit(&self, input: Vec<f32>) -> Option<u64> {
         let (len, len_bucket) = classify_request(&self.shared.model, &input);
         let id = {
             let mut st = self.shared.state.lock().unwrap();
-            assert!(st.accepting, "submit after shutdown");
+            if !st.accepting {
+                return None;
+            }
             let id = st.next_id;
             st.next_id += 1;
             st.push(len_bucket, Pending { id, input, len, enqueued: Instant::now() });
             id
         };
         self.shared.cv.notify_one();
-        id
+        Some(id)
     }
 
     /// Enqueue a burst atomically (one lock, one wake-all): no worker can
@@ -250,6 +273,12 @@ impl Server {
         self.shared.state.lock().unwrap().depth
     }
 
+    /// Whether the queue is still taking requests (false once shutdown
+    /// or an admin `drain` stopped intake).
+    pub fn accepting(&self) -> bool {
+        self.shared.state.lock().unwrap().accepting
+    }
+
     /// Hot weight reload: atomically swap the serving model's weights for
     /// the artifact's (same arch required). Batches in flight finish on
     /// the weights they started with; batches taken after this call use
@@ -265,6 +294,13 @@ impl Server {
     /// harmless swap on the final weight generation.
     pub fn reload_handle(&self) -> ReloadHandle {
         ReloadHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Control-plane access for the admin socket: live stats, push
+    /// reloads, and a blocking drain. Like [`Server::reload_handle`],
+    /// the handle outlives the [`Server`] value.
+    pub fn admin_handle(&self) -> AdminHandle {
+        AdminHandle { shared: Arc::clone(&self.shared), started: self.started }
     }
 
     /// Point-in-time report over everything served so far. The run keeps
@@ -312,7 +348,64 @@ impl ReloadHandle {
     }
 }
 
-fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
+/// Control-plane access to a running server, detached from the
+/// [`Server`] value's lifetime — what the admin socket
+/// ([`crate::serve::admin`]) serves its `stats`/`reload`/`drain`
+/// commands through.
+#[derive(Clone)]
+pub struct AdminHandle {
+    shared: Arc<Shared>,
+    started: Instant,
+}
+
+impl AdminHandle {
+    /// Point-in-time report over everything served so far (same wall
+    /// clock as [`Server::stats_snapshot`]).
+    pub fn stats(&self) -> ServeReport {
+        let wall = self.started.elapsed().as_secs_f64();
+        let reloads = self.shared.model.reload_count();
+        self.shared.stats.lock().unwrap().report(wall, reloads)
+    }
+
+    /// Same contract as [`Server::reload`]: atomic hot swap, in-flight
+    /// batches finish on the generation they pinned.
+    pub fn reload(&self, artifact: &ModelArtifact) -> Result<()> {
+        self.shared.model.reload(artifact)
+    }
+
+    pub fn reload_count(&self) -> u64 {
+        self.shared.model.reload_count()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.state.lock().unwrap().depth
+    }
+
+    pub fn accepting(&self) -> bool {
+        self.shared.state.lock().unwrap().accepting
+    }
+
+    /// Stop intake and block until every accepted request has been
+    /// responded to — queue empty *and* no batch in flight. Safe to call
+    /// more than once (and concurrently with [`Server::shutdown`], which
+    /// then merely joins already-exiting workers). Returns the final
+    /// report; no accepted response is lost.
+    pub fn drain(&self) -> ServeReport {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.accepting = false;
+        }
+        self.shared.cv.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.depth > 0 || st.in_flight > 0 {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        drop(st);
+        self.stats()
+    }
+}
+
+fn worker_loop(shared: &Shared, widx: usize, tx: &mpsc::Sender<Response>) {
     let classes = shared.model.classes();
     let max_batch = shared.opts.max_batch;
     let step_dim = shared.model.seq_step_dim();
@@ -324,6 +417,20 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
     let mut scratch = ServeScratch::new();
     let mut xbuf: Vec<f32> = Vec::new();
     let mut lens: Vec<usize> = Vec::new();
+    // Tracer capture, once per worker thread (the profiler pattern): when
+    // tracing is off the per-batch cost below is a single branch on this
+    // `None`. Gated on the server's own opt-in too, so a server that did
+    // not ask for tracing never writes into a tracer some other component
+    // installed. Each worker owns one pre-allocated span ring, so
+    // recording never contends across workers.
+    let tracing = if shared.opts.trace {
+        trace::current().map(|t| {
+            let ring = t.ring();
+            (t, ring)
+        })
+    } else {
+        None
+    };
     loop {
         // Take up to max_batch requests from one length bucket, or exit
         // once draining is done.
@@ -371,6 +478,7 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
                     q.drain(..k).collect()
                 };
                 st.depth -= taken.len();
+                st.in_flight += taken.len();
                 break (taken, lb);
             };
             (taken, len_bucket, st.depth)
@@ -411,7 +519,7 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
         let compute_secs = done.duration_since(t_fwd).as_secs_f64();
         let mut lats = Vec::with_capacity(fill);
         let mut waits = Vec::with_capacity(fill);
-        for (i, r) in taken.into_iter().enumerate() {
+        for (i, r) in taken.iter().enumerate() {
             let latency = done.duration_since(r.enqueued).as_secs_f64();
             lats.push(latency);
             waits.push(dequeued.duration_since(r.enqueued).as_secs_f64());
@@ -426,6 +534,105 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
                 len_bucket,
             });
         }
+        // Span recording, off the compute path: one batch group (the
+        // batch itself, its form/compute stages, and the forward pass's
+        // per-layer marks) plus one request group per *sampled* member
+        // linking back to the batch via `link`. Groups are stack-built
+        // `Copy` values; the ring push is the only shared-state touch.
+        if let Some((tr, ring)) = &tracing {
+            if taken.iter().any(|r| tr.sampled(r.id)) {
+                let tid = widx as u32;
+                let bid = tr.next_batch_id();
+                let mut bg = TraceGroup::new(0);
+                let (bs, bd) = tr.span_us(dequeued, done);
+                bg.push(SpanEvent {
+                    kind: SpanKind::Batch,
+                    label: "",
+                    trace_id: bid,
+                    tid,
+                    start_us: bs,
+                    dur_us: bd,
+                    a: bucket as u32,
+                    b: fill as u32,
+                });
+                let (fs, fd) = tr.span_us(dequeued, t_fwd);
+                bg.push(SpanEvent {
+                    kind: SpanKind::BatchForm,
+                    label: "",
+                    trace_id: bid,
+                    tid,
+                    start_us: fs,
+                    dur_us: fd,
+                    a: len_bucket as u32,
+                    b: 0,
+                });
+                let (cs, cd) = tr.span_us(t_fwd, done);
+                bg.push(SpanEvent {
+                    kind: SpanKind::BatchCompute,
+                    label: "",
+                    trace_id: bid,
+                    tid,
+                    start_us: cs,
+                    dur_us: cd,
+                    a: bucket as u32,
+                    b: len_bucket as u32,
+                });
+                for m in &scratch.layer_marks {
+                    let (ls, ld) = tr.span_us(m.start, m.start + m.dur);
+                    bg.push(SpanEvent {
+                        kind: SpanKind::Layer,
+                        label: m.label,
+                        trace_id: bid,
+                        tid,
+                        start_us: ls,
+                        dur_us: ld,
+                        a: m.index,
+                        b: 0,
+                    });
+                }
+                ring.push(bg);
+                for r in &taken {
+                    if !tr.sampled(r.id) {
+                        continue;
+                    }
+                    let mut g = TraceGroup::new(bid);
+                    let (rs, rd) = tr.span_us(r.enqueued, done);
+                    g.push(SpanEvent {
+                        kind: SpanKind::Request,
+                        label: "",
+                        trace_id: r.id,
+                        tid,
+                        start_us: rs,
+                        dur_us: rd,
+                        a: bucket as u32,
+                        b: len_bucket as u32,
+                    });
+                    let (qs, qd) = tr.span_us(r.enqueued, dequeued);
+                    g.push(SpanEvent {
+                        kind: SpanKind::QueueWait,
+                        label: "",
+                        trace_id: r.id,
+                        tid,
+                        start_us: qs,
+                        dur_us: qd,
+                        a: len_bucket as u32,
+                        b: 0,
+                    });
+                    let (is, id) = tr.span_us(dequeued, done);
+                    g.push(SpanEvent {
+                        kind: SpanKind::InBatch,
+                        label: "",
+                        trace_id: r.id,
+                        tid,
+                        start_us: is,
+                        dur_us: id,
+                        a: bucket as u32,
+                        b: fill as u32,
+                    });
+                    ring.push(g);
+                }
+            }
+        }
         crate::log_trace!(
             "batch b{} t{} fill {} depth {} compute {:.3} ms",
             bucket,
@@ -439,6 +646,13 @@ fn worker_loop(shared: &Shared, tx: &mpsc::Sender<Response>) {
             .lock()
             .unwrap()
             .record_batch(bucket, len_bucket, fill, depth_after, &lats, &waits, compute_secs);
+        // The batch is fully accounted: release its in-flight claim and
+        // wake anything blocked in `AdminHandle::drain`.
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.in_flight -= fill;
+        }
+        shared.cv.notify_all();
     }
 }
 
@@ -545,7 +759,7 @@ mod tests {
         // batches than greedy dispatch would produce, and a partial
         // bucket must still dispatch — nothing hangs, nothing is lost.
         let model = mlp_model(4);
-        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 200_000 };
+        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 200_000, trace: false };
         let (server, rx) = Server::start(model, opts);
         let mut rng = Rng::new(17);
         for _ in 0..6 {
@@ -572,7 +786,7 @@ mod tests {
         let model = mlp_model(4);
         // A window so large that waiting it out would trip the test's own
         // timeout many times over.
-        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 60_000_000 };
+        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 60_000_000, trace: false };
         let (server, rx) = Server::start(model, opts);
         let mut rng = Rng::new(19);
         let t0 = Instant::now();
@@ -747,5 +961,122 @@ mod tests {
             ServeOpts { max_batch: 2, workers: 1, ..ServeOpts::default() },
         );
         server.submit(vec![0.0; 9 * 5]); // t = 8
+    }
+
+    #[test]
+    fn trace_sampling_is_deterministic_and_spans_well_nest() {
+        use crate::telemetry::trace::well_nested;
+        let _g = crate::telemetry::test_lock();
+        let tr = trace::install(4, 256);
+        let model = mlp_model(8);
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 8, workers: 2, trace: true, ..ServeOpts::default() },
+        );
+        let mut rng = Rng::new(41);
+        for _ in 0..40 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        let _ = server.shutdown();
+        assert_eq!(rx.iter().count(), 40);
+        let d = tr.drain();
+        trace::uninstall();
+        // Ids are minted sequentially at submit, so with sample_every=4
+        // the traced set is exactly {0, 4, 8, ..., 36} — deterministic
+        // for a fixed load schedule, whatever the worker interleaving.
+        let sampled: std::collections::BTreeSet<u64> = d
+            .groups
+            .iter()
+            .filter(|g| g.find(SpanKind::Request).is_some())
+            .map(|g| g.trace_id())
+            .collect();
+        let want: std::collections::BTreeSet<u64> = (0..40).filter(|i| i % 4 == 0).collect();
+        assert_eq!(sampled, want);
+        for g in d.groups.iter().filter(|g| g.find(SpanKind::Request).is_some()) {
+            // Every sampled request carries its complete, well-nested
+            // enqueue→respond span set — never a partial trace.
+            assert_eq!(g.spans().len(), 3, "request group is complete");
+            let req = g.find(SpanKind::Request).unwrap();
+            let qw = g.find(SpanKind::QueueWait).unwrap();
+            let ib = g.find(SpanKind::InBatch).unwrap();
+            assert!(well_nested(req, qw), "queue wait inside request");
+            assert!(well_nested(req, ib), "batch residence inside request");
+            assert!(qw.end_us() <= ib.start_us, "wait ends where batching starts");
+            // And the flow link points at a batch group that exists.
+            assert!(g.link != 0, "request group links to its batch");
+            assert!(
+                d.groups
+                    .iter()
+                    .any(|b| b.find(SpanKind::Batch).is_some() && b.trace_id() == g.link),
+                "linked batch group present"
+            );
+        }
+        // Batch groups carry the form/compute stage spans nested in the
+        // batch span.
+        for g in d.groups.iter().filter(|g| g.find(SpanKind::Batch).is_some()) {
+            let b = g.find(SpanKind::Batch).unwrap();
+            let form = g.find(SpanKind::BatchForm).unwrap();
+            let compute = g.find(SpanKind::BatchCompute).unwrap();
+            assert!(well_nested(b, form) && well_nested(b, compute));
+            assert!(
+                g.find(SpanKind::Layer).is_some(),
+                "per-layer compute spans recorded"
+            );
+        }
+        assert_eq!(d.dropped_groups, 0, "ring capacity was not exceeded");
+    }
+
+    #[test]
+    fn traced_serving_is_bit_identical_to_untraced() {
+        // The tracer extends the profiler's contract: enabling it may
+        // change timing side channels only. Same seed, same burst —
+        // every response must match bitwise with and without it.
+        let _g = crate::telemetry::test_lock();
+        let run = |traced: bool| -> BTreeMap<u64, Vec<f32>> {
+            if traced {
+                trace::install(2, 128);
+            } else {
+                trace::uninstall();
+            }
+            let model = mlp_model(4);
+            let (server, rx) = Server::start(
+                model,
+                ServeOpts { max_batch: 4, workers: 2, trace: traced, ..ServeOpts::default() },
+            );
+            let mut rng = Rng::new(43);
+            server.submit_all((0..20).map(|_| rng.vec_f32(10, -1.0, 1.0)));
+            let _ = server.shutdown();
+            trace::uninstall();
+            rx.iter().map(|r| (r.id, r.logits)).collect()
+        };
+        assert_eq!(run(true), run(false), "tracing must not change the logits");
+    }
+
+    #[test]
+    fn admin_drain_answers_everything_and_stops_intake() {
+        let model = mlp_model(4);
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() },
+        );
+        let mut rng = Rng::new(47);
+        for _ in 0..100 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        let admin = server.admin_handle();
+        let report = admin.drain();
+        // Drain blocks until queue empty AND no batch in flight, so the
+        // report already accounts every accepted request.
+        assert_eq!(report.requests, 100, "drain waited for in-flight batches");
+        assert_eq!(admin.queue_depth(), 0);
+        assert!(!admin.accepting());
+        // Intake is closed: the non-panicking submit refuses...
+        assert!(server.try_submit(rng.vec_f32(10, -1.0, 1.0)).is_none());
+        // ...and a second drain is an idempotent no-op.
+        assert_eq!(admin.drain().requests, 100);
+        let final_report = server.shutdown();
+        assert_eq!(final_report.requests, 100);
+        let responses: Vec<Response> = rx.iter().collect();
+        assert_eq!(responses.len(), 100, "no response lost across the drain");
     }
 }

@@ -144,7 +144,11 @@ pub fn drive_open_loop_every(
         if due > now {
             std::thread::sleep(Duration::from_secs_f64(due - now));
         }
-        server.submit(make_input(&mut rng, i));
+        if server.try_submit(make_input(&mut rng, i)).is_none() {
+            // The admin plane drained the server mid-run: stop generating
+            // load; every request accepted so far still gets its response.
+            break;
+        }
         if let Some(at) = next_snapshot {
             let elapsed = start.elapsed().as_secs_f64();
             if elapsed >= at {

@@ -3,13 +3,149 @@
 //!
 //! The batcher records one entry per executed batch ([`ServeStats::record_batch`]);
 //! the final [`ServeReport`] is what the `serve` CLI prints and the
-//! `serve_load` bench emits as a JSON row. Latencies are kept as raw
-//! samples (a serving run is at most a few hundred thousand requests);
-//! queue depth uses the [`Online`] accumulator.
+//! `serve_load` bench emits as a JSON row. Latencies land in fixed-size
+//! log-bucketed histograms ([`LogHistogram`]) — run-wide, per batch
+//! bucket, and per length bucket — so a serving run's metric memory is
+//! O(1) in request count and a long-lived server can stream stats
+//! forever. Percentiles read from the histogram are accurate to within
+//! one bucket's relative width (≈8%); mean and max stay exact (tracked
+//! alongside the buckets). Queue depth uses the [`Online`] accumulator.
 
 use crate::util::json::{obj, Json};
-use crate::util::stats::{percentile, Online};
+use crate::util::stats::Online;
 use std::collections::BTreeMap;
+
+/// Histogram range: values below land in a dedicated underflow bucket,
+/// values at/above (and NaNs) in an overflow bucket.
+pub const HIST_MIN_SECS: f64 = 1e-6;
+pub const HIST_MAX_SECS: f64 = 100.0;
+/// Interior geometric buckets tiling `[HIST_MIN_SECS, HIST_MAX_SECS)`:
+/// growth `(MAX/MIN)^(1/240) = 1e8^(1/240) ≈ 1.08`, i.e. ≤ ~8% relative
+/// error for any percentile read.
+pub const HIST_BUCKETS: usize = 240;
+const TOTAL_BUCKETS: usize = HIST_BUCKETS + 2;
+
+fn ln_growth() -> f64 {
+    (HIST_MAX_SECS / HIST_MIN_SECS).ln() / HIST_BUCKETS as f64
+}
+
+/// A fixed-size log-bucketed latency histogram. Recording is O(1) and
+/// allocation-free after construction; memory is `TOTAL_BUCKETS`
+/// counters regardless of how many samples land. Mean and max are exact
+/// (a sum and a max ride alongside the buckets); percentiles return the
+/// geometric midpoint of the covering bucket, clamped into the observed
+/// `[min, max]` so `p99 <= max` always holds.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    /// Sum/min/max of the finite samples (NaNs count toward `total`
+    /// and the overflow bucket but are excluded from the moments, so a
+    /// single clock hiccup cannot poison the whole report).
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            counts: vec![0; TOTAL_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn index(v: f64) -> usize {
+        if v.is_nan() || v >= HIST_MAX_SECS {
+            TOTAL_BUCKETS - 1
+        } else if v < HIST_MIN_SECS {
+            0
+        } else {
+            // Interior bucket i covers [MIN·g^(i-1), MIN·g^i).
+            let i = ((v / HIST_MIN_SECS).ln() / ln_growth()) as usize + 1;
+            i.min(HIST_BUCKETS)
+        }
+    }
+
+    /// Geometric midpoint of bucket `i` — the value a percentile read
+    /// reports for samples that landed there.
+    fn representative(i: usize) -> f64 {
+        if i == 0 {
+            HIST_MIN_SECS * 0.5
+        } else if i == TOTAL_BUCKETS - 1 {
+            HIST_MAX_SECS
+        } else {
+            HIST_MIN_SECS * (ln_growth() * (i as f64 - 0.5)).exp()
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        if !v.is_nan() {
+            self.sum += v;
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact mean of the finite samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Exact max of the finite samples (0 when empty).
+    pub fn max_secs(&self) -> f64 {
+        if self.max.is_finite() {
+            self.max
+        } else {
+            0.0
+        }
+    }
+
+    /// Nearest-rank percentile from the buckets, within one bucket's
+    /// relative error of the exact value; clamped into the observed
+    /// `[min, max]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.total - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                let rep = Self::representative(i);
+                // min > max only when every sample was NaN.
+                return if self.min <= self.max { rep.clamp(self.min, self.max) } else { rep };
+            }
+        }
+        self.max_secs()
+    }
+
+    /// Storage footprint in counter slots — constant by construction;
+    /// the O(1)-memory test asserts it never moves.
+    pub fn storage_buckets(&self) -> usize {
+        self.counts.len()
+    }
+}
 
 /// Per-bucket accounting: how many batches ran at this bucket size, how
 /// many real (non-padded) requests they carried, and the stage split —
@@ -22,6 +158,8 @@ pub struct BucketStat {
     pub queue_wait: Online,
     /// Forward-compute seconds per batch executed at this bucket size.
     pub compute: Online,
+    /// End-to-end latency of the real requests in this bucket.
+    pub latency: LogHistogram,
 }
 
 impl Default for BucketStat {
@@ -33,6 +171,7 @@ impl Default for BucketStat {
             requests: 0,
             queue_wait: Online::new(),
             compute: Online::new(),
+            latency: LogHistogram::new(),
         }
     }
 }
@@ -46,18 +185,25 @@ pub struct LenBucketStat {
     pub batches: usize,
     pub requests: usize,
     pub compute: Online,
+    /// End-to-end latency of the real requests in this length bucket.
+    pub latency: LogHistogram,
 }
 
 impl Default for LenBucketStat {
     fn default() -> LenBucketStat {
-        LenBucketStat { batches: 0, requests: 0, compute: Online::new() }
+        LenBucketStat {
+            batches: 0,
+            requests: 0,
+            compute: Online::new(),
+            latency: LogHistogram::new(),
+        }
     }
 }
 
 /// Accumulated by the worker pool during a serving run.
 #[derive(Debug)]
 pub struct ServeStats {
-    latencies: Vec<f64>,
+    latency: LogHistogram,
     queue_depth: Option<Online>,
     buckets: BTreeMap<usize, BucketStat>,
     /// Sequence-length split (empty for fixed-shape models, which record
@@ -77,7 +223,7 @@ impl Default for ServeStats {
 impl ServeStats {
     pub fn new() -> ServeStats {
         ServeStats {
-            latencies: Vec::new(),
+            latency: LogHistogram::new(),
             queue_depth: None,
             buckets: BTreeMap::new(),
             len_buckets: BTreeMap::new(),
@@ -112,6 +258,9 @@ impl ServeStats {
             l.batches += 1;
             l.requests += fill;
             l.compute.push(compute_secs);
+            for &lat in latencies {
+                l.latency.record(lat);
+            }
         }
         let e = self.buckets.entry(bucket).or_default();
         e.batches += 1;
@@ -123,11 +272,23 @@ impl ServeStats {
         e.compute.push(compute_secs);
         self.compute.push(compute_secs);
         self.queue_depth.get_or_insert_with(Online::new).push(depth_after as f64);
-        self.latencies.extend_from_slice(latencies);
+        for &lat in latencies {
+            e.latency.record(lat);
+            self.latency.record(lat);
+        }
     }
 
     pub fn requests(&self) -> usize {
-        self.latencies.len()
+        self.latency.total() as usize
+    }
+
+    /// Total latency-counter slots across every histogram this run
+    /// allocated — grows with the number of *buckets served* (bounded by
+    /// the ladder), never with the number of requests.
+    pub fn latency_storage_buckets(&self) -> usize {
+        self.latency.storage_buckets()
+            + self.buckets.values().map(|b| b.latency.storage_buckets()).sum::<usize>()
+            + self.len_buckets.values().map(|b| b.latency.storage_buckets()).sum::<usize>()
     }
 
     /// Summarise into a report; `wall_secs` is the whole run's wall time
@@ -135,12 +296,8 @@ impl ServeStats {
     /// experiences); `reloads` is the number of hot weight swaps applied
     /// during the run.
     pub fn report(&self, wall_secs: f64, reloads: u64) -> ServeReport {
-        let n = self.latencies.len();
-        let mut sorted = self.latencies.clone();
-        // total_cmp, not partial_cmp().unwrap(): a single NaN sample (a
-        // clock hiccup) must not panic the report; NaNs sort to the end.
-        sorted.sort_by(f64::total_cmp);
-        let pct = |q: f64| if n == 0 { 0.0 } else { percentile(&sorted, q) * 1e3 };
+        let n = self.requests();
+        let pct = |q: f64| self.latency.percentile(q) * 1e3;
         let (qd_mean, qd_max) = match &self.queue_depth {
             Some(o) => (o.mean(), o.max),
             None => (0.0, 0.0),
@@ -157,12 +314,8 @@ impl ServeStats {
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
             p99_ms: pct(0.99),
-            mean_ms: if n == 0 {
-                0.0
-            } else {
-                self.latencies.iter().sum::<f64>() / n as f64 * 1e3
-            },
-            max_ms: sorted.last().copied().unwrap_or(0.0) * 1e3,
+            mean_ms: self.latency.mean() * 1e3,
+            max_ms: self.latency.max_secs() * 1e3,
             queue_depth_mean: qd_mean,
             queue_depth_max: qd_max,
             queue_wait_mean_ms: qw_mean,
@@ -179,10 +332,20 @@ impl ServeStats {
                 .iter()
                 .map(|(&b, s)| (b, bucket_mean(&s.queue_wait), bucket_mean(&s.compute)))
                 .collect(),
+            bucket_p99: self
+                .buckets
+                .iter()
+                .map(|(&b, s)| (b, s.latency.percentile(0.99) * 1e3))
+                .collect(),
             len_buckets: self
                 .len_buckets
                 .iter()
                 .map(|(&lb, s)| (lb, s.batches, s.requests, bucket_mean(&s.compute)))
+                .collect(),
+            len_bucket_p99: self
+                .len_buckets
+                .iter()
+                .map(|(&lb, s)| (lb, s.latency.percentile(0.99) * 1e3))
                 .collect(),
         }
     }
@@ -216,9 +379,15 @@ pub struct ServeReport {
     pub batch_fill: Vec<(usize, usize, f64)>,
     /// Per bucket size: (bucket, mean queue-wait ms, mean compute ms).
     pub bucket_stages: Vec<(usize, f64, f64)>,
+    /// Per bucket size: (bucket, p99 end-to-end latency ms) from the
+    /// per-bucket histogram. Parallels `batch_fill`.
+    pub bucket_p99: Vec<(usize, f64)>,
     /// Per runtime sequence-length bucket: (len bucket, batches, real
     /// requests, mean compute ms). Empty for fixed-shape models.
     pub len_buckets: Vec<(usize, usize, usize, f64)>,
+    /// Per runtime sequence-length bucket: (len bucket, p99 latency ms).
+    /// Parallels `len_buckets`.
+    pub len_bucket_p99: Vec<(usize, f64)>,
 }
 
 impl ServeReport {
@@ -243,7 +412,7 @@ impl ServeReport {
         if self.reloads > 0 {
             s.push_str(&format!("hot weight reloads: {}\n", self.reloads));
         }
-        s.push_str("batch-fill histogram (bucket: batches, mean fill, stage split):\n");
+        s.push_str("batch-fill histogram (bucket: batches, mean fill, stage split, p99):\n");
         for (i, (bucket, batches, fill)) in self.batch_fill.iter().enumerate() {
             s.push_str(&format!(
                 "  b{:<4} {:>6} batches  {:>5.1}% full",
@@ -256,15 +425,22 @@ impl ServeReport {
             if let Some((_, qw, cp)) = self.bucket_stages.get(i) {
                 s.push_str(&format!("  wait {:.3} ms  compute {:.3} ms", qw, cp));
             }
+            if let Some((_, p99)) = self.bucket_p99.get(i) {
+                s.push_str(&format!("  p99 {:.3} ms", p99));
+            }
             s.push('\n');
         }
         if !self.len_buckets.is_empty() {
             s.push_str("length-bucket split (len bucket: batches, requests, compute):\n");
-            for (lb, batches, requests, cp) in &self.len_buckets {
+            for (i, (lb, batches, requests, cp)) in self.len_buckets.iter().enumerate() {
                 s.push_str(&format!(
-                    "  t{:<4} {:>6} batches  {:>6} requests  compute {:.3} ms\n",
+                    "  t{:<4} {:>6} batches  {:>6} requests  compute {:.3} ms",
                     lb, batches, requests, cp
                 ));
+                if let Some((_, p99)) = self.len_bucket_p99.get(i) {
+                    s.push_str(&format!("  p99 {:.3} ms", p99));
+                }
+                s.push('\n');
             }
         }
         s
@@ -283,12 +459,14 @@ impl ServeReport {
                     .get(i)
                     .map(|&(_, qw, cp)| (qw, cp))
                     .unwrap_or((0.0, 0.0));
+                let p99 = self.bucket_p99.get(i).map(|&(_, p)| p).unwrap_or(0.0);
                 obj([
                     ("bucket", (b as f64).into()),
                     ("batches", (n as f64).into()),
                     ("mean_fill", f.into()),
                     ("queue_wait_ms", qw.into()),
                     ("compute_ms", cp.into()),
+                    ("p99_ms", p99.into()),
                 ])
             })
             .collect();
@@ -324,12 +502,16 @@ impl ServeReport {
                 Json::Arr(
                     self.len_buckets
                         .iter()
-                        .map(|&(lb, batches, requests, cp)| {
+                        .enumerate()
+                        .map(|(i, &(lb, batches, requests, cp))| {
+                            let p99 =
+                                self.len_bucket_p99.get(i).map(|&(_, p)| p).unwrap_or(0.0);
                             obj([
                                 ("len_bucket", (lb as f64).into()),
                                 ("batches", (batches as f64).into()),
                                 ("requests", (requests as f64).into()),
                                 ("compute_ms", cp.into()),
+                                ("p99_ms", p99.into()),
                             ])
                         })
                         .collect(),
@@ -342,6 +524,13 @@ impl ServeReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::stats::percentile;
+
+    /// Relative error helper for histogram-vs-exact comparisons: one
+    /// bucket's relative width is ≈8%, so 9% is the contract bound.
+    fn rel_close(got: f64, want: f64) -> bool {
+        (got - want).abs() <= 0.09 * want.abs().max(1e-12)
+    }
 
     #[test]
     fn percentiles_and_histogram() {
@@ -355,15 +544,23 @@ mod tests {
         assert_eq!(r.requests, 7);
         assert_eq!(r.reloads, 2, "reload count flows into the report");
         assert!((r.throughput_rps - 7.0).abs() < 1e-12);
-        assert!((r.p50_ms - 40.0).abs() < 1e-9, "p50 {}", r.p50_ms);
-        assert!((r.max_ms - 70.0).abs() < 1e-9);
-        assert!(r.p95_ms <= r.p99_ms && r.p99_ms <= r.max_ms);
+        // Percentiles come from the log histogram now: within one
+        // bucket's relative error of the exact values.
+        assert!(rel_close(r.p50_ms, 40.0), "p50 {}", r.p50_ms);
+        assert!((r.max_ms - 70.0).abs() < 1e-9, "max stays exact: {}", r.max_ms);
+        assert!(rel_close(r.mean_ms, 280.0 / 7.0), "mean stays exact: {}", r.mean_ms);
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms && r.p99_ms <= r.max_ms);
         // Histogram: b1 with 1 batch 100% full; b4 with 2 batches, fill
         // (4+2)/(2*4) = 75%.
         assert_eq!(r.batch_fill.len(), 2);
         assert_eq!(r.batch_fill[0].0, 1);
         assert!((r.batch_fill[0].2 - 1.0).abs() < 1e-12);
         assert_eq!(r.batch_fill[1], (4, 2, 0.75));
+        // Per-bucket p99 parallels the fill histogram: b1 saw only the
+        // 70 ms request, b4 tops out at 60 ms.
+        assert_eq!(r.bucket_p99.len(), 2);
+        assert!(rel_close(r.bucket_p99[0].1, 70.0), "{}", r.bucket_p99[0].1);
+        assert!(rel_close(r.bucket_p99[1].1, 60.0), "{}", r.bucket_p99[1].1);
         // Queue depth mean over samples 3,1,0.
         assert!((r.queue_depth_mean - 4.0 / 3.0).abs() < 1e-12);
         assert_eq!(r.queue_depth_max, 3.0);
@@ -371,6 +568,80 @@ mod tests {
         let j = r.to_json().to_string_compact();
         assert!(j.contains("\"throughput_rps\"") && j.contains("\"p99_ms\""), "{}", j);
         assert!(j.contains("\"queue_wait\"") && j.contains("\"compute\""), "{}", j);
+    }
+
+    #[test]
+    fn histogram_percentiles_track_exact_within_bucket_error() {
+        // 500 log-uniform latencies across 1 ms .. 1 s — three decades,
+        // the range a serving run actually spans. The histogram's
+        // percentile must track the exact (sorted-sample) percentile to
+        // within one bucket's relative width at every probed quantile.
+        let samples: Vec<f64> =
+            (0..500).map(|i| 0.001 * 1000.0f64.powf(i as f64 / 499.0)).collect();
+        let mut hist = LogHistogram::new();
+        for &s in &samples {
+            hist.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.10, 0.50, 0.90, 0.95, 0.99] {
+            let exact = percentile(&sorted, q);
+            let got = hist.percentile(q);
+            assert!(
+                rel_close(got, exact),
+                "q={}: histogram {} vs exact {}",
+                q,
+                got,
+                exact
+            );
+        }
+        assert_eq!(hist.total(), 500);
+        assert!((hist.max_secs() - 1.0).abs() < 1e-12, "max exact");
+        let exact_mean = samples.iter().sum::<f64>() / 500.0;
+        assert!((hist.mean() - exact_mean).abs() < 1e-12, "mean exact");
+    }
+
+    #[test]
+    fn histogram_edges_underflow_overflow() {
+        let mut h = LogHistogram::new();
+        h.record(0.0); // below range → underflow bucket
+        h.record(1e9); // above range → overflow bucket
+        h.record(0.010);
+        assert_eq!(h.total(), 3);
+        // Percentile output is clamped into the observed [min, max].
+        assert!(h.percentile(0.0) >= 0.0);
+        assert!(h.percentile(1.0) <= 1e9);
+        assert_eq!(h.max_secs(), 1e9);
+        // An empty histogram reports zeros, not NaN.
+        let e = LogHistogram::new();
+        assert_eq!(e.percentile(0.5), 0.0);
+        assert_eq!(e.mean(), 0.0);
+        assert_eq!(e.max_secs(), 0.0);
+    }
+
+    #[test]
+    fn latency_storage_is_constant_in_request_count() {
+        // The whole point of the histogram swap: metric memory must not
+        // grow with served requests. Record 100 then 10_000 more
+        // requests into the same bucket shape and assert the counter
+        // storage is bit-for-bit the same size.
+        let mut st = ServeStats::new();
+        let lat = [0.005; 4];
+        let qw = [0.001; 4];
+        for _ in 0..25 {
+            st.record_batch(4, 8, 4, 0, &lat, &qw, 0.003);
+        }
+        let small = st.latency_storage_buckets();
+        assert_eq!(st.requests(), 100);
+        for _ in 0..2500 {
+            st.record_batch(4, 8, 4, 0, &lat, &qw, 0.003);
+        }
+        assert_eq!(st.requests(), 10_100);
+        assert_eq!(
+            st.latency_storage_buckets(),
+            small,
+            "latency storage grew with request count"
+        );
     }
 
     #[test]
@@ -401,13 +672,14 @@ mod tests {
     #[test]
     fn nan_latency_sample_does_not_panic() {
         let mut st = ServeStats::new();
-        // One corrupt (NaN) latency among three good ones: the old
-        // partial_cmp().unwrap() sort comparator panicked here.
+        // One corrupt (NaN) latency among three good ones: it must count
+        // toward the request total (overflow bucket) without poisoning
+        // the finite stats.
         st.record_batch(4, 0, 4, 0, &[0.010, 0.020, f64::NAN, 0.030], &[0.001; 4], 0.005);
         let r = st.report(1.0, 0);
         assert_eq!(r.requests, 4);
-        // NaN sorts last under total_cmp, so the median stays finite.
         assert!(r.p50_ms.is_finite(), "{}", r.p50_ms);
+        assert!((r.max_ms - 30.0).abs() < 1e-9, "max ignores the NaN: {}", r.max_ms);
     }
 
     #[test]
@@ -427,10 +699,22 @@ mod tests {
         let (lb, batches, requests, cp) = r.len_buckets[1];
         assert_eq!((lb, batches, requests), (8, 2, 6));
         assert!((cp - 6.0).abs() < 1e-9, "{}", cp);
+        // Per-length-bucket p99 parallels the split (all requests here
+        // were 10 ms).
+        assert_eq!(r.len_bucket_p99.len(), 2);
+        assert!(rel_close(r.len_bucket_p99[0].1, 10.0), "{}", r.len_bucket_p99[0].1);
         // The JSON row carries per-entry "len_bucket" keys (the CI smoke
         // greps for them) and the render mentions the split.
         let j = r.to_json().to_string_compact();
         assert_eq!(j.matches("\"len_bucket\"").count(), 2, "{}", j);
+        // One run-wide p99_ms plus one per batch bucket and length
+        // bucket row.
+        assert_eq!(
+            j.matches("\"p99_ms\"").count(),
+            1 + r.batch_fill.len() + r.len_buckets.len(),
+            "{}",
+            j
+        );
         assert!(r.render().contains("length-bucket split"), "{}", r.render());
         // Fixed-shape-only runs keep the split empty.
         let mut fixed = ServeStats::new();

@@ -45,6 +45,10 @@
 //! * [`watch`]   — `--watch-model`: a file-polling thread that applies
 //!   a changed artifact file through the hot-reload path, so a
 //!   long-running server tracks a concurrent trainer's checkpoints.
+//! * [`admin`]   — `--admin-sock`: a Unix-domain-socket control endpoint
+//!   speaking line-delimited JSON (`stats` / `trace` / `reload` /
+//!   `drain`) over an [`AdminHandle`] — the push-style superset of the
+//!   poll-only watcher.
 //!
 //! Forward-only plans cover all three of the paper's workload classes —
 //! MLP, CNN, and RNN (a stack of LSTM cells + classifier head,
@@ -60,13 +64,15 @@
 //! run-config (see `examples/serve.json`; `serve --model-path <artifact>`
 //! serves trained weights) and the `serve_load` bench.
 
+pub mod admin;
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
 pub mod model;
 pub mod watch;
 
-pub use batcher::{ReloadHandle, Response, ServeOpts, Server};
+pub use admin::AdminServer;
+pub use batcher::{AdminHandle, ReloadHandle, Response, ServeOpts, Server};
 pub use loadgen::{
     drive_open_loop, drive_open_loop_every, run_open_loop, run_open_loop_with, seq_request_len,
     seq_request_source, LoadSpec,

@@ -62,6 +62,7 @@ use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 /// Which network a serving model executes.
 #[derive(Debug, Clone)]
@@ -152,6 +153,20 @@ struct WeightSet {
     lstm: Vec<LstmSharedWeights>,
 }
 
+/// One layer's compute interval inside a forward pass, recorded only when
+/// the span tracer is installed ([`crate::telemetry::trace::enabled`]).
+/// The batcher turns these into per-layer trace spans nested under the
+/// batch's compute span.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerMark {
+    /// Layer family: `"fc"`, `"conv"`, `"pool"`, `"lstm"`, or `"head"`.
+    pub label: &'static str,
+    /// Position within the plan (0-based, in execution order).
+    pub index: u32,
+    pub start: Instant,
+    pub dur: Duration,
+}
+
 /// Per-worker reusable buffers for [`InferenceModel::forward_with`]. Each
 /// buffer grows to the high-water mark across the buckets the worker has
 /// executed and then stops allocating — the serving steady state performs
@@ -168,6 +183,11 @@ pub struct ServeScratch {
     /// sized at the config's full capacity `T` per bucket — prefix runs
     /// over any length bucket reuse the same buffers.
     lstm: Vec<LstmWorkspace>,
+    /// Per-layer compute intervals of the most recent forward pass.
+    /// Empty unless the span tracer is installed; the Vec's capacity
+    /// stabilizes at the plan's layer count, so steady-state tracing
+    /// stays allocation-free too.
+    pub layer_marks: Vec<LayerMark>,
     grows: usize,
 }
 
@@ -766,6 +786,8 @@ impl InferenceModel {
         scratch: &'s mut ServeScratch,
     ) -> &'s [f32] {
         assert_eq!(x.len(), bucket * self.input_dim(), "input shape mismatch");
+        let tracing = crate::telemetry::trace::enabled();
+        scratch.layer_marks.clear();
         let ws: Arc<WeightSet> = self.weights.read().unwrap().clone();
         let plan = self
             .plans
@@ -780,7 +802,8 @@ impl InferenceModel {
                 layout::pack_act_2d_into(x, bucket, cfg0.c, cfg0.bn, cfg0.bc, &mut scratch.a);
                 // Ping-pong between the two activation buffers.
                 let mut cur_in_a = true;
-                for (fc, w) in fcs.iter().zip(&ws.fc) {
+                for (i, (fc, w)) in fcs.iter().zip(&ws.fc).enumerate() {
+                    let t0 = tracing.then(Instant::now);
                     let ylen = bucket * fc.cfg.k;
                     if cur_in_a {
                         ensure(&mut scratch.b, ylen, &mut scratch.grows);
@@ -790,6 +813,14 @@ impl InferenceModel {
                         fc.forward_shared(&scratch.b, w, &mut scratch.a);
                     }
                     cur_in_a = !cur_in_a;
+                    if let Some(t0) = t0 {
+                        scratch.layer_marks.push(LayerMark {
+                            label: "fc",
+                            index: i as u32,
+                            start: t0,
+                            dur: t0.elapsed(),
+                        });
+                    }
                 }
                 let lcfg = fcs.last().unwrap().cfg;
                 ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
@@ -818,8 +849,17 @@ impl InferenceModel {
                     &mut scratch.a,
                 );
                 for (i, (prim, w)) in convs.iter().zip(&ws.conv).enumerate() {
+                    let t0 = tracing.then(Instant::now);
                     ensure(&mut scratch.b, prim.cfg.output_len(), &mut scratch.grows);
                     prim.forward_shared(&scratch.a, w, &mut scratch.b);
+                    if let Some(t0) = t0 {
+                        scratch.layer_marks.push(LayerMark {
+                            label: "conv",
+                            index: i as u32,
+                            start: t0,
+                            dur: t0.elapsed(),
+                        });
+                    }
                     if let Some(next) = convs.get(i + 1) {
                         // Chain invariant: the output is the consumer's
                         // unpadded input; only the border re-pad remains.
@@ -839,8 +879,17 @@ impl InferenceModel {
                     }
                 }
                 // The last conv's output is in `b`.
+                let t0 = tracing.then(Instant::now);
                 ensure(&mut scratch.pool_y, pool.cfg.output_len(), &mut scratch.grows);
                 pool.forward(&scratch.b, &mut scratch.pool_y);
+                if let Some(t0) = t0 {
+                    scratch.layer_marks.push(LayerMark {
+                        label: "pool",
+                        index: convs.len() as u32,
+                        start: t0,
+                        dur: t0.elapsed(),
+                    });
+                }
                 let hcfg = head.cfg;
                 ensure(&mut scratch.head_x, bucket * hcfg.c, &mut scratch.grows);
                 layout::pack_act_2d_into(
@@ -851,8 +900,17 @@ impl InferenceModel {
                     hcfg.bc,
                     &mut scratch.head_x,
                 );
+                let t0 = tracing.then(Instant::now);
                 ensure(&mut scratch.head_y, bucket * hcfg.k, &mut scratch.grows);
                 head.forward_shared(&scratch.head_x, &ws.fc[0], &mut scratch.head_y);
+                if let Some(t0) = t0 {
+                    scratch.layer_marks.push(LayerMark {
+                        label: "head",
+                        index: convs.len() as u32 + 1,
+                        start: t0,
+                        dur: t0.elapsed(),
+                    });
+                }
                 ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
                 layout::unpack_act_2d_into(
                     &scratch.head_y,
@@ -951,6 +1009,8 @@ impl InferenceModel {
         let k = cells[0].cfg.k;
         let t_cap = cells[0].cfg.t;
         let nk = bucket * k;
+        let tracing = crate::telemetry::trace::enabled();
+        scratch.layer_marks.clear();
         // Rows are flattened [t_run][C] sequences; the cell wants
         // time-major [t_run][bucket][C].
         ensure(&mut scratch.a, t_run * bucket * c, &mut scratch.grows);
@@ -969,6 +1029,7 @@ impl InferenceModel {
             scratch.lstm.resize_with(cells.len(), LstmWorkspace::default);
         }
         for li in 0..cells.len() {
+            let t0 = tracing.then(Instant::now);
             let (below, rest) = scratch.lstm.split_at_mut(li);
             let ws_l = &mut rest[0];
             ensure(&mut ws_l.gates, GATES * t_cap * nk, &mut scratch.grows);
@@ -980,6 +1041,14 @@ impl InferenceModel {
             let x_in: &[f32] =
                 if li == 0 { &scratch.a } else { &below[li - 1].h[nk..] };
             cells[li].forward_shared_t(x_in, None, None, &ws.lstm[li], ws_l, t_run);
+            if let Some(t0) = t0 {
+                scratch.layer_marks.push(LayerMark {
+                    label: "lstm",
+                    index: li as u32,
+                    start: t0,
+                    dur: t0.elapsed(),
+                });
+            }
         }
         let top = scratch.lstm[cells.len() - 1].h.as_slice();
         let hcfg = head.cfg;
@@ -1017,8 +1086,17 @@ impl InferenceModel {
                 );
             }
         }
+        let t0 = tracing.then(Instant::now);
         ensure(&mut scratch.head_y, bucket * hcfg.k, &mut scratch.grows);
         head.forward_shared(&scratch.head_x, &ws.fc[0], &mut scratch.head_y);
+        if let Some(t0) = t0 {
+            scratch.layer_marks.push(LayerMark {
+                label: "head",
+                index: cells.len() as u32,
+                start: t0,
+                dur: t0.elapsed(),
+            });
+        }
         ensure(&mut scratch.out, bucket * classes, &mut scratch.grows);
         layout::unpack_act_2d_into(
             &scratch.head_y,

@@ -17,9 +17,17 @@
 //!   GFLOPS and efficiency-vs-roofline using the measured host peak from
 //!   [`crate::perfmodel`].
 //!
+//! A third piece, the span tracer, lives in [`trace`]: where the
+//! profiler sums microseconds per primitive, the tracer records *causal
+//! spans* (per-request, per-batch, per-training-step) into bounded ring
+//! buffers and exports Chrome trace-event JSON. It follows the same
+//! install/enabled gating contract as the profiler.
+//!
 //! Instrumentation never touches the math: enabling the profiler changes
 //! timing side channels only, so instrumented and uninstrumented runs are
 //! bit-identical (tested below).
+
+pub mod trace;
 
 use crate::perfmodel::{host_platform, roofline_secs};
 use crate::util::json::{obj, Json};

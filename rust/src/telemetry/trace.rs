@@ -1,0 +1,657 @@
+//! Gated span tracer: the causal layer on top of the profiler's sums.
+//!
+//! The sibling profiler ([`crate::telemetry`]) answers "where did the
+//! microseconds go *in aggregate*"; this module answers "where did
+//! *this request* (or *this training step*) spend its time". The same
+//! contract applies:
+//!
+//! * **Explicitly installed.** [`install`] creates a process-global
+//!   [`Tracer`]; when none is installed every instrumentation site pays
+//!   a single branch and nothing else — no clock reads, no allocation.
+//!   Enabling tracing must never change the math (the training and
+//!   serving bit-identity tests cover it).
+//! * **Zero heap allocation on the hot path.** Spans are `Copy` values
+//!   accumulated into a stack-resident [`TraceGroup`] (a fixed inline
+//!   array) and pushed into a pre-allocated per-worker [`SpanRing`] in
+//!   one mutex-guarded `VecDeque` operation per *group*, not per span.
+//! * **Deterministic sampling.** A request is traced iff
+//!   `trace_id % sample_every == 0`. Request ids are minted sequentially
+//!   at `Server::submit`, so for a fixed load seed the sampled set is
+//!   exactly reproducible.
+//! * **Whole-trace eviction.** Rings store complete groups; overflow
+//!   drops the *oldest group* and counts it. A drained trace never
+//!   contains a partial span set for a request.
+//!
+//! Export is Chrome trace-event JSON (`{"traceEvents": [...]}`) with
+//! `ph:"X"` complete events (`ts`/`dur` in microseconds since the
+//! tracer epoch) plus `ph:"s"`/`ph:"f"` flow events linking each batch
+//! span to the member request spans it served — load the file in
+//! Perfetto or chrome://tracing and follow the arrows.
+
+use crate::util::json::{obj, Json};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Every span family the tracer knows. The `cat` string groups spans
+/// into Chrome trace categories (the CI gate asserts a dump carries at
+/// least two distinct categories, i.e. tracing reached more than one
+/// subsystem layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole request life: enqueue → respond (serve path).
+    Request,
+    /// Enqueue → dequeue: time spent waiting in a length/batch bucket.
+    QueueWait,
+    /// Dequeue → respond: time inside the formed batch.
+    InBatch,
+    /// Whole batch life on a worker: dequeue → responses sent.
+    Batch,
+    /// Batch formation: dequeue → padded input staged.
+    BatchForm,
+    /// Batch compute: the bucket plan's forward pass.
+    BatchCompute,
+    /// One layer of the forward pass (fc / conv / pool / lstm / head).
+    Layer,
+    /// Training forward pass (per worker).
+    Fwd,
+    /// Training backward pass (per worker).
+    BwdData,
+    /// Ring allreduce over worker gradients.
+    Allreduce,
+    /// Optimizer update.
+    Upd,
+    /// The data-parallel worker-pool region of one step (all fwd+bwd).
+    Pool,
+    /// One whole training step.
+    Step,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::InBatch => "in_batch",
+            SpanKind::Batch => "batch",
+            SpanKind::BatchForm => "form",
+            SpanKind::BatchCompute => "compute",
+            SpanKind::Layer => "layer",
+            SpanKind::Fwd => "fwd",
+            SpanKind::BwdData => "bwd_data",
+            SpanKind::Allreduce => "allreduce",
+            SpanKind::Upd => "upd",
+            SpanKind::Pool => "pool",
+            SpanKind::Step => "step",
+        }
+    }
+
+    /// Chrome trace category. One category per subsystem layer.
+    pub fn cat(self) -> &'static str {
+        match self {
+            SpanKind::Request | SpanKind::QueueWait | SpanKind::InBatch => "serve.request",
+            SpanKind::Batch | SpanKind::BatchForm | SpanKind::BatchCompute => "serve.batch",
+            SpanKind::Layer => "serve.layer",
+            SpanKind::Fwd => "train.fwd",
+            SpanKind::BwdData => "train.bwd",
+            SpanKind::Allreduce => "train.allreduce",
+            SpanKind::Upd => "train.upd",
+            SpanKind::Pool => "train.pool",
+            SpanKind::Step => "train.step",
+        }
+    }
+}
+
+/// One recorded span. `Copy` and fixed-size by construction: the hot
+/// path moves these by value into inline arrays, never boxes them.
+/// `a`/`b` are kind-specific small payloads (bucket/fill, layer index,
+/// worker id, ...) surfaced under `args` in the export.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    /// Optional static display name override ("" → `kind.name()`);
+    /// layer spans use it to show "fc" / "conv" / "lstm" / ...
+    pub label: &'static str,
+    pub trace_id: u64,
+    /// Lane in the trace viewer: serve/train worker index.
+    pub tid: u32,
+    /// Microseconds since the tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub a: u32,
+    pub b: u32,
+}
+
+impl SpanEvent {
+    pub fn display_name(&self) -> &'static str {
+        if self.label.is_empty() {
+            self.kind.name()
+        } else {
+            self.label
+        }
+    }
+
+    /// End of the span in epoch microseconds.
+    pub fn end_us(&self) -> u64 {
+        self.start_us + self.dur_us
+    }
+}
+
+const ZERO_SPAN: SpanEvent = SpanEvent {
+    kind: SpanKind::Request,
+    label: "",
+    trace_id: 0,
+    tid: 0,
+    start_us: 0,
+    dur_us: 0,
+    a: 0,
+    b: 0,
+};
+
+/// `inner` strictly inside `outer` (inclusive bounds) — the
+/// well-nestedness predicate the trace-correctness tests assert.
+pub fn well_nested(outer: &SpanEvent, inner: &SpanEvent) -> bool {
+    inner.start_us >= outer.start_us && inner.end_us() <= outer.end_us()
+}
+
+/// Spans one group can hold. A serve batch group carries
+/// batch + form + compute + one span per layer; 16 covers every model
+/// this repo builds, and overflow is *counted*, never partially stored.
+pub const MAX_GROUP_SPANS: usize = 16;
+
+/// All spans of one trace (one sampled request, one batch, one training
+/// step), recorded atomically: a group enters the ring complete and
+/// leaves it complete. Fixed-size and `Copy` so building one is pure
+/// stack work.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceGroup {
+    spans: [SpanEvent; MAX_GROUP_SPANS],
+    len: u32,
+    /// Cross-group link: for request groups, the batch trace id the
+    /// request was served in (0 = none). The exporter turns it into a
+    /// Chrome flow arrow batch → request.
+    pub link: u64,
+    /// Spans that did not fit in the inline array (dropped whole).
+    pub truncated: u32,
+}
+
+impl TraceGroup {
+    pub fn new(link: u64) -> TraceGroup {
+        TraceGroup { spans: [ZERO_SPAN; MAX_GROUP_SPANS], len: 0, link, truncated: 0 }
+    }
+
+    pub fn push(&mut self, span: SpanEvent) {
+        if (self.len as usize) < MAX_GROUP_SPANS {
+            self.spans[self.len as usize] = span;
+            self.len += 1;
+        } else {
+            self.truncated += 1;
+        }
+    }
+
+    pub fn spans(&self) -> &[SpanEvent] {
+        &self.spans[..self.len as usize]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The group's identity: its first span's trace id (0 when empty).
+    pub fn trace_id(&self) -> u64 {
+        self.spans().first().map(|s| s.trace_id).unwrap_or(0)
+    }
+
+    pub fn find(&self, kind: SpanKind) -> Option<&SpanEvent> {
+        self.spans().iter().find(|s| s.kind == kind)
+    }
+}
+
+/// A fixed-capacity ring of whole trace groups. One per worker thread;
+/// the only shared state is a mutex taken once per *group* push (a
+/// request respond or a batch completion — far off the per-span path).
+#[derive(Debug)]
+pub struct SpanRing {
+    inner: Mutex<RingInner>,
+}
+
+#[derive(Debug)]
+struct RingInner {
+    groups: VecDeque<TraceGroup>,
+    cap: usize,
+    dropped_groups: u64,
+}
+
+impl SpanRing {
+    fn with_capacity(cap: usize) -> SpanRing {
+        assert!(cap >= 1, "ring capacity must be >= 1");
+        SpanRing {
+            inner: Mutex::new(RingInner {
+                // Pre-allocated: once full, evict-then-push never
+                // reallocates, so the steady state is allocation-free.
+                groups: VecDeque::with_capacity(cap),
+                cap,
+                dropped_groups: 0,
+            }),
+        }
+    }
+
+    /// Push a complete group; on overflow the *oldest whole group* is
+    /// evicted (and counted) — never individual spans.
+    pub fn push(&self, g: TraceGroup) {
+        if g.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.groups.len() == inner.cap {
+            inner.groups.pop_front();
+            inner.dropped_groups += 1;
+        }
+        inner.groups.push_back(g);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take everything out (oldest first) and reset the drop counter.
+    pub fn drain(&self) -> (Vec<TraceGroup>, u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let dropped = inner.dropped_groups;
+        inner.dropped_groups = 0;
+        (inner.groups.drain(..).collect(), dropped)
+    }
+}
+
+/// Everything a [`Tracer::drain`] returned: groups oldest-first per
+/// ring, plus how many whole groups overflow evicted since last drain.
+#[derive(Debug, Default)]
+pub struct Drained {
+    pub groups: Vec<TraceGroup>,
+    pub dropped_groups: u64,
+}
+
+impl Drained {
+    pub fn to_chrome(&self) -> Json {
+        chrome_trace_with(&self.groups, self.dropped_groups)
+    }
+}
+
+/// The process-global trace plane: an epoch for timestamps, the
+/// sampling modulus, and the registry of per-worker rings.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    sample_every: u64,
+    ring_cap: usize,
+    rings: Mutex<Vec<Arc<SpanRing>>>,
+    batch_seq: AtomicU64,
+    step_seq: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(sample_every: u64, ring_cap: usize) -> Tracer {
+        assert!(sample_every >= 1, "sample_every must be >= 1");
+        Tracer {
+            epoch: Instant::now(),
+            sample_every,
+            ring_cap,
+            rings: Mutex::new(Vec::new()),
+            batch_seq: AtomicU64::new(0),
+            step_seq: AtomicU64::new(0),
+        }
+    }
+
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Deterministic 1-in-N sampling keyed off the trace id. Ids are
+    /// minted sequentially at submit, so a fixed load seed yields a
+    /// fixed sampled set.
+    pub fn sampled(&self, trace_id: u64) -> bool {
+        trace_id % self.sample_every == 0
+    }
+
+    /// Register a fresh ring (call once per worker thread).
+    pub fn ring(&self) -> Arc<SpanRing> {
+        let r = Arc::new(SpanRing::with_capacity(self.ring_cap));
+        self.rings.lock().unwrap().push(r.clone());
+        r
+    }
+
+    /// Microseconds from the tracer epoch to `t`, saturating to 0 for
+    /// instants captured before install.
+    pub fn us_since(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch).map(|d| d.as_micros() as u64).unwrap_or(0)
+    }
+
+    /// `(start_us, dur_us)` for a `[start, end]` interval.
+    pub fn span_us(&self, start: Instant, end: Instant) -> (u64, u64) {
+        let s = self.us_since(start);
+        (s, self.us_since(end).saturating_sub(s))
+    }
+
+    /// Mint a nonzero batch trace id (0 is the "no link" sentinel).
+    pub fn next_batch_id(&self) -> u64 {
+        self.batch_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Mint a training-step trace id (sequential from 0, so step
+    /// sampling is deterministic too).
+    pub fn next_step_id(&self) -> u64 {
+        self.step_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Drain every registered ring (registration order, oldest first
+    /// within a ring).
+    pub fn drain(&self) -> Drained {
+        let rings = self.rings.lock().unwrap().clone();
+        let mut out = Drained::default();
+        for r in rings {
+            let (groups, dropped) = r.drain();
+            out.groups.extend(groups);
+            out.dropped_groups += dropped;
+        }
+        out
+    }
+}
+
+/// Serialize groups as a Chrome trace-event document.
+pub fn chrome_trace(groups: &[TraceGroup]) -> Json {
+    chrome_trace_with(groups, 0)
+}
+
+fn chrome_trace_with(groups: &[TraceGroup], dropped_groups: u64) -> Json {
+    let mut events = Vec::new();
+    for g in groups {
+        for s in g.spans() {
+            events.push(obj([
+                ("name", s.display_name().into()),
+                ("cat", s.kind.cat().into()),
+                ("ph", "X".into()),
+                ("ts", (s.start_us as f64).into()),
+                ("dur", (s.dur_us as f64).into()),
+                ("pid", 1usize.into()),
+                ("tid", (s.tid as usize).into()),
+                (
+                    "args",
+                    obj([
+                        ("trace_id", (s.trace_id as f64).into()),
+                        ("a", (s.a as f64).into()),
+                        ("b", (s.b as f64).into()),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    // Flow arrows: each sampled request group links (via `link`) to the
+    // batch group that served it. The start event rides inside the
+    // batch span's slice; the finish binds to the request span's end
+    // (`bp:"e"`). Skip links whose batch group was evicted — a dangling
+    // arrow is worse than none.
+    let batches: BTreeMap<u64, &TraceGroup> = groups
+        .iter()
+        .filter(|g| g.find(SpanKind::Batch).is_some())
+        .map(|g| (g.trace_id(), g))
+        .collect();
+    for g in groups {
+        if g.link == 0 {
+            continue;
+        }
+        let (Some(req), Some(bg)) = (g.find(SpanKind::Request), batches.get(&g.link)) else {
+            continue;
+        };
+        let bspan = bg.find(SpanKind::Batch).unwrap();
+        events.push(obj([
+            ("name", "served_in".into()),
+            ("cat", "flow".into()),
+            ("ph", "s".into()),
+            ("id", (req.trace_id as f64).into()),
+            ("ts", (bspan.start_us as f64).into()),
+            ("pid", 1usize.into()),
+            ("tid", (bspan.tid as usize).into()),
+        ]));
+        events.push(obj([
+            ("name", "served_in".into()),
+            ("cat", "flow".into()),
+            ("ph", "f".into()),
+            ("bp", "e".into()),
+            ("id", (req.trace_id as f64).into()),
+            ("ts", (req.end_us() as f64).into()),
+            ("pid", 1usize.into()),
+            ("tid", (req.tid as usize).into()),
+        ]));
+    }
+    obj([
+        ("traceEvents", Json::Arr(events)),
+        ("dropped_groups", (dropped_groups as f64).into()),
+    ])
+}
+
+// ---- process-global install, mirroring the profiler's contract ----------
+
+pub const DEFAULT_SAMPLE_EVERY: u64 = 1;
+pub const DEFAULT_RING_CAP: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACER: Mutex<Option<Arc<Tracer>>> = Mutex::new(None);
+
+/// Install a fresh global tracer and return it. Workers that start from
+/// now on pick it up; like the profiler, already-running workers keep
+/// the tracer (or the `None`) they captured at thread start.
+pub fn install(sample_every: u64, ring_cap: usize) -> Arc<Tracer> {
+    let t = Arc::new(Tracer::new(sample_every, ring_cap));
+    *TRACER.lock().unwrap() = Some(t.clone());
+    ENABLED.store(true, Ordering::Release);
+    t
+}
+
+/// Remove the global tracer (test isolation, not mid-run toggling).
+pub fn uninstall() {
+    ENABLED.store(false, Ordering::Release);
+    *TRACER.lock().unwrap() = None;
+}
+
+/// Whether a tracer is installed (one atomic load — the entire cost of
+/// a disabled instrumentation site).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// The installed tracer, if any. Capture once per worker thread, not
+/// per event.
+pub fn current() -> Option<Arc<Tracer>> {
+    if !enabled() {
+        return None;
+    }
+    TRACER.lock().unwrap().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(kind: SpanKind, trace_id: u64, start_us: u64, dur_us: u64) -> SpanEvent {
+        SpanEvent { kind, label: "", trace_id, tid: 0, start_us, dur_us, a: 0, b: 0 }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_by_id() {
+        let t = Tracer::new(4, 8);
+        assert!(t.sampled(0) && t.sampled(4) && t.sampled(8));
+        assert!(!t.sampled(1) && !t.sampled(3) && !t.sampled(7));
+        // Same modulus, same decisions — the property the fixed-seed
+        // load test builds on.
+        let u = Tracer::new(4, 8);
+        for id in 0..64 {
+            assert_eq!(t.sampled(id), u.sampled(id));
+        }
+        let every = Tracer::new(1, 8);
+        assert!((0..64).all(|id| every.sampled(id)));
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_whole_groups() {
+        let ring = SpanRing::with_capacity(3);
+        for id in 0..5u64 {
+            let mut g = TraceGroup::new(0);
+            g.push(span(SpanKind::Request, id, id * 10, 5));
+            g.push(span(SpanKind::QueueWait, id, id * 10, 2));
+            ring.push(g);
+        }
+        let (groups, dropped) = ring.drain();
+        assert_eq!(dropped, 2);
+        let ids: Vec<u64> = groups.iter().map(|g| g.trace_id()).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest evicted first");
+        // Whole-trace eviction: every surviving group still carries its
+        // complete span set.
+        assert!(groups.iter().all(|g| g.spans().len() == 2));
+        let (again, dropped2) = ring.drain();
+        assert!(again.is_empty());
+        assert_eq!(dropped2, 0, "drop counter resets on drain");
+    }
+
+    #[test]
+    fn group_truncates_beyond_capacity_never_partial() {
+        let mut g = TraceGroup::new(0);
+        for i in 0..(MAX_GROUP_SPANS + 3) {
+            g.push(span(SpanKind::Layer, 1, i as u64, 1));
+        }
+        assert_eq!(g.spans().len(), MAX_GROUP_SPANS);
+        assert_eq!(g.truncated, 3);
+    }
+
+    #[test]
+    fn empty_groups_never_enter_the_ring() {
+        let ring = SpanRing::with_capacity(2);
+        ring.push(TraceGroup::new(0));
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn span_bounds_and_nesting() {
+        let outer = span(SpanKind::Request, 1, 10, 20);
+        let inner = span(SpanKind::QueueWait, 1, 12, 5);
+        let late = span(SpanKind::InBatch, 1, 25, 10);
+        assert!(well_nested(&outer, &inner));
+        assert!(!well_nested(&outer, &late));
+        assert_eq!(outer.end_us(), 30);
+    }
+
+    #[test]
+    fn us_since_saturates_before_epoch() {
+        let before = Instant::now();
+        let t = Tracer::new(1, 8);
+        assert_eq!(t.us_since(before), 0);
+        let (s, d) = t.span_us(before, before);
+        assert_eq!((s, d), (0, 0));
+    }
+
+    #[test]
+    fn batch_and_step_ids_are_sequential() {
+        let t = Tracer::new(1, 8);
+        assert_eq!(t.next_batch_id(), 1, "batch ids start nonzero (0 = no link)");
+        assert_eq!(t.next_batch_id(), 2);
+        assert_eq!(t.next_step_id(), 0);
+        assert_eq!(t.next_step_id(), 1);
+    }
+
+    #[test]
+    fn chrome_export_shape_and_flow_links() {
+        let batch_id = 7u64;
+        let mut bg = TraceGroup::new(0);
+        bg.push(SpanEvent {
+            kind: SpanKind::Batch,
+            label: "",
+            trace_id: batch_id,
+            tid: 1,
+            start_us: 100,
+            dur_us: 50,
+            a: 8,
+            b: 6,
+        });
+        bg.push(span(SpanKind::BatchForm, batch_id, 100, 10));
+        bg.push(SpanEvent {
+            kind: SpanKind::Layer,
+            label: "fc",
+            trace_id: batch_id,
+            tid: 1,
+            start_us: 115,
+            dur_us: 20,
+            a: 0,
+            b: 0,
+        });
+        let mut rg = TraceGroup::new(batch_id);
+        rg.push(span(SpanKind::Request, 4, 90, 70));
+        rg.push(span(SpanKind::QueueWait, 4, 90, 10));
+        let doc = chrome_trace(&[bg, rg]);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 5 duration events + 1 flow start + 1 flow finish.
+        assert_eq!(events.len(), 7);
+        let cats: std::collections::BTreeSet<&str> = events
+            .iter()
+            .filter_map(|e| e.get("cat").and_then(|c| c.as_str()))
+            .collect();
+        assert!(cats.len() >= 3, "multiple span categories: {:?}", cats);
+        for e in events {
+            assert!(e.get("name").is_some() && e.get("ph").is_some());
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            assert!(e.get("pid").is_some() && e.get("tid").is_some());
+        }
+        let layer = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("fc"))
+            .expect("layer span uses its label as the display name");
+        assert_eq!(layer.get("cat").unwrap().as_str(), Some("serve.layer"));
+        let start = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("s"))
+            .expect("flow start present");
+        let finish = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("f"))
+            .expect("flow finish present");
+        assert_eq!(start.get("id"), finish.get("id"), "flow ids pair up");
+        assert_eq!(start.get("id").unwrap().as_f64(), Some(4.0), "flow id = request trace id");
+        assert_eq!(finish.get("ts").unwrap().as_f64(), Some(160.0), "finish at request end");
+        // The whole document round-trips through the JSON writer/parser.
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(parsed, doc);
+    }
+
+    #[test]
+    fn flow_skipped_when_batch_group_evicted() {
+        let mut rg = TraceGroup::new(99); // links to a batch nobody kept
+        rg.push(span(SpanKind::Request, 4, 90, 70));
+        let doc = chrome_trace(&[rg]);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1, "no dangling flow arrows");
+    }
+
+    #[test]
+    fn install_gating() {
+        let _g = crate::telemetry::test_lock();
+        uninstall();
+        assert!(!enabled());
+        assert!(current().is_none());
+        let t = install(2, 16);
+        assert!(enabled());
+        assert!(current().is_some());
+        assert_eq!(current().unwrap().sample_every(), 2);
+        let ring = t.ring();
+        let mut g = TraceGroup::new(0);
+        g.push(span(SpanKind::Step, 0, 0, 5));
+        ring.push(g);
+        let d = t.drain();
+        assert_eq!(d.groups.len(), 1);
+        assert_eq!(d.dropped_groups, 0);
+        uninstall();
+        assert!(current().is_none());
+    }
+}

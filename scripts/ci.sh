@@ -51,6 +51,44 @@ test -f train_metrics.jsonl
 ./target/release/brgemm-dl serve --model-path checkpoints/mlp.bin \
     --min-accuracy 0.5 --requests 300 --rate 50000 --serve-workers 2
 
+echo "== training trace smoke (data-parallel step spans) =="
+# A short 2-worker run with --trace-out must produce a Chrome trace-event
+# document with nonzero complete spans covering several step stages
+# (fwd/bwd/allreduce/update/...), i.e. the tracer actually followed the
+# data-parallel step pipeline rather than logging one span kind in a loop.
+./target/release/brgemm-dl run --config examples/dist_mlp.json \
+    --trace-out train_trace.json
+test -f train_trace.json
+./target/release/brgemm-dl perfcheck --trace train_trace.json --min-span-cats 4
+
+echo "== admin socket round trip (stats -> reload -> stats -> drain) =="
+# A long-budget server run with --admin-sock, driven entirely from the
+# admin client: live stats must parse, a reload pushed through the socket
+# must show up in the next stats snapshot, and drain must end the run
+# cleanly (the server answers everything accepted, exits 0).
+sock="$(mktemp -u /tmp/brgemm_admin_XXXXXX.sock)"
+./target/release/brgemm-dl serve --model mlp --requests 200000 --rate 2000 \
+    --serve-workers 2 --seed 7 --admin-sock "$sock" &
+serve_pid=$!
+for _ in $(seq 1 100); do [ -S "$sock" ] && break; sleep 0.1; done
+if [ ! -S "$sock" ]; then
+    echo "admin socket $sock never appeared" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+./target/release/brgemm-dl admin --sock "$sock" --cmd stats
+./target/release/brgemm-dl admin --sock "$sock" \
+    --cmd '{"cmd":"reload","path":"checkpoints/mlp.bin"}'
+if ! ./target/release/brgemm-dl admin --sock "$sock" --cmd stats \
+        | grep -q '"reloads":1'; then
+    echo "socket reload not visible in admin stats" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+./target/release/brgemm-dl admin --sock "$sock" --cmd drain
+wait "$serve_pid"
+echo "admin round trip ok (reload visible, drain exited cleanly)"
+
 echo "== rnn train -> checkpoint -> resume -> serve smoke =="
 # The sequence workload through the same pipeline: train the LSTM
 # classifier 2 epochs with per-epoch checkpointing, resume the artifact
@@ -71,10 +109,14 @@ echo "== mixed-length bucketed serving smoke (stacked rnn) =="
 # at least two distinct buckets actually served traffic.
 ./target/release/brgemm-dl serve --model-path checkpoints/rnn.bin \
     --seq-len-typical 4 --requests 300 --rate 50000 --serve-workers 2 \
-    --metrics-out serve_rnn_metrics.json
+    --metrics-out serve_rnn_metrics.json --trace-out serve_rnn_trace.json
 test -f serve_rnn_metrics.json
 ./target/release/brgemm-dl perfcheck --metrics serve_rnn_metrics.json \
     --require len_buckets,throughput_rps
+# The same run's --trace-out must hold request-, batch- and layer-level
+# spans (>=3 categories): the serve pipeline traced end to end.
+test -f serve_rnn_trace.json
+./target/release/brgemm-dl perfcheck --trace serve_rnn_trace.json --min-span-cats 3
 lb=$(grep -o '"len_bucket"' serve_rnn_metrics.json | wc -l)
 if [ "$lb" -lt 2 ]; then
     echo "expected >=2 length buckets in serve_rnn_metrics.json, got $lb" >&2
