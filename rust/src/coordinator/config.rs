@@ -25,6 +25,7 @@
 //! topology, and `{"serve": {"rate": 2000, "requests": 512, "max_batch":
 //! 8, "workers": 2}}` shapes the open-loop load and the worker pool.
 
+use crate::serve::slo::SloSpec;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
@@ -115,6 +116,11 @@ pub struct ServeConfig {
     /// every request. Only meaningful when tracing is on (`--trace-out`
     /// or an `admin_sock` `trace` consumer).
     pub trace_sample: u64,
+    /// Latency SLO (the nested `"slo"` object: `{"latency_ms": 50,
+    /// "objective": 0.99}`): every request gets a deadline, the run
+    /// reports attainment, violation attribution, burn rate and error
+    /// budget ([`crate::serve::slo`]). `None` = no SLO accounting.
+    pub slo: Option<SloSpec>,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +139,7 @@ impl Default for ServeConfig {
             metrics_every: None,
             admin_sock: None,
             trace_sample: 1,
+            slo: None,
         }
     }
 }
@@ -176,6 +183,9 @@ impl ServeConfig {
         }
         if self.trace_sample == 0 {
             bail!("serve.trace_sample must be >= 1 (trace 1 request in every N)");
+        }
+        if let Some(slo) = &self.slo {
+            slo.validate()?;
         }
         Ok(())
     }
@@ -381,6 +391,22 @@ impl RunConfig {
                 metrics_every: get_opt_f64(sv, "metrics_every")?,
                 admin_sock: get_opt_str(sv, "admin_sock")?,
                 trace_sample: get_usize(sv, "trace_sample", d.trace_sample as usize)? as u64,
+                slo: match sv.get("slo") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => {
+                        if v.as_obj().is_none() {
+                            bail!(
+                                "serve.slo must be an object, e.g. \
+                                 {{\"slo\": {{\"latency_ms\": 50, \"objective\": 0.99}}}}"
+                            );
+                        }
+                        let ds = SloSpec::default();
+                        Some(SloSpec {
+                            latency_ms: get_f64(v, "latency_ms", ds.latency_ms)?,
+                            objective: get_f64(v, "objective", ds.objective)?,
+                        })
+                    }
+                },
             };
             sc.validate()?;
             cfg.serve = Some(sc);
@@ -786,6 +812,40 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"serve": {"admin_sock": 5}}"#).is_err());
         assert!(RunConfig::from_json(r#"{"serve": {"trace_sample": 0}}"#).is_err());
         assert!(RunConfig::from_json(r#"{"serve": {"trace_sample": "all"}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_slo_block_parses_and_validates() {
+        let sc = RunConfig::from_json(
+            r#"{"serve": {"slo": {"latency_ms": 25, "objective": 0.95}}}"#,
+        )
+        .unwrap()
+        .serve
+        .unwrap();
+        let slo = sc.slo.unwrap();
+        assert_eq!(slo.latency_ms, 25.0);
+        assert_eq!(slo.objective, 0.95);
+        // Partial blocks fill from the spec defaults.
+        let sc = RunConfig::from_json(r#"{"serve": {"slo": {"latency_ms": 10}}}"#)
+            .unwrap()
+            .serve
+            .unwrap();
+        let slo = sc.slo.unwrap();
+        assert_eq!(slo.latency_ms, 10.0);
+        assert_eq!(slo.objective, SloSpec::default().objective);
+        // Absent or null ⇒ no SLO accounting at all.
+        assert!(RunConfig::from_json(r#"{"serve": {}}"#).unwrap().serve.unwrap().slo.is_none());
+        assert!(RunConfig::from_json(r#"{"serve": {"slo": null}}"#)
+            .unwrap()
+            .serve
+            .unwrap()
+            .slo
+            .is_none());
+        // Invalid shapes and values rejected, not silently defaulted.
+        assert!(RunConfig::from_json(r#"{"serve": {"slo": 50}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"slo": {"latency_ms": 0}}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"slo": {"objective": 1.0}}}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"serve": {"slo": {"objective": "high"}}}"#).is_err());
     }
 
     #[test]

@@ -25,16 +25,16 @@
 //!   experiments (Fig. 10) on a single host.
 //! * [`resnet`]  — the ResNet-50 layer table (paper Table 2) and
 //!   weighted-efficiency accounting.
-//! * [`metrics`] — re-export of [`crate::telemetry`]'s counter/timer
-//!   registry (exact parallel merge, JSON export), kept for path
-//!   compatibility.
+//!
+//! The counter/timer registry lives in [`crate::telemetry`] (exact
+//! parallel merge, JSON export), alongside the BRGEMM profiler, the span
+//! tracer, and the health plane.
 
 pub mod build;
 pub mod cnn;
 pub mod config;
 pub mod data;
 pub mod dist;
-pub mod metrics;
 pub mod resnet;
 pub mod rnn;
 pub mod trainer;

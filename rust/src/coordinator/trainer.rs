@@ -16,6 +16,7 @@ use crate::coordinator::data::ClassifyData;
 use crate::coordinator::dist::{ring_allreduce, NetworkModel};
 use crate::modelio::{LayerKind, LayerParams};
 use crate::primitives::fc::FcPrimitive;
+use crate::telemetry::health::{self, Health, HeartbeatGroup};
 use crate::telemetry::trace::{self, SpanEvent, SpanKind, SpanRing, TraceGroup, Tracer};
 use crate::telemetry::{self, Metrics};
 use crate::tensor::layout::{
@@ -429,6 +430,15 @@ pub struct DataParallelTrainer<M: Model = MlpModel> {
     /// asked to trace never writes into a tracer some other component
     /// installed. The CLI sets it alongside `--trace-out`.
     trace_opt_in: bool,
+    /// Health-monitor handle, captured lazily on the first monitored step
+    /// (same pattern as `trace`): the installed monitor plus this
+    /// trainer's "train" heartbeat group, one counter per worker, bumped
+    /// per step. `None` until opted in via
+    /// [`DataParallelTrainer::monitor_health`] *and* a monitor is
+    /// installed.
+    hb: Option<(std::sync::Arc<Health>, std::sync::Arc<HeartbeatGroup>)>,
+    /// Opt-in flag mirroring `trace_opt_in` for the health plane.
+    health_opt_in: bool,
 }
 
 impl DataParallelTrainer<MlpModel> {
@@ -479,6 +489,8 @@ impl<M: Model> DataParallelTrainer<M> {
             metrics: Metrics::new(),
             trace: None,
             trace_opt_in: false,
+            hb: None,
+            health_opt_in: false,
         };
         assert!(dp.replicas_consistent(), "replicas must start from identical parameters");
         dp
@@ -497,6 +509,14 @@ impl<M: Model> DataParallelTrainer<M> {
                 (t, ring)
             });
         }
+        // Same lazy capture for the health monitor: the "train" heartbeat
+        // group registers once, on the first monitored step.
+        if self.health_opt_in && health::enabled() && self.hb.is_none() {
+            self.hb = health::current().map(|h| {
+                let g = h.register("train", p);
+                (h, g)
+            });
+        }
         // Step ids advance on every step while a tracer is live, so 1-in-N
         // sampling picks a deterministic subsequence of steps.
         let mut group: Option<(u64, TraceGroup, Instant)> = match &self.trace {
@@ -509,6 +529,7 @@ impl<M: Model> DataParallelTrainer<M> {
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(p);
         let mut losses = Vec::with_capacity(p);
         let mut compute = 0.0f64;
+        let mut compute_sum = 0.0f64;
         for (wi, (w, (x, labels))) in self.workers.iter_mut().zip(shards).enumerate() {
             let t0 = Instant::now();
             let logits = w.forward(x);
@@ -517,7 +538,12 @@ impl<M: Model> DataParallelTrainer<M> {
             let (loss, dlogits) = softmax_xent(&logits, labels, w.classes());
             w.backward(&dlogits);
             let tb = group.as_ref().map(|_| Instant::now());
-            compute = compute.max(t0.elapsed().as_secs_f64());
+            let worker_secs = t0.elapsed().as_secs_f64();
+            compute = compute.max(worker_secs);
+            compute_sum += worker_secs;
+            if let Some((_, g)) = &self.hb {
+                g.beat(wi);
+            }
             if let Some(t1) = t1 {
                 let bwd = t1.elapsed().as_secs_f64();
                 if let Some(m) = w.metrics_mut() {
@@ -570,6 +596,12 @@ impl<M: Model> DataParallelTrainer<M> {
         if let Some(t) = t_up {
             self.metrics.observe_secs("upd", t.elapsed().as_secs_f64());
             self.metrics.inc("steps", 1);
+            // Straggler accounting, per step: the slowest replica's
+            // compute vs the mean across replicas. Their ratio (averaged
+            // over the epoch) is the straggler index the `--metrics-out`
+            // JSON reports.
+            self.metrics.observe_secs("worker_step_max", compute);
+            self.metrics.observe_secs("worker_step_mean", compute_sum / p as f64);
         }
         if let Some((sid, mut g, t_step0)) = group.take() {
             let (tr, ring) = self.trace.as_ref().unwrap();
@@ -638,6 +670,45 @@ impl<M: Model> DataParallelTrainer<M> {
         if !on {
             self.trace = None;
         }
+    }
+
+    /// Opt this trainer into the health plane: when a monitor is
+    /// installed, every worker beats a "train" heartbeat once per step,
+    /// so a replica that wedges mid-epoch degrades the health state with
+    /// its index in the reason. Off by default, like [`Self::trace_steps`].
+    pub fn monitor_health(&mut self, on: bool) {
+        self.health_opt_in = on;
+        if !on {
+            self.retire_health();
+        }
+    }
+
+    /// Take this trainer's workers out of stall detection (training is
+    /// ending on purpose). Idempotent.
+    pub fn retire_health(&mut self) {
+        if let Some((_, g)) = self.hb.take() {
+            g.retire();
+        }
+    }
+
+    /// Epoch straggler index: mean over steps of (slowest replica compute
+    /// / mean replica compute). 1.0 = perfectly balanced; grows as one
+    /// replica lags the pack. `None` until a telemetry-enabled step ran.
+    pub fn straggler_index(&self) -> Option<f64> {
+        let max = self.metrics.timer_mean("worker_step_max")?;
+        let mean = self.metrics.timer_mean("worker_step_mean")?;
+        (mean > 0.0).then(|| max / mean)
+    }
+
+    /// Share of step time spent waiting in the allreduce, averaged over
+    /// the epoch: allreduce / (slowest compute + allreduce + update).
+    /// `None` until a telemetry-enabled step ran.
+    pub fn allreduce_share(&self) -> Option<f64> {
+        let ar = self.metrics.timer_mean("allreduce")?;
+        let comp = self.metrics.timer_mean("worker_step_max")?;
+        let upd = self.metrics.timer_mean("upd").unwrap_or(0.0);
+        let total = comp + ar + upd;
+        (total > 0.0).then(|| ar / total)
     }
 
     /// The trainer's registry merged with every worker's, via the exact
@@ -912,17 +983,19 @@ mod tests {
     #[test]
     fn instrumented_training_is_bit_identical() {
         // The whole point of the gated instrumentation: enabling the
-        // profiler AND the span tracer must change timing side channels
-        // only. Same seed, same data, same steps — the final parameters
-        // must match bitwise with and without them.
+        // profiler AND the span tracer AND the health monitor must change
+        // timing side channels only. Same seed, same data, same steps —
+        // the final parameters must match bitwise with and without them.
         let _g = telemetry::test_lock();
         let run = |instrument: bool| {
             if instrument {
                 telemetry::install();
                 trace::install(1, 64);
+                health::install(crate::telemetry::health::HealthThresholds::default());
             } else {
                 telemetry::uninstall();
                 trace::uninstall();
+                health::uninstall();
             }
             let mut rng = Rng::new(7);
             let data = ClassifyData::synth(64, 8, 3, 0.2, &mut rng);
@@ -934,11 +1007,16 @@ mod tests {
             // The data-parallel path is where per-step trace spans land.
             let mut dp = DataParallelTrainer::new(&[8, 16, 3], 8, 2, 1, 0.05, 21);
             dp.trace_steps(instrument);
+            dp.monitor_health(instrument);
             let shards: Vec<_> = (0..2).map(|i| data.batch(i, 8)).collect();
             for _ in 0..4 {
                 dp.step(&shards);
             }
             if instrument {
+                // Every worker beat once per step.
+                let snap = health::current().unwrap().evaluate();
+                let train = snap.groups.iter().find(|g| g.name == "train").unwrap();
+                assert_eq!(train.beats, vec![4, 4]);
                 let drained = trace::current().unwrap().drain();
                 assert!(
                     drained.groups.iter().any(|g| g.find(SpanKind::Step).is_some()),
@@ -954,11 +1032,42 @@ mod tests {
             }
             telemetry::uninstall();
             trace::uninstall();
+            health::uninstall();
             let mut out = m.params_flat();
             out.extend(dp.workers[0].params_flat());
             out
         };
         assert_eq!(run(true), run(false), "instrumentation must not change the math");
+    }
+
+    #[test]
+    fn straggler_index_and_allreduce_share_are_gated_and_sane() {
+        let _g = telemetry::test_lock();
+        let mut rng = Rng::new(23);
+        let data = ClassifyData::synth(64, 8, 2, 0.2, &mut rng);
+        let shards: Vec<_> = (0..2).map(|i| data.batch(i, 8)).collect();
+        // Disabled: no straggler timers land, both derivations are None.
+        telemetry::uninstall();
+        let mut dp = DataParallelTrainer::new(&[8, 8, 2], 8, 2, 1, 0.05, 1);
+        dp.step(&shards);
+        assert!(dp.straggler_index().is_none());
+        assert!(dp.allreduce_share().is_none());
+        // Enabled: the index is >= 1 by construction (max >= mean) and
+        // the allreduce share is a proper fraction.
+        telemetry::install();
+        let mut dp = DataParallelTrainer::new(&[8, 8, 2], 8, 2, 1, 0.05, 1);
+        for _ in 0..3 {
+            dp.step(&shards);
+        }
+        let si = dp.straggler_index().unwrap();
+        assert!(si >= 1.0, "straggler index {} must be >= 1", si);
+        let share = dp.allreduce_share().unwrap();
+        assert!((0.0..=1.0).contains(&share), "allreduce share {} in [0,1]", share);
+        // The merged view carries the raw timers for --metrics-out.
+        let merged = dp.merged_metrics();
+        assert!(merged.timer_mean("worker_step_max").is_some());
+        assert!(merged.timer_mean("worker_step_mean").is_some());
+        telemetry::uninstall();
     }
 
     #[test]

@@ -32,9 +32,10 @@ use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWo
 use brgemm_dl::runtime::{DType, HostTensor, Runtime};
 use brgemm_dl::serve::{
     drive_open_loop_every, seq_request_source, AdminServer, InferenceModel, LoadSpec,
-    ModelWatcher, NetSpec, Response, ServeOpts, Server,
+    ModelWatcher, NetSpec, Response, ServeOpts, Server, SloSpec,
 };
 use brgemm_dl::telemetry;
+use brgemm_dl::telemetry::health::{self, HealthThresholds};
 use brgemm_dl::telemetry::trace;
 use brgemm_dl::tensor::layout;
 use brgemm_dl::util::json::{obj, Json};
@@ -95,7 +96,9 @@ fn commands() -> Vec<Command> {
                 OptSpec { name: "metrics-every", help: "log a point-in-time serving snapshot every this many seconds", takes_value: true, default: None },
                 OptSpec { name: "trace-out", help: "write a Chrome trace-event JSON of request/batch/layer spans (open in Perfetto)", takes_value: true, default: None },
                 OptSpec { name: "trace-sample", help: "with tracing on: record 1 in N requests, keyed off the request id [default: 1 = all]", takes_value: true, default: None },
-                OptSpec { name: "admin-sock", help: "listen on this Unix socket for line-delimited JSON admin commands (stats|trace|reload|drain)", takes_value: true, default: None },
+                OptSpec { name: "admin-sock", help: "listen on this Unix socket for line-delimited JSON admin commands (stats|trace|reload|drain|health|metrics)", takes_value: true, default: None },
+                OptSpec { name: "slo-latency-ms", help: "latency SLO deadline stamped on every request, milliseconds [default: off]", takes_value: true, default: None },
+                OptSpec { name: "slo-objective", help: "with --slo-latency-ms: target attainment fraction in (0,1) [default: 0.99]", takes_value: true, default: None },
             ],
         },
         Command {
@@ -103,7 +106,9 @@ fn commands() -> Vec<Command> {
             about: "send one command to a running server's --admin-sock endpoint",
             opts: vec![
                 OptSpec { name: "sock", help: "Unix socket path the server listens on", takes_value: true, default: None },
-                OptSpec { name: "cmd", help: "command line to send: stats | drain | a JSON object like {\"cmd\":\"reload\",\"path\":\"m.bin\"}", takes_value: true, default: None },
+                OptSpec { name: "cmd", help: "command line to send: stats | drain | health | metrics | a JSON object like {\"cmd\":\"reload\",\"path\":\"m.bin\"}", takes_value: true, default: None },
+                OptSpec { name: "wait-ready", help: "poll the socket's health command until the server reports ready (exit 0) or --timeout expires (exit 1)", takes_value: false, default: None },
+                OptSpec { name: "timeout", help: "with --wait-ready: give up after this many seconds [default: 10]", takes_value: true, default: None },
             ],
         },
         Command {
@@ -332,6 +337,12 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
             trace::DEFAULT_RING_CAP
         );
     }
+    // The health monitor turns on when something can observe it: the
+    // admin socket's `health` command (and `admin --wait-ready`).
+    let monitored = sc.admin_sock.is_some();
+    if monitored {
+        health::install(HealthThresholds::default());
+    }
     let artifact = match &sc.model_path {
         Some(path) => {
             let art = ModelArtifact::load(path)?;
@@ -390,11 +401,20 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         sc.workers,
         sc.wait_for_fill_us
     );
+    if let Some(slo) = &sc.slo {
+        log_info!(
+            "slo: {} ms deadline at {:.2}% attainment objective",
+            slo.latency_ms,
+            slo.objective * 100.0
+        );
+    }
     let opts = ServeOpts {
         max_batch: sc.max_batch,
         workers: sc.workers,
         wait_for_fill_us: sc.wait_for_fill_us,
         trace: tracing,
+        slo: sc.slo,
+        health: monitored,
     };
     // `--watch-model`: the validated config guarantees a model path, and
     // run_serve loaded the artifact above — it becomes the watcher's
@@ -526,6 +546,9 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
         log_info!("serve metrics written to {}", path);
         telemetry::uninstall();
     }
+    if monitored {
+        health::uninstall();
+    }
     Ok(())
 }
 
@@ -547,7 +570,10 @@ fn open_loop_watched(
     let admin = match admin_sock {
         Some(path) => {
             let a = AdminServer::start(path, server.admin_handle())?;
-            log_info!("admin: listening on {} (stats | trace | reload | drain)", path);
+            log_info!(
+                "admin: listening on {} (stats | trace | reload | drain | health | metrics)",
+                path
+            );
             Some(a)
         }
         None => None,
@@ -567,6 +593,13 @@ fn open_loop_watched(
         log_info!("watch-model: {} reload(s) applied during the run", applied);
     }
     if let Some(a) = admin {
+        // Drain linger: the server just shut down, so the health monitor
+        // reports Draining — keep the socket answering briefly so a
+        // concurrent `admin health` poller (CI's drain walk) observes the
+        // transition before the endpoint disappears.
+        if health::enabled() {
+            std::thread::sleep(Duration::from_millis(600));
+        }
         a.stop();
     }
     Ok(out)
@@ -631,7 +664,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ["model", "layers", "seq-len-typical", "model-path", "min-accuracy", "watch-model",
              "watch-poll-ms", "wait-fill-us", "rate", "requests", "max-batch", "serve-workers",
              "nthreads", "seed", "tune", "metrics-out", "metrics-every", "trace-out",
-             "trace-sample", "admin-sock"]
+             "trace-sample", "admin-sock", "slo-latency-ms", "slo-objective"]
             .into_iter()
             .filter(|&k| args.str(k).is_some())
             .collect();
@@ -690,6 +723,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace_sample: args
             .usize_or("trace-sample", d.trace_sample as usize)
             .map_err(|e| anyhow!("{}", e))? as u64,
+        slo: match args.f64("slo-latency-ms").map_err(|e| anyhow!("{}", e))? {
+            Some(latency_ms) => Some(SloSpec {
+                latency_ms,
+                objective: args
+                    .f64_or("slo-objective", SloSpec::default().objective)
+                    .map_err(|e| anyhow!("{}", e))?,
+            }),
+            None => {
+                if args.str("slo-objective").is_some() {
+                    bail!("--slo-objective needs --slo-latency-ms (the deadline to attain)");
+                }
+                None
+            }
+        },
     };
     sc.validate()?;
     cfg.metrics_out = args.str("metrics-out").map(String::from);
@@ -704,6 +751,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `ok` field, so shell scripts can gate on it directly.
 fn cmd_admin(args: &Args) -> Result<()> {
     let sock = args.str("sock").ok_or_else(|| anyhow!("admin needs --sock <path>"))?;
+    if args.flag("wait-ready") {
+        let timeout = args.f64_or("timeout", 10.0).map_err(|e| anyhow!("{}", e))?;
+        return admin_wait_ready(sock, timeout);
+    }
     let cmd = args.str("cmd").ok_or_else(|| anyhow!("admin needs --cmd <command>"))?;
     let line = if cmd.contains('{') {
         cmd.to_string()
@@ -711,15 +762,50 @@ fn cmd_admin(args: &Args) -> Result<()> {
         obj([("cmd", cmd.into())]).to_string_compact()
     };
     let reply = brgemm_dl::serve::admin::send_command(sock, &line)?;
-    println!("{}", reply);
-    let ok = Json::parse(&reply)
-        .ok()
+    let parsed = Json::parse(&reply).ok();
+    // A `metrics` reply carries the whole Prometheus exposition as one
+    // JSON-escaped string: print the decoded text, not the JSON line, so
+    // the output pipes straight into a scraper or promtool.
+    match parsed.as_ref().and_then(|j| j.get("metrics")).and_then(Json::as_str) {
+        Some(text) => print!("{}", text),
+        None => println!("{}", reply),
+    }
+    let ok = parsed
         .and_then(|j| j.get("ok").and_then(Json::as_bool))
         .unwrap_or(false);
     if !ok {
         bail!("admin command failed (reply above)");
     }
     Ok(())
+}
+
+/// `admin --wait-ready`: poll the socket's `health` command until the
+/// server reports `ready` (exit 0) or the timeout expires (exit 1). A
+/// socket that is not up yet (missing file, connection refused) counts
+/// as not-ready, so this can gate on a server that is still starting.
+fn admin_wait_ready(sock: &str, timeout_secs: f64) -> Result<()> {
+    if !(timeout_secs > 0.0) || !timeout_secs.is_finite() {
+        bail!("--timeout must be a positive, finite number of seconds");
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs_f64(timeout_secs);
+    loop {
+        if let Ok(reply) = brgemm_dl::serve::admin::send_command(sock, "{\"cmd\":\"health\"}") {
+            let state = Json::parse(&reply).ok().and_then(|j| {
+                j.get("health")
+                    .and_then(|h| h.get("state"))
+                    .and_then(Json::as_str)
+                    .map(String::from)
+            });
+            if state.as_deref() == Some("ready") {
+                println!("{}", reply);
+                return Ok(());
+            }
+        }
+        if std::time::Instant::now() >= deadline {
+            bail!("server did not report ready within {:.1}s", timeout_secs);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
 }
 
 /// The training schedule derived from a config: epoch = one pass over
@@ -903,15 +989,21 @@ fn drive_native<M: Model>(
             at_epoch_end(&mut dp.workers[0], step, s.loss, &train_rng)?;
             if let Some(w) = sink.as_mut() {
                 if (step + 1) % spe == 0 {
-                    write_metrics_line(
-                        w,
-                        &obj([
-                            ("epoch", ((step + 1) / spe).into()),
-                            ("step", (step + 1).into()),
-                            ("loss", (s.loss as f64).into()),
-                            ("metrics", dp.merged_metrics().to_json()),
-                        ]),
-                    )?;
+                    let mut row = obj([
+                        ("epoch", ((step + 1) / spe).into()),
+                        ("step", (step + 1).into()),
+                        ("loss", (s.loss as f64).into()),
+                        ("metrics", dp.merged_metrics().to_json()),
+                    ]);
+                    // Per-epoch straggler view: slowest-vs-mean replica
+                    // compute and the allreduce's share of step time.
+                    if let (Json::Obj(fields), Some(si), Some(ar)) =
+                        (&mut row, dp.straggler_index(), dp.allreduce_share())
+                    {
+                        fields.insert("straggler_index".to_string(), si.into());
+                        fields.insert("allreduce_share".to_string(), ar.into());
+                    }
+                    write_metrics_line(w, &row)?;
                 }
             }
         }
@@ -926,13 +1018,17 @@ fn drive_native<M: Model>(
         }
         log_info!("final accuracy {:.1}% (worker 0)", acc * 100.0);
         if let Some(w) = sink.as_mut() {
-            write_metrics_line(
-                w,
-                &obj([
-                    ("final_accuracy", acc.into()),
-                    ("metrics", dp.merged_metrics().to_json()),
-                ]),
-            )?;
+            let mut row = obj([
+                ("final_accuracy", acc.into()),
+                ("metrics", dp.merged_metrics().to_json()),
+            ]);
+            if let (Json::Obj(fields), Some(si), Some(ar)) =
+                (&mut row, dp.straggler_index(), dp.allreduce_share())
+            {
+                fields.insert("straggler_index".to_string(), si.into());
+                fields.insert("allreduce_share".to_string(), ar.into());
+            }
+            write_metrics_line(w, &row)?;
         }
     } else {
         // Fresh run: init consumes the checkpointed training stream, so
@@ -1359,10 +1455,20 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 /// Throughput-like keys (higher is better) compared by
 /// `perfcheck --baseline/--current`. `useful_wps` is the serve bench's
-/// useful-words-per-second rate (padding excluded). Counters and
-/// timestamps are ignored — only sustained-rate numbers are meaningful
-/// across runs.
-const PERF_KEYS: [&str; 5] = ["gflops", "kwps", "imgs_per_s", "throughput_rps", "useful_wps"];
+/// useful-words-per-second rate (padding excluded); `slo_attainment`
+/// and `error_budget_remaining` are the serve SLO plane's fractions —
+/// attainment falling or the budget draining faster is the regression.
+/// Counters and timestamps are ignored — only sustained-rate numbers
+/// are meaningful across runs.
+const PERF_KEYS: [&str; 7] = [
+    "gflops",
+    "kwps",
+    "imgs_per_s",
+    "throughput_rps",
+    "useful_wps",
+    "slo_attainment",
+    "error_budget_remaining",
+];
 
 /// Latency-like keys (**lower** is better), compared with the same
 /// tolerance in the opposite direction: a *rise* beyond the allowed
@@ -1370,7 +1476,11 @@ const PERF_KEYS: [&str; 5] = ["gflops", "kwps", "imgs_per_s", "throughput_rps", 
 /// queue-wait leaf of the serve report's bucket table;
 /// `queue_depth_max` is the high-water queue depth — a backlog metric,
 /// so growth is the bad direction exactly like a latency.
-const LAT_KEYS: [&str; 5] = ["p50_ms", "p95_ms", "p99_ms", "queue_wait_ms", "queue_depth_max"];
+/// `straggler_index` is the data-parallel trainer's slowest-vs-mean
+/// replica ratio (1.0 = perfectly balanced) — drift upward means one
+/// replica is holding the ring back.
+const LAT_KEYS: [&str; 6] =
+    ["p50_ms", "p95_ms", "p99_ms", "queue_wait_ms", "queue_depth_max", "straggler_index"];
 
 /// `perfcheck` — CI's observability gate. Two independent modes that can
 /// be combined in one invocation:
@@ -1715,6 +1825,34 @@ mod tests {
         assert_eq!(regs.len(), 1, "{:?}", regs);
         assert!(regs[0].contains("/queue_depth_max") && regs[0].contains("rise"));
         let better = j(r#"{"queue_depth_max": 2.0, "p99_ms": 4.0}"#);
+        assert!(perf_deltas(&base, &better, 0.5).1.is_empty());
+    }
+
+    #[test]
+    fn slo_attainment_and_budget_are_higher_is_better() {
+        // Attainment dropping from 0.99 to 0.40 and the error budget
+        // draining from 0.8 to 0.1 both regress; improvement never does.
+        let base = j(r#"{"slo": {"slo_attainment": 0.99, "error_budget_remaining": 0.8}}"#);
+        let worse = j(r#"{"slo": {"slo_attainment": 0.40, "error_budget_remaining": 0.1}}"#);
+        let (compared, regs) = perf_deltas(&base, &worse, 0.5);
+        assert_eq!(compared, 2);
+        assert_eq!(regs.len(), 2, "{:?}", regs);
+        assert!(regs.iter().any(|r| r.contains("/slo_attainment") && r.contains("drop")));
+        assert!(regs.iter().any(|r| r.contains("/error_budget_remaining")));
+        let better = j(r#"{"slo": {"slo_attainment": 1.0, "error_budget_remaining": 1.0}}"#);
+        assert!(perf_deltas(&base, &better, 0.5).1.is_empty());
+    }
+
+    #[test]
+    fn straggler_index_growth_is_a_regression_and_shrink_is_not() {
+        // 1.0 is perfect balance; the index can only regress by rising.
+        let base = j(r#"{"metrics": {}, "straggler_index": 1.05}"#);
+        let worse = j(r#"{"metrics": {}, "straggler_index": 2.4}"#);
+        let (compared, regs) = perf_deltas(&base, &worse, 0.5);
+        assert_eq!(compared, 1);
+        assert_eq!(regs.len(), 1, "{:?}", regs);
+        assert!(regs[0].contains("/straggler_index") && regs[0].contains("rise"));
+        let better = j(r#"{"metrics": {}, "straggler_index": 1.0}"#);
         assert!(perf_deltas(&base, &better, 0.5).1.is_empty());
     }
 

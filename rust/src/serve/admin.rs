@@ -12,6 +12,8 @@
 //! {"cmd":"trace"}                  → {"ok":true,"trace":{"traceEvents":[...]}}
 //! {"cmd":"reload","path":"m.json"} → {"ok":true,"reloads":N}
 //! {"cmd":"drain"}                  → {"ok":true,"stats":{...final report...}}
+//! {"cmd":"health"}                 → {"ok":true,"health":{"state":"ready",...}}
+//! {"cmd":"metrics"}                → {"ok":true,"metrics":"<Prometheus text>"}
 //! anything else                    → {"ok":false,"error":"..."}
 //! ```
 //!
@@ -21,18 +23,23 @@
 //! visible to the *server* process and hot-swaps it atomically (in-flight
 //! batches finish on the generation they pinned — same contract as
 //! `Server::reload`); `drain` stops intake, waits until every accepted
-//! request is answered, and returns the final report.
+//! request is answered, and returns the final report; `health` evaluates
+//! the installed health monitor ([`crate::telemetry::health`]) — the
+//! same derivation the watchdog logs; `metrics` renders everything in
+//! Prometheus text exposition format (one JSON-escaped string — a
+//! scraper splits it back on `\n`).
 //!
-//! Connections are served one at a time on a single thread: the admin
-//! plane is a control path, not a data path, and a serialized `drain`
-//! blocking a concurrent `stats` for its duration is the semantics an
-//! operator expects. The accept loop polls with a short sleep so
-//! [`AdminServer::stop`] (and `Drop`) can always reclaim the thread and
-//! unlink the socket file.
+//! Each connection gets its own serving thread: a blocking `drain` on
+//! one connection must not wedge a concurrent `health` poll — that is
+//! precisely the window where an operator wants liveness answered. The
+//! accept and read loops poll with a short sleep so
+//! [`AdminServer::stop`] (and `Drop`) can always reclaim every thread
+//! and unlink the socket file.
 
 use crate::modelio::ModelArtifact;
 use crate::serve::batcher::AdminHandle;
 use crate::serve::metrics::ServeReport;
+use crate::telemetry::health;
 use crate::telemetry::trace;
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
@@ -72,16 +79,30 @@ impl AdminServer {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let thread = std::thread::spawn(move || {
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        // Errors on one connection (client hung up
+                        // One thread per connection: a blocking drain on
+                        // one client must not wedge another's health
+                        // poll. Errors on one connection (client hung up
                         // mid-line) must not take the admin plane down.
-                        let _ = serve_conn(stream, &handle, &stop2);
+                        let handle = handle.clone();
+                        let stop = Arc::clone(&stop2);
+                        conns.push(std::thread::spawn(move || {
+                            let _ = serve_conn(stream, &handle, &stop);
+                        }));
+                        conns.retain(|c| !c.is_finished());
                     }
                     Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
                     Err(_) => break,
                 }
+            }
+            // Connection threads see the same stop flag on their next
+            // read timeout, so this join is bounded by POLL (plus any
+            // still-blocking drain, which stop deliberately waits out).
+            for c in conns {
+                let _ = c.join();
             }
         });
         Ok(AdminServer { path, stop, thread: Some(thread) })
@@ -178,19 +199,34 @@ pub fn handle_command(line: &str, handle: &AdminHandle) -> Json {
             };
             let artifact = match ModelArtifact::load(path) {
                 Ok(a) => a,
-                Err(e) => return err_reply(format!("loading {}: {}", path, e)),
+                Err(e) => return reload_failure(format!("loading {}: {}", path, e)),
             };
             match handle.reload(&artifact) {
                 Ok(()) => obj([
                     ("ok", true.into()),
                     ("reloads", (handle.reload_count() as usize).into()),
                 ]),
-                Err(e) => err_reply(format!("reload rejected: {}", e)),
+                Err(e) => reload_failure(format!("reload rejected: {}", e)),
             }
         }
         "drain" => stats_reply(&handle.drain()),
+        "health" => match health::current() {
+            Some(h) => obj([("ok", true.into()), ("health", h.evaluate().to_json())]),
+            None => err_reply("no health monitor installed (serve --admin-sock enables it)"),
+        },
+        "metrics" => obj([("ok", true.into()), ("metrics", Json::Str(handle.prometheus()))]),
         other => err_reply(format!("unknown cmd {:?}", other)),
     }
+}
+
+/// A failed reload is both an error reply *and* a health signal: the
+/// monitor keeps the server Degraded for its failure window so a
+/// watching operator sees that an artifact push went wrong.
+fn reload_failure(msg: String) -> Json {
+    if let Some(h) = health::current() {
+        h.reload_failed();
+    }
+    err_reply(msg)
 }
 
 /// One-shot client: connect to `sock`, send `line`, return the reply
@@ -322,6 +358,122 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.requests, 25);
         assert_eq!(rx.iter().count(), 25, "drain loses no responses");
+    }
+
+    #[test]
+    fn health_and_metrics_commands_round_trip() {
+        let _g = crate::telemetry::test_lock();
+        use crate::serve::slo::SloSpec;
+        use crate::telemetry::health::HealthThresholds;
+        health::uninstall();
+        let model = InferenceModel::new_mlp(&[10, 12, 4], 4, 1, false, &mut Rng::new(5));
+        // No monitor installed yet: `health` is an error, `metrics` still
+        // renders the serve families.
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts {
+                max_batch: 4,
+                workers: 2,
+                slo: Some(SloSpec::default()),
+                health: true,
+                ..ServeOpts::default()
+            },
+        );
+        let admin = AdminServer::start(sock_path("health"), server.admin_handle()).unwrap();
+        let off = Json::parse(&send_command(admin.path(), "{\"cmd\":\"health\"}").unwrap()).unwrap();
+        assert_eq!(off.get("ok").and_then(|b| b.as_bool()), Some(false));
+        let mut rng = Rng::new(17);
+        for _ in 0..8 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        let m = Json::parse(&send_command(admin.path(), "{\"cmd\":\"metrics\"}").unwrap()).unwrap();
+        assert_eq!(m.get("ok").and_then(|b| b.as_bool()), Some(true));
+        let text = m.get("metrics").and_then(|t| t.as_str()).unwrap().to_string();
+        assert!(text.contains("# TYPE brgemm_serve_queue_depth gauge"), "{}", text);
+        assert!(text.contains("brgemm_slo_attainment"), "{}", text);
+        // With a monitor installed the reply carries the derived state
+        // (this server registered no heartbeats into it — it started
+        // before the install — so the monitor reports Starting).
+        health::install(HealthThresholds::default());
+        let on = Json::parse(&send_command(admin.path(), "{\"cmd\":\"health\"}").unwrap()).unwrap();
+        assert_eq!(on.get("ok").and_then(|b| b.as_bool()), Some(true));
+        assert!(on.get("health").and_then(|h| h.get("state")).and_then(|s| s.as_str()).is_some());
+        // A failed reload feeds the monitor: state degrades with a
+        // reload-failure reason.
+        let bad = send_command(admin.path(), "{\"cmd\":\"reload\",\"path\":\"/no/such.json\"}")
+            .unwrap();
+        assert_eq!(Json::parse(&bad).unwrap().get("ok").and_then(|b| b.as_bool()), Some(false));
+        let snap = crate::telemetry::health::current().unwrap().evaluate();
+        assert_eq!(snap.reload_failures, 1);
+        health::uninstall();
+        admin.stop();
+        drop(server.shutdown());
+        drop(rx);
+    }
+
+    #[test]
+    fn concurrent_stats_survive_a_racing_drain_and_reload() {
+        // Satellite contract: `stats` hammering the socket while another
+        // client drains (and a third reloads) must never wedge, corrupt
+        // a reply line, or drop a response.
+        let (server, rx) = mlp_server();
+        let admin = AdminServer::start(sock_path("conc"), server.admin_handle()).unwrap();
+        let mut rng = Rng::new(13);
+        for _ in 0..300 {
+            server.submit(rng.vec_f32(10, -1.0, 1.0));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let pollers: Vec<_> = (0..3)
+            .map(|_| {
+                let path = admin.path().to_path_buf();
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut replies = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        let reply = send_command(&path, "{\"cmd\":\"stats\"}").unwrap();
+                        let v = Json::parse(&reply).expect("reply stays one valid JSON line");
+                        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+                        replies += 1;
+                    }
+                    replies
+                })
+            })
+            .collect();
+        // A reload races the pollers mid-drain window.
+        let donor = crate::coordinator::trainer::MlpModel::new(
+            &[10usize, 12, 4],
+            4,
+            1,
+            &mut Rng::new(99),
+        );
+        let art = ModelArtifact::new(
+            Arch::Mlp { sizes: vec![10, 12, 4] },
+            TrainMeta::fresh(99),
+            donor.export_weights(),
+        );
+        let art_path = std::env::temp_dir().join(format!("adm-conc-{}.json", std::process::id()));
+        art.save(&art_path).unwrap();
+        let cmd = format!("{{\"cmd\":\"reload\",\"path\":\"{}\"}}", art_path.display());
+        let reload_reply = Json::parse(&send_command(admin.path(), &cmd).unwrap()).unwrap();
+        assert_eq!(reload_reply.get("ok").and_then(|b| b.as_bool()), Some(true));
+        // Drain on this connection while the pollers keep asking: with a
+        // thread per connection the polls answer throughout the drain.
+        let drained =
+            Json::parse(&send_command(admin.path(), "{\"cmd\":\"drain\"}").unwrap()).unwrap();
+        assert_eq!(
+            drained.get("stats").and_then(|s| s.get("requests")).and_then(|r| r.as_f64()),
+            Some(300.0)
+        );
+        stop.store(true, Ordering::Relaxed);
+        for p in pollers {
+            let n = p.join().expect("stats poller never wedges or panics");
+            assert!(n > 0, "poller answered at least once during the race");
+        }
+        std::fs::remove_file(&art_path).ok();
+        admin.stop();
+        let report = server.shutdown();
+        assert_eq!(report.requests, 300);
+        assert_eq!(rx.iter().count(), 300, "no response dropped across the race");
     }
 
     #[test]

@@ -26,7 +26,9 @@
 //! request gets exactly one response (asserted by the drain test).
 
 use crate::modelio::ModelArtifact;
-use crate::serve::metrics::{ServeReport, ServeStats};
+use crate::serve::metrics::{ServeReport, ServeStats, ServerInfo};
+use crate::serve::slo::{classify, SloOutcome, SloSpec};
+use crate::telemetry::health::{self, Health, HeartbeatGroup};
 use crate::serve::model::{InferenceModel, ServeScratch};
 use crate::telemetry::trace::{self, SpanEvent, SpanKind, TraceGroup};
 use anyhow::Result;
@@ -58,11 +60,30 @@ pub struct ServeOpts {
     /// component installed (the CLI sets it alongside `--trace-out` /
     /// `--admin-sock`). No tracer installed ⇒ no spans either way.
     pub trace: bool,
+    /// Latency SLO: when set, every request is stamped with a deadline
+    /// at submit (this spec's default, per-request override allowed) and
+    /// classified met/violated on respond, with violations attributed to
+    /// their dominant stage ([`crate::serve::slo`]). `None` — the
+    /// default — keeps the whole SLO plane to one branch per batch.
+    pub slo: Option<SloSpec>,
+    /// Register this server's workers with the installed health monitor
+    /// ([`crate::telemetry::health`]). Opt-in per server like `trace`, so
+    /// a server that did not ask for monitoring never beats into a
+    /// monitor some other component installed. No monitor installed ⇒ no
+    /// heartbeats either way.
+    pub health: bool,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_batch: 8, workers: 2, wait_for_fill_us: 0, trace: false }
+        ServeOpts {
+            max_batch: 8,
+            workers: 2,
+            wait_for_fill_us: 0,
+            trace: false,
+            slo: None,
+            health: false,
+        }
     }
 }
 
@@ -89,6 +110,10 @@ struct Pending {
     /// True step count of a sequence request (`0` for fixed-shape).
     len: usize,
     enqueued: Instant,
+    /// Absolute latency budget stamped at submit: the per-request
+    /// override when given, else the server's [`SloSpec`] default, else
+    /// `f64::INFINITY` (no SLO — every request trivially meets it).
+    deadline_secs: f64,
 }
 
 struct QueueState {
@@ -162,6 +187,35 @@ struct Shared {
     state: Mutex<QueueState>,
     cv: Condvar,
     stats: Mutex<ServeStats>,
+    /// Health wiring, captured once at [`Server::start`] (the tracer
+    /// pattern): the installed monitor plus this server's heartbeat
+    /// group. `None` — monitoring off or not requested — keeps every
+    /// health touch in the worker loop to one branch.
+    hb: Option<(Arc<Health>, Arc<HeartbeatGroup>)>,
+}
+
+impl Shared {
+    /// Resolve a request's deadline: explicit per-request override in
+    /// milliseconds, else the server's SLO default, else unbounded.
+    fn deadline_for(&self, deadline_ms: Option<f64>) -> f64 {
+        deadline_ms
+            .map(|ms| ms * 1e-3)
+            .or_else(|| self.opts.slo.map(|s| s.deadline_secs()))
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// Static server identity attached to every report: what is running,
+    /// with how much parallelism, over which bucket ladder.
+    fn info(&self) -> ServerInfo {
+        ServerInfo {
+            arch: self.model.spec().to_arch().describe(),
+            workers: self.opts.workers,
+            threads: self.model.nthreads(),
+            max_batch: self.opts.max_batch,
+            buckets: self.model.buckets().to_vec(),
+            len_buckets: self.model.len_buckets().to_vec(),
+        }
+    }
 }
 
 /// The serving front end: owns the queue and the worker pool.
@@ -183,6 +237,20 @@ impl Server {
             model.max_batch(),
             "worker max_batch must equal the model's bucket ladder top"
         );
+        if let Some(spec) = opts.slo {
+            spec.validate().expect("invalid SLO spec");
+        }
+        // Health wiring mirrors the tracer's opt-in gating: the server
+        // registers a heartbeat group only when it asked for monitoring
+        // AND a monitor is installed.
+        let hb = if opts.health {
+            health::current().map(|h| {
+                let g = h.register("serve", opts.workers);
+                (h, g)
+            })
+        } else {
+            None
+        };
         let shared = Arc::new(Shared {
             model,
             opts,
@@ -194,7 +262,11 @@ impl Server {
                 next_id: 0,
             }),
             cv: Condvar::new(),
-            stats: Mutex::new(ServeStats::new()),
+            stats: Mutex::new(match opts.slo {
+                Some(spec) => ServeStats::with_slo(spec),
+                None => ServeStats::new(),
+            }),
+            hb,
         });
         let (tx, rx) = mpsc::channel();
         let workers = (0..opts.workers)
@@ -225,7 +297,19 @@ impl Server {
     /// panicking: `None` means the queue stopped accepting (an admin
     /// `drain` raced the load generator) and the request was not queued.
     pub fn try_submit(&self, input: Vec<f32>) -> Option<u64> {
+        self.try_submit_with_deadline(input, None)
+    }
+
+    /// [`Server::try_submit`] with a per-request latency budget in
+    /// milliseconds overriding the server's SLO default. `None` falls
+    /// back to the default (or no deadline when no SLO is configured).
+    pub fn try_submit_with_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline_ms: Option<f64>,
+    ) -> Option<u64> {
         let (len, len_bucket) = classify_request(&self.shared.model, &input);
+        let deadline_secs = self.shared.deadline_for(deadline_ms);
         let id = {
             let mut st = self.shared.state.lock().unwrap();
             if !st.accepting {
@@ -233,7 +317,10 @@ impl Server {
             }
             let id = st.next_id;
             st.next_id += 1;
-            st.push(len_bucket, Pending { id, input, len, enqueued: Instant::now() });
+            st.push(
+                len_bucket,
+                Pending { id, input, len, enqueued: Instant::now(), deadline_secs },
+            );
             id
         };
         self.shared.cv.notify_one();
@@ -248,13 +335,14 @@ impl Server {
             let mut st = self.shared.state.lock().unwrap();
             assert!(st.accepting, "submit after shutdown");
             let now = Instant::now();
+            let deadline_secs = self.shared.deadline_for(None);
             inputs
                 .into_iter()
                 .map(|input| {
                     let (len, len_bucket) = classify_request(&self.shared.model, &input);
                     let id = st.next_id;
                     st.next_id += 1;
-                    st.push(len_bucket, Pending { id, input, len, enqueued: now });
+                    st.push(len_bucket, Pending { id, input, len, enqueued: now, deadline_secs });
                     id
                 })
                 .collect()
@@ -309,7 +397,9 @@ impl Server {
     pub fn stats_snapshot(&self) -> ServeReport {
         let wall = self.started.elapsed().as_secs_f64();
         let reloads = self.shared.model.reload_count();
-        self.shared.stats.lock().unwrap().report(wall, reloads)
+        let mut r = self.shared.stats.lock().unwrap().report(wall, reloads);
+        r.info = Some(self.shared.info());
+        r
     }
 
     /// Stop intake, drain the queue, join the workers, and report. Every
@@ -319,13 +409,18 @@ impl Server {
             let mut st = self.shared.state.lock().unwrap();
             st.accepting = false;
         }
+        if let Some((h, _)) = &self.shared.hb {
+            h.set_draining();
+        }
         self.shared.cv.notify_all();
         for h in self.workers {
             h.join().expect("serve worker panicked");
         }
         let wall = self.started.elapsed().as_secs_f64();
         let reloads = self.shared.model.reload_count();
-        self.shared.stats.lock().unwrap().report(wall, reloads)
+        let mut r = self.shared.stats.lock().unwrap().report(wall, reloads);
+        r.info = Some(self.shared.info());
+        r
     }
 }
 
@@ -364,7 +459,33 @@ impl AdminHandle {
     pub fn stats(&self) -> ServeReport {
         let wall = self.started.elapsed().as_secs_f64();
         let reloads = self.shared.model.reload_count();
-        self.shared.stats.lock().unwrap().report(wall, reloads)
+        let mut r = self.shared.stats.lock().unwrap().report(wall, reloads);
+        r.info = Some(self.shared.info());
+        r
+    }
+
+    /// Render everything the admin socket knows in Prometheus text
+    /// exposition format: serving counters/timers/histograms, SLO
+    /// gauges, plus health and primitive-profiler families when their
+    /// monitors are installed.
+    pub fn prometheus(&self) -> String {
+        let wall = self.started.elapsed().as_secs_f64();
+        let reloads = self.shared.model.reload_count();
+        let queue_depth = self.shared.state.lock().unwrap().depth;
+        let info = self.shared.info();
+        let mut out = String::new();
+        self.shared
+            .stats
+            .lock()
+            .unwrap()
+            .prometheus_into(&mut out, wall, reloads, queue_depth, Some(&info));
+        if let Some(h) = health::current() {
+            crate::serve::metrics::prometheus_health_into(&mut out, &h.evaluate());
+        }
+        if let Some(p) = crate::telemetry::current() {
+            crate::serve::metrics::prometheus_profiler_into(&mut out, &p);
+        }
+        out
     }
 
     /// Same contract as [`Server::reload`]: atomic hot swap, in-flight
@@ -394,6 +515,12 @@ impl AdminHandle {
         {
             let mut st = self.shared.state.lock().unwrap();
             st.accepting = false;
+        }
+        // Draining is observable the instant intake stops — a concurrent
+        // `admin health` poller sees the transition while this call still
+        // blocks on in-flight work.
+        if let Some((h, _)) = &self.shared.hb {
+            h.set_draining();
         }
         self.shared.cv.notify_all();
         let mut st = self.shared.state.lock().unwrap();
@@ -431,6 +558,8 @@ fn worker_loop(shared: &Shared, widx: usize, tx: &mpsc::Sender<Response>) {
     } else {
         None
     };
+    let hb = shared.hb.as_ref();
+    let slo_on = shared.opts.slo.is_some();
     loop {
         // Take up to max_batch requests from one length bucket, or exit
         // once draining is done.
@@ -439,9 +568,30 @@ fn worker_loop(shared: &Shared, widx: usize, tx: &mpsc::Sender<Response>) {
             let (taken, len_bucket): (Vec<Pending>, usize) = loop {
                 while st.depth == 0 {
                     if !st.accepting {
+                        // Last worker out marks the pool gone: retired
+                        // groups are exempt from stall detection, and a
+                        // fully drained pool means the server is going
+                        // away — surface that as Draining.
+                        if let Some((h, g)) = hb {
+                            g.retire();
+                            h.set_draining();
+                        }
                         return;
                     }
-                    st = shared.cv.wait(st).unwrap();
+                    // An idle worker is healthy, not stalled: with a
+                    // heartbeat group registered, wake periodically so
+                    // the beat keeps advancing while the queue is empty.
+                    match hb {
+                        Some((_, g)) => {
+                            let (guard, _timeout) = shared
+                                .cv
+                                .wait_timeout(st, Duration::from_millis(500))
+                                .unwrap();
+                            st = guard;
+                            g.beat(widx);
+                        }
+                        None => st = shared.cv.wait(st).unwrap(),
+                    }
                 }
                 // Batching delay: wait up to the configured window for
                 // some length bucket to fill before dispatching a partial
@@ -505,6 +655,12 @@ fn worker_loop(shared: &Shared, widx: usize, tx: &mpsc::Sender<Response>) {
         for (i, r) in taken.iter().enumerate() {
             x[i * row..i * row + r.input.len()].copy_from_slice(&r.input);
         }
+        // Reload-stall probe: one timed read-lock acquisition on the
+        // weight set. Nanoseconds normally; a concurrent hot-reload
+        // write-swap shows up here, attributing the stall to the reload
+        // rather than inflating apparent compute.
+        let reload_stall_secs =
+            if slo_on { shared.model.weight_pin_wait_secs() } else { 0.0 };
         let t_fwd = Instant::now();
         let logits = match step_dim {
             None => shared.model.forward_with(bucket, x, &mut scratch),
@@ -641,11 +797,41 @@ fn worker_loop(shared: &Shared, widx: usize, tx: &mpsc::Sender<Response>) {
             depth_after,
             compute_secs * 1e3
         );
-        shared
-            .stats
-            .lock()
-            .unwrap()
-            .record_batch(bucket, len_bucket, fill, depth_after, &lats, &waits, compute_secs);
+        // SLO classification, outside the stats lock: met/violated per
+        // request, with violations attributed to their dominant stage.
+        let outcomes: Option<Vec<SloOutcome>> = slo_on.then(|| {
+            taken
+                .iter()
+                .zip(lats.iter().zip(&waits))
+                .map(|(r, (&lat, &wait))| {
+                    classify(r.deadline_secs, lat, wait, compute_secs, reload_stall_secs)
+                })
+                .collect()
+        });
+        {
+            let mut stats = shared.stats.lock().unwrap();
+            stats.record_batch(
+                bucket,
+                len_bucket,
+                fill,
+                depth_after,
+                &lats,
+                &waits,
+                compute_secs,
+            );
+            if let Some(outcomes) = &outcomes {
+                stats.record_slo(bucket, len_bucket, outcomes);
+            }
+            // Feed the health monitor while the stats lock is held so the
+            // burn-rate gauge it sees is the one this batch produced.
+            if let Some((h, g)) = hb {
+                g.beat(widx);
+                h.observe_queue_depth(depth_after as u64);
+                if let Some(s) = stats.slo() {
+                    h.observe_burn_rate(s.burn_rate_short());
+                }
+            }
+        }
         // The batch is fully accounted: release its in-flight claim and
         // wake anything blocked in `AdminHandle::drain`.
         {
@@ -759,7 +945,8 @@ mod tests {
         // batches than greedy dispatch would produce, and a partial
         // bucket must still dispatch — nothing hangs, nothing is lost.
         let model = mlp_model(4);
-        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 200_000, trace: false };
+        let opts =
+            ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 200_000, ..ServeOpts::default() };
         let (server, rx) = Server::start(model, opts);
         let mut rng = Rng::new(17);
         for _ in 0..6 {
@@ -786,7 +973,12 @@ mod tests {
         let model = mlp_model(4);
         // A window so large that waiting it out would trip the test's own
         // timeout many times over.
-        let opts = ServeOpts { max_batch: 4, workers: 1, wait_for_fill_us: 60_000_000, trace: false };
+        let opts = ServeOpts {
+            max_batch: 4,
+            workers: 1,
+            wait_for_fill_us: 60_000_000,
+            ..ServeOpts::default()
+        };
         let (server, rx) = Server::start(model, opts);
         let mut rng = Rng::new(19);
         let t0 = Instant::now();
@@ -1078,5 +1270,136 @@ mod tests {
         assert_eq!(final_report.requests, 100);
         let responses: Vec<Response> = rx.iter().collect();
         assert_eq!(responses.len(), 100, "no response lost across the drain");
+    }
+
+    #[test]
+    fn slo_deadlines_classify_and_land_in_the_report() {
+        // An impossible per-request deadline (0 ms) must violate; the
+        // server-default deadline (60 s) must be met. Violations carry a
+        // stage attribution, and the whole block lands in the report.
+        let model = mlp_model(4);
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts {
+                max_batch: 4,
+                workers: 1,
+                slo: Some(SloSpec { latency_ms: 60_000.0, objective: 0.9 }),
+                ..ServeOpts::default()
+            },
+        );
+        let mut rng = Rng::new(53);
+        for _ in 0..6 {
+            server.try_submit(rng.vec_f32(10, -1.0, 1.0)).unwrap();
+        }
+        for _ in 0..2 {
+            server
+                .try_submit_with_deadline(rng.vec_f32(10, -1.0, 1.0), Some(0.0))
+                .unwrap();
+        }
+        let report = server.shutdown();
+        assert_eq!(rx.iter().count(), 8);
+        let slo = report.slo.expect("SLO configured ⇒ summary present");
+        assert_eq!(slo.total, 8);
+        assert_eq!(slo.met, 6, "only the 0 ms-deadline requests can violate");
+        assert_eq!(slo.violations(), 2);
+        assert_eq!(
+            slo.viol_queue_wait + slo.viol_compute + slo.viol_reload,
+            2,
+            "every violation is attributed to exactly one stage"
+        );
+        assert!((slo.attainment - 0.75).abs() < 1e-12);
+        let json = report.to_json().to_string_compact();
+        assert!(json.contains("\"slo_attainment\""), "summary serialises: {}", json);
+    }
+
+    #[test]
+    fn no_slo_configured_means_no_slo_block_and_no_deadline() {
+        let model = mlp_model(4);
+        let (server, rx) =
+            Server::start(model, ServeOpts { max_batch: 4, workers: 1, ..ServeOpts::default() });
+        let mut rng = Rng::new(59);
+        server.submit(rng.vec_f32(10, -1.0, 1.0));
+        let report = server.shutdown();
+        assert_eq!(rx.iter().count(), 1);
+        assert!(report.slo.is_none());
+        assert!(!report.to_json().to_string_compact().contains("\"slo\""));
+    }
+
+    #[test]
+    fn reports_carry_server_info() {
+        let model = mlp_model(4);
+        let (server, _rx) =
+            Server::start(model, ServeOpts { max_batch: 4, workers: 2, ..ServeOpts::default() });
+        let snap = server.stats_snapshot();
+        let info = snap.info.expect("every report path attaches the server info");
+        assert_eq!(info.workers, 2);
+        assert_eq!(info.max_batch, 4);
+        assert_eq!(*info.buckets.last().unwrap(), 4);
+        assert!(info.arch.starts_with("mlp"), "arch tag: {}", info.arch);
+        let admin = server.admin_handle();
+        assert!(admin.stats().info.is_some());
+        assert!(server.shutdown().info.is_some());
+    }
+
+    #[test]
+    fn health_monitored_server_walks_ready_then_draining() {
+        use crate::telemetry::health::{self, HealthState, HealthThresholds};
+        let _g = crate::telemetry::test_lock();
+        health::install(HealthThresholds::default());
+        let h = health::current().unwrap();
+        let model = mlp_model(4);
+        let (server, rx) = Server::start(
+            model,
+            ServeOpts { max_batch: 4, workers: 2, health: true, ..ServeOpts::default() },
+        );
+        // Serve a little traffic so every worker has beaten at least once.
+        let mut rng = Rng::new(61);
+        server.submit_all((0..16).map(|_| rng.vec_f32(10, -1.0, 1.0)));
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while h.evaluate().state != HealthState::Ready {
+            assert!(std::time::Instant::now() < deadline, "never reached Ready");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let report = server.shutdown();
+        assert_eq!(report.requests, 16);
+        assert_eq!(rx.iter().count(), 16);
+        // Shutdown marks the pool draining and retires the group.
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Draining);
+        assert!(!snap.groups.iter().any(|g| g.name == "serve" && g.active));
+        health::uninstall();
+    }
+
+    #[test]
+    fn slo_and_health_instrumentation_is_bit_identical_to_plain() {
+        // Same contract as tracing: SLO accounting plus health
+        // monitoring may change timing side channels only.
+        let _g = crate::telemetry::test_lock();
+        let run = |instrumented: bool| -> BTreeMap<u64, Vec<f32>> {
+            use crate::telemetry::health::{self, HealthThresholds};
+            if instrumented {
+                health::install(HealthThresholds::default());
+            } else {
+                health::uninstall();
+            }
+            let slo = instrumented.then(SloSpec::default);
+            let model = mlp_model(4);
+            let (server, rx) = Server::start(
+                model,
+                ServeOpts {
+                    max_batch: 4,
+                    workers: 2,
+                    slo,
+                    health: instrumented,
+                    ..ServeOpts::default()
+                },
+            );
+            let mut rng = Rng::new(67);
+            server.submit_all((0..20).map(|_| rng.vec_f32(10, -1.0, 1.0)));
+            let _ = server.shutdown();
+            health::uninstall();
+            rx.iter().map(|r| (r.id, r.logits)).collect()
+        };
+        assert_eq!(run(true), run(false), "SLO/health must not change the logits");
     }
 }

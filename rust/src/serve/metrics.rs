@@ -10,10 +10,20 @@
 //! forever. Percentiles read from the histogram are accurate to within
 //! one bucket's relative width (≈8%); mean and max stay exact (tracked
 //! alongside the buckets). Queue depth uses the [`Online`] accumulator.
+//!
+//! When a latency SLO is configured, [`ServeStats`] additionally owns an
+//! [`SloStats`] accumulator (per-request met/violated classification with
+//! cause attribution, burn rate, error budget — see [`super::slo`]), and
+//! the whole registry can be rendered in **Prometheus text exposition
+//! format** ([`ServeStats::prometheus_into`]) for the `admin metrics`
+//! command — counters, Welford gauges, the log histograms as cumulative
+//! `_bucket{le=...}` rows — with no dependencies beyond `std`.
 
+use crate::serve::slo::{SloOutcome, SloSpec, SloStats, SloSummary};
 use crate::util::json::{obj, Json};
 use crate::util::stats::Online;
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 /// Histogram range: values below land in a dedicated underflow bucket,
 /// values at/above (and NaNs) in an overflow bucket.
@@ -145,6 +155,31 @@ impl LogHistogram {
     pub fn storage_buckets(&self) -> usize {
         self.counts.len()
     }
+
+    /// Exact sum of the finite samples (the Prometheus `_sum` series).
+    pub fn sum_secs(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative `(upper_bound_secs, count <= bound)` rows for Prometheus
+    /// exposition, downsampled to every `PROM_BUCKET_STRIDE`-th interior
+    /// boundary plus the mandatory `+Inf` row (which carries `total`,
+    /// NaNs included). Downsampling only widens each reported quantile's
+    /// bucket, it never breaks the cumulative invariant.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        const PROM_BUCKET_STRIDE: usize = 10;
+        let mut rows = Vec::with_capacity(HIST_BUCKETS / PROM_BUCKET_STRIDE + 1);
+        // The underflow bucket (< HIST_MIN_SECS) is inside every bound.
+        let mut cum = self.counts[0];
+        for i in 1..=HIST_BUCKETS {
+            cum += self.counts[i];
+            if i % PROM_BUCKET_STRIDE == 0 {
+                rows.push((HIST_MIN_SECS * (ln_growth() * i as f64).exp(), cum));
+            }
+        }
+        rows.push((f64::INFINITY, self.total));
+        rows
+    }
 }
 
 /// Per-bucket accounting: how many batches ran at this bucket size, how
@@ -212,6 +247,9 @@ pub struct ServeStats {
     /// Run-wide stage accumulators (the per-bucket splits, merged).
     queue_wait: Online,
     compute: Online,
+    /// SLO accounting, present only when a latency objective is
+    /// configured ([`ServeStats::with_slo`]).
+    slo: Option<SloStats>,
 }
 
 impl Default for ServeStats {
@@ -229,6 +267,28 @@ impl ServeStats {
             len_buckets: BTreeMap::new(),
             queue_wait: Online::new(),
             compute: Online::new(),
+            slo: None,
+        }
+    }
+
+    /// Stats with SLO accounting attached — the batcher constructs this
+    /// when `ServeOpts.slo` is set.
+    pub fn with_slo(spec: SloSpec) -> ServeStats {
+        ServeStats { slo: Some(SloStats::new(spec)), ..ServeStats::new() }
+    }
+
+    pub fn slo(&self) -> Option<&SloStats> {
+        self.slo.as_ref()
+    }
+
+    /// Account the SLO outcomes of one executed batch's real requests
+    /// (call right after [`record_batch`](Self::record_batch), under the
+    /// same lock). No-op when no SLO is configured.
+    pub fn record_slo(&mut self, bucket: usize, len_bucket: usize, outcomes: &[SloOutcome]) {
+        if let Some(slo) = self.slo.as_mut() {
+            for &o in outcomes {
+                slo.record(bucket, len_bucket, o);
+            }
         }
     }
 
@@ -310,6 +370,9 @@ impl ServeStats {
             requests: n,
             reloads,
             wall_secs,
+            uptime_secs: wall_secs,
+            slo: self.slo.as_ref().map(|s| s.summary()),
+            info: None,
             throughput_rps: if wall_secs > 0.0 { n as f64 / wall_secs } else { 0.0 },
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
@@ -351,6 +414,57 @@ impl ServeStats {
     }
 }
 
+/// Static server identity: what is loaded and how it is provisioned.
+/// Constant for the life of the server (a hot reload swaps weights, not
+/// architecture), so it is attached to reports rather than accumulated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerInfo {
+    /// Architecture tag of the loaded model (e.g. `mlp 64-128-10`).
+    pub arch: String,
+    /// Serving worker threads in the batcher pool.
+    pub workers: usize,
+    /// BRGEMM threads per forward plan.
+    pub threads: usize,
+    pub max_batch: usize,
+    /// Padded batch-size ladder the plans were built for.
+    pub buckets: Vec<usize>,
+    /// Sequence length-bucket ladder (empty for fixed-shape models).
+    pub len_buckets: Vec<usize>,
+}
+
+impl ServerInfo {
+    pub fn to_json(&self) -> Json {
+        let sizes = |v: &[usize]| Json::Arr(v.iter().map(|&b| b.into()).collect());
+        obj([
+            ("arch", self.arch.as_str().into()),
+            ("workers", self.workers.into()),
+            ("threads", self.threads.into()),
+            ("max_batch", self.max_batch.into()),
+            ("buckets", sizes(&self.buckets)),
+            ("len_buckets", sizes(&self.len_buckets)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        let fmt_ladder = |v: &[usize]| {
+            v.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")
+        };
+        let mut s = format!(
+            "server: {} — {} workers x {} threads, max batch {}, buckets [{}]",
+            self.arch,
+            self.workers,
+            self.threads,
+            self.max_batch,
+            fmt_ladder(&self.buckets)
+        );
+        if !self.len_buckets.is_empty() {
+            s.push_str(&format!(", len buckets [{}]", fmt_ladder(&self.len_buckets)));
+        }
+        s.push('\n');
+        s
+    }
+}
+
 /// The summary a serving run reports: throughput + latency percentiles +
 /// batching behaviour.
 #[derive(Debug, Clone)]
@@ -359,6 +473,16 @@ pub struct ServeReport {
     /// Hot weight reloads applied during the run (artifact swaps).
     pub reloads: u64,
     pub wall_secs: f64,
+    /// How long the server has been up when this report was taken. For a
+    /// final report this equals `wall_secs`; for a live `admin stats`
+    /// snapshot it is the server's age.
+    pub uptime_secs: f64,
+    /// SLO attainment summary, when a latency objective is configured.
+    pub slo: Option<SloSummary>,
+    /// Static server identity (model arch, pool sizes, bucket ladders) —
+    /// attached by the batcher's admin/report paths so an operator can
+    /// tell from `stats` what is actually loaded.
+    pub info: Option<ServerInfo>,
     pub throughput_rps: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -393,6 +517,9 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
+        if let Some(info) = &self.info {
+            s.push_str(&info.render());
+        }
         s.push_str(&format!(
             "served {} requests in {:.2} s — {:.1} req/s\n",
             self.requests, self.wall_secs, self.throughput_rps
@@ -411,6 +538,9 @@ impl ServeReport {
         ));
         if self.reloads > 0 {
             s.push_str(&format!("hot weight reloads: {}\n", self.reloads));
+        }
+        if let Some(slo) = &self.slo {
+            slo.render_into(&mut s);
         }
         s.push_str("batch-fill histogram (bucket: batches, mean fill, stage split, p99):\n");
         for (i, (bucket, batches, fill)) in self.batch_fill.iter().enumerate() {
@@ -470,10 +600,11 @@ impl ServeReport {
                 ])
             })
             .collect();
-        obj([
+        let mut row = obj([
             ("requests", (self.requests as f64).into()),
             ("reloads", (self.reloads as f64).into()),
             ("wall_s", self.wall_secs.into()),
+            ("uptime_secs", self.uptime_secs.into()),
             ("throughput_rps", self.throughput_rps.into()),
             ("p50_ms", self.p50_ms.into()),
             ("p95_ms", self.p95_ms.into()),
@@ -517,7 +648,310 @@ impl ServeReport {
                         .collect(),
                 ),
             ),
-        ])
+        ]);
+        // Optional blocks join only when configured — their absence (not
+        // a null) is what "SLO off" looks like downstream.
+        if let Json::Obj(fields) = &mut row {
+            if let Some(slo) = &self.slo {
+                fields.push(("slo".to_string(), slo.to_json()));
+            }
+            if let Some(info) = &self.info {
+                fields.push(("server".to_string(), info.to_json()));
+            }
+        }
+        row
+    }
+}
+
+// ---- Prometheus text exposition (no deps beyond std) ----
+
+/// Escape a Prometheus label value (backslash, double quote, newline).
+pub fn prom_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Format a sample value; Prometheus spells infinity `+Inf`/`-Inf`.
+fn prom_num(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{}", v)
+    }
+}
+
+fn prom_header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {} {}", name, help);
+    let _ = writeln!(out, "# TYPE {} {}", name, kind);
+}
+
+fn prom_sample(out: &mut String, name: &str, labels: &str, v: f64) {
+    let _ = writeln!(out, "{}{} {}", name, labels, prom_num(v));
+}
+
+impl ServeStats {
+    /// Render the serve registry in Prometheus text exposition format:
+    /// one `# HELP`/`# TYPE` header per family, monotone counts as
+    /// `_total` counters, Welford accumulators as mean/max gauges, and
+    /// the run-wide latency histogram as cumulative `_bucket{le="..."}`
+    /// rows (downsampled from the 240 native buckets). `queue_depth` is
+    /// the instantaneous backlog — the one gauge the CI smoke greps for.
+    pub fn prometheus_into(
+        &self,
+        out: &mut String,
+        wall_secs: f64,
+        reloads: u64,
+        queue_depth: usize,
+        info: Option<&ServerInfo>,
+    ) {
+        prom_header(out, "brgemm_serve_uptime_seconds", "gauge", "Server age in seconds.");
+        prom_sample(out, "brgemm_serve_uptime_seconds", "", wall_secs);
+        prom_header(out, "brgemm_serve_requests_total", "counter", "Requests answered.");
+        prom_sample(out, "brgemm_serve_requests_total", "", self.requests() as f64);
+        prom_header(out, "brgemm_serve_reloads_total", "counter", "Hot weight reloads applied.");
+        prom_sample(out, "brgemm_serve_reloads_total", "", reloads as f64);
+        prom_header(
+            out,
+            "brgemm_serve_queue_depth",
+            "gauge",
+            "Requests queued right now (instantaneous backlog).",
+        );
+        prom_sample(out, "brgemm_serve_queue_depth", "", queue_depth as f64);
+
+        let stage = |out: &mut String, name: &str, help: &str, o: &Online| {
+            prom_header(out, name, "gauge", help);
+            let (mean, max) = if o.n == 0 { (0.0, 0.0) } else { (o.mean(), o.max) };
+            prom_sample(out, name, "{stat=\"mean\"}", mean);
+            prom_sample(out, name, "{stat=\"max\"}", max);
+        };
+        stage(
+            out,
+            "brgemm_serve_queue_wait_seconds",
+            "Enqueue-to-dequeue wait of answered requests.",
+            &self.queue_wait,
+        );
+        stage(
+            out,
+            "brgemm_serve_compute_seconds",
+            "Forward-compute time per executed batch.",
+            &self.compute,
+        );
+
+        prom_header(
+            out,
+            "brgemm_serve_latency_seconds",
+            "histogram",
+            "End-to-end request latency (log-bucketed, downsampled).",
+        );
+        for (le, count) in self.latency.cumulative_buckets() {
+            prom_sample(
+                out,
+                "brgemm_serve_latency_seconds_bucket",
+                &format!("{{le=\"{}\"}}", prom_num(le)),
+                count as f64,
+            );
+        }
+        prom_sample(out, "brgemm_serve_latency_seconds_sum", "", self.latency.sum_secs());
+        prom_sample(out, "brgemm_serve_latency_seconds_count", "", self.latency.total() as f64);
+
+        prom_header(
+            out,
+            "brgemm_serve_bucket_requests_total",
+            "counter",
+            "Real requests served, by padded batch bucket.",
+        );
+        for (&b, s) in &self.buckets {
+            prom_sample(
+                out,
+                "brgemm_serve_bucket_requests_total",
+                &format!("{{bucket=\"{}\"}}", b),
+                s.requests as f64,
+            );
+        }
+        prom_header(
+            out,
+            "brgemm_serve_bucket_batches_total",
+            "counter",
+            "Batches executed, by padded batch bucket.",
+        );
+        for (&b, s) in &self.buckets {
+            prom_sample(
+                out,
+                "brgemm_serve_bucket_batches_total",
+                &format!("{{bucket=\"{}\"}}", b),
+                s.batches as f64,
+            );
+        }
+        if !self.len_buckets.is_empty() {
+            prom_header(
+                out,
+                "brgemm_serve_len_bucket_requests_total",
+                "counter",
+                "Real requests served, by sequence length bucket.",
+            );
+            for (&lb, s) in &self.len_buckets {
+                prom_sample(
+                    out,
+                    "brgemm_serve_len_bucket_requests_total",
+                    &format!("{{len_bucket=\"{}\"}}", lb),
+                    s.requests as f64,
+                );
+            }
+        }
+
+        if let Some(slo) = &self.slo {
+            let s = slo.summary();
+            prom_header(
+                out,
+                "brgemm_slo_attainment",
+                "gauge",
+                "Fraction of requests that met their deadline.",
+            );
+            prom_sample(out, "brgemm_slo_attainment", "", s.attainment);
+            prom_header(
+                out,
+                "brgemm_slo_error_budget_remaining",
+                "gauge",
+                "Unspent fraction of the run's violation allowance (negative = objective blown).",
+            );
+            prom_sample(out, "brgemm_slo_error_budget_remaining", "", s.error_budget_remaining);
+            prom_header(
+                out,
+                "brgemm_slo_burn_rate",
+                "gauge",
+                "Windowed violation rate over the budget rate (1.0 = sustainable pace).",
+            );
+            prom_sample(out, "brgemm_slo_burn_rate", "{window=\"short\"}", s.burn_rate_short);
+            prom_sample(out, "brgemm_slo_burn_rate", "{window=\"long\"}", s.burn_rate_long);
+            prom_header(
+                out,
+                "brgemm_slo_violations_total",
+                "counter",
+                "Deadline violations, attributed to their dominant stage.",
+            );
+            prom_sample(
+                out,
+                "brgemm_slo_violations_total",
+                "{cause=\"queue_wait\"}",
+                s.viol_queue_wait as f64,
+            );
+            prom_sample(
+                out,
+                "brgemm_slo_violations_total",
+                "{cause=\"compute\"}",
+                s.viol_compute as f64,
+            );
+            prom_sample(
+                out,
+                "brgemm_slo_violations_total",
+                "{cause=\"reload_stall\"}",
+                s.viol_reload as f64,
+            );
+        }
+
+        if let Some(info) = info {
+            prom_header(
+                out,
+                "brgemm_serve_info",
+                "gauge",
+                "Static server identity (constant 1; the identity is in the labels).",
+            );
+            prom_sample(
+                out,
+                "brgemm_serve_info",
+                &format!(
+                    "{{arch=\"{}\",workers=\"{}\",threads=\"{}\",max_batch=\"{}\"}}",
+                    prom_label(&info.arch),
+                    info.workers,
+                    info.threads,
+                    info.max_batch
+                ),
+                1.0,
+            );
+        }
+    }
+}
+
+/// Append the health plane's families to a Prometheus rendering.
+pub fn prometheus_health_into(out: &mut String, snap: &crate::telemetry::health::HealthSnapshot) {
+    prom_header(
+        out,
+        "brgemm_health_state",
+        "gauge",
+        "Derived health state: 0=starting, 1=ready, 2=degraded, 3=draining.",
+    );
+    prom_sample(out, "brgemm_health_state", "", snap.state.code() as f64);
+    prom_header(
+        out,
+        "brgemm_health_heartbeats_total",
+        "counter",
+        "Per-worker heartbeats (serve: per batch/wake; train: per step).",
+    );
+    for g in &snap.groups {
+        for (i, &beats) in g.beats.iter().enumerate() {
+            prom_sample(
+                out,
+                "brgemm_health_heartbeats_total",
+                &format!("{{group=\"{}\",worker=\"{}\"}}", prom_label(&g.name), i),
+                beats as f64,
+            );
+        }
+    }
+    prom_header(out, "brgemm_health_reload_failures_total", "counter", "Failed hot reloads.");
+    prom_sample(out, "brgemm_health_reload_failures_total", "", snap.reload_failures as f64);
+}
+
+/// Append the BRGEMM profiler's per-primitive families (when installed).
+pub fn prometheus_profiler_into(out: &mut String, prof: &crate::telemetry::Profiler) {
+    use crate::telemetry::Pass;
+    let slots = prof.slots();
+    if slots.is_empty() {
+        return;
+    }
+    struct Family {
+        name: &'static str,
+        help: &'static str,
+        read: fn(&crate::telemetry::PassSnapshot) -> f64,
+    }
+    let families = [
+        Family {
+            name: "brgemm_prim_calls_total",
+            help: "Primitive pass executions.",
+            read: |s| s.calls as f64,
+        },
+        Family {
+            name: "brgemm_prim_brgemm_calls_total",
+            help: "BRGEMM kernel invocations.",
+            read: |s| s.brgemm_calls as f64,
+        },
+        Family {
+            name: "brgemm_prim_seconds_total",
+            help: "Wall seconds spent in the primitive pass.",
+            read: |s| s.secs,
+        },
+    ];
+    for fam in &families {
+        prom_header(out, fam.name, "counter", fam.help);
+        for slot in &slots {
+            for pass in [Pass::Fwd, Pass::Bwd, Pass::Upd] {
+                let s = slot.pass_snapshot(pass);
+                if s.calls == 0 {
+                    continue;
+                }
+                prom_sample(
+                    out,
+                    fam.name,
+                    &format!(
+                        "{{kind=\"{}\",label=\"{}\",pass=\"{}\"}}",
+                        slot.kind(),
+                        prom_label(slot.label()),
+                        pass.name()
+                    ),
+                    (fam.read)(&s),
+                );
+            }
+        }
     }
 }
 
@@ -731,5 +1165,159 @@ mod tests {
         assert_eq!(r.p99_ms, 0.0);
         assert_eq!(r.queue_depth_max, 0.0);
         assert!(r.batch_fill.is_empty());
+        assert!(r.slo.is_none() && r.info.is_none());
+        assert!((r.uptime_secs - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_end_at_inf() {
+        let mut h = LogHistogram::new();
+        h.record(0.0); // underflow
+        for i in 0..200 {
+            h.record(0.0005 * (i + 1) as f64); // spread over the range
+        }
+        h.record(f64::NAN); // overflow bucket, counts toward total
+        let rows = h.cumulative_buckets();
+        let mut prev_le = 0.0;
+        let mut prev_count = 0;
+        for &(le, count) in &rows {
+            assert!(le > prev_le, "bounds strictly increase");
+            assert!(count >= prev_count, "counts are cumulative");
+            prev_le = le;
+            prev_count = count;
+        }
+        let &(last_le, last_count) = rows.last().unwrap();
+        assert_eq!(last_le, f64::INFINITY, "mandatory +Inf bucket");
+        assert_eq!(last_count, h.total(), "+Inf carries everything, NaNs included");
+        // Downsampled: far fewer rows than native buckets, but plural.
+        assert!(rows.len() > 5 && rows.len() < HIST_BUCKETS, "{}", rows.len());
+        // The exact sum rides along for the _sum series.
+        assert!((h.sum_secs() - (0..200).map(|i| 0.0005 * (i + 1) as f64).sum::<f64>()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slo_outcomes_flow_into_report_render_and_json() {
+        use crate::serve::slo::{SloCause, SloOutcome};
+        let mut st = ServeStats::with_slo(SloSpec { latency_ms: 25.0, objective: 0.9 });
+        st.record_batch(4, 0, 4, 0, &[0.010, 0.020, 0.030, 0.040], &[0.001; 4], 0.005);
+        st.record_slo(
+            4,
+            0,
+            &[
+                SloOutcome { met: true, cause: None },
+                SloOutcome { met: true, cause: None },
+                SloOutcome { met: false, cause: Some(SloCause::QueueWait) },
+                SloOutcome { met: false, cause: Some(SloCause::Compute) },
+            ],
+        );
+        let r = st.report(1.0, 0);
+        let slo = r.slo.as_ref().expect("slo summary present");
+        assert_eq!((slo.total, slo.met), (4, 2));
+        assert_eq!((slo.viol_queue_wait, slo.viol_compute), (1, 1));
+        assert!(r.render().contains("slo:"), "{}", r.render());
+        let j = r.to_json().to_string_compact();
+        assert!(j.contains("\"slo_attainment\":0.5"), "{}", j);
+        assert!(j.contains("\"viol_queue_wait\":1"), "{}", j);
+        // Without SLO config, record_slo is a no-op and the key is absent.
+        let mut plain = ServeStats::new();
+        plain.record_batch(4, 0, 1, 0, &[0.01], &[0.001], 0.005);
+        plain.record_slo(4, 0, &[SloOutcome { met: true, cause: None }]);
+        let pj = plain.report(1.0, 0).to_json().to_string_compact();
+        assert!(!pj.contains("\"slo\""), "{}", pj);
+    }
+
+    #[test]
+    fn server_info_lands_in_render_and_json() {
+        let mut r = ServeStats::new().report(1.0, 0);
+        r.info = Some(ServerInfo {
+            arch: "mlp 64-128-10".into(),
+            workers: 2,
+            threads: 1,
+            max_batch: 8,
+            buckets: vec![1, 2, 4, 8],
+            len_buckets: vec![],
+        });
+        assert!(r.render().contains("server: mlp 64-128-10"), "{}", r.render());
+        let j = r.to_json();
+        let server = j.get("server").expect("server block");
+        assert_eq!(server.get("workers").and_then(|w| w.as_f64()), Some(2.0));
+        assert_eq!(server.get("arch").and_then(|a| a.as_str()), Some("mlp 64-128-10"));
+    }
+
+    #[test]
+    fn prometheus_rendering_is_wellformed_exposition_text() {
+        use crate::serve::slo::{SloCause, SloOutcome};
+        let mut st = ServeStats::with_slo(SloSpec::default());
+        st.record_batch(4, 8, 2, 3, &[0.010, 0.020], &[0.001; 2], 0.005);
+        st.record_slo(
+            4,
+            8,
+            &[
+                SloOutcome { met: true, cause: None },
+                SloOutcome { met: false, cause: Some(SloCause::Compute) },
+            ],
+        );
+        let info = ServerInfo {
+            arch: "rnn \"quoted\" 2x32".into(),
+            workers: 2,
+            threads: 1,
+            max_batch: 8,
+            buckets: vec![1, 2, 4, 8],
+            len_buckets: vec![4, 8],
+        };
+        let mut out = String::new();
+        st.prometheus_into(&mut out, 12.5, 1, 3, Some(&info));
+        // Every family has a TYPE header; every sample line is
+        // `name{labels} value` with a parseable float value.
+        let mut type_lines = 0;
+        for line in out.lines() {
+            assert!(!line.is_empty(), "no blank lines inside exposition");
+            if line.starts_with("# TYPE ") || line.starts_with("# HELP ") {
+                if line.starts_with("# TYPE ") {
+                    type_lines += 1;
+                }
+                continue;
+            }
+            let value = line.rsplit(' ').next().unwrap();
+            assert!(
+                value == "+Inf" || value.parse::<f64>().is_ok(),
+                "unparseable sample value in {:?}",
+                line
+            );
+        }
+        assert!(type_lines >= 8, "one TYPE per family, got {}", type_lines);
+        assert!(out.contains("brgemm_serve_queue_depth 3"), "{}", out);
+        assert!(out.contains("brgemm_slo_attainment 0.5"), "{}", out);
+        assert!(out.contains("le=\"+Inf\""), "{}", out);
+        assert!(out.contains("brgemm_serve_len_bucket_requests_total{len_bucket=\"8\"} 2"));
+        // Label escaping: the quoted arch survives as \" inside the label.
+        assert!(out.contains("arch=\"rnn \\\"quoted\\\" 2x32\""), "{}", out);
+        // Cumulative invariant on the histogram rows.
+        let mut prev = 0.0;
+        for line in out.lines().filter(|l| l.starts_with("brgemm_serve_latency_seconds_bucket")) {
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "histogram rows must be cumulative: {}", line);
+            prev = v;
+        }
+        assert_eq!(prev, 2.0, "+Inf row carries the count");
+    }
+
+    #[test]
+    fn prometheus_health_and_profiler_families_render() {
+        use crate::telemetry::health::{Health, HealthThresholds};
+        let h = Health::new(HealthThresholds::default());
+        let g = h.register("serve", 2);
+        g.beat(0);
+        g.beat(0);
+        g.beat(1);
+        let mut out = String::new();
+        prometheus_health_into(&mut out, &h.evaluate());
+        assert!(out.contains("# TYPE brgemm_health_state gauge"), "{}", out);
+        assert!(out.contains("brgemm_health_state 1"), "ready encodes as 1: {}", out);
+        assert!(
+            out.contains("brgemm_health_heartbeats_total{group=\"serve\",worker=\"0\"} 2"),
+            "{}",
+            out
+        );
     }
 }

@@ -38,7 +38,11 @@
 //!   pool, drain-on-shutdown semantics, hot reload entry point.
 //! * [`metrics`] — per-request latency (p50/p95/p99), throughput, queue
 //!   depth, the batch-fill histogram, and the reload counter, with JSON
-//!   export.
+//!   export and Prometheus text exposition (`admin metrics`).
+//! * [`slo`]     — the SLO plane: per-request deadlines stamped at
+//!   submit, met/violated classification with queue-vs-compute-vs-reload
+//!   attribution, run-wide and per-bucket attainment, multi-window burn
+//!   rate and error-budget accounting ([`ServeOpts::slo`]).
 //! * [`loadgen`] — deterministic open-loop load generator (Poisson
 //!   arrivals from [`crate::util::rng`]); [`loadgen::seq_request_source`]
 //!   draws GNMT-style mixed-length sequence requests from the same seed.
@@ -47,8 +51,9 @@
 //!   long-running server tracks a concurrent trainer's checkpoints.
 //! * [`admin`]   — `--admin-sock`: a Unix-domain-socket control endpoint
 //!   speaking line-delimited JSON (`stats` / `trace` / `reload` /
-//!   `drain`) over an [`AdminHandle`] — the push-style superset of the
-//!   poll-only watcher.
+//!   `drain` / `health` / `metrics`) over an [`AdminHandle`] — the
+//!   push-style superset of the poll-only watcher, one thread per
+//!   connection so liveness polls answer during a blocking drain.
 //!
 //! Forward-only plans cover all three of the paper's workload classes —
 //! MLP, CNN, and RNN (a stack of LSTM cells + classifier head,
@@ -69,6 +74,7 @@ pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
 pub mod model;
+pub mod slo;
 pub mod watch;
 
 pub use admin::AdminServer;
@@ -77,6 +83,7 @@ pub use loadgen::{
     drive_open_loop, drive_open_loop_every, run_open_loop, run_open_loop_with, seq_request_len,
     seq_request_source, LoadSpec,
 };
-pub use metrics::{ServeReport, ServeStats};
+pub use metrics::{ServeReport, ServeStats, ServerInfo};
+pub use slo::{SloSpec, SloSummary};
 pub use model::{InferenceModel, NetSpec, ServeScratch};
 pub use watch::ModelWatcher;

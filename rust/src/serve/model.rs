@@ -764,6 +764,23 @@ impl InferenceModel {
         self.canon_conv.len() + self.canon_lstm.len() + self.canon_fc.len()
     }
 
+    /// BRGEMM threads per forward plan (every primitive in a model is
+    /// built with the same count; every model has at least the FC head).
+    pub fn nthreads(&self) -> usize {
+        self.canon_fc.first().map_or(1, |c| c.nthreads)
+    }
+
+    /// Time one acquisition of the weight-generation read lock. In the
+    /// steady state this is nanoseconds (an uncontended `RwLock` read);
+    /// during a hot reload's write-swap it measures how long the caller
+    /// was stalled behind the swap — the SLO plane's `reload_stall`
+    /// attribution signal.
+    pub fn weight_pin_wait_secs(&self) -> f64 {
+        let t0 = std::time::Instant::now();
+        drop(self.weights.read().unwrap());
+        t0.elapsed().as_secs_f64()
+    }
+
     /// Forward `bucket` samples (plain `[bucket][input_dim]`, padded rows
     /// included) through the bucket's plan; returns plain
     /// `[bucket][classes]` logits. Allocating convenience wrapper over

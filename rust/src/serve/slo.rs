@@ -1,0 +1,552 @@
+//! SLO plane: per-request deadlines, attainment accounting, violation
+//! attribution, and SRE-style burn-rate / error-budget tracking.
+//!
+//! PR 6/8 gave the serve path *measurements* (stage split, histograms,
+//! traces); this module turns them into an *objective*: every request is
+//! stamped with a deadline at submit (default from
+//! [`SloSpec::latency_ms`], per-request override allowed), classified
+//! met/violated when it is answered, and every violation is **attributed**
+//! to the stage that dominated it — queue wait (batcher backlog), compute
+//! (the bucket plan's forward pass), or reload stall (blocked on the
+//! weight-generation swap of a hot reload). Attainment is accounted
+//! run-wide, per batch bucket and per length bucket, plus two SRE-style
+//! rolling windows:
+//!
+//! * **burn rate** — the windowed violation rate divided by the budget
+//!   rate `1 - objective`. Burn 1.0 = spending the error budget exactly
+//!   at the sustainable pace; 10 = ten times too fast. The short window
+//!   reacts in seconds (paging signal), the long window smooths over the
+//!   full ring (ticket signal) — the classic multi-window alert pair.
+//! * **error budget remaining** — `1 - violations / (total · (1 -
+//!   objective))`: the fraction of the run's violation allowance still
+//!   unspent (negative = the run has already blown its objective).
+//!
+//! Everything here is pure accounting over numbers the batcher already
+//! measures: no clocks are read and no locks are taken beyond the stats
+//! mutex the serve metrics already hold, so the disabled path stays the
+//! one branch the observability planes promise (`ServeOpts.slo = None`),
+//! and enabling it cannot change the math (covered by the serve
+//! bit-identity test).
+
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// A latency service-level objective: "`objective` of requests answer
+/// within `latency_ms`". The serve config spells it
+/// `{"serve": {"slo": {"latency_ms": 50, "objective": 0.99}}}`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Deadline stamped on every request at submit (milliseconds).
+    pub latency_ms: f64,
+    /// Target attainment fraction in (0, 1): the budget rate is
+    /// `1 - objective`.
+    pub objective: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> SloSpec {
+        SloSpec { latency_ms: 50.0, objective: 0.99 }
+    }
+}
+
+impl SloSpec {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(self.latency_ms > 0.0) || !self.latency_ms.is_finite() {
+            anyhow::bail!("slo.latency_ms must be a positive, finite number of milliseconds");
+        }
+        if !(self.objective > 0.0 && self.objective < 1.0) {
+            anyhow::bail!("slo.objective must be a fraction in (0, 1), e.g. 0.99");
+        }
+        Ok(())
+    }
+
+    /// The default per-request deadline in seconds.
+    pub fn deadline_secs(&self) -> f64 {
+        self.latency_ms * 1e-3
+    }
+
+    /// The budget rate `1 - objective`, floored away from zero so burn
+    /// rates stay finite.
+    pub fn budget_rate(&self) -> f64 {
+        (1.0 - self.objective).max(1e-12)
+    }
+}
+
+/// The stage a violation is attributed to: whichever of the request's
+/// measured components dominated its latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloCause {
+    /// Enqueue → dequeue dominated: the batcher backlog, not the model.
+    QueueWait,
+    /// The bucket plan's forward pass dominated.
+    Compute,
+    /// The wait to pin a weight generation dominated: a hot reload's
+    /// swap blocked the worker.
+    ReloadStall,
+}
+
+impl SloCause {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloCause::QueueWait => "queue_wait",
+            SloCause::Compute => "compute",
+            SloCause::ReloadStall => "reload_stall",
+        }
+    }
+}
+
+/// One request's verdict: met, or violated with the dominant stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloOutcome {
+    pub met: bool,
+    pub cause: Option<SloCause>,
+}
+
+/// Classify one answered request against its deadline (all arguments in
+/// seconds). A violation is attributed to the *largest* measured
+/// component; ties resolve queue-wait over compute over reload-stall,
+/// the order in which an operator can actually intervene (add workers /
+/// shrink the model / reschedule reloads).
+pub fn classify(
+    deadline_secs: f64,
+    latency_secs: f64,
+    queue_wait_secs: f64,
+    compute_secs: f64,
+    reload_stall_secs: f64,
+) -> SloOutcome {
+    if latency_secs <= deadline_secs {
+        return SloOutcome { met: true, cause: None };
+    }
+    let cause = if queue_wait_secs >= compute_secs && queue_wait_secs >= reload_stall_secs {
+        SloCause::QueueWait
+    } else if compute_secs >= reload_stall_secs {
+        SloCause::Compute
+    } else {
+        SloCause::ReloadStall
+    };
+    SloOutcome { met: false, cause: Some(cause) }
+}
+
+/// Burn-window geometry: 1-second slots over a 60-slot ring. The short
+/// window (5 s) is the fast page-worthy signal, the long window is the
+/// whole ring (60 s). Runs shorter than one slot land everything in slot
+/// zero, so both windows degrade gracefully to the run-wide rate.
+const SLOT_SECS: f64 = 1.0;
+const RING_SLOTS: usize = 60;
+const SHORT_WINDOW_SLOTS: usize = 5;
+
+/// A fixed ring of per-slot (total, violated) counters. O(1) memory in
+/// the request count, like the serve histograms.
+#[derive(Debug, Clone)]
+struct BurnRing {
+    slots: Vec<(u64, u64)>,
+    /// Highest absolute slot index ever written (slots advance with the
+    /// run clock; the ring position is `slot % RING_SLOTS`).
+    head: u64,
+}
+
+impl BurnRing {
+    fn new() -> BurnRing {
+        BurnRing { slots: vec![(0, 0); RING_SLOTS], head: 0 }
+    }
+
+    /// Record one request into the slot for `elapsed_secs` since the
+    /// stats epoch, zeroing any slots the clock skipped past.
+    fn record(&mut self, elapsed_secs: f64, met: bool) {
+        let slot = (elapsed_secs.max(0.0) / SLOT_SECS) as u64;
+        if slot > self.head {
+            // Clear everything between the old head and the new slot —
+            // those seconds saw no traffic and must read as zero.
+            let gap = (slot - self.head).min(RING_SLOTS as u64);
+            for d in 1..=gap {
+                self.slots[((self.head + d) % RING_SLOTS as u64) as usize] = (0, 0);
+            }
+            self.head = slot;
+        }
+        // Late-arriving records older than the ring are folded into the
+        // oldest live slot rather than resurrecting an expired one.
+        let slot = slot.max(self.head.saturating_sub(RING_SLOTS as u64 - 1));
+        let s = &mut self.slots[(slot % RING_SLOTS as u64) as usize];
+        s.0 += 1;
+        s.1 += u64::from(!met);
+    }
+
+    /// Violation fraction over the most recent `window` slots, or `None`
+    /// when the window saw no traffic.
+    fn violation_rate(&self, window: usize) -> Option<f64> {
+        let window = window.min(RING_SLOTS) as u64;
+        let (mut total, mut viol) = (0u64, 0u64);
+        for d in 0..window.min(self.head + 1) {
+            let s = self.slots[((self.head - d) % RING_SLOTS as u64) as usize];
+            total += s.0;
+            viol += s.1;
+        }
+        (total > 0).then(|| viol as f64 / total as f64)
+    }
+}
+
+/// Run-wide SLO accounting, owned by `ServeStats` under its existing
+/// mutex. The clock epoch is the stats' construction (server start).
+#[derive(Debug, Clone)]
+pub struct SloStats {
+    spec: SloSpec,
+    started: Instant,
+    total: u64,
+    met: u64,
+    /// Violations by cause, indexed [queue_wait, compute, reload_stall].
+    viol: [u64; 3],
+    /// Per batch bucket: (total, met).
+    per_bucket: BTreeMap<usize, (u64, u64)>,
+    /// Per length bucket: (total, met). Fixed-length models never record
+    /// here (len bucket 0 is the batcher's "not a sequence" sentinel).
+    per_len_bucket: BTreeMap<usize, (u64, u64)>,
+    ring: BurnRing,
+}
+
+impl SloStats {
+    pub fn new(spec: SloSpec) -> SloStats {
+        SloStats {
+            spec,
+            started: Instant::now(),
+            total: 0,
+            met: 0,
+            viol: [0; 3],
+            per_bucket: BTreeMap::new(),
+            per_len_bucket: BTreeMap::new(),
+            ring: BurnRing::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &SloSpec {
+        &self.spec
+    }
+
+    /// Account one answered request (called by the batcher worker under
+    /// the stats lock, right after `record_batch`).
+    pub fn record(&mut self, bucket: usize, len_bucket: usize, outcome: SloOutcome) {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        self.record_at(elapsed, bucket, len_bucket, outcome);
+    }
+
+    /// Clock-injected form of [`record`](Self::record) — the unit tests
+    /// drive the burn windows deterministically through this.
+    fn record_at(&mut self, elapsed_secs: f64, bucket: usize, len_bucket: usize, o: SloOutcome) {
+        self.total += 1;
+        if o.met {
+            self.met += 1;
+        } else {
+            let idx = match o.cause.unwrap_or(SloCause::Compute) {
+                SloCause::QueueWait => 0,
+                SloCause::Compute => 1,
+                SloCause::ReloadStall => 2,
+            };
+            self.viol[idx] += 1;
+        }
+        let b = self.per_bucket.entry(bucket).or_insert((0, 0));
+        b.0 += 1;
+        b.1 += u64::from(o.met);
+        if len_bucket > 0 {
+            let lb = self.per_len_bucket.entry(len_bucket).or_insert((0, 0));
+            lb.0 += 1;
+            lb.1 += u64::from(o.met);
+        }
+        self.ring.record(elapsed_secs, o.met);
+    }
+
+    /// Short-window burn rate alone — the health plane's per-batch feed,
+    /// cheaper than building a full [`summary`](Self::summary).
+    pub fn burn_rate_short(&self) -> f64 {
+        self.ring
+            .violation_rate(SHORT_WINDOW_SLOTS)
+            .map_or(0.0, |r| r / self.spec.budget_rate())
+    }
+
+    /// The exported summary (lands in `ServeReport.slo`).
+    pub fn summary(&self) -> SloSummary {
+        let violations = self.total - self.met;
+        let attainment = if self.total == 0 {
+            1.0
+        } else {
+            self.met as f64 / self.total as f64
+        };
+        let budget = self.spec.budget_rate();
+        let burn = |w: usize| self.ring.violation_rate(w).map_or(0.0, |r| r / budget);
+        let error_budget_remaining = if self.total == 0 {
+            1.0
+        } else {
+            1.0 - violations as f64 / (self.total as f64 * budget)
+        };
+        SloSummary {
+            latency_ms: self.spec.latency_ms,
+            objective: self.spec.objective,
+            total: self.total,
+            met: self.met,
+            attainment,
+            viol_queue_wait: self.viol[0],
+            viol_compute: self.viol[1],
+            viol_reload: self.viol[2],
+            burn_rate_short: burn(SHORT_WINDOW_SLOTS),
+            burn_rate_long: burn(RING_SLOTS),
+            error_budget_remaining,
+            per_bucket: self.per_bucket.iter().map(|(&b, &(t, m))| (b, t, m)).collect(),
+            per_len_bucket: self.per_len_bucket.iter().map(|(&b, &(t, m))| (b, t, m)).collect(),
+        }
+    }
+}
+
+/// Point-in-time SLO summary: the render/JSON-facing flattening of
+/// [`SloStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSummary {
+    pub latency_ms: f64,
+    pub objective: f64,
+    pub total: u64,
+    pub met: u64,
+    pub attainment: f64,
+    pub viol_queue_wait: u64,
+    pub viol_compute: u64,
+    pub viol_reload: u64,
+    pub burn_rate_short: f64,
+    pub burn_rate_long: f64,
+    pub error_budget_remaining: f64,
+    /// `(batch bucket, total, met)` rows.
+    pub per_bucket: Vec<(usize, u64, u64)>,
+    /// `(length bucket, total, met)` rows (sequence models only).
+    pub per_len_bucket: Vec<(usize, u64, u64)>,
+}
+
+impl SloSummary {
+    pub fn violations(&self) -> u64 {
+        self.total - self.met
+    }
+
+    /// JSON export. Key names `slo_attainment` / `error_budget_remaining`
+    /// are the ones `perfcheck --require` and the perf comparator know.
+    pub fn to_json(&self) -> Json {
+        let bucket_rows = |rows: &[(usize, u64, u64)], key: &str| {
+            Json::Arr(
+                rows.iter()
+                    .map(|&(b, t, m)| {
+                        obj([
+                            (key, b.into()),
+                            ("requests", (t as f64).into()),
+                            ("met", (m as f64).into()),
+                            (
+                                "slo_attainment",
+                                (if t == 0 { 1.0 } else { m as f64 / t as f64 }).into(),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        obj([
+            ("latency_ms", self.latency_ms.into()),
+            ("objective", self.objective.into()),
+            ("requests", (self.total as f64).into()),
+            ("met", (self.met as f64).into()),
+            ("slo_attainment", self.attainment.into()),
+            ("violations", (self.violations() as f64).into()),
+            ("viol_queue_wait", (self.viol_queue_wait as f64).into()),
+            ("viol_compute", (self.viol_compute as f64).into()),
+            ("viol_reload", (self.viol_reload as f64).into()),
+            ("burn_rate_short", self.burn_rate_short.into()),
+            ("burn_rate_long", self.burn_rate_long.into()),
+            ("error_budget_remaining", self.error_budget_remaining.into()),
+            ("slo_buckets", bucket_rows(&self.per_bucket, "bucket")),
+            ("slo_len_buckets", bucket_rows(&self.per_len_bucket, "len_bucket")),
+        ])
+    }
+
+    /// Append the human-readable block to a serve report rendering.
+    pub fn render_into(&self, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(
+            out,
+            "  slo: {:.1} ms @ {:.2}% — attainment {:.2}% ({} of {} met)",
+            self.latency_ms,
+            self.objective * 100.0,
+            self.attainment * 100.0,
+            self.met,
+            self.total
+        );
+        let _ = writeln!(
+            out,
+            "    violations {} (queue_wait {}, compute {}, reload_stall {})",
+            self.violations(),
+            self.viol_queue_wait,
+            self.viol_compute,
+            self.viol_reload
+        );
+        let _ = writeln!(
+            out,
+            "    burn rate {:.2} (short) / {:.2} (long), error budget remaining {:.1}%",
+            self.burn_rate_short,
+            self.burn_rate_long,
+            self.error_budget_remaining * 100.0
+        );
+        for &(b, t, m) in &self.per_bucket {
+            let _ = writeln!(
+                out,
+                "    bucket {:>4}: {:.2}% attained ({} of {})",
+                b,
+                if t == 0 { 100.0 } else { 100.0 * m as f64 / t as f64 },
+                m,
+                t
+            );
+        }
+        for &(b, t, m) in &self.per_len_bucket {
+            let _ = writeln!(
+                out,
+                "    len bucket {:>4}: {:.2}% attained ({} of {})",
+                b,
+                if t == 0 { 100.0 } else { 100.0 * m as f64 / t as f64 },
+                m,
+                t
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validates() {
+        assert!(SloSpec::default().validate().is_ok());
+        assert!(SloSpec { latency_ms: 0.0, objective: 0.99 }.validate().is_err());
+        assert!(SloSpec { latency_ms: -5.0, objective: 0.99 }.validate().is_err());
+        assert!(SloSpec { latency_ms: f64::NAN, objective: 0.99 }.validate().is_err());
+        assert!(SloSpec { latency_ms: 10.0, objective: 0.0 }.validate().is_err());
+        assert!(SloSpec { latency_ms: 10.0, objective: 1.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn classify_meets_and_attributes_dominant_stage() {
+        // Under deadline: met, no cause.
+        let o = classify(0.050, 0.010, 0.002, 0.008, 0.0);
+        assert!(o.met && o.cause.is_none());
+        // Deadline is inclusive.
+        assert!(classify(0.050, 0.050, 0.0, 0.050, 0.0).met);
+        // Queue wait dominates.
+        let o = classify(0.010, 0.030, 0.025, 0.005, 0.0);
+        assert_eq!(o.cause, Some(SloCause::QueueWait));
+        // Compute dominates.
+        let o = classify(0.010, 0.030, 0.005, 0.025, 0.0);
+        assert_eq!(o.cause, Some(SloCause::Compute));
+        // Reload stall dominates: the weight-pin wait outweighed both.
+        let o = classify(0.010, 0.030, 0.002, 0.003, 0.025);
+        assert_eq!(o.cause, Some(SloCause::ReloadStall));
+        // Ties resolve queue_wait > compute > reload_stall.
+        let o = classify(0.010, 0.030, 0.015, 0.015, 0.015);
+        assert_eq!(o.cause, Some(SloCause::QueueWait));
+        let o = classify(0.010, 0.030, 0.001, 0.015, 0.015);
+        assert_eq!(o.cause, Some(SloCause::Compute));
+    }
+
+    fn met() -> SloOutcome {
+        SloOutcome { met: true, cause: None }
+    }
+
+    fn viol(cause: SloCause) -> SloOutcome {
+        SloOutcome { met: false, cause: Some(cause) }
+    }
+
+    #[test]
+    fn attainment_and_budget_account_run_wide_and_per_bucket() {
+        let mut s = SloStats::new(SloSpec { latency_ms: 10.0, objective: 0.9 });
+        // 8 met + 2 violated = 80% attainment against a 90% objective:
+        // the 10% budget allows 1 violation in 10; 2 spend it twice over.
+        for i in 0..8 {
+            s.record_at(0.1 * i as f64, 4, 0, met());
+        }
+        s.record_at(0.85, 4, 0, viol(SloCause::QueueWait));
+        s.record_at(0.9, 8, 0, viol(SloCause::Compute));
+        let sum = s.summary();
+        assert_eq!((sum.total, sum.met), (10, 8));
+        assert!((sum.attainment - 0.8).abs() < 1e-12);
+        assert_eq!((sum.viol_queue_wait, sum.viol_compute, sum.viol_reload), (1, 1, 0));
+        // error budget: 1 - 2 / (10 * 0.1) = -1.0 (blown twice over).
+        assert!((sum.error_budget_remaining - (-1.0)).abs() < 1e-9);
+        // Everything within one slot: both windows see rate 0.2, burn
+        // 0.2 / 0.1 = 2.
+        assert!((sum.burn_rate_short - 2.0).abs() < 1e-9);
+        assert!((sum.burn_rate_long - 2.0).abs() < 1e-9);
+        // Bucket split: bucket 4 took 9 (8 met), bucket 8 took 1 (0 met).
+        assert_eq!(sum.per_bucket, vec![(4, 9, 8), (8, 1, 0)]);
+        assert!(sum.per_len_bucket.is_empty(), "len bucket 0 is the sentinel");
+    }
+
+    #[test]
+    fn short_window_recovers_while_long_window_remembers() {
+        let mut s = SloStats::new(SloSpec { latency_ms: 10.0, objective: 0.9 });
+        // Second 0: a burst of violations.
+        for _ in 0..10 {
+            s.record_at(0.5, 2, 0, viol(SloCause::Compute));
+        }
+        // Seconds 10..20: clean traffic, one request per second.
+        for t in 10..20 {
+            s.record_at(t as f64 + 0.5, 2, 0, met());
+        }
+        let sum = s.summary();
+        // The short (5 s) window only sees the clean tail: burn 0.
+        assert_eq!(sum.burn_rate_short, 0.0);
+        // The long window still covers the burst: 10 violations in 20
+        // requests = rate 0.5, burn 5.
+        assert!((sum.burn_rate_long - 5.0).abs() < 1e-9);
+        // Run-wide attainment counts everything.
+        assert!((sum.attainment - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn burn_ring_expires_slots_beyond_the_long_window() {
+        let mut s = SloStats::new(SloSpec { latency_ms: 10.0, objective: 0.9 });
+        for _ in 0..10 {
+            s.record_at(0.5, 2, 0, viol(SloCause::QueueWait));
+        }
+        // 2 ring-lengths later: the burst has aged out of both windows.
+        s.record_at(2.0 * super::RING_SLOTS as f64 * super::SLOT_SECS, 2, 0, met());
+        let sum = s.summary();
+        assert_eq!(sum.burn_rate_short, 0.0);
+        assert_eq!(sum.burn_rate_long, 0.0);
+        // ...but the run-wide counters never forget.
+        assert_eq!(sum.violations(), 10);
+    }
+
+    #[test]
+    fn empty_stats_report_full_budget() {
+        let s = SloStats::new(SloSpec::default());
+        let sum = s.summary();
+        assert_eq!(sum.total, 0);
+        assert_eq!(sum.attainment, 1.0);
+        assert_eq!(sum.error_budget_remaining, 1.0);
+        assert_eq!((sum.burn_rate_short, sum.burn_rate_long), (0.0, 0.0));
+    }
+
+    #[test]
+    fn len_buckets_account_sequence_traffic() {
+        let mut s = SloStats::new(SloSpec::default());
+        s.record_at(0.0, 2, 4, met());
+        s.record_at(0.0, 2, 8, viol(SloCause::Compute));
+        s.record_at(0.0, 2, 8, met());
+        let sum = s.summary();
+        assert_eq!(sum.per_len_bucket, vec![(4, 1, 1), (8, 2, 1)]);
+    }
+
+    #[test]
+    fn summary_json_carries_the_perfcheck_keys() {
+        let mut s = SloStats::new(SloSpec::default());
+        s.record_at(0.0, 2, 0, met());
+        let j = s.summary().to_json();
+        assert!(j.get("slo_attainment").is_some());
+        assert!(j.get("error_budget_remaining").is_some());
+        assert!(j.get("viol_queue_wait").is_some());
+        assert!(j.get("viol_compute").is_some());
+        assert!(j.get("viol_reload").is_some());
+        assert!(j.get("burn_rate_short").is_some());
+        let text = j.to_string_compact();
+        assert!(text.contains("\"slo_attainment\":1"));
+    }
+}

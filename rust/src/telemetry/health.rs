@@ -1,0 +1,633 @@
+//! Health plane: per-worker heartbeats, a watchdog thread, and a
+//! `Starting → Ready → Degraded(reason) → Draining` state machine.
+//!
+//! The profiler ([`super`]) answers *how fast*, the tracer
+//! ([`super::trace`]) answers *in what order*; this module answers the
+//! operator's first question: **is the process still alive, and if not,
+//! which worker wedged?** The design follows the same explicit-install
+//! gating contract as the other two planes:
+//!
+//! * Off (the default): nothing is registered, [`enabled`] is one atomic
+//!   load, and every instrumentation site reduces to a single branch.
+//!   Enabling health monitoring must never change the math — the
+//!   instrumented-vs-uninstrumented bit-identity tests cover this plane
+//!   too.
+//! * On ([`install`]): workers register a [`HeartbeatGroup`] (one atomic
+//!   counter per worker — serve workers bump per batch *and per idle
+//!   wake*, trainer workers per step) and a watchdog thread re-derives
+//!   the health state every few hundred milliseconds, logging
+//!   transitions.
+//!
+//! The state machine is deliberately re-derived from raw signals on
+//! every [`Health::evaluate`] call rather than kept as mutable state:
+//! there is nothing to get out of sync, and the `admin health` command
+//! and the watchdog see exactly the same function of the same atomics.
+//! Priority order: Draining (intentional shutdown is not a failure) >
+//! Starting (a worker that never beat cannot be distinguished from one
+//! that is still warming up) > Degraded (stalled heartbeat, queue
+//! saturation, recent reload failure, or SLO burn rate over threshold,
+//! with the reason naming the culprit) > Ready.
+
+use crate::util::json::{obj, Json};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Degradation thresholds. Defaults are production-ish; tests shrink
+/// `stall_secs` to force transitions quickly.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthThresholds {
+    /// A worker whose heartbeat has not advanced for this long is
+    /// considered stalled.
+    pub stall_secs: f64,
+    /// A queue depth observation above this is saturation.
+    pub queue_saturation: u64,
+    /// A short-window SLO burn rate above this is degradation (burn 1.0
+    /// = spending the error budget exactly at the sustainable rate).
+    pub burn_rate_max: f64,
+    /// A reload failure within this window keeps the state degraded.
+    pub reload_failure_window_secs: f64,
+}
+
+impl Default for HealthThresholds {
+    fn default() -> HealthThresholds {
+        HealthThresholds {
+            stall_secs: 5.0,
+            queue_saturation: 10_000,
+            burn_rate_max: 10.0,
+            reload_failure_window_secs: 30.0,
+        }
+    }
+}
+
+/// One named pool of heartbeat counters — "serve" for the batcher's
+/// worker pool, "train" for the data-parallel trainer. Workers bump
+/// their own counter with a relaxed atomic add: no ordering is needed,
+/// the watchdog only asks "did this number change recently?".
+#[derive(Debug)]
+pub struct HeartbeatGroup {
+    name: String,
+    beats: Vec<AtomicU64>,
+    active: AtomicBool,
+}
+
+impl HeartbeatGroup {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn len(&self) -> usize {
+        self.beats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.beats.is_empty()
+    }
+
+    /// Worker `i`'s heartbeat: one relaxed fetch-add.
+    pub fn beat(&self, i: usize) {
+        self.beats[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self, i: usize) -> u64 {
+        self.beats[i].load(Ordering::Relaxed)
+    }
+
+    /// Take the group out of stall detection (workers are exiting on
+    /// purpose — drain, shutdown, end of training).
+    pub fn retire(&self) {
+        self.active.store(false, Ordering::Release);
+    }
+
+    pub fn active(&self) -> bool {
+        self.active.load(Ordering::Acquire)
+    }
+}
+
+/// The derived state, in priority order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Starting,
+    Ready,
+    Degraded,
+    Draining,
+}
+
+impl HealthState {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Starting => "starting",
+            HealthState::Ready => "ready",
+            HealthState::Degraded => "degraded",
+            HealthState::Draining => "draining",
+        }
+    }
+
+    /// Numeric encoding for the Prometheus `brgemm_health_state` gauge.
+    pub fn code(self) -> u64 {
+        match self {
+            HealthState::Starting => 0,
+            HealthState::Ready => 1,
+            HealthState::Degraded => 2,
+            HealthState::Draining => 3,
+        }
+    }
+}
+
+/// Watchdog-side bookkeeping for one worker: the last counter value seen
+/// and when it last changed.
+#[derive(Debug)]
+struct WorkerTrack {
+    last_count: u64,
+    last_change: Instant,
+}
+
+#[derive(Debug)]
+struct GroupState {
+    group: Arc<HeartbeatGroup>,
+    tracks: Vec<WorkerTrack>,
+}
+
+/// The process-global health monitor. All signal feeds are lock-free
+/// atomics; the only mutex guards the (cold) group registry, taken by
+/// `register` and `evaluate` — never on a worker's hot path.
+#[derive(Debug)]
+pub struct Health {
+    thresholds: HealthThresholds,
+    started: Instant,
+    draining: AtomicBool,
+    queue_depth: AtomicU64,
+    /// Latest short-window burn rate, stored as f64 bits (0 = none yet).
+    burn_rate_bits: AtomicU64,
+    reload_failures: AtomicU64,
+    /// Nanos-since-start of the last reload failure, +1 so 0 = never.
+    last_reload_failure: AtomicU64,
+    groups: Mutex<Vec<GroupState>>,
+}
+
+impl Health {
+    pub fn new(thresholds: HealthThresholds) -> Health {
+        Health {
+            thresholds,
+            started: Instant::now(),
+            draining: AtomicBool::new(false),
+            queue_depth: AtomicU64::new(0),
+            burn_rate_bits: AtomicU64::new(0),
+            reload_failures: AtomicU64::new(0),
+            last_reload_failure: AtomicU64::new(0),
+            groups: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn thresholds(&self) -> &HealthThresholds {
+        &self.thresholds
+    }
+
+    /// Register a pool of `n` workers under `name`. The returned group is
+    /// what the workers hold; the monitor keeps its own `Arc`.
+    pub fn register(&self, name: &str, n: usize) -> Arc<HeartbeatGroup> {
+        let group = Arc::new(HeartbeatGroup {
+            name: name.to_string(),
+            beats: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            active: AtomicBool::new(true),
+        });
+        let now = Instant::now();
+        self.groups.lock().unwrap().push(GroupState {
+            group: group.clone(),
+            tracks: (0..n).map(|_| WorkerTrack { last_count: 0, last_change: now }).collect(),
+        });
+        group
+    }
+
+    /// Intentional shutdown has begun: everything from here on is
+    /// Draining, never Degraded.
+    pub fn set_draining(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn observe_queue_depth(&self, depth: u64) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Feed the latest short-window SLO burn rate.
+    pub fn observe_burn_rate(&self, burn: f64) {
+        self.burn_rate_bits.store(burn.to_bits(), Ordering::Relaxed);
+    }
+
+    /// A hot reload failed (bad path, corrupt artifact, ...). Degrades
+    /// the state for `reload_failure_window_secs`.
+    pub fn reload_failed(&self) {
+        self.reload_failures.fetch_add(1, Ordering::Relaxed);
+        let nanos = self.started.elapsed().as_nanos() as u64;
+        self.last_reload_failure.store(nanos + 1, Ordering::Relaxed);
+    }
+
+    fn burn_rate(&self) -> f64 {
+        f64::from_bits(self.burn_rate_bits.load(Ordering::Relaxed))
+    }
+
+    /// Derive the current state from the raw signals. Called by the
+    /// watchdog on its poll cadence and by `admin health` on demand —
+    /// both see the same pure function of the same atomics.
+    pub fn evaluate(&self) -> HealthSnapshot {
+        let now = Instant::now();
+        let draining = self.draining.load(Ordering::Acquire);
+        let mut groups_out = Vec::new();
+        let mut starting = false;
+        let mut stall_reason: Option<String> = None;
+        {
+            let mut groups = self.groups.lock().unwrap();
+            if groups.is_empty() {
+                starting = true;
+            }
+            for gs in groups.iter_mut() {
+                let active = gs.group.active();
+                let mut beats = Vec::with_capacity(gs.tracks.len());
+                let mut stalled = Vec::new();
+                for (i, track) in gs.tracks.iter_mut().enumerate() {
+                    let count = gs.group.count(i);
+                    if count != track.last_count {
+                        track.last_count = count;
+                        track.last_change = now;
+                    }
+                    beats.push(count);
+                    if !active {
+                        continue;
+                    }
+                    if count == 0 {
+                        // Never beat: still warming up, not stalled.
+                        starting = true;
+                        continue;
+                    }
+                    let quiet = now.duration_since(track.last_change).as_secs_f64();
+                    if quiet > self.thresholds.stall_secs {
+                        stalled.push(i);
+                        if stall_reason.is_none() {
+                            stall_reason = Some(format!(
+                                "worker {} in group '{}' stalled ({:.1}s since last heartbeat)",
+                                i,
+                                gs.group.name(),
+                                quiet
+                            ));
+                        }
+                    }
+                }
+                groups_out.push(GroupSnapshot {
+                    name: gs.group.name().to_string(),
+                    active,
+                    beats,
+                    stalled,
+                });
+            }
+        }
+
+        let queue_depth = self.queue_depth.load(Ordering::Relaxed);
+        let burn_rate = self.burn_rate();
+        let reload_failures = self.reload_failures.load(Ordering::Relaxed);
+        let last_fail = self.last_reload_failure.load(Ordering::Relaxed);
+        let recent_reload_failure = last_fail > 0 && {
+            let ago = (self.started.elapsed().as_nanos() as u64).saturating_sub(last_fail - 1);
+            (ago as f64 / 1e9) <= self.thresholds.reload_failure_window_secs
+        };
+
+        let (state, reason) = if draining {
+            (HealthState::Draining, None)
+        } else if starting {
+            (HealthState::Starting, None)
+        } else if let Some(r) = stall_reason {
+            (HealthState::Degraded, Some(r))
+        } else if queue_depth > self.thresholds.queue_saturation {
+            (
+                HealthState::Degraded,
+                Some(format!(
+                    "queue saturated (depth {} > {})",
+                    queue_depth, self.thresholds.queue_saturation
+                )),
+            )
+        } else if recent_reload_failure {
+            (
+                HealthState::Degraded,
+                Some(format!("recent reload failure ({} total)", reload_failures)),
+            )
+        } else if burn_rate > self.thresholds.burn_rate_max {
+            (
+                HealthState::Degraded,
+                Some(format!(
+                    "SLO burn rate {:.1} over threshold {:.1}",
+                    burn_rate, self.thresholds.burn_rate_max
+                )),
+            )
+        } else {
+            (HealthState::Ready, None)
+        };
+
+        HealthSnapshot {
+            state,
+            reason,
+            uptime_secs: self.started.elapsed().as_secs_f64(),
+            queue_depth,
+            burn_rate,
+            reload_failures,
+            groups: groups_out,
+        }
+    }
+}
+
+/// One group's read-out inside a [`HealthSnapshot`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupSnapshot {
+    pub name: String,
+    pub active: bool,
+    pub beats: Vec<u64>,
+    pub stalled: Vec<usize>,
+}
+
+/// Point-in-time health read-out (the `admin health` reply body).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthSnapshot {
+    pub state: HealthState,
+    pub reason: Option<String>,
+    pub uptime_secs: f64,
+    pub queue_depth: u64,
+    pub burn_rate: f64,
+    pub reload_failures: u64,
+    pub groups: Vec<GroupSnapshot>,
+}
+
+impl HealthSnapshot {
+    pub fn to_json(&self) -> Json {
+        let groups = Json::Arr(
+            self.groups
+                .iter()
+                .map(|g| {
+                    obj([
+                        ("name", g.name.as_str().into()),
+                        ("active", g.active.into()),
+                        (
+                            "beats",
+                            Json::Arr(g.beats.iter().map(|&b| (b as f64).into()).collect()),
+                        ),
+                        (
+                            "stalled",
+                            Json::Arr(g.stalled.iter().map(|&i| (i as f64).into()).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        obj([
+            ("state", self.state.name().into()),
+            (
+                "reason",
+                self.reason.as_deref().map_or(Json::Null, |r| r.into()),
+            ),
+            ("uptime_secs", self.uptime_secs.into()),
+            ("queue_depth", (self.queue_depth as f64).into()),
+            ("burn_rate", self.burn_rate.into()),
+            ("reload_failures", (self.reload_failures as f64).into()),
+            ("groups", groups),
+        ])
+    }
+}
+
+struct Installed {
+    health: Arc<Health>,
+    stop: Arc<AtomicBool>,
+    watchdog: Option<JoinHandle<()>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static MONITOR: Mutex<Option<Installed>> = Mutex::new(None);
+
+/// Watchdog poll cadence. Transitions are detected within one tick; the
+/// tick itself sleeps in short slices so [`uninstall`] joins promptly.
+const WATCHDOG_TICK: Duration = Duration::from_millis(250);
+const WATCHDOG_SLICE: Duration = Duration::from_millis(25);
+
+/// Install a fresh global health monitor and start its watchdog thread.
+/// Replaces any previous monitor (uninstalling it first). Mirrors the
+/// profiler/tracer contract: explicit install, [`enabled`] is one atomic
+/// load, instrumentation sites fetch [`current`] once and cache it.
+pub fn install(thresholds: HealthThresholds) -> Arc<Health> {
+    uninstall();
+    let health = Arc::new(Health::new(thresholds));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (h2, s2) = (health.clone(), stop.clone());
+    let watchdog = std::thread::Builder::new()
+        .name("health-watchdog".into())
+        .spawn(move || {
+            let mut last = HealthState::Starting;
+            let mut elapsed = Duration::ZERO;
+            while !s2.load(Ordering::Acquire) {
+                std::thread::sleep(WATCHDOG_SLICE);
+                elapsed += WATCHDOG_SLICE;
+                if elapsed < WATCHDOG_TICK {
+                    continue;
+                }
+                elapsed = Duration::ZERO;
+                let snap = h2.evaluate();
+                if snap.state != last {
+                    crate::log_info!(
+                        "health: {} -> {}{}",
+                        last.name(),
+                        snap.state.name(),
+                        snap.reason.as_deref().map(|r| format!(" ({})", r)).unwrap_or_default()
+                    );
+                    last = snap.state;
+                }
+            }
+        })
+        .expect("spawn health watchdog");
+    *MONITOR.lock().unwrap() = Some(Installed { health: health.clone(), stop, watchdog: Some(watchdog) });
+    ENABLED.store(true, Ordering::Release);
+    health
+}
+
+/// Stop the watchdog and remove the global monitor. Groups held by live
+/// workers keep their atomics (beats into a detached group are harmless);
+/// only new [`current`] calls see `None`.
+pub fn uninstall() {
+    ENABLED.store(false, Ordering::Release);
+    let installed = MONITOR.lock().unwrap().take();
+    if let Some(mut m) = installed {
+        m.stop.store(true, Ordering::Release);
+        if let Some(h) = m.watchdog.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Whether a health monitor is installed (one atomic load).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// The installed monitor, or `None` (the common case). Callers on hot
+/// paths fetch this once at startup and cache the `Option` — the per-
+/// event cost when off is the cached `None` branch.
+pub fn current() -> Option<Arc<Health>> {
+    if !enabled() {
+        return None;
+    }
+    MONITOR.lock().unwrap().as_ref().map(|m| m.health.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> HealthThresholds {
+        HealthThresholds { stall_secs: 0.05, ..HealthThresholds::default() }
+    }
+
+    #[test]
+    fn starts_in_starting_until_every_worker_beats() {
+        let h = Health::new(fast());
+        // No groups registered at all: still starting.
+        assert_eq!(h.evaluate().state, HealthState::Starting);
+        let g = h.register("serve", 2);
+        assert_eq!(h.evaluate().state, HealthState::Starting);
+        g.beat(0);
+        // One worker warm, one never beat: still starting.
+        assert_eq!(h.evaluate().state, HealthState::Starting);
+        g.beat(1);
+        assert_eq!(h.evaluate().state, HealthState::Ready);
+    }
+
+    #[test]
+    fn forced_stall_degrades_and_names_the_stalled_worker() {
+        let h = Health::new(fast());
+        let g = h.register("serve", 2);
+        g.beat(0);
+        g.beat(1);
+        assert_eq!(h.evaluate().state, HealthState::Ready);
+        // Worker 1 wedges; worker 0 keeps beating past the stall window.
+        for _ in 0..4 {
+            std::thread::sleep(Duration::from_millis(30));
+            g.beat(0);
+        }
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Degraded);
+        let reason = snap.reason.expect("degraded carries a reason");
+        assert!(
+            reason.contains("worker 1") && reason.contains("'serve'"),
+            "reason names the stalled worker: {}",
+            reason
+        );
+        assert_eq!(snap.groups[0].stalled, vec![1]);
+        // The wedged worker recovers: back to Ready.
+        g.beat(1);
+        assert_eq!(h.evaluate().state, HealthState::Ready);
+    }
+
+    #[test]
+    fn retired_groups_are_exempt_from_stall_detection() {
+        let h = Health::new(fast());
+        let g = h.register("train", 1);
+        g.beat(0);
+        g.retire();
+        std::thread::sleep(Duration::from_millis(80));
+        // Long past the stall window, but the group exited on purpose.
+        assert_eq!(h.evaluate().state, HealthState::Ready);
+    }
+
+    #[test]
+    fn draining_wins_over_everything() {
+        let h = Health::new(fast());
+        let g = h.register("serve", 1);
+        g.beat(0);
+        h.observe_queue_depth(1_000_000);
+        h.set_draining();
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Draining);
+        assert!(snap.reason.is_none());
+    }
+
+    #[test]
+    fn queue_saturation_and_burn_rate_degrade_with_reasons() {
+        let h = Health::new(fast());
+        let g = h.register("serve", 1);
+        g.beat(0);
+        h.observe_queue_depth(h.thresholds().queue_saturation + 1);
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Degraded);
+        assert!(snap.reason.unwrap().contains("queue saturated"));
+        h.observe_queue_depth(0);
+        assert_eq!(h.evaluate().state, HealthState::Ready);
+
+        h.observe_burn_rate(h.thresholds().burn_rate_max * 2.0);
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Degraded);
+        assert!(snap.reason.unwrap().contains("burn rate"));
+        h.observe_burn_rate(0.5);
+        assert_eq!(h.evaluate().state, HealthState::Ready);
+    }
+
+    #[test]
+    fn reload_failure_degrades_within_its_window() {
+        let mut t = fast();
+        t.reload_failure_window_secs = 0.05;
+        let h = Health::new(t);
+        let g = h.register("serve", 1);
+        g.beat(0);
+        h.reload_failed();
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Degraded);
+        assert!(snap.reason.unwrap().contains("reload failure"));
+        assert_eq!(snap.reload_failures, 1);
+        std::thread::sleep(Duration::from_millis(80));
+        // Outside the window the failure stops degrading (but stays
+        // counted).
+        let snap = h.evaluate();
+        assert_eq!(snap.state, HealthState::Ready);
+        assert_eq!(snap.reload_failures, 1);
+    }
+
+    #[test]
+    fn snapshot_json_shape() {
+        let h = Health::new(fast());
+        let g = h.register("serve", 2);
+        g.beat(0);
+        g.beat(0);
+        g.beat(1);
+        let j = h.evaluate().to_json();
+        assert_eq!(j.get("state").and_then(|s| s.as_str()), Some("ready"));
+        assert!(j.get("uptime_secs").is_some());
+        let groups = match j.get("groups").unwrap() {
+            Json::Arr(g) => g.clone(),
+            _ => panic!("groups is an array"),
+        };
+        assert_eq!(groups[0].get("name").and_then(|n| n.as_str()), Some("serve"));
+        let beats = match groups[0].get("beats").unwrap() {
+            Json::Arr(b) => b.iter().filter_map(|x| x.as_f64()).collect::<Vec<_>>(),
+            _ => panic!("beats is an array"),
+        };
+        assert_eq!(beats, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn install_gating_contract() {
+        let _g = crate::telemetry::test_lock();
+        uninstall();
+        assert!(!enabled());
+        assert!(current().is_none());
+        let h = install(fast());
+        assert!(enabled());
+        let c = current().expect("monitor installed");
+        assert!(Arc::ptr_eq(&h, &c));
+        uninstall();
+        assert!(!enabled());
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn state_codes_are_stable() {
+        // The Prometheus gauge documents these values; changing them is
+        // a dashboard-breaking change.
+        assert_eq!(HealthState::Starting.code(), 0);
+        assert_eq!(HealthState::Ready.code(), 1);
+        assert_eq!(HealthState::Degraded.code(), 2);
+        assert_eq!(HealthState::Draining.code(), 3);
+    }
+}

@@ -23,10 +23,15 @@
 //! buffers and exports Chrome trace-event JSON. It follows the same
 //! install/enabled gating contract as the profiler.
 //!
+//! A fourth, the health plane, lives in [`health`]: per-worker heartbeat
+//! atomics and a watchdog deriving a Starting → Ready → Degraded →
+//! Draining state machine, again behind the same explicit-install gate.
+//!
 //! Instrumentation never touches the math: enabling the profiler changes
 //! timing side channels only, so instrumented and uninstrumented runs are
 //! bit-identical (tested below).
 
+pub mod health;
 pub mod trace;
 
 use crate::perfmodel::{host_platform, roofline_secs};
@@ -334,6 +339,12 @@ pub fn uninstall() {
 /// Whether a profiler is currently installed (one atomic load).
 pub fn enabled() -> bool {
     ENABLED.load(Ordering::Acquire)
+}
+
+/// The installed profiler, if any — what `admin metrics` renders the
+/// primitive families from.
+pub fn current() -> Option<Arc<Profiler>> {
+    PROFILER.lock().unwrap().clone()
 }
 
 /// Called by primitive constructors: a slot in the installed profiler, or

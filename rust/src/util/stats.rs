@@ -67,7 +67,7 @@ impl Online {
     }
 
     /// Reconstruct from moments (used by the exact parallel-Welford merge
-    /// in `coordinator::metrics`).
+    /// in `crate::telemetry`).
     pub fn from_moments(n: usize, mean: f64, m2: f64, min: f64, max: f64) -> Online {
         Online { n, mean, m2, min, max }
     }

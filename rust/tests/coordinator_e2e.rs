@@ -3,7 +3,7 @@
 
 use brgemm_dl::coordinator::config::{Backend, RunConfig, Workload};
 use brgemm_dl::coordinator::data::{ClassifyData, SeqCorpus};
-use brgemm_dl::coordinator::metrics::Metrics;
+use brgemm_dl::telemetry::Metrics;
 use brgemm_dl::coordinator::trainer::{DataParallelTrainer, MlpModel};
 use brgemm_dl::runtime::Manifest;
 use brgemm_dl::util::rng::Rng;

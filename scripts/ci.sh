@@ -17,18 +17,28 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
-echo "== serve smoke (tiny model, 300 requests) =="
+echo "== serve smoke (tiny model, 300 requests, 50ms SLO) =="
 # Exercise the serving subsystem end to end: queue -> dynamic batcher ->
 # worker pool -> drained shutdown. Fails hard if any request is lost.
 # --metrics-out exercises the telemetry path: the report JSON must parse,
 # carry the queue-wait/compute stage split, and show nonzero BRGEMM calls
-# from the bucket plans' profiler slots.
+# from the bucket plans' profiler slots. The SLO flags stamp every request
+# with a 50ms deadline: the report must carry nonzero attainment plus the
+# queue-wait/compute/reload violation attribution counters.
 ./target/release/brgemm-dl serve --model mlp --requests 300 --rate 50000 \
     --max-batch 8 --serve-workers 2 --seed 7 \
+    --slo-latency-ms 50 --slo-objective 0.99 \
     --metrics-out serve_metrics.json --metrics-every 0.5
 test -f serve_metrics.json
 ./target/release/brgemm-dl perfcheck --metrics serve_metrics.json \
-    --require queue_wait,compute,brgemm_calls,throughput_rps
+    --require queue_wait,compute,brgemm_calls,throughput_rps,slo_attainment
+for key in viol_queue_wait viol_compute viol_reload error_budget_remaining; do
+    if ! grep -q "\"$key\"" serve_metrics.json; then
+        echo "serve_metrics.json is missing SLO field '$key'" >&2
+        exit 1
+    fi
+done
+echo "SLO block present (attainment + violation attribution)"
 
 echo "== train -> checkpoint -> serve smoke =="
 # The model-artifact pipeline end to end: train 2 epochs with per-epoch
@@ -51,28 +61,43 @@ test -f train_metrics.jsonl
 ./target/release/brgemm-dl serve --model-path checkpoints/mlp.bin \
     --min-accuracy 0.5 --requests 300 --rate 50000 --serve-workers 2
 
-echo "== training trace smoke (data-parallel step spans) =="
+echo "== training trace smoke (data-parallel step spans + straggler index) =="
 # A short 2-worker run with --trace-out must produce a Chrome trace-event
 # document with nonzero complete spans covering several step stages
 # (fwd/bwd/allreduce/update/...), i.e. the tracer actually followed the
 # data-parallel step pipeline rather than logging one span kind in a loop.
+# The same run's --metrics-out lines must carry the per-epoch straggler
+# index (slowest-vs-mean replica compute, always >= 1 when present).
 ./target/release/brgemm-dl run --config examples/dist_mlp.json \
-    --trace-out train_trace.json
+    --trace-out train_trace.json --metrics-out dist_metrics.jsonl
 test -f train_trace.json
 ./target/release/brgemm-dl perfcheck --trace train_trace.json --min-span-cats 4
+./target/release/brgemm-dl perfcheck --metrics dist_metrics.jsonl \
+    --require straggler_index,allreduce_share
 
-echo "== admin socket round trip (stats -> reload -> stats -> drain) =="
+echo "== admin socket round trip (wait-ready -> stats -> reload -> metrics -> drain) =="
 # A long-budget server run with --admin-sock, driven entirely from the
-# admin client: live stats must parse, a reload pushed through the socket
-# must show up in the next stats snapshot, and drain must end the run
-# cleanly (the server answers everything accepted, exits 0).
+# admin client. --admin-sock installs the health plane, so the walk is
+# observable end to end: --wait-ready blocks until the watchdog reports
+# ready, live stats must parse, a reload pushed through the socket must
+# show up in the next stats snapshot, `metrics` must render as Prometheus
+# text, and a concurrent health poll must catch the draining state while
+# the drain is in flight before the run exits cleanly.
 sock="$(mktemp -u /tmp/brgemm_admin_XXXXXX.sock)"
 ./target/release/brgemm-dl serve --model mlp --requests 200000 --rate 2000 \
-    --serve-workers 2 --seed 7 --admin-sock "$sock" &
+    --serve-workers 2 --seed 7 \
+    --slo-latency-ms 50 --slo-objective 0.99 --admin-sock "$sock" &
 serve_pid=$!
 for _ in $(seq 1 100); do [ -S "$sock" ] && break; sleep 0.1; done
 if [ ! -S "$sock" ]; then
     echo "admin socket $sock never appeared" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+./target/release/brgemm-dl admin --sock "$sock" --wait-ready --timeout 10
+if ! ./target/release/brgemm-dl admin --sock "$sock" --cmd health \
+        | grep -q '"state":"ready"'; then
+    echo "admin health did not report ready" >&2
     kill "$serve_pid" 2>/dev/null || true
     exit 1
 fi
@@ -85,9 +110,36 @@ if ! ./target/release/brgemm-dl admin --sock "$sock" --cmd stats \
     kill "$serve_pid" 2>/dev/null || true
     exit 1
 fi
-./target/release/brgemm-dl admin --sock "$sock" --cmd drain
+# Prometheus exposition: non-empty # TYPE headers and the queue-depth
+# gauge must both render from the live server.
+./target/release/brgemm-dl admin --sock "$sock" --cmd metrics > admin_metrics.prom
+if ! grep -q '^# TYPE ' admin_metrics.prom \
+        || ! grep -q '^brgemm_serve_queue_depth ' admin_metrics.prom; then
+    echo "admin metrics is not valid Prometheus text" >&2
+    kill "$serve_pid" 2>/dev/null || true
+    exit 1
+fi
+# Drain in the background and race health polls against it: the
+# thread-per-connection admin server must answer them mid-drain, and at
+# least one poll must observe the draining state.
+./target/release/brgemm-dl admin --sock "$sock" --cmd drain &
+drain_pid=$!
+saw_draining=0
+for _ in $(seq 1 60); do
+    if ./target/release/brgemm-dl admin --sock "$sock" --cmd health 2>/dev/null \
+            | grep -q '"state":"draining"'; then
+        saw_draining=1
+        break
+    fi
+    sleep 0.05
+done
+wait "$drain_pid"
 wait "$serve_pid"
-echo "admin round trip ok (reload visible, drain exited cleanly)"
+if [ "$saw_draining" != 1 ]; then
+    echo "health never reported draining during the drain" >&2
+    exit 1
+fi
+echo "admin round trip ok (ready -> reload visible -> metrics -> draining observed)"
 
 echo "== rnn train -> checkpoint -> resume -> serve smoke =="
 # The sequence workload through the same pipeline: train the LSTM
@@ -109,10 +161,13 @@ echo "== mixed-length bucketed serving smoke (stacked rnn) =="
 # at least two distinct buckets actually served traffic.
 ./target/release/brgemm-dl serve --model-path checkpoints/rnn.bin \
     --seq-len-typical 4 --requests 300 --rate 50000 --serve-workers 2 \
+    --slo-latency-ms 100 \
     --metrics-out serve_rnn_metrics.json --trace-out serve_rnn_trace.json
 test -f serve_rnn_metrics.json
+# slo_attainment here proves the per-length-bucket SLO split under real
+# mixed-length load (the fixed-length smoke above covers batch buckets).
 ./target/release/brgemm-dl perfcheck --metrics serve_rnn_metrics.json \
-    --require len_buckets,throughput_rps
+    --require len_buckets,throughput_rps,slo_attainment
 # The same run's --trace-out must hold request-, batch- and layer-level
 # spans (>=3 categories): the serve pipeline traced end to end.
 test -f serve_rnn_trace.json
