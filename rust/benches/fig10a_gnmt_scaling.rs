@@ -18,8 +18,10 @@ mod common;
 use brgemm_dl::coordinator::dist::NetworkModel;
 use brgemm_dl::coordinator::rnn::{RnnModel, RnnSpec};
 use brgemm_dl::primitives::lstm::{LstmConfig, LstmPrimitive, LstmWeights, LstmWorkspace};
+use brgemm_dl::util::bench::{measure_samples, Opts};
 use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
+use brgemm_dl::util::stats::Summary;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -125,7 +127,7 @@ fn main() {
          global batch {} (={}⁄28):",
         layers, g0, paper_g0
     );
-    println!("{:<6} {:>12} {:>12} {:>10} {:>8}", "nodes", "µs/word", "compute ms", "KWPS", "eff%");
+    println!("{:<6} {:>12} {:>12} {:>10} {:>8}", "nodes", "µs/word", "KWPS(med)", "±MAD", "eff%");
     let mut trained_rows: Vec<Json> = Vec::new();
     let mut base: Option<f64> = None;
     for &p in &nodes {
@@ -134,32 +136,36 @@ fn main() {
         let mut model = RnnModel::new(&spec, local, 1, &mut rng);
         let x = rng.vec_f32(local * spec.input_dim(), -1.0, 1.0);
         let labels: Vec<i32> = (0..local).map(|i| (i % spec.classes) as i32).collect();
-        model.train_step(&x, &labels, 0.01); // warmup
-        let reps = 2;
-        let t0 = Instant::now();
-        for _ in 0..reps {
-            model.train_step(&x, &labels, 0.01);
-        }
+        // Repeated timed steps; each sample becomes a KWPS estimate so
+        // the row can carry `{median, mad, iters}` noise accounting.
+        let opts = Opts { warmup_iters: 1, min_iters: 3, max_iters: 9, max_seconds: 1.5 };
+        let step_samples = measure_samples(opts, || {
+            std::hint::black_box(model.train_step(&x, &labels, 0.01));
+        });
+        let comm = net.ring_allreduce_secs(grad_bytes, p);
         // The model already stacks all `layers` cells — per-word cost is
         // the measured step time directly, with no ×layers scaling.
-        let per_word = t0.elapsed().as_secs_f64() / (reps * local * t) as f64;
-        let compute = per_word * local as f64 * t as f64;
-        let comm = net.ring_allreduce_secs(grad_bytes, p);
-        let kwps = (g0 * t) as f64 / (compute + comm) / 1e3;
-        let per_node = kwps / p as f64;
+        let kwps_samples: Vec<f64> =
+            step_samples.iter().map(|s| (g0 * t) as f64 / (s + comm) / 1e3).collect();
+        let kwps = Summary::from(&kwps_samples);
+        let per_word =
+            step_samples.iter().cloned().fold(f64::INFINITY, f64::min) / (local * t) as f64;
+        let per_node = kwps.median() / p as f64;
         let eff = 100.0 * per_node / *base.get_or_insert(per_node);
         println!(
             "{:<6} {:>12.1} {:>12.1} {:>10.2} {:>8.1}",
             p,
             per_word * 1e6,
-            compute * 1e3,
-            kwps,
+            kwps.median(),
+            kwps.mad,
             eff
         );
         trained_rows.push(obj([
             ("global_batch", g0.into()),
             ("nodes", p.into()),
-            ("kwps", kwps.into()),
+            ("kwps", kwps.median().into()),
+            ("kwps_mad", kwps.mad.into()),
+            ("iters", kwps.n.into()),
             ("eff_pct", eff.into()),
         ]));
     }

@@ -19,42 +19,54 @@ mod common;
 
 use brgemm_dl::coordinator::dist::{strong_scaling, NetworkModel};
 use brgemm_dl::primitives::conv::ConvPrimitive;
+use brgemm_dl::util::bench::{measure_samples, Opts};
 use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
-use std::time::Instant;
+use brgemm_dl::util::stats::Summary;
+
+/// Repetitions of the per-layer fwd+bwd+upd timing: a fixed count so the
+/// i-th samples of every layer pair up into the i-th whole-net sample
+/// (per-image noise accounting needs aligned samples, not a per-layer
+/// adaptive budget).
+const SAMPLE_REPS: usize = 3;
 
 fn main() {
     let mut rng = Rng::new(11);
     let cases = common::conv_cases(&mut rng);
-    // Measured per-image training time: Σ_layers reps × (fwd + bwd + upd).
-    let mut per_image = 0.0f64;
+    // Measured per-image training time: Σ_layers reps × (fwd + bwd + upd),
+    // sampled SAMPLE_REPS times so the figure carries `{median, mad}`.
+    let mut per_image_samples = vec![0.0f64; SAMPLE_REPS];
+    let opts = Opts {
+        warmup_iters: 1,
+        min_iters: SAMPLE_REPS,
+        max_iters: SAMPLE_REPS,
+        max_seconds: f64::INFINITY,
+    };
     for case in &cases {
         let cfg = case.cfg;
         let prim = ConvPrimitive::new(cfg);
         let mut out = vec![0.0f32; cfg.output_len()];
-        prim.forward(&case.x_packed, &case.w_packed, None, &mut out); // warm
-        let t0 = Instant::now();
-        prim.forward(&case.x_packed, &case.w_packed, None, &mut out);
-        let fwd = t0.elapsed().as_secs_f64();
-        let (bwd, upd) = if case.layer.id != 1 {
-            let dual = prim.dual_weights(&case.w_packed);
-            let t0 = Instant::now();
-            let _ = prim.backward_data_pre(&out, &dual);
-            let bwd = t0.elapsed().as_secs_f64();
-            let t0 = Instant::now();
+        // The stem (layer 1) needs no data gradient; charge fwd+upd only.
+        let dual = (case.layer.id != 1).then(|| prim.dual_weights(&case.w_packed));
+        let samples = measure_samples(opts, || {
+            prim.forward(&case.x_packed, &case.w_packed, None, &mut out);
+            if let Some(dual) = &dual {
+                let _ = prim.backward_data_pre(&out, dual);
+            }
             let _ = prim.update_weights(&case.x_packed, &out);
-            (bwd, t0.elapsed().as_secs_f64())
-        } else {
-            // stem: no data gradient needed; charge upd only
-            let t0 = Instant::now();
-            let _ = prim.update_weights(&case.x_packed, &out);
-            (0.0, t0.elapsed().as_secs_f64())
-        };
-        per_image += case.layer.reps as f64 * (fwd + bwd + upd) / common::BENCH_N as f64;
+        });
+        for (acc, s) in per_image_samples.iter_mut().zip(&samples) {
+            *acc += case.layer.reps as f64 * s / common::BENCH_N as f64;
+        }
     }
+    let per_image_stats = Summary::from(&per_image_samples);
+    let per_image = per_image_stats.median();
     println!(
-        "measured per-image training compute (bench scale, 53 conv layers): {:.1} ms",
-        per_image * 1e3
+        "measured per-image training compute (bench scale, 53 conv layers): \
+         {:.1} ms (median of {}, MAD {:.2} ms)",
+        per_image * 1e3,
+        per_image_stats.n,
+        per_image_stats.mad * 1e3
     );
 
     // ResNet-50 gradient: 25.5M params.
@@ -72,8 +84,14 @@ fn main() {
     for &p in &nodes {
         let compute = per_image * local_batch as f64;
         let comm = net.ring_allreduce_secs(grad_bytes, p);
-        let step = compute + comm;
-        let imgs = (local_batch * p) as f64 / step;
+        // One img/s estimate per whole-net compute sample → median/MAD in
+        // rate space for the noise-aware baselines.
+        let imgs_samples: Vec<f64> = per_image_samples
+            .iter()
+            .map(|pi| (local_batch * p) as f64 / (pi * local_batch as f64 + comm))
+            .collect();
+        let imgs_stats = Summary::from(&imgs_samples);
+        let imgs = imgs_stats.median();
         let per_node = imgs / p as f64;
         let eff = 100.0 * per_node / *base.get_or_insert(per_node);
         println!(
@@ -89,6 +107,8 @@ fn main() {
             ("compute_ms", (compute * 1e3).into()),
             ("comm_ms", (comm * 1e3).into()),
             ("imgs_per_s", imgs.into()),
+            ("imgs_per_s_mad", imgs_stats.mad.into()),
+            ("iters", imgs_stats.n.into()),
             ("eff_pct", eff.into()),
         ]));
     }
@@ -112,6 +132,7 @@ fn main() {
     let out = obj([
         ("title", "Fig10b: ResNet-50 distributed training scaling".into()),
         ("per_image_ms", (per_image * 1e3).into()),
+        ("per_image_mad_ms", (per_image_stats.mad * 1e3).into()),
         ("rows", Json::Arr(rows)),
         ("strong_rows", Json::Arr(strong_rows)),
     ]);

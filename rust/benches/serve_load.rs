@@ -23,6 +23,7 @@ use brgemm_dl::serve::{
 };
 use brgemm_dl::util::json::{obj, Json};
 use brgemm_dl::util::rng::Rng;
+use brgemm_dl::util::stats::Summary;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -71,20 +72,39 @@ fn main() {
         },
     ];
 
+    // Repeat each case: the last run's report becomes the row, while the
+    // per-run throughputs become `{median, mad, iters}` noise accounting
+    // (what `perfcheck --baseline` widens its allowance with).
+    let bench_iters = if quick { 2 } else { 3 };
+
     let mut rows: Vec<Json> = Vec::new();
     for case in &cases {
-        let mut rng = Rng::new(case.load.seed);
-        let model =
-            InferenceModel::from_spec(&case.spec, case.opts.max_batch, 1, false, &mut rng);
-        assert_eq!(
-            model.weight_alloc_ids().len(),
-            model.layer_count(),
-            "packed weights must be allocated exactly once per layer"
-        );
-        let (report, responses) = run_open_loop(model, case.opts, &case.load);
-        assert_eq!(responses.len(), case.load.requests, "open loop must sustain the load");
+        let mut tput: Vec<f64> = Vec::with_capacity(bench_iters);
+        let mut last = None;
+        for _ in 0..bench_iters {
+            let mut rng = Rng::new(case.load.seed);
+            let model =
+                InferenceModel::from_spec(&case.spec, case.opts.max_batch, 1, false, &mut rng);
+            assert_eq!(
+                model.weight_alloc_ids().len(),
+                model.layer_count(),
+                "packed weights must be allocated exactly once per layer"
+            );
+            let (report, responses) = run_open_loop(model, case.opts, &case.load);
+            assert_eq!(responses.len(), case.load.requests, "open loop must sustain the load");
+            tput.push(report.throughput_rps);
+            last = Some(report);
+        }
+        let report = last.expect("at least one iteration");
+        let tput = Summary::from(&tput);
         println!("\n== serve_load: {} ==", case.name);
         print!("{}", report.render());
+        println!(
+            "throughput over {} runs: median {:.1} rps, MAD {:.2}",
+            tput.n,
+            tput.median(),
+            tput.mad
+        );
         let mut row = report.to_json();
         if let Json::Obj(map) = &mut row {
             map.insert("case".to_string(), Json::Str(case.name.to_string()));
@@ -95,6 +115,11 @@ fn main() {
                 "wait_fill_us".to_string(),
                 Json::Num(case.opts.wait_for_fill_us as f64),
             );
+            // The row's throughput leaf is the noise-robust median; the
+            // single-run value remains visible in wall_s/requests.
+            map.insert("throughput_rps".to_string(), Json::Num(tput.median()));
+            map.insert("throughput_rps_mad".to_string(), Json::Num(tput.mad));
+            map.insert("iters".to_string(), Json::Num(tput.n as f64));
         }
         rows.push(row);
     }
@@ -116,28 +141,49 @@ fn main() {
     let typical = 8;
     let mut useful = [0.0f64; 2];
     for (mode, pad_to_max) in [("bucketed", false), ("pad-to-max", true)] {
-        let mut rng = Rng::new(seq_load.seed);
-        let model =
-            InferenceModel::from_spec(&NetSpec::Rnn(seq), seq_opts.max_batch, 1, false, &mut rng);
-        let words = Arc::new(AtomicUsize::new(0));
-        let w = Arc::clone(&words);
-        let (c, t) = (seq.c, seq.t);
-        let (report, responses) =
-            run_open_loop_with(model, seq_opts, &seq_load, move |rng, _i| {
-                let len = seq_request_len(rng, typical, t);
-                w.fetch_add(len, Ordering::Relaxed);
-                let mut v = rng.vec_f32(len * c, -1.0, 1.0);
-                if pad_to_max {
-                    v.resize(t * c, 0.0);
-                }
-                v
-            });
-        assert_eq!(responses.len(), seq_requests, "open loop must sustain the load");
-        let useful_wps = words.load(Ordering::Relaxed) as f64 / report.wall_secs;
+        let mut wps_samples: Vec<f64> = Vec::with_capacity(bench_iters);
+        let mut tput: Vec<f64> = Vec::with_capacity(bench_iters);
+        let mut last = None;
+        for _ in 0..bench_iters {
+            let mut rng = Rng::new(seq_load.seed);
+            let model = InferenceModel::from_spec(
+                &NetSpec::Rnn(seq),
+                seq_opts.max_batch,
+                1,
+                false,
+                &mut rng,
+            );
+            let words = Arc::new(AtomicUsize::new(0));
+            let w = Arc::clone(&words);
+            let (c, t) = (seq.c, seq.t);
+            let (report, responses) =
+                run_open_loop_with(model, seq_opts, &seq_load, move |rng, _i| {
+                    let len = seq_request_len(rng, typical, t);
+                    w.fetch_add(len, Ordering::Relaxed);
+                    let mut v = rng.vec_f32(len * c, -1.0, 1.0);
+                    if pad_to_max {
+                        v.resize(t * c, 0.0);
+                    }
+                    v
+                });
+            assert_eq!(responses.len(), seq_requests, "open loop must sustain the load");
+            wps_samples.push(words.load(Ordering::Relaxed) as f64 / report.wall_secs);
+            tput.push(report.throughput_rps);
+            last = Some(report);
+        }
+        let report = last.expect("at least one iteration");
+        let wps = Summary::from(&wps_samples);
+        let tput = Summary::from(&tput);
+        // Score on the median: one lucky or unlucky run must not decide
+        // the bucketed-vs-padded verdict (or the stored baseline).
+        let useful_wps = wps.median();
         useful[usize::from(pad_to_max)] = useful_wps;
         println!("\n== serve_load: rnn mixed-len {} ==", mode);
         print!("{}", report.render());
-        println!("useful words/s (padding excluded): {:.0}", useful_wps);
+        println!(
+            "useful words/s (padding excluded): median {:.0} over {} runs, MAD {:.1}",
+            useful_wps, wps.n, wps.mad
+        );
         let mut row = report.to_json();
         if let Json::Obj(map) = &mut row {
             map.insert("case".to_string(), Json::Str(format!("rnn mixed-len {}", mode)));
@@ -146,6 +192,10 @@ fn main() {
             map.insert("workers".to_string(), Json::Num(seq_opts.workers as f64));
             map.insert("wait_fill_us".to_string(), Json::Num(0.0));
             map.insert("useful_wps".to_string(), Json::Num(useful_wps));
+            map.insert("useful_wps_mad".to_string(), Json::Num(wps.mad));
+            map.insert("throughput_rps".to_string(), Json::Num(tput.median()));
+            map.insert("throughput_rps_mad".to_string(), Json::Num(tput.mad));
+            map.insert("iters".to_string(), Json::Num(wps.n as f64));
         }
         rows.push(row);
     }

@@ -54,6 +54,15 @@
 //!   bench harness, property testing) — the crates.io registry is not
 //!   available in this environment, so these are built in-tree.
 
+/// The process allocator is the resource plane's counting wrapper around
+/// [`std::alloc::System`] (see [`telemetry::resource`]). Declared here so
+/// one declaration covers the binary, tests and benches; when the plane is
+/// off the wrapper costs one relaxed load and a branch per call and
+/// forwards verbatim, so allocation behaviour — and therefore every
+/// computed result — is bit-identical either way.
+#[global_allocator]
+static GLOBAL_ALLOC: telemetry::resource::CountingAlloc = telemetry::resource::CountingAlloc;
+
 pub mod autotune;
 pub mod brgemm;
 pub mod cli;

@@ -150,9 +150,9 @@ fn commands() -> Vec<Command> {
             opts: vec![
                 OptSpec { name: "metrics", help: "JSON-lines metrics file: every line must parse (see --require)", takes_value: true, default: None },
                 OptSpec { name: "require", help: "comma-separated keys that must appear in --metrics with a nonzero/non-empty value", takes_value: true, default: None },
-                OptSpec { name: "baseline", help: "committed baseline JSON (BENCH_*.json at the repo root)", takes_value: true, default: None },
+                OptSpec { name: "baseline", help: "committed baseline JSON (BENCH_*.json at the repo root; history docs compare their newest entry)", takes_value: true, default: None },
                 OptSpec { name: "current", help: "freshly measured JSON (bench_results/*.json)", takes_value: true, default: None },
-                OptSpec { name: "tolerance", help: "allowed fractional change vs baseline: throughput drop or latency rise [default: 0.5]", takes_value: true, default: None },
+                OptSpec { name: "tolerance", help: "allowed fractional change vs baseline: throughput drop or latency rise [default: 0.5]; widened to 3x MAD where the baseline row records a <key>_mad sibling", takes_value: true, default: None },
                 OptSpec { name: "trace", help: "Chrome trace-event JSON (--trace-out file): must parse with nonzero complete spans", takes_value: true, default: None },
                 OptSpec { name: "min-span-cats", help: "with --trace: require at least this many distinct span categories [default: 2]", takes_value: true, default: None },
             ],
@@ -342,6 +342,13 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     let monitored = sc.admin_sock.is_some();
     if monitored {
         health::install(HealthThresholds::default());
+    }
+    // The resource plane turns on when something can observe it: a
+    // --metrics-out report or an admin socket (`stats`/`metrics` attach
+    // the resource block).
+    let resourced = cfg.metrics_out.is_some() || sc.admin_sock.is_some();
+    if resourced {
+        telemetry::resource::install();
     }
     let artifact = match &sc.model_path {
         Some(path) => {
@@ -548,6 +555,9 @@ fn run_serve(cfg: &RunConfig, sc: ServeConfig, emit_json: bool) -> Result<()> {
     }
     if monitored {
         health::uninstall();
+    }
+    if resourced {
+        telemetry::resource::uninstall();
     }
     Ok(())
 }
@@ -888,6 +898,13 @@ fn drive_native<M: Model>(
     // primitives register their profiler slots at construction), then
     // stream one JSON line per epoch plus a final per-primitive profile.
     let profiler = cfg.metrics_out.as_ref().map(|_| telemetry::install());
+    // --metrics-out also turns on the resource plane: every epoch line
+    // (and the final line) carries a `resource` block with RSS / faults /
+    // CPU / allocator accounting.
+    let resourced = cfg.metrics_out.is_some();
+    if resourced {
+        telemetry::resource::install();
+    }
     // --trace-out: per-step fwd/bwd/allreduce/update spans come from the
     // data-parallel trainer; every step is recorded (steps are few and
     // coarse next to serve requests, so sampling buys nothing here).
@@ -1003,6 +1020,7 @@ fn drive_native<M: Model>(
                         fields.insert("straggler_index".to_string(), si.into());
                         fields.insert("allreduce_share".to_string(), ar.into());
                     }
+                    attach_resource(&mut row);
                     write_metrics_line(w, &row)?;
                 }
             }
@@ -1028,6 +1046,7 @@ fn drive_native<M: Model>(
                 fields.insert("straggler_index".to_string(), si.into());
                 fields.insert("allreduce_share".to_string(), ar.into());
             }
+            attach_resource(&mut row);
             write_metrics_line(w, &row)?;
         }
     } else {
@@ -1053,18 +1072,17 @@ fn drive_native<M: Model>(
             at_epoch_end(&mut model, step, loss, &train_rng)?;
             if let Some(w) = sink.as_mut() {
                 if (step + 1) % spe == 0 {
-                    write_metrics_line(
-                        w,
-                        &obj([
-                            ("epoch", ((step + 1) / spe).into()),
-                            ("step", (step + 1).into()),
-                            ("loss", (loss as f64).into()),
-                            (
-                                "metrics",
-                                model.metrics().map(|m| m.to_json()).unwrap_or(Json::Null),
-                            ),
-                        ]),
-                    )?;
+                    let mut row = obj([
+                        ("epoch", ((step + 1) / spe).into()),
+                        ("step", (step + 1).into()),
+                        ("loss", (loss as f64).into()),
+                        (
+                            "metrics",
+                            model.metrics().map(|m| m.to_json()).unwrap_or(Json::Null),
+                        ),
+                    ]);
+                    attach_resource(&mut row);
+                    write_metrics_line(w, &row)?;
                 }
             }
         }
@@ -1075,13 +1093,12 @@ fn drive_native<M: Model>(
         }
         log_info!("final accuracy {:.1}%", acc * 100.0);
         if let Some(w) = sink.as_mut() {
-            write_metrics_line(
-                w,
-                &obj([
-                    ("final_accuracy", acc.into()),
-                    ("metrics", model.metrics().map(|m| m.to_json()).unwrap_or(Json::Null)),
-                ]),
-            )?;
+            let mut row = obj([
+                ("final_accuracy", acc.into()),
+                ("metrics", model.metrics().map(|m| m.to_json()).unwrap_or(Json::Null)),
+            ]);
+            attach_resource(&mut row);
+            write_metrics_line(w, &row)?;
         }
     }
     if let Some(t) = tracer {
@@ -1109,12 +1126,23 @@ fn drive_native<M: Model>(
         );
         telemetry::uninstall();
     }
+    if resourced {
+        telemetry::resource::uninstall();
+    }
     Ok(())
 }
 
 /// One compact JSON line into the `--metrics-out` stream.
 fn write_metrics_line(w: &mut impl std::io::Write, j: &Json) -> Result<()> {
     writeln!(w, "{}", j.to_string_compact()).map_err(|e| anyhow!("writing metrics: {}", e))
+}
+
+/// Attach the resource plane's snapshot to a metrics row. No-op when the
+/// plane is off (the block's absence, not a null, marks "plane off").
+fn attach_resource(row: &mut Json) {
+    if let (Json::Obj(fields), Some(snap)) = (&mut *row, telemetry::resource::snapshot()) {
+        fields.insert("resource".to_string(), snap.to_json());
+    }
 }
 
 fn run_mlp_native(cfg: &RunConfig, sizes: &[usize], resume: Option<ModelArtifact>) -> Result<()> {
@@ -1409,6 +1437,26 @@ fn cmd_tune(args: &Args) -> Result<()> {
         None => TuningCache::load_default(),
     };
 
+    // Calibrate before the tuner runs: its cost model ranks candidates
+    // against `host_platform()`, which prefers these measured constants.
+    let (cal, hit) = perfmodel::calibrate::ensure();
+    let cal_path = perfmodel::calibrate::default_path();
+    if hit {
+        println!(
+            "calibration: loaded from {} (peak {:.1} GFLOPS, stream {:.1} GB/s)",
+            cal_path.display(),
+            cal.peak_gflops,
+            cal.stream_gbs
+        );
+    } else {
+        println!(
+            "calibration: probed and saved to {} (peak {:.1} GFLOPS, stream {:.1} GB/s)",
+            cal_path.display(),
+            cal.peak_gflops,
+            cal.stream_gbs
+        );
+    }
+
     let rep = match primitive {
         "conv" => {
             let hw = args.usize_or("hw", 56).map_err(|e| anyhow!("{}", e))?;
@@ -1664,12 +1712,20 @@ fn collect_perf(j: &Json, keys: &[&str], path: &mut String, out: &mut Vec<(Strin
     }
 }
 
+/// Widening factor on a baseline row's measured noise: a delta only
+/// counts as a regression once it exceeds `max(base·tol, MAD_K·mad)`.
+/// 3×MAD is the usual robust-outlier cut (≈2σ for Gaussian noise).
+const MAD_K: f64 = 3.0;
+
 /// Direction-aware comparison of every shared perf leaf: throughput keys
-/// ([`PERF_KEYS`]) regress by *dropping* below `base * (1 - tol)`,
-/// latency keys ([`LAT_KEYS`]) regress by *rising* above
-/// `base * (1 + tol)`. Zero/negative baselines are skipped — there is no
-/// meaningful fraction of nothing. Returns the number of compared points
-/// plus one message per regression.
+/// ([`PERF_KEYS`]) regress by *dropping* below `base - allow`, latency
+/// keys ([`LAT_KEYS`]) regress by *rising* above `base + allow`, where
+/// `allow = max(base·tol, MAD_K · mad)` and `mad` comes from the
+/// baseline's sibling `<key>_mad` leaf when the bench recorded one (rows
+/// emitting `{median, mad, iters}`). Without a mad sibling this is
+/// exactly the old fixed-fraction gate. Zero/negative baselines are
+/// skipped — there is no meaningful fraction of nothing. Returns the
+/// number of compared points plus one message per regression.
 fn perf_deltas(b: &Json, c: &Json, tol: f64) -> (usize, Vec<String>) {
     let mut compared = 0usize;
     let mut regressions: Vec<String> = Vec::new();
@@ -1678,6 +1734,13 @@ fn perf_deltas(b: &Json, c: &Json, tol: f64) -> (usize, Vec<String>) {
         let mut cvals: Vec<(String, f64)> = Vec::new();
         collect_perf(b, keys, &mut String::new(), &mut bvals);
         collect_perf(c, keys, &mut String::new(), &mut cvals);
+        // Noise siblings: a `<key>_mad` leaf sits next to its `<key>`
+        // leaf, so its path is the metric's path + "_mad".
+        let mad_keys: Vec<String> = keys.iter().map(|k| format!("{}_mad", k)).collect();
+        let mad_refs: Vec<&str> = mad_keys.iter().map(String::as_str).collect();
+        let mut mvals: Vec<(String, f64)> = Vec::new();
+        collect_perf(b, &mad_refs, &mut String::new(), &mut mvals);
+        let mmap: std::collections::BTreeMap<String, f64> = mvals.into_iter().collect();
         let cmap: std::collections::BTreeMap<String, f64> = cvals.into_iter().collect();
         for (path, bv) in &bvals {
             if let Some(cv) = cmap.get(path) {
@@ -1685,19 +1748,22 @@ fn perf_deltas(b: &Json, c: &Json, tol: f64) -> (usize, Vec<String>) {
                 if *bv <= 0.0 {
                     continue;
                 }
-                let bad = if lower_is_better {
-                    *cv > *bv * (1.0 + tol)
-                } else {
-                    *cv < *bv * (1.0 - tol)
-                };
+                let mad = mmap.get(&format!("{}_mad", path)).copied().unwrap_or(0.0);
+                let allow = (bv * tol).max(MAD_K * mad.max(0.0));
+                let bad =
+                    if lower_is_better { *cv > *bv + allow } else { *cv < *bv - allow };
                 if bad {
                     regressions.push(format!(
-                        "REGRESSION {}: {:.3} vs baseline {:.3} (allowed {} {:.0}%)",
+                        "REGRESSION {}: {:.3} vs baseline {:.3} (allowed {} {:.3} = \
+                         max({:.0}% of base, {}x MAD {:.3}))",
                         path,
                         cv,
                         bv,
                         if lower_is_better { "rise" } else { "drop" },
-                        tol * 100.0
+                        allow,
+                        tol * 100.0,
+                        MAD_K,
+                        mad
                     ));
                 }
             }
@@ -1706,13 +1772,21 @@ fn perf_deltas(b: &Json, c: &Json, tol: f64) -> (usize, Vec<String>) {
     (compared, regressions)
 }
 
+/// A BENCH baseline file maintained by `scripts/refresh_baselines.sh` is
+/// `{note, history: [entry, ...]}` with provenance-stamped entries
+/// appended over time; comparisons always run against the *newest*
+/// entry. A flat document (no `history` array) is its own entry.
+fn latest_entry(doc: &Json) -> &Json {
+    doc.get("history").and_then(Json::as_arr).and_then(|h| h.last()).unwrap_or(doc)
+}
+
 fn compare_perf(baseline: &str, current: &str, tol: f64) -> Result<()> {
     let load = |p: &str| -> Result<Json> {
         let s = std::fs::read_to_string(p).map_err(|e| anyhow!("reading {}: {}", p, e))?;
         Json::parse(&s).map_err(|e| anyhow!("{}: {:?}", p, e))
     };
     let (b, c) = (load(baseline)?, load(current)?);
-    let (compared, regressions) = perf_deltas(&b, &c, tol);
+    let (compared, regressions) = perf_deltas(latest_entry(&b), latest_entry(&c), tol);
     for r in &regressions {
         println!("{}", r);
     }
@@ -1854,6 +1928,64 @@ mod tests {
         assert!(regs[0].contains("/straggler_index") && regs[0].contains("rise"));
         let better = j(r#"{"metrics": {}, "straggler_index": 1.0}"#);
         assert!(perf_deltas(&base, &better, 0.5).1.is_empty());
+    }
+
+    #[test]
+    fn mad_sibling_widens_the_allowance() {
+        // Fixed 10% tolerance would flag 100 → 85; a recorded MAD of 6
+        // widens the allowance to 3·6 = 18, so the dip is noise.
+        let base = j(r#"{"rows": [{"kwps": 100.0, "kwps_mad": 6.0, "iters": 5}]}"#);
+        let dip = j(r#"{"rows": [{"kwps": 85.0, "kwps_mad": 5.0, "iters": 5}]}"#);
+        let (compared, regs) = perf_deltas(&base, &dip, 0.1);
+        assert_eq!(compared, 1);
+        assert!(regs.is_empty(), "{:?}", regs);
+        // A synthetically slowed row falls past 3·MAD too: regression.
+        let slowed = j(r#"{"rows": [{"kwps": 60.0, "kwps_mad": 5.0, "iters": 5}]}"#);
+        let (_, regs) = perf_deltas(&base, &slowed, 0.1);
+        assert_eq!(regs.len(), 1, "{:?}", regs);
+        assert!(regs[0].contains("/rows/0/kwps") && regs[0].contains("MAD"));
+        // Without a mad sibling, the old fixed-fraction gate applies.
+        let nomad = j(r#"{"rows": [{"kwps": 100.0}]}"#);
+        let (_, regs) = perf_deltas(&nomad, &dip, 0.1);
+        assert_eq!(regs.len(), 1, "no sibling → 10% gate flags 85: {:?}", regs);
+    }
+
+    #[test]
+    fn mad_widens_latency_allowance_symmetrically() {
+        let base = j(r#"{"p99_ms": 10.0, "p99_ms_mad": 2.0}"#);
+        // +50% rise but within 3·MAD = 6: noise.
+        let noisy = j(r#"{"p99_ms": 15.0}"#);
+        assert!(perf_deltas(&base, &noisy, 0.1).1.is_empty());
+        // Beyond base + 3·MAD: regression.
+        let worse = j(r#"{"p99_ms": 17.0}"#);
+        assert_eq!(perf_deltas(&base, &worse, 0.1).1.len(), 1);
+    }
+
+    #[test]
+    fn identical_run_never_regresses_regardless_of_mad() {
+        let doc = j(r#"{"rows": [{"throughput_rps": 42.0, "throughput_rps_mad": 0.0}]}"#);
+        let (compared, regs) = perf_deltas(&doc, &doc, 0.1);
+        assert_eq!(compared, 1);
+        assert!(regs.is_empty(), "self-compare must pass: {:?}", regs);
+    }
+
+    #[test]
+    fn latest_entry_selects_newest_history_entry_or_flat_doc() {
+        let hist = j(
+            r#"{"note": "n", "history": [
+                {"rev": "old", "rows": [{"kwps": 10.0}]},
+                {"rev": "new", "rows": [{"kwps": 20.0}]}
+            ]}"#,
+        );
+        let latest = latest_entry(&hist);
+        assert_eq!(latest.get("rev").and_then(Json::as_str), Some("new"));
+        // Newest-vs-newest self compare through the unwrap.
+        assert!(perf_deltas(latest_entry(&hist), latest_entry(&hist), 0.1).1.is_empty());
+        let flat = j(r#"{"rows": [{"kwps": 5.0}]}"#);
+        assert!(std::ptr::eq(latest_entry(&flat), &flat), "flat doc is its own entry");
+        // An empty history array degrades to the flat doc (no panic).
+        let empty = j(r#"{"history": []}"#);
+        assert!(std::ptr::eq(latest_entry(&empty), &empty));
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! Measured machine constants: one-time microprobes persisted to a
+//! host-keyed calibration file, so every efficiency number the repo
+//! reports — profiler efficiency-vs-roofline, bench-table `eff%`, and the
+//! autotune cost model's roofline ranking — is computed against *this*
+//! machine, not the nominal constants baked into
+//! [`crate::perfmodel::host_platform`]'s fallback.
+//!
+//! Two probes, in the spirit of the classics:
+//!
+//! * **Peak GFLOPS** — [`crate::perfmodel::fma_roofline_probe`], the
+//!   register-resident FMA chain already used for the live peak probe.
+//! * **Stream GB/s** — [`stream_triad_probe`], a STREAM-style triad
+//!   (`a[i] = b[i] + s·c[i]`) over arrays far larger than the LLC, so the
+//!   measured rate is memory bandwidth, not cache bandwidth.
+//!
+//! Results persist like the autotune cache ([`crate::autotune::cache`]):
+//! a versioned JSON file (`$BRGEMM_CALIBRATION` or `calibration.json`,
+//! alongside `tuning_cache.json`), keyed by `hostname|isa` so a file
+//! carried to a different machine is a clean miss rather than a wrong
+//! constant. `BRGEMM_RECALIBRATE=1` forces a fresh probe (and rewrites
+//! the entry); deleting the file does the same.
+
+use crate::brgemm::Isa;
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Schema version; entries from other versions are ignored on load (same
+/// policy as the tuning cache — a calibration is always regenerable).
+pub const FORMAT_VERSION: usize = 1;
+
+/// Measured constants for one host.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Sustained single-core FMA peak, GFLOPS.
+    pub peak_gflops: f64,
+    /// Sustained single-core triad bandwidth, GB/s.
+    pub stream_gbs: f64,
+}
+
+impl Calibration {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("peak_gflops", self.peak_gflops.into()),
+            ("stream_gbs", self.stream_gbs.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Calibration> {
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).filter(|x| x.is_finite() && *x > 0.0);
+        Some(Calibration { peak_gflops: num("peak_gflops")?, stream_gbs: num("stream_gbs")? })
+    }
+}
+
+/// `hostname|isa` — the file key. Hostname comes from
+/// `/proc/sys/kernel/hostname` (no libc for `gethostname`); on non-Linux
+/// hosts it degrades to a constant, which still keys correctly for a
+/// single-machine workflow.
+pub fn host_key() -> String {
+    let host = std::fs::read_to_string("/proc/sys/kernel/hostname")
+        .map(|s| s.trim().to_string())
+        .ok()
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown-host".to_string());
+    format!("{}|{}", host, Isa::detect().name())
+}
+
+/// `$BRGEMM_CALIBRATION` or `calibration.json` in the working dir —
+/// deliberately alongside the autotune cache's default.
+pub fn default_path() -> PathBuf {
+    std::env::var("BRGEMM_CALIBRATION")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("calibration.json"))
+}
+
+/// Parse a calibration file into its entry map. `None` when the file is
+/// missing, malformed, or written at a different schema version.
+pub fn load_entries(path: &Path) -> Option<BTreeMap<String, Calibration>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).ok()?;
+    if j.get("version").and_then(Json::as_usize) != Some(FORMAT_VERSION) {
+        return None;
+    }
+    let entries = j.get("entries").and_then(Json::as_obj)?;
+    let mut out = BTreeMap::new();
+    for (k, v) in entries {
+        out.insert(k.clone(), Calibration::from_json(v)?);
+    }
+    Some(out)
+}
+
+/// This host's entry in the file at `path`, if any.
+pub fn lookup(path: &Path) -> Option<Calibration> {
+    load_entries(path)?.get(&host_key()).copied()
+}
+
+/// Merge this host's entry into the file at `path` (temp file + rename,
+/// same torn-write discipline as the tuning cache). Entries for other
+/// hosts are preserved.
+pub fn save(path: &Path, cal: Calibration) -> std::io::Result<()> {
+    let mut entries = load_entries(path).unwrap_or_default();
+    entries.insert(host_key(), cal);
+    let jentries: BTreeMap<String, Json> =
+        entries.iter().map(|(k, c)| (k.clone(), c.to_json())).collect();
+    let doc = obj([("version", FORMAT_VERSION.into()), ("entries", Json::Obj(jentries))]);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, doc.to_string_pretty())?;
+    std::fs::rename(&tmp, path)
+}
+
+/// STREAM-style triad `a[i] = b[i] + s·c[i]` over 32 MiB arrays (≫ LLC
+/// share), repeated for `seconds`; reports the best pass's GB/s counting
+/// the classic 3 × 4 bytes per element (two loads + one store;
+/// write-allocate traffic is deliberately not charged, per STREAM).
+pub fn stream_triad_probe(seconds: f64) -> f64 {
+    const N: usize = 8 << 20; // 8 Mi f32 per array = 32 MiB each
+    let b = vec![1.5f32; N];
+    let c = vec![0.5f32; N];
+    let mut a = vec![0.0f32; N];
+    let s = 3.0f32;
+    // One untimed pass warms the pages (first touch faults the arrays in).
+    triad_pass(&mut a, &b, &c, s);
+    let mut best_secs = f64::INFINITY;
+    let t0 = Instant::now();
+    loop {
+        let t = Instant::now();
+        triad_pass(&mut a, &b, &c, s);
+        best_secs = best_secs.min(t.elapsed().as_secs_f64());
+        if t0.elapsed().as_secs_f64() > seconds {
+            break;
+        }
+    }
+    std::hint::black_box(&a);
+    if best_secs > 0.0 {
+        (3 * N * std::mem::size_of::<f32>()) as f64 / best_secs / 1e9
+    } else {
+        0.0
+    }
+}
+
+#[inline(never)]
+fn triad_pass(a: &mut [f32], b: &[f32], c: &[f32], s: f32) {
+    for i in 0..a.len() {
+        a[i] = b[i] + s * c[i];
+    }
+}
+
+/// Run both microprobes (a few hundred ms total).
+pub fn probe() -> Calibration {
+    Calibration {
+        peak_gflops: crate::perfmodel::fma_roofline_probe(0.3),
+        stream_gbs: stream_triad_probe(0.2),
+    }
+}
+
+/// The calibration consulted by [`crate::perfmodel::host_platform`]:
+/// loaded from [`default_path`] once per process, `None` when no entry
+/// exists for this host (nominal fallback applies). Never probes — probing
+/// is an explicit act ([`ensure`]), so merely reporting efficiency can't
+/// cost a surprise half-second.
+pub fn cached() -> Option<Calibration> {
+    *cell().get_or_init(|| lookup(&default_path()))
+}
+
+fn cell() -> &'static OnceLock<Option<Calibration>> {
+    static CACHED: OnceLock<Option<Calibration>> = OnceLock::new();
+    &CACHED
+}
+
+/// Load-or-probe: returns the persisted calibration for this host when
+/// one exists (and `BRGEMM_RECALIBRATE` is not set), otherwise probes and
+/// persists. The bool is `true` on a file hit — what `tune` prints and
+/// CI asserts on a second invocation.
+pub fn ensure() -> (Calibration, bool) {
+    let path = default_path();
+    let force = std::env::var("BRGEMM_RECALIBRATE").map(|v| v == "1").unwrap_or(false);
+    if !force {
+        if let Some(c) = lookup(&path) {
+            let _ = cell().set(Some(c));
+            return (c, true);
+        }
+    }
+    let c = probe();
+    if let Err(e) = save(&path, c) {
+        crate::log_warn!("calibration not persisted to {}: {}", path.display(), e);
+    }
+    let _ = cell().set(Some(c));
+    (c, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join("brgemm_dl_calibrate_test");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn triad_probe_reports_plausible_bandwidth() {
+        let gbs = stream_triad_probe(0.05);
+        // From a throttled VM (~1 GB/s) to a big server core (~100 GB/s):
+        // the point is positive and finite, not a particular magnitude.
+        assert!(gbs > 0.05 && gbs < 1000.0, "triad {} GB/s", gbs);
+    }
+
+    #[test]
+    fn calibration_round_trips_through_file() {
+        let path = tmpdir().join("cal_roundtrip.json");
+        std::fs::remove_file(&path).ok();
+        assert!(lookup(&path).is_none(), "missing file is a clean miss");
+        let cal = Calibration { peak_gflops: 123.4, stream_gbs: 17.8 };
+        save(&path, cal).unwrap();
+        assert_eq!(lookup(&path), Some(cal));
+        // A second save for the same host overwrites, not duplicates.
+        let cal2 = Calibration { peak_gflops: 200.0, stream_gbs: 20.0 };
+        save(&path, cal2).unwrap();
+        assert_eq!(load_entries(&path).unwrap().len(), 1);
+        assert_eq!(lookup(&path), Some(cal2));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_preserves_other_hosts_entries() {
+        let path = tmpdir().join("cal_multihost.json");
+        let other = obj([
+            ("version", FORMAT_VERSION.into()),
+            (
+                "entries",
+                obj([(
+                    "elsewhere|avx512",
+                    obj([("peak_gflops", 999.0.into()), ("stream_gbs", 99.0.into())]),
+                )]),
+            ),
+        ]);
+        std::fs::write(&path, other.to_string_pretty()).unwrap();
+        save(&path, Calibration { peak_gflops: 50.0, stream_gbs: 5.0 }).unwrap();
+        let entries = load_entries(&path).unwrap();
+        assert_eq!(entries.len(), 2, "foreign entry must survive a save");
+        assert_eq!(entries["elsewhere|avx512"].peak_gflops, 999.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stale_or_malformed_files_are_clean_misses() {
+        let path = tmpdir().join("cal_malformed.json");
+        std::fs::write(&path, "not json").unwrap();
+        assert!(lookup(&path).is_none());
+        std::fs::write(&path, r#"{"version":99,"entries":{}}"#).unwrap();
+        assert!(load_entries(&path).is_none(), "wrong schema version ignored");
+        // Non-positive constants are rejected at entry level.
+        let bad = format!(
+            r#"{{"version":{},"entries":{{"{}":{{"peak_gflops":0.0,"stream_gbs":5.0}}}}}}"#,
+            FORMAT_VERSION,
+            host_key()
+        );
+        std::fs::write(&path, bad).unwrap();
+        assert!(lookup(&path).is_none(), "zero peak must not calibrate anything");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn host_key_carries_hostname_and_isa() {
+        let k = host_key();
+        assert!(k.contains('|'), "{}", k);
+        assert!(k.ends_with(Isa::detect().name()), "{}", k);
+    }
+}

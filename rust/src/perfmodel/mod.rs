@@ -8,6 +8,14 @@
 //! benches then use as the denominator for their efficiency columns.
 //! [`SKX_PAPER`] carries the paper's numbers so tables can print
 //! paper-vs-ours side by side.
+//!
+//! [`calibrate`] persists the probed constants (peak GFLOPS plus a
+//! STREAM-triad bandwidth) to a host-keyed calibration file;
+//! [`host_platform`] consults it so profiler efficiency, bench tables and
+//! the autotune cost model all rank against *measured* constants when a
+//! calibration exists, with the nominal bandwidth as a labeled fallback.
+
+pub mod calibrate;
 
 use std::time::Instant;
 
@@ -43,16 +51,41 @@ impl CacheModel {
     }
 }
 
-/// Single-core platform model of *this* host: the peak is measured by
-/// [`host_peak_gflops`]; the bandwidth is a nominal per-core STREAM figure
+/// Nominal per-core STREAM figure used when no calibration file exists
 /// (the paper's 105 GB/s socket ≈ 3.75 GB/s/core is memory-parallelism
-/// limited; one core alone sustains more — we use a conservative midpoint).
+/// limited; one core alone sustains more — a conservative midpoint).
+pub const NOMINAL_STREAM_GBS: f64 = 12.0;
+
+/// Single-core platform model of *this* host. When a persisted calibration
+/// exists for this host ([`calibrate::cached`]) both constants are
+/// *measured* — the platform name says `calibrated`. Otherwise the peak is
+/// probed live ([`host_peak_gflops`]) and the bandwidth falls back to
+/// [`NOMINAL_STREAM_GBS`], with the name labeling the fallback so no
+/// downstream table can pass a nominal number off as measured.
 pub fn host_platform() -> PlatformModel {
-    PlatformModel {
-        name: "host (measured peak)",
-        peak_gflops_f32: host_peak_gflops(),
-        cores: 1,
-        stream_gbs: 12.0,
+    match calibrate::cached() {
+        Some(c) => PlatformModel {
+            name: "host (calibrated)",
+            peak_gflops_f32: c.peak_gflops,
+            cores: 1,
+            stream_gbs: c.stream_gbs,
+        },
+        None => PlatformModel {
+            name: "host (probed peak, nominal bandwidth)",
+            peak_gflops_f32: host_peak_gflops(),
+            cores: 1,
+            stream_gbs: NOMINAL_STREAM_GBS,
+        },
+    }
+}
+
+/// The peak used for bench-table efficiency columns: the persisted
+/// calibration when present, else the live probe. The label distinguishes
+/// the two in rendered output.
+pub fn calibrated_peak() -> (f64, &'static str) {
+    match calibrate::cached() {
+        Some(c) => (c.peak_gflops, "calibrated"),
+        None => (host_peak_gflops(), "probed this run (no calibration file)"),
     }
 }
 
@@ -182,6 +215,21 @@ mod tests {
     #[test]
     fn efficiency_math() {
         assert!((efficiency(50.0, 100.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_platform_labels_its_constant_source() {
+        // Whether or not a calibration file exists in the test cwd, the
+        // model must carry positive constants and an honest label.
+        let p = host_platform();
+        assert!(p.peak_gflops_f32 > 0.0 && p.stream_gbs > 0.0);
+        assert!(
+            p.name == "host (calibrated)" || p.name == "host (probed peak, nominal bandwidth)",
+            "unlabeled platform: {}",
+            p.name
+        );
+        let (peak, label) = calibrated_peak();
+        assert!(peak > 0.0 && !label.is_empty());
     }
 
     #[test]

@@ -466,8 +466,8 @@ impl AdminHandle {
 
     /// Render everything the admin socket knows in Prometheus text
     /// exposition format: serving counters/timers/histograms, SLO
-    /// gauges, plus health and primitive-profiler families when their
-    /// monitors are installed.
+    /// gauges, plus health, primitive-profiler and process-resource
+    /// families when their monitors are installed.
     pub fn prometheus(&self) -> String {
         let wall = self.started.elapsed().as_secs_f64();
         let reloads = self.shared.model.reload_count();
@@ -484,6 +484,9 @@ impl AdminHandle {
         }
         if let Some(p) = crate::telemetry::current() {
             crate::serve::metrics::prometheus_profiler_into(&mut out, &p);
+        }
+        if let Some(r) = crate::telemetry::resource::snapshot() {
+            crate::serve::metrics::prometheus_resource_into(&mut out, &r);
         }
         out
     }

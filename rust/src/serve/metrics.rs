@@ -373,6 +373,7 @@ impl ServeStats {
             uptime_secs: wall_secs,
             slo: self.slo.as_ref().map(|s| s.summary()),
             info: None,
+            resource: crate::telemetry::resource::snapshot(),
             throughput_rps: if wall_secs > 0.0 { n as f64 / wall_secs } else { 0.0 },
             p50_ms: pct(0.50),
             p95_ms: pct(0.95),
@@ -483,6 +484,11 @@ pub struct ServeReport {
     /// attached by the batcher's admin/report paths so an operator can
     /// tell from `stats` what is actually loaded.
     pub info: Option<ServerInfo>,
+    /// Process resource accounting (RSS, faults, CPU, allocations) taken
+    /// at report time. Present only when the resource plane is installed
+    /// ([`crate::telemetry::resource::install`]); absence means "plane
+    /// off", same contract as `slo`/`info`.
+    pub resource: Option<crate::telemetry::resource::ResourceSnapshot>,
     pub throughput_rps: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -538,6 +544,9 @@ impl ServeReport {
         ));
         if self.reloads > 0 {
             s.push_str(&format!("hot weight reloads: {}\n", self.reloads));
+        }
+        if let Some(r) = &self.resource {
+            s.push_str(&r.render());
         }
         if let Some(slo) = &self.slo {
             slo.render_into(&mut s);
@@ -653,10 +662,13 @@ impl ServeReport {
         // a null) is what "SLO off" looks like downstream.
         if let Json::Obj(fields) = &mut row {
             if let Some(slo) = &self.slo {
-                fields.push(("slo".to_string(), slo.to_json()));
+                fields.insert("slo".to_string(), slo.to_json());
             }
             if let Some(info) = &self.info {
-                fields.push(("server".to_string(), info.to_json()));
+                fields.insert("server".to_string(), info.to_json());
+            }
+            if let Some(r) = &self.resource {
+                fields.insert("resource".to_string(), r.to_json());
             }
         }
         row
@@ -953,6 +965,86 @@ pub fn prometheus_profiler_into(out: &mut String, prof: &crate::telemetry::Profi
             }
         }
     }
+}
+
+/// Append the resource plane's families (when installed): process RSS,
+/// page faults, CPU accounting and allocator counts, all prefixed
+/// `brgemm_resource_`.
+pub fn prometheus_resource_into(
+    out: &mut String,
+    r: &crate::telemetry::resource::ResourceSnapshot,
+) {
+    prom_header(out, "brgemm_resource_rss_mb", "gauge", "Resident set size (VmRSS), MiB.");
+    prom_sample(out, "brgemm_resource_rss_mb", "", r.rss_mb);
+    prom_header(
+        out,
+        "brgemm_resource_rss_peak_mb",
+        "gauge",
+        "Peak resident set size (VmHWM), MiB.",
+    );
+    prom_sample(out, "brgemm_resource_rss_peak_mb", "", r.rss_peak_mb);
+    prom_header(
+        out,
+        "brgemm_resource_page_faults_total",
+        "counter",
+        "Process page faults since start, by severity.",
+    );
+    prom_sample(out, "brgemm_resource_page_faults_total", "{kind=\"minor\"}", r.minor_faults as f64);
+    prom_sample(out, "brgemm_resource_page_faults_total", "{kind=\"major\"}", r.major_faults as f64);
+    prom_header(
+        out,
+        "brgemm_resource_cpu_seconds_total",
+        "counter",
+        "Process CPU time since start, by mode.",
+    );
+    prom_sample(out, "brgemm_resource_cpu_seconds_total", "{mode=\"user\"}", r.cpu_utime_s);
+    prom_sample(out, "brgemm_resource_cpu_seconds_total", "{mode=\"system\"}", r.cpu_stime_s);
+    prom_header(
+        out,
+        "brgemm_resource_cpu_utilization",
+        "gauge",
+        "CPU seconds per wall second since the plane was installed (cores-worth of CPU).",
+    );
+    prom_sample(out, "brgemm_resource_cpu_utilization", "", r.cpu_util);
+    prom_header(
+        out,
+        "brgemm_resource_ctx_switches_total",
+        "counter",
+        "Context switches since start, by kind.",
+    );
+    prom_sample(
+        out,
+        "brgemm_resource_ctx_switches_total",
+        "{kind=\"voluntary\"}",
+        r.ctx_voluntary as f64,
+    );
+    prom_sample(
+        out,
+        "brgemm_resource_ctx_switches_total",
+        "{kind=\"involuntary\"}",
+        r.ctx_involuntary as f64,
+    );
+    prom_header(
+        out,
+        "brgemm_resource_allocations_total",
+        "counter",
+        "Heap allocations counted while the plane was installed.",
+    );
+    prom_sample(out, "brgemm_resource_allocations_total", "", r.alloc_count as f64);
+    prom_header(
+        out,
+        "brgemm_resource_allocated_bytes_total",
+        "counter",
+        "Heap bytes requested while the plane was installed.",
+    );
+    prom_sample(out, "brgemm_resource_allocated_bytes_total", "", r.alloc_bytes as f64);
+    prom_header(
+        out,
+        "brgemm_resource_frees_total",
+        "counter",
+        "Heap frees counted while the plane was installed.",
+    );
+    prom_sample(out, "brgemm_resource_frees_total", "", r.free_count as f64);
 }
 
 #[cfg(test)]
@@ -1319,5 +1411,54 @@ mod tests {
             "{}",
             out
         );
+    }
+
+    #[test]
+    fn prometheus_resource_families_render() {
+        let snap = crate::telemetry::resource::ResourceSnapshot {
+            rss_mb: 12.5,
+            rss_peak_mb: 20.0,
+            minor_faults: 1000,
+            major_faults: 2,
+            cpu_utime_s: 1.25,
+            cpu_stime_s: 0.5,
+            cpu_util: 0.9,
+            ctx_voluntary: 40,
+            ctx_involuntary: 3,
+            alloc_count: 500,
+            alloc_bytes: 1 << 20,
+            free_count: 480,
+            samples: 7,
+        };
+        let mut out = String::new();
+        prometheus_resource_into(&mut out, &snap);
+        assert!(out.contains("# TYPE brgemm_resource_rss_mb gauge"), "{}", out);
+        assert!(out.contains("brgemm_resource_rss_peak_mb 20"), "{}", out);
+        assert!(out.contains("brgemm_resource_page_faults_total{kind=\"minor\"} 1000"), "{}", out);
+        assert!(out.contains("brgemm_resource_cpu_seconds_total{mode=\"user\"} 1.25"), "{}", out);
+        assert!(out.contains("brgemm_resource_ctx_switches_total{kind=\"involuntary\"} 3"), "{}", out);
+        assert!(out.contains("brgemm_resource_allocations_total 500"), "{}", out);
+        // Every sample line is `name[{labels}] value` with a parseable value.
+        for line in out.lines().filter(|l| !l.starts_with('#')) {
+            let v = line.rsplit(' ').next().unwrap();
+            assert!(v.parse::<f64>().is_ok(), "unparseable sample in {:?}", line);
+        }
+    }
+
+    #[test]
+    fn report_json_carries_resource_block_when_plane_installed() {
+        let _g = crate::telemetry::test_lock();
+        crate::telemetry::resource::install();
+        let st = ServeStats::new();
+        let r = st.report(1.0, 0);
+        crate::telemetry::resource::uninstall();
+        let snap = r.resource.as_ref().expect("plane installed → block present");
+        assert!(snap.rss_peak_mb >= 0.0);
+        let j = r.to_json().to_string_compact();
+        assert!(j.contains("\"resource\"") && j.contains("\"rss_peak_mb\""), "{}", j);
+        // Plane off → block absent (not null).
+        let r2 = st.report(1.0, 0);
+        assert!(r2.resource.is_none());
+        assert!(!r2.to_json().to_string_compact().contains("\"resource\""));
     }
 }

@@ -27,11 +27,17 @@
 //! atomics and a watchdog deriving a Starting → Ready → Degraded →
 //! Draining state machine, again behind the same explicit-install gate.
 //!
+//! A fifth, the resource plane, lives in [`resource`]: a counting global
+//! allocator plus a periodic `/proc` sampler (RSS, faults, CPU time,
+//! context switches), behind the same gate — the machine-side complement
+//! to the profiler's kernel-side counters.
+//!
 //! Instrumentation never touches the math: enabling the profiler changes
 //! timing side channels only, so instrumented and uninstrumented runs are
 //! bit-identical (tested below).
 
 pub mod health;
+pub mod resource;
 pub mod trace;
 
 use crate::perfmodel::{host_platform, roofline_secs};

@@ -1,0 +1,649 @@
+//! Resource plane: allocation, RSS and CPU accounting — the third gated
+//! observability plane, mirroring the profiler ([`crate::telemetry`]),
+//! tracer ([`crate::telemetry::trace`]) and health
+//! ([`crate::telemetry::health`]) pattern: a process-global monitor behind
+//! one `AtomicBool`, installed only when something can observe it, with a
+//! branch-only cost when off.
+//!
+//! Two collectors feed one [`ResourceSnapshot`]:
+//!
+//! * A **counting global allocator** ([`CountingAlloc`], declared with
+//!   `#[global_allocator]` in `lib.rs`): when counting is enabled it tallies
+//!   allocation calls/bytes (process-wide atomics plus per-thread cells) and
+//!   free calls, then forwards to [`System`] untouched — allocation
+//!   *behaviour* is never altered, so instrumented runs stay bit-identical
+//!   to uninstrumented ones. When counting is off the wrapper costs exactly
+//!   one relaxed load and a branch per call. [`AllocGauge`] scopes the
+//!   counters over a region, turning the ad-hoc "zero steady-state
+//!   allocation" serve assertions into a first-class measurement.
+//!
+//! * An **OS sampler** parsing `/proc/self/status` (VmRSS/VmHWM,
+//!   voluntary/involuntary context switches) and `/proc/self/stat` (minor/
+//!   major faults, utime/stime) on a periodic watchdog-style thread, so the
+//!   RSS peak is tracked even between report points. The parsers are pure
+//!   functions over the file text (fixture-tested, tolerant of kernels that
+//!   omit fields); on non-Linux hosts the reads fail and the snapshot
+//!   degrades to zeros rather than erroring.
+//!
+//! The snapshot flows into `ServeReport` JSON (and therefore admin `stats`),
+//! the Prometheus exposition (`brgemm_resource_*` families), and every
+//! training `--metrics-out` epoch line.
+
+use crate::util::json::{obj, Json};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---- counting global allocator ----
+
+/// Wrapper around [`System`] that counts calls when the resource plane (or
+/// an [`AllocGauge`]) enables counting. Declared as the `#[global_allocator]`
+/// in `lib.rs`, so it covers the binary, tests and benches alike.
+pub struct CountingAlloc;
+
+/// Counting switch: off = one relaxed load + branch per alloc/dealloc.
+/// Driven by a refcount ([`COUNT_REFS`]) so the plane and any number of
+/// gauges can overlap without stomping each other.
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static COUNT_REFS: AtomicUsize = AtomicUsize::new(0);
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static FREE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    // const-initialised Cells without Drop: no lazy allocation on first
+    // touch and no destructor, so they are safe to reach from inside the
+    // allocator itself at any point in a thread's life.
+    static TL_ALLOC_CALLS: Cell<u64> = const { Cell::new(0) };
+    static TL_ALLOC_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn note_alloc(bytes: usize) {
+    ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+    ALLOC_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    let _ = TL_ALLOC_CALLS.try_with(|c| c.set(c.get() + 1));
+    let _ = TL_ALLOC_BYTES.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+// SAFETY: every method forwards verbatim to `System`; the wrapper only
+// observes, never changes size, alignment or placement.
+unsafe impl GlobalAlloc for CountingAlloc {
+    #[inline]
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            note_alloc(layout.size());
+        }
+        System.alloc(layout)
+    }
+
+    #[inline]
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            note_alloc(layout.size());
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    #[inline]
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        if COUNTING.load(Ordering::Relaxed) {
+            FREE_CALLS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.dealloc(ptr, layout)
+    }
+
+    #[inline]
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            // A realloc is one allocation of the new size (and implicitly
+            // one free); counting it as such keeps call parity with dealloc.
+            note_alloc(new_size);
+            FREE_CALLS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+fn counting_acquire() {
+    if COUNT_REFS.fetch_add(1, Ordering::AcqRel) == 0 {
+        COUNTING.store(true, Ordering::Release);
+    }
+}
+
+fn counting_release() {
+    if COUNT_REFS.fetch_sub(1, Ordering::AcqRel) == 1 {
+        COUNTING.store(false, Ordering::Release);
+    }
+}
+
+/// Whether allocation counting is currently on (plane installed or a gauge
+/// live somewhere).
+pub fn counting_enabled() -> bool {
+    COUNTING.load(Ordering::Relaxed)
+}
+
+/// Allocation totals since process start *while counting was enabled*:
+/// `(alloc calls, alloc bytes, free calls)`.
+pub fn alloc_totals() -> (u64, u64, u64) {
+    (
+        ALLOC_CALLS.load(Ordering::Relaxed),
+        ALLOC_BYTES.load(Ordering::Relaxed),
+        FREE_CALLS.load(Ordering::Relaxed),
+    )
+}
+
+/// Scoped allocation measurement for the calling thread. Construction
+/// enables counting (refcounted — nesting and overlap with the installed
+/// plane are fine); `Drop` releases it. [`AllocGauge::thread_delta`] reads
+/// how many allocations *this thread* made since the gauge started — the
+/// first-class form of the serve path's "zero steady-state allocation"
+/// assertions.
+pub struct AllocGauge {
+    calls0: u64,
+    bytes0: u64,
+}
+
+impl AllocGauge {
+    pub fn start() -> AllocGauge {
+        counting_acquire();
+        AllocGauge {
+            calls0: TL_ALLOC_CALLS.with(Cell::get),
+            bytes0: TL_ALLOC_BYTES.with(Cell::get),
+        }
+    }
+
+    /// `(calls, bytes)` allocated by the calling thread since `start`.
+    /// Only meaningful on the thread that created the gauge.
+    pub fn thread_delta(&self) -> (u64, u64) {
+        (
+            TL_ALLOC_CALLS.with(Cell::get) - self.calls0,
+            TL_ALLOC_BYTES.with(Cell::get) - self.bytes0,
+        )
+    }
+}
+
+impl Drop for AllocGauge {
+    fn drop(&mut self) {
+        counting_release();
+    }
+}
+
+// ---- /proc parsers (pure, fixture-testable) ----
+
+/// Fields scraped from `/proc/self/status`. Every field is optional:
+/// kernels omit `VmHWM`/`VmRSS` for kernel threads, and older kernels
+/// lack the context-switch counters entirely.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatusSample {
+    /// Resident set size, kB.
+    pub vm_rss_kb: Option<u64>,
+    /// Peak resident set size ("high water mark"), kB.
+    pub vm_hwm_kb: Option<u64>,
+    pub voluntary_ctxt_switches: Option<u64>,
+    pub nonvoluntary_ctxt_switches: Option<u64>,
+}
+
+/// Parse the `Key:\tvalue [unit]` lines of `/proc/self/status`. Unknown
+/// keys and malformed values are skipped, never an error.
+pub fn parse_proc_status(text: &str) -> StatusSample {
+    let mut s = StatusSample::default();
+    for line in text.lines() {
+        let Some((key, rest)) = line.split_once(':') else { continue };
+        let num = rest.split_whitespace().next().and_then(|w| w.parse::<u64>().ok());
+        match key.trim() {
+            "VmRSS" => s.vm_rss_kb = num,
+            "VmHWM" => s.vm_hwm_kb = num,
+            "voluntary_ctxt_switches" => s.voluntary_ctxt_switches = num,
+            "nonvoluntary_ctxt_switches" => s.nonvoluntary_ctxt_switches = num,
+            _ => {}
+        }
+    }
+    s
+}
+
+/// Fields scraped from `/proc/self/stat`. Optional for the same reason as
+/// [`StatusSample`]: a truncated or nonstandard line yields `None`s, not
+/// an error.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatSample {
+    pub minor_faults: Option<u64>,
+    pub major_faults: Option<u64>,
+    /// User-mode CPU time, clock ticks (see [`CLK_TCK_HZ`]).
+    pub utime_ticks: Option<u64>,
+    /// Kernel-mode CPU time, clock ticks.
+    pub stime_ticks: Option<u64>,
+}
+
+/// Kernel clock-tick rate assumed when converting `utime`/`stime` to
+/// seconds. `sysconf(_SC_CLK_TCK)` needs libc (unavailable here); USER_HZ
+/// has been 100 on every mainstream Linux configuration since 2.6.
+pub const CLK_TCK_HZ: f64 = 100.0;
+
+/// Parse the single space-separated line of `/proc/self/stat`. The `comm`
+/// field (2) is parenthesised and may itself contain spaces and `)` —
+/// fields are taken after the **last** `)`, per proc(5). After that split,
+/// 0-indexed positions: state=0, …, minflt=7, majflt=9, utime=11, stime=12.
+pub fn parse_proc_stat(text: &str) -> StatSample {
+    let Some(close) = text.rfind(')') else { return StatSample::default() };
+    let fields: Vec<&str> = text[close + 1..].split_whitespace().collect();
+    let num = |i: usize| fields.get(i).and_then(|w| w.parse::<u64>().ok());
+    StatSample {
+        minor_faults: num(7),
+        major_faults: num(9),
+        utime_ticks: num(11),
+        stime_ticks: num(12),
+    }
+}
+
+// ---- the monitor ----
+
+/// Point-in-time resource readout: OS sampler state + allocator counters.
+/// All fields degrade to zero where the OS gives nothing (non-Linux, or a
+/// kernel omitting fields) — the block's *presence* signals the plane was
+/// on, exactly like the SLO block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceSnapshot {
+    /// Resident set size at the snapshot, MB.
+    pub rss_mb: f64,
+    /// Peak RSS: max of the kernel's VmHWM and every periodic sample, MB.
+    pub rss_peak_mb: f64,
+    pub minor_faults: u64,
+    pub major_faults: u64,
+    /// Cumulative user / kernel CPU seconds of the process.
+    pub cpu_utime_s: f64,
+    pub cpu_stime_s: f64,
+    /// CPU seconds burned per wall second since install (cores' worth of
+    /// CPU; 2.0 = two cores fully busy).
+    pub cpu_util: f64,
+    pub ctx_voluntary: u64,
+    pub ctx_involuntary: u64,
+    /// Allocator calls/bytes observed while counting was enabled.
+    pub alloc_count: u64,
+    pub alloc_bytes: u64,
+    pub free_count: u64,
+    /// Periodic sampler ticks folded into the peak (plus the on-demand
+    /// sample every snapshot takes).
+    pub samples: u64,
+}
+
+impl ResourceSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("rss_mb", self.rss_mb.into()),
+            ("rss_peak_mb", self.rss_peak_mb.into()),
+            ("minor_faults", (self.minor_faults as f64).into()),
+            ("major_faults", (self.major_faults as f64).into()),
+            ("cpu_utime_s", self.cpu_utime_s.into()),
+            ("cpu_stime_s", self.cpu_stime_s.into()),
+            ("cpu_util", self.cpu_util.into()),
+            ("ctx_voluntary", (self.ctx_voluntary as f64).into()),
+            ("ctx_involuntary", (self.ctx_involuntary as f64).into()),
+            ("alloc_count", (self.alloc_count as f64).into()),
+            ("alloc_bytes", (self.alloc_bytes as f64).into()),
+            ("free_count", (self.free_count as f64).into()),
+            ("samples", (self.samples as f64).into()),
+        ])
+    }
+
+    /// One log line for `report.render()`.
+    pub fn render(&self) -> String {
+        format!(
+            "resource: rss {:.1} MB (peak {:.1})  cpu {:.2} cores (u {:.2}s s {:.2}s)  \
+             faults {}/{}  ctx {}/{}  allocs {} ({} KB)\n",
+            self.rss_mb,
+            self.rss_peak_mb,
+            self.cpu_util,
+            self.cpu_utime_s,
+            self.cpu_stime_s,
+            self.minor_faults,
+            self.major_faults,
+            self.ctx_voluntary,
+            self.ctx_involuntary,
+            self.alloc_count,
+            self.alloc_bytes / 1024,
+        )
+    }
+}
+
+#[derive(Debug)]
+struct SamplerState {
+    start: Instant,
+    /// utime+stime ticks at install — the utilization baseline.
+    start_cpu_ticks: u64,
+    /// Max VmRSS/VmHWM seen over every sample, kB.
+    peak_rss_kb: u64,
+    samples: u64,
+    status: StatusSample,
+    stat: StatSample,
+}
+
+/// The installed monitor: sampled periodically by the plane's thread and
+/// on demand by every [`ResourceMonitor::snapshot`].
+#[derive(Debug)]
+pub struct ResourceMonitor {
+    state: Mutex<SamplerState>,
+}
+
+impl ResourceMonitor {
+    fn new() -> ResourceMonitor {
+        let stat = std::fs::read_to_string("/proc/self/stat")
+            .map(|t| parse_proc_stat(&t))
+            .unwrap_or_default();
+        let start_cpu_ticks =
+            stat.utime_ticks.unwrap_or(0) + stat.stime_ticks.unwrap_or(0);
+        ResourceMonitor {
+            state: Mutex::new(SamplerState {
+                start: Instant::now(),
+                start_cpu_ticks,
+                peak_rss_kb: 0,
+                samples: 0,
+                status: StatusSample::default(),
+                stat,
+            }),
+        }
+    }
+
+    /// Read `/proc` once and fold into the state (peak tracking).
+    pub fn sample(&self) {
+        let status = std::fs::read_to_string("/proc/self/status")
+            .map(|t| parse_proc_status(&t))
+            .unwrap_or_default();
+        let stat = std::fs::read_to_string("/proc/self/stat")
+            .map(|t| parse_proc_stat(&t))
+            .unwrap_or_default();
+        let mut s = self.state.lock().unwrap();
+        s.samples += 1;
+        let observed_peak =
+            status.vm_hwm_kb.unwrap_or(0).max(status.vm_rss_kb.unwrap_or(0));
+        s.peak_rss_kb = s.peak_rss_kb.max(observed_peak);
+        s.status = status;
+        s.stat = stat;
+    }
+
+    /// Fresh sample + full readout.
+    pub fn snapshot(&self) -> ResourceSnapshot {
+        self.sample();
+        let s = self.state.lock().unwrap();
+        let kb_to_mb = |kb: u64| kb as f64 / 1024.0;
+        let utime = s.stat.utime_ticks.unwrap_or(0);
+        let stime = s.stat.stime_ticks.unwrap_or(0);
+        let wall = s.start.elapsed().as_secs_f64();
+        let cpu_delta_s =
+            (utime + stime).saturating_sub(s.start_cpu_ticks) as f64 / CLK_TCK_HZ;
+        let (alloc_count, alloc_bytes, free_count) = alloc_totals();
+        ResourceSnapshot {
+            rss_mb: kb_to_mb(s.status.vm_rss_kb.unwrap_or(0)),
+            rss_peak_mb: kb_to_mb(s.peak_rss_kb),
+            minor_faults: s.stat.minor_faults.unwrap_or(0),
+            major_faults: s.stat.major_faults.unwrap_or(0),
+            cpu_utime_s: utime as f64 / CLK_TCK_HZ,
+            cpu_stime_s: stime as f64 / CLK_TCK_HZ,
+            cpu_util: if wall > 0.0 { cpu_delta_s / wall } else { 0.0 },
+            ctx_voluntary: s.status.voluntary_ctxt_switches.unwrap_or(0),
+            ctx_involuntary: s.status.nonvoluntary_ctxt_switches.unwrap_or(0),
+            alloc_count,
+            alloc_bytes,
+            free_count,
+            samples: s.samples,
+        }
+    }
+}
+
+// ---- install / uninstall gating (profiler/tracer/health pattern) ----
+
+struct Installed {
+    monitor: Arc<ResourceMonitor>,
+    stop: Arc<AtomicBool>,
+    sampler: Option<std::thread::JoinHandle<()>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static MONITOR: Mutex<Option<Installed>> = Mutex::new(None);
+
+/// Period between `/proc` samples of the plane's background thread.
+pub const SAMPLE_PERIOD: Duration = Duration::from_millis(200);
+/// The sampler sleeps in slices so `uninstall` joins promptly (the same
+/// discipline as the health watchdog).
+const SAMPLE_SLICE: Duration = Duration::from_millis(25);
+
+/// Install the resource plane: enable allocation counting, take a first
+/// sample, and start the periodic `/proc` sampler thread. Replaces any
+/// previous installation.
+pub fn install() -> Arc<ResourceMonitor> {
+    uninstall();
+    counting_acquire();
+    let monitor = Arc::new(ResourceMonitor::new());
+    monitor.sample();
+    let stop = Arc::new(AtomicBool::new(false));
+    let (m, st) = (Arc::clone(&monitor), Arc::clone(&stop));
+    let sampler = std::thread::Builder::new()
+        .name("brgemm-resource".to_string())
+        .spawn(move || {
+            let mut slept = Duration::ZERO;
+            loop {
+                std::thread::sleep(SAMPLE_SLICE);
+                if st.load(Ordering::Acquire) {
+                    return;
+                }
+                slept += SAMPLE_SLICE;
+                if slept >= SAMPLE_PERIOD {
+                    slept = Duration::ZERO;
+                    m.sample();
+                }
+            }
+        })
+        .ok();
+    *MONITOR.lock().unwrap() = Some(Installed { monitor: Arc::clone(&monitor), stop, sampler });
+    ENABLED.store(true, Ordering::Release);
+    monitor
+}
+
+/// Remove the plane: stop and join the sampler thread, release the
+/// allocation-counting reference. Idempotent.
+pub fn uninstall() {
+    let installed = MONITOR.lock().unwrap().take();
+    ENABLED.store(false, Ordering::Release);
+    if let Some(i) = installed {
+        i.stop.store(true, Ordering::Release);
+        if let Some(h) = i.sampler {
+            h.join().ok();
+        }
+        counting_release();
+    }
+}
+
+/// Whether the plane is installed (one atomic load).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// The installed monitor, if any.
+pub fn current() -> Option<Arc<ResourceMonitor>> {
+    MONITOR.lock().unwrap().as_ref().map(|i| Arc::clone(&i.monitor))
+}
+
+/// Fresh snapshot from the installed monitor — `None` when the plane is
+/// off, so report blocks appear only when configured (the SLO pattern).
+pub fn snapshot() -> Option<ResourceSnapshot> {
+    if !enabled() {
+        return None;
+    }
+    current().map(|m| m.snapshot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const STATUS_FIXTURE: &str = "Name:\tbrgemm-dl\n\
+        Umask:\t0022\n\
+        State:\tR (running)\n\
+        VmPeak:\t  270468 kB\n\
+        VmHWM:\t   16132 kB\n\
+        VmRSS:\t   15872 kB\n\
+        Threads:\t3\n\
+        voluntary_ctxt_switches:\t150\n\
+        nonvoluntary_ctxt_switches:\t7\n";
+
+    #[test]
+    fn status_parser_reads_rss_peak_and_ctx_switches() {
+        let s = parse_proc_status(STATUS_FIXTURE);
+        assert_eq!(s.vm_rss_kb, Some(15872));
+        assert_eq!(s.vm_hwm_kb, Some(16132));
+        assert_eq!(s.voluntary_ctxt_switches, Some(150));
+        assert_eq!(s.nonvoluntary_ctxt_switches, Some(7));
+    }
+
+    #[test]
+    fn status_parser_tolerates_missing_fields() {
+        // Kernel threads have no Vm* lines; pre-2.6.23 kernels lack the
+        // ctxt-switch counters. Absence must parse as None, not error.
+        let s = parse_proc_status("Name:\tkthreadd\nState:\tS (sleeping)\nThreads:\t1\n");
+        assert_eq!(s, StatusSample::default());
+        // Garbage values are skipped, not propagated.
+        let g = parse_proc_status("VmRSS:\tnot-a-number kB\nVmHWM:\t12 kB\n");
+        assert_eq!(g.vm_rss_kb, None);
+        assert_eq!(g.vm_hwm_kb, Some(12));
+    }
+
+    #[test]
+    fn stat_parser_handles_hostile_comm_names() {
+        // comm may contain spaces and ')' — fields must be taken after the
+        // LAST ')'. Layout after comm: state ppid pgrp session tty_nr
+        // tpgid flags minflt cminflt majflt cmajflt utime stime ...
+        let line = "1234 (a (we)ird) name) R 1 1234 1234 0 -1 4194304 \
+                    2500 0 42 0 360 40 0 0 20 0 3 0 8000 276959232 3968";
+        let s = parse_proc_stat(line);
+        assert_eq!(s.minor_faults, Some(2500));
+        assert_eq!(s.major_faults, Some(42));
+        assert_eq!(s.utime_ticks, Some(360));
+        assert_eq!(s.stime_ticks, Some(40));
+    }
+
+    #[test]
+    fn stat_parser_tolerates_truncation_and_garbage() {
+        // Truncated after majflt: utime/stime read as None, earlier fields
+        // still parse.
+        let s = parse_proc_stat("77 (x) R 1 77 77 0 -1 4194304 9 0 3 0");
+        assert_eq!(s.minor_faults, Some(9));
+        assert_eq!(s.major_faults, Some(3));
+        assert_eq!(s.utime_ticks, None);
+        assert_eq!(s.stime_ticks, None);
+        // No comm parens at all → everything None.
+        assert_eq!(parse_proc_stat("complete garbage"), StatSample::default());
+        assert_eq!(parse_proc_stat(""), StatSample::default());
+    }
+
+    #[test]
+    fn alloc_gauge_counts_this_threads_allocations() {
+        let _guard = crate::telemetry::test_lock();
+        let gauge = AllocGauge::start();
+        assert!(counting_enabled());
+        let v: Vec<u8> = Vec::with_capacity(4096);
+        std::hint::black_box(&v);
+        let (calls, bytes) = gauge.thread_delta();
+        assert!(calls >= 1, "the 4 KB Vec must be counted (calls={})", calls);
+        assert!(bytes >= 4096, "bytes={}", bytes);
+        drop(v);
+        drop(gauge);
+    }
+
+    #[test]
+    fn gauge_refcount_nests_with_the_plane() {
+        let _guard = crate::telemetry::test_lock();
+        let m = install();
+        assert!(enabled() && counting_enabled());
+        {
+            let _g = AllocGauge::start();
+            assert!(counting_enabled());
+        }
+        // Dropping the gauge must not turn counting off under the plane.
+        assert!(counting_enabled());
+        let snap = m.snapshot();
+        assert!(snap.samples >= 2, "install + snapshot sample at least twice");
+        uninstall();
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn snapshot_reads_real_proc_on_linux() {
+        let _guard = crate::telemetry::test_lock();
+        install();
+        // Touch some memory so RSS is comfortably nonzero.
+        let buf = vec![1u8; 1 << 20];
+        std::hint::black_box(&buf);
+        let snap = snapshot().expect("plane installed");
+        if cfg!(target_os = "linux") {
+            assert!(snap.rss_mb > 0.0, "VmRSS must be nonzero ({:?})", snap);
+            assert!(snap.rss_peak_mb >= snap.rss_mb - 1.0, "{:?}", snap);
+        }
+        assert!(snap.alloc_count > 0, "the 1 MB buffer allocation was counted");
+        uninstall();
+        assert!(snapshot().is_none(), "plane off → no block");
+    }
+
+    #[test]
+    fn training_is_bit_identical_with_the_plane_off_vs_on() {
+        use crate::coordinator::rnn::{RnnModel, RnnSpec};
+        use crate::util::rng::Rng;
+        let _guard = crate::telemetry::test_lock();
+        let spec = RnnSpec { c: 4, k: 4, t: 2, classes: 2, layers: 1 };
+        let run = || -> Vec<u32> {
+            let mut rng = Rng::new(3);
+            let mut model = RnnModel::new(&spec, 2, 1, &mut rng);
+            let x = rng.vec_f32(2 * spec.input_dim(), -1.0, 1.0);
+            let labels = vec![0i32, 1];
+            (0..3).map(|_| model.train_step(&x, &labels, 0.05).to_bits()).collect()
+        };
+        let plain = run();
+        install();
+        let instrumented = run();
+        uninstall();
+        assert_eq!(
+            plain, instrumented,
+            "the counting allocator and sampler must not perturb training numerics"
+        );
+    }
+
+    #[test]
+    fn snapshot_json_carries_every_field() {
+        let snap = ResourceSnapshot {
+            rss_mb: 15.5,
+            rss_peak_mb: 16.0,
+            minor_faults: 2500,
+            major_faults: 1,
+            cpu_utime_s: 3.6,
+            cpu_stime_s: 0.4,
+            cpu_util: 1.25,
+            ctx_voluntary: 150,
+            ctx_involuntary: 7,
+            alloc_count: 1234,
+            alloc_bytes: 1 << 20,
+            free_count: 1200,
+            samples: 5,
+        };
+        let j = snap.to_json();
+        for key in [
+            "rss_mb",
+            "rss_peak_mb",
+            "minor_faults",
+            "major_faults",
+            "cpu_utime_s",
+            "cpu_stime_s",
+            "cpu_util",
+            "ctx_voluntary",
+            "ctx_involuntary",
+            "alloc_count",
+            "alloc_bytes",
+            "free_count",
+            "samples",
+        ] {
+            assert!(j.get(key).is_some(), "missing {}", key);
+        }
+        assert!(snap.render().contains("rss 15.5 MB"));
+    }
+}

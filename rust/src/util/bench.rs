@@ -17,8 +17,15 @@ pub struct Row {
 }
 
 impl Row {
+    /// Best-case rate (min time) — the "machine capability" number.
     pub fn gflops(&self) -> f64 {
         crate::telemetry::achieved_gflops(self.flops, self.time.min)
+    }
+
+    /// Median-based rate — the noise-robust number the efficiency column
+    /// and the `{median, mad, iters}` JSON rows report.
+    pub fn median_gflops(&self) -> f64 {
+        crate::telemetry::achieved_gflops(self.flops, self.time.median())
     }
 }
 
@@ -54,8 +61,15 @@ impl Opts {
     }
 }
 
-/// Time `f` under `opts`; returns per-iteration samples in seconds.
-pub fn measure<F: FnMut()>(opts: Opts, mut f: F) -> Summary {
+/// Time `f` under `opts`; returns the summarised per-iteration samples.
+pub fn measure<F: FnMut()>(opts: Opts, f: F) -> Summary {
+    Summary::from(&measure_samples(opts, f))
+}
+
+/// Time `f` under `opts`; returns the raw per-iteration samples in seconds.
+/// Benches that derive a rate per sample (words/s, images/s) use this so
+/// their rows can report `{median, mad, iters}` in rate space.
+pub fn measure_samples<F: FnMut()>(opts: Opts, mut f: F) -> Vec<f64> {
     for _ in 0..opts.warmup_iters {
         f();
     }
@@ -69,7 +83,7 @@ pub fn measure<F: FnMut()>(opts: Opts, mut f: F) -> Summary {
             break;
         }
     }
-    Summary::from(&samples)
+    samples
 }
 
 /// A named collection of rows, printed as a paper-style table.
@@ -124,9 +138,11 @@ impl Table {
         ));
         out.push('\n');
         for r in &self.rows {
+            // Efficiency from the *median* rate: robust to a single noisy
+            // best iteration, matching the `{median, mad, iters}` JSON rows.
             let eff = self
                 .peak_gflops
-                .map(|p| format!("{:>9.1}%", 100.0 * r.gflops() / p))
+                .map(|p| format!("{:>9.1}%", 100.0 * r.median_gflops() / p))
                 .unwrap_or_else(|| "      n/a".to_string());
             out.push_str(&format!(
                 "{:<22} {:<18} {:>12} {:>12.2} {:>10}\n",
@@ -153,7 +169,11 @@ impl Table {
                     ("flops", r.flops.into()),
                     ("min_s", r.time.min.into()),
                     ("mean_s", r.time.mean.into()),
+                    ("median_s", r.time.median().into()),
+                    ("mad_s", r.time.mad.into()),
+                    ("iters", (r.time.n as f64).into()),
                     ("gflops", r.gflops().into()),
+                    ("median_gflops", r.median_gflops().into()),
                 ])
             })
             .collect();
@@ -234,8 +254,34 @@ mod tests {
             time: Summary::from(&[1.0]),
         });
         let s = t.render();
+        // Single sample: min == median, so eff% is unchanged at 50%.
         assert!(s.contains("demo") && s.contains("50.0%"), "{}", s);
         let j = t.to_json().to_string_compact();
         assert!(j.contains("\"gflops\""));
+        assert!(j.contains("\"median_s\"") && j.contains("\"mad_s\"") && j.contains("\"iters\""));
+    }
+
+    #[test]
+    fn median_gflops_resists_a_lucky_iteration() {
+        // One anomalously fast sample inflates min-based gflops; the
+        // median-based rate stays at the typical iteration.
+        let r = Row {
+            label: "x".into(),
+            impl_name: "y".into(),
+            flops: 1e9,
+            time: Summary::from(&[0.1, 1.0, 1.0, 1.0, 1.0]),
+        };
+        assert!((r.gflops() - 10.0).abs() < 1e-9);
+        assert!((r.median_gflops() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measure_samples_returns_raw_samples() {
+        let opts = Opts { warmup_iters: 1, min_iters: 4, max_iters: 4, max_seconds: 10.0 };
+        let samples = measure_samples(opts, || {
+            black_box(std::hint::black_box(1u64) + 1);
+        });
+        assert_eq!(samples.len(), 4);
+        assert!(samples.iter().all(|s| *s >= 0.0));
     }
 }

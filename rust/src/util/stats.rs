@@ -10,6 +10,11 @@ pub struct Summary {
     pub p50: f64,
     pub p95: f64,
     pub max: f64,
+    /// Median absolute deviation from the median — the robust spread the
+    /// noise-aware perf baselines compare against (`k·MAD` widens the
+    /// regression allowance; a few outlier samples barely move it, unlike
+    /// `std`).
+    pub mad: f64,
 }
 
 impl Summary {
@@ -25,15 +30,26 @@ impl Summary {
         };
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile(&sorted, 0.50);
+        let mut dev: Vec<f64> = sorted.iter().map(|x| (x - p50).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
             n,
             mean,
             std: var.sqrt(),
             min: sorted[0],
-            p50: percentile(&sorted, 0.50),
+            p50,
             p95: percentile(&sorted, 0.95),
             max: sorted[n - 1],
+            mad: percentile(&dev, 0.50),
         }
+    }
+
+    /// The median sample — the noise-robust central value the bench JSON
+    /// rows report (alias of `p50`, named for the `{median, mad, iters}`
+    /// row schema).
+    pub fn median(&self) -> f64 {
+        self.p50
     }
 }
 
@@ -127,6 +143,23 @@ mod tests {
         let s = Summary::from(&[0.5]);
         assert_eq!(s.std, 0.0);
         assert_eq!(s.p95, 0.5);
+        assert_eq!(s.mad, 0.0);
+        assert_eq!(s.median(), 0.5);
+    }
+
+    #[test]
+    fn mad_is_robust_to_outliers() {
+        // [1,1,1,1,100]: median 1, |dev| = [0,0,0,0,99] → MAD 0, while the
+        // std is blown up by the outlier. That robustness is the point.
+        let s = Summary::from(&[1.0, 1.0, 1.0, 1.0, 100.0]);
+        assert_eq!(s.median(), 1.0);
+        assert_eq!(s.mad, 0.0);
+        assert!(s.std > 10.0);
+        // Symmetric spread: [1,2,3,4,5] → median 3, |dev| sorted [0,1,1,2,2]
+        // → MAD 1.
+        let t = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(t.median(), 3.0);
+        assert!((t.mad - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -31,7 +31,7 @@ echo "== serve smoke (tiny model, 300 requests, 50ms SLO) =="
     --metrics-out serve_metrics.json --metrics-every 0.5
 test -f serve_metrics.json
 ./target/release/brgemm-dl perfcheck --metrics serve_metrics.json \
-    --require queue_wait,compute,brgemm_calls,throughput_rps,slo_attainment
+    --require queue_wait,compute,brgemm_calls,throughput_rps,slo_attainment,rss_peak_mb
 for key in viol_queue_wait viol_compute viol_reload error_budget_remaining; do
     if ! grep -q "\"$key\"" serve_metrics.json; then
         echo "serve_metrics.json is missing SLO field '$key'" >&2
@@ -39,6 +39,17 @@ for key in viol_queue_wait viol_compute viol_reload error_budget_remaining; do
     fi
 done
 echo "SLO block present (attainment + violation attribution)"
+# Resource plane: --metrics-out installs it, so the report must carry a
+# resource block with RSS and CPU accounting. rss_peak_mb is required
+# nonzero above; the CPU fields only need to be present (a sub-10ms-tick
+# run can legitimately report 0.0 seconds).
+for key in resource cpu_utime_s cpu_stime_s minor_faults alloc_count; do
+    if ! grep -q "\"$key\"" serve_metrics.json; then
+        echo "serve_metrics.json is missing resource field '$key'" >&2
+        exit 1
+    fi
+done
+echo "resource block present (rss_peak_mb nonzero + cpu/fault/alloc fields)"
 
 echo "== train -> checkpoint -> serve smoke =="
 # The model-artifact pipeline end to end: train 2 epochs with per-epoch
@@ -55,7 +66,13 @@ rm -rf checkpoints
     --metrics-out train_metrics.jsonl
 test -f train_metrics.jsonl
 ./target/release/brgemm-dl perfcheck --metrics train_metrics.jsonl \
-    --require brgemm_calls,fwd,bwd,upd,final_accuracy
+    --require brgemm_calls,fwd,bwd,upd,final_accuracy,rss_peak_mb
+# Every --metrics-out epoch line (and the final line) must carry the
+# resource block.
+if ! grep -q '"resource"' train_metrics.jsonl; then
+    echo "train_metrics.jsonl is missing the resource block" >&2
+    exit 1
+fi
 ./target/release/brgemm-dl run --config examples/checkpoint.json \
     --epochs 3 --resume checkpoints/mlp.bin
 ./target/release/brgemm-dl serve --model-path checkpoints/mlp.bin \
@@ -178,6 +195,43 @@ if [ "$lb" -lt 2 ]; then
     exit 1
 fi
 echo "length-bucket split covers $lb buckets"
+
+echo "== calibration persistence (tune probes once, then loads the file) =="
+# The first tune must probe the machine constants and persist them; the
+# second must hit the persisted file instead of re-probing. Isolated
+# cache + calibration paths so the check is hermetic.
+cal_file="$(mktemp -u /tmp/brgemm_cal_XXXXXX.json)"
+tune_cache="$(mktemp -u /tmp/brgemm_tune_XXXXXX.json)"
+rm -f "$cal_file"
+if ! BRGEMM_CALIBRATION="$cal_file" ./target/release/brgemm-dl tune \
+        --primitive fc --n 32 --c 64 --k 64 --cache "$tune_cache" \
+        | grep -q '^calibration: probed and saved'; then
+    echo "first tune did not probe+persist calibration" >&2
+    exit 1
+fi
+test -f "$cal_file"
+if ! BRGEMM_CALIBRATION="$cal_file" ./target/release/brgemm-dl tune \
+        --primitive fc --n 32 --c 64 --k 64 --cache "$tune_cache" \
+        | grep -q '^calibration: loaded from'; then
+    echo "second tune re-probed instead of loading $cal_file" >&2
+    exit 1
+fi
+rm -f "$cal_file" "$tune_cache"
+echo "calibration probed once, then served from the persisted file"
+
+echo "== BENCH baseline self-validation (hard gate) =="
+# Every committed baseline must parse and self-compare clean through
+# perfcheck's history-aware, MAD-aware gate — an identical run never
+# regresses. A baseline that fails here is corrupt and would silently
+# disable the advisory perf check below.
+for f in BENCH_*.json; do
+    if ! ./target/release/brgemm-dl perfcheck --baseline "$f" --current "$f" \
+            --tolerance 0.1; then
+        echo "committed baseline $f fails perfcheck self-comparison" >&2
+        exit 1
+    fi
+done
+echo "all committed baselines parse and self-compare clean"
 
 echo "== bench perf-regression check (advisory) =="
 # Compare a fresh smoke-scale serve_load run against the committed

@@ -5,50 +5,85 @@
 #   scripts/refresh_baselines.sh            serve_load only (fast)
 #   FULL=1 scripts/refresh_baselines.sh     also fig10a/fig10b (slow)
 #
-# The committed baselines feed scripts/ci.sh's advisory `perfcheck
-# --baseline` check. They are host-dependent, so refresh them on the
-# machine CI actually runs on; each refreshed file records that host's
-# measured numbers plus a provenance note. Placeholder baselines (the
-# seed-time conservative guesses) should be replaced by a real run from
-# this script as soon as a build host is available.
+# The committed baselines feed scripts/ci.sh's `perfcheck --baseline`
+# check. Each file is a *history* document:
+#
+#   {
+#     "note":    "<schema description>",
+#     "history": [ { "host": ..., "rev": ..., "date": ..., <bench doc> },
+#                  ...appended oldest-first... ]
+#   }
+#
+# perfcheck compares against the NEWEST entry only; older entries remain
+# as the host's perf trajectory (inspect them to see when a number moved
+# and under which rev). This script APPENDS a provenance-stamped entry per
+# run instead of overwriting, so history survives every refresh. Bench
+# rows carry {median, <key>_mad, iters} noise accounting; perfcheck widens
+# its allowance to max(tolerance, 3*MAD) where a mad sibling exists.
+#
+# Baselines are host-dependent: refresh on the machine CI actually runs
+# on. Entries with "host": "seed" are conservative placeholders recorded
+# without a build host.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-stamp_note() {
-    # Prepend a provenance note to a fresh bench result and write it over
-    # the committed baseline. Uses python3 if available, else a plain copy
-    # (the result is already valid perfcheck input either way).
+append_entry() {
+    # Append a provenance-stamped history entry built from a fresh bench
+    # result to the committed baseline (creating the history document if
+    # the baseline is missing or still in the legacy flat shape).
     local src=$1 dst=$2
     if command -v python3 >/dev/null 2>&1; then
         python3 - "$src" "$dst" <<'EOF'
-import json, platform, subprocess, sys
+import datetime, json, os, platform, subprocess, sys
 src, dst = sys.argv[1], sys.argv[2]
-doc = json.load(open(src))
-host = platform.node()
+entry = json.load(open(src))
+host = platform.node() or "unknown"
 rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
                      capture_output=True, text=True).stdout.strip() or "unknown"
-doc = {"note": f"measured baseline from scripts/refresh_baselines.sh on "
-               f"{host} @ {rev}; compared advisorily by scripts/ci.sh "
-               f"(perfcheck --baseline)", **doc}
+date = datetime.date.today().isoformat()
+entry = {"host": host, "rev": rev, "date": date, **entry}
+doc = None
+if os.path.exists(dst):
+    try:
+        doc = json.load(open(dst))
+    except ValueError:
+        doc = None
+if not isinstance(doc, dict) or "history" not in doc:
+    # Legacy flat baseline (or missing/corrupt): the old doc becomes the
+    # first history entry so no provenance is lost.
+    legacy = []
+    if isinstance(doc, dict):
+        doc.pop("note", None)
+        legacy = [{"host": "legacy", "rev": "legacy", "date": date, **doc}]
+    doc = {"note": "perf baseline history; see scripts/refresh_baselines.sh "
+                   "for the schema (perfcheck compares the newest entry)",
+           "history": legacy}
+doc["history"].append(entry)
 json.dump(doc, open(dst, "w"), indent=2)
-print(f"refreshed {dst} from {src}")
+print(f"appended entry {host} @ {rev} ({date}) to {dst} "
+      f"({len(doc['history'])} entr{'y' if len(doc['history']) == 1 else 'ies'})")
 EOF
-    else
+    elif [ ! -e "$dst" ]; then
+        # No python3: a plain copy still yields valid perfcheck input (a
+        # flat document is its own newest entry), but never clobber an
+        # existing history.
         cp "$src" "$dst"
-        echo "refreshed $dst from $src (no python3: provenance note not stamped)"
+        echo "created $dst from $src (no python3: flat document, no history)"
+    else
+        echo "WARNING: no python3 — cannot append to $dst history; skipped" >&2
     fi
 }
 
 echo "== cargo bench --bench serve_load =="
 cargo bench --bench serve_load
-stamp_note bench_results/serve_load.json BENCH_serve_load.json
+append_entry bench_results/serve_load.json BENCH_serve_load.json
 
 if [ "${FULL:-0}" = "1" ]; then
     for fig in fig10a fig10b; do
         echo "== cargo bench --bench $fig =="
         cargo bench --bench "$fig"
-        stamp_note "bench_results/$fig.json" "BENCH_$fig.json"
+        append_entry "bench_results/$fig.json" "BENCH_$fig.json"
     done
 else
     echo "(FULL=1 to also refresh fig10a/fig10b — they take much longer)"
